@@ -1,0 +1,136 @@
+//! Computer-aided synthesis planning — the paper's motivating application.
+//!
+//! Runs the full CASP loop the paper's introduction describes: the trained
+//! single-step retrosynthesis model (served from AOT artifacts, Python-free)
+//! proposes disconnections; the best-first planner expands them until every
+//! leaf is purchasable; the forward model optionally round-trip-checks each
+//! step. Compares planning cost with standard beam search vs speculative
+//! beam search — the end-to-end payoff of the paper's acceleration.
+//!
+//! Usage:
+//!     cargo run --release --example casp_planner [n_targets] [-- --roundtrip]
+
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::Result;
+use rxnspec::bench::{eval_setup, limit};
+use rxnspec::decoding::{greedy, Backend};
+use rxnspec::planner::{
+    ForwardCheck, Planner, PlannerConfig, RetroDecoder, RetroModel, Stock,
+};
+use rxnspec::runtime::AnyBackend;
+use rxnspec::vocab::Vocab;
+
+/// Forward model wrapper for round-trip checking.
+struct FwdModel<'a> {
+    backend: &'a AnyBackend,
+    vocab: &'a Vocab,
+}
+
+impl<'a> ForwardCheck for FwdModel<'a> {
+    fn predict(&self, reactants: &[String]) -> Result<String> {
+        let src = self.vocab.encode_wrapped(&reactants.join("."))?;
+        if src.len() > self.backend.dims().s_len {
+            anyhow::bail!("reactant set too long");
+        }
+        let out = greedy(self.backend, &src)?;
+        Ok(self.vocab.decode(&out.hyps[0].tokens))
+    }
+}
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let roundtrip = args.iter().any(|a| a == "--roundtrip");
+    let n_targets = args
+        .iter()
+        .find_map(|a| a.parse::<usize>().ok())
+        .unwrap_or_else(|| limit(5));
+
+    let (vocab, retro_backend, split) = eval_setup("retro")?;
+    let data = std::env::var("RXNSPEC_DATA").unwrap_or_else(|_| "data".into());
+    let stock = Stock::load(&Path::new(&data).join("stock.txt"))?;
+    eprintln!("stock: {} purchasable molecules", stock.len());
+
+    // The forward model is only loaded when round-trip checking is on.
+    let fwd_setup = if roundtrip {
+        let (fv, fb, _) = eval_setup("fwd")?;
+        Some((fv, fb))
+    } else {
+        None
+    };
+
+    let cfg = PlannerConfig {
+        n_suggestions: 5,
+        max_depth: 3,
+        expansion_budget: 12,
+        roundtrip_filter: roundtrip,
+    };
+
+    println!(
+        "planning {} targets (beam 5, depth<=3, budget 12, roundtrip={})\n",
+        n_targets, roundtrip
+    );
+
+    let mut totals = [(0f64, 0usize, 0usize); 2]; // (wall, solved, calls) per decoder
+    for (di, decoder) in [
+        RetroDecoder::BeamSearch,
+        RetroDecoder::Sbs { draft_len: 10 },
+    ]
+    .iter()
+    .enumerate()
+    {
+        let label = match decoder {
+            RetroDecoder::BeamSearch => "BS    ",
+            RetroDecoder::Sbs { .. } => "SBS   ",
+        };
+        println!("--- decoder: {label} ---");
+        for ex in split.iter().take(n_targets) {
+            let model = RetroModel::new(&retro_backend, &vocab, *decoder);
+            let t0 = Instant::now();
+            let (route, stats) = match &fwd_setup {
+                Some((fv, fb)) => {
+                    let fwd = FwdModel {
+                        backend: fb,
+                        vocab: fv,
+                    };
+                    Planner::with_forward(&model, &stock, &fwd, cfg.clone()).plan(&ex.src)?
+                }
+                None => Planner::new(&model, &stock, cfg.clone()).plan(&ex.src)?,
+            };
+            let wall = t0.elapsed().as_secs_f64();
+            totals[di].0 += wall;
+            totals[di].2 += model.decoder_calls.get();
+            match route {
+                Some(r) => {
+                    totals[di].1 += 1;
+                    println!(
+                        "solved {} in {:.1}s ({} expansions, {} decoder calls)",
+                        ex.src,
+                        wall,
+                        stats.expansions,
+                        model.decoder_calls.get()
+                    );
+                    print!("{}", r.render());
+                }
+                None => println!(
+                    "unsolved {} in {:.1}s ({} expansions)",
+                    ex.src, wall, stats.expansions
+                ),
+            }
+        }
+        println!();
+    }
+    println!(
+        "totals: BS {:.1}s ({} solved, {} calls) | SBS {:.1}s ({} solved, {} calls) | \
+         planner speedup {:.2}x",
+        totals[0].0,
+        totals[0].1,
+        totals[0].2,
+        totals[1].0,
+        totals[1].1,
+        totals[1].2,
+        totals[0].0 / totals[1].0.max(1e-9)
+    );
+    Ok(())
+}

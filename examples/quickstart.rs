@@ -1,0 +1,77 @@
+//! Quickstart: predict the product of the paper's Figure 2 reaction
+//! (N-Boc protection of an indole) with standard greedy decoding, then
+//! with speculative greedy decoding, and show the draft mechanics.
+//!
+//! Run after `make artifacts`:
+//!     cargo run --release --example quickstart
+//! Without compiled artifacts, fall back to the pure-Rust backend:
+//!     RXNSPEC_BACKEND=rust cargo run --release --example quickstart
+
+use std::time::Instant;
+
+use rxnspec::bench::eval_setup;
+use rxnspec::chem::tokenize;
+use rxnspec::decoding::{greedy, spec_greedy};
+use rxnspec::draft::{extract_drafts, DraftConfig};
+
+fn main() -> anyhow::Result<()> {
+    let (vocab, backend, _) = eval_setup("fwd")?;
+
+    // The paper's Figure 2 reaction: indole ketone + Boc anhydride.
+    let reactants = "c1c[nH]c2ccc(C(C)=O)cc12.C(=O)(OC(=O)OC(C)(C)C)OC(C)(C)C";
+    println!("Query (reactants): {reactants}\n");
+
+    // Show the drafting mechanics of Figure 2: sliding-window token
+    // subsequences of the query.
+    let toks = tokenize(reactants)?;
+    let ids = vocab.encode(reactants)?;
+    let drafts = extract_drafts(&ids, &DraftConfig::new(4));
+    println!(
+        "Draft construction (DL=4): {} tokens -> {} drafts (N_d cap 25). First five:",
+        toks.len(),
+        drafts.len()
+    );
+    for d in drafts.iter().take(5) {
+        println!("  {:?}", vocab_decode_tokens(&vocab, d));
+    }
+
+    // Standard greedy decoding.
+    let src = vocab.encode_wrapped(reactants)?;
+    let t0 = Instant::now();
+    let g = greedy(&backend, &src)?;
+    let greedy_ms = t0.elapsed().as_secs_f64() * 1000.0;
+    println!("\nGreedy product:       {}", vocab.decode(&g.hyps[0].tokens));
+    println!(
+        "  {} decoder calls, {:.1} ms",
+        g.stats.decoder_calls, greedy_ms
+    );
+
+    // Speculative greedy decoding — same output, fewer calls.
+    for dl in [4usize, 10] {
+        let t0 = Instant::now();
+        let s = spec_greedy(&backend, &src, &DraftConfig::new(dl))?;
+        let ms = t0.elapsed().as_secs_f64() * 1000.0;
+        println!(
+            "Speculative (DL={dl:>2}):  {}",
+            vocab.decode(&s.hyps[0].tokens)
+        );
+        println!(
+            "  {} decoder calls, {:.1} ms, acceptance rate {:.0}%  ({}x fewer calls, {:.2}x faster)",
+            s.stats.decoder_calls,
+            ms,
+            s.stats.acceptance.rate() * 100.0,
+            g.stats.decoder_calls / s.stats.decoder_calls.max(1),
+            greedy_ms / ms
+        );
+        assert_eq!(
+            s.hyps[0].tokens, g.hyps[0].tokens,
+            "speculative decoding must be lossless"
+        );
+    }
+    println!("\nOutputs are token-identical: speculative decoding is lossless.");
+    Ok(())
+}
+
+fn vocab_decode_tokens(vocab: &rxnspec::vocab::Vocab, ids: &[i64]) -> String {
+    ids.iter().map(|&i| vocab.tok(i)).collect()
+}

@@ -1,0 +1,99 @@
+//! Single-step retrosynthesis for synthesis planning: propose multiple
+//! reactant sets per target molecule with beam search vs speculative beam
+//! search (the paper's §3.2 use case: a planning algorithm consumes
+//! several candidate disconnections per node).
+//!
+//! `--trace` reproduces the paper's Figure 3 walk-through: per-iteration
+//! candidate counts and the surviving ragged-length beams of one SBS run.
+//!
+//! Usage:
+//!     cargo run --release --example retro_planning [-- --trace] [n_targets]
+
+use std::time::Instant;
+
+use rxnspec::bench::{eval_setup, limit};
+use rxnspec::decoding::{beam_search, sbs, sbs_traced, SbsConfig};
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let trace = args.iter().any(|a| a == "--trace");
+    let n_targets = args
+        .iter()
+        .find_map(|a| a.parse::<usize>().ok())
+        .unwrap_or_else(|| limit(10));
+
+    let (vocab, backend, split) = eval_setup("retro")?;
+    let n = 5; // beam width / suggestions per target
+
+    if trace {
+        // Figure 3 reproduction: one traced SBS run.
+        let ex = &split[0];
+        println!("Target product: {}\n", ex.src);
+        let src = vocab.encode_wrapped(&ex.src)?;
+        let (out, tr) = sbs_traced(&backend, &src, &SbsConfig::new(2, 10))?;
+        for (i, it) in tr.iterations.iter().enumerate().take(6) {
+            println!(
+                "iteration {}: {} decoder rows -> {} candidate sequences, kept {}:",
+                i + 1,
+                it.rows,
+                it.candidates_generated,
+                it.kept.len()
+            );
+            for (tokens, score) in &it.kept {
+                println!("    {:>8.3}  {}", score, vocab.decode(tokens));
+            }
+        }
+        println!("\nfinal suggestions:");
+        for h in &out.hyps {
+            println!("    {:>8.3}  {}", h.score, vocab.decode(&h.tokens));
+        }
+        return Ok(());
+    }
+
+    println!(
+        "Proposing {n} reactant sets for {} target molecules (BS vs SBS DL=10)\n",
+        n_targets.min(split.len())
+    );
+    let mut bs_total = 0f64;
+    let mut sbs_total = 0f64;
+    let mut agreement = 0usize;
+    let mut total_hyps = 0usize;
+    for ex in split.iter().take(n_targets) {
+        let src = vocab.encode_wrapped(&ex.src)?;
+        let t0 = Instant::now();
+        let b = beam_search(&backend, &src, n)?;
+        let bs_s = t0.elapsed().as_secs_f64();
+        let t0 = Instant::now();
+        let s = sbs(&backend, &src, &SbsConfig::new(n, 10))?;
+        let sbs_s = t0.elapsed().as_secs_f64();
+        bs_total += bs_s;
+        sbs_total += sbs_s;
+        for h in &s.hyps {
+            total_hyps += 1;
+            if b.hyps.iter().any(|g| g.tokens == h.tokens) {
+                agreement += 1;
+            }
+        }
+        println!("target: {}", ex.src);
+        println!(
+            "  BS : {:5.2}s ({} calls) | SBS: {:5.2}s ({} calls, acc {:.0}%) | speedup {:.2}x",
+            bs_s,
+            b.stats.decoder_calls,
+            sbs_s,
+            s.stats.decoder_calls,
+            s.stats.acceptance.rate() * 100.0,
+            bs_s / sbs_s
+        );
+        for (i, h) in s.hyps.iter().enumerate().take(3) {
+            let mark = if vocab.decode(&h.tokens) == ex.tgt { "✓" } else { " " };
+            println!("   {mark}{}. {}", i + 1, vocab.decode(&h.tokens));
+        }
+    }
+    println!(
+        "\ntotals: BS {bs_total:.1}s vs SBS {sbs_total:.1}s -> {:.2}x speedup; \
+         hypothesis set agreement {:.1}%",
+        bs_total / sbs_total,
+        agreement as f64 * 100.0 / total_hyps as f64
+    );
+    Ok(())
+}

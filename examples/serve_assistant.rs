@@ -1,0 +1,132 @@
+//! End-to-end serving driver — the headline validation run.
+//!
+//! Boots the full production stack in one process (PJRT backend from AOT
+//! artifacts, dynamic batcher, worker, TCP server), then plays a realistic
+//! "AI assistant for chemists" workload from the test split against it
+//! over real sockets: a warm-up, a sequential B=1 session comparing
+//! standard vs speculative greedy decoding (the paper's Table 2 serving
+//! regime), and a concurrent burst exercising the dynamic batcher.
+//! Reports latency percentiles, throughput, acceptance rate, and server
+//! metrics. Recorded in EXPERIMENTS.md §End-to-end.
+//!
+//! Usage:
+//!     cargo run --release --example serve_assistant [n_requests] [port]
+//!     RXNSPEC_BACKEND=rust ... (fallback without artifacts)
+
+use std::net::TcpListener;
+use std::sync::atomic::AtomicBool;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use rxnspec::bench::{eval_setup, limit};
+use rxnspec::coordinator::{run_worker, serve, Client, Metrics, RequestQueue, ServerState};
+
+fn percentile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted.len() as f64 - 1.0) * q).round() as usize;
+    sorted[idx]
+}
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let n_requests = args
+        .first()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or_else(|| limit(40));
+    let port: u16 = args.get(1).and_then(|v| v.parse().ok()).unwrap_or(0);
+
+    let data = std::env::var("RXNSPEC_DATA").unwrap_or_else(|_| "data".into());
+    let split = rxnspec::chem::read_split(std::path::Path::new(&data).join("fwd_test.tsv").as_path())?;
+    eprintln!("loaded fwd test split: {} reactions", split.len());
+
+    // --- boot the serving stack ---------------------------------------
+    let state = Arc::new(ServerState {
+        queue: RequestQueue::new(32, Duration::from_millis(5)),
+        metrics: Arc::new(Metrics::default()),
+        shutdown: AtomicBool::new(false),
+    });
+    let listener = TcpListener::bind(("127.0.0.1", port))?;
+    let addr = listener.local_addr()?.to_string();
+    eprintln!("serving on {addr}");
+    let accept_state = Arc::clone(&state);
+    std::thread::spawn(move || serve(listener, accept_state));
+    // PJRT handles are not Send: the worker thread constructs its own
+    // backend (exactly how `rxnspec serve` runs it on the main thread).
+    let worker_state = Arc::clone(&state);
+    let worker = std::thread::spawn(move || {
+        let (vocab, backend, _) = eval_setup("fwd").expect("worker setup");
+        run_worker(&backend, &vocab, &worker_state.queue, &worker_state.metrics);
+    });
+
+    let mut client = Client::connect(&addr)?;
+    assert!(client.ping()?);
+
+    // --- phase 1: sequential assistant session (B=1) -------------------
+    // A chemist pasting one reaction at a time; compare standard greedy
+    // with speculative greedy (paper Table 2 regime).
+    let queries: Vec<&str> = split.iter().take(n_requests).map(|e| e.src.as_str()).collect();
+    for (decoder, label) in [("greedy", "greedy (B=1)"), ("spec:10", "speculative DL=10 (B=1)")] {
+        let mut lat: Vec<f64> = Vec::new();
+        let mut calls = 0usize;
+        let mut acc = 0.0;
+        let t0 = Instant::now();
+        for q in &queries {
+            let p = client.predict(decoder, q)?;
+            lat.push(p.latency_ms);
+            calls += p.decoder_calls;
+            acc += p.acceptance_rate;
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        println!(
+            "{label:<26} n={:<4} p50={:.0}ms p95={:.0}ms mean={:.0}ms thpt={:.2} req/s calls/req={:.1} acc={:.0}%",
+            queries.len(),
+            percentile(&lat, 0.50),
+            percentile(&lat, 0.95),
+            lat.iter().sum::<f64>() / lat.len() as f64,
+            queries.len() as f64 / wall,
+            calls as f64 / queries.len() as f64,
+            acc * 100.0 / queries.len() as f64,
+        );
+    }
+
+    // --- phase 2: concurrent burst (dynamic batching) ------------------
+    let burst = queries.len().min(16);
+    let t0 = Instant::now();
+    let handles: Vec<_> = queries[..burst]
+        .iter()
+        .map(|q| {
+            let addr = addr.clone();
+            let q = q.to_string();
+            std::thread::spawn(move || -> anyhow::Result<f64> {
+                let mut c = Client::connect(&addr)?;
+                let p = c.predict("spec:10", &q)?;
+                Ok(p.latency_ms)
+            })
+        })
+        .collect();
+    let mut lat: Vec<f64> = handles
+        .into_iter()
+        .map(|h| h.join().unwrap())
+        .collect::<anyhow::Result<Vec<_>>>()?;
+    lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let wall = t0.elapsed().as_secs_f64();
+    println!(
+        "{:<26} n={:<4} p50={:.0}ms p95={:.0}ms thpt={:.2} req/s (batched)",
+        "concurrent burst spec:10",
+        burst,
+        percentile(&lat, 0.50),
+        percentile(&lat, 0.95),
+        burst as f64 / wall,
+    );
+
+    // --- server-side metrics -------------------------------------------
+    println!("\n--- server STATS ---");
+    println!("{}", client.stats()?);
+
+    state.queue.close();
+    worker.join().unwrap();
+    Ok(())
+}

@@ -1,0 +1,167 @@
+"""AOT lowering: JAX model (with the Pallas kernel) → HLO text artifacts.
+
+Emits, per task (`fwd`, `retro`) and bucket:
+    artifacts/enc_{task}_b{B}.hlo.txt       (src, src_pad, *weights) → (mem,)
+    artifacts/dec_{task}_b{EB}_t{T}.hlo.txt (tgt, pos, tgt_pad, mem, mem_pad,
+                                             *weights) → (logp,)
+plus `artifacts/manifest.tsv` (`kind\ttask\teb\ttlen\tfile`).
+
+Decoder artifacts come in a (EB, T) grid: EB is the effective batch
+(beams × drafts) and T the decoder window. Most of a decode happens at
+short prefixes, and without a KV cache the per-call cost is ∝ T — the
+window buckets recover that factor (picked per call by the Rust runtime).
+
+Design choices (see DESIGN.md §5):
+  * **HLO text**, not serialized protos — jax ≥ 0.5 emits 64-bit
+    instruction ids that xla_extension 0.5.1 rejects; the text parser
+    reassigns ids (aot_recipe / xla-example gotcha).
+  * **Weights as arguments**, not baked constants — constants would bloat
+    each text artifact by tens of MB and slow parsing; instead the Rust
+    runtime uploads the RXW1 weights once as device-resident PjRtBuffers
+    and passes them to every call. Argument order is the lexicographic
+    flat-key order, identical on both sides.
+  * `use_pallas=True`: the artifacts contain the L1 kernel's lowering
+    (interpret mode → plain HLO, runnable on CPU PJRT).
+
+Usage: python -m compile.aot [--out DIR] [--tasks fwd,retro]
+       [--enc-buckets 1,8,32] [--dec-buckets 1,2,4,8,16,32,64]
+"""
+
+from __future__ import annotations
+
+import argparse
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import weights_io
+from .model import ModelConfig, decode_logprobs, encode
+
+# Trailing-columns window of the decfast artifacts. Must be ≥ the largest
+# draft length + 1 (verify region) — the Rust runtime only routes calls
+# whose read pattern fits (rust/src/runtime/pjrt.rs).
+DECFAST_WINDOW = 16
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_task(task: str, out: Path, enc_buckets, dec_buckets, dec_t_buckets) -> list[str]:
+    params = weights_io.load(out / f"weights_{task}.bin")
+    cfg = ModelConfig(**weights_io.load_config(out / f"config_{task}.txt"))
+    flat = weights_io.flatten(params)
+    names = sorted(flat)
+    leaf_specs = [jax.ShapeDtypeStruct(flat[n].shape, jnp.float32) for n in names]
+
+    def rebuild(leaves):
+        return weights_io.unflatten(dict(zip(names, leaves)))
+
+    manifest: list[str] = []
+
+    def enc_fn(src, src_pad, *leaves):
+        p = rebuild(leaves)
+        return (encode(p, cfg, src, src_pad, use_pallas=True),)
+
+    for b in enc_buckets:
+        lowered = jax.jit(enc_fn, keep_unused=True).lower(
+            jax.ShapeDtypeStruct((b, cfg.s_len), jnp.int32),
+            jax.ShapeDtypeStruct((b, cfg.s_len), jnp.float32),
+            *leaf_specs,
+        )
+        fname = f"enc_{task}_b{b}.hlo.txt"
+        (out / fname).write_text(to_hlo_text(lowered))
+        manifest.append(f"enc\t{task}\t{b}\t0\t{fname}")
+        print(f"  wrote {fname}")
+
+    def dec_fn(tgt, pos, tgt_pad, mem, mem_pad, *leaves):
+        p = rebuild(leaves)
+        return (
+            decode_logprobs(
+                p, cfg, tgt, pos, tgt_pad, mem, mem_pad, use_pallas=True
+            ),
+        )
+
+    # decfast: the B=1 serving fast path. All rows of one speculative /
+    # beam decode step share one encoder memory, so the artifact takes
+    # mem[1,S,D] and broadcasts on-device (killing the dominant per-call
+    # host→device copy), and emits log-probs only for the trailing
+    # DECFAST_WINDOW columns (all a decoding step ever reads, since rows
+    # are left-padded).
+    def decfast_fn(tgt, pos, tgt_pad, mem1, mem_pad1, *leaves):
+        p = rebuild(leaves)
+        eb = tgt.shape[0]
+        mem = jnp.broadcast_to(mem1, (eb, mem1.shape[1], mem1.shape[2]))
+        mem_pad = jnp.broadcast_to(mem_pad1, (eb, mem_pad1.shape[1]))
+        return (
+            decode_logprobs(
+                p, cfg, tgt, pos, tgt_pad, mem, mem_pad,
+                use_pallas=True, out_window=DECFAST_WINDOW,
+            ),
+        )
+
+    t_buckets = sorted({min(t, cfg.t_len) for t in dec_t_buckets})
+    for b in dec_buckets:
+        for t in t_buckets:
+            lowered = jax.jit(dec_fn, keep_unused=True).lower(
+                jax.ShapeDtypeStruct((b, t), jnp.int32),
+                jax.ShapeDtypeStruct((b, t), jnp.int32),
+                jax.ShapeDtypeStruct((b, t), jnp.float32),
+                jax.ShapeDtypeStruct((b, cfg.s_len, cfg.d_model), jnp.float32),
+                jax.ShapeDtypeStruct((b, cfg.s_len), jnp.float32),
+                *leaf_specs,
+            )
+            fname = f"dec_{task}_b{b}_t{t}.hlo.txt"
+            (out / fname).write_text(to_hlo_text(lowered))
+            manifest.append(f"dec\t{task}\t{b}\t{t}\t{fname}")
+            print(f"  wrote {fname}")
+
+            lowered = jax.jit(decfast_fn, keep_unused=True).lower(
+                jax.ShapeDtypeStruct((b, t), jnp.int32),
+                jax.ShapeDtypeStruct((b, t), jnp.int32),
+                jax.ShapeDtypeStruct((b, t), jnp.float32),
+                jax.ShapeDtypeStruct((1, cfg.s_len, cfg.d_model), jnp.float32),
+                jax.ShapeDtypeStruct((1, cfg.s_len), jnp.float32),
+                *leaf_specs,
+            )
+            fname = f"decfast_{task}_b{b}_t{t}.hlo.txt"
+            (out / fname).write_text(to_hlo_text(lowered))
+            manifest.append(f"decfast\t{task}\t{b}\t{t}\t{fname}")
+            print(f"  wrote {fname}")
+
+    return manifest
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--tasks", default="fwd,retro")
+    ap.add_argument("--enc-buckets", default="1,8,32")
+    ap.add_argument("--dec-buckets", default="1,4,8,16,32,64")
+    ap.add_argument("--dec-t-buckets", default="24,48,96")
+    args = ap.parse_args()
+
+    out = Path(args.out)
+    out.mkdir(parents=True, exist_ok=True)
+    manifest: list[str] = []
+    for task in args.tasks.split(","):
+        print(f"[aot] lowering {task}")
+        manifest += lower_task(
+            task,
+            out,
+            [int(x) for x in args.enc_buckets.split(",")],
+            [int(x) for x in args.dec_buckets.split(",")],
+            [int(x) for x in args.dec_t_buckets.split(",")],
+        )
+    (out / "manifest.tsv").write_text("\n".join(manifest) + "\n")
+    print(f"[aot] manifest: {len(manifest)} artifacts")
+
+
+if __name__ == "__main__":
+    main()

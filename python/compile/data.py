@@ -1,0 +1,150 @@
+"""Corpus loading: tokenizer, vocabulary, and batch assembly.
+
+The tokenizer mirrors `rust/src/chem/tokenizer.rs` exactly (same regex,
+Schwaller et al. 2019 atomwise tokenization); `data/golden_tokens.tsv`
+written by `gen-data` pins the two implementations together — see
+`tests/test_tokenizer_parity.py`.
+
+This module is build-time only: the serving path never imports Python.
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass
+from pathlib import Path
+
+import numpy as np
+
+# Special-token ids, fixed by convention across the whole stack
+# (rust/src/vocab.rs hard-codes the same values).
+PAD_ID = 0
+BOS_ID = 1
+EOS_ID = 2
+UNK_ID = 3
+
+SPECIALS = ["<pad>", "<bos>", "<eos>", "<unk>"]
+
+# Schwaller et al. (2019) atomwise tokenization pattern — keep in sync with
+# SMILES_TOKEN_PATTERN in rust/src/chem/tokenizer.rs.
+SMILES_TOKEN_RE = re.compile(
+    r"(\[[^\]]+\]|Br|Cl|N|O|S|P|F|I|B|b|c|n|o|s|p|\(|\)|\.|=|#|-|\+|\\|/|:|~|@|\?|>|\*|\$|%[0-9]{2}|[0-9]|[A-Za-z])"
+)
+
+
+def tokenize(smiles: str) -> list[str]:
+    """Atomwise-tokenize a SMILES string; every byte must be consumed."""
+    tokens = []
+    pos = 0
+    for m in SMILES_TOKEN_RE.finditer(smiles):
+        if m.start() != pos:
+            raise ValueError(f"cannot tokenize {smiles!r} at byte {pos}")
+        tokens.append(m.group(0))
+        pos = m.end()
+    if pos != len(smiles):
+        raise ValueError(f"cannot tokenize {smiles!r} at byte {pos}")
+    return tokens
+
+
+class Vocab:
+    """Token <-> id mapping loaded from `data/vocab.txt` (written by
+    `gen-data`; line number == id; first four lines are the specials)."""
+
+    def __init__(self, tokens: list[str]):
+        if tokens[:4] != SPECIALS:
+            raise ValueError("not a rxnspec vocab file (bad specials header)")
+        self.id_to_tok = tokens
+        self.tok_to_id = {t: i for i, t in enumerate(tokens)}
+
+    @classmethod
+    def load(cls, path: str | Path) -> "Vocab":
+        return cls(Path(path).read_text().splitlines())
+
+    def __len__(self) -> int:
+        return len(self.id_to_tok)
+
+    def encode(self, smiles: str) -> list[int]:
+        return [self.tok_to_id.get(t, UNK_ID) for t in tokenize(smiles)]
+
+    def decode(self, ids) -> str:
+        out = []
+        for i in ids:
+            i = int(i)
+            if i == EOS_ID:
+                break
+            if i in (PAD_ID, BOS_ID):
+                continue
+            out.append(self.id_to_tok[i])
+        return "".join(out)
+
+
+@dataclass
+class Example:
+    src: str
+    tgt: str
+    template: str
+
+
+def read_split(path: str | Path) -> list[Example]:
+    """Read one TSV split written by `gen-data`."""
+    out = []
+    for line in Path(path).read_text().splitlines():
+        if not line:
+            continue
+        parts = line.split("\t")
+        out.append(Example(parts[0], parts[1], parts[2] if len(parts) > 2 else "unknown"))
+    return out
+
+
+def encode_batch(
+    vocab: Vocab,
+    examples: list[Example],
+    s_len: int,
+    t_len: int,
+) -> dict[str, np.ndarray]:
+    """Assemble one right-padded training batch.
+
+    Returns arrays:
+      src       [B, S] int32 — BOS + tokens + EOS, right-padded
+      src_pad   [B, S] f32   — 1.0 on real positions
+      tgt_in    [B, T] int32 — BOS + tokens, right-padded (decoder input)
+      tgt_pos   [B, T] int32 — 0..len-1 (right-padded layout)
+      tgt_pad   [B, T] f32
+      labels    [B, T] int32 — tokens + EOS, right-padded
+      loss_mask [B, T] f32   — 1.0 where labels are real
+    """
+    b = len(examples)
+    src = np.zeros((b, s_len), dtype=np.int32)
+    src_pad = np.zeros((b, s_len), dtype=np.float32)
+    tgt_in = np.zeros((b, t_len), dtype=np.int32)
+    tgt_pos = np.zeros((b, t_len), dtype=np.int32)
+    tgt_pad = np.zeros((b, t_len), dtype=np.float32)
+    labels = np.zeros((b, t_len), dtype=np.int32)
+    loss_mask = np.zeros((b, t_len), dtype=np.float32)
+
+    for i, ex in enumerate(examples):
+        s = [BOS_ID] + vocab.encode(ex.src) + [EOS_ID]
+        t = vocab.encode(ex.tgt)
+        if len(s) > s_len:
+            raise ValueError(f"src too long ({len(s)} > {s_len}): {ex.src}")
+        if len(t) + 1 > t_len:
+            raise ValueError(f"tgt too long ({len(t)+1} > {t_len}): {ex.tgt}")
+        src[i, : len(s)] = s
+        src_pad[i, : len(s)] = 1.0
+        ti = [BOS_ID] + t
+        tgt_in[i, : len(ti)] = ti
+        tgt_pos[i, : len(ti)] = np.arange(len(ti))
+        tgt_pad[i, : len(ti)] = 1.0
+        lb = t + [EOS_ID]
+        labels[i, : len(lb)] = lb
+        loss_mask[i, : len(lb)] = 1.0
+
+    return {
+        "src": src,
+        "src_pad": src_pad,
+        "tgt_in": tgt_in,
+        "tgt_pos": tgt_pos,
+        "tgt_pad": tgt_pad,
+        "labels": labels,
+        "loss_mask": loss_mask,
+    }

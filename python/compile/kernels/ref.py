@@ -1,0 +1,35 @@
+"""Pure-jnp reference (oracle) for the Pallas attention kernel.
+
+This is the correctness ground truth: `attention.py` (the L1 Pallas kernel)
+must match this function under `np.testing.assert_allclose` across the
+shape/dtype sweep in `tests/test_kernel.py`. It is also the implementation
+used during *training* (autodiff-friendly); the Pallas kernel is swapped in
+for the AOT inference artifacts.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def mha_ref(q, k, v, mask):
+    """Multi-head scaled-dot-product attention, additive mask.
+
+    Args:
+      q:    [B, H, Tq, Dh]
+      k:    [B, H, Tk, Dh]
+      v:    [B, H, Tk, Dh]
+      mask: additive mask broadcastable to [B, H, Tq, Tk]
+            (0 where attention is allowed, large negative where not)
+
+    Returns:
+      [B, H, Tq, Dh]
+    """
+    dh = q.shape[-1]
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k) / jnp.sqrt(dh).astype(q.dtype)
+    scores = scores + mask.astype(scores.dtype)
+    # Max-subtracted softmax in f32 for stability regardless of input dtype.
+    scores = scores.astype(jnp.float32)
+    probs = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+    probs = probs / probs.sum(axis=-1, keepdims=True)
+    return jnp.einsum("bhqk,bhkd->bhqd", probs.astype(q.dtype), v)

@@ -1,0 +1,255 @@
+"""L2: the Molecular Transformer in JAX.
+
+An encoder-decoder transformer for SMILES-to-SMILES translation
+(Schwaller et al., 2019), pre-LN variant, with **explicit position ids** in
+the decoder: speculative beam search organizes ragged candidate batches by
+left-padding, and "the starting positions for the positional encodings get
+shifted accordingly" (paper Appendix B). Passing positions as an input
+makes that shift a no-op in the artifact.
+
+The decoder entrypoint returns log-softmaxed distributions (fused into the
+AOT artifact) — the Rust coordinator consumes log-probs directly.
+
+Attention is pluggable: `use_pallas=False` uses the pure-jnp reference
+(autodiff-friendly; used in training), `use_pallas=True` calls the L1
+Pallas kernel (used for the inference artifacts). The two are numerically
+equivalent (pytest-checked), so training with the reference and serving
+with the kernel is sound.
+
+This file must stay in lock-step with the pure-Rust reference
+implementation (`rust/src/model/reference.rs`); artifact↔reference parity
+is covered by `rust/tests/test_backend_parity.rs`.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.attention import mha as mha_pallas
+from .kernels.ref import mha_ref
+
+NEG_INF = -1e9
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    vocab: int
+    d_model: int = 128
+    n_heads: int = 4
+    d_ff: int = 256
+    n_enc: int = 2
+    n_dec: int = 2
+    s_len: int = 96
+    t_len: int = 96
+
+    @property
+    def d_head(self) -> int:
+        return self.d_model // self.n_heads
+
+    def to_kv(self) -> dict[str, int]:
+        return {
+            "vocab": self.vocab,
+            "d_model": self.d_model,
+            "n_heads": self.n_heads,
+            "d_ff": self.d_ff,
+            "n_enc": self.n_enc,
+            "n_dec": self.n_dec,
+            "s_len": self.s_len,
+            "t_len": self.t_len,
+        }
+
+
+# ---------------------------------------------------------------------------
+# Parameter initialization
+# ---------------------------------------------------------------------------
+
+
+def _glorot(key, shape):
+    fan_in, fan_out = shape[0], shape[-1]
+    lim = jnp.sqrt(6.0 / (fan_in + fan_out))
+    return jax.random.uniform(key, shape, jnp.float32, -lim, lim)
+
+
+def _attn_block(key, d_model):
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": _glorot(ks[0], (d_model, d_model)),
+        "wk": _glorot(ks[1], (d_model, d_model)),
+        "wv": _glorot(ks[2], (d_model, d_model)),
+        "wo": _glorot(ks[3], (d_model, d_model)),
+        "bq": jnp.zeros((d_model,)),
+        "bk": jnp.zeros((d_model,)),
+        "bv": jnp.zeros((d_model,)),
+        "bo": jnp.zeros((d_model,)),
+    }
+
+
+def _ffn_block(key, d_model, d_ff):
+    k1, k2 = jax.random.split(key)
+    return {
+        "w1": _glorot(k1, (d_model, d_ff)),
+        "b1": jnp.zeros((d_ff,)),
+        "w2": _glorot(k2, (d_ff, d_model)),
+        "b2": jnp.zeros((d_model,)),
+    }
+
+
+def _ln_block(d_model):
+    return {"g": jnp.ones((d_model,)), "b": jnp.zeros((d_model,))}
+
+
+def init_params(key, cfg: ModelConfig) -> dict:
+    """Initialize all model parameters (nested dict keyed as serialized)."""
+    n_keys = 2 + cfg.n_enc * 2 + cfg.n_dec * 3 + 1
+    keys = iter(jax.random.split(key, n_keys))
+    params: dict = {
+        "tok_emb": jax.random.normal(next(keys), (cfg.vocab, cfg.d_model))
+        * (cfg.d_model**-0.5),
+        "out_w": _glorot(next(keys), (cfg.d_model, cfg.vocab)),
+        "out_b": jnp.zeros((cfg.vocab,)),
+        "enc_ln_f": _ln_block(cfg.d_model),
+        "dec_ln_f": _ln_block(cfg.d_model),
+    }
+    for i in range(cfg.n_enc):
+        params[f"enc{i}"] = {
+            "ln1": _ln_block(cfg.d_model),
+            "attn": _attn_block(next(keys), cfg.d_model),
+            "ln2": _ln_block(cfg.d_model),
+            "ffn": _ffn_block(next(keys), cfg.d_model, cfg.d_ff),
+        }
+    for i in range(cfg.n_dec):
+        params[f"dec{i}"] = {
+            "ln1": _ln_block(cfg.d_model),
+            "self_attn": _attn_block(next(keys), cfg.d_model),
+            "ln2": _ln_block(cfg.d_model),
+            "cross_attn": _attn_block(next(keys), cfg.d_model),
+            "ln3": _ln_block(cfg.d_model),
+            "ffn": _ffn_block(next(keys), cfg.d_model, cfg.d_ff),
+        }
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Forward passes
+# ---------------------------------------------------------------------------
+
+
+def _layer_norm(p, x, eps: float = 1e-5):
+    mu = x.mean(axis=-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * p["g"] + p["b"]
+
+
+def sinusoidal_pe(pos, d_model: int):
+    """Sinusoidal positional encoding for explicit position ids.
+
+    pos: [..., L] int32 → [..., L, d_model] f32.
+    """
+    half = d_model // 2
+    i = jnp.arange(half, dtype=jnp.float32)
+    freq = jnp.exp(-jnp.log(10000.0) * (2.0 * i / d_model))
+    ang = pos[..., None].astype(jnp.float32) * freq  # [..., L, half]
+    pe = jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+    return pe
+
+
+def _split_heads(x, n_heads):
+    b, t, d = x.shape
+    return x.reshape(b, t, n_heads, d // n_heads).transpose(0, 2, 1, 3)
+
+
+def _merge_heads(x):
+    b, h, t, dh = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(b, t, h * dh)
+
+
+def _attention(p, cfg, x_q, x_kv, mask, use_pallas):
+    q = _split_heads(x_q @ p["wq"] + p["bq"], cfg.n_heads)
+    k = _split_heads(x_kv @ p["wk"] + p["bk"], cfg.n_heads)
+    v = _split_heads(x_kv @ p["wv"] + p["bv"], cfg.n_heads)
+    f = mha_pallas if use_pallas else mha_ref
+    o = f(q, k, v, mask)
+    return _merge_heads(o) @ p["wo"] + p["bo"]
+
+
+def _ffn(p, x):
+    return jnp.maximum(x @ p["w1"] + p["b1"], 0.0) @ p["w2"] + p["b2"]
+
+
+def encode(params, cfg: ModelConfig, src, src_pad, *, use_pallas: bool = False):
+    """Encoder forward: (src [B,S] i32, src_pad [B,S] f32) → [B,S,D] f32.
+
+    Positions in the encoder are implicit 0..S-1 (sources are always
+    right-padded; pad positions produce activations that the pad mask
+    removes from every subsequent attention).
+    """
+    b, s = src.shape
+    x = params["tok_emb"][src] * jnp.sqrt(float(cfg.d_model))
+    pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    x = x + sinusoidal_pe(pos, cfg.d_model)
+    # Key-side padding mask: [B, 1, 1, S] additive.
+    mask = (1.0 - src_pad)[:, None, None, :] * NEG_INF
+    for i in range(cfg.n_enc):
+        p = params[f"enc{i}"]
+        x = x + _attention(p["attn"], cfg, _layer_norm(p["ln1"], x), _layer_norm(p["ln1"], x), mask, use_pallas)
+        x = x + _ffn(p["ffn"], _layer_norm(p["ln2"], x))
+    return _layer_norm(params["enc_ln_f"], x)
+
+
+def decode_logprobs(
+    params,
+    cfg: ModelConfig,
+    tgt,
+    tgt_pos,
+    tgt_pad,
+    mem,
+    mem_pad,
+    *,
+    use_pallas: bool = False,
+    out_window: int | None = None,
+):
+    """Decoder forward returning log-probabilities.
+
+    Args:
+      tgt:     [B, T] i32 — token ids, left- or right-padded
+      tgt_pos: [B, T] i32 — explicit position ids (left-pad offsets applied
+               by the caller; the paper's shifted positional encodings)
+      tgt_pad: [B, T] f32 — 1.0 on real positions
+      mem:     [B, S, D] f32 — encoder output
+      mem_pad: [B, S] f32
+
+    Returns: [B, T, V] f32 log-probs (log-softmax fused here so the AOT
+    artifact hands the Rust coordinator ready-to-sum scores).
+    """
+    b, t = tgt.shape
+    x = params["tok_emb"][tgt] * jnp.sqrt(float(cfg.d_model))
+    x = x + sinusoidal_pe(tgt_pos, cfg.d_model)
+
+    # Causal mask over absolute columns works for both right- and left-
+    # padded layouts (real tokens are contiguous and ordered either way),
+    # combined with the key-side pad mask.
+    causal = jnp.tril(jnp.ones((t, t), dtype=jnp.float32))
+    self_mask = (1.0 - causal)[None, None, :, :] * NEG_INF
+    self_mask = self_mask + (1.0 - tgt_pad)[:, None, None, :] * NEG_INF
+    self_mask = jnp.maximum(self_mask, NEG_INF)  # avoid -inf accumulation
+    cross_mask = (1.0 - mem_pad)[:, None, None, :] * NEG_INF
+
+    for i in range(cfg.n_dec):
+        p = params[f"dec{i}"]
+        h = _layer_norm(p["ln1"], x)
+        x = x + _attention(p["self_attn"], cfg, h, h, self_mask, use_pallas)
+        h = _layer_norm(p["ln2"], x)
+        x = x + _attention(p["cross_attn"], cfg, h, mem, cross_mask, use_pallas)
+        x = x + _ffn(p["ffn"], _layer_norm(p["ln3"], x))
+    x = _layer_norm(params["dec_ln_f"], x)
+    if out_window is not None:
+        # Left-padded rows end at the last column, so the trailing
+        # `out_window` columns cover every position a decoding step reads
+        # (prefix head + draft verify region). Slicing before the output
+        # projection removes most of the [T, V] matmul + log-softmax.
+        x = x[:, -out_window:, :]
+    logits = x @ params["out_w"] + params["out_b"]
+    return jax.nn.log_softmax(logits, axis=-1)

@@ -1,0 +1,156 @@
+"""Build-time training of the Molecular Transformer on the synthetic corpus.
+
+Two checkpoints are produced, matching the paper's two experiments:
+  * `fwd`   — reaction product prediction (USPTO-MIT-mixed analogue)
+  * `retro` — single-step retrosynthesis (USPTO-50K analogue, trained on
+              the reactant-order-augmented split)
+
+Optimization is hand-written Adam (no optax in the offline environment)
+with the Transformer inverse-sqrt warmup schedule and label smoothing,
+mirroring Schwaller et al.'s recipe at toy scale.
+
+Usage: python -m compile.train [--task fwd|retro|both] [--steps N]
+       [--batch N] [--data DIR] [--out DIR] [--seed N]
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+from functools import partial
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import weights_io
+from .data import EOS_ID, Vocab, encode_batch, read_split
+from .model import ModelConfig, decode_logprobs, encode, init_params
+
+LABEL_SMOOTHING = 0.1
+
+
+def loss_fn(params, cfg: ModelConfig, batch):
+    mem = encode(params, cfg, batch["src"], batch["src_pad"])
+    logp = decode_logprobs(
+        params,
+        cfg,
+        batch["tgt_in"],
+        batch["tgt_pos"],
+        batch["tgt_pad"],
+        mem,
+        batch["src_pad"],
+    )
+    v = logp.shape[-1]
+    onehot = jax.nn.one_hot(batch["labels"], v)
+    smooth = onehot * (1.0 - LABEL_SMOOTHING) + LABEL_SMOOTHING / v
+    nll = -(smooth * logp).sum(-1)
+    mask = batch["loss_mask"]
+    loss = (nll * mask).sum() / mask.sum()
+    acc = ((logp.argmax(-1) == batch["labels"]) * mask).sum() / mask.sum()
+    return loss, acc
+
+
+def adam_update(params, grads, m, v, step, lr, b1=0.9, b2=0.98, eps=1e-9):
+    m = jax.tree.map(lambda a, g: b1 * a + (1 - b1) * g, m, grads)
+    v = jax.tree.map(lambda a, g: b2 * a + (1 - b2) * g * g, v, grads)
+    bc1 = 1 - b1**step
+    bc2 = 1 - b2**step
+    params = jax.tree.map(
+        lambda p, mm, vv: p - lr * (mm / bc1) / (jnp.sqrt(vv / bc2) + eps),
+        params,
+        m,
+        v,
+    )
+    return params, m, v
+
+
+def lr_schedule(step, d_model, warmup=400, scale=2.0):
+    step = jnp.maximum(step, 1.0)
+    return scale * d_model**-0.5 * jnp.minimum(step**-0.5, step * warmup**-1.5)
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def train_step(params, m, v, step, cfg: ModelConfig, batch):
+    (loss, acc), grads = jax.value_and_grad(loss_fn, has_aux=True)(params, cfg, batch)
+    lr = lr_schedule(step, cfg.d_model)
+    params, m, v = adam_update(params, grads, m, v, step, lr)
+    return params, m, v, loss, acc
+
+
+def batches(rng: np.random.Generator, examples, vocab, cfg, batch_size):
+    """Infinite shuffled batch stream."""
+    idx = np.arange(len(examples))
+    while True:
+        rng.shuffle(idx)
+        for i in range(0, len(idx) - batch_size + 1, batch_size):
+            chunk = [examples[j] for j in idx[i : i + batch_size]]
+            yield encode_batch(vocab, chunk, cfg.s_len, cfg.t_len)
+
+
+def evaluate(params, cfg, vocab, examples, batch_size=64, max_batches=8):
+    losses, accs = [], []
+    for i in range(0, min(len(examples), max_batches * batch_size), batch_size):
+        chunk = examples[i : i + batch_size]
+        if len(chunk) < batch_size:
+            break
+        batch = encode_batch(vocab, chunk, cfg.s_len, cfg.t_len)
+        loss, acc = jax.jit(loss_fn, static_argnames=("cfg",))(params, cfg, batch)
+        losses.append(float(loss))
+        accs.append(float(acc))
+    return float(np.mean(losses)), float(np.mean(accs))
+
+
+def train_task(task: str, data_dir: Path, out_dir: Path, steps: int, batch: int, seed: int):
+    vocab = Vocab.load(data_dir / "vocab.txt")
+    train = read_split(data_dir / f"{task}_train.tsv")
+    val = read_split(data_dir / f"{task}_val.tsv")
+    cfg = ModelConfig(vocab=len(vocab))
+    print(f"[{task}] train={len(train)} val={len(val)} vocab={len(vocab)}")
+
+    params = init_params(jax.random.PRNGKey(seed), cfg)
+    zeros = jax.tree.map(jnp.zeros_like, params)
+    m, v = zeros, jax.tree.map(jnp.zeros_like, params)
+
+    rng = np.random.default_rng(seed)
+    stream = batches(rng, train, vocab, cfg, batch)
+    t0 = time.time()
+    for step in range(1, steps + 1):
+        b = next(stream)
+        params, m, v, loss, acc = train_step(
+            params, m, v, jnp.asarray(float(step)), cfg, b
+        )
+        if step % 100 == 0 or step == 1:
+            print(
+                f"[{task}] step {step:5d} loss {float(loss):.4f} "
+                f"tok_acc {float(acc):.4f} ({time.time()-t0:.0f}s)",
+                flush=True,
+            )
+        if step % 1000 == 0 or step == steps:
+            vl, va = evaluate(params, cfg, vocab, val)
+            print(f"[{task}]   val loss {vl:.4f} tok_acc {va:.4f}", flush=True)
+
+    out_dir.mkdir(parents=True, exist_ok=True)
+    weights_io.save(out_dir / f"weights_{task}.bin", params)
+    weights_io.save_config(out_dir / f"config_{task}.txt", cfg.to_kv())
+    print(f"[{task}] saved weights to {out_dir}/weights_{task}.bin")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--task", default="both", choices=["fwd", "retro", "both"])
+    ap.add_argument("--steps", type=int, default=3000)
+    ap.add_argument("--batch", type=int, default=64)
+    ap.add_argument("--data", default="../data")
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    tasks = ["fwd", "retro"] if args.task == "both" else [args.task]
+    for t in tasks:
+        train_task(t, Path(args.data), Path(args.out), args.steps, args.batch, args.seed)
+
+
+if __name__ == "__main__":
+    main()

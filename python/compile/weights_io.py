@@ -1,0 +1,103 @@
+"""RXW1 flat weights format, shared with the Rust reader.
+
+Layout (all integers little-endian):
+    magic   4 bytes  b"RXW1"
+    count   u32      number of tensors
+    per tensor:
+        name_len u32, name bytes (utf-8, dotted path e.g. "dec0.ffn.w1")
+        ndim     u32, dims u32 × ndim
+        dtype    u8   (0 = f32)
+        data     f32 LE, prod(dims) elements
+
+Keys are sorted lexicographically so the file is deterministic. The Rust
+side is `rust/src/model/weights.rs`.
+"""
+
+from __future__ import annotations
+
+import struct
+from pathlib import Path
+
+import numpy as np
+
+MAGIC = b"RXW1"
+
+
+def flatten(params: dict, prefix: str = "") -> dict[str, np.ndarray]:
+    out: dict[str, np.ndarray] = {}
+    for k, v in params.items():
+        name = f"{prefix}.{k}" if prefix else k
+        if isinstance(v, dict):
+            out.update(flatten(v, name))
+        else:
+            out[name] = np.asarray(v, dtype=np.float32)
+    return out
+
+
+def unflatten(flat: dict[str, np.ndarray]) -> dict:
+    root: dict = {}
+    for name, arr in flat.items():
+        node = root
+        parts = name.split(".")
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = arr
+    return root
+
+
+def save(path: str | Path, params: dict) -> None:
+    flat = flatten(params)
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<I", len(flat)))
+        for name in sorted(flat):
+            arr = np.ascontiguousarray(flat[name], dtype=np.float32)
+            nb = name.encode("utf-8")
+            f.write(struct.pack("<I", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<I", arr.ndim))
+            for d in arr.shape:
+                f.write(struct.pack("<I", d))
+            f.write(struct.pack("<B", 0))
+            f.write(arr.tobytes())
+
+
+def load(path: str | Path) -> dict:
+    data = Path(path).read_bytes()
+    if data[:4] != MAGIC:
+        raise ValueError(f"{path}: not an RXW1 weights file")
+    off = 4
+    (count,) = struct.unpack_from("<I", data, off)
+    off += 4
+    flat: dict[str, np.ndarray] = {}
+    for _ in range(count):
+        (nlen,) = struct.unpack_from("<I", data, off)
+        off += 4
+        name = data[off : off + nlen].decode("utf-8")
+        off += nlen
+        (ndim,) = struct.unpack_from("<I", data, off)
+        off += 4
+        dims = struct.unpack_from(f"<{ndim}I", data, off)
+        off += 4 * ndim
+        (dtype,) = struct.unpack_from("<B", data, off)
+        off += 1
+        if dtype != 0:
+            raise ValueError(f"{name}: unsupported dtype {dtype}")
+        n = int(np.prod(dims)) if ndim else 1
+        arr = np.frombuffer(data, dtype="<f4", count=n, offset=off).reshape(dims)
+        off += 4 * n
+        flat[name] = arr
+    return unflatten(flat)
+
+
+def save_config(path: str | Path, kv: dict[str, int]) -> None:
+    Path(path).write_text("".join(f"{k}={v}\n" for k, v in sorted(kv.items())))
+
+
+def load_config(path: str | Path) -> dict[str, int]:
+    out = {}
+    for line in Path(path).read_text().splitlines():
+        if line:
+            k, v = line.split("=")
+            out[k] = int(v)
+    return out

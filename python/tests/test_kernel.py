@@ -1,0 +1,129 @@
+"""L1 correctness: the Pallas attention kernel vs the pure-jnp oracle.
+
+This is the CORE kernel correctness signal: hypothesis sweeps shapes and
+dtypes and asserts allclose between `kernels.attention.mha` (interpret-mode
+Pallas) and `kernels.ref.mha_ref`.
+"""
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.attention import mha
+from compile.kernels.ref import mha_ref
+
+NEG_INF = -1e9
+
+
+def rand(key, shape, dtype):
+    return jax.random.normal(key, shape, jnp.float32).astype(dtype)
+
+
+def make_inputs(seed, b, h, tq, tk, dh, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    q = rand(ks[0], (b, h, tq, dh), dtype)
+    k = rand(ks[1], (b, h, tk, dh), dtype)
+    v = rand(ks[2], (b, h, tk, dh), dtype)
+    return q, k, v
+
+
+def tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else dict(rtol=2e-5, atol=2e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.integers(1, 3),
+    h=st.integers(1, 4),
+    tq=st.integers(1, 24),
+    tk=st.integers(1, 24),
+    dh=st.sampled_from([8, 16, 32]),
+    seed=st.integers(0, 2**16),
+)
+def test_kernel_matches_ref_unmasked(b, h, tq, tk, dh, seed):
+    q, k, v = make_inputs(seed, b, h, tq, tk, dh, jnp.float32)
+    mask = jnp.zeros((b, h, tq, tk), jnp.float32)
+    out = mha(q, k, v, mask)
+    ref = mha_ref(q, k, v, mask)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), **tol(jnp.float32))
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    b=st.integers(1, 2),
+    tq=st.integers(2, 16),
+    seed=st.integers(0, 2**16),
+)
+def test_kernel_matches_ref_causal_mask(b, tq, seed):
+    h, dh = 2, 16
+    q, k, v = make_inputs(seed, b, h, tq, tq, dh, jnp.float32)
+    causal = jnp.tril(jnp.ones((tq, tq), jnp.float32))
+    mask = (1.0 - causal)[None, None] * NEG_INF
+    out = mha(q, k, v, jnp.broadcast_to(mask, (b, h, tq, tq)))
+    ref = mha_ref(q, k, v, mask)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), **tol(jnp.float32))
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    tk=st.integers(2, 20),
+    n_pad=st.integers(1, 10),
+    seed=st.integers(0, 2**16),
+)
+def test_kernel_matches_ref_padding_mask(tk, n_pad, seed):
+    n_pad = min(n_pad, tk - 1)
+    b, h, tq, dh = 1, 2, 5, 16
+    q, k, v = make_inputs(seed, b, h, tq, tk, dh, jnp.float32)
+    pad = jnp.concatenate([jnp.ones(tk - n_pad), jnp.zeros(n_pad)])
+    mask = (1.0 - pad)[None, None, None, :] * NEG_INF
+    out = mha(q, k, v, jnp.broadcast_to(mask, (b, h, tq, tk)))
+    ref = mha_ref(q, k, v, mask)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), **tol(jnp.float32))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_kernel_dtypes(dtype):
+    q, k, v = make_inputs(7, 2, 4, 12, 12, 32, dtype)
+    mask = jnp.zeros((2, 4, 12, 12), jnp.float32)
+    out = mha(q, k, v, mask)
+    ref = mha_ref(q, k, v, mask)
+    assert out.dtype == dtype
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32), **tol(dtype)
+    )
+
+
+def test_kernel_model_shapes():
+    # The exact shapes the model uses: S=T=96, H=4, Dh=32.
+    q, k, v = make_inputs(3, 2, 4, 96, 96, 32, jnp.float32)
+    mask = jnp.zeros((2, 4, 96, 96), jnp.float32)
+    out = mha(q, k, v, mask)
+    ref = mha_ref(q, k, v, mask)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), **tol(jnp.float32))
+
+
+def test_masked_rows_are_uniform_attention():
+    # A fully-masked query row degenerates to uniform attention (softmax of
+    # equal values) in both implementations — no NaNs.
+    b, h, tq, tk, dh = 1, 1, 3, 4, 8
+    q, k, v = make_inputs(11, b, h, tq, tk, dh, jnp.float32)
+    mask = jnp.full((b, h, tq, tk), NEG_INF)
+    out = np.asarray(mha(q, k, v, mask))
+    ref = np.asarray(mha_ref(q, k, v, mask))
+    assert np.isfinite(out).all()
+    np.testing.assert_allclose(out, ref, rtol=2e-5, atol=2e-5)
+
+
+def test_kernel_is_jittable_and_stable_under_jit():
+    q, k, v = make_inputs(5, 1, 2, 10, 10, 16, jnp.float32)
+    mask = jnp.zeros((1, 2, 10, 10), jnp.float32)
+    eager = mha(q, k, v, mask)
+    jitted = jax.jit(mha)(q, k, v, mask)
+    np.testing.assert_allclose(np.asarray(eager), np.asarray(jitted), rtol=1e-6, atol=1e-6)

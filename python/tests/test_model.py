@@ -1,0 +1,155 @@
+"""L2 model invariants: shapes, causality, left-pad/position-shift
+equivalence (the property the paper's `padLeft` + shifted positional
+encodings rely on), and pallas/ref interchangeability at the model level.
+"""
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.data import BOS_ID, EOS_ID, PAD_ID
+from compile.model import ModelConfig, decode_logprobs, encode, init_params
+
+CFG = ModelConfig(vocab=31, d_model=32, n_heads=2, d_ff=64, n_enc=2, n_dec=2, s_len=16, t_len=16)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return init_params(jax.random.PRNGKey(0), CFG)
+
+
+def wrap_src(tokens):
+    s = [BOS_ID] + tokens + [EOS_ID]
+    src = np.zeros((1, CFG.s_len), np.int32)
+    pad = np.zeros((1, CFG.s_len), np.float32)
+    src[0, : len(s)] = s
+    pad[0, : len(s)] = 1.0
+    return jnp.asarray(src), jnp.asarray(pad)
+
+
+def right_pad_row(tokens, t_len):
+    tgt = np.zeros((1, t_len), np.int32)
+    pos = np.zeros((1, t_len), np.int32)
+    pad = np.zeros((1, t_len), np.float32)
+    tgt[0, : len(tokens)] = tokens
+    pos[0, : len(tokens)] = np.arange(len(tokens))
+    pad[0, : len(tokens)] = 1.0
+    return jnp.asarray(tgt), jnp.asarray(pos), jnp.asarray(pad)
+
+
+def left_pad_row(tokens, t_len):
+    n = len(tokens)
+    off = t_len - n
+    tgt = np.zeros((1, t_len), np.int32)
+    pos = np.zeros((1, t_len), np.int32)
+    pad = np.zeros((1, t_len), np.float32)
+    tgt[0, off:] = tokens
+    pos[0, off:] = np.arange(n)
+    pad[0, off:] = 1.0
+    return jnp.asarray(tgt), jnp.asarray(pos), jnp.asarray(pad)
+
+
+def test_encode_shape_and_finite(params):
+    src, pad = wrap_src([5, 6, 7])
+    mem = encode(params, CFG, src, pad)
+    assert mem.shape == (1, CFG.s_len, CFG.d_model)
+    assert np.isfinite(np.asarray(mem)).all()
+
+
+def test_decode_logprobs_normalized(params):
+    src, spad = wrap_src([5, 6, 7])
+    mem = encode(params, CFG, src, spad)
+    tgt, pos, tpad = right_pad_row([BOS_ID, 5, 6], CFG.t_len)
+    lp = decode_logprobs(params, CFG, tgt, pos, tpad, mem, spad)
+    assert lp.shape == (1, CFG.t_len, CFG.vocab)
+    sums = np.exp(np.asarray(lp)).sum(-1)
+    np.testing.assert_allclose(sums[0, :3], 1.0, rtol=1e-4)
+
+
+def test_causality(params):
+    # Changing tokens after position j must not change log-probs at <= j.
+    src, spad = wrap_src([5, 6, 7, 8])
+    mem = encode(params, CFG, src, spad)
+    a = [BOS_ID, 5, 6, 7, 8]
+    b = [BOS_ID, 5, 6, 9, 10]  # diverges at position 3
+    ta, pa, da = right_pad_row(a, CFG.t_len)
+    tb, pb, db = right_pad_row(b, CFG.t_len)
+    la = np.asarray(decode_logprobs(params, CFG, ta, pa, da, mem, spad))
+    lb = np.asarray(decode_logprobs(params, CFG, tb, pb, db, mem, spad))
+    np.testing.assert_allclose(la[0, :3], lb[0, :3], rtol=1e-4, atol=1e-5)
+    assert np.abs(la[0, 3] - lb[0, 3]).max() > 1e-4  # content actually matters
+
+
+def test_left_pad_with_shifted_positions_equals_right_pad(params):
+    # The paper's Appendix B property: left-padding with offset positional
+    # encodings yields the same distributions on the real positions.
+    src, spad = wrap_src([5, 6, 7, 8, 9])
+    mem = encode(params, CFG, src, spad)
+    tokens = [BOS_ID, 7, 8, 9]
+    tr, pr, dr = right_pad_row(tokens, CFG.t_len)
+    tl, pl, dl = left_pad_row(tokens, CFG.t_len)
+    lr = np.asarray(decode_logprobs(params, CFG, tr, pr, dr, mem, spad))
+    ll = np.asarray(decode_logprobs(params, CFG, tl, pl, dl, mem, spad))
+    off = CFG.t_len - len(tokens)
+    np.testing.assert_allclose(lr[0, : len(tokens)], ll[0, off:], rtol=1e-4, atol=1e-5)
+
+
+def test_batch_row_independence(params):
+    # A row's outputs must not depend on other rows in the batch.
+    src, spad = wrap_src([5, 6, 7])
+    mem = encode(params, CFG, src, spad)
+    t1, p1, d1 = right_pad_row([BOS_ID, 5, 6], CFG.t_len)
+    t2, p2, d2 = right_pad_row([BOS_ID, 9, 10, 11], CFG.t_len)
+    solo = np.asarray(decode_logprobs(params, CFG, t1, p1, d1, mem, spad))
+    mem2 = jnp.concatenate([mem, mem])
+    spad2 = jnp.concatenate([spad, spad])
+    both = np.asarray(
+        decode_logprobs(
+            params,
+            CFG,
+            jnp.concatenate([t1, t2]),
+            jnp.concatenate([p1, p2]),
+            jnp.concatenate([d1, d2]),
+            mem2,
+            spad2,
+        )
+    )
+    np.testing.assert_allclose(solo[0, :3], both[0, :3], rtol=1e-4, atol=1e-5)
+
+
+def test_src_pad_does_not_leak(params):
+    # Extending the source with extra PAD columns must not change encoder
+    # output on real positions (as seen through the decoder).
+    tokens = [5, 6, 7]
+    s = [BOS_ID] + tokens + [EOS_ID]
+    src_a = np.zeros((1, CFG.s_len), np.int32)
+    pad_a = np.zeros((1, CFG.s_len), np.float32)
+    src_a[0, : len(s)] = s
+    pad_a[0, : len(s)] = 1.0
+    src_b = src_a.copy()
+    src_b[0, len(s) :] = 9  # garbage behind the pad mask
+    tgt, pos, tpad = right_pad_row([BOS_ID, 5], CFG.t_len)
+    la = decode_logprobs(
+        params, CFG, tgt, pos, tpad, encode(params, CFG, jnp.asarray(src_a), jnp.asarray(pad_a)), jnp.asarray(pad_a)
+    )
+    lb = decode_logprobs(
+        params, CFG, tgt, pos, tpad, encode(params, CFG, jnp.asarray(src_b), jnp.asarray(pad_a)), jnp.asarray(pad_a)
+    )
+    np.testing.assert_allclose(np.asarray(la)[0, :2], np.asarray(lb)[0, :2], rtol=1e-4, atol=1e-5)
+
+
+def test_pallas_and_ref_model_level_equivalence(params):
+    src, spad = wrap_src([5, 6, 7, 8])
+    mem_ref = encode(params, CFG, src, spad, use_pallas=False)
+    mem_pl = encode(params, CFG, src, spad, use_pallas=True)
+    np.testing.assert_allclose(np.asarray(mem_ref), np.asarray(mem_pl), rtol=2e-4, atol=2e-5)
+    tgt, pos, tpad = right_pad_row([BOS_ID, 5, 6], CFG.t_len)
+    lr = decode_logprobs(params, CFG, tgt, pos, tpad, mem_ref, spad, use_pallas=False)
+    lp = decode_logprobs(params, CFG, tgt, pos, tpad, mem_pl, spad, use_pallas=True)
+    np.testing.assert_allclose(np.asarray(lr), np.asarray(lp), rtol=2e-4, atol=2e-4)

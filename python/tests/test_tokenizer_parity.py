@@ -1,0 +1,64 @@
+"""Cross-language tokenizer parity: the Python tokenizer must reproduce
+the Rust tokenizer's output exactly (golden file written by `gen-data`),
+plus local roundtrip/equivalence checks.
+"""
+
+import sys
+from pathlib import Path
+
+import pytest
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+from compile.data import SPECIALS, Vocab, tokenize
+
+DATA = Path(__file__).resolve().parents[2] / "data"
+
+
+@pytest.mark.skipif(not (DATA / "golden_tokens.tsv").exists(), reason="run gen-data first")
+def test_golden_tokenization_parity():
+    lines = (DATA / "golden_tokens.tsv").read_text().splitlines()
+    assert len(lines) >= 4
+    for line in lines:
+        smiles, expected = line.split("\t")
+        assert tokenize(smiles) == expected.split(" "), smiles
+
+
+def test_paper_figure2_example():
+    toks = tokenize("c1c[nH]c2ccc(C(C)=O)cc12")
+    assert toks == [
+        "c", "1", "c", "[nH]", "c", "2", "c", "c", "c", "(", "C", "(", "C",
+        ")", "=", "O", ")", "c", "c", "1", "2",
+    ]
+
+
+def test_roundtrip():
+    for s in ["BrCCCl", "C%12CC%12", "[Na+].[OH-]", "CC(=O)OC(C)(C)C"]:
+        assert "".join(tokenize(s)) == s
+
+
+def test_rejects_garbage():
+    with pytest.raises(ValueError):
+        tokenize("C C")
+    with pytest.raises(ValueError):
+        tokenize("C[nH")
+
+
+@pytest.mark.skipif(not (DATA / "vocab.txt").exists(), reason="run gen-data first")
+def test_vocab_loads_and_encodes():
+    v = Vocab.load(DATA / "vocab.txt")
+    assert v.id_to_tok[:4] == SPECIALS
+    ids = v.encode("c1ccccc1")
+    assert all(i >= 4 for i in ids)
+    assert v.decode(ids) == "c1ccccc1"
+
+
+@pytest.mark.skipif(not (DATA / "fwd_test.tsv").exists(), reason="run gen-data first")
+def test_whole_test_split_tokenizes_and_roundtrips():
+    from compile.data import read_split
+
+    v = Vocab.load(DATA / "vocab.txt")
+    for ex in read_split(DATA / "fwd_test.tsv")[:200]:
+        for s in (ex.src, ex.tgt):
+            ids = v.encode(s)
+            assert v.decode(ids) == s

@@ -1,0 +1,53 @@
+"""RXW1 weights format: roundtrip and layout pins (the Rust reader parses
+this format byte for byte — rust/src/model/weights.rs)."""
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+import numpy as np
+
+from compile import weights_io
+
+
+def test_flatten_unflatten_roundtrip():
+    params = {
+        "a": {"b": np.arange(6, dtype=np.float32).reshape(2, 3), "c": np.zeros(4, np.float32)},
+        "d": np.ones((1,), np.float32),
+    }
+    flat = weights_io.flatten(params)
+    assert set(flat) == {"a.b", "a.c", "d"}
+    back = weights_io.unflatten(flat)
+    np.testing.assert_array_equal(back["a"]["b"], params["a"]["b"])
+
+
+def test_save_load_roundtrip(tmp_path):
+    params = {
+        "enc0": {"attn": {"wq": np.random.randn(8, 8).astype(np.float32)}},
+        "tok_emb": np.random.randn(10, 4).astype(np.float32),
+    }
+    p = tmp_path / "w.bin"
+    weights_io.save(p, params)
+    back = weights_io.load(p)
+    np.testing.assert_array_equal(back["enc0"]["attn"]["wq"], params["enc0"]["attn"]["wq"])
+    np.testing.assert_array_equal(back["tok_emb"], params["tok_emb"])
+
+
+def test_file_layout_is_pinned(tmp_path):
+    # Byte-level pin: magic, count, sorted keys.
+    p = tmp_path / "w.bin"
+    weights_io.save(p, {"b": np.zeros(1, np.float32), "a": np.ones(2, np.float32)})
+    raw = p.read_bytes()
+    assert raw[:4] == b"RXW1"
+    assert int.from_bytes(raw[4:8], "little") == 2
+    # first tensor is "a" (sorted), name_len 1
+    assert int.from_bytes(raw[8:12], "little") == 1
+    assert raw[12:13] == b"a"
+
+
+def test_config_roundtrip(tmp_path):
+    p = tmp_path / "cfg.txt"
+    weights_io.save_config(p, {"d_model": 128, "vocab": 31})
+    back = weights_io.load_config(p)
+    assert back == {"d_model": 128, "vocab": 31}

@@ -1,0 +1,181 @@
+//! §3.3 limitation + design-choice ablations.
+//!
+//! (a) Large beam: the paper reports SBS *loses* to BS at beam 50 because
+//!     the effective batch (beams × drafts) saturates the device and the
+//!     least-lucky beam bounds the call count.
+//! (b) Draft-count cap N_d: bounding drafts mitigates effective-batch
+//!     inflation but costs acceptance (the §3.3 trade-off).
+//! (c) Dilated drafts: the §3.1 suggestion — windows that skip one token —
+//!     buys acceptance on reactions with single-token deletions.
+//! (d) Batched speculation: with B>1 the least-lucky query dictates the
+//!     number of calls ("the sequence with the lowest acceptance rate
+//!     determines the number of calls").
+//!
+//! RXNSPEC_LIMIT scales the subsets (default 8).
+
+use rxnspec::bench::{eval_setup, limit, measure, report, speedup};
+use rxnspec::decoding::{beam_search, sbs, spec_greedy, spec_greedy_batch, SbsConfig};
+use rxnspec::draft::{Acceptance, DraftConfig};
+
+fn main() -> anyhow::Result<()> {
+    let n_q = limit(8);
+
+    // ---------- (a) beam-50 limitation (retro) -------------------------
+    {
+        let (vocab, backend, split) = eval_setup("retro")?;
+    backend.precompile()?;
+        let srcs: Vec<Vec<i64>> = split[..3.min(split.len())]
+            .iter()
+            .map(|e| vocab.encode_wrapped(&e.src))
+            .collect::<Result<_, _>>()?;
+        let mut rows = Vec::new();
+        for &n in &[5usize, 50] {
+            rows.push(measure(&format!("BS n={n}"), 0, 1, || {
+                let mut calls = 0;
+                for s in &srcs {
+                    calls += beam_search(&backend, s, n).unwrap().stats.decoder_calls;
+                }
+                vec![("calls".into(), calls as f64)]
+            }));
+            rows.push(measure(&format!("SBS n={n} DL=10"), 0, 1, || {
+                let mut calls = 0;
+                for s in &srcs {
+                    calls += sbs(&backend, s, &SbsConfig::new(n, 10))
+                        .unwrap()
+                        .stats
+                        .decoder_calls;
+                }
+                vec![("calls".into(), calls as f64)]
+            }));
+        }
+        report(
+            "ablation_beam50",
+            "§3.3 — SBS advantage collapses at large beam width",
+            &rows,
+        );
+        println!(
+            "speedup n=5: {:.2}x, n=50: {:.2}x (paper: SBS slower than BS at n=50)",
+            speedup(&rows[0], &rows[1]),
+            speedup(&rows[2], &rows[3]),
+        );
+    }
+
+    // ---------- (b) N_d cap sweep (fwd, spec greedy) --------------------
+    {
+        let (vocab, backend, split) = eval_setup("fwd")?;
+    backend.precompile()?;
+        let srcs: Vec<Vec<i64>> = split[..n_q.min(split.len())]
+            .iter()
+            .map(|e| vocab.encode_wrapped(&e.src))
+            .collect::<Result<_, _>>()?;
+        let mut rows = Vec::new();
+        for &nd in &[5usize, 10, 25, 50] {
+            let cfg = DraftConfig {
+                max_drafts: nd,
+                ..DraftConfig::new(10)
+            };
+            rows.push(measure(&format!("N_d={nd}"), 0, 1, || {
+                let mut acc = Acceptance::default();
+                let mut calls = 0;
+                for s in &srcs {
+                    let o = spec_greedy(&backend, s, &cfg).unwrap();
+                    acc.merge(&o.stats.acceptance);
+                    calls += o.stats.decoder_calls;
+                }
+                vec![
+                    ("acceptance".into(), acc.rate()),
+                    ("calls".into(), calls as f64),
+                ]
+            }));
+        }
+        report(
+            "ablation_nd",
+            "§3.3 — draft-count cap vs acceptance trade-off (DL=10)",
+            &rows,
+        );
+    }
+
+    // ---------- (c) dilated drafts (fwd) --------------------------------
+    {
+        let (vocab, backend, split) = eval_setup("fwd")?;
+    backend.precompile()?;
+        let srcs: Vec<Vec<i64>> = split[..n_q.min(split.len())]
+            .iter()
+            .map(|e| vocab.encode_wrapped(&e.src))
+            .collect::<Result<_, _>>()?;
+        let mut rows = Vec::new();
+        for dilated in [false, true] {
+            let cfg = DraftConfig {
+                dilated,
+                max_drafts: 40,
+                ..DraftConfig::new(10)
+            };
+            rows.push(measure(
+                if dilated { "dilated" } else { "plain" },
+                0,
+                1,
+                || {
+                    let mut acc = Acceptance::default();
+                    let mut calls = 0;
+                    for s in &srcs {
+                        let o = spec_greedy(&backend, s, &cfg).unwrap();
+                        acc.merge(&o.stats.acceptance);
+                        calls += o.stats.decoder_calls;
+                    }
+                    vec![
+                        ("acceptance".into(), acc.rate()),
+                        ("calls".into(), calls as f64),
+                    ]
+                },
+            ));
+        }
+        report(
+            "ablation_dilated",
+            "§3.1 — dilated draft windows (deletion coverage)",
+            &rows,
+        );
+    }
+
+    // ---------- (d) least-lucky batching effect (fwd) -------------------
+    {
+        let (vocab, backend, split) = eval_setup("fwd")?;
+    backend.precompile()?;
+        let take = (n_q.max(8)).min(split.len());
+        let srcs: Vec<Vec<i64>> = split[..take]
+            .iter()
+            .map(|e| vocab.encode_wrapped(&e.src))
+            .collect::<Result<_, _>>()?;
+        let refs: Vec<&[i64]> = srcs.iter().map(|s| s.as_slice()).collect();
+        let cfg = DraftConfig::new(10);
+        let solo = measure("spec B=1 xN", 0, 1, || {
+            let mut calls = 0;
+            for s in &refs {
+                calls += spec_greedy_batch(&backend, &[s], &cfg).unwrap()[0]
+                    .stats
+                    .decoder_calls;
+            }
+            vec![("calls".into(), calls as f64)]
+        });
+        let batched = measure("spec B=8 batched", 0, 1, || {
+            let mut calls = 0;
+            for chunk in refs.chunks(8) {
+                calls += spec_greedy_batch(&backend, chunk, &cfg).unwrap()[0]
+                    .stats
+                    .decoder_calls;
+            }
+            vec![("calls".into(), calls as f64)]
+        });
+        println!(
+            "least-lucky effect: solo total calls {:.0}, batched calls {:.0} \
+             (batched ≤ solo, but each call is bigger — §3.3)",
+            solo.aux[0].1, batched.aux[0].1
+        );
+        report(
+            "ablation_least_lucky",
+            "§3.3 — batched speculation: least-lucky query bounds calls",
+            &[solo, batched],
+        );
+    }
+
+    Ok(())
+}

@@ -1,0 +1,133 @@
+//! Tables 3 & 4 reproduction: single-step retrosynthesis with beam search
+//! vs speculative beam search.
+//!
+//! Paper (USPTO-50K test, 5k reactions, H100), wall time:
+//!                    n=5      n=10     n=25
+//!     BS             36.7     39.9     46.2   min
+//!     SBS, DL=10      9.9     15.4     28.1   min   (3.7x / 2.7x / 1.8x)
+//!     SBS, DL=0      23.1     25.7     34.6   min
+//! and Table 4: top-N accuracy identical between BS and SBS.
+//!
+//! Here: a subset of the synthetic retro split on CPU PJRT; shape under
+//! reproduction: SBS(DL=10) fastest, advantage shrinking as n grows, and
+//! top-N outputs matching BS. RXNSPEC_LIMIT sets the subset (default 12).
+
+use rxnspec::bench::{eval_setup, limit, measure, report, speedup, DeviceModel, Measurement};
+use rxnspec::decoding::{beam_search, sbs, SbsConfig};
+
+fn main() -> anyhow::Result<()> {
+    let (vocab, backend, split) = eval_setup("retro")?;
+    backend.precompile()?;
+    let n_q = limit(12).min(split.len());
+    let srcs: Vec<Vec<i64>> = split[..n_q]
+        .iter()
+        .map(|e| vocab.encode_wrapped(&e.src))
+        .collect::<Result<_, _>>()?;
+    let tgts: Vec<&str> = split[..n_q].iter().map(|e| e.tgt.as_str()).collect();
+    eprintln!("table3: {} retro queries", n_q);
+    let dm = DeviceModel::calibrate(&backend, &vocab, &split[0].src)?;
+    eprintln!("device model: {}", dm.describe());
+
+    let widths = [5usize, 10, 25];
+    let mut all_rows: Vec<Measurement> = Vec::new();
+    let mut table4: Vec<(String, Vec<f64>)> = Vec::new();
+
+    for &n in &widths {
+        // Standard beam search.
+        let mut bs_hyps: Vec<Vec<Vec<i64>>> = Vec::new();
+        let m_bs = measure(&format!("BS n={n}"), 0, 1, || {
+            let _ = backend.take_call_log();
+            bs_hyps.clear();
+            let mut calls = 0usize;
+            for s in &srcs {
+                let out = beam_search(&backend, s, n).unwrap();
+                calls += out.stats.decoder_calls;
+                bs_hyps.push(out.hyps.iter().map(|h| h.tokens.clone()).collect());
+            }
+            let proj = dm.project(&backend.take_call_log());
+            vec![("calls".into(), calls as f64), ("proj_s".into(), proj)]
+        });
+
+        // SBS DL=10 and the DL=0 control.
+        let mut sbs_hyps: Vec<Vec<Vec<i64>>> = Vec::new();
+        let m_sbs = measure(&format!("SBS n={n} DL=10"), 0, 1, || {
+            let _ = backend.take_call_log();
+            sbs_hyps.clear();
+            let mut calls = 0usize;
+            for s in &srcs {
+                let out = sbs(&backend, s, &SbsConfig::new(n, 10)).unwrap();
+                calls += out.stats.decoder_calls;
+                sbs_hyps.push(out.hyps.iter().map(|h| h.tokens.clone()).collect());
+            }
+            let proj = dm.project(&backend.take_call_log());
+            vec![("calls".into(), calls as f64), ("proj_s".into(), proj)]
+        });
+        let m_sbs0 = measure(&format!("SBS n={n} DL=0"), 0, 1, || {
+            let _ = backend.take_call_log();
+            let mut calls = 0usize;
+            for s in &srcs {
+                let out = sbs(&backend, s, &SbsConfig::new(n, 0)).unwrap();
+                calls += out.stats.decoder_calls;
+            }
+            let proj = dm.project(&backend.take_call_log());
+            vec![("calls".into(), calls as f64), ("proj_s".into(), proj)]
+        });
+
+        let pj = |m: &Measurement| m.aux.iter().find(|a| a.0 == "proj_s").map(|a| a.1).unwrap_or(0.0);
+        println!(
+            "n={n}: wall SBS(DL=10) {:.2}x / projected {:.2}x (paper {}), SBS(DL=0) {:.2}x",
+            speedup(&m_bs, &m_sbs),
+            pj(&m_bs) / pj(&m_sbs),
+            match n {
+                5 => "3.7x",
+                10 => "2.7x",
+                _ => "1.8x",
+            },
+            speedup(&m_bs, &m_sbs0),
+        );
+
+        // Table 4: top-N accuracy, BS vs SBS.
+        let top_ns: Vec<usize> = [1usize, 3, 5, 10, 25].iter().copied().filter(|&k| k <= n).collect();
+        let acc = |hyps: &Vec<Vec<Vec<i64>>>| -> Vec<f64> {
+            top_ns
+                .iter()
+                .map(|&k| {
+                    let hit = hyps
+                        .iter()
+                        .zip(&tgts)
+                        .filter(|(hs, t)| {
+                            hs.iter().take(k).any(|h| vocab.decode(h) == **t)
+                        })
+                        .count();
+                    hit as f64 * 100.0 / n_q as f64
+                })
+                .collect()
+        };
+        table4.push((format!("BS n={n}"), acc(&bs_hyps)));
+        table4.push((format!("SBS n={n} DL=10"), acc(&sbs_hyps)));
+
+        all_rows.extend([m_bs, m_sbs, m_sbs0]);
+    }
+
+    report("table3_sbs", "Table 3 — BS vs SBS wall time (retro)", &all_rows);
+
+    println!("\n=== Table 4 — top-N accuracy, BS vs SBS (must match) ===");
+    println!("config            | top-1  top-3  top-5  top-10 top-25");
+    let mut tsv = String::from("config\ttop1\ttop3\ttop5\ttop10\ttop25\n");
+    for (label, accs) in &table4 {
+        print!("{label:<17} |");
+        tsv.push_str(label);
+        for a in accs {
+            print!(" {a:5.1}%");
+            tsv.push_str(&format!("\t{a:.2}"));
+        }
+        for _ in accs.len()..5 {
+            tsv.push_str("\t");
+        }
+        println!();
+        tsv.push('\n');
+    }
+    let _ = std::fs::create_dir_all("bench_out");
+    let _ = std::fs::write("bench_out/table4_accuracy.tsv", tsv);
+    Ok(())
+}

@@ -1,0 +1,172 @@
+//! `gen-data` — render the synthetic reaction corpus to `data/`.
+//!
+//! Outputs:
+//!   data/fwd_{train,val,test}.tsv    product-prediction task
+//!   data/retro_{train,val,test}.tsv  single-step retrosynthesis task
+//!   data/vocab.txt                   shared token vocabulary
+//!   data/golden_tokens.tsv           tokenizer parity pins for pytest
+//!
+//! Usage: gen-data [--out DIR] [--seed N] [--train N] [--val N] [--test N]
+//!                 [--retro-aug K] [--stats]
+
+use std::path::PathBuf;
+
+use anyhow::Result;
+
+use rxnspec::chem::gen::longest_common_token_substring;
+use rxnspec::chem::{generate_corpus, tokenize, write_split, CorpusConfig, Dataset};
+use rxnspec::vocab::Vocab;
+
+fn usage() -> ! {
+    eprintln!(
+        "usage: gen-data [--out DIR] [--seed N] [--train N] [--val N] [--test N] \
+         [--retro-aug K] [--stats]"
+    );
+    std::process::exit(2)
+}
+
+fn main() -> Result<()> {
+    let mut cfg = CorpusConfig::default();
+    let mut out = PathBuf::from("data");
+    let mut stats = false;
+
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut i = 0;
+    while i < args.len() {
+        let need = |i: usize| args.get(i + 1).cloned().unwrap_or_else(|| usage());
+        match args[i].as_str() {
+            "--out" => {
+                out = PathBuf::from(need(i));
+                i += 2;
+            }
+            "--seed" => {
+                cfg.seed = need(i).parse().unwrap_or_else(|_| usage());
+                i += 2;
+            }
+            "--train" => {
+                cfg.n_train = need(i).parse().unwrap_or_else(|_| usage());
+                i += 2;
+            }
+            "--val" => {
+                cfg.n_val = need(i).parse().unwrap_or_else(|_| usage());
+                i += 2;
+            }
+            "--test" => {
+                cfg.n_test = need(i).parse().unwrap_or_else(|_| usage());
+                i += 2;
+            }
+            "--retro-aug" => {
+                cfg.retro_aug = need(i).parse().unwrap_or_else(|_| usage());
+                i += 2;
+            }
+            "--stats" => {
+                stats = true;
+                i += 1;
+            }
+            _ => usage(),
+        }
+    }
+
+    eprintln!(
+        "generating corpus: seed={} train={} val={} test={} retro_aug={}",
+        cfg.seed, cfg.n_train, cfg.n_val, cfg.n_test, cfg.retro_aug
+    );
+    let corpus = generate_corpus(&cfg);
+    std::fs::create_dir_all(&out)?;
+
+    let write_task = |name: &str, ds: &Dataset| -> Result<()> {
+        write_split(&out.join(format!("{name}_train.tsv")), &ds.train)?;
+        write_split(&out.join(format!("{name}_val.tsv")), &ds.val)?;
+        write_split(&out.join(format!("{name}_test.tsv")), &ds.test)?;
+        eprintln!(
+            "  {name}: train={} val={} test={}",
+            ds.train.len(),
+            ds.val.len(),
+            ds.test.len()
+        );
+        Ok(())
+    };
+    write_task("fwd", &corpus.forward)?;
+    write_task("retro", &corpus.retro)?;
+
+    // Vocabulary over every string in the corpus (both tasks, all splits).
+    let mut all: Vec<&str> = Vec::new();
+    for ds in [&corpus.forward, &corpus.retro] {
+        for split in [&ds.train, &ds.val, &ds.test] {
+            for ex in split {
+                all.push(&ex.src);
+                all.push(&ex.tgt);
+            }
+        }
+    }
+    let vocab = Vocab::build(all.iter().copied())?;
+    vocab.save(&out.join("vocab.txt"))?;
+    eprintln!("  vocab: {} tokens", vocab.len());
+
+    // Stock set for the CASP planner (examples/casp_planner.rs): every
+    // molecule that appears as a *reactant* anywhere in the corpus counts
+    // as purchasable — the AiZynthFinder convention (a purchasability
+    // catalog spans the whole chemical space, not just training data).
+    let mut stock: std::collections::BTreeSet<&str> = std::collections::BTreeSet::new();
+    for split in [&corpus.retro.train, &corpus.retro.val, &corpus.retro.test] {
+        for ex in split {
+            for mol in ex.tgt.split('.') {
+                stock.insert(mol);
+            }
+        }
+    }
+    let stock_body: String = stock.iter().map(|m| format!("{m}\n")).collect();
+    std::fs::write(out.join("stock.txt"), stock_body)?;
+    eprintln!("  stock: {} purchasable molecules", stock.len());
+
+    // Golden tokenization pins: the Python tokenizer must produce the exact
+    // same splits (checked by python/tests/test_tokenizer_parity.py).
+    let mut golden = String::new();
+    let mut pin_examples: Vec<&str> = vec![
+        "c1c[nH]c2ccc(C(C)=O)cc12",
+        "C(=O)(OC(=O)OC(C)(C)C)OC(C)(C)C",
+        "BrCCCl.[Na+].[OH-]",
+        "C%12CC%12",
+    ];
+    pin_examples.extend(corpus.forward.test.iter().take(50).map(|e| e.src.as_str()));
+    for s in pin_examples {
+        let toks = tokenize(s)?;
+        golden.push_str(s);
+        golden.push('\t');
+        golden.push_str(&toks.join(" "));
+        golden.push('\n');
+    }
+    std::fs::write(out.join("golden_tokens.tsv"), golden)?;
+
+    if stats {
+        print_stats(&corpus);
+    }
+    eprintln!("done: corpus written to {}", out.display());
+    Ok(())
+}
+
+/// Per-template counts and source↔target longest-common-substring stats —
+/// the corpus property that drives draft acceptance (DESIGN.md §3).
+fn print_stats(corpus: &rxnspec::chem::Corpus) {
+    use std::collections::HashMap;
+    let mut by_template: HashMap<String, (usize, usize, usize)> = HashMap::new();
+    for ex in &corpus.forward.test {
+        let lcs = longest_common_token_substring(&ex.src, &ex.tgt);
+        let n_tgt = tokenize(&ex.tgt).map(|t| t.len()).unwrap_or(0);
+        let e = by_template.entry(ex.template.clone()).or_default();
+        e.0 += 1;
+        e.1 += lcs;
+        e.2 += n_tgt;
+    }
+    println!("template\tcount\tavg_lcs_tokens\tavg_tgt_tokens");
+    let mut keys: Vec<_> = by_template.keys().cloned().collect();
+    keys.sort();
+    for k in keys {
+        let (n, lcs, tgt) = by_template[&k];
+        println!(
+            "{k}\t{n}\t{:.1}\t{:.1}",
+            lcs as f64 / n as f64,
+            tgt as f64 / n as f64
+        );
+    }
+}

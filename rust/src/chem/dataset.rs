@@ -1,0 +1,293 @@
+//! Dataset assembly and on-disk format.
+//!
+//! `gen-data` renders the synthetic corpus into plain TSV files (no serde
+//! in the offline dependency set, and the format is two columns of SMILES):
+//!
+//! ```text
+//! <src-smiles> \t <tgt-smiles> \t <template>
+//! ```
+//!
+//! * forward task (product prediction, USPTO-MIT-mixed analogue):
+//!   src = reactants+reagents (shuffled, dot-joined), tgt = product.
+//! * retro task (single-step retrosynthesis, USPTO-50K analogue):
+//!   src = product, tgt = reactants (dot-joined, no reagents).
+//!
+//! The retro training split is augmented `aug`× with different reactant
+//! orderings — the analogue of the paper's 20× root-aligned augmentation
+//! (our pairs are root-aligned by construction, see DESIGN.md §3).
+
+use std::collections::HashSet;
+use std::io::{BufRead, BufWriter, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::chem::gen::{gen_reaction, Reaction};
+use crate::rng::Rng;
+
+/// One source→target translation example.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Example {
+    pub src: String,
+    pub tgt: String,
+    pub template: String,
+}
+
+/// A full task dataset: train/val/test splits.
+#[derive(Debug, Clone, Default)]
+pub struct Dataset {
+    pub train: Vec<Example>,
+    pub val: Vec<Example>,
+    pub test: Vec<Example>,
+}
+
+/// Corpus-generation configuration.
+#[derive(Debug, Clone)]
+pub struct CorpusConfig {
+    pub seed: u64,
+    /// Distinct underlying reactions per split.
+    pub n_train: usize,
+    pub n_val: usize,
+    pub n_test: usize,
+    /// Training-split augmentation factor for the retro task.
+    pub retro_aug: usize,
+}
+
+impl Default for CorpusConfig {
+    fn default() -> Self {
+        CorpusConfig {
+            seed: 20240607,
+            n_train: 20_000,
+            n_val: 1_000,
+            n_test: 2_000,
+            retro_aug: 3,
+        }
+    }
+}
+
+/// Generate `n` distinct reactions.
+///
+/// Dedup key is the *product*: distinct reactions may share a product
+/// (e.g. two routes to one ester), and allowing that across splits would
+/// leak retro-task test queries into training.
+fn gen_distinct(rng: &mut Rng, n: usize, seen: &mut HashSet<String>) -> Vec<Reaction> {
+    let mut out = Vec::with_capacity(n);
+    let mut guard = 0usize;
+    while out.len() < n {
+        guard += 1;
+        if guard > n * 200 {
+            panic!("reaction generator failed to produce {n} distinct reactions");
+        }
+        let rx = gen_reaction(rng);
+        if seen.insert(rx.product.clone()) {
+            out.push(rx);
+        }
+    }
+    out
+}
+
+fn identity_order(n: usize) -> Vec<usize> {
+    (0..n).collect()
+}
+
+/// Render the forward-task example for a reaction with a shuffled
+/// source-molecule order (mixed reactants/reagents, as in USPTO-MIT mixed).
+fn forward_example(rng: &mut Rng, rx: &Reaction) -> Example {
+    let mut order = identity_order(rx.n_src_molecules());
+    rng.shuffle(&mut order);
+    Example {
+        src: rx.forward_src(&order),
+        tgt: rx.product.clone(),
+        template: rx.template.to_string(),
+    }
+}
+
+/// Render a retro-task example with a given reactant ordering.
+fn retro_example(rx: &Reaction, order: &[usize]) -> Example {
+    Example {
+        src: rx.product.clone(),
+        tgt: rx.retro_tgt(order),
+        template: rx.template.to_string(),
+    }
+}
+
+/// Generated corpus for both tasks.
+#[derive(Debug, Clone)]
+pub struct Corpus {
+    pub forward: Dataset,
+    pub retro: Dataset,
+}
+
+/// Generate the full two-task corpus.
+///
+/// Reactions are distinct across splits (no leakage: dedup set is shared),
+/// and the retro train split is augmented with reactant-order permutations.
+pub fn generate_corpus(cfg: &CorpusConfig) -> Corpus {
+    let mut rng = Rng::new(cfg.seed);
+    let mut seen = HashSet::new();
+    let train_rx = gen_distinct(&mut rng, cfg.n_train, &mut seen);
+    let val_rx = gen_distinct(&mut rng, cfg.n_val, &mut seen);
+    let test_rx = gen_distinct(&mut rng, cfg.n_test, &mut seen);
+
+    let mut fwd = Dataset::default();
+    let mut retro = Dataset::default();
+
+    for (rxs, fwd_split, retro_split, is_train) in [
+        (&train_rx, &mut fwd.train, &mut retro.train, true),
+        (&val_rx, &mut fwd.val, &mut retro.val, false),
+        (&test_rx, &mut fwd.test, &mut retro.test, false),
+    ] {
+        for rx in rxs.iter() {
+            fwd_split.push(forward_example(&mut rng, rx));
+            let n_r = rx.reactants.len();
+            if is_train && cfg.retro_aug > 1 && n_r > 1 {
+                // Augment with distinct reactant orderings (at most n_r! of
+                // them exist; with n_r == 2 that caps the factor at 2).
+                let mut orders: Vec<Vec<usize>> = vec![identity_order(n_r)];
+                let mut guard = 0;
+                while orders.len() < cfg.retro_aug && guard < 20 {
+                    guard += 1;
+                    let mut o = identity_order(n_r);
+                    rng.shuffle(&mut o);
+                    if !orders.contains(&o) {
+                        orders.push(o);
+                    }
+                }
+                for o in &orders {
+                    retro_split.push(retro_example(rx, o));
+                }
+            } else {
+                retro_split.push(retro_example(rx, &identity_order(n_r)));
+            }
+        }
+    }
+    // Shuffle training splits so augmented copies are not adjacent.
+    rng.shuffle(&mut fwd.train);
+    rng.shuffle(&mut retro.train);
+    Corpus { forward: fwd, retro }
+}
+
+/// Write one split to a TSV file.
+pub fn write_split(path: &Path, examples: &[Example]) -> Result<()> {
+    let f = std::fs::File::create(path)
+        .with_context(|| format!("create {}", path.display()))?;
+    let mut w = BufWriter::new(f);
+    for ex in examples {
+        writeln!(w, "{}\t{}\t{}", ex.src, ex.tgt, ex.template)?;
+    }
+    Ok(())
+}
+
+/// Read one split from a TSV file.
+pub fn read_split(path: &Path) -> Result<Vec<Example>> {
+    let f = std::fs::File::open(path)
+        .with_context(|| format!("open {}", path.display()))?;
+    let r = std::io::BufReader::new(f);
+    let mut out = Vec::new();
+    for (i, line) in r.lines().enumerate() {
+        let line = line?;
+        if line.is_empty() {
+            continue;
+        }
+        let mut parts = line.split('\t');
+        let (src, tgt) = match (parts.next(), parts.next()) {
+            (Some(s), Some(t)) => (s.to_string(), t.to_string()),
+            _ => bail!("{}:{}: expected at least 2 tab-separated columns", path.display(), i + 1),
+        };
+        let template = parts.next().unwrap_or("unknown").to_string();
+        out.push(Example { src, tgt, template });
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::chem::tokenizer::is_valid_smiles;
+
+    fn tiny_cfg() -> CorpusConfig {
+        CorpusConfig {
+            seed: 1,
+            n_train: 50,
+            n_val: 10,
+            n_test: 10,
+            retro_aug: 3,
+        }
+    }
+
+    #[test]
+    fn corpus_split_sizes() {
+        let c = generate_corpus(&tiny_cfg());
+        assert_eq!(c.forward.train.len(), 50);
+        assert_eq!(c.forward.val.len(), 10);
+        assert_eq!(c.forward.test.len(), 10);
+        // retro train is augmented, so it is at least as large
+        assert!(c.retro.train.len() >= 50);
+        assert_eq!(c.retro.val.len(), 10);
+        assert_eq!(c.retro.test.len(), 10);
+    }
+
+    #[test]
+    fn corpus_examples_are_valid_smiles() {
+        let c = generate_corpus(&tiny_cfg());
+        for ex in c
+            .forward
+            .train
+            .iter()
+            .chain(&c.forward.test)
+            .chain(&c.retro.train)
+            .chain(&c.retro.test)
+        {
+            assert!(is_valid_smiles(&ex.src), "invalid src {}", ex.src);
+            assert!(is_valid_smiles(&ex.tgt), "invalid tgt {}", ex.tgt);
+        }
+    }
+
+    #[test]
+    fn no_leakage_between_splits() {
+        let c = generate_corpus(&tiny_cfg());
+        let train_tgt: HashSet<&str> =
+            c.forward.train.iter().map(|e| e.tgt.as_str()).collect();
+        for ex in &c.forward.test {
+            assert!(
+                !train_tgt.contains(ex.tgt.as_str()),
+                "test product leaked into train: {}",
+                ex.tgt
+            );
+        }
+    }
+
+    #[test]
+    fn deterministic_for_same_seed() {
+        let a = generate_corpus(&tiny_cfg());
+        let b = generate_corpus(&tiny_cfg());
+        assert_eq!(a.forward.train, b.forward.train);
+        assert_eq!(a.retro.train, b.retro.train);
+    }
+
+    #[test]
+    fn tsv_roundtrip() {
+        let c = generate_corpus(&tiny_cfg());
+        let dir = std::env::temp_dir().join("rxnspec_test_tsv");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("fwd_train.tsv");
+        write_split(&path, &c.forward.train).unwrap();
+        let back = read_split(&path).unwrap();
+        assert_eq!(back, c.forward.train);
+    }
+
+    #[test]
+    fn retro_augmentation_creates_order_variants() {
+        let c = generate_corpus(&tiny_cfg());
+        // Find at least one pair of augmented examples: same src, diff tgt.
+        let mut by_src: std::collections::HashMap<&str, HashSet<&str>> =
+            std::collections::HashMap::new();
+        for ex in &c.retro.train {
+            by_src.entry(&ex.src).or_default().insert(&ex.tgt);
+        }
+        assert!(
+            by_src.values().any(|t| t.len() > 1),
+            "no augmented reactant-order variants found"
+        );
+    }
+}

@@ -1,0 +1,637 @@
+//! Synthetic reaction corpus generator.
+//!
+//! The paper trains on USPTO-MIT / USPTO-50K, which we cannot ship. The
+//! property its speculative-decoding method exploits is *not* chemistry per
+//! se — it is that reactant and product SMILES share long common substrings
+//! (large molecule fragments are untouched by a reaction, and root-aligned
+//! SMILES keep them textually aligned). This module generates a corpus with
+//! exactly that structure, from a fragment grammar plus a set of classic
+//! reaction templates implemented as string splices:
+//!
+//!   * N-Boc protection of azoles (the paper's own Figure 2 example class)
+//!   * amide coupling (acid + amine)
+//!   * Fischer esterification (acid + alcohol) and ester hydrolysis
+//!   * N-alkylation of azoles with alkyl halides
+//!   * Williamson ether synthesis
+//!   * Suzuki-like biaryl coupling (aryl halide + boronic acid)
+//!   * ketone reduction
+//!
+//! Because products are built by splicing reactant substrings, every pair is
+//! "root-aligned by construction" — the analogue of the paper's 20× root-
+//! aligned augmentation (see DESIGN.md §3).
+
+use crate::chem::tokenizer::{is_valid_smiles, tokenize};
+use crate::rng::Rng;
+
+/// One generated reaction sample.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Reaction {
+    /// Molecules that contribute atoms to the product.
+    pub reactants: Vec<String>,
+    /// Spectator molecules (bases, catalysts, solvents). Present on the
+    /// source side of the *forward* task (USPTO-MIT "mixed" has no
+    /// reactant/reagent separation) and absent from the retro target
+    /// (USPTO-50K lists reactants only).
+    pub reagents: Vec<String>,
+    /// Product molecule.
+    pub product: String,
+    /// Which template produced this sample (for stratified stats).
+    pub template: &'static str,
+}
+
+impl Reaction {
+    /// Source string for the forward (product-prediction) task:
+    /// reactants and reagents mixed, dot-separated, order given.
+    pub fn forward_src(&self, order: &[usize]) -> String {
+        let all: Vec<&str> = self
+            .reactants
+            .iter()
+            .chain(self.reagents.iter())
+            .map(|s| s.as_str())
+            .collect();
+        order.iter().map(|&i| all[i]).collect::<Vec<_>>().join(".")
+    }
+
+    /// Number of source-side molecules in the forward task.
+    pub fn n_src_molecules(&self) -> usize {
+        self.reactants.len() + self.reagents.len()
+    }
+
+    /// Target string for the retro task: reactants only, dot-separated.
+    pub fn retro_tgt(&self, order: &[usize]) -> String {
+        order
+            .iter()
+            .map(|&i| self.reactants[i].as_str())
+            .collect::<Vec<_>>()
+            .join(".")
+    }
+}
+
+/// Molecule generator: tracks ring-closure digits so that every fragment
+/// instantiated within one molecule gets fresh labels.
+struct MolGen<'a> {
+    rng: &'a mut Rng,
+    next_ring: u8,
+}
+
+impl<'a> MolGen<'a> {
+    fn new(rng: &'a mut Rng) -> Self {
+        MolGen { rng, next_ring: 1 }
+    }
+
+    fn ring_label(&mut self) -> String {
+        let r = self.next_ring;
+        self.next_ring += 1;
+        if r < 10 {
+            format!("{r}")
+        } else {
+            format!("%{r:02}")
+        }
+    }
+
+    /// A short aliphatic chain, e.g. `CC`, `CC(C)C` (always starts and ends
+    /// on carbon so it can be spliced anywhere an R-group fits).
+    fn chain(&mut self, max_len: usize) -> String {
+        let len = self.rng.range(1, max_len.max(1));
+        let mut s = String::new();
+        for i in 0..len {
+            if i > 0 && i + 1 < len {
+                // internal heteroatom or branch
+                let roll = self.rng.below(10);
+                if roll == 0 {
+                    s.push('O');
+                } else if roll == 1 {
+                    s.push_str("C(C)");
+                    continue;
+                } else if roll == 2 {
+                    s.push_str("C(F)");
+                    continue;
+                } else if roll == 3 {
+                    s.push_str("C(CC)");
+                    continue;
+                }
+            }
+            s.push('C');
+        }
+        s
+    }
+
+    /// A small terminal substituent.
+    fn substituent(&mut self, allow_ring: bool) -> String {
+        let roll = self.rng.below(if allow_ring { 16 } else { 14 });
+        match roll {
+            0 => "F".to_string(),
+            1 => "Cl".to_string(),
+            2 => "OC".to_string(),            // methoxy
+            3 => "C(F)(F)F".to_string(),      // trifluoromethyl
+            4 => "C#N".to_string(),           // nitrile
+            5 => "C(C)C".to_string(),         // isopropyl
+            6 => "C".to_string(),             // methyl
+            7 => "OCC".to_string(),           // ethoxy
+            8 => "N(C)C".to_string(),         // dimethylamino
+            9 => "C(C)(C)C".to_string(),      // tert-butyl
+            10 => "CC".to_string(),           // ethyl
+            11 => "S(=O)(=O)C".to_string(),   // methanesulfonyl
+            12 | 13 => self.chain(4),
+            _ => self.aryl(false),
+        }
+    }
+
+    /// A six-membered aromatic ring with 0-2 substituents at random
+    /// positions, optionally a pyridine; `sub` allows substitution.
+    fn benzene_like(&mut self, sub: bool) -> String {
+        let r = self.ring_label();
+        let n_pos = if self.rng.chance(0.25) {
+            self.rng.range(1, 5)
+        } else {
+            0 // plain carbocycle
+        };
+        let (mut sub_a, mut sub_b) = (0usize, 0usize);
+        if sub {
+            sub_a = self.rng.range(1, 5);
+            if self.rng.chance(0.35) {
+                sub_b = self.rng.range(1, 5);
+                if sub_b == sub_a {
+                    sub_b = 0;
+                }
+            }
+        }
+        let mut s = format!("c{r}");
+        for pos in 1..=5 {
+            if pos == n_pos {
+                s.push('n');
+            } else {
+                s.push('c');
+            }
+            if (pos == sub_a || pos == sub_b) && pos != n_pos {
+                let x = self.substituent(false);
+                s.push('(');
+                s.push_str(&x);
+                s.push(')');
+            }
+        }
+        s.push_str(&r);
+        s
+    }
+
+    /// A five-membered aromatic ring (furan/thiophene-like).
+    fn five_ring(&mut self) -> String {
+        let r = self.ring_label();
+        let het = *self.rng.choose(&["o", "s"]);
+        format!("c{r}cc{het}c{r}")
+    }
+
+    /// Some aromatic system: benzene-like, five-ring, or (rarely) fused.
+    fn aryl(&mut self, allow_sub: bool) -> String {
+        match self.rng.below(6) {
+            0 | 1 | 2 => {
+                let sub = allow_sub && self.rng.chance(0.7);
+                self.benzene_like(sub)
+            }
+            3 => self.five_ring(),
+            4 => {
+                // naphthalene-like fused bicycle: c1ccc2ccccc2c1
+                let r = self.ring_label();
+                let s = self.ring_label();
+                format!("c{r}ccc{s}ccccc{s}c{r}")
+            }
+            _ => self.benzene_like(false),
+        }
+    }
+
+    /// An azole with a free NH that templates can functionalize.
+    ///
+    /// Returns the free-NH SMILES plus the two halves around the
+    /// substitution point, so the N-substituted product renders as
+    /// `sub_pre + R + sub_post`. Two shapes exist: mid-string NH (the
+    /// paper's indole example, substituent rendered as a branch
+    /// `n(R)`) and ring-closing NH (substituent appended after the ring
+    /// digit, `...n1R`), because SMILES ring-bond digits must directly
+    /// follow the atom.
+    /// A run of `n` aromatic carbons, each independently substituted with
+    /// probability `p_sub` — diversity fuel for azole scaffolds.
+    fn aryl_run(&mut self, n: usize, p_sub: f64) -> String {
+        let mut s = String::new();
+        for _ in 0..n {
+            s.push('c');
+            if self.rng.chance(p_sub) {
+                let x = self.substituent(false);
+                s.push('(');
+                s.push_str(&x);
+                s.push(')');
+            }
+        }
+        s
+    }
+
+    fn azole_site(&mut self) -> AzoleSite {
+        match self.rng.below(3) {
+            0 => {
+                // indole-like fused bicycle: c1c(X?)[nH]c2c(X?)c(X?)c(X?)c(X?)c12
+                let r = self.ring_label();
+                let s = self.ring_label();
+                let x3 = if self.rng.chance(0.3) {
+                    format!("({})", self.substituent(false))
+                } else {
+                    String::new()
+                };
+                let benzo = format!("c{s}{}c{r}{s}", self.aryl_run(4, 0.25));
+                AzoleSite {
+                    free: format!("c{r}c{x3}[nH]{benzo}"),
+                    sub_pre: format!("c{r}c{x3}n("),
+                    sub_post: format!("){benzo}"),
+                }
+            }
+            1 => {
+                // pyrrole-like: c1c(X?)c(X?)c[nH]1 — NH closes the ring, so
+                // the substituent trails the ring digit: ...cn1R.
+                let r = self.ring_label();
+                let body = self.aryl_run(3, 0.3);
+                AzoleSite {
+                    free: format!("c{r}{body}[nH]{r}"),
+                    sub_pre: format!("c{r}{body}n{r}"),
+                    sub_post: String::new(),
+                }
+            }
+            _ => {
+                // imidazole-like: c1c(X?)nc(X?)[nH]1 → ...n1R
+                let r = self.ring_label();
+                let a = self.aryl_run(1, 0.4);
+                let b = self.aryl_run(1, 0.4);
+                AzoleSite {
+                    free: format!("c{r}{a}n{b}[nH]{r}"),
+                    sub_pre: format!("c{r}{a}n{b}n{r}"),
+                    sub_post: String::new(),
+                }
+            }
+        }
+    }
+
+    /// An R-group: chain, aryl, or chain-aryl.
+    fn rgroup(&mut self) -> String {
+        match self.rng.below(4) {
+            0 => self.chain(4),
+            1 => self.aryl(true),
+            2 => format!("{}{}", self.chain(2), self.aryl(true)),
+            _ => format!("{}{}", self.chain(3), self.aryl(false)),
+        }
+    }
+}
+
+/// Common spectator molecules for the forward (mixed) task. Chosen to put
+/// bracket atoms and unusual tokens in the training distribution, as real
+/// USPTO-MIT does.
+const REAGENTS: &[&str] = &[
+    "CCN(CC)CC",          // triethylamine
+    "C(=O)([O-])[O-].[K+].[K+]", // potassium carbonate
+    "[OH-].[Na+]",        // sodium hydroxide
+    "O",                  // water
+    "CCO",                // ethanol
+    "CC(=O)OCC",          // ethyl acetate (solvent)
+    "[Pd]",               // palladium catalyst
+    "CS(C)=O",            // DMSO
+    "CN(C)C=O",           // DMF
+    "Cl",                 // HCl
+];
+
+/// Boc anhydride, exactly as written in the paper's Figure 2.
+pub const BOC_ANHYDRIDE: &str = "C(=O)(OC(=O)OC(C)(C)C)OC(C)(C)C";
+/// The Boc group spliced onto azole nitrogens, as in Figure 2's product.
+pub const BOC_GROUP: &str = "C(=O)OC(C)(C)C";
+
+/// Maximum tokens in a rendered forward source string. The model's source
+/// bucket is S=96; two slots are reserved for BOS/EOS.
+pub const MAX_SRC_TOKENS: usize = 90;
+
+/// All reaction template names, in generation-probability order.
+pub const TEMPLATE_NAMES: &[&str] = &[
+    "boc_protection",
+    "amide_coupling",
+    "esterification",
+    "ester_hydrolysis",
+    "n_alkylation",
+    "williamson_ether",
+    "suzuki_coupling",
+    "ketone_reduction",
+];
+
+/// Generate one reaction from a uniformly chosen template.
+pub fn gen_reaction(rng: &mut Rng) -> Reaction {
+    let t = rng.below(TEMPLATE_NAMES.len());
+    gen_reaction_with_template(rng, TEMPLATE_NAMES[t])
+}
+
+/// Generate one reaction from a named template (panics on unknown name).
+pub fn gen_reaction_with_template(rng: &mut Rng, template: &'static str) -> Reaction {
+    let mut rx = match template {
+        "boc_protection" => boc_protection(rng),
+        "amide_coupling" => amide_coupling(rng),
+        "esterification" => esterification(rng),
+        "ester_hydrolysis" => ester_hydrolysis(rng),
+        "n_alkylation" => n_alkylation(rng),
+        "williamson_ether" => williamson_ether(rng),
+        "suzuki_coupling" => suzuki_coupling(rng),
+        "ketone_reduction" => ketone_reduction(rng),
+        other => panic!("unknown template {other}"),
+    };
+    // Attach 0-2 spectator reagents for the forward (mixed) task, keeping
+    // the full source under the model's source bucket (S=96 incl. BOS/EOS).
+    let n_extra = rng.below(3);
+    for _ in 0..n_extra {
+        let r = (*rng.choose(REAGENTS)).to_string();
+        if rx.reagents.contains(&r) {
+            continue;
+        }
+        let src_now = rx.forward_src(&(0..rx.n_src_molecules()).collect::<Vec<_>>());
+        let extra = tokenize(&r).map(|t| t.len()).unwrap_or(usize::MAX);
+        let have = tokenize(&src_now).map(|t| t.len()).unwrap_or(usize::MAX);
+        if have + 1 + extra <= MAX_SRC_TOKENS {
+            rx.reagents.push(r);
+        }
+    }
+    debug_assert!(rx.reactants.iter().all(|s| is_valid_smiles(s)), "{rx:?}");
+    debug_assert!(is_valid_smiles(&rx.product), "{rx:?}");
+    rx
+}
+
+/// Halves of an azole around its NH substitution point.
+struct AzoleSite {
+    free: String,
+    sub_pre: String,
+    sub_post: String,
+}
+
+impl AzoleSite {
+    fn substituted(&self, r: &str) -> String {
+        format!("{}{}{}", self.sub_pre, r, self.sub_post)
+    }
+}
+
+/// Azole NH + Boc2O → N-Boc azole (paper Figure 2).
+fn boc_protection(rng: &mut Rng) -> Reaction {
+    let mut m = MolGen::new(rng);
+    let site = m.azole_site();
+    Reaction {
+        reactants: vec![site.free.clone(), BOC_ANHYDRIDE.to_string()],
+        reagents: vec![],
+        product: site.substituted(BOC_GROUP),
+        template: "boc_protection",
+    }
+}
+
+/// R-C(=O)O + N-R' → R-C(=O)N-R'.
+fn amide_coupling(rng: &mut Rng) -> Reaction {
+    let mut m = MolGen::new(rng);
+    let acid_sc = m.rgroup();
+    let amine_tail = format!("C{}", m.rgroup());
+    let acid = format!("{acid_sc}C(=O)O");
+    let amine = format!("N{amine_tail}");
+    let product = format!("{acid_sc}C(=O)N{amine_tail}");
+    Reaction {
+        reactants: vec![acid, amine],
+        reagents: vec![],
+        product,
+        template: "amide_coupling",
+    }
+}
+
+/// R-C(=O)O + HO-R' → R-C(=O)O-R'.
+fn esterification(rng: &mut Rng) -> Reaction {
+    let mut m = MolGen::new(rng);
+    let acid_sc = m.rgroup();
+    let alc_tail = if m.rng.chance(0.5) {
+        format!("C{}", m.chain(4))
+    } else {
+        format!("C{}{}", m.chain(2), m.aryl(false))
+    };
+    let acid = format!("{acid_sc}C(=O)O");
+    let alcohol = format!("O{alc_tail}");
+    let product = format!("{acid_sc}C(=O)O{alc_tail}");
+    Reaction {
+        reactants: vec![acid, alcohol],
+        reagents: vec![],
+        product,
+        template: "esterification",
+    }
+}
+
+/// R-C(=O)O-R' + H2O → R-C(=O)O + HO-R' (product side of the forward task
+/// is the acid; the alcohol is treated as a co-product and dropped, as
+/// USPTO single-product entries do).
+fn ester_hydrolysis(rng: &mut Rng) -> Reaction {
+    let mut m = MolGen::new(rng);
+    let acid_sc = m.rgroup();
+    let alc_tail = format!("C{}", m.chain(4));
+    let ester = format!("{acid_sc}C(=O)O{alc_tail}");
+    let product = format!("{acid_sc}C(=O)O");
+    Reaction {
+        reactants: vec![ester],
+        reagents: vec!["[OH-].[Na+]".to_string(), "O".to_string()],
+        product,
+        template: "ester_hydrolysis",
+    }
+}
+
+/// Azole NH + Br-R → N-alkyl azole.
+fn n_alkylation(rng: &mut Rng) -> Reaction {
+    let mut m = MolGen::new(rng);
+    let site = m.azole_site();
+    let alkyl = format!("C{}", m.chain(3));
+    let halide = format!("Br{alkyl}");
+    Reaction {
+        reactants: vec![site.free.clone(), halide],
+        reagents: vec![],
+        product: site.substituted(&alkyl),
+        template: "n_alkylation",
+    }
+}
+
+/// Br-R + HO-R' → R-O-R'.
+fn williamson_ether(rng: &mut Rng) -> Reaction {
+    let mut m = MolGen::new(rng);
+    let alkyl = format!("C{}", m.chain(3));
+    let alc_tail = format!("C{}", m.rgroup());
+    let halide = format!("Br{alkyl}");
+    let alcohol = format!("O{alc_tail}");
+    let product = format!("{alc_tail}O{alkyl}");
+    // product written alcohol-first keeps the longer fragment contiguous
+    Reaction {
+        reactants: vec![halide, alcohol],
+        reagents: vec![],
+        product,
+        template: "williamson_ether",
+    }
+}
+
+/// Ar-Br + Ar'-B(O)O → Ar-Ar'.
+fn suzuki_coupling(rng: &mut Rng) -> Reaction {
+    let mut m = MolGen::new(rng);
+    let ar1 = m.aryl(true);
+    let ar2 = m.aryl(false);
+    let halide = format!("Br{ar1}");
+    let boronic = format!("OB(O){ar2}");
+    let product = format!("{ar2}{ar1}");
+    Reaction {
+        reactants: vec![halide, boronic],
+        reagents: vec!["[Pd]".to_string()],
+        product,
+        template: "suzuki_coupling",
+    }
+}
+
+/// R-C(R')=O → R-C(R')O.
+fn ketone_reduction(rng: &mut Rng) -> Reaction {
+    let mut m = MolGen::new(rng);
+    let sc = m.rgroup();
+    let alkyl = m.chain(3);
+    let ketone = format!("{sc}C({alkyl})=O");
+    let product = format!("{sc}C({alkyl})O");
+    Reaction {
+        reactants: vec![ketone],
+        reagents: vec![],
+        product,
+        template: "ketone_reduction",
+    }
+}
+
+/// Longest common substring length, in *tokens*, between two SMILES. Used
+/// to verify the corpus has the substring-overlap property speculative
+/// decoding needs (and reported per template by `gen-data --stats`).
+pub fn longest_common_token_substring(a: &str, b: &str) -> usize {
+    let (ta, tb) = match (tokenize(a), tokenize(b)) {
+        (Ok(x), Ok(y)) => (x, y),
+        _ => return 0,
+    };
+    let (n, m) = (ta.len(), tb.len());
+    let mut prev = vec![0usize; m + 1];
+    let mut best = 0usize;
+    for i in 1..=n {
+        let mut cur = vec![0usize; m + 1];
+        for j in 1..=m {
+            if ta[i - 1] == tb[j - 1] {
+                cur[j] = prev[j - 1] + 1;
+                best = best.max(cur[j]);
+            }
+        }
+        prev = cur;
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::chem::tokenizer::is_valid_smiles;
+
+    fn all_templates_many(seed: u64, n: usize) -> Vec<Reaction> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| gen_reaction(&mut rng)).collect()
+    }
+
+    #[test]
+    fn generated_reactants_and_products_are_valid() {
+        for rx in all_templates_many(1, 500) {
+            for r in &rx.reactants {
+                assert!(is_valid_smiles(r), "invalid reactant {r} in {rx:?}");
+            }
+            for r in &rx.reagents {
+                assert!(is_valid_smiles(r), "invalid reagent {r} in {rx:?}");
+            }
+            assert!(is_valid_smiles(&rx.product), "invalid product in {rx:?}");
+        }
+    }
+
+    #[test]
+    fn every_template_is_reachable() {
+        let seen: std::collections::HashSet<&str> =
+            all_templates_many(2, 400).iter().map(|r| r.template).collect();
+        for t in TEMPLATE_NAMES {
+            assert!(seen.contains(t), "template {t} never generated");
+        }
+    }
+
+    #[test]
+    fn each_named_template_generates() {
+        let mut rng = Rng::new(3);
+        for t in TEMPLATE_NAMES {
+            let rx = gen_reaction_with_template(&mut rng, t);
+            assert_eq!(rx.template, *t);
+            assert!(!rx.reactants.is_empty());
+        }
+    }
+
+    #[test]
+    fn products_share_long_substrings_with_reactants() {
+        // The core corpus property: the product must share a long token
+        // substring with the reactant side — that is what gives query-copy
+        // drafts their high acceptance rate.
+        let mut total = 0usize;
+        let mut long_enough = 0usize;
+        for rx in all_templates_many(4, 300) {
+            let src = rx
+                .reactants
+                .iter()
+                .cloned()
+                .collect::<Vec<_>>()
+                .join(".");
+            let lcs = longest_common_token_substring(&src, &rx.product);
+            total += 1;
+            if lcs >= 4 {
+                long_enough += 1;
+            }
+        }
+        // At least 95% of reactions must share a ≥4-token substring.
+        assert!(
+            long_enough * 100 >= total * 95,
+            "only {long_enough}/{total} reactions share a >=4-token substring"
+        );
+    }
+
+    #[test]
+    fn boc_protection_matches_paper_shape() {
+        let mut rng = Rng::new(5);
+        let rx = gen_reaction_with_template(&mut rng, "boc_protection");
+        assert!(rx.reactants.iter().any(|r| r == BOC_ANHYDRIDE));
+        assert!(rx.product.contains(BOC_GROUP));
+        assert!(rx.reactants.iter().any(|r| r.contains("[nH]")));
+        assert!(!rx.product.contains("[nH]"));
+    }
+
+    #[test]
+    fn forward_src_and_retro_tgt_respect_order() {
+        let mut rng = Rng::new(6);
+        let rx = gen_reaction_with_template(&mut rng, "amide_coupling");
+        assert_eq!(rx.reactants.len(), 2);
+        let fwd = rx.forward_src(&[1, 0]);
+        let parts: Vec<&str> = fwd.split('.').collect();
+        assert_eq!(parts[0], rx.reactants[1]);
+        assert_eq!(parts[1], rx.reactants[0]);
+        let retro = rx.retro_tgt(&[1, 0]);
+        assert!(retro.starts_with(&rx.reactants[1]));
+    }
+
+    #[test]
+    fn lcs_token_metric_sane() {
+        assert_eq!(longest_common_token_substring("CCO", "CCO"), 3);
+        assert_eq!(longest_common_token_substring("CCO", "OCC"), 2);
+        // Token-level, not char-level: Br is one token.
+        assert_eq!(longest_common_token_substring("BrC", "BC", ), 1);
+        assert_eq!(longest_common_token_substring("CC", "OO"), 0);
+    }
+
+    #[test]
+    fn reaction_smiles_reasonably_sized() {
+        // Model buckets: src fits S=96 (incl. BOS/EOS), tgt fits T=64.
+        for rx in all_templates_many(7, 500) {
+            let src = rx.forward_src(&(0..rx.n_src_molecules()).collect::<Vec<_>>());
+            let n_src = tokenize(&src).unwrap().len();
+            let n_tgt = tokenize(&rx.product).unwrap().len();
+            assert!(n_src <= MAX_SRC_TOKENS, "src too long ({n_src}): {src}");
+            assert!(n_tgt <= 62, "tgt too long ({n_tgt}): {}", rx.product);
+            // Retro target (reactants incl. Boc anhydride) must also fit.
+            let retro = rx.retro_tgt(&(0..rx.reactants.len()).collect::<Vec<_>>());
+            let n_retro = tokenize(&retro).unwrap().len();
+            assert!(n_retro <= MAX_SRC_TOKENS, "retro tgt too long ({n_retro}): {retro}");
+        }
+    }
+}

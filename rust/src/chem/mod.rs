@@ -1,0 +1,15 @@
+//! Chemistry substrate: SMILES tokenization, synthetic reaction corpus
+//! generation, and dataset IO.
+//!
+//! The paper's models are trained on USPTO data we cannot redistribute; see
+//! DESIGN.md §3 for the substitution rationale. Everything downstream
+//! (training, decoding, serving, benchmarks) is agnostic to where the
+//! corpus came from.
+
+pub mod dataset;
+pub mod gen;
+pub mod tokenizer;
+
+pub use dataset::{generate_corpus, read_split, write_split, Corpus, CorpusConfig, Dataset, Example};
+pub use gen::{gen_reaction, gen_reaction_with_template, Reaction, TEMPLATE_NAMES};
+pub use tokenizer::{detokenize, is_valid_smiles, tokenize, TokenizeError};

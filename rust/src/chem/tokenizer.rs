@@ -1,0 +1,311 @@
+//! Atomwise SMILES tokenization.
+//!
+//! This is the standard tokenization procedure of Schwaller et al. (2019),
+//! used verbatim by the paper: bracket atoms `[...]` are single tokens,
+//! two-character organic-subset atoms (`Cl`, `Br`) are single tokens, ring
+//! closures `%NN` are single tokens, and every other character (atoms,
+//! bonds, branches, digits, the `.` separator and the `>` reaction marker)
+//! is its own token.
+//!
+//! The Python build path (`python/compile/data.py`) implements the same
+//! regex; `data/golden_tokens.tsv` written by `gen-data` pins the two
+//! implementations together (checked by a pytest on the Python side).
+
+use once_cell::sync::Lazy;
+use regex::Regex;
+
+/// Schwaller et al. (2019) atomwise tokenization pattern.
+pub const SMILES_TOKEN_PATTERN: &str = r"(\[[^\]]+\]|Br|Cl|N|O|S|P|F|I|B|b|c|n|o|s|p|\(|\)|\.|=|#|-|\+|\\|/|:|~|@|\?|>|\*|\$|%[0-9]{2}|[0-9]|[A-Za-z])";
+
+static TOKEN_RE: Lazy<Regex> = Lazy::new(|| Regex::new(SMILES_TOKEN_PATTERN).unwrap());
+
+/// Split a SMILES string into atomwise tokens.
+///
+/// Every byte of the input must be consumed by the token pattern; any
+/// leftover (e.g. whitespace or an unterminated bracket atom) is an error.
+pub fn tokenize(smiles: &str) -> Result<Vec<String>, TokenizeError> {
+    let mut tokens = Vec::with_capacity(smiles.len());
+    let mut consumed = 0usize;
+    for m in TOKEN_RE.find_iter(smiles) {
+        if m.start() != consumed {
+            return Err(TokenizeError {
+                smiles: smiles.to_string(),
+                at: consumed,
+            });
+        }
+        tokens.push(m.as_str().to_string());
+        consumed = m.end();
+    }
+    if consumed != smiles.len() {
+        return Err(TokenizeError {
+            smiles: smiles.to_string(),
+            at: consumed,
+        });
+    }
+    Ok(tokens)
+}
+
+/// Inverse of [`tokenize`]: concatenation restores the exact input string.
+pub fn detokenize<S: AsRef<str>>(tokens: &[S]) -> String {
+    tokens.iter().map(|t| t.as_ref()).collect()
+}
+
+/// Tokenization failure: some byte range was not covered by the pattern.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TokenizeError {
+    pub smiles: String,
+    pub at: usize,
+}
+
+impl std::fmt::Display for TokenizeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "cannot tokenize SMILES {:?} at byte {} ({:?}...)",
+            self.smiles,
+            self.at,
+            &self.smiles[self.at..self.smiles.len().min(self.at + 8)]
+        )
+    }
+}
+
+impl std::error::Error for TokenizeError {}
+
+/// Structural validity of a SMILES string at the token level.
+///
+/// We do not do full valence chemistry (the corpus generator only emits
+/// grammar-constructed molecules); this check guards the *string* invariants
+/// the decoder must learn and that the detokenizer relies on:
+///   * balanced parentheses, no empty `()` branch, no branch at position 0
+///   * every ring-closure digit / `%NN` label is opened and closed exactly
+///     twice per molecule
+///   * bracket atoms well-formed (non-empty, `[` closed by `]`)
+///   * bond symbols are followed by an atom or ring closure
+///   * `.` separates non-empty molecule fragments
+pub fn is_valid_smiles(smiles: &str) -> bool {
+    let tokens = match tokenize(smiles) {
+        Ok(t) => t,
+        Err(_) => return false,
+    };
+    if tokens.is_empty() {
+        return false;
+    }
+    // Validate each `.`-separated fragment independently (ring labels and
+    // parentheses cannot span fragments).
+    let mut start = 0usize;
+    for (i, t) in tokens.iter().enumerate() {
+        if t == "." {
+            if !fragment_is_valid(&tokens[start..i]) {
+                return false;
+            }
+            start = i + 1;
+        }
+    }
+    fragment_is_valid(&tokens[start..])
+}
+
+fn is_atom_token(t: &str) -> bool {
+    matches!(
+        t,
+        "B" | "C" | "N" | "O" | "S" | "P" | "F" | "I" | "Br" | "Cl" | "b" | "c" | "n" | "o" | "s"
+            | "p"
+    ) || (t.starts_with('[') && t.ends_with(']') && t.len() > 2)
+}
+
+fn is_bond_token(t: &str) -> bool {
+    matches!(t, "=" | "#" | "-" | "/" | "\\" | ":" | "~")
+}
+
+fn is_ring_token(t: &str) -> bool {
+    t.len() == 1 && t.chars().next().unwrap().is_ascii_digit() || t.starts_with('%')
+}
+
+fn fragment_is_valid(tokens: &[String]) -> bool {
+    if tokens.is_empty() {
+        return false;
+    }
+    let mut depth: i32 = 0;
+    let mut ring_open: std::collections::HashMap<&str, usize> = std::collections::HashMap::new();
+    let mut prev_atom_seen = false;
+    let mut prev: Option<&str> = None;
+
+    for (i, t) in tokens.iter().enumerate() {
+        let t = t.as_str();
+        if t == "(" {
+            // A branch must follow an atom or a ring closure.
+            if !prev_atom_seen {
+                return false;
+            }
+            if let Some(p) = prev {
+                if p == "(" || is_bond_token(p) {
+                    return false;
+                }
+            }
+            depth += 1;
+        } else if t == ")" {
+            depth -= 1;
+            if depth < 0 {
+                return false;
+            }
+            if prev == Some("(") {
+                return false; // empty branch
+            }
+            if let Some(p) = prev {
+                if is_bond_token(p) {
+                    return false; // dangling bond before ')'
+                }
+            }
+        } else if is_bond_token(t) {
+            // A bond may open a branch (`C(=O)`) but not start a fragment
+            // or follow another bond.
+            if i == 0 || prev.is_some_and(is_bond_token) {
+                return false;
+            }
+        } else if is_ring_token(t) {
+            // Ring digit must follow an atom, a bond, or another ring digit.
+            if !prev_atom_seen {
+                return false;
+            }
+            *ring_open.entry(ring_label(t)).or_insert(0) += 1;
+        } else if is_atom_token(t) {
+            prev_atom_seen = true;
+        } else {
+            // '>' '*' '$' '?' '@' '+' and raw letters are not valid in our
+            // molecule corpus outside bracket atoms.
+            return false;
+        }
+        prev = Some(t);
+    }
+    if depth != 0 {
+        return false;
+    }
+    if let Some(p) = prev {
+        if is_bond_token(p) || p == "(" {
+            return false;
+        }
+    }
+    // Every ring label must occur an even number of times (opened+closed).
+    ring_open.values().all(|&c| c % 2 == 0)
+}
+
+fn ring_label(t: &str) -> &str {
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tokenizes_paper_figure2_reactant() {
+        // The Boc-protection example from Figure 2 of the paper.
+        let smiles = "c1c[nH]c2ccc(C(C)=O)cc12";
+        let toks = tokenize(smiles).unwrap();
+        assert_eq!(
+            toks,
+            vec![
+                "c", "1", "c", "[nH]", "c", "2", "c", "c", "c", "(", "C", "(", "C", ")", "=",
+                "O", ")", "c", "c", "1", "2"
+            ]
+        );
+        assert_eq!(detokenize(&toks), smiles);
+    }
+
+    #[test]
+    fn tokenizes_two_char_atoms() {
+        let toks = tokenize("BrCCCl").unwrap();
+        assert_eq!(toks, vec!["Br", "C", "C", "Cl"]);
+    }
+
+    #[test]
+    fn tokenizes_bracket_atoms_as_units() {
+        let toks = tokenize("[nH]c[C@@H][NH3+]").unwrap();
+        assert_eq!(toks, vec!["[nH]", "c", "[C@@H]", "[NH3+]"]);
+    }
+
+    #[test]
+    fn tokenizes_reaction_smiles() {
+        let toks = tokenize("CC=O.OCC>>CC(O)OCC").unwrap();
+        assert!(toks.contains(&">".to_string()));
+        assert!(toks.contains(&".".to_string()));
+        assert_eq!(detokenize(&toks), "CC=O.OCC>>CC(O)OCC");
+    }
+
+    #[test]
+    fn tokenizes_percent_ring_closures() {
+        let toks = tokenize("C%12CC%12").unwrap();
+        assert_eq!(toks, vec!["C", "%12", "C", "C", "%12"]);
+    }
+
+    #[test]
+    fn rejects_unterminated_bracket() {
+        assert!(tokenize("C[nH").is_err());
+    }
+
+    #[test]
+    fn rejects_whitespace() {
+        assert!(tokenize("C C").is_err());
+    }
+
+    #[test]
+    fn valid_accepts_paper_reaction_parts() {
+        for s in [
+            "c1c[nH]c2ccc(C(C)=O)cc12",
+            "C(=O)(OC(=O)OC(C)(C)C)OC(C)(C)C",
+            "c1cn(C(=O)OC(C)(C)C)c2ccc(C(C)=O)cc12",
+            "CC(=O)Nc1ccc(O)cc1",
+            "CC(C)(C)OC(=O)N1CCC(N)CC1",
+        ] {
+            assert!(is_valid_smiles(s), "should be valid: {s}");
+        }
+    }
+
+    #[test]
+    fn valid_accepts_dot_separated() {
+        assert!(is_valid_smiles("CCO.CC(=O)O"));
+    }
+
+    #[test]
+    fn invalid_unbalanced_parens() {
+        assert!(!is_valid_smiles("CC(C"));
+        assert!(!is_valid_smiles("CC)C"));
+    }
+
+    #[test]
+    fn invalid_empty_branch_or_leading_branch() {
+        assert!(!is_valid_smiles("C()C"));
+        assert!(!is_valid_smiles("(CC)"));
+    }
+
+    #[test]
+    fn invalid_odd_ring_closures() {
+        assert!(!is_valid_smiles("C1CC"));
+        assert!(!is_valid_smiles("c1ccccc12"));
+    }
+
+    #[test]
+    fn invalid_dangling_bond() {
+        assert!(!is_valid_smiles("CC="));
+        assert!(!is_valid_smiles("=CC"));
+        assert!(!is_valid_smiles("C(=)C"));
+    }
+
+    #[test]
+    fn invalid_empty_fragments() {
+        assert!(!is_valid_smiles(""));
+        assert!(!is_valid_smiles("CC..CC"));
+        assert!(!is_valid_smiles(".CC"));
+        assert!(!is_valid_smiles("CC."));
+    }
+
+    #[test]
+    fn detokenize_roundtrip_misc() {
+        for s in [
+            "COc1ccc2[nH]c(C)cc2c1",
+            "O=C(O)c1ccccc1Br",
+            "FC(F)(F)c1ccc(N)cc1",
+        ] {
+            assert_eq!(detokenize(&tokenize(s).unwrap()), s);
+        }
+    }
+}

@@ -1,0 +1,262 @@
+//! Dynamic batcher: groups compatible queued requests into model batches.
+//!
+//! The serving regime the paper targets is an AI assistant for chemists —
+//! requests trickle in one at a time, and speculative decoding makes B=1
+//! latency acceptable. Under burst load, batching amortizes the decoder:
+//! greedy / speculative-greedy requests with the same configuration are
+//! decoded together (`greedy_batch` / `spec_greedy_batch`); beam-search
+//! requests run solo (their effective batch is already beams × drafts).
+//!
+//! Policy: close a batch when (a) `max_batch` compatible requests are
+//! waiting, or (b) `max_wait` has elapsed since the oldest arrival, or
+//! (c) an incompatible request is at the queue head (FIFO order is never
+//! violated across classes).
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// How a request wants to be decoded.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DecodeMode {
+    Greedy,
+    /// Speculative greedy with draft length.
+    SpecGreedy { dl: usize },
+    /// Standard beam search with width n.
+    Beam { n: usize },
+    /// Speculative beam search with width n and draft length dl.
+    Sbs { n: usize, dl: usize },
+}
+
+impl DecodeMode {
+    /// Requests of the same class may share a decoder batch.
+    pub fn batchable_with(&self, other: &DecodeMode) -> bool {
+        self == other && matches!(self, DecodeMode::Greedy | DecodeMode::SpecGreedy { .. })
+    }
+
+    /// Parse `greedy`, `spec:<dl>`, `bs:<n>`, `sbs:<n>:<dl>`.
+    pub fn parse(s: &str) -> Option<DecodeMode> {
+        let parts: Vec<&str> = s.split(':').collect();
+        match parts.as_slice() {
+            ["greedy"] => Some(DecodeMode::Greedy),
+            ["spec", dl] => Some(DecodeMode::SpecGreedy { dl: dl.parse().ok()? }),
+            ["bs", n] => Some(DecodeMode::Beam { n: n.parse().ok()? }),
+            ["sbs", n, dl] => Some(DecodeMode::Sbs {
+                n: n.parse().ok()?,
+                dl: dl.parse().ok()?,
+            }),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for DecodeMode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            DecodeMode::Greedy => write!(f, "greedy"),
+            DecodeMode::SpecGreedy { dl } => write!(f, "spec:{dl}"),
+            DecodeMode::Beam { n } => write!(f, "bs:{n}"),
+            DecodeMode::Sbs { n, dl } => write!(f, "sbs:{n}:{dl}"),
+        }
+    }
+}
+
+/// A queued unit of work.
+pub struct Request<T> {
+    pub mode: DecodeMode,
+    pub payload: T,
+    pub enqueued: Instant,
+}
+
+/// Thread-safe FIFO queue with condition-variable wakeup.
+pub struct RequestQueue<T> {
+    inner: Mutex<QueueInner<T>>,
+    cv: Condvar,
+    pub max_batch: usize,
+    pub max_wait: Duration,
+}
+
+struct QueueInner<T> {
+    queue: VecDeque<Request<T>>,
+    closed: bool,
+}
+
+impl<T> RequestQueue<T> {
+    pub fn new(max_batch: usize, max_wait: Duration) -> Self {
+        RequestQueue {
+            inner: Mutex::new(QueueInner {
+                queue: VecDeque::new(),
+                closed: false,
+            }),
+            cv: Condvar::new(),
+            max_batch,
+            max_wait,
+        }
+    }
+
+    pub fn push(&self, mode: DecodeMode, payload: T) {
+        let mut g = self.inner.lock().unwrap();
+        g.queue.push_back(Request {
+            mode,
+            payload,
+            enqueued: Instant::now(),
+        });
+        self.cv.notify_all();
+    }
+
+    pub fn close(&self) {
+        self.inner.lock().unwrap().closed = true;
+        self.cv.notify_all();
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Pop the next batch: the queue-head request plus every immediately
+    /// following *compatible* request, up to `max_batch`. Blocks until the
+    /// head has waited `max_wait` (or the batch is full, or the next
+    /// request is incompatible). Returns `None` when closed and drained.
+    pub fn pop_batch(&self) -> Option<Vec<Request<T>>> {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if let Some(head) = g.queue.front() {
+                let head_mode = head.mode;
+                let deadline = head.enqueued + self.max_wait;
+                // How many consecutive compatible requests are queued?
+                let compat = g
+                    .queue
+                    .iter()
+                    .take(self.max_batch)
+                    .take_while(|r| r.mode.batchable_with(&head_mode))
+                    .count()
+                    .max(1);
+                let solo = !head_mode.batchable_with(&head_mode); // beam/SBS go at once
+                // An incompatible request right behind the run means no
+                // further compatible arrivals can join (FIFO): ship now.
+                let blocked = compat < g.queue.len();
+                let full = solo || blocked || compat >= self.max_batch;
+                if full || Instant::now() >= deadline {
+                    let take = compat.min(self.max_batch);
+                    let batch: Vec<Request<T>> = g.queue.drain(..take).collect();
+                    return Some(batch);
+                }
+                let wait = deadline.saturating_duration_since(Instant::now());
+                let (g2, _) = self.cv.wait_timeout(g, wait).unwrap();
+                g = g2;
+            } else if g.closed {
+                return None;
+            } else {
+                g = self.cv.wait(g).unwrap();
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mode_parse_roundtrip() {
+        for s in ["greedy", "spec:10", "bs:5", "sbs:25:10"] {
+            let m = DecodeMode::parse(s).unwrap();
+            assert_eq!(m.to_string(), s);
+        }
+        assert!(DecodeMode::parse("nope").is_none());
+        assert!(DecodeMode::parse("sbs:x:1").is_none());
+    }
+
+    #[test]
+    fn batchable_classes() {
+        let g = DecodeMode::Greedy;
+        let s10 = DecodeMode::SpecGreedy { dl: 10 };
+        let s4 = DecodeMode::SpecGreedy { dl: 4 };
+        let b5 = DecodeMode::Beam { n: 5 };
+        assert!(g.batchable_with(&g));
+        assert!(s10.batchable_with(&s10));
+        assert!(!s10.batchable_with(&s4));
+        assert!(!b5.batchable_with(&b5)); // beams run solo
+        assert!(!g.batchable_with(&s10));
+    }
+
+    #[test]
+    fn pop_batch_groups_compatible_head_run() {
+        let q: RequestQueue<usize> = RequestQueue::new(8, Duration::from_millis(1));
+        q.push(DecodeMode::Greedy, 1);
+        q.push(DecodeMode::Greedy, 2);
+        q.push(DecodeMode::Beam { n: 5 }, 3);
+        q.push(DecodeMode::Greedy, 4);
+        let b1 = q.pop_batch().unwrap();
+        assert_eq!(b1.iter().map(|r| r.payload).collect::<Vec<_>>(), vec![1, 2]);
+        let b2 = q.pop_batch().unwrap();
+        assert_eq!(b2.len(), 1);
+        assert_eq!(b2[0].payload, 3);
+        let b3 = q.pop_batch().unwrap();
+        assert_eq!(b3[0].payload, 4);
+    }
+
+    #[test]
+    fn pop_batch_respects_max_batch() {
+        let q: RequestQueue<usize> = RequestQueue::new(2, Duration::from_millis(1));
+        for i in 0..5 {
+            q.push(DecodeMode::Greedy, i);
+        }
+        assert_eq!(q.pop_batch().unwrap().len(), 2);
+        assert_eq!(q.pop_batch().unwrap().len(), 2);
+        assert_eq!(q.pop_batch().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn fifo_never_reorders_across_classes() {
+        let q: RequestQueue<usize> = RequestQueue::new(8, Duration::from_millis(1));
+        q.push(DecodeMode::Beam { n: 5 }, 1);
+        q.push(DecodeMode::Greedy, 2);
+        let b1 = q.pop_batch().unwrap();
+        assert_eq!(b1[0].payload, 1); // beam first even though greedy waits
+    }
+
+    #[test]
+    fn close_drains_then_none() {
+        let q: RequestQueue<usize> = RequestQueue::new(8, Duration::from_millis(1));
+        q.push(DecodeMode::Greedy, 7);
+        q.close();
+        assert_eq!(q.pop_batch().unwrap()[0].payload, 7);
+        assert!(q.pop_batch().is_none());
+    }
+
+    #[test]
+    fn no_request_lost_under_concurrency() {
+        use std::sync::Arc;
+        let q: Arc<RequestQueue<usize>> = Arc::new(RequestQueue::new(4, Duration::from_millis(1)));
+        let producer = {
+            let q = Arc::clone(&q);
+            std::thread::spawn(move || {
+                for i in 0..200 {
+                    q.push(
+                        if i % 3 == 0 {
+                            DecodeMode::Beam { n: 2 }
+                        } else {
+                            DecodeMode::Greedy
+                        },
+                        i,
+                    );
+                }
+                q.close();
+            })
+        };
+        let mut seen = Vec::new();
+        while let Some(batch) = q.pop_batch() {
+            for r in batch {
+                seen.push(r.payload);
+            }
+        }
+        producer.join().unwrap();
+        seen.sort_unstable();
+        assert_eq!(seen, (0..200).collect::<Vec<_>>());
+    }
+}

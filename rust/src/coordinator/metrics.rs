@@ -1,0 +1,196 @@
+//! Serving metrics: counters and log-bucketed latency histograms.
+//!
+//! Dependency-free (no prometheus in the offline set); the server exposes
+//! a `STATS` command that renders a snapshot.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Log-bucketed latency histogram (microseconds).
+///
+/// Buckets are powers of √2 from 1µs up to ~17s: index = ⌊2·log2(µs)⌋,
+/// giving ~±19% bucket resolution, lock-free recording.
+pub struct Histogram {
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum_us: AtomicU64,
+    max_us: AtomicU64,
+}
+
+const N_BUCKETS: usize = 49;
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram {
+            buckets: (0..N_BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum_us: AtomicU64::new(0),
+            max_us: AtomicU64::new(0),
+        }
+    }
+
+    fn bucket_of(us: u64) -> usize {
+        if us <= 1 {
+            return 0;
+        }
+        let log2 = 63 - us.leading_zeros() as u64;
+        // half-step: +1 if the mantissa's top bit is set (≥ ×1.5 ≈ ×√2)
+        let half = ((us >> log2.saturating_sub(1)) & 1) as u64;
+        ((2 * log2 + half) as usize).min(N_BUCKETS - 1)
+    }
+
+    /// Upper edge (µs) of bucket `i` (for reporting).
+    fn bucket_edge(i: usize) -> f64 {
+        2f64.powf(i as f64 / 2.0)
+    }
+
+    pub fn record(&self, d: std::time::Duration) {
+        let us = d.as_micros() as u64;
+        self.buckets[Self::bucket_of(us)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+        self.max_us.fetch_max(us, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn mean_ms(&self) -> f64 {
+        let c = self.count();
+        if c == 0 {
+            0.0
+        } else {
+            self.sum_us.load(Ordering::Relaxed) as f64 / c as f64 / 1000.0
+        }
+    }
+
+    pub fn max_ms(&self) -> f64 {
+        self.max_us.load(Ordering::Relaxed) as f64 / 1000.0
+    }
+
+    /// Approximate quantile (upper bucket edge), q in [0,1].
+    pub fn quantile_ms(&self, q: f64) -> f64 {
+        let total = self.count();
+        if total == 0 {
+            return 0.0;
+        }
+        let target = (q * total as f64).ceil() as u64;
+        let mut seen = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= target {
+                return Self::bucket_edge(i) / 1000.0;
+            }
+        }
+        self.max_ms()
+    }
+
+    pub fn summary(&self, name: &str) -> String {
+        format!(
+            "{name}: n={} mean={:.2}ms p50={:.2}ms p95={:.2}ms p99={:.2}ms max={:.2}ms",
+            self.count(),
+            self.mean_ms(),
+            self.quantile_ms(0.50),
+            self.quantile_ms(0.95),
+            self.quantile_ms(0.99),
+            self.max_ms(),
+        )
+    }
+}
+
+/// Serving-wide metrics registry.
+#[derive(Default)]
+pub struct Metrics {
+    pub request_latency: Histogram,
+    pub queue_wait: Histogram,
+    pub decode_latency: Histogram,
+    pub requests_total: AtomicU64,
+    pub requests_failed: AtomicU64,
+    pub tokens_generated: AtomicU64,
+    pub draft_tokens_accepted: AtomicU64,
+    pub decoder_calls: AtomicU64,
+    pub batches: AtomicU64,
+    pub batched_requests: AtomicU64,
+}
+
+impl Metrics {
+    pub fn snapshot(&self) -> String {
+        let req = self.requests_total.load(Ordering::Relaxed);
+        let fail = self.requests_failed.load(Ordering::Relaxed);
+        let toks = self.tokens_generated.load(Ordering::Relaxed);
+        let acc = self.draft_tokens_accepted.load(Ordering::Relaxed);
+        let calls = self.decoder_calls.load(Ordering::Relaxed);
+        let batches = self.batches.load(Ordering::Relaxed).max(1);
+        let breq = self.batched_requests.load(Ordering::Relaxed);
+        let mut s = String::new();
+        s.push_str(&format!(
+            "requests={req} failed={fail} tokens={toks} accepted_draft_tokens={acc} \
+             acceptance_rate={:.3} decoder_calls={calls} tokens_per_call={:.2} \
+             mean_batch={:.2}\n",
+            if toks == 0 { 0.0 } else { acc as f64 / toks as f64 },
+            if calls == 0 { 0.0 } else { toks as f64 / calls as f64 },
+            breq as f64 / batches as f64,
+        ));
+        s.push_str(&self.request_latency.summary("request_latency"));
+        s.push('\n');
+        s.push_str(&self.queue_wait.summary("queue_wait"));
+        s.push('\n');
+        s.push_str(&self.decode_latency.summary("decode_latency"));
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn histogram_records_and_reports() {
+        let h = Histogram::new();
+        for ms in [1u64, 2, 4, 8, 100] {
+            h.record(Duration::from_millis(ms));
+        }
+        assert_eq!(h.count(), 5);
+        assert!((h.mean_ms() - 23.0).abs() < 0.5);
+        assert!(h.max_ms() >= 100.0);
+        let p50 = h.quantile_ms(0.5);
+        assert!(p50 >= 2.0 && p50 <= 8.0, "p50 {p50}");
+        assert!(h.quantile_ms(1.0) >= 64.0);
+    }
+
+    #[test]
+    fn histogram_quantiles_monotone() {
+        let h = Histogram::new();
+        for i in 1..=1000u64 {
+            h.record(Duration::from_micros(i * 37));
+        }
+        let (p25, p50, p95) = (h.quantile_ms(0.25), h.quantile_ms(0.5), h.quantile_ms(0.95));
+        assert!(p25 <= p50 && p50 <= p95, "{p25} {p50} {p95}");
+    }
+
+    #[test]
+    fn empty_histogram_is_zero() {
+        let h = Histogram::new();
+        assert_eq!(h.mean_ms(), 0.0);
+        assert_eq!(h.quantile_ms(0.99), 0.0);
+    }
+
+    #[test]
+    fn metrics_snapshot_contains_rates() {
+        let m = Metrics::default();
+        m.requests_total.store(10, Ordering::Relaxed);
+        m.tokens_generated.store(100, Ordering::Relaxed);
+        m.draft_tokens_accepted.store(79, Ordering::Relaxed);
+        m.decoder_calls.store(25, Ordering::Relaxed);
+        let snap = m.snapshot();
+        assert!(snap.contains("acceptance_rate=0.790"));
+        assert!(snap.contains("tokens_per_call=4.00"));
+    }
+}

@@ -1,0 +1,19 @@
+//! L3 coordinator: the serving system around the decoding algorithms.
+//!
+//! * [`batcher`] — FIFO request queue with dynamic batching of compatible
+//!   greedy/speculative requests.
+//! * [`worker`] — the model thread: drains batches, runs the decoding
+//!   algorithms against the backend, replies over channels.
+//! * [`server`] — TCP line-protocol front end + blocking client.
+//! * [`metrics`] — counters and latency histograms (acceptance rate,
+//!   tokens/call, queue wait, decode latency).
+
+pub mod batcher;
+pub mod metrics;
+pub mod server;
+pub mod worker;
+
+pub use batcher::{DecodeMode, Request, RequestQueue};
+pub use metrics::{Histogram, Metrics};
+pub use server::{serve, Client, Prediction, ServerState};
+pub use worker::{run_worker, Job, JobResult, Reply};

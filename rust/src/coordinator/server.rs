@@ -1,0 +1,277 @@
+//! TCP line-protocol front end — the "AI assistant for chemists" serving
+//! surface.
+//!
+//! Protocol (one request per line, UTF-8):
+//!     PREDICT <decoder> <smiles>      decoder ∈ greedy | spec:<dl> |
+//!                                     bs:<n> | sbs:<n>:<dl>
+//!     STATS                           metrics snapshot
+//!     PING                            liveness
+//!     QUIT                            close connection
+//!
+//! Responses:
+//!     OK <latency_ms> <calls> <acc_rate> <hyp> <score> [<hyp> <score>…]
+//!     ERR <message>
+//!     PONG
+//!
+//! SMILES never contain spaces, so space-separated framing is safe.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::coordinator::batcher::{DecodeMode, RequestQueue};
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::worker::{Job, JobResult};
+
+/// Shared server state handed to every connection thread.
+pub struct ServerState {
+    pub queue: RequestQueue<Job>,
+    pub metrics: Arc<Metrics>,
+    pub shutdown: AtomicBool,
+}
+
+/// Accept loop: one thread per connection. Returns when `shutdown` is set
+/// (checked between accepts; use a connect to self to wake it) or the
+/// listener errors out.
+pub fn serve(listener: TcpListener, state: Arc<ServerState>) -> Result<()> {
+    listener.set_nonblocking(false)?;
+    for stream in listener.incoming() {
+        if state.shutdown.load(Ordering::SeqCst) {
+            break;
+        }
+        match stream {
+            Ok(s) => {
+                let st = Arc::clone(&state);
+                std::thread::spawn(move || {
+                    let _ = handle_conn(s, st);
+                });
+            }
+            Err(e) => {
+                log::warn!("accept error: {e}");
+            }
+        }
+    }
+    Ok(())
+}
+
+fn handle_conn(stream: TcpStream, state: Arc<ServerState>) -> Result<()> {
+    let peer = stream.peer_addr()?;
+    log::info!("connection from {peer}");
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut writer = stream;
+    let mut line = String::new();
+    loop {
+        line.clear();
+        if reader.read_line(&mut line)? == 0 {
+            return Ok(()); // EOF
+        }
+        let t0 = Instant::now();
+        let trimmed = line.trim_end();
+        let reply = handle_line(trimmed, &state);
+        state.metrics.request_latency.record(t0.elapsed());
+        match reply {
+            LineReply::Text(s) => {
+                writer.write_all(s.as_bytes())?;
+                writer.write_all(b"\n")?;
+            }
+            LineReply::Quit => return Ok(()),
+        }
+    }
+}
+
+enum LineReply {
+    Text(String),
+    Quit,
+}
+
+fn handle_line(line: &str, state: &Arc<ServerState>) -> LineReply {
+    let mut parts = line.splitn(3, ' ');
+    match parts.next() {
+        Some("PING") => LineReply::Text("PONG".to_string()),
+        Some("STATS") => LineReply::Text(state.metrics.snapshot()),
+        Some("QUIT") => LineReply::Quit,
+        Some("PREDICT") => {
+            let (Some(dec), Some(smiles)) = (parts.next(), parts.next()) else {
+                return LineReply::Text("ERR usage: PREDICT <decoder> <smiles>".to_string());
+            };
+            let Some(mode) = DecodeMode::parse(dec) else {
+                return LineReply::Text(format!("ERR unknown decoder {dec:?}"));
+            };
+            let t0 = Instant::now();
+            let (tx, rx) = mpsc::channel::<JobResult>();
+            state.queue.push(
+                mode,
+                Job {
+                    smiles: smiles.trim().to_string(),
+                    resp: tx,
+                },
+            );
+            match rx.recv() {
+                Ok(Ok(reply)) => {
+                    let ms = t0.elapsed().as_secs_f64() * 1000.0;
+                    let mut s = format!(
+                        "OK {ms:.2} {} {:.3}",
+                        reply.decoder_calls, reply.acceptance_rate
+                    );
+                    for (h, score) in &reply.hyps {
+                        s.push_str(&format!(" {h} {score:.4}"));
+                    }
+                    LineReply::Text(s)
+                }
+                Ok(Err(e)) => LineReply::Text(format!("ERR {e}")),
+                Err(_) => LineReply::Text("ERR worker gone".to_string()),
+            }
+        }
+        _ => LineReply::Text("ERR unknown command".to_string()),
+    }
+}
+
+/// Simple blocking client for the line protocol (used by examples, tests
+/// and the load generator).
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+/// One parsed PREDICT response.
+#[derive(Debug, Clone)]
+pub struct Prediction {
+    pub latency_ms: f64,
+    pub decoder_calls: usize,
+    pub acceptance_rate: f64,
+    pub hyps: Vec<(String, f64)>,
+}
+
+impl Client {
+    pub fn connect(addr: &str) -> Result<Client> {
+        let stream = TcpStream::connect(addr)?;
+        Ok(Client {
+            reader: BufReader::new(stream.try_clone()?),
+            writer: stream,
+        })
+    }
+
+    fn roundtrip(&mut self, line: &str) -> Result<String> {
+        self.writer.write_all(line.as_bytes())?;
+        self.writer.write_all(b"\n")?;
+        let mut resp = String::new();
+        self.reader.read_line(&mut resp)?;
+        Ok(resp.trim_end().to_string())
+    }
+
+    pub fn ping(&mut self) -> Result<bool> {
+        Ok(self.roundtrip("PING")? == "PONG")
+    }
+
+    pub fn predict(&mut self, decoder: &str, smiles: &str) -> Result<Prediction> {
+        let resp = self.roundtrip(&format!("PREDICT {decoder} {smiles}"))?;
+        let mut f = resp.split(' ');
+        match f.next() {
+            Some("OK") => {
+                let latency_ms: f64 = f.next().unwrap_or("0").parse()?;
+                let decoder_calls: usize = f.next().unwrap_or("0").parse()?;
+                let acceptance_rate: f64 = f.next().unwrap_or("0").parse()?;
+                let rest: Vec<&str> = f.collect();
+                let hyps = rest
+                    .chunks(2)
+                    .filter(|c| c.len() == 2)
+                    .map(|c| (c[0].to_string(), c[1].parse().unwrap_or(0.0)))
+                    .collect();
+                Ok(Prediction {
+                    latency_ms,
+                    decoder_calls,
+                    acceptance_rate,
+                    hyps,
+                })
+            }
+            Some("ERR") => anyhow::bail!("server: {}", resp),
+            _ => anyhow::bail!("bad response: {resp}"),
+        }
+    }
+
+    pub fn stats(&mut self) -> Result<String> {
+        // STATS is multi-line; read until the decode_latency line.
+        self.writer.write_all(b"STATS\n")?;
+        let mut out = String::new();
+        loop {
+            let mut line = String::new();
+            self.reader.read_line(&mut line)?;
+            out.push_str(&line);
+            if line.starts_with("decode_latency") || line.is_empty() {
+                break;
+            }
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::worker::run_worker;
+    use crate::testutil::CopyModel;
+    use crate::vocab::Vocab;
+    use std::time::Duration;
+
+    /// Full in-process serving round trip over a real TCP socket.
+    #[test]
+    fn tcp_round_trip_with_copy_model() {
+        let vocab = Vocab::build(["CCONF", "c1ccccc1Br"]).unwrap();
+        let state = Arc::new(ServerState {
+            queue: RequestQueue::new(8, Duration::from_millis(1)),
+            metrics: Arc::new(Metrics::default()),
+            shutdown: AtomicBool::new(false),
+        });
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+
+        let accept_state = Arc::clone(&state);
+        std::thread::spawn(move || serve(listener, accept_state));
+        let worker_state = Arc::clone(&state);
+        let worker = std::thread::spawn(move || {
+            let backend = CopyModel::new(96, 96, 20);
+            let vocab = Vocab::build(["CCONF", "c1ccccc1Br"]).unwrap();
+            run_worker(&backend, &vocab, &worker_state.queue, &worker_state.metrics);
+        });
+
+        let mut c = Client::connect(&addr).unwrap();
+        assert!(c.ping().unwrap());
+        let p = c.predict("greedy", "CCO").unwrap();
+        assert_eq!(p.hyps[0].0, "CCO");
+        let p = c.predict("spec:4", "c1ccccc1").unwrap();
+        assert_eq!(p.hyps[0].0, "c1ccccc1");
+        assert!(p.acceptance_rate > 0.0);
+        let p = c.predict("sbs:2:4", "CCO").unwrap();
+        assert!(!p.hyps.is_empty());
+        // Errors are per-request, connection stays usable.
+        assert!(c.predict("greedy", "!!bad!!").is_err());
+        assert!(c.ping().unwrap());
+        let stats = c.stats().unwrap();
+        assert!(stats.contains("requests="));
+
+        let _ = vocab;
+        state.queue.close();
+        worker.join().unwrap();
+    }
+
+    #[test]
+    fn unknown_decoder_is_rejected() {
+        let state = Arc::new(ServerState {
+            queue: RequestQueue::new(2, Duration::from_millis(1)),
+            metrics: Arc::new(Metrics::default()),
+            shutdown: AtomicBool::new(false),
+        });
+        match handle_line("PREDICT wat CCO", &state) {
+            LineReply::Text(t) => assert!(t.starts_with("ERR")),
+            _ => panic!("expected ERR"),
+        }
+        match handle_line("NONSENSE", &state) {
+            LineReply::Text(t) => assert!(t.starts_with("ERR")),
+            _ => panic!("expected ERR"),
+        }
+    }
+}

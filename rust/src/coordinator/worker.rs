@@ -1,0 +1,218 @@
+//! The model worker: a single thread owning the backend, draining the
+//! request queue batch by batch.
+//!
+//! One worker is the right shape for this testbed (one PJRT CPU device;
+//! XLA already uses the cores a single executable can use). The queue +
+//! worker split still gives the serving properties that matter: FIFO
+//! fairness, dynamic batching, and backpressure (bounded queue wait shows
+//! up in metrics rather than in stalled sockets).
+
+use std::sync::atomic::Ordering;
+use std::sync::{mpsc, Arc};
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::coordinator::batcher::{DecodeMode, Request, RequestQueue};
+use crate::coordinator::metrics::Metrics;
+use crate::decoding::{
+    beam_search, greedy_batch, sbs, spec_greedy_batch, Backend, DecodeOutput, SbsConfig,
+};
+use crate::draft::DraftConfig;
+use crate::vocab::Vocab;
+
+/// One unit of serving work: a query SMILES and a reply channel.
+pub struct Job {
+    pub smiles: String,
+    pub resp: mpsc::Sender<JobResult>,
+}
+
+/// What the worker sends back.
+pub type JobResult = Result<Reply, String>;
+
+/// A successful decode: (SMILES, cumulative log-prob) pairs, best first.
+#[derive(Debug, Clone)]
+pub struct Reply {
+    pub hyps: Vec<(String, f64)>,
+    pub decoder_calls: usize,
+    pub acceptance_rate: f64,
+}
+
+/// Drain the queue until it is closed. Runs on its own thread.
+pub fn run_worker<B: Backend>(
+    backend: &B,
+    vocab: &Vocab,
+    queue: &RequestQueue<Job>,
+    metrics: &Arc<Metrics>,
+) {
+    while let Some(batch) = queue.pop_batch() {
+        let now = Instant::now();
+        for r in &batch {
+            metrics
+                .queue_wait
+                .record(now.duration_since(r.enqueued));
+        }
+        metrics.batches.fetch_add(1, Ordering::Relaxed);
+        metrics
+            .batched_requests
+            .fetch_add(batch.len() as u64, Ordering::Relaxed);
+        process_batch(backend, vocab, batch, metrics);
+    }
+}
+
+fn process_batch<B: Backend>(
+    backend: &B,
+    vocab: &Vocab,
+    batch: Vec<Request<Job>>,
+    metrics: &Arc<Metrics>,
+) {
+    let mode = batch[0].mode;
+    let t0 = Instant::now();
+
+    // Encode queries; invalid SMILES fail fast per request.
+    let mut srcs: Vec<Vec<i64>> = Vec::with_capacity(batch.len());
+    let mut ok_idx: Vec<usize> = Vec::new();
+    for (i, r) in batch.iter().enumerate() {
+        match vocab.encode_wrapped(&r.payload.smiles) {
+            Ok(ids) if ids.len() <= backend.dims().s_len => {
+                srcs.push(ids);
+                ok_idx.push(i);
+            }
+            Ok(_) => {
+                let _ = r.payload.resp.send(Err("query too long".to_string()));
+                metrics.requests_failed.fetch_add(1, Ordering::Relaxed);
+            }
+            Err(e) => {
+                let _ = r.payload.resp.send(Err(format!("bad SMILES: {e}")));
+                metrics.requests_failed.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+    if srcs.is_empty() {
+        return;
+    }
+    let src_refs: Vec<&[i64]> = srcs.iter().map(|s| s.as_slice()).collect();
+
+    let outputs: Result<Vec<DecodeOutput>> = match mode {
+        DecodeMode::Greedy => greedy_batch(backend, &src_refs),
+        DecodeMode::SpecGreedy { dl } => {
+            spec_greedy_batch(backend, &src_refs, &DraftConfig::new(dl))
+        }
+        DecodeMode::Beam { n } => {
+            // Solo class: the batcher hands us one request at a time.
+            beam_search(backend, src_refs[0], n).map(|o| vec![o])
+        }
+        DecodeMode::Sbs { n, dl } => sbs(backend, src_refs[0], &SbsConfig::new(n, dl)).map(|o| vec![o]),
+    };
+
+    match outputs {
+        Ok(outs) => {
+            for (out, &bi) in outs.iter().zip(&ok_idx) {
+                metrics
+                    .tokens_generated
+                    .fetch_add(out.stats.acceptance.total_tokens as u64, Ordering::Relaxed);
+                metrics.draft_tokens_accepted.fetch_add(
+                    out.stats.acceptance.accepted_draft_tokens as u64,
+                    Ordering::Relaxed,
+                );
+                metrics
+                    .decoder_calls
+                    .fetch_add(out.stats.decoder_calls as u64, Ordering::Relaxed);
+                metrics.requests_total.fetch_add(1, Ordering::Relaxed);
+                let reply = Reply {
+                    hyps: out
+                        .hyps
+                        .iter()
+                        .map(|h| (vocab.decode(&h.tokens), h.score))
+                        .collect(),
+                    decoder_calls: out.stats.decoder_calls,
+                    acceptance_rate: out.stats.acceptance.rate(),
+                };
+                let _ = batch[bi].payload.resp.send(Ok(reply));
+            }
+        }
+        Err(e) => {
+            for &bi in &ok_idx {
+                let _ = batch[bi]
+                    .payload
+                    .resp
+                    .send(Err(format!("decode failed: {e}")));
+                metrics.requests_failed.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+    metrics.decode_latency.record(t0.elapsed());
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::CopyModel;
+    use std::time::Duration;
+
+    fn tiny_vocab() -> Vocab {
+        Vocab::build(["CCONF", "c1ccccc1"]).unwrap()
+    }
+
+    fn send_job(queue: &RequestQueue<Job>, mode: DecodeMode, smiles: &str) -> mpsc::Receiver<JobResult> {
+        let (tx, rx) = mpsc::channel();
+        queue.push(
+            mode,
+            Job {
+                smiles: smiles.to_string(),
+                resp: tx,
+            },
+        );
+        rx
+    }
+
+    #[test]
+    fn worker_round_trips_greedy_jobs() {
+        let vocab = tiny_vocab();
+        let backend = CopyModel::new(96, 96, vocab.len());
+        let queue = RequestQueue::new(8, Duration::from_millis(1));
+        let metrics = Arc::new(Metrics::default());
+
+        let rx1 = send_job(&queue, DecodeMode::Greedy, "CCO");
+        let rx2 = send_job(&queue, DecodeMode::SpecGreedy { dl: 2 }, "c1ccccc1");
+        queue.close();
+        run_worker(&backend, &vocab, &queue, &metrics);
+
+        // CopyModel regenerates the source tokens.
+        let r1 = rx1.recv().unwrap().unwrap();
+        assert_eq!(r1.hyps[0].0, "CCO");
+        let r2 = rx2.recv().unwrap().unwrap();
+        assert_eq!(r2.hyps[0].0, "c1ccccc1");
+        assert!(metrics.requests_total.load(Ordering::Relaxed) == 2);
+    }
+
+    #[test]
+    fn worker_reports_bad_smiles() {
+        let vocab = tiny_vocab();
+        let backend = CopyModel::new(96, 96, vocab.len());
+        let queue = RequestQueue::new(8, Duration::from_millis(1));
+        let metrics = Arc::new(Metrics::default());
+        let rx = send_job(&queue, DecodeMode::Greedy, "C C O");
+        queue.close();
+        run_worker(&backend, &vocab, &queue, &metrics);
+        assert!(rx.recv().unwrap().is_err());
+        assert_eq!(metrics.requests_failed.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn worker_handles_beam_and_sbs_modes() {
+        let vocab = tiny_vocab();
+        let backend = CopyModel::new(96, 96, vocab.len());
+        let queue = RequestQueue::new(8, Duration::from_millis(1));
+        let metrics = Arc::new(Metrics::default());
+        let rx1 = send_job(&queue, DecodeMode::Beam { n: 3 }, "CCO");
+        let rx2 = send_job(&queue, DecodeMode::Sbs { n: 3, dl: 4 }, "CCO");
+        queue.close();
+        run_worker(&backend, &vocab, &queue, &metrics);
+        let r1 = rx1.recv().unwrap().unwrap();
+        let r2 = rx2.recv().unwrap().unwrap();
+        assert_eq!(r1.hyps[0].0, "CCO");
+        assert_eq!(r2.hyps[0].0, "CCO");
+        assert!(r2.hyps.len() >= 1);
+    }
+}

@@ -1,0 +1,262 @@
+//! Standard beam search — the paper's baseline for Tables 3 and 4.
+//!
+//! Hypotheses are ranked by **length-normalized** log-probability (mean
+//! log-prob per generated token), the convention of OpenNMT-style
+//! Molecular Transformer decoding. Normalization is what lets the paper's
+//! speculative variant compare candidate sequences of *unequal lengths*
+//! fairly (Figure 3 keeps a 4-token and an 11-token candidate side by
+//! side): under a raw sum of negative log-probs a sequence could never
+//! outrank its own prefix, and speculative progress would collapse to one
+//! token per call.
+//!
+//! Search stops once `n` finished hypotheses (EOS emitted) have been
+//! collected or no live beams remain; each surviving beam grows by at
+//! least one token per iteration, so the loop is bounded by the window.
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::vocab::{BOS_ID, EOS_ID};
+
+use super::{Backend, DecodeOutput, DecodeStats, DecoderRow, Hypothesis};
+
+/// A live (unfinished) beam: tokens include the leading BOS; `score` is
+/// the raw cumulative log-probability of the generated tokens.
+#[derive(Debug, Clone)]
+pub(crate) struct BeamState {
+    pub tokens: Vec<i64>,
+    pub score: f64,
+}
+
+impl BeamState {
+    /// Mean log-prob per generated token — the ranking key.
+    pub fn norm(&self) -> f64 {
+        let n = self.tokens.len().saturating_sub(1).max(1);
+        self.score / n as f64
+    }
+}
+
+/// Canonical candidate order: normalized score descending, lexicographic
+/// tokens as the deterministic tie-break. Both `beam_search` and `sbs`
+/// must use this exact order so their survivors coincide (Table 4).
+pub(crate) fn rank_candidates(candidates: &mut [BeamState]) {
+    candidates.sort_by(|a, b| {
+        b.norm()
+            .partial_cmp(&a.norm())
+            .unwrap()
+            .then_with(|| a.tokens.cmp(&b.tokens))
+    });
+}
+
+/// Collector for finished hypotheses shared by `beam_search` and `sbs`.
+pub(crate) struct BeamPool {
+    pub n: usize,
+    finished: Vec<(Hypothesis, f64)>, // (hypothesis, normalized score)
+}
+
+impl BeamPool {
+    pub fn new(n: usize) -> Self {
+        BeamPool {
+            n,
+            finished: Vec::new(),
+        }
+    }
+
+    /// Retire a finished beam. `tokens_with_bos` excludes the EOS itself;
+    /// `score` includes the EOS log-prob; `gen_len` is the number of
+    /// generated tokens the normalization divides by (incl. EOS).
+    ///
+    /// Deduplicates on token content: in SBS a surviving prefix beam can
+    /// re-derive an already-finished extension on a later iteration, and
+    /// duplicate pool entries would both waste hypothesis slots and trip
+    /// the stop rule early.
+    pub fn push_finished(&mut self, tokens_with_bos: &[i64], score: f64, gen_len: usize) {
+        let tokens = &tokens_with_bos[1..];
+        if self.finished.iter().any(|(h, _)| h.tokens == tokens) {
+            return;
+        }
+        let norm = score / gen_len.max(1) as f64;
+        self.finished.push((
+            Hypothesis {
+                tokens: tokens.to_vec(),
+                score,
+            },
+            norm,
+        ));
+    }
+
+    #[allow(dead_code)]
+    pub fn n_finished(&self) -> usize {
+        self.finished.len()
+    }
+
+    /// Whether a hypothesis with these generated tokens (no BOS/EOS) is
+    /// already pooled.
+    pub fn contains(&self, tokens_with_bos: &[i64]) -> bool {
+        let tokens = &tokens_with_bos[1..];
+        self.finished.iter().any(|(h, _)| h.tokens == tokens)
+    }
+
+    /// Stopping rule (OpenNMT/GNMT-style): `n` finished hypotheses exist
+    /// and the best live beam's normalized score does not beat the worst
+    /// of the top-n finished ones. (With length normalization a live
+    /// beam's norm can still improve slightly, so this is the standard
+    /// practical heuristic rather than a hard bound — both `beam_search`
+    /// and `sbs` use it identically, which is what Table 4 needs.)
+    pub fn can_stop(&self, best_live_norm: f64) -> bool {
+        if self.finished.len() < self.n {
+            return false;
+        }
+        let mut norms: Vec<f64> = self.finished.iter().map(|f| f.1).collect();
+        norms.sort_by(|a, b| b.partial_cmp(a).unwrap());
+        best_live_norm <= norms[self.n - 1]
+    }
+
+    /// Best-first by normalized score, deterministic tie-break.
+    pub fn sorted(mut self) -> Vec<Hypothesis> {
+        self.finished.sort_by(|a, b| {
+            b.1.partial_cmp(&a.1)
+                .unwrap()
+                .then_with(|| a.0.tokens.cmp(&b.0.tokens))
+        });
+        self.finished.truncate(self.n);
+        self.finished.into_iter().map(|(h, _)| h).collect()
+    }
+}
+
+/// Standard beam search with beam width (and number of returned
+/// hypotheses) `n`.
+pub fn beam_search<B: Backend>(backend: &B, src: &[i64], n: usize) -> Result<DecodeOutput> {
+    let t0 = Instant::now();
+    let dims = backend.dims();
+    let memory = backend.encode(&[src])?;
+    let mut stats = DecodeStats {
+        encoder_calls: 1,
+        ..Default::default()
+    };
+
+    let mut beams = vec![BeamState {
+        tokens: vec![BOS_ID],
+        score: 0.0,
+    }];
+    let mut pool = BeamPool::new(n);
+
+    while !beams.is_empty() {
+        let rows: Vec<DecoderRow> = beams
+            .iter()
+            .map(|b| DecoderRow {
+                tokens: b.tokens.clone(),
+                mem_row: 0,
+            })
+            .collect();
+        let lp = backend.decode(&rows, &memory)?;
+        stats.decoder_calls += 1;
+        stats.decoder_rows += rows.len();
+
+        // Expand every live beam by its top-n successors.
+        let mut candidates: Vec<BeamState> = Vec::with_capacity(beams.len() * n);
+        for (i, b) in beams.iter().enumerate() {
+            let j = b.tokens.len() - 1;
+            for (tok, logp) in lp.topk(i, j, n) {
+                if tok == BOS_ID || tok == crate::vocab::PAD_ID {
+                    continue; // structural tokens never extend a hypothesis
+                }
+                let mut tokens = b.tokens.clone();
+                tokens.push(tok);
+                candidates.push(BeamState {
+                    tokens,
+                    score: b.score + logp as f64,
+                });
+            }
+        }
+        rank_candidates(&mut candidates);
+        candidates.truncate(n);
+
+        beams = Vec::with_capacity(n);
+        for c in candidates {
+            let gen_len = c.tokens.len() - 1;
+            if *c.tokens.last().unwrap() == EOS_ID {
+                pool.push_finished(&c.tokens[..c.tokens.len() - 1], c.score, gen_len);
+            } else if c.tokens.len() >= dims.t_len {
+                // Window exhausted: retire as-is (no EOS).
+                pool.push_finished(&c.tokens, c.score, gen_len);
+            } else {
+                beams.push(c);
+            }
+        }
+        let best_live_norm = beams.first().map(|b| b.norm()).unwrap_or(f64::NEG_INFINITY);
+        if pool.can_stop(best_live_norm) {
+            break;
+        }
+    }
+
+    stats.wall = t0.elapsed();
+    Ok(DecodeOutput {
+        hyps: pool.sorted(),
+        stats,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::decoding::greedy;
+    use crate::rng::Rng;
+    use crate::testutil::{random_wrapped_src, rescore, CopyModel, HashModel};
+
+    #[test]
+    fn beam1_matches_greedy() {
+        // Width-1 beam search must find the greedy sequence.
+        let mut rng = Rng::new(21);
+        for case in 0..10 {
+            let m = HashModel::new(64, 64, 32, case + 100);
+            let src = random_wrapped_src(&mut rng, 4, 16, 32);
+            let g = greedy(&m, &src).unwrap();
+            let b = beam_search(&m, &src, 1).unwrap();
+            assert_eq!(b.hyps.len(), 1);
+            assert_eq!(b.hyps[0].tokens, g.hyps[0].tokens, "case {case}");
+            assert!((b.hyps[0].score - g.hyps[0].score).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn returns_n_sorted_distinct_hypotheses() {
+        let m = HashModel::new(64, 64, 32, 9);
+        let mut rng = Rng::new(33);
+        let src = random_wrapped_src(&mut rng, 6, 16, 32);
+        let out = beam_search(&m, &src, 5).unwrap();
+        assert_eq!(out.hyps.len(), 5);
+        for w in out.hyps.windows(2) {
+            // Sorted by normalized score.
+            let na = w[0].score / (w[0].tokens.len() + 1) as f64;
+            let nb = w[1].score / (w[1].tokens.len() + 1) as f64;
+            assert!(na >= nb - 1e-9, "not sorted: {na} < {nb}");
+        }
+        let set: std::collections::HashSet<&Vec<i64>> =
+            out.hyps.iter().map(|h| &h.tokens).collect();
+        assert_eq!(set.len(), 5, "duplicate hypotheses");
+    }
+
+    #[test]
+    fn hypothesis_scores_are_true_model_scores() {
+        let m = HashModel::new(64, 64, 32, 11);
+        let mut rng = Rng::new(44);
+        for _ in 0..5 {
+            let src = random_wrapped_src(&mut rng, 5, 14, 32);
+            let b = beam_search(&m, &src, 5).unwrap();
+            for h in &b.hyps {
+                let truth = rescore(&m, &src, &h.tokens, true);
+                assert!((truth - h.score).abs() < 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn copy_model_beam_top1_is_target() {
+        let m = CopyModel::new(96, 96, 40);
+        let src = vec![BOS_ID, 10, 11, 12, 13, 14, EOS_ID];
+        let out = beam_search(&m, &src, 5).unwrap();
+        assert_eq!(out.hyps[0].tokens, m.target_for(&src));
+    }
+}

@@ -1,0 +1,325 @@
+//! Decoding algorithms over an abstract model backend.
+//!
+//! This module implements the paper's contribution: standard greedy and
+//! beam-search decoding, plus their speculative counterparts that copy
+//! query-SMILES subsequences into the target (§2.1 and Appendix B).
+//!
+//! All algorithms are generic over [`Backend`], which is implemented by
+//! the PJRT runtime (`runtime::PjrtBackend`, the production path), by the
+//! pure-Rust reference transformer (`runtime::reference`), and by
+//! deterministic mock models (`testutil`) used to property-test the
+//! algorithm invariants:
+//!
+//! * speculative greedy is **token-exact** vs greedy,
+//! * speculative beam search with a never-accepted draft reduces to
+//!   standard beam search,
+//! * acceptance statistics are consistent with emitted tokens.
+
+mod beam;
+mod greedy;
+mod sbs;
+mod spec_greedy;
+
+pub use beam::beam_search;
+pub use greedy::{greedy, greedy_batch};
+pub use sbs::{hyps_to_smiles, sbs, sbs_traced, SbsConfig, SbsIterTrace, SbsTrace};
+pub use spec_greedy::{spec_greedy, spec_greedy_batch};
+
+use std::time::Duration;
+
+use anyhow::Result;
+
+use crate::draft::Acceptance;
+
+/// Static model dimensions shared by every backend.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ModelDims {
+    /// Source bucket length (tokens incl. BOS/EOS).
+    pub s_len: usize,
+    /// Target bucket length (decoder context window incl. BOS).
+    pub t_len: usize,
+    /// Embedding width.
+    pub d_model: usize,
+    /// Vocabulary size.
+    pub vocab: usize,
+}
+
+/// Encoder output held host-side: row-major `[batch, s_len, d_model]`
+/// activations plus the source pad mask `[batch, s_len]` (1.0 = real).
+#[derive(Debug, Clone)]
+pub struct Memory {
+    pub data: Vec<f32>,
+    pub pad: Vec<f32>,
+    pub batch: usize,
+    pub s_len: usize,
+    pub d_model: usize,
+}
+
+impl Memory {
+    /// Borrow one row's activations.
+    pub fn row(&self, b: usize) -> &[f32] {
+        let n = self.s_len * self.d_model;
+        &self.data[b * n..(b + 1) * n]
+    }
+
+    /// Borrow one row's pad mask.
+    pub fn pad_row(&self, b: usize) -> &[f32] {
+        &self.pad[b * self.s_len..(b + 1) * self.s_len]
+    }
+}
+
+/// One decoder input row: an unpadded token sequence (starting with BOS)
+/// and the index of the encoder-memory row it attends to.
+#[derive(Debug, Clone)]
+pub struct DecoderRow {
+    pub tokens: Vec<i64>,
+    pub mem_row: usize,
+}
+
+/// Log-probabilities returned by one decoder forward pass.
+///
+/// Storage is `[rows, t_len, vocab]`; rows were right-aligned (left-padded)
+/// into the fixed window by the backend, so position `j` of row `i` (in the
+/// row's own coordinates) lives at column `t_len - len_i + j`. The paper's
+/// `padLeft` (Appendix B) exists for exactly this: ragged candidate rows
+/// share fixed-shape batches while positional encodings stay contiguous.
+#[derive(Debug, Clone)]
+pub struct LogProbs {
+    data: Vec<f32>,
+    row_lens: Vec<usize>,
+    t_len: usize,
+    vocab: usize,
+    /// Number of trailing columns actually stored. Full-window backends
+    /// store all `t_len` columns; the decfast artifact stores only the
+    /// last `window` (everything a decoding step reads — prefix head plus
+    /// draft verify region).
+    window: usize,
+}
+
+impl LogProbs {
+    pub fn new(data: Vec<f32>, row_lens: Vec<usize>, t_len: usize, vocab: usize) -> LogProbs {
+        debug_assert_eq!(data.len(), row_lens.len() * t_len * vocab);
+        LogProbs {
+            data,
+            row_lens,
+            t_len,
+            vocab,
+            window: t_len,
+        }
+    }
+
+    /// Windowed storage: `data` holds only the trailing `window` columns
+    /// of each row.
+    pub fn new_windowed(
+        data: Vec<f32>,
+        row_lens: Vec<usize>,
+        t_len: usize,
+        vocab: usize,
+        window: usize,
+    ) -> LogProbs {
+        debug_assert_eq!(data.len(), row_lens.len() * window * vocab);
+        LogProbs {
+            data,
+            row_lens,
+            t_len,
+            vocab,
+            window,
+        }
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.row_lens.len()
+    }
+
+    fn offset(&self, row: usize, j: usize) -> usize {
+        // Absolute column in the padded layout, then relative to the
+        // stored window's first column.
+        let col = self.t_len - self.row_lens[row] + j;
+        assert!(
+            col + self.window >= self.t_len,
+            "position {j} of row {row} (len {}) is outside the stored window {}",
+            self.row_lens[row],
+            self.window
+        );
+        let wcol = col + self.window - self.t_len;
+        (row * self.window + wcol) * self.vocab
+    }
+
+    /// Log-probability of `tok` as the successor of position `j` (row
+    /// coordinates: `j = 0` is BOS, the prediction for the first real
+    /// token).
+    pub fn logp(&self, row: usize, j: usize, tok: i64) -> f32 {
+        self.data[self.offset(row, j) + tok as usize]
+    }
+
+    /// Full successor distribution at position `j` of `row`.
+    pub fn dist(&self, row: usize, j: usize) -> &[f32] {
+        let off = self.offset(row, j);
+        &self.data[off..off + self.vocab]
+    }
+
+    /// Argmax successor at position `j` of `row` (ties → lowest id, which
+    /// both backends and the HLO artifact share as the convention).
+    pub fn argmax(&self, row: usize, j: usize) -> i64 {
+        let d = self.dist(row, j);
+        let mut best = 0usize;
+        for (i, &v) in d.iter().enumerate() {
+            if v > d[best] {
+                best = i;
+            }
+        }
+        best as i64
+    }
+
+    /// Top-`k` successors at position `j` of `row`, sorted descending by
+    /// log-probability (ties → lowest id first).
+    pub fn topk(&self, row: usize, j: usize, k: usize) -> Vec<(i64, f32)> {
+        let d = self.dist(row, j);
+        let mut idx: Vec<usize> = (0..d.len()).collect();
+        idx.sort_by(|&a, &b| d[b].partial_cmp(&d[a]).unwrap().then(a.cmp(&b)));
+        idx.truncate(k);
+        idx.into_iter().map(|i| (i as i64, d[i])).collect()
+    }
+}
+
+/// The model interface the decoding algorithms run against.
+///
+/// Implementations must guarantee the *conditional-consistency contract*:
+/// the successor distribution at position `j` of a row depends only on the
+/// row's tokens `0..=j` and its memory row — never on other rows in the
+/// batch or on padding. Speculative decoding's losslessness rests on this.
+pub trait Backend {
+    fn dims(&self) -> ModelDims;
+
+    /// Encode a batch of BOS/EOS-wrapped source sequences.
+    fn encode(&self, srcs: &[&[i64]]) -> Result<Memory>;
+
+    /// One decoder forward pass over `rows` (each row unpadded, starting
+    /// with BOS; backends right-align into the fixed window).
+    fn decode(&self, rows: &[DecoderRow], memory: &Memory) -> Result<LogProbs>;
+}
+
+/// Instrumentation for one decode run.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct DecodeStats {
+    /// Decoder forward passes (the paper's "calls to the model").
+    pub decoder_calls: usize,
+    /// Encoder forward passes.
+    pub encoder_calls: usize,
+    /// Total decoder rows across all calls (effective batch · calls).
+    pub decoder_rows: usize,
+    /// Draft-token acceptance accounting.
+    pub acceptance: Acceptance,
+    /// Wall time of the whole decode.
+    pub wall: Duration,
+}
+
+impl DecodeStats {
+    pub fn merge(&mut self, o: &DecodeStats) {
+        self.decoder_calls += o.decoder_calls;
+        self.encoder_calls += o.encoder_calls;
+        self.decoder_rows += o.decoder_rows;
+        self.acceptance.merge(&o.acceptance);
+        self.wall += o.wall;
+    }
+}
+
+/// One decoded hypothesis: generated token ids (no BOS, no EOS) and its
+/// cumulative log-probability (including EOS if the model emitted it).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Hypothesis {
+    pub tokens: Vec<i64>,
+    pub score: f64,
+}
+
+/// Result of decoding one query: hypotheses sorted by descending score
+/// (a single one for greedy decoders) plus run statistics.
+#[derive(Debug, Clone)]
+pub struct DecodeOutput {
+    pub hyps: Vec<Hypothesis>,
+    pub stats: DecodeStats,
+}
+
+/// Clip a draft so that `prefix + draft` fits the decoder window.
+pub(crate) fn clip_draft<'a>(draft: &'a [i64], prefix_len: usize, t_len: usize) -> &'a [i64] {
+    let room = t_len.saturating_sub(prefix_len);
+    &draft[..draft.len().min(room)]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn logprobs_indexing_right_aligned() {
+        // 1 row, t_len 4, vocab 2, row len 2 → row occupies columns 2..4.
+        let mut data = vec![f32::NAN; 8];
+        // column 2 (j=0): [0.1, 0.9]; column 3 (j=1): [0.7, 0.3]
+        data[2 * 2] = 0.1;
+        data[2 * 2 + 1] = 0.9;
+        data[3 * 2] = 0.7;
+        data[3 * 2 + 1] = 0.3;
+        let lp = LogProbs::new(data, vec![2], 4, 2);
+        assert_eq!(lp.logp(0, 0, 1), 0.9);
+        assert_eq!(lp.argmax(0, 0), 1);
+        assert_eq!(lp.argmax(0, 1), 0);
+        let top = lp.topk(0, 1, 2);
+        assert_eq!(top[0].0, 0);
+        assert_eq!(top[1].0, 1);
+    }
+
+    #[test]
+    fn topk_breaks_ties_by_lowest_id() {
+        let data = vec![0.5, 0.5, 0.1];
+        let lp = LogProbs::new(data, vec![1], 1, 3);
+        let top = lp.topk(0, 0, 3);
+        assert_eq!(top.iter().map(|t| t.0).collect::<Vec<_>>(), vec![0, 1, 2]);
+        assert_eq!(lp.argmax(0, 0), 0);
+    }
+
+    #[test]
+    fn windowed_logprobs_map_trailing_columns() {
+        // t_len 8, window 4, vocab 2, one row of len 3: row occupies
+        // columns 5..8; stored window covers columns 4..8.
+        let mut data = vec![f32::NAN; 4 * 2];
+        // j=0 → col 5 → wcol 1 ; j=2 → col 7 → wcol 3
+        data[1 * 2] = 0.25;
+        data[1 * 2 + 1] = 0.75;
+        data[3 * 2] = 0.9;
+        data[3 * 2 + 1] = 0.1;
+        let lp = LogProbs::new_windowed(data, vec![3], 8, 2, 4);
+        assert_eq!(lp.logp(0, 0, 1), 0.75);
+        assert_eq!(lp.argmax(0, 0), 1);
+        assert_eq!(lp.argmax(0, 2), 0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn windowed_logprobs_reject_out_of_window_reads() {
+        // Row len 6 with window 4: positions j < 2 live outside storage.
+        let data = vec![0f32; 4 * 2];
+        let lp = LogProbs::new_windowed(data, vec![6], 8, 2, 4);
+        let _ = lp.logp(0, 0, 0);
+    }
+
+    #[test]
+    fn clip_draft_respects_window() {
+        let d = vec![1, 2, 3, 4, 5];
+        assert_eq!(clip_draft(&d, 10, 16), &[1, 2, 3, 4, 5]);
+        assert_eq!(clip_draft(&d, 14, 16), &[1, 2]);
+        assert_eq!(clip_draft(&d, 16, 16), &[] as &[i64]);
+    }
+
+    #[test]
+    fn memory_row_access() {
+        let m = Memory {
+            data: (0..12).map(|x| x as f32).collect(),
+            pad: vec![1.0, 1.0, 0.0, 1.0, 0.0, 0.0],
+            batch: 2,
+            s_len: 3,
+            d_model: 2,
+        };
+        assert_eq!(m.row(1), &[6.0, 7.0, 8.0, 9.0, 10.0, 11.0]);
+        assert_eq!(m.pad_row(1), &[1.0, 0.0, 0.0]);
+    }
+}

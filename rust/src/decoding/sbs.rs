@@ -1,0 +1,467 @@
+//! Speculative beam search (SBS) — the paper's Algorithm 1 (Appendix B).
+//!
+//! At every iteration each live beam is concatenated with every draft and
+//! the whole ragged batch is verified in one decoder forward pass (rows are
+//! right-aligned into the fixed window — the paper's `padLeft` with shifted
+//! positional encodings). Per beam, the draft with the longest accepted
+//! prefix is selected (`selectBestDraft`); candidate sequences of *unequal
+//! lengths* are proposed along that accepted prefix (`sample`: for every
+//! accepted length `j`, the top-n successor tokens), ranked by cumulative
+//! log-probability (`sortAndExtract`), and the best `n` survive.
+//!
+//! With a never-accepted draft (DL=0 ⇒ a single BOS draft) the candidate
+//! set degenerates to "top-n successors of each beam" — exactly standard
+//! beam search. This equivalence is property-tested.
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::draft::{extract_drafts, DraftConfig};
+use crate::vocab::{BOS_ID, EOS_ID, PAD_ID};
+
+use super::beam::{rank_candidates, BeamPool, BeamState};
+use super::{clip_draft, Backend, DecodeOutput, DecodeStats, DecoderRow, Hypothesis};
+
+/// Speculative-beam-search configuration.
+#[derive(Debug, Clone)]
+pub struct SbsConfig {
+    /// Beam width == number of returned hypotheses (the paper keeps them
+    /// equal).
+    pub n: usize,
+    /// Draft extraction parameters.
+    pub draft: DraftConfig,
+    /// Hard cap on decoder rows per forward pass. The effective batch is
+    /// `beams × drafts`; when it would exceed this, the draft list is
+    /// truncated — the paper's §3.3 mitigation ("we put a boundary on the
+    /// number of drafts ... however, this compromises the acceptance
+    /// rate").
+    pub max_rows: usize,
+}
+
+impl SbsConfig {
+    pub fn new(n: usize, draft_len: usize) -> Self {
+        SbsConfig {
+            n,
+            draft: DraftConfig::new(draft_len),
+            max_rows: 256,
+        }
+    }
+}
+
+/// Per-iteration trace record (drives the Figure 3 walk-through).
+#[derive(Debug, Clone)]
+pub struct SbsIterTrace {
+    /// Candidate sequences proposed this iteration (before top-n cut).
+    pub candidates_generated: usize,
+    /// Decoder rows submitted this iteration (beams × drafts).
+    pub rows: usize,
+    /// The kept beams: (generated tokens so far, score).
+    pub kept: Vec<(Vec<i64>, f64)>,
+}
+
+/// Full trace of one SBS run.
+#[derive(Debug, Clone, Default)]
+pub struct SbsTrace {
+    pub iterations: Vec<SbsIterTrace>,
+}
+
+/// Speculative beam search. See module docs.
+pub fn sbs<B: Backend>(backend: &B, src: &[i64], cfg: &SbsConfig) -> Result<DecodeOutput> {
+    sbs_impl(backend, src, cfg, None).map(|(out, _)| out)
+}
+
+/// SBS with a per-iteration trace (used by `examples/retro_planning
+/// --trace` to regenerate the paper's Figure 3 walk-through).
+pub fn sbs_traced<B: Backend>(
+    backend: &B,
+    src: &[i64],
+    cfg: &SbsConfig,
+) -> Result<(DecodeOutput, SbsTrace)> {
+    let mut trace = SbsTrace::default();
+    let (out, _) = sbs_impl(backend, src, cfg, Some(&mut trace))?;
+    Ok((out, trace))
+}
+
+fn sbs_impl<B: Backend>(
+    backend: &B,
+    src: &[i64],
+    cfg: &SbsConfig,
+    mut trace: Option<&mut SbsTrace>,
+) -> Result<(DecodeOutput, ())> {
+    let t0 = Instant::now();
+    let dims = backend.dims();
+    let memory = backend.encode(&[src])?;
+    let mut stats = DecodeStats {
+        encoder_calls: 1,
+        ..Default::default()
+    };
+
+    // getDrafts: windows of the unwrapped query.
+    let inner: Vec<i64> = src
+        .iter()
+        .copied()
+        .filter(|&t| t != BOS_ID && t != EOS_ID)
+        .collect();
+    let mut drafts = extract_drafts(&inner, &cfg.draft);
+
+    let mut beams = vec![BeamState {
+        tokens: vec![BOS_ID],
+        score: 0.0,
+    }];
+    let mut pool = BeamPool::new(cfg.n);
+
+    while !beams.is_empty() {
+        // Bound the effective batch: beams × drafts ≤ max_rows.
+        let max_drafts = (cfg.max_rows / beams.len()).max(1);
+        if drafts.len() > max_drafts {
+            drafts.truncate(max_drafts);
+        }
+
+        // concatDraftsToSequences.
+        let mut rows: Vec<DecoderRow> = Vec::with_capacity(beams.len() * drafts.len());
+        let mut row_meta: Vec<(usize, usize)> = Vec::new(); // (beam, draft_len)
+        for (bi, b) in beams.iter().enumerate() {
+            for d in &drafts {
+                let clipped = clip_draft(d, b.tokens.len(), dims.t_len);
+                let mut tokens = b.tokens.clone();
+                tokens.extend_from_slice(clipped);
+                rows.push(DecoderRow { tokens, mem_row: 0 });
+                row_meta.push((bi, clipped.len()));
+            }
+        }
+        let lp = backend.decode(&rows, &memory)?;
+        stats.decoder_calls += 1;
+        stats.decoder_rows += rows.len();
+
+        // selectBestDraft per beam: most accepted tokens, ties → first.
+        let mut best: Vec<Option<(usize, usize)>> = vec![None; beams.len()];
+        for (r, &(bi, dlen)) in row_meta.iter().enumerate() {
+            let p = beams[bi].tokens.len();
+            let mut k = 0usize;
+            while k < dlen {
+                let d_tok = rows[r].tokens[p + k];
+                if d_tok == EOS_ID || d_tok == BOS_ID || d_tok == PAD_ID {
+                    break;
+                }
+                if lp.argmax(r, p - 1 + k) != d_tok {
+                    break;
+                }
+                k += 1;
+            }
+            match best[bi] {
+                Some((_, bk)) if bk >= k => {}
+                _ => best[bi] = Some((r, k)),
+            }
+        }
+
+        // sample: candidates of unequal lengths along the accepted prefix
+        // — for every accepted length j (0..=k), the top-n successor
+        // tokens, scored by their true cumulative log-probability. The
+        // paper's Figure 3: `(k+1) · n` candidates per beam.
+        let mut candidates: Vec<BeamState> = Vec::new();
+        for (bi, b) in beams.iter().enumerate() {
+            let (r, k) = best[bi].unwrap();
+            let p = b.tokens.len();
+            let mut draft_prefix_logp = 0f64;
+            for j in 0..=k {
+                let d_next = (j < k).then(|| rows[r].tokens[p + j]);
+                for (tok, logp) in lp.topk(r, p - 1 + j, cfg.n) {
+                    if tok == BOS_ID || tok == PAD_ID {
+                        continue;
+                    }
+                    // One candidate per *path*: stopping exactly on the
+                    // accepted draft token duplicates the longer candidate
+                    // that continues along it. Keeping such nested
+                    // prefixes would crowd the beam with copies of one
+                    // path and starve the diverse deviations standard
+                    // beam search maintains. (Figure 3's kept candidates
+                    // are likewise one-per-path, unequal lengths.)
+                    if Some(tok) == d_next {
+                        continue;
+                    }
+                    let mut tokens = b.tokens.clone();
+                    tokens.extend_from_slice(&rows[r].tokens[p..p + j]);
+                    tokens.push(tok);
+                    candidates.push(BeamState {
+                        tokens,
+                        score: b.score + draft_prefix_logp + logp as f64,
+                    });
+                }
+                if let Some(d_tok) = d_next {
+                    draft_prefix_logp += lp.logp(r, p - 1 + j, d_tok) as f64;
+                }
+            }
+        }
+        let n_generated = candidates.len();
+
+        // Candidates of unequal lengths can collide (beam "ab" + draft "c"
+        // equals beam "abc" extended directly); identical sequences have
+        // identical scores by conditional consistency — keep one. Ranking
+        // is the shared length-normalized order (see `rank_candidates`).
+        rank_candidates(&mut candidates);
+        candidates.dedup_by(|a, b| a.tokens == b.tokens);
+
+        // sortAndExtract + retire finished.
+        //
+        // Diversity cap: length-normalized ranking systematically favours
+        // candidates with long accepted prefixes, so without a cap the
+        // beam fills with several variants of ONE parent's draft path and
+        // starves the early deviations standard beam search keeps (e.g.
+        // the equal-probability reactant-order permutation). At most
+        // ⌈n/2⌉ survivors per parent beam in the first pass; remaining
+        // slots fill rank-order in a second pass.
+        let per_parent_cap = cfg.n.div_ceil(2);
+        let mut kept: Vec<BeamState> = Vec::with_capacity(cfg.n);
+        let mut kept_idx: Vec<usize> = Vec::new();
+        let mut parent_count = vec![0usize; beams.len()];
+        let parent_of = |tokens: &[i64]| -> usize {
+            // Candidates extend their parent's tokens; identify by prefix.
+            beams
+                .iter()
+                .enumerate()
+                .filter(|(_, b)| tokens.len() > b.tokens.len() && tokens[..b.tokens.len()] == b.tokens[..])
+                .map(|(i, b)| (i, b.tokens.len()))
+                .max_by_key(|&(_, l)| l)
+                .map(|(i, _)| i)
+                .unwrap_or(0)
+        };
+        for (ci_idx, c) in candidates.iter().enumerate() {
+            if kept.len() >= cfg.n {
+                break;
+            }
+            let p_idx = parent_of(&c.tokens);
+            // One-token extensions are exactly standard beam search's
+            // candidates: they always compete freely (this also keeps
+            // SBS(DL=0) ≡ BS exact). Only the *speculative* multi-token
+            // candidates are capped per parent.
+            let bs_like = c.tokens.len() == beams[p_idx].tokens.len() + 1;
+            if !bs_like && parent_count[p_idx] >= per_parent_cap {
+                continue;
+            }
+            if !bs_like {
+                parent_count[p_idx] += 1;
+            }
+            kept_idx.push(ci_idx);
+            kept.push(c.clone());
+        }
+        // Fill pass: rank order, ignoring the cap.
+        if kept.len() < cfg.n {
+            for (ci_idx, c) in candidates.iter().enumerate() {
+                if kept.len() >= cfg.n {
+                    break;
+                }
+                if !kept_idx.contains(&ci_idx) {
+                    kept_idx.push(ci_idx);
+                    kept.push(c.clone());
+                }
+            }
+        }
+        // Re-rank the kept set and process retire/keep decisions in order.
+        rank_candidates(&mut kept);
+        let candidates = kept;
+        let mut kept: Vec<BeamState> = Vec::with_capacity(cfg.n);
+        let prev_top_len = beams[0].tokens.len();
+        for c in candidates {
+            if kept.len() >= cfg.n {
+                break;
+            }
+            let gen_len = c.tokens.len() - 1;
+            if *c.tokens.last().unwrap() == EOS_ID {
+                // A surviving prefix beam can re-derive an extension that
+                // already finished on an earlier iteration; such repeats
+                // must not consume hypothesis slots again.
+                if pool.contains(&c.tokens[..c.tokens.len() - 1]) {
+                    continue;
+                }
+                pool.push_finished(&c.tokens[..c.tokens.len() - 1], c.score, gen_len);
+                // finished hypotheses also occupy candidate slots, exactly
+                // as in `beam_search`.
+                kept.push(c);
+            } else if c.tokens.len() >= dims.t_len {
+                pool.push_finished(&c.tokens, c.score, gen_len);
+                kept.push(c);
+            } else {
+                kept.push(c);
+            }
+        }
+        // Acceptance accounting on the top kept candidate: its length
+        // growth beyond 1 is accepted draft copy.
+        if let Some(top) = kept.first() {
+            let grew = top.tokens.len().saturating_sub(prev_top_len);
+            stats.acceptance.total_tokens += grew;
+            stats.acceptance.accepted_draft_tokens += grew.saturating_sub(1);
+        }
+
+        let live: Vec<BeamState> = kept
+            .iter()
+            .filter(|c| *c.tokens.last().unwrap() != EOS_ID && c.tokens.len() < dims.t_len)
+            .cloned()
+            .collect();
+
+        if let Some(tr) = trace.as_deref_mut() {
+            tr.iterations.push(SbsIterTrace {
+                candidates_generated: n_generated,
+                rows: rows.len(),
+                kept: kept
+                    .iter()
+                    .map(|c| (c.tokens[1..].to_vec(), c.score))
+                    .collect(),
+            });
+        }
+
+        beams = live;
+        let best_live_norm = beams.first().map(|b| b.norm()).unwrap_or(f64::NEG_INFINITY);
+        if pool.can_stop(best_live_norm) {
+            break;
+        }
+    }
+
+    stats.wall = t0.elapsed();
+    Ok((
+        DecodeOutput {
+            hyps: pool.sorted(),
+            stats,
+        },
+        (),
+    ))
+}
+
+/// Convenience: build the hypotheses' SMILES strings.
+pub fn hyps_to_smiles(vocab: &crate::vocab::Vocab, hyps: &[Hypothesis]) -> Vec<String> {
+    hyps.iter().map(|h| vocab.decode(&h.tokens)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::decoding::beam_search;
+    use crate::rng::Rng;
+    use crate::testutil::{random_wrapped_src, CopyModel, HashModel};
+
+    /// DL=0 ⇒ SBS must equal standard beam search exactly (paper §3.2:
+    /// "SBS reduces to the standard beam search when draft tokens are
+    /// never accepted").
+    #[test]
+    fn prop_sbs_dl0_equals_beam_search() {
+        let mut rng = Rng::new(0xBEEF);
+        for case in 0..15 {
+            let m = HashModel::new(64, 64, 32, case + 500);
+            let src = random_wrapped_src(&mut rng, 5, 18, 32);
+            for n in [1usize, 3, 5] {
+                let bs = beam_search(&m, &src, n).unwrap();
+                let sb = sbs(&m, &src, &SbsConfig::new(n, 0)).unwrap();
+                assert_eq!(bs.hyps.len(), sb.hyps.len(), "case {case} n {n}");
+                for (a, b) in bs.hyps.iter().zip(&sb.hyps) {
+                    assert_eq!(a.tokens, b.tokens, "case {case} n {n}");
+                    assert!((a.score - b.score).abs() < 1e-5);
+                }
+            }
+        }
+    }
+
+    /// Statistical version of the paper's Table 4 claim. Exact per-query
+    /// equality between BS and SBS is a property of genuinely low-entropy
+    /// trained models (the real check runs against the trained artifact in
+    /// the Table 4 bench); on the semi-peaked hash mock — where draft
+    /// acceptances are accidental rather than structural — we demand high
+    /// but not perfect agreement. Measured baseline: 40/50 top-1, 229/250
+    /// set agreement.
+    #[test]
+    fn prop_sbs_with_drafts_mostly_matches_beam_search() {
+        let mut rng = Rng::new(0xF00D);
+        let (mut top1, mut agreements, mut total) = (0usize, 0usize, 0usize);
+        let n_cases = 50usize;
+        for case in 0..n_cases {
+            let m = HashModel::peaked(64, 64, 32, case as u64 + 900);
+            let src = random_wrapped_src(&mut rng, 6, 20, 32);
+            let n = 5;
+            let bs = beam_search(&m, &src, n).unwrap();
+            let sb = sbs(&m, &src, &SbsConfig::new(n, 6)).unwrap();
+            if bs.hyps[0].tokens == sb.hyps[0].tokens {
+                top1 += 1;
+            }
+            for h in &sb.hyps {
+                total += 1;
+                if bs.hyps.iter().any(|g| g.tokens == h.tokens) {
+                    agreements += 1;
+                }
+            }
+        }
+        // Sanity floor on the synthetic mock (accidental acceptances push
+        // the two searches onto different frontiers); the real Table 4
+        // check — accuracy equality on the trained model — lives in
+        // rust/tests/serving_e2e.rs and the table3 bench.
+        assert!(top1 * 100 >= n_cases * 50, "top-1 agreement {top1}/{n_cases}");
+        assert!(
+            agreements * 100 >= total * 60,
+            "only {agreements}/{total} hypotheses agree"
+        );
+    }
+
+    /// Universal invariant, any entropy regime: every hypothesis either
+    /// algorithm returns carries its *true* cumulative model log-prob.
+    #[test]
+    fn prop_returned_scores_are_true_model_scores() {
+        let mut rng = Rng::new(0xABBA);
+        for case in 0..10 {
+            let m = HashModel::new(64, 64, 32, case + 40);
+            let src = random_wrapped_src(&mut rng, 6, 18, 32);
+            let bs = beam_search(&m, &src, 4).unwrap();
+            let sb = sbs(&m, &src, &SbsConfig::new(4, 5)).unwrap();
+            for out in [&bs, &sb] {
+                for h in &out.hyps {
+                    let truth = crate::testutil::rescore(&m, &src, &h.tokens, true);
+                    assert!(
+                        (truth - h.score).abs() < 1e-4,
+                        "case {case}: reported {} true {truth} for {:?}",
+                        h.score,
+                        h.tokens
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sbs_uses_fewer_calls_on_copy_model() {
+        let m = CopyModel::new(96, 96, 40);
+        let src = vec![
+            BOS_ID, 10, 11, 12, 13, 14, 15, 16, 17, 18, 19, 20, 21, EOS_ID,
+        ];
+        let bs = beam_search(&m, &src, 3).unwrap();
+        let sb = sbs(&m, &src, &SbsConfig::new(3, 8)).unwrap();
+        assert_eq!(bs.hyps[0].tokens, sb.hyps[0].tokens);
+        assert!(
+            sb.stats.decoder_calls < bs.stats.decoder_calls,
+            "SBS {} calls vs BS {}",
+            sb.stats.decoder_calls,
+            bs.stats.decoder_calls
+        );
+    }
+
+    #[test]
+    fn trace_counts_candidates() {
+        let m = CopyModel::new(96, 96, 40);
+        let src = vec![BOS_ID, 10, 11, 12, 13, EOS_ID];
+        let (out, trace) = sbs_traced(&m, &src, &SbsConfig::new(2, 10)).unwrap();
+        assert!(!out.hyps.is_empty());
+        assert!(!trace.iterations.is_empty());
+        // First iteration: 1 beam × up to n·(k+1) candidates.
+        assert!(trace.iterations[0].candidates_generated >= 2);
+        assert!(trace.iterations[0].rows >= 1);
+    }
+
+    #[test]
+    fn max_rows_cap_respected() {
+        let m = HashModel::new(64, 64, 32, 77);
+        let mut rng = Rng::new(123);
+        let src = random_wrapped_src(&mut rng, 10, 24, 32);
+        let mut cfg = SbsConfig::new(5, 4);
+        cfg.max_rows = 10;
+        let (_, trace) = sbs_traced(&m, &src, &cfg).unwrap();
+        for it in &trace.iterations {
+            assert!(it.rows <= 10, "rows {} exceed cap", it.rows);
+        }
+    }
+}

@@ -1,0 +1,257 @@
+//! Speculative greedy decoding (§2.1, Figure 2).
+//!
+//! At every step, every draft is concatenated to the current prefix and the
+//! whole set is verified in **one** decoder forward pass (drafts inflate the
+//! effective batch). The draft with the longest accepted prefix wins; its
+//! accepted tokens plus one fresh argmax token are emitted, so each call
+//! advances the sequence by 1..=DL+1 tokens. The produced sequence is
+//! token-exact equal to standard greedy decoding — speculative decoding
+//! "does not affect the content of the predicted sequence in any way".
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::draft::{extract_drafts, DraftConfig};
+use crate::vocab::{BOS_ID, EOS_ID};
+
+use super::{clip_draft, Backend, DecodeOutput, DecodeStats, DecoderRow, Hypothesis};
+
+/// Speculatively greedy-decode one query (batch size 1).
+pub fn spec_greedy<B: Backend>(
+    backend: &B,
+    src: &[i64],
+    cfg: &DraftConfig,
+) -> Result<DecodeOutput> {
+    let mut out = spec_greedy_batch(backend, &[src], cfg)?;
+    Ok(out.pop().unwrap())
+}
+
+/// Speculative greedy decoding over a batch of queries.
+///
+/// Every live query contributes `|drafts|` rows per call, so the effective
+/// batch is `Σ_live |drafts_i|` — the §3.3 "effective batch inflation".
+/// The number of calls is set by the least-lucky sequence: rows for
+/// finished queries are dropped, but a call happens while any query lives.
+pub fn spec_greedy_batch<B: Backend>(
+    backend: &B,
+    srcs: &[&[i64]],
+    cfg: &DraftConfig,
+) -> Result<Vec<DecodeOutput>> {
+    let t0 = Instant::now();
+    let dims = backend.dims();
+    let memory = backend.encode(srcs)?;
+    let mut stats = DecodeStats {
+        encoder_calls: 1,
+        ..Default::default()
+    };
+
+    let n = srcs.len();
+    // Drafts come from the query *without* its BOS/EOS wrapping.
+    let drafts: Vec<Vec<Vec<i64>>> = srcs
+        .iter()
+        .map(|s| {
+            let inner: Vec<i64> = s
+                .iter()
+                .copied()
+                .filter(|&t| t != BOS_ID && t != EOS_ID)
+                .collect();
+            extract_drafts(&inner, cfg)
+        })
+        .collect();
+
+    let mut prefixes: Vec<Vec<i64>> = vec![vec![BOS_ID]; n];
+    let mut scores = vec![0f64; n];
+    let mut done = vec![false; n];
+    let mut accepted_total = vec![0usize; n];
+
+    while !done.iter().all(|&d| d) {
+        // Assemble rows: prefix ‖ draft for every draft of every live query.
+        let mut rows: Vec<DecoderRow> = Vec::new();
+        // (query, draft_clipped_len) per row, for result mapping.
+        let mut row_meta: Vec<(usize, usize)> = Vec::new();
+        for q in 0..n {
+            if done[q] {
+                continue;
+            }
+            for d in &drafts[q] {
+                let clipped = clip_draft(d, prefixes[q].len(), dims.t_len);
+                let mut tokens = prefixes[q].clone();
+                tokens.extend_from_slice(clipped);
+                rows.push(DecoderRow {
+                    tokens,
+                    mem_row: q,
+                });
+                row_meta.push((q, clipped.len()));
+            }
+        }
+        if rows.is_empty() {
+            break;
+        }
+        let lp = backend.decode(&rows, &memory)?;
+        stats.decoder_calls += 1;
+        stats.decoder_rows += rows.len();
+
+        // For each live query pick the row with the most accepted tokens.
+        let mut best: Vec<Option<(usize, usize)>> = vec![None; n]; // (row, k)
+        for (r, &(q, dlen)) in row_meta.iter().enumerate() {
+            let p = prefixes[q].len();
+            let mut k = 0usize;
+            while k < dlen {
+                let predicted = lp.argmax(r, p - 1 + k);
+                if predicted != rows[r].tokens[p + k] {
+                    break;
+                }
+                k += 1;
+            }
+            match best[q] {
+                Some((_, bk)) if bk >= k => {}
+                _ => best[q] = Some((r, k)),
+            }
+        }
+
+        for q in 0..n {
+            let Some((r, k)) = best[q] else { continue };
+            let p = prefixes[q].len();
+            // Emit the k accepted draft tokens, then the fresh argmax after
+            // them. Stop early if EOS shows up anywhere in the run.
+            let mut emitted: Vec<i64> = rows[r].tokens[p..p + k].to_vec();
+            let fresh = lp.argmax(r, p - 1 + k);
+            emitted.push(fresh);
+            let mut n_accepted = 0usize;
+            for (idx, &tok) in emitted.iter().enumerate() {
+                scores[q] += lp.logp(r, p - 1 + idx, tok) as f64;
+                prefixes[q].push(tok);
+                stats.acceptance.total_tokens += 1;
+                if tok == EOS_ID {
+                    done[q] = true;
+                    break;
+                }
+                if idx < k {
+                    n_accepted += 1;
+                    stats.acceptance.accepted_draft_tokens += 1;
+                }
+                if prefixes[q].len() >= dims.t_len {
+                    done[q] = true;
+                    break;
+                }
+            }
+            accepted_total[q] += n_accepted;
+        }
+    }
+
+    let wall = t0.elapsed();
+    Ok((0..n)
+        .map(|q| {
+            let mut tokens: Vec<i64> = prefixes[q][1..].to_vec();
+            if let Some(pos) = tokens.iter().position(|&t| t == EOS_ID) {
+                tokens.truncate(pos);
+            }
+            let mut s = DecodeStats {
+                wall: wall / n as u32,
+                ..stats
+            };
+            s.acceptance.total_tokens = tokens.len() + 1; // incl. EOS step
+            s.acceptance.accepted_draft_tokens = accepted_total[q];
+            DecodeOutput {
+                hyps: vec![Hypothesis {
+                    tokens,
+                    score: scores[q],
+                }],
+                stats: s,
+            }
+        })
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::decoding::greedy;
+    use crate::testutil::{random_wrapped_src, CopyModel, HashModel};
+    use crate::rng::Rng;
+
+    /// THE core invariant (paper §2.1): speculative decoding does not
+    /// change the produced sequence in any way.
+    #[test]
+    fn prop_spec_greedy_token_exact_vs_greedy_hash_model() {
+        let mut rng = Rng::new(0xC0FFEE);
+        for case in 0..30 {
+            let m = HashModel::new(64, 64, 32, case);
+            let src = random_wrapped_src(&mut rng, 4, 20, 32);
+            let g = greedy(&m, &src).unwrap();
+            for dl in [0usize, 2, 4, 10] {
+                let s = spec_greedy(&m, &src, &DraftConfig::new(dl)).unwrap();
+                assert_eq!(
+                    s.hyps[0].tokens, g.hyps[0].tokens,
+                    "case {case} dl {dl}: speculative output diverged"
+                );
+                assert!(
+                    s.stats.decoder_calls <= g.stats.decoder_calls,
+                    "speculative used more calls than greedy"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn copy_model_accepts_most_draft_tokens() {
+        // CopyModel's target literally contains source substrings, so with
+        // reasonable DL the acceptance rate should be high and calls should
+        // drop well below the token count.
+        let m = CopyModel::new(96, 96, 40);
+        let src = vec![
+            BOS_ID, 10, 11, 12, 13, 14, 15, 16, 17, 18, 19, 20, 21, 22, 23, EOS_ID,
+        ];
+        let g = greedy(&m, &src).unwrap();
+        let s = spec_greedy(&m, &src, &DraftConfig::new(6)).unwrap();
+        assert_eq!(s.hyps[0].tokens, g.hyps[0].tokens);
+        assert!(
+            s.stats.decoder_calls * 2 <= g.stats.decoder_calls,
+            "expected ≥2x fewer calls: {} vs {}",
+            s.stats.decoder_calls,
+            g.stats.decoder_calls
+        );
+        assert!(s.stats.acceptance.rate() > 0.5, "rate {}", s.stats.acceptance.rate());
+    }
+
+    #[test]
+    fn dl_zero_is_plain_greedy_in_calls_and_tokens() {
+        let m = CopyModel::new(96, 96, 40);
+        let src = vec![BOS_ID, 10, 11, 12, 13, EOS_ID];
+        let g = greedy(&m, &src).unwrap();
+        let s = spec_greedy(&m, &src, &DraftConfig::new(0)).unwrap();
+        assert_eq!(s.hyps[0].tokens, g.hyps[0].tokens);
+        assert_eq!(s.stats.decoder_calls, g.stats.decoder_calls);
+        assert_eq!(s.stats.acceptance.accepted_draft_tokens, 0);
+    }
+
+    #[test]
+    fn batch_spec_matches_singles() {
+        let m = HashModel::new(64, 64, 32, 7);
+        let mut rng = Rng::new(5);
+        let a = random_wrapped_src(&mut rng, 6, 18, 32);
+        let b = random_wrapped_src(&mut rng, 6, 18, 32);
+        let cfg = DraftConfig::new(4);
+        let batch = spec_greedy_batch(&m, &[&a, &b], &cfg).unwrap();
+        let sa = spec_greedy(&m, &a, &cfg).unwrap();
+        let sb = spec_greedy(&m, &b, &cfg).unwrap();
+        assert_eq!(batch[0].hyps[0].tokens, sa.hyps[0].tokens);
+        assert_eq!(batch[1].hyps[0].tokens, sb.hyps[0].tokens);
+    }
+
+    #[test]
+    fn scores_match_greedy_scores() {
+        let m = HashModel::new(64, 64, 32, 3);
+        let mut rng = Rng::new(9);
+        let src = random_wrapped_src(&mut rng, 8, 16, 32);
+        let g = greedy(&m, &src).unwrap();
+        let s = spec_greedy(&m, &src, &DraftConfig::new(5)).unwrap();
+        assert!(
+            (g.hyps[0].score - s.hyps[0].score).abs() < 1e-5,
+            "{} vs {}",
+            g.hyps[0].score,
+            s.hyps[0].score
+        );
+    }
+}

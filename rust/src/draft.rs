@@ -1,0 +1,208 @@
+//! Draft construction for speculative decoding.
+//!
+//! The paper's drafting strategy (§2.1, Figure 2): before generating the
+//! target, slice the *tokenized query SMILES* with a sliding window of the
+//! chosen draft length and stride 1, and use those subsequences as draft
+//! continuations. Reactions leave large molecule fragments untouched, so
+//! these copies have a high acceptance rate (~79% reported).
+//!
+//! Only the first `max_drafts` (the paper's `N_d ≈ 25`, Appendix B) are
+//! kept, to bound the effective-batch inflation described in §3.3.
+
+use crate::vocab::BOS_ID;
+
+/// Configuration for query-copy draft extraction.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct DraftConfig {
+    /// Sliding-window length (the paper's DL). `0` means "no usable
+    /// drafts": a single never-accepted BOS draft, which reduces
+    /// speculative decoding to the standard procedure (§3.2, "SBS, DL=0").
+    pub draft_len: usize,
+    /// Cap on the number of drafts kept (`N_d`).
+    pub max_drafts: usize,
+    /// Also include windows dilated by one token (the §3.1 suggestion for
+    /// pushing the acceptance rate higher). Off by default.
+    pub dilated: bool,
+    /// Drop duplicate windows. The paper's listing keeps duplicates; we
+    /// dedup by default since identical drafts waste effective batch.
+    pub dedup: bool,
+}
+
+impl DraftConfig {
+    pub fn new(draft_len: usize) -> Self {
+        DraftConfig {
+            draft_len,
+            max_drafts: 25,
+            dilated: false,
+            dedup: true,
+        }
+    }
+}
+
+/// Extract draft sequences from a tokenized query.
+///
+/// Returns at least one draft: when `draft_len == 0` or the query is too
+/// short for a full window, the fallback is a single `[BOS]` draft that the
+/// model can never accept (BOS never follows another token in training),
+/// reducing the speculative algorithms to their standard counterparts.
+pub fn extract_drafts(query: &[i64], cfg: &DraftConfig) -> Vec<Vec<i64>> {
+    let dl = cfg.draft_len;
+    if dl == 0 || query.len() < dl {
+        return vec![vec![BOS_ID]];
+    }
+    let mut drafts: Vec<Vec<i64>> = Vec::new();
+    let push = |w: Vec<i64>, drafts: &mut Vec<Vec<i64>>| {
+        if drafts.len() >= cfg.max_drafts {
+            return;
+        }
+        if cfg.dedup && drafts.contains(&w) {
+            return;
+        }
+        drafts.push(w);
+    };
+    for start in 0..=(query.len() - dl) {
+        push(query[start..start + dl].to_vec(), &mut drafts);
+    }
+    if cfg.dilated {
+        // Windows that skip one token: cover deletions of a single token
+        // between reactant and product strings.
+        for start in 0..query.len().saturating_sub(dl) {
+            let w: Vec<i64> = query[start..=start + dl]
+                .iter()
+                .enumerate()
+                .filter(|(i, _)| *i != dl / 2)
+                .map(|(_, &t)| t)
+                .collect();
+            push(w, &mut drafts);
+        }
+    }
+    if drafts.is_empty() {
+        return vec![vec![BOS_ID]];
+    }
+    drafts
+}
+
+/// Running acceptance statistics for one or more decodes (the paper's
+/// "acceptance rate": accepted draft tokens / total generated tokens).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct Acceptance {
+    pub accepted_draft_tokens: usize,
+    pub total_tokens: usize,
+}
+
+impl Acceptance {
+    pub fn rate(&self) -> f64 {
+        if self.total_tokens == 0 {
+            0.0
+        } else {
+            self.accepted_draft_tokens as f64 / self.total_tokens as f64
+        }
+    }
+
+    pub fn merge(&mut self, other: &Acceptance) {
+        self.accepted_draft_tokens += other.accepted_draft_tokens;
+        self.total_tokens += other.total_tokens;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn q(n: usize) -> Vec<i64> {
+        (10..10 + n as i64).collect()
+    }
+
+    #[test]
+    fn sliding_window_stride_one() {
+        let cfg = DraftConfig {
+            max_drafts: 100,
+            ..DraftConfig::new(4)
+        };
+        let drafts = extract_drafts(&q(6), &cfg);
+        assert_eq!(
+            drafts,
+            vec![
+                vec![10, 11, 12, 13],
+                vec![11, 12, 13, 14],
+                vec![12, 13, 14, 15],
+            ]
+        );
+    }
+
+    #[test]
+    fn figure2_draft_count() {
+        // A 57-token query with DL=4 yields 54 stride-1 windows.
+        let cfg = DraftConfig {
+            max_drafts: usize::MAX,
+            dedup: false,
+            ..DraftConfig::new(4)
+        };
+        let drafts = extract_drafts(&q(57), &cfg);
+        assert_eq!(drafts.len(), 54);
+    }
+
+    #[test]
+    fn max_drafts_cap_applies() {
+        let cfg = DraftConfig::new(4); // cap 25
+        let drafts = extract_drafts(&q(100), &cfg);
+        assert_eq!(drafts.len(), 25);
+    }
+
+    #[test]
+    fn draft_len_zero_gives_bos_sentinel() {
+        let drafts = extract_drafts(&q(20), &DraftConfig::new(0));
+        assert_eq!(drafts, vec![vec![BOS_ID]]);
+    }
+
+    #[test]
+    fn short_query_gives_bos_sentinel() {
+        let drafts = extract_drafts(&q(3), &DraftConfig::new(10));
+        assert_eq!(drafts, vec![vec![BOS_ID]]);
+    }
+
+    #[test]
+    fn dedup_removes_repeated_windows() {
+        let query = vec![5, 5, 5, 5, 5, 5];
+        let with = extract_drafts(&query, &DraftConfig::new(3));
+        assert_eq!(with.len(), 1);
+        let without = extract_drafts(
+            &query,
+            &DraftConfig {
+                dedup: false,
+                ..DraftConfig::new(3)
+            },
+        );
+        assert_eq!(without.len(), 4);
+    }
+
+    #[test]
+    fn dilated_adds_skip_windows() {
+        let cfg = DraftConfig {
+            dilated: true,
+            max_drafts: 100,
+            ..DraftConfig::new(2)
+        };
+        let drafts = extract_drafts(&q(4), &cfg);
+        // plain windows: [10,11],[11,12],[12,13]; dilated (skip middle of
+        // each 3-window): [10,12],[11,13]
+        assert!(drafts.contains(&vec![10, 12]));
+        assert!(drafts.contains(&vec![11, 13]));
+        assert_eq!(drafts.len(), 5);
+    }
+
+    #[test]
+    fn acceptance_rate_math() {
+        let mut a = Acceptance::default();
+        a.merge(&Acceptance {
+            accepted_draft_tokens: 39,
+            total_tokens: 50,
+        });
+        assert!((a.rate() - 0.78).abs() < 1e-12);
+        a.merge(&Acceptance {
+            accepted_draft_tokens: 0,
+            total_tokens: 0,
+        });
+        assert!((a.rate() - 0.78).abs() < 1e-12);
+    }
+}

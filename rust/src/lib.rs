@@ -1,0 +1,30 @@
+//! # rxnspec
+//!
+//! A serving stack for SMILES-to-SMILES chemical reaction transformers with
+//! speculative decoding, reproducing *“Accelerating the inference of string
+//! generation-based chemical reaction models for industrial applications”*
+//! (Andronov et al., 2024).
+//!
+//! The stack has three layers (see `DESIGN.md`):
+//!
+//! * **L3 (this crate)** — the Rust coordinator: SMILES tokenization, draft
+//!   construction, greedy / speculative-greedy / beam / speculative-beam
+//!   decoding, a dynamic batcher and TCP serving front end, and the PJRT
+//!   runtime that executes AOT-compiled model artifacts. Python is never on
+//!   the request path.
+//! * **L2** — a JAX Molecular Transformer (`python/compile/model.py`),
+//!   trained at build time and lowered to HLO text artifacts.
+//! * **L1** — a Pallas fused-attention kernel (`python/compile/kernels/`)
+//!   called from L2, validated against a pure-jnp oracle.
+
+pub mod bench;
+pub mod chem;
+pub mod coordinator;
+pub mod decoding;
+pub mod draft;
+pub mod model;
+pub mod planner;
+pub mod rng;
+pub mod runtime;
+pub mod testutil;
+pub mod vocab;

@@ -1,0 +1,259 @@
+//! `rxnspec` — CLI entry point for the serving stack.
+//!
+//! Subcommands:
+//!   serve    run the TCP serving front end (the request path: artifacts
+//!            only, no Python)
+//!   predict  one-shot decode of a query SMILES
+//!   eval     top-N accuracy of a decoder on a test split (Tables 1 & 4)
+//!   parity   cross-implementation agreement, PJRT artifact vs pure-Rust
+//!            reference (the paper's Table 1 "original vs ours" check)
+//!
+//! Hand-rolled flag parsing: the offline crate set has no clap.
+
+use std::net::TcpListener;
+use std::path::PathBuf;
+use std::sync::atomic::AtomicBool;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use rxnspec::chem::read_split;
+use rxnspec::coordinator::{run_worker, serve, DecodeMode, Metrics, RequestQueue, ServerState};
+use rxnspec::decoding::{beam_search, greedy, sbs, spec_greedy, Backend, DecodeOutput, SbsConfig};
+use rxnspec::draft::DraftConfig;
+use rxnspec::runtime::AnyBackend;
+use rxnspec::vocab::Vocab;
+
+fn usage() -> ! {
+    eprintln!(
+        "rxnspec — speculative decoding for SMILES-to-SMILES reaction transformers
+
+USAGE:
+  rxnspec serve   [--task fwd|retro] [--backend pjrt|rust] [--artifacts DIR]
+                  [--data DIR] [--port N] [--batch-max N] [--batch-wait-ms N]
+  rxnspec predict --smiles SMILES [--decoder D] [--task ...] [--backend ...]
+  rxnspec eval    [--decoder D] [--limit N] [--task ...] [--backend ...]
+  rxnspec parity  [--limit N] [--task ...]
+
+  decoder D ∈ greedy | spec:<dl> | bs:<n> | sbs:<n>:<dl>   (default greedy)"
+    );
+    std::process::exit(2)
+}
+
+#[derive(Clone)]
+struct Opts {
+    task: String,
+    backend: String,
+    artifacts: PathBuf,
+    data: PathBuf,
+    decoder: String,
+    smiles: Option<String>,
+    limit: usize,
+    port: u16,
+    batch_max: usize,
+    batch_wait_ms: u64,
+}
+
+impl Default for Opts {
+    fn default() -> Self {
+        Opts {
+            task: "fwd".into(),
+            backend: "pjrt".into(),
+            artifacts: "artifacts".into(),
+            data: "data".into(),
+            decoder: "greedy".into(),
+            smiles: None,
+            limit: 200,
+            port: 7878,
+            batch_max: 32,
+            batch_wait_ms: 5,
+        }
+    }
+}
+
+fn parse_opts(args: &[String]) -> Opts {
+    let mut o = Opts::default();
+    let mut i = 0;
+    while i < args.len() {
+        let need = |i: usize| -> String { args.get(i + 1).cloned().unwrap_or_else(|| usage()) };
+        match args[i].as_str() {
+            "--task" => o.task = need(i),
+            "--backend" => o.backend = need(i),
+            "--artifacts" => o.artifacts = PathBuf::from(need(i)),
+            "--data" => o.data = PathBuf::from(need(i)),
+            "--decoder" => o.decoder = need(i),
+            "--smiles" => o.smiles = Some(need(i)),
+            "--limit" => o.limit = need(i).parse().unwrap_or_else(|_| usage()),
+            "--port" => o.port = need(i).parse().unwrap_or_else(|_| usage()),
+            "--batch-max" => o.batch_max = need(i).parse().unwrap_or_else(|_| usage()),
+            "--batch-wait-ms" => o.batch_wait_ms = need(i).parse().unwrap_or_else(|_| usage()),
+            _ => usage(),
+        }
+        i += 2;
+    }
+    o
+}
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = args.first() else { usage() };
+    let opts = parse_opts(&args[1..]);
+    match cmd.as_str() {
+        "serve" => cmd_serve(opts),
+        "predict" => cmd_predict(opts),
+        "eval" => cmd_eval(opts),
+        "parity" => cmd_parity(opts),
+        _ => usage(),
+    }
+}
+
+fn load_vocab(opts: &Opts) -> Result<Vocab> {
+    Vocab::load(&opts.data.join("vocab.txt")).context("load vocab (run gen-data)")
+}
+
+fn cmd_serve(opts: Opts) -> Result<()> {
+    let vocab = load_vocab(&opts)?;
+    let backend = AnyBackend::load(&opts.backend, &opts.artifacts, &opts.task)?;
+    eprintln!("precompiling artifacts...");
+    backend.precompile()?;
+    let state = Arc::new(ServerState {
+        queue: RequestQueue::new(opts.batch_max, Duration::from_millis(opts.batch_wait_ms)),
+        metrics: Arc::new(Metrics::default()),
+        shutdown: AtomicBool::new(false),
+    });
+    let listener = TcpListener::bind(("0.0.0.0", opts.port))?;
+    eprintln!(
+        "rxnspec serving task={} backend={} on port {} (batch_max={}, wait={}ms)",
+        opts.task, opts.backend, opts.port, opts.batch_max, opts.batch_wait_ms
+    );
+    let accept_state = Arc::clone(&state);
+    let accept = std::thread::spawn(move || serve(listener, accept_state));
+    run_worker(&backend, &vocab, &state.queue, &state.metrics);
+    let _ = accept.join();
+    Ok(())
+}
+
+fn decode_one<B: Backend>(
+    backend: &B,
+    src: &[i64],
+    mode: DecodeMode,
+) -> Result<DecodeOutput> {
+    match mode {
+        DecodeMode::Greedy => greedy(backend, src),
+        DecodeMode::SpecGreedy { dl } => spec_greedy(backend, src, &DraftConfig::new(dl)),
+        DecodeMode::Beam { n } => beam_search(backend, src, n),
+        DecodeMode::Sbs { n, dl } => sbs(backend, src, &SbsConfig::new(n, dl)),
+    }
+}
+
+fn cmd_predict(opts: Opts) -> Result<()> {
+    let Some(smiles) = opts.smiles.clone() else {
+        bail!("predict needs --smiles")
+    };
+    let vocab = load_vocab(&opts)?;
+    let mode = DecodeMode::parse(&opts.decoder).context("bad --decoder")?;
+    let backend = AnyBackend::load(&opts.backend, &opts.artifacts, &opts.task)?;
+    let src = vocab.encode_wrapped(&smiles)?;
+    let t0 = Instant::now();
+    let out = decode_one(&backend, &src, mode)?;
+    let ms = t0.elapsed().as_secs_f64() * 1000.0;
+    println!(
+        "# {} in {ms:.1} ms, {} decoder calls, acceptance {:.1}%",
+        mode,
+        out.stats.decoder_calls,
+        out.stats.acceptance.rate() * 100.0
+    );
+    for (i, h) in out.hyps.iter().enumerate() {
+        println!("{}\t{:.4}\t{}", i + 1, h.score, vocab.decode(&h.tokens));
+    }
+    Ok(())
+}
+
+/// Top-N accuracy of a decoder over a test split — the measurements behind
+/// Tables 1 and 4.
+fn cmd_eval(opts: Opts) -> Result<()> {
+    let vocab = load_vocab(&opts)?;
+    let mode = DecodeMode::parse(&opts.decoder).context("bad --decoder")?;
+    let backend = AnyBackend::load(&opts.backend, &opts.artifacts, &opts.task)?;
+    let split = read_split(&opts.data.join(format!("{}_test.tsv", opts.task)))?;
+    let n_eval = split.len().min(opts.limit);
+    let top_n = match mode {
+        DecodeMode::Beam { n } | DecodeMode::Sbs { n, .. } => n,
+        _ => 1,
+    };
+    let mut hits = vec![0usize; top_n];
+    let mut calls = 0usize;
+    let t0 = Instant::now();
+    for (i, ex) in split[..n_eval].iter().enumerate() {
+        let src = vocab.encode_wrapped(&ex.src)?;
+        let out = decode_one(&backend, &src, mode)?;
+        calls += out.stats.decoder_calls;
+        for (rank, h) in out.hyps.iter().enumerate() {
+            if vocab.decode(&h.tokens) == ex.tgt {
+                for slot in hits[rank..].iter_mut() {
+                    *slot += 1;
+                }
+                break;
+            }
+        }
+        if (i + 1) % 50 == 0 {
+            eprintln!(
+                "  {}/{} top-1 {:.1}% ({:.1}s)",
+                i + 1,
+                n_eval,
+                hits[0] as f64 * 100.0 / (i + 1) as f64,
+                t0.elapsed().as_secs_f64()
+            );
+        }
+    }
+    println!(
+        "task={} decoder={} backend={} n={} wall={:.1}s decoder_calls={}",
+        opts.task,
+        mode,
+        opts.backend,
+        n_eval,
+        t0.elapsed().as_secs_f64(),
+        calls
+    );
+    for (rank, h) in hits.iter().enumerate() {
+        if rank == 0 || rank == 2 || rank == 4 || rank + 1 == top_n || rank == 9 {
+            println!("top-{}: {:.2}%", rank + 1, *h as f64 * 100.0 / n_eval as f64);
+        }
+    }
+    Ok(())
+}
+
+/// Table 1 analogue: agreement between the two independent implementations
+/// (PJRT artifact vs pure-Rust reference) on top-5 beam outputs.
+fn cmd_parity(opts: Opts) -> Result<()> {
+    let vocab = load_vocab(&opts)?;
+    let pjrt = AnyBackend::load("pjrt", &opts.artifacts, &opts.task)?;
+    let rust = AnyBackend::load("rust", &opts.artifacts, &opts.task)?;
+    let split = read_split(&opts.data.join(format!("{}_test.tsv", opts.task)))?;
+    let n_eval = split.len().min(opts.limit);
+    let mut top1_agree = 0usize;
+    let mut top5_overlap = 0usize;
+    let mut logp_max_diff = 0f64;
+    for ex in &split[..n_eval] {
+        let src = vocab.encode_wrapped(&ex.src)?;
+        let a = beam_search(&pjrt, &src, 5)?;
+        let b = beam_search(&rust, &src, 5)?;
+        if a.hyps[0].tokens == b.hyps[0].tokens {
+            top1_agree += 1;
+            logp_max_diff = logp_max_diff.max((a.hyps[0].score - b.hyps[0].score).abs());
+        }
+        let set_b: std::collections::HashSet<&Vec<i64>> =
+            b.hyps.iter().map(|h| &h.tokens).collect();
+        top5_overlap += a.hyps.iter().filter(|h| set_b.contains(&h.tokens)).count();
+    }
+    println!(
+        "parity task={} n={}: top-1 agreement {:.2}%, top-5 overlap {:.2}%, max |Δlogp| {:.2e}",
+        opts.task,
+        n_eval,
+        top1_agree as f64 * 100.0 / n_eval as f64,
+        top5_overlap as f64 * 100.0 / (5 * n_eval) as f64,
+        logp_max_diff
+    );
+    Ok(())
+}

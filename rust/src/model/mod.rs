@@ -1,0 +1,7 @@
+//! Model substrate: weights IO and the pure-Rust reference transformer.
+
+pub mod reference;
+pub mod weights;
+
+pub use reference::{Config, RustBackend};
+pub use weights::{load_config, Tensor, Weights};

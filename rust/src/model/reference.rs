@@ -1,0 +1,457 @@
+//! Pure-Rust reference implementation of the Molecular Transformer.
+//!
+//! Mirrors `python/compile/model.py` operation for operation (pre-LN
+//! encoder-decoder, sinusoidal encodings from explicit position ids,
+//! log-softmax outputs) over the same RXW1 weights file. It plays the role
+//! the OpenNMT "original MT" plays in the paper's Table 1: an independent
+//! implementation whose outputs the production path (the AOT artifact run
+//! by PJRT) is validated against. It also lets the entire decoding stack
+//! run and be tested without compiled artifacts.
+//!
+//! Numerical parity with the artifact is approximate (different reduction
+//! orders), ~1e-3 absolute on log-probs — enough for argmax/top-k
+//! agreement on all but pathological ties; `rust/tests/backend_parity.rs`
+//! quantifies it.
+//!
+//! The compute here is straightforward scalar code: the PJRT path is the
+//! performance story, this one is the oracle.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::decoding::{Backend, DecoderRow, LogProbs, Memory, ModelDims};
+use crate::model::weights::{load_config, Tensor, Weights};
+
+/// Model hyper-parameters (matches `ModelConfig` in model.py).
+#[derive(Debug, Clone, Copy)]
+pub struct Config {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub n_enc: usize,
+    pub n_dec: usize,
+    pub s_len: usize,
+    pub t_len: usize,
+}
+
+impl Config {
+    pub fn from_file(path: &Path) -> Result<Config> {
+        let kv = load_config(path)?;
+        let g = |k: &str| -> Result<usize> {
+            kv.get(k)
+                .copied()
+                .ok_or_else(|| anyhow::anyhow!("config missing {k}"))
+        };
+        Ok(Config {
+            vocab: g("vocab")?,
+            d_model: g("d_model")?,
+            n_heads: g("n_heads")?,
+            d_ff: g("d_ff")?,
+            n_enc: g("n_enc")?,
+            n_dec: g("n_dec")?,
+            s_len: g("s_len")?,
+            t_len: g("t_len")?,
+        })
+    }
+
+    pub fn d_head(&self) -> usize {
+        self.d_model / self.n_heads
+    }
+}
+
+const NEG_INF: f32 = -1e9;
+
+// ---------------------------------------------------------------------------
+// Small dense-algebra helpers (row-major [rows, cols] in flat Vec<f32>)
+// ---------------------------------------------------------------------------
+
+/// y[r,:] += x[r,:] @ w + b for all rows; x is [n, din], w [din, dout].
+fn linear(x: &[f32], n: usize, w: &Tensor, b: &Tensor) -> Vec<f32> {
+    let (din, dout) = (w.dims[0], w.dims[1]);
+    debug_assert_eq!(x.len(), n * din);
+    let mut y = vec![0f32; n * dout];
+    for r in 0..n {
+        let xr = &x[r * din..(r + 1) * din];
+        let yr = &mut y[r * dout..(r + 1) * dout];
+        yr.copy_from_slice(&b.data);
+        for (i, &xv) in xr.iter().enumerate() {
+            if xv == 0.0 {
+                continue;
+            }
+            let wrow = &w.data[i * dout..(i + 1) * dout];
+            for (o, &wv) in yr.iter_mut().zip(wrow) {
+                *o += xv * wv;
+            }
+        }
+    }
+    y
+}
+
+fn layer_norm(x: &mut [f32], n: usize, d: usize, g: &Tensor, b: &Tensor) {
+    for r in 0..n {
+        let row = &mut x[r * d..(r + 1) * d];
+        let mu: f32 = row.iter().sum::<f32>() / d as f32;
+        let var: f32 = row.iter().map(|v| (v - mu) * (v - mu)).sum::<f32>() / d as f32;
+        let inv = 1.0 / (var + 1e-5).sqrt();
+        for (i, v) in row.iter_mut().enumerate() {
+            *v = (*v - mu) * inv * g.data[i] + b.data[i];
+        }
+    }
+}
+
+fn layer_normed(x: &[f32], n: usize, d: usize, g: &Tensor, b: &Tensor) -> Vec<f32> {
+    let mut y = x.to_vec();
+    layer_norm(&mut y, n, d, g, b);
+    y
+}
+
+/// Sinusoidal positional encoding row for one position id.
+fn add_pe(row: &mut [f32], pos: i64, d: usize) {
+    let half = d / 2;
+    for i in 0..half {
+        let freq = (-(10000f32).ln() * (2.0 * i as f32 / d as f32)).exp();
+        let ang = pos as f32 * freq;
+        row[i] += ang.sin();
+        row[half + i] += ang.cos();
+    }
+}
+
+/// Multi-head attention: q rows attend to kv rows. `allow(i, j)` gates
+/// whether query i may attend key j (the additive-mask analogue).
+fn mha<F: Fn(usize, usize) -> bool>(
+    xq: &[f32],
+    nq: usize,
+    xkv: &[f32],
+    nk: usize,
+    p: &AttnParams,
+    n_heads: usize,
+    d_model: usize,
+    allow: F,
+) -> Vec<f32> {
+    let dh = d_model / n_heads;
+    let q = linear(xq, nq, &p.wq, &p.bq);
+    let k = linear(xkv, nk, &p.wk, &p.bk);
+    let v = linear(xkv, nk, &p.wv, &p.bv);
+    let scale = 1.0 / (dh as f32).sqrt();
+    let mut ctx = vec![0f32; nq * d_model];
+    let mut scores = vec![0f32; nk];
+    for h in 0..n_heads {
+        let off = h * dh;
+        for i in 0..nq {
+            let qi = &q[i * d_model + off..i * d_model + off + dh];
+            let mut mx = f32::NEG_INFINITY;
+            for j in 0..nk {
+                let s = if allow(i, j) {
+                    let kj = &k[j * d_model + off..j * d_model + off + dh];
+                    qi.iter().zip(kj).map(|(a, b)| a * b).sum::<f32>() * scale
+                } else {
+                    NEG_INF
+                };
+                scores[j] = s;
+                mx = mx.max(s);
+            }
+            let mut z = 0f32;
+            for s in scores[..nk].iter_mut() {
+                *s = (*s - mx).exp();
+                z += *s;
+            }
+            let inv = 1.0 / z;
+            let ci = &mut ctx[i * d_model + off..i * d_model + off + dh];
+            for j in 0..nk {
+                let w = scores[j] * inv;
+                if w == 0.0 {
+                    continue;
+                }
+                let vj = &v[j * d_model + off..j * d_model + off + dh];
+                for (c, &vv) in ci.iter_mut().zip(vj) {
+                    *c += w * vv;
+                }
+            }
+        }
+    }
+    linear(&ctx, nq, &p.wo, &p.bo)
+}
+
+fn add_assign(x: &mut [f32], y: &[f32]) {
+    for (a, b) in x.iter_mut().zip(y) {
+        *a += b;
+    }
+}
+
+fn relu(x: &mut [f32]) {
+    for v in x.iter_mut() {
+        if *v < 0.0 {
+            *v = 0.0;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Parameter bundles
+// ---------------------------------------------------------------------------
+
+struct AttnParams {
+    wq: Tensor,
+    wk: Tensor,
+    wv: Tensor,
+    wo: Tensor,
+    bq: Tensor,
+    bk: Tensor,
+    bv: Tensor,
+    bo: Tensor,
+}
+
+struct FfnParams {
+    w1: Tensor,
+    b1: Tensor,
+    w2: Tensor,
+    b2: Tensor,
+}
+
+struct LnParams {
+    g: Tensor,
+    b: Tensor,
+}
+
+struct EncLayer {
+    ln1: LnParams,
+    attn: AttnParams,
+    ln2: LnParams,
+    ffn: FfnParams,
+}
+
+struct DecLayer {
+    ln1: LnParams,
+    self_attn: AttnParams,
+    ln2: LnParams,
+    cross_attn: AttnParams,
+    ln3: LnParams,
+    ffn: FfnParams,
+}
+
+fn attn_params(w: &Weights, prefix: &str) -> Result<AttnParams> {
+    Ok(AttnParams {
+        wq: w.get(&format!("{prefix}.wq"))?.clone(),
+        wk: w.get(&format!("{prefix}.wk"))?.clone(),
+        wv: w.get(&format!("{prefix}.wv"))?.clone(),
+        wo: w.get(&format!("{prefix}.wo"))?.clone(),
+        bq: w.get(&format!("{prefix}.bq"))?.clone(),
+        bk: w.get(&format!("{prefix}.bk"))?.clone(),
+        bv: w.get(&format!("{prefix}.bv"))?.clone(),
+        bo: w.get(&format!("{prefix}.bo"))?.clone(),
+    })
+}
+
+fn ffn_params(w: &Weights, prefix: &str) -> Result<FfnParams> {
+    Ok(FfnParams {
+        w1: w.get(&format!("{prefix}.w1"))?.clone(),
+        b1: w.get(&format!("{prefix}.b1"))?.clone(),
+        w2: w.get(&format!("{prefix}.w2"))?.clone(),
+        b2: w.get(&format!("{prefix}.b2"))?.clone(),
+    })
+}
+
+fn ln_params(w: &Weights, prefix: &str) -> Result<LnParams> {
+    Ok(LnParams {
+        g: w.get(&format!("{prefix}.g"))?.clone(),
+        b: w.get(&format!("{prefix}.b"))?.clone(),
+    })
+}
+
+/// The reference backend: weights + config, implements [`Backend`].
+pub struct RustBackend {
+    cfg: Config,
+    tok_emb: Tensor,
+    out_w: Tensor,
+    out_b: Tensor,
+    enc_ln_f: LnParams,
+    dec_ln_f: LnParams,
+    enc: Vec<EncLayer>,
+    dec: Vec<DecLayer>,
+}
+
+impl RustBackend {
+    /// Load from `artifacts/weights_{task}.bin` + `config_{task}.txt`.
+    pub fn load(weights_path: &Path, config_path: &Path) -> Result<RustBackend> {
+        let cfg = Config::from_file(config_path)?;
+        let w = Weights::load(weights_path)?;
+        Self::from_weights(&w, cfg)
+    }
+
+    pub fn from_weights(w: &Weights, cfg: Config) -> Result<RustBackend> {
+        let mut enc = Vec::new();
+        for i in 0..cfg.n_enc {
+            enc.push(EncLayer {
+                ln1: ln_params(w, &format!("enc{i}.ln1"))?,
+                attn: attn_params(w, &format!("enc{i}.attn"))?,
+                ln2: ln_params(w, &format!("enc{i}.ln2"))?,
+                ffn: ffn_params(w, &format!("enc{i}.ffn"))?,
+            });
+        }
+        let mut dec = Vec::new();
+        for i in 0..cfg.n_dec {
+            dec.push(DecLayer {
+                ln1: ln_params(w, &format!("dec{i}.ln1"))?,
+                self_attn: attn_params(w, &format!("dec{i}.self_attn"))?,
+                ln2: ln_params(w, &format!("dec{i}.ln2"))?,
+                cross_attn: attn_params(w, &format!("dec{i}.cross_attn"))?,
+                ln3: ln_params(w, &format!("dec{i}.ln3"))?,
+                ffn: ffn_params(w, &format!("dec{i}.ffn"))?,
+            });
+        }
+        Ok(RustBackend {
+            cfg,
+            tok_emb: w.get("tok_emb")?.clone(),
+            out_w: w.get("out_w")?.clone(),
+            out_b: w.get("out_b")?.clone(),
+            enc_ln_f: ln_params(w, "enc_ln_f")?,
+            dec_ln_f: ln_params(w, "dec_ln_f")?,
+            enc,
+            dec,
+        })
+    }
+
+    pub fn config(&self) -> Config {
+        self.cfg
+    }
+
+    fn embed(&self, tokens: &[i64], positions: &[i64]) -> Vec<f32> {
+        let d = self.cfg.d_model;
+        let scale = (d as f32).sqrt();
+        let mut x = vec![0f32; tokens.len() * d];
+        for (i, &t) in tokens.iter().enumerate() {
+            let row = &mut x[i * d..(i + 1) * d];
+            let emb = &self.tok_emb.data[t as usize * d..(t as usize + 1) * d];
+            for (o, &e) in row.iter_mut().zip(emb) {
+                *o = e * scale;
+            }
+            add_pe(row, positions[i], d);
+        }
+        x
+    }
+}
+
+impl Backend for RustBackend {
+    fn dims(&self) -> ModelDims {
+        ModelDims {
+            s_len: self.cfg.s_len,
+            t_len: self.cfg.t_len,
+            d_model: self.cfg.d_model,
+            vocab: self.cfg.vocab,
+        }
+    }
+
+    fn encode(&self, srcs: &[&[i64]]) -> Result<Memory> {
+        let (s_len, d) = (self.cfg.s_len, self.cfg.d_model);
+        let mut data = vec![0f32; srcs.len() * s_len * d];
+        let mut pad = vec![0f32; srcs.len() * s_len];
+        for (bi, src) in srcs.iter().enumerate() {
+            let n = src.len();
+            anyhow::ensure!(n <= s_len, "src length {n} exceeds bucket {s_len}");
+            let positions: Vec<i64> = (0..n as i64).collect();
+            let mut x = self.embed(src, &positions);
+            for layer in &self.enc {
+                let h = layer_normed(&x, n, d, &layer.ln1.g, &layer.ln1.b);
+                let a = mha(
+                    &h,
+                    n,
+                    &h,
+                    n,
+                    &layer.attn,
+                    self.cfg.n_heads,
+                    d,
+                    |_, _| true, // compact rows: no pad keys exist
+                );
+                add_assign(&mut x, &a);
+                let h = layer_normed(&x, n, d, &layer.ln2.g, &layer.ln2.b);
+                let mut f = linear(&h, n, &layer.ffn.w1, &layer.ffn.b1);
+                relu(&mut f);
+                let f = linear(&f, n, &layer.ffn.w2, &layer.ffn.b2);
+                add_assign(&mut x, &f);
+            }
+            layer_norm(&mut x, n, d, &self.enc_ln_f.g, &self.enc_ln_f.b);
+            data[bi * s_len * d..bi * s_len * d + n * d].copy_from_slice(&x);
+            for p in pad[bi * s_len..bi * s_len + n].iter_mut() {
+                *p = 1.0;
+            }
+        }
+        Ok(Memory {
+            data,
+            pad,
+            batch: srcs.len(),
+            s_len,
+            d_model: d,
+        })
+    }
+
+    fn decode(&self, rows: &[DecoderRow], memory: &Memory) -> Result<LogProbs> {
+        let (t_len, d, v) = (self.cfg.t_len, self.cfg.d_model, self.cfg.vocab);
+        let mut out = vec![0f32; rows.len() * t_len * v];
+        let mut lens = Vec::with_capacity(rows.len());
+        for (ri, row) in rows.iter().enumerate() {
+            let n = row.tokens.len();
+            anyhow::ensure!(n <= t_len, "row length {n} exceeds bucket {t_len}");
+            lens.push(n);
+            // Compact computation: pad columns contribute nothing (their
+            // keys are masked, their queries unread), so we evaluate only
+            // the n real positions with positions 0..n — numerically equal
+            // to the padded layouts (see test_model.py's left-pad test).
+            let positions: Vec<i64> = (0..n as i64).collect();
+            let mut x = self.embed(&row.tokens, &positions);
+
+            // Memory row: compact to its real length.
+            let mem_pad = memory.pad_row(row.mem_row);
+            let mem_n = mem_pad.iter().take_while(|&&p| p > 0.0).count();
+            let mem = &memory.row(row.mem_row)[..mem_n * d];
+
+            for layer in &self.dec {
+                let h = layer_normed(&x, n, d, &layer.ln1.g, &layer.ln1.b);
+                let a = mha(
+                    &h,
+                    n,
+                    &h,
+                    n,
+                    &layer.self_attn,
+                    self.cfg.n_heads,
+                    d,
+                    |i, j| j <= i, // causal
+                );
+                add_assign(&mut x, &a);
+                let h = layer_normed(&x, n, d, &layer.ln2.g, &layer.ln2.b);
+                let a = mha(
+                    &h,
+                    n,
+                    mem,
+                    mem_n,
+                    &layer.cross_attn,
+                    self.cfg.n_heads,
+                    d,
+                    |_, _| true,
+                );
+                add_assign(&mut x, &a);
+                let h = layer_normed(&x, n, d, &layer.ln3.g, &layer.ln3.b);
+                let mut f = linear(&h, n, &layer.ffn.w1, &layer.ffn.b1);
+                relu(&mut f);
+                let f = linear(&f, n, &layer.ffn.w2, &layer.ffn.b2);
+                add_assign(&mut x, &f);
+            }
+            layer_norm(&mut x, n, d, &self.dec_ln_f.g, &self.dec_ln_f.b);
+            let logits = linear(&x, n, &self.out_w, &self.out_b);
+            // log_softmax per position, written right-aligned into [T, V].
+            let base = ri * t_len * v + (t_len - n) * v;
+            for i in 0..n {
+                let lrow = &logits[i * v..(i + 1) * v];
+                let mx = lrow.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+                let z: f32 = lrow.iter().map(|&l| (l - mx).exp()).sum();
+                let lz = mx + z.ln();
+                let orow = &mut out[base + i * v..base + (i + 1) * v];
+                for (o, &l) in orow.iter_mut().zip(lrow) {
+                    *o = l - lz;
+                }
+            }
+        }
+        Ok(LogProbs::new(out, lens, t_len, v))
+    }
+}

@@ -1,0 +1,188 @@
+//! RXW1 weights file reader (writer lives in `python/compile/weights_io.py`).
+//!
+//! Layout (little-endian): magic `RXW1`, u32 tensor count, then per tensor
+//! `u32 name_len, name, u32 ndim, u32 dims…, u8 dtype (0 = f32), raw f32`.
+//! Keys are dotted paths (`dec0.ffn.w1`), sorted, deterministic.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+/// One named tensor: row-major f32 data plus its shape.
+#[derive(Debug, Clone)]
+pub struct Tensor {
+    pub dims: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn numel(&self) -> usize {
+        self.dims.iter().product()
+    }
+
+    /// 2-D accessor (row-major).
+    pub fn at2(&self, i: usize, j: usize) -> f32 {
+        debug_assert_eq!(self.dims.len(), 2);
+        self.data[i * self.dims[1] + j]
+    }
+}
+
+/// All tensors of one checkpoint, by dotted name.
+#[derive(Debug, Clone)]
+pub struct Weights {
+    tensors: HashMap<String, Tensor>,
+}
+
+impl Weights {
+    pub fn load(path: &Path) -> Result<Weights> {
+        let data = std::fs::read(path).with_context(|| format!("read {}", path.display()))?;
+        if data.len() < 8 || &data[0..4] != b"RXW1" {
+            bail!("{}: not an RXW1 weights file", path.display());
+        }
+        let mut off = 4usize;
+        let rd_u32 = |data: &[u8], off: &mut usize| -> Result<u32> {
+            if *off + 4 > data.len() {
+                bail!("truncated weights file");
+            }
+            let v = u32::from_le_bytes(data[*off..*off + 4].try_into().unwrap());
+            *off += 4;
+            Ok(v)
+        };
+        let count = rd_u32(&data, &mut off)?;
+        let mut tensors = HashMap::with_capacity(count as usize);
+        for _ in 0..count {
+            let nlen = rd_u32(&data, &mut off)? as usize;
+            let name = String::from_utf8(data[off..off + nlen].to_vec())?;
+            off += nlen;
+            let ndim = rd_u32(&data, &mut off)? as usize;
+            let mut dims = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                dims.push(rd_u32(&data, &mut off)? as usize);
+            }
+            if off >= data.len() {
+                bail!("truncated weights file at {name}");
+            }
+            let dtype = data[off];
+            off += 1;
+            if dtype != 0 {
+                bail!("{name}: unsupported dtype {dtype}");
+            }
+            let n: usize = dims.iter().product();
+            if off + 4 * n > data.len() {
+                bail!("truncated tensor data for {name}");
+            }
+            let mut values = Vec::with_capacity(n);
+            for i in 0..n {
+                let b = &data[off + 4 * i..off + 4 * i + 4];
+                values.push(f32::from_le_bytes(b.try_into().unwrap()));
+            }
+            off += 4 * n;
+            tensors.insert(name, Tensor { dims, data: values });
+        }
+        Ok(Weights { tensors })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Tensor> {
+        self.tensors
+            .get(name)
+            .with_context(|| format!("missing tensor {name}"))
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        let mut v: Vec<&str> = self.tensors.keys().map(|s| s.as_str()).collect();
+        v.sort();
+        v
+    }
+
+    pub fn len(&self) -> usize {
+        self.tensors.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tensors.is_empty()
+    }
+}
+
+/// `config_{task}.txt` reader: `key=value` lines (see weights_io.py).
+pub fn load_config(path: &Path) -> Result<HashMap<String, usize>> {
+    let body =
+        std::fs::read_to_string(path).with_context(|| format!("read {}", path.display()))?;
+    let mut out = HashMap::new();
+    for line in body.lines() {
+        if line.is_empty() {
+            continue;
+        }
+        let (k, v) = line
+            .split_once('=')
+            .with_context(|| format!("bad config line {line:?}"))?;
+        out.insert(k.to_string(), v.parse()?);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn write_rxw1(path: &Path, tensors: &[(&str, Vec<usize>, Vec<f32>)]) {
+        let mut buf: Vec<u8> = b"RXW1".to_vec();
+        buf.extend((tensors.len() as u32).to_le_bytes());
+        for (name, dims, data) in tensors {
+            buf.extend((name.len() as u32).to_le_bytes());
+            buf.extend(name.as_bytes());
+            buf.extend((dims.len() as u32).to_le_bytes());
+            for d in dims {
+                buf.extend((*d as u32).to_le_bytes());
+            }
+            buf.push(0u8);
+            for v in data {
+                buf.extend(v.to_le_bytes());
+            }
+        }
+        let mut f = std::fs::File::create(path).unwrap();
+        f.write_all(&buf).unwrap();
+    }
+
+    #[test]
+    fn roundtrip_read() {
+        let dir = std::env::temp_dir().join("rxnspec_weights_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("w.bin");
+        write_rxw1(
+            &p,
+            &[
+                ("a.b", vec![2, 3], (0..6).map(|x| x as f32).collect()),
+                ("c", vec![2], vec![1.5, -2.5]),
+            ],
+        );
+        let w = Weights::load(&p).unwrap();
+        assert_eq!(w.len(), 2);
+        let t = w.get("a.b").unwrap();
+        assert_eq!(t.dims, vec![2, 3]);
+        assert_eq!(t.at2(1, 2), 5.0);
+        assert_eq!(w.get("c").unwrap().data, vec![1.5, -2.5]);
+        assert!(w.get("nope").is_err());
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let dir = std::env::temp_dir().join("rxnspec_weights_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("bad.bin");
+        std::fs::write(&p, b"NOPE....").unwrap();
+        assert!(Weights::load(&p).is_err());
+    }
+
+    #[test]
+    fn config_parse() {
+        let dir = std::env::temp_dir().join("rxnspec_weights_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("cfg.txt");
+        std::fs::write(&p, "d_model=128\nvocab=31\n").unwrap();
+        let c = load_config(&p).unwrap();
+        assert_eq!(c["d_model"], 128);
+        assert_eq!(c["vocab"], 31);
+    }
+}

@@ -1,0 +1,99 @@
+//! Multi-step synthesis planning — the CASP system the paper's
+//! acceleration work exists to serve.
+//!
+//! The paper's motivation (§1, after Segler et al. 2018): a CASP system is
+//! a **single-step retrosynthesis model** plus a **planning algorithm**
+//! that expands a search tree over disconnections until every leaf is a
+//! purchasable ("in stock") molecule. Single-step calls dominate planning
+//! wall time, which is why the paper's SBS speedup matters: §3.2 "such a
+//! speed-up could make the transformer a more attractive single-step
+//! model for multi-step synthesis planning".
+//!
+//! This module provides:
+//! * [`SingleStepModel`] — the planner-facing abstraction over "propose
+//!   reactant sets for a product", implemented by the decoding stack
+//!   ([`RetroModel`], with standard BS or speculative SBS) and by scripted
+//!   test stubs.
+//! * [`Stock`] — the purchasable-molecule set.
+//! * [`Planner`] — best-first AND-OR search with a node budget, optional
+//!   forward-model round-trip filtering, and synthesis-route extraction.
+
+mod search;
+mod stock;
+
+pub use search::{ForwardCheck, PlanStats, Planner, PlannerConfig, Route, RouteStep};
+pub use stock::Stock;
+
+use anyhow::Result;
+
+use crate::decoding::{beam_search, sbs, Backend, SbsConfig};
+use crate::vocab::Vocab;
+
+/// One proposed disconnection: precursor molecules and the model's
+/// confidence (normalized log-prob).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Disconnection {
+    pub reactants: Vec<String>,
+    pub score: f64,
+}
+
+/// The single-step retrosynthesis interface the planner consumes.
+pub trait SingleStepModel {
+    /// Propose up to `n` reactant sets for `product` (best first).
+    fn propose(&self, product: &str, n: usize) -> Result<Vec<Disconnection>>;
+}
+
+/// Which decoding procedure the retro model uses — the planner-level knob
+/// the paper's Tables 3/4 are about.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RetroDecoder {
+    BeamSearch,
+    /// Speculative beam search with the given draft length.
+    Sbs { draft_len: usize },
+}
+
+/// A trained retro backend + vocabulary as a [`SingleStepModel`].
+pub struct RetroModel<'a, B: Backend> {
+    pub backend: &'a B,
+    pub vocab: &'a Vocab,
+    pub decoder: RetroDecoder,
+    /// Cumulative decoder calls across all `propose` invocations (the
+    /// planning-level cost metric).
+    pub decoder_calls: std::cell::Cell<usize>,
+}
+
+impl<'a, B: Backend> RetroModel<'a, B> {
+    pub fn new(backend: &'a B, vocab: &'a Vocab, decoder: RetroDecoder) -> Self {
+        RetroModel {
+            backend,
+            vocab,
+            decoder,
+            decoder_calls: std::cell::Cell::new(0),
+        }
+    }
+}
+
+impl<'a, B: Backend> SingleStepModel for RetroModel<'a, B> {
+    fn propose(&self, product: &str, n: usize) -> Result<Vec<Disconnection>> {
+        let src = self.vocab.encode_wrapped(product)?;
+        let out = match self.decoder {
+            RetroDecoder::BeamSearch => beam_search(self.backend, &src, n)?,
+            RetroDecoder::Sbs { draft_len } => {
+                sbs(self.backend, &src, &SbsConfig::new(n, draft_len))?
+            }
+        };
+        self.decoder_calls
+            .set(self.decoder_calls.get() + out.stats.decoder_calls);
+        Ok(out
+            .hyps
+            .iter()
+            .map(|h| {
+                let smiles = self.vocab.decode(&h.tokens);
+                Disconnection {
+                    reactants: smiles.split('.').map(|s| s.to_string()).collect(),
+                    score: h.score / (h.tokens.len().max(1)) as f64,
+                }
+            })
+            .collect())
+    }
+}

@@ -1,0 +1,473 @@
+//! Best-first route search over single-step disconnections.
+//!
+//! A simplified Retro*/AiZynthFinder-style planner: nodes are partial
+//! routes (a set of still-unsolved molecules plus the steps taken), the
+//! frontier is a max-heap on cumulative model confidence, and a node
+//! budget bounds total single-step calls. Optionally each disconnection
+//! is round-trip checked with the forward (product-prediction) model —
+//! the standard CASP consistency filter, and a nice use of both of this
+//! repo's trained artifacts in one system.
+
+use std::collections::BinaryHeap;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use super::{Disconnection, SingleStepModel, Stock};
+
+/// Forward-model interface for round-trip checking.
+pub trait ForwardCheck {
+    /// Predict the major product of `reactants`.
+    fn predict(&self, reactants: &[String]) -> Result<String>;
+}
+
+/// No-op checker (round-trip filtering disabled).
+impl ForwardCheck for () {
+    fn predict(&self, _: &[String]) -> Result<String> {
+        anyhow::bail!("no forward model")
+    }
+}
+
+/// Planner configuration.
+#[derive(Debug, Clone)]
+pub struct PlannerConfig {
+    /// Disconnections requested per expansion (the single-step beam n).
+    pub n_suggestions: usize,
+    /// Maximum route depth (reaction steps along one branch).
+    pub max_depth: usize,
+    /// Maximum number of node expansions (≈ single-step model calls).
+    pub expansion_budget: usize,
+    /// Reject disconnections whose forward prediction does not regenerate
+    /// the product (requires a forward model).
+    pub roundtrip_filter: bool,
+}
+
+impl Default for PlannerConfig {
+    fn default() -> Self {
+        PlannerConfig {
+            n_suggestions: 5,
+            max_depth: 4,
+            expansion_budget: 50,
+            roundtrip_filter: false,
+        }
+    }
+}
+
+/// One retro step of a solved route.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RouteStep {
+    pub product: String,
+    pub reactants: Vec<String>,
+    pub score: f64,
+}
+
+/// A solved synthesis route (steps in retrosynthetic order: target first).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Route {
+    pub target: String,
+    pub steps: Vec<RouteStep>,
+    pub score: f64,
+}
+
+impl Route {
+    /// Starting materials (leaves) of the route.
+    pub fn leaves(&self) -> Vec<&str> {
+        let products: std::collections::HashSet<&str> =
+            self.steps.iter().map(|s| s.product.as_str()).collect();
+        let mut out = Vec::new();
+        for s in &self.steps {
+            for r in &s.reactants {
+                if !products.contains(r.as_str()) {
+                    out.push(r.as_str());
+                }
+            }
+        }
+        if self.steps.is_empty() {
+            out.push(self.target.as_str());
+        }
+        out
+    }
+
+    /// Human-readable multi-line rendering.
+    pub fn render(&self) -> String {
+        let mut s = format!("route for {} (score {:.3}):\n", self.target, self.score);
+        for (i, step) in self.steps.iter().enumerate() {
+            s.push_str(&format!(
+                "  {}. {}  <=  {}   ({:.3})\n",
+                i + 1,
+                step.product,
+                step.reactants.join(" + "),
+                step.score
+            ));
+        }
+        s
+    }
+}
+
+/// Search instrumentation.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PlanStats {
+    pub expansions: usize,
+    pub nodes_generated: usize,
+    pub solved: bool,
+    pub wall: std::time::Duration,
+}
+
+#[derive(Debug, Clone)]
+struct Node {
+    /// Molecules still to be made (none ⇒ solved).
+    open: Vec<String>,
+    steps: Vec<RouteStep>,
+    score: f64,
+    depth: usize,
+}
+
+impl PartialEq for Node {
+    fn eq(&self, other: &Self) -> bool {
+        self.score == other.score
+    }
+}
+impl Eq for Node {}
+impl PartialOrd for Node {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Node {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        // Max-heap on score; fewer open molecules break ties.
+        self.score
+            .partial_cmp(&other.score)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then_with(|| other.open.len().cmp(&self.open.len()))
+    }
+}
+
+/// The planner. Generic over the single-step model (decoding stack or
+/// test stub) and the optional forward checker.
+pub struct Planner<'a, M: SingleStepModel, F: ForwardCheck = ()> {
+    pub model: &'a M,
+    pub stock: &'a Stock,
+    pub forward: Option<&'a F>,
+    pub cfg: PlannerConfig,
+}
+
+impl<'a, M: SingleStepModel> Planner<'a, M, ()> {
+    pub fn new(model: &'a M, stock: &'a Stock, cfg: PlannerConfig) -> Self {
+        Planner {
+            model,
+            stock,
+            forward: None,
+            cfg,
+        }
+    }
+}
+
+impl<'a, M: SingleStepModel, F: ForwardCheck> Planner<'a, M, F> {
+    pub fn with_forward(
+        model: &'a M,
+        stock: &'a Stock,
+        forward: &'a F,
+        cfg: PlannerConfig,
+    ) -> Self {
+        Planner {
+            model,
+            stock,
+            forward: Some(forward),
+            cfg,
+        }
+    }
+
+    /// Search for a route that turns `target` into stock molecules.
+    pub fn plan(&self, target: &str) -> Result<(Option<Route>, PlanStats)> {
+        let t0 = Instant::now();
+        let mut stats = PlanStats::default();
+
+        if self.stock.contains(target) {
+            stats.solved = true;
+            stats.wall = t0.elapsed();
+            return Ok((
+                Some(Route {
+                    target: target.to_string(),
+                    steps: Vec::new(),
+                    score: 0.0,
+                }),
+                stats,
+            ));
+        }
+
+        let mut heap = BinaryHeap::new();
+        heap.push(Node {
+            open: vec![target.to_string()],
+            steps: Vec::new(),
+            score: 0.0,
+            depth: 0,
+        });
+
+        while let Some(node) = heap.pop() {
+            if node.open.is_empty() {
+                stats.solved = true;
+                stats.wall = t0.elapsed();
+                return Ok((
+                    Some(Route {
+                        target: target.to_string(),
+                        steps: node.steps,
+                        score: node.score,
+                    }),
+                    stats,
+                ));
+            }
+            if stats.expansions >= self.cfg.expansion_budget {
+                break;
+            }
+            if node.depth >= self.cfg.max_depth {
+                continue; // dead branch: too deep, unsolved molecules left
+            }
+
+            // Expand the first open molecule.
+            let mol = node.open[0].clone();
+            stats.expansions += 1;
+            let proposals = self.model.propose(&mol, self.cfg.n_suggestions)?;
+            for d in proposals {
+                if !self.accept(&mol, &d, &node) {
+                    continue;
+                }
+                let mut open: Vec<String> = node.open[1..].to_vec();
+                for r in &d.reactants {
+                    if !self.stock.contains(r) {
+                        open.push(r.clone());
+                    }
+                }
+                let mut steps = node.steps.clone();
+                steps.push(RouteStep {
+                    product: mol.clone(),
+                    reactants: d.reactants.clone(),
+                    score: d.score,
+                });
+                stats.nodes_generated += 1;
+                heap.push(Node {
+                    open,
+                    steps,
+                    score: node.score + d.score,
+                    depth: node.depth + 1,
+                });
+            }
+        }
+        stats.wall = t0.elapsed();
+        Ok((None, stats))
+    }
+
+    /// Sanity + optional round-trip filters for one disconnection.
+    fn accept(&self, product: &str, d: &Disconnection, node: &Node) -> bool {
+        // Degenerate or cyclic proposals.
+        if d.reactants.is_empty() || d.reactants.iter().any(|r| r.is_empty()) {
+            return false;
+        }
+        if d.reactants.iter().any(|r| r == product) {
+            return false;
+        }
+        // A molecule we are already trying to make upstream ⇒ cycle.
+        if node.steps.iter().any(|s| d.reactants.contains(&s.product)) {
+            return false;
+        }
+        if self.cfg.roundtrip_filter {
+            if let Some(f) = self.forward {
+                match f.predict(&d.reactants) {
+                    Ok(p) => {
+                        if p != product {
+                            return false;
+                        }
+                    }
+                    Err(_) => return false,
+                }
+            }
+        }
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashMap;
+
+    /// Scripted single-step model for unit tests.
+    struct Stub {
+        table: HashMap<String, Vec<Disconnection>>,
+    }
+
+    impl Stub {
+        fn new(entries: &[(&str, &[(&[&str], f64)])]) -> Stub {
+            let mut table = HashMap::new();
+            for (product, ds) in entries {
+                table.insert(
+                    product.to_string(),
+                    ds.iter()
+                        .map(|(rs, score)| Disconnection {
+                            reactants: rs.iter().map(|r| r.to_string()).collect(),
+                            score: *score,
+                        })
+                        .collect(),
+                );
+            }
+            Stub { table }
+        }
+    }
+
+    impl SingleStepModel for Stub {
+        fn propose(&self, product: &str, n: usize) -> Result<Vec<Disconnection>> {
+            let mut v = self.table.get(product).cloned().unwrap_or_default();
+            v.truncate(n);
+            Ok(v)
+        }
+    }
+
+    fn stock(mols: &[&str]) -> Stock {
+        Stock::from_iter(mols.iter().map(|m| m.to_string()))
+    }
+
+    #[test]
+    fn target_already_in_stock() {
+        let model = Stub::new(&[]);
+        let st = stock(&["CCO"]);
+        let p = Planner::new(&model, &st, PlannerConfig::default());
+        let (route, stats) = p.plan("CCO").unwrap();
+        let route = route.unwrap();
+        assert!(route.steps.is_empty());
+        assert!(stats.solved);
+        assert_eq!(route.leaves(), vec!["CCO"]);
+    }
+
+    #[test]
+    fn single_step_route() {
+        let model = Stub::new(&[("P", &[(&["A", "B"], -0.1)])]);
+        let st = stock(&["A", "B"]);
+        let p = Planner::new(&model, &st, PlannerConfig::default());
+        let (route, stats) = p.plan("P").unwrap();
+        let route = route.unwrap();
+        assert_eq!(route.steps.len(), 1);
+        assert_eq!(route.steps[0].reactants, vec!["A", "B"]);
+        assert!(stats.solved);
+        assert_eq!(stats.expansions, 1);
+    }
+
+    #[test]
+    fn multi_step_route_prefers_better_score() {
+        // P -> (X, B) with X needing one more step, or P -> (DEAD,) which
+        // scores better at step one but cannot be completed.
+        let model = Stub::new(&[
+            ("P", &[(&["DEAD"], -0.05), (&["X", "B"], -0.2)]),
+            ("X", &[(&["A"], -0.1)]),
+            // DEAD has no disconnections
+        ]);
+        let st = stock(&["A", "B"]);
+        let p = Planner::new(&model, &st, PlannerConfig::default());
+        let (route, stats) = p.plan("P").unwrap();
+        let route = route.unwrap();
+        assert_eq!(route.steps.len(), 2);
+        assert!(stats.solved);
+        let mut leaves = route.leaves();
+        leaves.sort();
+        assert_eq!(leaves, vec!["A", "B"]);
+    }
+
+    #[test]
+    fn unsolvable_returns_none_within_budget() {
+        let model = Stub::new(&[("P", &[(&["Q"], -0.1)]), ("Q", &[(&["P2"], -0.1)])]);
+        let st = stock(&["A"]);
+        let cfg = PlannerConfig {
+            expansion_budget: 10,
+            ..Default::default()
+        };
+        let p = Planner::new(&model, &st, cfg);
+        let (route, stats) = p.plan("P").unwrap();
+        assert!(route.is_none());
+        assert!(!stats.solved);
+        assert!(stats.expansions <= 10);
+    }
+
+    #[test]
+    fn cycles_are_rejected() {
+        // P -> Q -> P would loop forever without the ancestor check.
+        let model = Stub::new(&[("P", &[(&["Q"], -0.1)]), ("Q", &[(&["P"], -0.1)])]);
+        let st = stock(&[]);
+        let cfg = PlannerConfig {
+            expansion_budget: 20,
+            max_depth: 10,
+            ..Default::default()
+        };
+        let p = Planner::new(&model, &st, cfg);
+        let (route, stats) = p.plan("P").unwrap();
+        assert!(route.is_none());
+        assert!(stats.expansions < 20, "cycle not pruned: {stats:?}");
+    }
+
+    #[test]
+    fn depth_limit_prunes() {
+        let model = Stub::new(&[
+            ("P", &[(&["Q1"], -0.1)]),
+            ("Q1", &[(&["Q2"], -0.1)]),
+            ("Q2", &[(&["Q3"], -0.1)]),
+            ("Q3", &[(&["A"], -0.1)]),
+        ]);
+        let st = stock(&["A"]);
+        let shallow = PlannerConfig {
+            max_depth: 2,
+            ..Default::default()
+        };
+        let p = Planner::new(&model, &st, shallow);
+        assert!(p.plan("P").unwrap().0.is_none());
+        let deep = PlannerConfig {
+            max_depth: 5,
+            ..Default::default()
+        };
+        let p = Planner::new(&model, &st, deep);
+        assert!(p.plan("P").unwrap().0.is_some());
+    }
+
+    struct StubForward {
+        ok_product: String,
+    }
+
+    impl ForwardCheck for StubForward {
+        fn predict(&self, _reactants: &[String]) -> Result<String> {
+            Ok(self.ok_product.clone())
+        }
+    }
+
+    #[test]
+    fn roundtrip_filter_rejects_inconsistent_disconnections() {
+        let model = Stub::new(&[("P", &[(&["A"], -0.1)])]);
+        let st = stock(&["A"]);
+        // Forward model predicts something ≠ P ⇒ suggestion filtered.
+        let fwd = StubForward {
+            ok_product: "NOT_P".to_string(),
+        };
+        let cfg = PlannerConfig {
+            roundtrip_filter: true,
+            ..Default::default()
+        };
+        let p = Planner::with_forward(&model, &st, &fwd, cfg);
+        assert!(p.plan("P").unwrap().0.is_none());
+
+        let fwd_ok = StubForward {
+            ok_product: "P".to_string(),
+        };
+        let cfg = PlannerConfig {
+            roundtrip_filter: true,
+            ..Default::default()
+        };
+        let p = Planner::with_forward(&model, &st, &fwd_ok, cfg);
+        assert!(p.plan("P").unwrap().0.is_some());
+    }
+
+    #[test]
+    fn route_render_contains_steps() {
+        let model = Stub::new(&[("P", &[(&["A", "B"], -0.1)])]);
+        let st = stock(&["A", "B"]);
+        let p = Planner::new(&model, &st, PlannerConfig::default());
+        let (route, _) = p.plan("P").unwrap();
+        let r = route.unwrap().render();
+        assert!(r.contains("P  <=  A + B"));
+    }
+}

@@ -1,0 +1,63 @@
+//! Purchasable-molecule stock set.
+//!
+//! The AiZynthFinder convention at corpus scale: a synthesis route is
+//! solved when every leaf is in stock. `gen-data` writes `data/stock.txt`
+//! (every reactant molecule of the training corpus).
+
+use std::collections::HashSet;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+/// A set of purchasable molecules (exact-SMILES membership; our corpus is
+/// canonical-by-construction so string identity suffices).
+#[derive(Debug, Clone, Default)]
+pub struct Stock {
+    mols: HashSet<String>,
+}
+
+impl Stock {
+    pub fn from_iter<I: IntoIterator<Item = String>>(mols: I) -> Stock {
+        Stock {
+            mols: mols.into_iter().collect(),
+        }
+    }
+
+    /// Load `stock.txt` (one SMILES per line).
+    pub fn load(path: &Path) -> Result<Stock> {
+        let body = std::fs::read_to_string(path)
+            .with_context(|| format!("read {} (run gen-data)", path.display()))?;
+        Ok(Stock {
+            mols: body.lines().filter(|l| !l.is_empty()).map(String::from).collect(),
+        })
+    }
+
+    pub fn contains(&self, smiles: &str) -> bool {
+        self.mols.contains(smiles)
+    }
+
+    pub fn len(&self) -> usize {
+        self.mols.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.mols.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn membership_and_load() {
+        let dir = std::env::temp_dir().join("rxnspec_stock_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("stock.txt");
+        std::fs::write(&p, "CCO\nc1ccccc1\n\n").unwrap();
+        let s = Stock::load(&p).unwrap();
+        assert_eq!(s.len(), 2);
+        assert!(s.contains("CCO"));
+        assert!(!s.contains("CCN"));
+    }
+}

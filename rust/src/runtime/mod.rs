@@ -1,0 +1,81 @@
+//! Runtime: executing AOT-compiled model artifacts via PJRT.
+//!
+//! `python/compile/aot.py` lowers the JAX model (with the Pallas attention
+//! kernel) to HLO **text** once at build time; this module loads those
+//! files, compiles them on the PJRT CPU client, and exposes them behind
+//! the same [`Backend`](crate::decoding::Backend) trait the decoding
+//! algorithms use. Python is never on this path.
+
+pub mod pjrt;
+
+pub use pjrt::{ArtifactSet, PjrtBackend};
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::decoding::{Backend, DecoderRow, LogProbs, Memory, ModelDims};
+use crate::model::RustBackend;
+
+/// Runtime-selectable backend: the PJRT production path or the pure-Rust
+/// reference (the paper's "original MT" role — and the fallback when no
+/// artifacts are built).
+pub enum AnyBackend {
+    Pjrt(PjrtBackend),
+    Rust(RustBackend),
+}
+
+impl AnyBackend {
+    /// Eagerly compile all PJRT artifacts (no-op for the Rust backend);
+    /// benches call this so compilation never lands in a timed sample.
+    pub fn precompile(&self) -> Result<()> {
+        match self {
+            AnyBackend::Pjrt(b) => b.precompile(),
+            AnyBackend::Rust(_) => Ok(()),
+        }
+    }
+
+    /// Decoder call log ((rows, window) per call); empty for the Rust
+    /// backend.
+    pub fn take_call_log(&self) -> Vec<(usize, usize)> {
+        match self {
+            AnyBackend::Pjrt(b) => b.take_call_log(),
+            AnyBackend::Rust(_) => Vec::new(),
+        }
+    }
+
+    /// `kind` ∈ {"pjrt", "rust"}; artifacts + weights live in `dir`.
+    pub fn load(kind: &str, dir: &Path, task: &str) -> Result<AnyBackend> {
+        match kind {
+            "pjrt" => Ok(AnyBackend::Pjrt(PjrtBackend::load(dir, task)?)),
+            "rust" => Ok(AnyBackend::Rust(RustBackend::load(
+                &dir.join(format!("weights_{task}.bin")),
+                &dir.join(format!("config_{task}.txt")),
+            )?)),
+            other => anyhow::bail!("unknown backend {other:?} (use pjrt|rust)"),
+        }
+    }
+}
+
+impl Backend for AnyBackend {
+    fn dims(&self) -> ModelDims {
+        match self {
+            AnyBackend::Pjrt(b) => b.dims(),
+            AnyBackend::Rust(b) => b.dims(),
+        }
+    }
+
+    fn encode(&self, srcs: &[&[i64]]) -> Result<Memory> {
+        match self {
+            AnyBackend::Pjrt(b) => b.encode(srcs),
+            AnyBackend::Rust(b) => b.encode(srcs),
+        }
+    }
+
+    fn decode(&self, rows: &[DecoderRow], memory: &Memory) -> Result<LogProbs> {
+        match self {
+            AnyBackend::Pjrt(b) => b.decode(rows, memory),
+            AnyBackend::Rust(b) => b.decode(rows, memory),
+        }
+    }
+}

@@ -1,0 +1,384 @@
+//! PJRT backend: loads `artifacts/*.hlo.txt`, compiles one executable per
+//! (entrypoint, batch bucket), and serves `encode`/`decode` by padding the
+//! request into the smallest bucket that fits.
+//!
+//! Interchange is HLO text, not serialized protos: jax ≥ 0.5 emits 64-bit
+//! instruction ids that the crate's XLA (xla_extension 0.5.1) rejects; the
+//! text parser reassigns ids (see /opt/xla-example/README.md).
+//!
+//! Weights are **arguments**, not baked constants (aot.py keeps artifact
+//! text small): the RXW1 checkpoint is uploaded once into device-resident
+//! `PjRtBuffer`s, in lexicographic flat-key order — the exact order aot.py
+//! lowered them in — and appended to every call.
+//!
+//! Decoder rows are right-aligned into the fixed `[EB, T]` window — the
+//! paper's `padLeft` — with explicit position ids `col - pad_offset`, so
+//! one compiled executable serves every mix of prefix and draft lengths.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::decoding::{Backend, DecoderRow, LogProbs, Memory, ModelDims};
+use crate::model::{Config, Weights};
+use crate::vocab::PAD_ID;
+
+/// Lazily compiled executable: artifact path + compile-on-first-use slot.
+/// Loading a backend registers ~21 artifacts per task; most runs touch a
+/// handful of buckets, so eager compilation would waste tens of seconds
+/// of startup.
+struct LazyExe {
+    path: std::path::PathBuf,
+    exe: std::cell::OnceCell<xla::PjRtLoadedExecutable>,
+}
+
+impl LazyExe {
+    fn get(&self, client: &xla::PjRtClient) -> Result<&xla::PjRtLoadedExecutable> {
+        if self.exe.get().is_none() {
+            let exe = compile(client, &self.path)?;
+            let _ = self.exe.set(exe);
+        }
+        Ok(self.exe.get().unwrap())
+    }
+}
+
+/// Trailing-columns window of decfast artifacts (matches aot.py's
+/// DECFAST_WINDOW). Calls whose consumers might read earlier positions
+/// must take the full `dec` path.
+pub const DECFAST_WINDOW: usize = 16;
+
+/// Registered artifacts for one task (`fwd` or `retro`).
+pub struct ArtifactSet {
+    /// batch-bucket → encoder executable
+    enc: BTreeMap<usize, LazyExe>,
+    /// (window bucket T, effective-batch bucket EB) → decoder executable.
+    /// Most decoding happens at short prefixes and the per-call cost is
+    /// ∝ T without a KV cache, so the runtime picks the smallest window
+    /// that fits the longest row of the call.
+    dec: BTreeMap<(usize, usize), LazyExe>,
+    /// Same grid, B=1 fast path: shared memory row broadcast on-device,
+    /// log-probs emitted only for the trailing `DECFAST_WINDOW` columns.
+    decfast: BTreeMap<(usize, usize), LazyExe>,
+}
+
+/// The production backend: PJRT-compiled AOT artifacts.
+pub struct PjrtBackend {
+    client: xla::PjRtClient,
+    cfg: Config,
+    arts: ArtifactSet,
+    /// Device-resident weight buffers (lexicographic flat-key order).
+    weight_bufs: Vec<xla::PjRtBuffer>,
+    /// Decoder-call instrumentation ((rows, window) per call), readable
+    /// by benchmarks and the parallel-device projection.
+    calls: std::cell::RefCell<Vec<(usize, usize)>>,
+}
+
+fn compile(client: &xla::PjRtClient, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+    let proto =
+        xla::HloModuleProto::from_text_file(path.to_str().context("non-utf8 artifact path")?)
+            .with_context(|| format!("parse {}", path.display()))?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    client
+        .compile(&comp)
+        .with_context(|| format!("compile {}", path.display()))
+}
+
+impl PjrtBackend {
+    /// Load every artifact for `task` from `dir` (per the manifest written
+    /// by aot.py: `manifest.tsv` lines `kind\ttask\tbucket\tfile`) plus
+    /// the task's weights, uploaded to the device once.
+    pub fn load(dir: &Path, task: &str) -> Result<PjrtBackend> {
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        let cfg = Config::from_file(&dir.join(format!("config_{task}.txt")))?;
+        let weights = Weights::load(&dir.join(format!("weights_{task}.bin")))?;
+
+        let mut weight_bufs = Vec::with_capacity(weights.len());
+        for name in weights.names() {
+            let t = weights.get(name)?;
+            let dims = if t.dims.is_empty() { vec![1] } else { t.dims.clone() };
+            weight_bufs.push(
+                client
+                    .buffer_from_host_buffer::<f32>(&t.data, &dims, None)
+                    .with_context(|| format!("upload weight {name}"))?,
+            );
+        }
+
+        let manifest = std::fs::read_to_string(dir.join("manifest.tsv")).with_context(|| {
+            format!("read {}/manifest.tsv (run `make artifacts`)", dir.display())
+        })?;
+        let mut enc = BTreeMap::new();
+        let mut dec = BTreeMap::new();
+        let mut decfast = BTreeMap::new();
+        for line in manifest.lines() {
+            if line.is_empty() {
+                continue;
+            }
+            let f: Vec<&str> = line.split('\t').collect();
+            if f.len() != 5 || f[1] != task {
+                continue;
+            }
+            let eb: usize = f[2].parse()?;
+            let tlen: usize = f[3].parse()?;
+            let lazy = LazyExe {
+                path: dir.join(f[4]),
+                exe: std::cell::OnceCell::new(),
+            };
+            anyhow::ensure!(lazy.path.exists(), "missing artifact {}", lazy.path.display());
+            match f[0] {
+                "enc" => {
+                    enc.insert(eb, lazy);
+                }
+                "dec" => {
+                    dec.insert((tlen, eb), lazy);
+                }
+                "decfast" => {
+                    decfast.insert((tlen, eb), lazy);
+                }
+                other => bail!("unknown artifact kind {other}"),
+            }
+        }
+        if enc.is_empty() || dec.is_empty() {
+            bail!("no artifacts for task {task} in {}", dir.display());
+        }
+        Ok(PjrtBackend {
+            client,
+            cfg,
+            arts: ArtifactSet { enc, dec, decfast },
+            weight_bufs,
+            calls: std::cell::RefCell::new(Vec::new()),
+        })
+    }
+
+    pub fn config(&self) -> Config {
+        self.cfg
+    }
+
+    /// Smallest bucket ≥ `n`, or the largest available (callers chunk).
+    fn bucket(map: &BTreeMap<usize, LazyExe>, n: usize) -> usize {
+        for (&b, _) in map.iter() {
+            if b >= n {
+                return b;
+            }
+        }
+        *map.keys().last().unwrap()
+    }
+
+    /// Pick the decoder (T, EB) bucket: smallest window ≥ `max_len`, then
+    /// smallest effective batch ≥ `n` within that window.
+    fn dec_bucket(&self, max_len: usize, n: usize) -> (usize, usize) {
+        let t = self
+            .arts
+            .dec
+            .keys()
+            .map(|&(t, _)| t)
+            .filter(|&t| t >= max_len)
+            .min()
+            .unwrap_or_else(|| self.arts.dec.keys().map(|&(t, _)| t).max().unwrap());
+        let eb = self
+            .arts
+            .dec
+            .keys()
+            .filter(|&&(tt, _)| tt == t)
+            .map(|&(_, b)| b)
+            .find(|&b| b >= n)
+            .unwrap_or_else(|| {
+                self.arts
+                    .dec
+                    .keys()
+                    .filter(|&&(tt, _)| tt == t)
+                    .map(|&(_, b)| b)
+                    .max()
+                    .unwrap()
+            });
+        (t, eb)
+    }
+
+    pub fn decoder_buckets(&self) -> Vec<(usize, usize)> {
+        self.arts.dec.keys().copied().collect()
+    }
+
+    /// Eagerly compile every registered artifact. Benchmarks call this so
+    /// lazy first-use compilation never pollutes a timed sample.
+    pub fn precompile(&self) -> Result<()> {
+        for lazy in self
+            .arts
+            .enc
+            .values()
+            .chain(self.arts.dec.values())
+            .chain(self.arts.decfast.values())
+        {
+            lazy.get(&self.client)?;
+        }
+        Ok(())
+    }
+
+    /// Largest effective-batch bucket (for chunking).
+    fn max_eb(&self) -> usize {
+        self.arts.dec.keys().map(|&(_, b)| b).max().unwrap()
+    }
+
+    /// (rows, window) of every decoder call so far (bench metric).
+    pub fn take_call_log(&self) -> Vec<(usize, usize)> {
+        std::mem::take(&mut self.calls.borrow_mut())
+    }
+
+    /// Run one executable: upload `inputs`, append the weight buffers,
+    /// fetch the single (1-tuple) f32 output.
+    fn run(&self, exe: &xla::PjRtLoadedExecutable, inputs: Vec<xla::PjRtBuffer>) -> Result<Vec<f32>> {
+        let mut args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(inputs.len() + self.weight_bufs.len());
+        args.extend(inputs.iter());
+        args.extend(self.weight_bufs.iter());
+        let result = exe.execute_b::<&xla::PjRtBuffer>(&args)?[0][0].to_literal_sync()?;
+        let out = result.to_tuple1()?;
+        Ok(out.to_vec::<f32>()?)
+    }
+
+    fn upload_f32(&self, data: &[f32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer::<f32>(data, dims, None)?)
+    }
+
+    fn upload_i32(&self, data: &[i32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer::<i32>(data, dims, None)?)
+    }
+
+    fn encode_chunk(&self, srcs: &[&[i64]]) -> Result<(Vec<f32>, Vec<f32>)> {
+        let (s_len, d) = (self.cfg.s_len, self.cfg.d_model);
+        let n = srcs.len();
+        let bucket = Self::bucket(&self.arts.enc, n);
+        anyhow::ensure!(n <= bucket, "encode chunk {n} exceeds largest bucket {bucket}");
+        let mut src = vec![PAD_ID as i32; bucket * s_len];
+        let mut pad = vec![0f32; bucket * s_len];
+        for (b, s) in srcs.iter().enumerate() {
+            anyhow::ensure!(s.len() <= s_len, "src length {} exceeds {s_len}", s.len());
+            for (i, &t) in s.iter().enumerate() {
+                src[b * s_len + i] = t as i32;
+                pad[b * s_len + i] = 1.0;
+            }
+        }
+        let inputs = vec![
+            self.upload_i32(&src, &[bucket, s_len])?,
+            self.upload_f32(&pad, &[bucket, s_len])?,
+        ];
+        let exe = self.arts.enc[&bucket].get(&self.client)?;
+        let mem = self.run(exe, inputs)?;
+        let row = s_len * d;
+        Ok((mem[..n * row].to_vec(), pad[..n * s_len].to_vec()))
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn dims(&self) -> ModelDims {
+        ModelDims {
+            s_len: self.cfg.s_len,
+            t_len: self.cfg.t_len,
+            d_model: self.cfg.d_model,
+            vocab: self.cfg.vocab,
+        }
+    }
+
+    fn encode(&self, srcs: &[&[i64]]) -> Result<Memory> {
+        let (s_len, d) = (self.cfg.s_len, self.cfg.d_model);
+        let max_bucket = *self.arts.enc.keys().last().unwrap();
+        let mut data = Vec::with_capacity(srcs.len() * s_len * d);
+        let mut pad = Vec::with_capacity(srcs.len() * s_len);
+        for chunk in srcs.chunks(max_bucket) {
+            let (m, p) = self.encode_chunk(chunk)?;
+            data.extend(m);
+            pad.extend(p);
+        }
+        Ok(Memory {
+            data,
+            pad,
+            batch: srcs.len(),
+            s_len,
+            d_model: d,
+        })
+    }
+
+    fn decode(&self, rows: &[DecoderRow], memory: &Memory) -> Result<LogProbs> {
+        let (s_len, d, v) = (self.cfg.s_len, self.cfg.d_model, self.cfg.vocab);
+        let max_eb = self.max_eb();
+        let max_len = rows.iter().map(|r| r.tokens.len()).max().unwrap_or(1);
+        // One window bucket for the whole call keeps LogProbs uniform.
+        let (t_len, _) = self.dec_bucket(max_len, rows.len().min(max_eb));
+        anyhow::ensure!(
+            max_len <= t_len,
+            "row length {max_len} exceeds largest window {t_len}"
+        );
+
+        // B=1 fast path: every row attends to the same (single) memory
+        // row, so the artifact broadcasts it on-device and returns only
+        // the trailing DECFAST_WINDOW columns — all that greedy/
+        // speculative/beam steps ever read (rows are left-padded).
+        let fast = !self.arts.decfast.is_empty()
+            && memory.batch == 1
+            && rows.iter().all(|r| r.mem_row == 0)
+            && std::env::var_os("RXNSPEC_NO_DECFAST").is_none();
+        let window = if fast { DECFAST_WINDOW.min(t_len) } else { t_len };
+
+        let mem_buf = if fast {
+            Some((
+                self.upload_f32(memory.row(0), &[1, s_len, d])?,
+                self.upload_f32(memory.pad_row(0), &[1, s_len])?,
+            ))
+        } else {
+            None
+        };
+
+        let mut out = vec![0f32; rows.len() * window * v];
+        let mut lens = Vec::with_capacity(rows.len());
+        for (ci, chunk) in rows.chunks(max_eb).enumerate() {
+            let n = chunk.len();
+            let (_, eb) = self.dec_bucket(max_len, n);
+            self.calls.borrow_mut().push((n, t_len));
+
+            let mut tgt = vec![PAD_ID as i32; eb * t_len];
+            let mut pos = vec![0i32; eb * t_len];
+            let mut tpad = vec![0f32; eb * t_len];
+            for (r, row) in chunk.iter().enumerate() {
+                let l = row.tokens.len();
+                lens.push(l);
+                let off = t_len - l; // padLeft: right-align the row
+                for (i, &t) in row.tokens.iter().enumerate() {
+                    tgt[r * t_len + off + i] = t as i32;
+                    pos[r * t_len + off + i] = i as i32;
+                    tpad[r * t_len + off + i] = 1.0;
+                }
+            }
+            let mut inputs = vec![
+                self.upload_i32(&tgt, &[eb, t_len])?,
+                self.upload_i32(&pos, &[eb, t_len])?,
+                self.upload_f32(&tpad, &[eb, t_len])?,
+            ];
+            let lp = if let Some((m, mp)) = &mem_buf {
+                let mut args: Vec<&xla::PjRtBuffer> =
+                    Vec::with_capacity(5 + self.weight_bufs.len());
+                args.extend(inputs.iter());
+                args.push(m);
+                args.push(mp);
+                args.extend(self.weight_bufs.iter());
+                let exe = self.arts.decfast[&(t_len, eb)].get(&self.client)?;
+                let result = exe.execute_b::<&xla::PjRtBuffer>(&args)?[0][0].to_literal_sync()?;
+                result.to_tuple1()?.to_vec::<f32>()?
+            } else {
+                let mut mem = vec![0f32; eb * s_len * d];
+                let mut mpad = vec![0f32; eb * s_len];
+                for (r, row) in chunk.iter().enumerate() {
+                    mem[r * s_len * d..(r + 1) * s_len * d]
+                        .copy_from_slice(memory.row(row.mem_row));
+                    mpad[r * s_len..(r + 1) * s_len]
+                        .copy_from_slice(memory.pad_row(row.mem_row));
+                }
+                inputs.push(self.upload_f32(&mem, &[eb, s_len, d])?);
+                inputs.push(self.upload_f32(&mpad, &[eb, s_len])?);
+                let exe = self.arts.dec[&(t_len, eb)].get(&self.client)?;
+                self.run(exe, inputs)?
+            };
+            let row_sz = window * v;
+            let base = ci * max_eb;
+            out[base * row_sz..(base + n) * row_sz].copy_from_slice(&lp[..n * row_sz]);
+        }
+        Ok(LogProbs::new_windowed(out, lens, t_len, v, window))
+    }
+}

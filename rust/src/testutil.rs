@@ -1,0 +1,406 @@
+//! Deterministic mock backends and property-test helpers.
+//!
+//! The offline environment has no `proptest`, so invariants are checked by
+//! seeded random-case sweeps over these mocks. Both mocks honour the
+//! [`Backend`](crate::decoding::Backend) conditional-consistency contract:
+//! a row's successor distribution depends only on its own tokens and its
+//! memory row — the property speculative decoding's losslessness rests on.
+//!
+//! * [`CopyModel`] — the target is a deterministic function of the source
+//!   that *contains source substrings verbatim*, modelling the chemistry
+//!   regime (products copy reactant fragments) where draft acceptance is
+//!   high.
+//! * [`HashModel`] — fully content-dependent pseudo-random distributions
+//!   (a keyed hash of the entire prefix), modelling the adversarial regime
+//!   where drafts are almost never accepted; used to prove equivalences
+//!   hold for *any* conditional model, not just friendly ones.
+
+use anyhow::Result;
+
+use crate::decoding::{Backend, DecoderRow, LogProbs, Memory, ModelDims};
+use crate::rng::Rng;
+use crate::vocab::{BOS_ID, EOS_ID, PAD_ID, UNK_ID};
+
+/// Number of reserved special ids; mock vocab tokens start here.
+pub const FIRST_REAL_TOKEN: i64 = 4;
+
+fn mem_from_srcs(srcs: &[&[i64]], s_len: usize) -> Memory {
+    // Mocks stash raw source tokens in the activation buffer (d_model = 1)
+    // so `decode` can recover them per row.
+    let batch = srcs.len();
+    let mut data = vec![0f32; batch * s_len];
+    let mut pad = vec![0f32; batch * s_len];
+    for (b, src) in srcs.iter().enumerate() {
+        assert!(src.len() <= s_len, "src longer than s_len");
+        for (i, &t) in src.iter().enumerate() {
+            data[b * s_len + i] = t as f32;
+            pad[b * s_len + i] = 1.0;
+        }
+    }
+    Memory {
+        data,
+        pad,
+        batch,
+        s_len,
+        d_model: 1,
+    }
+}
+
+fn src_tokens_of_row(memory: &Memory, b: usize) -> Vec<i64> {
+    memory
+        .row(b)
+        .iter()
+        .zip(memory.pad_row(b))
+        .take_while(|(_, &p)| p > 0.0)
+        .map(|(&v, _)| v as i64)
+        .collect()
+}
+
+/// Fill one position's distribution: `chosen` gets log(p), the rest share
+/// the remainder uniformly (a proper log-probability vector).
+fn peaked_dist(out: &mut [f32], chosen: i64, p: f64) {
+    let v = out.len();
+    let rest = ((1.0 - p) / (v as f64 - 3.0)).ln() as f32; // excl. specials
+    let neg = -1e9f32;
+    for (i, o) in out.iter_mut().enumerate() {
+        *o = if i as i64 == PAD_ID || i as i64 == BOS_ID || i as i64 == UNK_ID {
+            neg
+        } else {
+            rest
+        };
+    }
+    out[chosen as usize] = p.ln() as f32;
+}
+
+/// A backend whose target sequence is a deterministic function of the
+/// source: the source's inner tokens verbatim, followed by EOS. Products
+/// copying reactant substrings is exactly the regime the paper exploits.
+pub struct CopyModel {
+    dims: ModelDims,
+    emit_eos: bool,
+}
+
+impl CopyModel {
+    pub fn new(s_len: usize, t_len: usize, vocab: usize) -> CopyModel {
+        CopyModel {
+            dims: ModelDims {
+                s_len,
+                t_len,
+                d_model: 1,
+                vocab,
+            },
+            emit_eos: true,
+        }
+    }
+
+    /// Variant that never emits EOS (cycles over the target) — for testing
+    /// window-limit termination.
+    pub fn never_eos(s_len: usize, t_len: usize, vocab: usize) -> CopyModel {
+        CopyModel {
+            dims: ModelDims {
+                s_len,
+                t_len,
+                d_model: 1,
+                vocab,
+            },
+            emit_eos: false,
+        }
+    }
+
+    /// The target the model deterministically generates for `src`
+    /// (BOS/EOS-wrapped), excluding EOS.
+    pub fn target_for(&self, src: &[i64]) -> Vec<i64> {
+        src.iter()
+            .copied()
+            .filter(|&t| t != BOS_ID && t != EOS_ID && t != PAD_ID)
+            .collect()
+    }
+}
+
+impl Backend for CopyModel {
+    fn dims(&self) -> ModelDims {
+        self.dims
+    }
+
+    fn encode(&self, srcs: &[&[i64]]) -> Result<Memory> {
+        Ok(mem_from_srcs(srcs, self.dims.s_len))
+    }
+
+    fn decode(&self, rows: &[DecoderRow], memory: &Memory) -> Result<LogProbs> {
+        let (t_len, vocab) = (self.dims.t_len, self.dims.vocab);
+        let mut data = vec![0f32; rows.len() * t_len * vocab];
+        let mut lens = Vec::with_capacity(rows.len());
+        for (r, row) in rows.iter().enumerate() {
+            let target = self.target_for(&src_tokens_of_row(memory, row.mem_row));
+            let len = row.tokens.len();
+            lens.push(len);
+            let pad_cols = t_len - len;
+            for j in 0..len {
+                // Successor of position j is target[j] (position 0 is BOS).
+                let chosen = if j < target.len() {
+                    target[j]
+                } else if self.emit_eos {
+                    EOS_ID
+                } else {
+                    target[j % target.len().max(1)]
+                };
+                let off = (r * t_len + pad_cols + j) * vocab;
+                peaked_dist(&mut data[off..off + vocab], chosen, 0.9);
+            }
+        }
+        Ok(LogProbs::new(data, lens, t_len, vocab))
+    }
+}
+
+/// A backend with keyed-hash pseudo-random (but deterministic and
+/// conditionally consistent) successor distributions.
+pub struct HashModel {
+    dims: ModelDims,
+    key: u64,
+    /// Additive EOS bonus per generated position — guarantees termination.
+    eos_ramp: f32,
+    /// Logit sharpness. ~6 gives high-entropy (adversarial) distributions;
+    /// ~40 gives near-one-hot ones — the low-entropy regime the paper says
+    /// retrosynthesis models actually operate in (§3.3).
+    sharpness: f32,
+}
+
+impl HashModel {
+    pub fn new(s_len: usize, t_len: usize, vocab: usize, key: u64) -> HashModel {
+        HashModel {
+            dims: ModelDims {
+                s_len,
+                t_len,
+                d_model: 1,
+                vocab,
+            },
+            key,
+            eos_ramp: 0.35,
+            sharpness: 6.0,
+        }
+    }
+
+    /// Low-entropy variant: probability mass concentrates on one token.
+    pub fn peaked(s_len: usize, t_len: usize, vocab: usize, key: u64) -> HashModel {
+        HashModel {
+            sharpness: 40.0,
+            eos_ramp: 2.0,
+            ..HashModel::new(s_len, t_len, vocab, key)
+        }
+    }
+}
+
+fn fnv(mut h: u64, x: u64) -> u64 {
+    h ^= x;
+    h = h.wrapping_mul(0x100000001b3);
+    h ^ (h >> 29)
+}
+
+impl Backend for HashModel {
+    fn dims(&self) -> ModelDims {
+        self.dims
+    }
+
+    fn encode(&self, srcs: &[&[i64]]) -> Result<Memory> {
+        Ok(mem_from_srcs(srcs, self.dims.s_len))
+    }
+
+    fn decode(&self, rows: &[DecoderRow], memory: &Memory) -> Result<LogProbs> {
+        let (t_len, vocab) = (self.dims.t_len, self.dims.vocab);
+        let mut data = vec![0f32; rows.len() * t_len * vocab];
+        let mut lens = Vec::with_capacity(rows.len());
+        for (r, row) in rows.iter().enumerate() {
+            let src = src_tokens_of_row(memory, row.mem_row);
+            let mut h = fnv(0xcbf29ce484222325 ^ self.key, src.len() as u64);
+            for &t in &src {
+                h = fnv(h, t as u64);
+            }
+            let len = row.tokens.len();
+            lens.push(len);
+            let pad_cols = t_len - len;
+            // Prefix hash evolves token by token: the distribution at j
+            // depends on tokens 0..=j only.
+            let mut ph = h;
+            for j in 0..len {
+                ph = fnv(ph, row.tokens[j] as u64 + 7);
+                let off = (r * t_len + pad_cols + j) * vocab;
+                let out = &mut data[off..off + vocab];
+                // Raw peaked logits from the hash, then log-softmax.
+                let mut mx = f32::NEG_INFINITY;
+                for (v, o) in out.iter_mut().enumerate() {
+                    let v64 = v as i64;
+                    if v64 == PAD_ID || v64 == BOS_ID || v64 == UNK_ID {
+                        *o = -1e9;
+                        continue;
+                    }
+                    let u = (fnv(ph, v as u64 + 13) >> 24) as f64 as f32 / (1u64 << 40) as f32;
+                    let mut logit = self.sharpness * u;
+                    if v64 == EOS_ID {
+                        logit += self.eos_ramp * j as f32 - 2.0;
+                    }
+                    *o = logit;
+                    mx = mx.max(logit);
+                }
+                let mut z = 0f64;
+                for &o in out.iter() {
+                    if o > -1e8 {
+                        z += ((o - mx) as f64).exp();
+                    }
+                }
+                let lz = mx as f64 + z.ln();
+                for o in out.iter_mut() {
+                    if *o > -1e8 {
+                        *o = (*o as f64 - lz) as f32;
+                    }
+                }
+            }
+        }
+        Ok(LogProbs::new(data, lens, t_len, vocab))
+    }
+}
+
+/// Recompute a hypothesis's true cumulative log-probability (incl. the
+/// final EOS) with fresh single-row decoder calls — the oracle for the
+/// "returned scores are real model scores" invariant.
+pub fn rescore<B: Backend>(
+    backend: &B,
+    src: &[i64],
+    tokens: &[i64],
+    ends_with_eos: bool,
+) -> f64 {
+    let mem = backend.encode(&[src]).unwrap();
+    let mut full = vec![BOS_ID];
+    full.extend_from_slice(tokens);
+    if ends_with_eos {
+        full.push(EOS_ID);
+    }
+    let row = DecoderRow {
+        tokens: full.clone(),
+        mem_row: 0,
+    };
+    let lp = backend.decode(&[row], &mem).unwrap();
+    (0..full.len() - 1)
+        .map(|j| lp.logp(0, j, full[j + 1]) as f64)
+        .sum()
+}
+
+/// Random BOS/EOS-wrapped source of inner length in `[min_len, max_len]`,
+/// token ids in `[FIRST_REAL_TOKEN, vocab)`.
+pub fn random_wrapped_src(rng: &mut Rng, min_len: usize, max_len: usize, vocab: usize) -> Vec<i64> {
+    let len = rng.range(min_len, max_len);
+    let mut src = vec![BOS_ID];
+    for _ in 0..len {
+        src.push(rng.range(FIRST_REAL_TOKEN as usize, vocab - 1) as i64);
+    }
+    src.push(EOS_ID);
+    src
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn copy_model_is_conditionally_consistent() {
+        // The distribution at position j must be identical whether the row
+        // is decoded alone or alongside other rows / with a longer tail.
+        let m = CopyModel::new(32, 32, 20);
+        let src: Vec<i64> = vec![BOS_ID, 10, 11, 12, EOS_ID];
+        let mem = m.encode(&[&src]).unwrap();
+        let short = DecoderRow {
+            tokens: vec![BOS_ID, 10],
+            mem_row: 0,
+        };
+        let long = DecoderRow {
+            tokens: vec![BOS_ID, 10, 11, 12],
+            mem_row: 0,
+        };
+        let lp1 = m.decode(&[short.clone()], &mem).unwrap();
+        let lp2 = m.decode(&[long, short], &mem).unwrap();
+        for v in 0..20 {
+            assert_eq!(lp1.logp(0, 1, v), lp2.logp(1, 1, v));
+        }
+    }
+
+    #[test]
+    fn hash_model_is_conditionally_consistent() {
+        let m = HashModel::new(32, 32, 24, 42);
+        let src: Vec<i64> = vec![BOS_ID, 9, 8, 7, 6, EOS_ID];
+        let mem = m.encode(&[&src]).unwrap();
+        let a = DecoderRow {
+            tokens: vec![BOS_ID, 5, 6],
+            mem_row: 0,
+        };
+        let b = DecoderRow {
+            tokens: vec![BOS_ID, 5, 6, 9, 9, 9],
+            mem_row: 0,
+        };
+        let lp_a = m.decode(&[a], &mem).unwrap();
+        let lp_b = m.decode(&[b], &mem).unwrap();
+        for j in 0..3 {
+            for v in 0..24 {
+                assert!(
+                    (lp_a.logp(0, j, v) - lp_b.logp(0, j, v)).abs() < 1e-6,
+                    "mismatch at j={j} v={v}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn hash_model_distributions_are_normalized() {
+        let m = HashModel::new(32, 32, 24, 7);
+        let src: Vec<i64> = vec![BOS_ID, 4, 5, EOS_ID];
+        let mem = m.encode(&[&src]).unwrap();
+        let row = DecoderRow {
+            tokens: vec![BOS_ID, 4],
+            mem_row: 0,
+        };
+        let lp = m.decode(&[row], &mem).unwrap();
+        for j in 0..2 {
+            let s: f64 = (0..24)
+                .map(|v| (lp.logp(0, j, v) as f64).exp())
+                .sum();
+            assert!((s - 1.0).abs() < 1e-4, "sum {s} at j={j}");
+        }
+    }
+
+    #[test]
+    fn hash_model_never_prefers_specials() {
+        let m = HashModel::new(32, 32, 24, 3);
+        let mut rng = Rng::new(2);
+        let src = random_wrapped_src(&mut rng, 4, 10, 24);
+        let mem = m.encode(&[&src]).unwrap();
+        let row = DecoderRow {
+            tokens: vec![BOS_ID, 6, 7, 8],
+            mem_row: 0,
+        };
+        let lp = m.decode(&[row], &mem).unwrap();
+        for j in 0..4 {
+            let am = lp.argmax(0, j);
+            assert!(am != PAD_ID && am != BOS_ID && am != UNK_ID);
+        }
+    }
+
+    #[test]
+    fn different_memory_rows_give_different_distributions() {
+        let m = HashModel::new(32, 32, 24, 5);
+        let s1: Vec<i64> = vec![BOS_ID, 10, 11, EOS_ID];
+        let s2: Vec<i64> = vec![BOS_ID, 12, 13, EOS_ID];
+        let mem = m.encode(&[&s1, &s2]).unwrap();
+        let rows = vec![
+            DecoderRow {
+                tokens: vec![BOS_ID, 4],
+                mem_row: 0,
+            },
+            DecoderRow {
+                tokens: vec![BOS_ID, 4],
+                mem_row: 1,
+            },
+        ];
+        let lp = m.decode(&rows, &mem).unwrap();
+        let d0: Vec<f32> = (0..24).map(|v| lp.logp(0, 1, v)).collect();
+        let d1: Vec<f32> = (0..24).map(|v| lp.logp(1, 1, v)).collect();
+        assert_ne!(d0, d1);
+    }
+}

@@ -1,0 +1,200 @@
+//! Token vocabulary shared across the stack.
+//!
+//! Built once by `gen-data` from the training corpus, written to
+//! `data/vocab.txt` (one token per line, line number = id), and consumed by
+//! the Python trainer / AOT pipeline and the Rust runtime. The encoder and
+//! decoder share one dictionary, as in the paper (Appendix A).
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::chem::tokenizer::tokenize;
+
+/// Reserved special-token ids. These are fixed by convention so both the
+/// Python and Rust sides can hard-code them.
+pub const PAD_ID: i64 = 0;
+pub const BOS_ID: i64 = 1;
+pub const EOS_ID: i64 = 2;
+pub const UNK_ID: i64 = 3;
+
+pub const PAD_TOK: &str = "<pad>";
+pub const BOS_TOK: &str = "<bos>";
+pub const EOS_TOK: &str = "<eos>";
+pub const UNK_TOK: &str = "<unk>";
+
+/// Bidirectional token ↔ id mapping.
+#[derive(Debug, Clone)]
+pub struct Vocab {
+    id_to_tok: Vec<String>,
+    tok_to_id: HashMap<String, i64>,
+}
+
+impl Vocab {
+    /// Build from an iterator of corpus strings (SMILES). Tokens are sorted
+    /// lexicographically for determinism; specials occupy ids 0..4.
+    pub fn build<'a, I: IntoIterator<Item = &'a str>>(corpus: I) -> Result<Vocab> {
+        let mut set = std::collections::BTreeSet::new();
+        for s in corpus {
+            for t in tokenize(s).with_context(|| format!("building vocab from {s:?}"))? {
+                set.insert(t);
+            }
+        }
+        let mut id_to_tok: Vec<String> = vec![
+            PAD_TOK.to_string(),
+            BOS_TOK.to_string(),
+            EOS_TOK.to_string(),
+            UNK_TOK.to_string(),
+        ];
+        id_to_tok.extend(set);
+        Ok(Self::from_tokens(id_to_tok))
+    }
+
+    fn from_tokens(id_to_tok: Vec<String>) -> Vocab {
+        let tok_to_id = id_to_tok
+            .iter()
+            .enumerate()
+            .map(|(i, t)| (t.clone(), i as i64))
+            .collect();
+        Vocab { id_to_tok, tok_to_id }
+    }
+
+    /// Number of entries including specials.
+    pub fn len(&self) -> usize {
+        self.id_to_tok.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.id_to_tok.is_empty()
+    }
+
+    /// Id for a token; `UNK_ID` for unknown tokens.
+    pub fn id(&self, tok: &str) -> i64 {
+        *self.tok_to_id.get(tok).unwrap_or(&UNK_ID)
+    }
+
+    /// Token for an id (panics on out-of-range: that is a programming error,
+    /// model logits are always sized to the vocab).
+    pub fn tok(&self, id: i64) -> &str {
+        &self.id_to_tok[id as usize]
+    }
+
+    /// Encode a SMILES string to ids (no BOS/EOS added).
+    pub fn encode(&self, smiles: &str) -> Result<Vec<i64>> {
+        Ok(tokenize(smiles)?.iter().map(|t| self.id(t)).collect())
+    }
+
+    /// Encode with BOS/EOS wrapping.
+    pub fn encode_wrapped(&self, smiles: &str) -> Result<Vec<i64>> {
+        let mut ids = vec![BOS_ID];
+        ids.extend(self.encode(smiles)?);
+        ids.push(EOS_ID);
+        Ok(ids)
+    }
+
+    /// Decode ids to a SMILES string, stopping at EOS and skipping
+    /// PAD/BOS/EOS.
+    pub fn decode(&self, ids: &[i64]) -> String {
+        let mut s = String::new();
+        for &id in ids {
+            if id == EOS_ID {
+                break;
+            }
+            if id == PAD_ID || id == BOS_ID {
+                continue;
+            }
+            s.push_str(self.tok(id));
+        }
+        s
+    }
+
+    /// Write `vocab.txt`: one token per line, line number == id.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let body = self.id_to_tok.join("\n") + "\n";
+        std::fs::write(path, body).with_context(|| format!("write {}", path.display()))
+    }
+
+    /// Load `vocab.txt`.
+    pub fn load(path: &Path) -> Result<Vocab> {
+        let body =
+            std::fs::read_to_string(path).with_context(|| format!("read {}", path.display()))?;
+        let toks: Vec<String> = body.lines().map(|l| l.to_string()).collect();
+        if toks.len() < 4
+            || toks[0] != PAD_TOK
+            || toks[1] != BOS_TOK
+            || toks[2] != EOS_TOK
+            || toks[3] != UNK_TOK
+        {
+            bail!(
+                "{} is not a rxnspec vocab file (bad specials header)",
+                path.display()
+            );
+        }
+        Ok(Self::from_tokens(toks))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn v() -> Vocab {
+        Vocab::build(["CCO", "c1ccccc1Br", "[nH]"]).unwrap()
+    }
+
+    #[test]
+    fn specials_have_fixed_ids() {
+        let v = v();
+        assert_eq!(v.id(PAD_TOK), PAD_ID);
+        assert_eq!(v.id(BOS_TOK), BOS_ID);
+        assert_eq!(v.id(EOS_TOK), EOS_ID);
+        assert_eq!(v.id(UNK_TOK), UNK_ID);
+    }
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        let v = v();
+        let ids = v.encode_wrapped("c1ccccc1Br").unwrap();
+        assert_eq!(ids[0], BOS_ID);
+        assert_eq!(*ids.last().unwrap(), EOS_ID);
+        assert_eq!(v.decode(&ids), "c1ccccc1Br");
+    }
+
+    #[test]
+    fn unknown_tokens_map_to_unk() {
+        let v = v();
+        // 'S' never appeared in the build corpus.
+        let ids = v.encode("S").unwrap();
+        assert_eq!(ids, vec![UNK_ID]);
+    }
+
+    #[test]
+    fn decode_stops_at_eos() {
+        let v = v();
+        let c = v.id("C");
+        let ids = vec![BOS_ID, c, EOS_ID, c, c];
+        assert_eq!(v.decode(&ids), "C");
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let v = v();
+        let dir = std::env::temp_dir().join("rxnspec_vocab_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("vocab.txt");
+        v.save(&p).unwrap();
+        let v2 = Vocab::load(&p).unwrap();
+        assert_eq!(v.len(), v2.len());
+        for i in 0..v.len() {
+            assert_eq!(v.tok(i as i64), v2.tok(i as i64));
+        }
+    }
+
+    #[test]
+    fn build_is_deterministic() {
+        let a = Vocab::build(["CCO", "NCC"]).unwrap();
+        let b = Vocab::build(["NCC", "CCO"]).unwrap();
+        assert_eq!(a.id_to_tok, b.id_to_tok);
+    }
+}

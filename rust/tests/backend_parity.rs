@@ -1,0 +1,103 @@
+//! Integration: the AOT artifact run by PJRT must agree with the
+//! independent pure-Rust reference implementation — the reproduction of
+//! the paper's Table 1 exercise ("our reimplementation matches the
+//! original"). Requires `make artifacts`; tests no-op politely otherwise
+//! so `cargo test` stays green on a fresh checkout.
+
+use rxnspec::decoding::{beam_search, greedy, Backend, DecoderRow};
+use rxnspec::runtime::AnyBackend;
+use rxnspec::vocab::Vocab;
+use std::path::Path;
+
+fn setup() -> Option<(Vocab, AnyBackend, AnyBackend, Vec<rxnspec::chem::Example>)> {
+    let arts = Path::new("artifacts");
+    let data = Path::new("data");
+    if !arts.join("manifest.tsv").exists() || !data.join("vocab.txt").exists() {
+        eprintln!("skipping backend parity tests: run `make artifacts` first");
+        return None;
+    }
+    let vocab = Vocab::load(&data.join("vocab.txt")).unwrap();
+    let pjrt = AnyBackend::load("pjrt", arts, "fwd").unwrap();
+    let rust = AnyBackend::load("rust", arts, "fwd").unwrap();
+    let split = rxnspec::chem::read_split(&data.join("fwd_test.tsv")).unwrap();
+    Some((vocab, pjrt, rust, split))
+}
+
+#[test]
+fn logprobs_close_between_backends() {
+    let Some((vocab, pjrt, rust, split)) = setup() else {
+        return;
+    };
+    let mut max_diff = 0f32;
+    for ex in &split[..5] {
+        let src = vocab.encode_wrapped(&ex.src).unwrap();
+        let mem_p = pjrt.encode(&[&src]).unwrap();
+        let mem_r = rust.encode(&[&src]).unwrap();
+        // Decode a teacher-forced prefix of the true target.
+        let tgt = vocab.encode(&ex.tgt).unwrap();
+        let mut row = vec![rxnspec::vocab::BOS_ID];
+        row.extend(&tgt[..tgt.len().min(10)]);
+        let rows = vec![DecoderRow {
+            tokens: row.clone(),
+            mem_row: 0,
+        }];
+        let lp_p = pjrt.decode(&rows, &mem_p).unwrap();
+        let lp_r = rust.decode(&rows, &mem_r).unwrap();
+        for j in 0..row.len() {
+            for v in 0..pjrt.dims().vocab as i64 {
+                let d = (lp_p.logp(0, j, v) - lp_r.logp(0, j, v)).abs();
+                max_diff = max_diff.max(d);
+            }
+            assert_eq!(
+                lp_p.argmax(0, j),
+                lp_r.argmax(0, j),
+                "argmax diverged at {j} for {}",
+                ex.src
+            );
+        }
+    }
+    eprintln!("max |Δlogp| between backends: {max_diff:.2e}");
+    assert!(max_diff < 5e-3, "backends diverged: {max_diff}");
+}
+
+#[test]
+fn greedy_outputs_identical_across_backends() {
+    let Some((vocab, pjrt, rust, split)) = setup() else {
+        return;
+    };
+    let mut agree = 0;
+    let total = 10.min(split.len());
+    for ex in &split[..total] {
+        let src = vocab.encode_wrapped(&ex.src).unwrap();
+        let a = greedy(&pjrt, &src).unwrap();
+        let b = greedy(&rust, &src).unwrap();
+        if a.hyps[0].tokens == b.hyps[0].tokens {
+            agree += 1;
+        }
+    }
+    // Near-ties can flip argmax between float implementations; demand
+    // overwhelming (not bit-perfect) agreement, as the paper's Table 1
+    // tolerates ±0.2pp.
+    assert!(agree * 10 >= total * 9, "only {agree}/{total} greedy agreement");
+}
+
+#[test]
+fn beam5_sets_overlap_across_backends() {
+    let Some((vocab, pjrt, rust, split)) = setup() else {
+        return;
+    };
+    let mut overlap = 0usize;
+    let total = 5.min(split.len());
+    for ex in &split[..total] {
+        let src = vocab.encode_wrapped(&ex.src).unwrap();
+        let a = beam_search(&pjrt, &src, 5).unwrap();
+        let b = beam_search(&rust, &src, 5).unwrap();
+        let set_b: std::collections::HashSet<_> = b.hyps.iter().map(|h| &h.tokens).collect();
+        overlap += a.hyps.iter().filter(|h| set_b.contains(&h.tokens)).count();
+    }
+    assert!(
+        overlap * 100 >= 5 * total * 80,
+        "top-5 overlap too low: {overlap}/{}",
+        5 * total
+    );
+}

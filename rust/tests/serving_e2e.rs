@@ -1,0 +1,174 @@
+//! Integration: the paper's core claims on the *trained* model.
+//!
+//! * speculative greedy is token-exact vs greedy on real reactions and
+//!   uses several-fold fewer decoder calls (Table 2's mechanism),
+//! * SBS matches BS hypothesis sets on the trained (low-entropy) model
+//!   (Table 4's mechanism) with fewer calls,
+//! * the trained model actually solves the task (accuracy floor),
+//! * the full TCP serving stack round-trips with the PJRT backend.
+//!
+//! Requires `make artifacts`; tests no-op politely otherwise.
+
+use rxnspec::decoding::{beam_search, greedy, sbs, spec_greedy, SbsConfig};
+use rxnspec::draft::DraftConfig;
+use rxnspec::runtime::AnyBackend;
+use rxnspec::vocab::Vocab;
+use std::path::Path;
+
+fn setup(task: &str) -> Option<(Vocab, AnyBackend, Vec<rxnspec::chem::Example>)> {
+    let arts = Path::new("artifacts");
+    let data = Path::new("data");
+    if !arts.join("manifest.tsv").exists() {
+        eprintln!("skipping serving e2e tests: run `make artifacts` first");
+        return None;
+    }
+    let vocab = Vocab::load(&data.join("vocab.txt")).unwrap();
+    let backend = AnyBackend::load("pjrt", arts, task).unwrap();
+    let split = rxnspec::chem::read_split(&data.join(format!("{task}_test.tsv"))).unwrap();
+    Some((vocab, backend, split))
+}
+
+#[test]
+fn spec_greedy_lossless_and_fewer_calls_on_trained_model() {
+    let Some((vocab, backend, split)) = setup("fwd") else {
+        return;
+    };
+    let mut call_ratio = 0f64;
+    let n = 8.min(split.len());
+    for ex in &split[..n] {
+        let src = vocab.encode_wrapped(&ex.src).unwrap();
+        let g = greedy(&backend, &src).unwrap();
+        let s = spec_greedy(&backend, &src, &DraftConfig::new(10)).unwrap();
+        assert_eq!(
+            g.hyps[0].tokens, s.hyps[0].tokens,
+            "speculative decoding changed the output for {}",
+            ex.src
+        );
+        call_ratio += g.stats.decoder_calls as f64 / s.stats.decoder_calls as f64;
+    }
+    call_ratio /= n as f64;
+    eprintln!("mean greedy/spec call ratio: {call_ratio:.2}x");
+    assert!(
+        call_ratio > 2.0,
+        "expected >2x fewer decoder calls, got {call_ratio:.2}x"
+    );
+}
+
+#[test]
+fn sbs_matches_beam_search_on_trained_model() {
+    let Some((vocab, backend, split)) = setup("retro") else {
+        return;
+    };
+    // The paper's Table 4 metric: top-N *accuracy* (is the ground truth
+    // among the top N hypotheses), which must be identical between BS and
+    // SBS. (Hypothesis sets need not be byte-identical — the corpus
+    // contains equal-probability reactant-order permutations whose
+    // ordering is tie-noise.)
+    let n_beam = 5;
+    let n = 8.min(split.len());
+    let mut acc = [[0usize; 2]; 2]; // [algo][k ∈ {1, 5}]
+    let mut fewer_calls = 0usize;
+    for ex in &split[..n] {
+        let src = vocab.encode_wrapped(&ex.src).unwrap();
+        let b = beam_search(&backend, &src, n_beam).unwrap();
+        let s = sbs(&backend, &src, &SbsConfig::new(n_beam, 10)).unwrap();
+        for (ai, out) in [&b, &s].iter().enumerate() {
+            for (k, slot) in [(1usize, 0usize), (5, 1)] {
+                if out.hyps.iter().take(k).any(|h| vocab.decode(&h.tokens) == ex.tgt) {
+                    acc[ai][slot] += 1;
+                }
+            }
+        }
+        if s.stats.decoder_calls < b.stats.decoder_calls {
+            fewer_calls += 1;
+        }
+    }
+    eprintln!(
+        "BS top1/top5: {}/{} {}/{} | SBS: {}/{} {}/{}",
+        acc[0][0], n, acc[0][1], n, acc[1][0], n, acc[1][1], n
+    );
+    // Accuracy must match to within one example on this small sample —
+    // the paper itself reports a ±0.02pp tail difference at top-25; the
+    // larger-sample measurement lives in the table3 bench.
+    assert!(
+        acc[0][1].abs_diff(acc[1][1]) <= 1,
+        "top-5 accuracy diverged: {} vs {}",
+        acc[0][1],
+        acc[1][1]
+    );
+    assert!(
+        acc[0][0].abs_diff(acc[1][0]) <= 2,
+        "top-1 accuracy diverged: {} vs {}",
+        acc[0][0],
+        acc[1][0]
+    );
+    assert!(
+        fewer_calls * 10 >= n * 7,
+        "SBS should use fewer calls on most queries ({fewer_calls}/{n})"
+    );
+}
+
+#[test]
+fn trained_model_solves_the_synthetic_task() {
+    let Some((vocab, backend, split)) = setup("fwd") else {
+        return;
+    };
+    let n = 20.min(split.len());
+    let mut hits = 0usize;
+    for ex in &split[..n] {
+        let src = vocab.encode_wrapped(&ex.src).unwrap();
+        let g = greedy(&backend, &src).unwrap();
+        if vocab.decode(&g.hyps[0].tokens) == ex.tgt {
+            hits += 1;
+        }
+    }
+    eprintln!("fwd top-1 exact match: {hits}/{n}");
+    assert!(
+        hits * 2 >= n,
+        "trained model accuracy below 50% ({hits}/{n}) — undertrained artifacts?"
+    );
+}
+
+#[test]
+fn tcp_serving_round_trip_with_pjrt() {
+    use rxnspec::coordinator::{
+        run_worker, serve, Client, Metrics, RequestQueue, ServerState,
+    };
+    use std::net::TcpListener;
+    use std::sync::atomic::AtomicBool;
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    let Some((_, _, split)) = setup("fwd") else {
+        return;
+    };
+    let state = Arc::new(ServerState {
+        queue: RequestQueue::new(8, Duration::from_millis(2)),
+        metrics: Arc::new(Metrics::default()),
+        shutdown: AtomicBool::new(false),
+    });
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let accept_state = Arc::clone(&state);
+    std::thread::spawn(move || serve(listener, accept_state));
+    let worker_state = Arc::clone(&state);
+    let worker = std::thread::spawn(move || {
+        // PJRT handles are not Send: construct inside the thread.
+        let vocab = Vocab::load(Path::new("data/vocab.txt")).unwrap();
+        let backend = AnyBackend::load("pjrt", Path::new("artifacts"), "fwd").unwrap();
+        run_worker(&backend, &vocab, &worker_state.queue, &worker_state.metrics);
+    });
+
+    let mut c = Client::connect(&addr).unwrap();
+    assert!(c.ping().unwrap());
+    let q = &split[0].src;
+    let greedy_p = c.predict("greedy", q).unwrap();
+    let spec_p = c.predict("spec:10", q).unwrap();
+    assert_eq!(greedy_p.hyps[0].0, spec_p.hyps[0].0, "serving losslessness");
+    assert!(spec_p.decoder_calls <= greedy_p.decoder_calls);
+    let beam_p = c.predict("bs:3", q).unwrap();
+    assert_eq!(beam_p.hyps.len(), 3);
+
+    state.queue.close();
+    worker.join().unwrap();
+}
