@@ -15,6 +15,7 @@
 use rxnspec::bench::{eval_setup, limit, measure, report, speedup, DeviceModel};
 use rxnspec::decoding::{greedy_batch, spec_greedy_batch, Backend};
 use rxnspec::draft::DraftConfig;
+use rxnspec::testutil::ForceStateless;
 
 fn main() -> anyhow::Result<()> {
     let (vocab, backend, split) = eval_setup("fwd")?;
@@ -31,21 +32,50 @@ fn main() -> anyhow::Result<()> {
 
     let mut rows = Vec::new();
 
-    // GREEDY (B=1): one query at a time.
+    // GREEDY (B=1): one query at a time, KV-cached session path.
     rows.push(measure("greedy (B=1)", 0, 2, || {
         let _ = backend.take_call_log();
         let mut calls = 0usize;
         let mut toks = 0usize;
+        let mut computed = 0usize;
         for s in &refs {
             let out = greedy_batch(&backend, &[s]).unwrap();
             calls += out[0].stats.decoder_calls;
             toks += out[0].hyps[0].tokens.len();
+            computed += out[0].stats.tokens_computed;
         }
         let proj = dm.project(&backend.take_call_log());
         vec![
             ("calls".into(), calls as f64),
             ("tokens".into(), toks as f64),
             ("acc_rate".into(), 0.0),
+            ("recomp_tok".into(), computed as f64 / toks.max(1) as f64),
+            ("proj_s".into(), proj),
+        ]
+    }));
+
+    // GREEDY (B=1) with the session cache suppressed — the pre-session
+    // baseline. The per-step decoder FLOPs proxy ("recomp_tok": token
+    // positions recomputed per emitted token) quantifies what KV caching
+    // saves; outputs must not change at all.
+    rows.push(measure("greedy (B=1, no-cache)", 0, 2, || {
+        let nocache = ForceStateless(&backend);
+        let _ = backend.take_call_log();
+        let mut calls = 0usize;
+        let mut toks = 0usize;
+        let mut computed = 0usize;
+        for s in &refs {
+            let out = greedy_batch(&nocache, &[s]).unwrap();
+            calls += out[0].stats.decoder_calls;
+            toks += out[0].hyps[0].tokens.len();
+            computed += out[0].stats.tokens_computed;
+        }
+        let proj = dm.project(&backend.take_call_log());
+        vec![
+            ("calls".into(), calls as f64),
+            ("tokens".into(), toks as f64),
+            ("acc_rate".into(), 0.0),
+            ("recomp_tok".into(), computed as f64 / toks.max(1) as f64),
             ("proj_s".into(), proj),
         ]
     }));
@@ -57,11 +87,13 @@ fn main() -> anyhow::Result<()> {
             let _ = backend.take_call_log();
             let mut calls = 0usize;
             let mut toks = 0usize;
+            let mut computed = 0usize;
             let mut acc = rxnspec::draft::Acceptance::default();
             for s in &refs {
                 let out = spec_greedy_batch(&backend, &[s], &cfg).unwrap();
                 calls += out[0].stats.decoder_calls;
                 toks += out[0].hyps[0].tokens.len();
+                computed += out[0].stats.tokens_computed;
                 acc.merge(&out[0].stats.acceptance);
             }
             let proj = dm.project(&backend.take_call_log());
@@ -69,6 +101,7 @@ fn main() -> anyhow::Result<()> {
                 ("calls".into(), calls as f64),
                 ("tokens".into(), toks as f64),
                 ("acc_rate".into(), acc.rate()),
+                ("recomp_tok".into(), computed as f64 / toks.max(1) as f64),
                 ("proj_s".into(), proj),
             ]
         }));
@@ -79,16 +112,19 @@ fn main() -> anyhow::Result<()> {
         let _ = backend.take_call_log();
         let mut calls = 0usize;
         let mut toks = 0usize;
+        let mut computed = 0usize;
         for chunk in refs.chunks(32) {
             let out = greedy_batch(&backend, chunk).unwrap();
             calls += out[0].stats.decoder_calls;
             toks += out.iter().map(|o| o.hyps[0].tokens.len()).sum::<usize>();
+            computed += out[0].stats.tokens_computed;
         }
         let proj = dm.project(&backend.take_call_log());
         vec![
             ("calls".into(), calls as f64),
             ("tokens".into(), toks as f64),
             ("acc_rate".into(), 0.0),
+            ("recomp_tok".into(), computed as f64 / toks.max(1) as f64),
             ("proj_s".into(), proj),
         ]
     }));
@@ -97,32 +133,47 @@ fn main() -> anyhow::Result<()> {
     println!(
         "\nwall speedups vs greedy B=1: DL=4 {:.2}x (paper 2.4x), DL=10 {:.2}x (paper 3.6x), \
          B=32 {:.2}x (paper 15x)",
-        speedup(&rows[0], &rows[1]),
         speedup(&rows[0], &rows[2]),
         speedup(&rows[0], &rows[3]),
+        speedup(&rows[0], &rows[4]),
     );
-    let proj = |r: &rxnspec::bench::Measurement| {
-        r.aux.iter().find(|a| a.0 == "proj_s").map(|a| a.1).unwrap_or(0.0)
+    let aux = |r: &rxnspec::bench::Measurement, k: &str| {
+        r.aux.iter().find(|a| a.0 == k).map(|a| a.1).unwrap_or(0.0)
     };
     println!(
         "parallel-device projection: greedy {:.2}s -> DL=4 {:.2}s ({:.2}x), DL=10 {:.2}s ({:.2}x)",
-        proj(&rows[0]),
-        proj(&rows[1]),
-        proj(&rows[0]) / proj(&rows[1]),
-        proj(&rows[2]),
-        proj(&rows[0]) / proj(&rows[2]),
+        aux(&rows[0], "proj_s"),
+        aux(&rows[2], "proj_s"),
+        aux(&rows[0], "proj_s") / aux(&rows[2], "proj_s"),
+        aux(&rows[3], "proj_s"),
+        aux(&rows[0], "proj_s") / aux(&rows[3], "proj_s"),
     );
     println!(
         "acceptance rate DL=10: {:.0}% (paper: 79%)",
-        rows[2].aux.iter().find(|a| a.0 == "acc_rate").unwrap().1 * 100.0
+        aux(&rows[3], "acc_rate") * 100.0
+    );
+    // The session-cache acceptance criterion: ≥2x fewer token positions
+    // recomputed per emitted token vs the stateless baseline (the
+    // reference backend's KV-cached session computes each position once;
+    // the PJRT fallback reports parity until artifacts grow cache
+    // inputs).
+    let (cached, stateless) = (aux(&rows[0], "recomp_tok"), aux(&rows[1], "recomp_tok"));
+    println!(
+        "decoder FLOPs proxy (tokens recomputed per emitted token): \
+         cached {cached:.2} vs stateless {stateless:.2} ({:.2}x reduction)",
+        stateless / cached.max(1e-9)
     );
 
-    // Sanity: speculative outputs are identical to greedy outputs.
-    let g = greedy_batch(&backend, &refs[..5.min(refs.len())])?;
-    let s = spec_greedy_batch(&backend, &refs[..5.min(refs.len())], &DraftConfig::new(10))?;
-    for (a, b) in g.iter().zip(&s) {
+    // Sanity: speculative and cache-suppressed outputs are identical to
+    // greedy outputs.
+    let head = 5.min(refs.len());
+    let g = greedy_batch(&backend, &refs[..head])?;
+    let s = spec_greedy_batch(&backend, &refs[..head], &DraftConfig::new(10))?;
+    let nc = greedy_batch(&ForceStateless(&backend), &refs[..head])?;
+    for ((a, b), c) in g.iter().zip(&s).zip(&nc) {
         assert_eq!(a.hyps[0].tokens, b.hyps[0].tokens, "losslessness violated");
+        assert_eq!(a.hyps[0].tokens, c.hyps[0].tokens, "session cache changed output");
     }
-    println!("losslessness check passed (greedy == speculative outputs)");
+    println!("losslessness check passed (greedy == speculative == no-cache outputs)");
     Ok(())
 }

@@ -39,13 +39,20 @@ fn main() -> anyhow::Result<()> {
             let _ = backend.take_call_log();
             bs_hyps.clear();
             let mut calls = 0usize;
+            let (mut computed, mut reused) = (0usize, 0usize);
             for s in &srcs {
                 let out = beam_search(&backend, s, n).unwrap();
                 calls += out.stats.decoder_calls;
+                computed += out.stats.tokens_computed;
+                reused += out.stats.tokens_reused;
                 bs_hyps.push(out.hyps.iter().map(|h| h.tokens.clone()).collect());
             }
             let proj = dm.project(&backend.take_call_log());
-            vec![("calls".into(), calls as f64), ("proj_s".into(), proj)]
+            vec![
+                ("calls".into(), calls as f64),
+                ("reuse".into(), reused as f64 / (computed + reused).max(1) as f64),
+                ("proj_s".into(), proj),
+            ]
         });
 
         // SBS DL=10 and the DL=0 control.
@@ -54,23 +61,37 @@ fn main() -> anyhow::Result<()> {
             let _ = backend.take_call_log();
             sbs_hyps.clear();
             let mut calls = 0usize;
+            let (mut computed, mut reused) = (0usize, 0usize);
             for s in &srcs {
                 let out = sbs(&backend, s, &SbsConfig::new(n, 10)).unwrap();
                 calls += out.stats.decoder_calls;
+                computed += out.stats.tokens_computed;
+                reused += out.stats.tokens_reused;
                 sbs_hyps.push(out.hyps.iter().map(|h| h.tokens.clone()).collect());
             }
             let proj = dm.project(&backend.take_call_log());
-            vec![("calls".into(), calls as f64), ("proj_s".into(), proj)]
+            vec![
+                ("calls".into(), calls as f64),
+                ("reuse".into(), reused as f64 / (computed + reused).max(1) as f64),
+                ("proj_s".into(), proj),
+            ]
         });
         let m_sbs0 = measure(&format!("SBS n={n} DL=0"), 0, 1, || {
             let _ = backend.take_call_log();
             let mut calls = 0usize;
+            let (mut computed, mut reused) = (0usize, 0usize);
             for s in &srcs {
                 let out = sbs(&backend, s, &SbsConfig::new(n, 0)).unwrap();
                 calls += out.stats.decoder_calls;
+                computed += out.stats.tokens_computed;
+                reused += out.stats.tokens_reused;
             }
             let proj = dm.project(&backend.take_call_log());
-            vec![("calls".into(), calls as f64), ("proj_s".into(), proj)]
+            vec![
+                ("calls".into(), calls as f64),
+                ("reuse".into(), reused as f64 / (computed + reused).max(1) as f64),
+                ("proj_s".into(), proj),
+            ]
         });
 
         let pj = |m: &Measurement| m.aux.iter().find(|a| a.0 == "proj_s").map(|a| a.1).unwrap_or(0.0);

@@ -11,13 +11,48 @@
 //! regex; `data/golden_tokens.tsv` written by `gen-data` pins the two
 //! implementations together (checked by a pytest on the Python side).
 
-use once_cell::sync::Lazy;
-use regex::Regex;
-
-/// Schwaller et al. (2019) atomwise tokenization pattern.
+/// Schwaller et al. (2019) atomwise tokenization pattern. The scanner
+/// below implements exactly this alternation by hand (the offline crate
+/// set has no `regex`); the constant stays as the canonical spec and for
+/// parity with the Python implementation in `python/compile/data.py`.
 pub const SMILES_TOKEN_PATTERN: &str = r"(\[[^\]]+\]|Br|Cl|N|O|S|P|F|I|B|b|c|n|o|s|p|\(|\)|\.|=|#|-|\+|\\|/|:|~|@|\?|>|\*|\$|%[0-9]{2}|[0-9]|[A-Za-z])";
 
-static TOKEN_RE: Lazy<Regex> = Lazy::new(|| Regex::new(SMILES_TOKEN_PATTERN).unwrap());
+/// Length (in bytes) of the token starting at the head of `rest`, or
+/// `None` if no alternative of [`SMILES_TOKEN_PATTERN`] matches there.
+/// Alternatives are tried longest-first per position, matching the regex
+/// alternation order (bracket atom, `Br`/`Cl`, `%NN`, then single chars).
+fn token_len(rest: &str) -> Option<usize> {
+    let c = rest.chars().next()?;
+    match c {
+        '[' => {
+            // `\[[^\]]+\]`: at least one non-`]` char, then the closing `]`.
+            let mut len = 1usize;
+            let mut inner = 0usize;
+            for c2 in rest[1..].chars() {
+                if c2 == ']' {
+                    return if inner > 0 { Some(len + 1) } else { None };
+                }
+                inner += 1;
+                len += c2.len_utf8();
+            }
+            None // unterminated bracket atom
+        }
+        'B' if rest[1..].starts_with('r') => Some(2),
+        'C' if rest[1..].starts_with('l') => Some(2),
+        '%' => {
+            let b = rest.as_bytes();
+            if b.len() >= 3 && b[1].is_ascii_digit() && b[2].is_ascii_digit() {
+                Some(3)
+            } else {
+                None
+            }
+        }
+        c if c.is_ascii_alphanumeric() => Some(1),
+        '(' | ')' | '.' | '=' | '#' | '-' | '+' | '\\' | '/' | ':' | '~' | '@' | '?' | '>'
+        | '*' | '$' => Some(1),
+        _ => None,
+    }
+}
 
 /// Split a SMILES string into atomwise tokens.
 ///
@@ -26,21 +61,19 @@ static TOKEN_RE: Lazy<Regex> = Lazy::new(|| Regex::new(SMILES_TOKEN_PATTERN).unw
 pub fn tokenize(smiles: &str) -> Result<Vec<String>, TokenizeError> {
     let mut tokens = Vec::with_capacity(smiles.len());
     let mut consumed = 0usize;
-    for m in TOKEN_RE.find_iter(smiles) {
-        if m.start() != consumed {
-            return Err(TokenizeError {
-                smiles: smiles.to_string(),
-                at: consumed,
-            });
+    while consumed < smiles.len() {
+        match token_len(&smiles[consumed..]) {
+            Some(n) => {
+                tokens.push(smiles[consumed..consumed + n].to_string());
+                consumed += n;
+            }
+            None => {
+                return Err(TokenizeError {
+                    smiles: smiles.to_string(),
+                    at: consumed,
+                })
+            }
         }
-        tokens.push(m.as_str().to_string());
-        consumed = m.end();
-    }
-    if consumed != smiles.len() {
-        return Err(TokenizeError {
-            smiles: smiles.to_string(),
-            at: consumed,
-        });
     }
     Ok(tokens)
 }

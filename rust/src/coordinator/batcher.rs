@@ -117,6 +117,26 @@ impl<T> RequestQueue<T> {
         self.len() == 0
     }
 
+    /// Non-blocking: drain up to `max` requests from the queue head that
+    /// are batchable with `mode`, preserving FIFO order. Used by the
+    /// worker to admit newcomers into a **live decoding session**
+    /// between generation steps (continuous batching): the session stays
+    /// alive across batching ticks and fresh compatible requests join it
+    /// instead of waiting for the whole previous batch to finish.
+    pub fn try_pop_compatible(&self, mode: DecodeMode, max: usize) -> Vec<Request<T>> {
+        if max == 0 {
+            return Vec::new();
+        }
+        let mut g = self.inner.lock().unwrap();
+        let n = g
+            .queue
+            .iter()
+            .take(max)
+            .take_while(|r| r.mode.batchable_with(&mode))
+            .count();
+        g.queue.drain(..n).collect()
+    }
+
     /// Pop the next batch: the queue-head request plus every immediately
     /// following *compatible* request, up to `max_batch`. Blocks until the
     /// head has waited `max_wait` (or the batch is full, or the next
@@ -209,6 +229,35 @@ mod tests {
         assert_eq!(q.pop_batch().unwrap().len(), 2);
         assert_eq!(q.pop_batch().unwrap().len(), 2);
         assert_eq!(q.pop_batch().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn try_pop_compatible_respects_mode_max_and_fifo() {
+        let q: RequestQueue<usize> = RequestQueue::new(8, Duration::from_millis(1));
+        q.push(DecodeMode::Greedy, 1);
+        q.push(DecodeMode::Greedy, 2);
+        q.push(DecodeMode::Greedy, 3);
+        q.push(DecodeMode::SpecGreedy { dl: 4 }, 4);
+        q.push(DecodeMode::Greedy, 5);
+
+        // Cap respected, FIFO order kept.
+        let got = q.try_pop_compatible(DecodeMode::Greedy, 2);
+        assert_eq!(got.iter().map(|r| r.payload).collect::<Vec<_>>(), vec![1, 2]);
+        // Stops at the first incompatible request even with budget left.
+        let got = q.try_pop_compatible(DecodeMode::Greedy, 8);
+        assert_eq!(got.iter().map(|r| r.payload).collect::<Vec<_>>(), vec![3]);
+        // Head is now spec:4 — greedy admission gets nothing (never
+        // reorders across classes), spec admission drains it.
+        assert!(q.try_pop_compatible(DecodeMode::Greedy, 8).is_empty());
+        assert!(q.try_pop_compatible(DecodeMode::Greedy, 0).is_empty());
+        let got = q.try_pop_compatible(DecodeMode::SpecGreedy { dl: 4 }, 8);
+        assert_eq!(got.iter().map(|r| r.payload).collect::<Vec<_>>(), vec![4]);
+        // Beam requests are never batchable, even with themselves.
+        q.push(DecodeMode::Beam { n: 5 }, 6);
+        assert_eq!(q.len(), 2);
+        assert!(q
+            .try_pop_compatible(DecodeMode::Beam { n: 5 }, 8)
+            .is_empty());
     }
 
     #[test]

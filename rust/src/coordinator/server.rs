@@ -51,7 +51,7 @@ pub fn serve(listener: TcpListener, state: Arc<ServerState>) -> Result<()> {
                 });
             }
             Err(e) => {
-                log::warn!("accept error: {e}");
+                eprintln!("accept error: {e}");
             }
         }
     }
@@ -59,8 +59,6 @@ pub fn serve(listener: TcpListener, state: Arc<ServerState>) -> Result<()> {
 }
 
 fn handle_conn(stream: TcpStream, state: Arc<ServerState>) -> Result<()> {
-    let peer = stream.peer_addr()?;
-    log::info!("connection from {peer}");
     let mut reader = BufReader::new(stream.try_clone()?);
     let mut writer = stream;
     let mut line = String::new();

@@ -6,6 +6,15 @@
 //! worker split still gives the serving properties that matter: FIFO
 //! fairness, dynamic batching, and backpressure (bounded queue wait shows
 //! up in metrics rather than in stalled sockets).
+//!
+//! Greedy and speculative-greedy batches run as **live decoding
+//! sessions** ([`GreedyRun`] / [`SpecGreedyRun`]): the session stays
+//! alive across batching ticks, finished lanes reply immediately, and
+//! compatible requests that arrive mid-decode are admitted into the
+//! running session (`RequestQueue::try_pop_compatible`) instead of
+//! waiting behind the whole batch — continuous batching. Beam and SBS
+//! requests still run solo (their effective batch is already
+//! beams × drafts).
 
 use std::sync::atomic::Ordering;
 use std::sync::{mpsc, Arc};
@@ -15,10 +24,8 @@ use anyhow::Result;
 
 use crate::coordinator::batcher::{DecodeMode, Request, RequestQueue};
 use crate::coordinator::metrics::Metrics;
-use crate::decoding::{
-    beam_search, greedy_batch, sbs, spec_greedy_batch, Backend, DecodeOutput, SbsConfig,
-};
-use crate::draft::DraftConfig;
+use crate::decoding::{beam_search, sbs, Backend, GreedyRun, SbsConfig, SpecGreedyRun};
+use crate::draft::{Acceptance, DraftConfig};
 use crate::vocab::Vocab;
 
 /// One unit of serving work: a query SMILES and a reply channel.
@@ -56,7 +63,30 @@ pub fn run_worker<B: Backend>(
         metrics
             .batched_requests
             .fetch_add(batch.len() as u64, Ordering::Relaxed);
-        process_batch(backend, vocab, batch, metrics);
+        process_batch(backend, vocab, batch, queue, metrics);
+    }
+}
+
+/// Encode one request's SMILES, failing the request over its channel on
+/// bad input. Returns the wrapped token ids on success.
+fn validate<B: Backend>(
+    backend: &B,
+    vocab: &Vocab,
+    r: &Request<Job>,
+    metrics: &Arc<Metrics>,
+) -> Option<Vec<i64>> {
+    match vocab.encode_wrapped(&r.payload.smiles) {
+        Ok(ids) if ids.len() <= backend.dims().s_len => Some(ids),
+        Ok(_) => {
+            let _ = r.payload.resp.send(Err("query too long".to_string()));
+            metrics.requests_failed.fetch_add(1, Ordering::Relaxed);
+            None
+        }
+        Err(e) => {
+            let _ = r.payload.resp.send(Err(format!("bad SMILES: {e}")));
+            metrics.requests_failed.fetch_add(1, Ordering::Relaxed);
+            None
+        }
     }
 }
 
@@ -64,50 +94,40 @@ fn process_batch<B: Backend>(
     backend: &B,
     vocab: &Vocab,
     batch: Vec<Request<Job>>,
+    queue: &RequestQueue<Job>,
     metrics: &Arc<Metrics>,
 ) {
     let mode = batch[0].mode;
-    let t0 = Instant::now();
-
-    // Encode queries; invalid SMILES fail fast per request.
-    let mut srcs: Vec<Vec<i64>> = Vec::with_capacity(batch.len());
-    let mut ok_idx: Vec<usize> = Vec::new();
-    for (i, r) in batch.iter().enumerate() {
-        match vocab.encode_wrapped(&r.payload.smiles) {
-            Ok(ids) if ids.len() <= backend.dims().s_len => {
-                srcs.push(ids);
-                ok_idx.push(i);
-            }
-            Ok(_) => {
-                let _ = r.payload.resp.send(Err("query too long".to_string()));
-                metrics.requests_failed.fetch_add(1, Ordering::Relaxed);
-            }
-            Err(e) => {
-                let _ = r.payload.resp.send(Err(format!("bad SMILES: {e}")));
-                metrics.requests_failed.fetch_add(1, Ordering::Relaxed);
-            }
+    match mode {
+        DecodeMode::Greedy | DecodeMode::SpecGreedy { .. } => {
+            stream_batch(backend, vocab, batch, queue, metrics, mode)
+        }
+        DecodeMode::Beam { .. } | DecodeMode::Sbs { .. } => {
+            solo_batch(backend, vocab, batch, metrics, mode)
         }
     }
-    if srcs.is_empty() {
-        return;
-    }
-    let src_refs: Vec<&[i64]> = srcs.iter().map(|s| s.as_slice()).collect();
+}
 
-    let outputs: Result<Vec<DecodeOutput>> = match mode {
-        DecodeMode::Greedy => greedy_batch(backend, &src_refs),
-        DecodeMode::SpecGreedy { dl } => {
-            spec_greedy_batch(backend, &src_refs, &DraftConfig::new(dl))
-        }
-        DecodeMode::Beam { n } => {
-            // Solo class: the batcher hands us one request at a time.
-            beam_search(backend, src_refs[0], n).map(|o| vec![o])
-        }
-        DecodeMode::Sbs { n, dl } => sbs(backend, src_refs[0], &SbsConfig::new(n, dl)).map(|o| vec![o]),
-    };
-
-    match outputs {
-        Ok(outs) => {
-            for (out, &bi) in outs.iter().zip(&ok_idx) {
+/// Beam / SBS: the batcher hands us one request at a time.
+fn solo_batch<B: Backend>(
+    backend: &B,
+    vocab: &Vocab,
+    batch: Vec<Request<Job>>,
+    metrics: &Arc<Metrics>,
+    mode: DecodeMode,
+) {
+    for r in &batch {
+        let Some(src) = validate(backend, vocab, r, metrics) else {
+            continue;
+        };
+        let t0 = Instant::now();
+        let out = match mode {
+            DecodeMode::Beam { n } => beam_search(backend, &src, n),
+            DecodeMode::Sbs { n, dl } => sbs(backend, &src, &SbsConfig::new(n, dl)),
+            _ => unreachable!("solo_batch only handles beam/sbs"),
+        };
+        match out {
+            Ok(out) => {
                 metrics
                     .tokens_generated
                     .fetch_add(out.stats.acceptance.total_tokens as u64, Ordering::Relaxed);
@@ -128,20 +148,232 @@ fn process_batch<B: Backend>(
                     decoder_calls: out.stats.decoder_calls,
                     acceptance_rate: out.stats.acceptance.rate(),
                 };
-                let _ = batch[bi].payload.resp.send(Ok(reply));
+                let _ = r.payload.resp.send(Ok(reply));
             }
-        }
-        Err(e) => {
-            for &bi in &ok_idx {
-                let _ = batch[bi]
+            Err(e) => {
+                let _ = r
                     .payload
                     .resp
                     .send(Err(format!("decode failed: {e}")));
                 metrics.requests_failed.fetch_add(1, Ordering::Relaxed);
             }
         }
+        metrics.decode_latency.record(t0.elapsed());
     }
-    metrics.decode_latency.record(t0.elapsed());
+}
+
+/// Either incremental run type behind one dispatch surface.
+enum Run<'a> {
+    Greedy(GreedyRun<'a>),
+    Spec(SpecGreedyRun<'a>),
+}
+
+impl<'a> Run<'a> {
+    fn admit(&mut self, mem_row: usize, src: &[i64]) -> usize {
+        match self {
+            Run::Greedy(r) => r.admit(mem_row),
+            Run::Spec(r) => r.admit(mem_row, src),
+        }
+    }
+
+    fn append_memory(&mut self, extra: &crate::decoding::Memory) -> usize {
+        match self {
+            Run::Greedy(r) => r.session_mut().append_memory(extra),
+            Run::Spec(r) => r.session_mut().append_memory(extra),
+        }
+    }
+
+    fn step(&mut self) -> Result<Vec<usize>> {
+        match self {
+            Run::Greedy(r) => r.step(),
+            Run::Spec(r) => r.step(),
+        }
+    }
+
+    fn finished(&self) -> bool {
+        match self {
+            Run::Greedy(r) => r.finished(),
+            Run::Spec(r) => r.finished(),
+        }
+    }
+
+    fn n_live(&self) -> usize {
+        match self {
+            Run::Greedy(r) => r.n_live(),
+            Run::Spec(r) => r.n_live(),
+        }
+    }
+
+    fn calls(&self) -> usize {
+        match self {
+            Run::Greedy(r) => r.calls(),
+            Run::Spec(r) => r.calls(),
+        }
+    }
+
+    fn hyp_and_acceptance(&self, lane: usize) -> (crate::decoding::Hypothesis, Acceptance) {
+        match self {
+            Run::Greedy(r) => {
+                let h = r.hypothesis(lane);
+                let acc = Acceptance {
+                    accepted_draft_tokens: 0,
+                    total_tokens: h.tokens.len(),
+                };
+                (h, acc)
+            }
+            Run::Spec(r) => (r.hypothesis(lane), r.lane_acceptance(lane)),
+        }
+    }
+}
+
+/// Greedy / speculative-greedy: run a live session, replying per lane as
+/// it finishes and admitting compatible newcomers between steps.
+fn stream_batch<B: Backend>(
+    backend: &B,
+    vocab: &Vocab,
+    batch: Vec<Request<Job>>,
+    queue: &RequestQueue<Job>,
+    metrics: &Arc<Metrics>,
+    mode: DecodeMode,
+) {
+    let max_lanes = queue.max_batch.max(1);
+
+    // Validate and encode the initial batch.
+    let mut valid: Vec<(Request<Job>, Vec<i64>)> = Vec::new();
+    for r in batch {
+        if let Some(ids) = validate(backend, vocab, &r, metrics) {
+            valid.push((r, ids));
+        }
+    }
+    if valid.is_empty() {
+        return;
+    }
+    let refs: Vec<&[i64]> = valid.iter().map(|(_, ids)| ids.as_slice()).collect();
+    let fail_all = |valid: &[(Request<Job>, Vec<i64>)], e: String| {
+        for (r, _) in valid {
+            let _ = r.payload.resp.send(Err(e.clone()));
+            metrics.requests_failed.fetch_add(1, Ordering::Relaxed);
+        }
+    };
+    let memory = match backend.encode(&refs) {
+        Ok(m) => m,
+        Err(e) => return fail_all(&valid, format!("encode failed: {e}")),
+    };
+    let sess = match backend.begin(memory) {
+        Ok(s) => s,
+        Err(e) => return fail_all(&valid, format!("session failed: {e}")),
+    };
+    let mut run = match mode {
+        DecodeMode::SpecGreedy { dl } => Run::Spec(SpecGreedyRun::new(sess, DraftConfig::new(dl))),
+        _ => Run::Greedy(GreedyRun::new(sess)),
+    };
+
+    // Lane bookkeeping: reply channel, per-request decode timer, the
+    // session call count at admission (so the per-request decoder_calls
+    // stat covers only this request's lifetime), replied?
+    struct LaneCtx {
+        resp: mpsc::Sender<JobResult>,
+        t0: Instant,
+        calls_at_admit: usize,
+        replied: bool,
+    }
+    let mut lanes: Vec<LaneCtx> = Vec::new();
+    for (i, (r, ids)) in valid.iter().enumerate() {
+        let lane = run.admit(i, ids);
+        debug_assert_eq!(lane, lanes.len());
+        lanes.push(LaneCtx {
+            resp: r.payload.resp.clone(),
+            t0: Instant::now(),
+            calls_at_admit: run.calls(),
+            replied: false,
+        });
+    }
+    drop(valid);
+
+    // A session's encoder memory and cross-attention caches grow with
+    // every admitted query and are only reclaimed when the session
+    // drops, so a live session must not serve unboundedly many
+    // requests. After this many admissions the session drains and
+    // returns; remaining queued work starts a fresh session via the
+    // next `pop_batch` tick.
+    let max_session_admissions = max_lanes.saturating_mul(8);
+
+    loop {
+        let finished = match run.step() {
+            Ok(f) => f,
+            Err(e) => {
+                // Finished lanes already replied; fail the rest.
+                for l in lanes.iter().filter(|l| !l.replied) {
+                    let _ = l.resp.send(Err(format!("decode failed: {e}")));
+                    metrics.requests_failed.fetch_add(1, Ordering::Relaxed);
+                }
+                return;
+            }
+        };
+        for li in finished {
+            let (hyp, acc) = run.hyp_and_acceptance(li);
+            metrics
+                .tokens_generated
+                .fetch_add(acc.total_tokens as u64, Ordering::Relaxed);
+            metrics
+                .draft_tokens_accepted
+                .fetch_add(acc.accepted_draft_tokens as u64, Ordering::Relaxed);
+            metrics.requests_total.fetch_add(1, Ordering::Relaxed);
+            let reply = Reply {
+                hyps: vec![(vocab.decode(&hyp.tokens), hyp.score)],
+                decoder_calls: run.calls() - lanes[li].calls_at_admit,
+                acceptance_rate: acc.rate(),
+            };
+            let _ = lanes[li].resp.send(Ok(reply));
+            lanes[li].replied = true;
+            metrics.decode_latency.record(lanes[li].t0.elapsed());
+        }
+
+        // Continuous batching: admit compatible newcomers into the live
+        // session while there is lane budget and the session is young
+        // enough that its per-query caches stay bounded.
+        let free = max_lanes
+            .saturating_sub(run.n_live())
+            .min(max_session_admissions.saturating_sub(lanes.len()));
+        let newcomers = queue.try_pop_compatible(mode, free);
+        if !newcomers.is_empty() {
+            let now = Instant::now();
+            let mut adm: Vec<(Request<Job>, Vec<i64>)> = Vec::new();
+            for r in newcomers {
+                metrics.queue_wait.record(now.duration_since(r.enqueued));
+                metrics.batched_requests.fetch_add(1, Ordering::Relaxed);
+                if let Some(ids) = validate(backend, vocab, &r, metrics) {
+                    adm.push((r, ids));
+                }
+            }
+            if !adm.is_empty() {
+                let refs: Vec<&[i64]> = adm.iter().map(|(_, ids)| ids.as_slice()).collect();
+                match backend.encode(&refs) {
+                    Ok(extra) => {
+                        let base = run.append_memory(&extra);
+                        for (k, (r, ids)) in adm.iter().enumerate() {
+                            let lane = run.admit(base + k, ids);
+                            debug_assert_eq!(lane, lanes.len());
+                            lanes.push(LaneCtx {
+                                resp: r.payload.resp.clone(),
+                                t0: Instant::now(),
+                                calls_at_admit: run.calls(),
+                                replied: false,
+                            });
+                        }
+                    }
+                    Err(e) => fail_all(&adm, format!("encode failed: {e}")),
+                }
+            }
+        }
+
+        if run.finished() {
+            metrics
+                .decoder_calls
+                .fetch_add(run.calls() as u64, Ordering::Relaxed);
+            return;
+        }
+    }
 }
 
 #[cfg(test)]
@@ -213,6 +445,50 @@ mod tests {
         let r2 = rx2.recv().unwrap().unwrap();
         assert_eq!(r1.hyps[0].0, "CCO");
         assert_eq!(r2.hyps[0].0, "CCO");
-        assert!(r2.hyps.len() >= 1);
+        assert!(!r2.hyps.is_empty());
+    }
+
+    /// The session-alive-across-ticks behaviour, deterministically: a
+    /// request that arrives *after* the batch was popped is admitted
+    /// into the running session by `process_batch` itself.
+    #[test]
+    fn late_request_joins_live_session() {
+        let vocab = tiny_vocab();
+        let backend = CopyModel::new(96, 96, vocab.len());
+        let queue = RequestQueue::new(8, Duration::from_millis(1));
+        let metrics = Arc::new(Metrics::default());
+
+        let rx1 = send_job(&queue, DecodeMode::Greedy, "c1ccccc1");
+        let batch = queue.pop_batch().unwrap();
+        assert_eq!(batch.len(), 1);
+        // Arrives between batching ticks — after pop, before decode ends.
+        let rx2 = send_job(&queue, DecodeMode::Greedy, "CCO");
+        process_batch(&backend, &vocab, batch, &queue, &metrics);
+
+        assert_eq!(rx1.recv().unwrap().unwrap().hyps[0].0, "c1ccccc1");
+        assert_eq!(
+            rx2.recv().unwrap().unwrap().hyps[0].0,
+            "CCO",
+            "late request must be served by the same live session"
+        );
+        assert!(queue.is_empty(), "admission must drain the queue");
+        assert_eq!(metrics.requests_total.load(Ordering::Relaxed), 2);
+    }
+
+    /// Incompatible work is never pulled into a live session.
+    #[test]
+    fn live_session_skips_incompatible_head() {
+        let vocab = tiny_vocab();
+        let backend = CopyModel::new(96, 96, vocab.len());
+        let queue = RequestQueue::new(8, Duration::from_millis(1));
+        let metrics = Arc::new(Metrics::default());
+
+        let rx1 = send_job(&queue, DecodeMode::Greedy, "CCO");
+        let batch = queue.pop_batch().unwrap();
+        let _rx2 = send_job(&queue, DecodeMode::Beam { n: 2 }, "CCO");
+        process_batch(&backend, &vocab, batch, &queue, &metrics);
+
+        assert!(rx1.recv().unwrap().is_ok());
+        assert_eq!(queue.len(), 1, "beam request must stay queued");
     }
 }

@@ -19,7 +19,7 @@ use anyhow::Result;
 
 use crate::vocab::{BOS_ID, EOS_ID};
 
-use super::{Backend, DecodeOutput, DecodeStats, DecoderRow, Hypothesis};
+use super::{Backend, DecodeOutput, DecodeStats, Hypothesis};
 
 /// A live (unfinished) beam: tokens include the leading BOS; `score` is
 /// the raw cumulative log-probability of the generated tokens.
@@ -40,14 +40,18 @@ impl BeamState {
 /// Canonical candidate order: normalized score descending, lexicographic
 /// tokens as the deterministic tie-break. Both `beam_search` and `sbs`
 /// must use this exact order so their survivors coincide (Table 4).
-pub(crate) fn rank_candidates(candidates: &mut [BeamState]) {
-    candidates.sort_by(|a, b| {
+/// Generic over the container so candidates can carry session-row
+/// bookkeeping alongside their [`BeamState`].
+pub(crate) fn rank_by<T>(v: &mut [T], key: impl Fn(&T) -> &BeamState) {
+    v.sort_by(|a, b| {
+        let (a, b) = (key(a), key(b));
         b.norm()
             .partial_cmp(&a.norm())
             .unwrap()
             .then_with(|| a.tokens.cmp(&b.tokens))
     });
 }
+
 
 /// Collector for finished hypotheses shared by `beam_search` and `sbs`.
 pub(crate) struct BeamPool {
@@ -126,55 +130,77 @@ impl BeamPool {
 }
 
 /// Standard beam search with beam width (and number of returned
-/// hypotheses) `n`.
+/// hypotheses) `n`, on an incremental session.
+///
+/// Each surviving candidate is a [`fork`](super::DecoderSession::fork)
+/// of its parent's session row extended by one token, so a KV-cached
+/// backend computes exactly one position per beam per step.
 pub fn beam_search<B: Backend>(backend: &B, src: &[i64], n: usize) -> Result<DecodeOutput> {
     let t0 = Instant::now();
     let dims = backend.dims();
     let memory = backend.encode(&[src])?;
+    let mut sess = backend.begin(memory)?;
     let mut stats = DecodeStats {
         encoder_calls: 1,
         ..Default::default()
     };
 
-    let mut beams = vec![BeamState {
-        tokens: vec![BOS_ID],
-        score: 0.0,
+    struct Live {
+        state: BeamState,
+        row: usize,
+        sess_len: usize,
+    }
+
+    let root = sess.new_row(0);
+    let mut beams = vec![Live {
+        state: BeamState {
+            tokens: vec![BOS_ID],
+            score: 0.0,
+        },
+        row: root,
+        sess_len: 0,
     }];
     let mut pool = BeamPool::new(n);
 
     while !beams.is_empty() {
-        let rows: Vec<DecoderRow> = beams
+        // One decoder call over every beam's pending suffix (BOS on the
+        // first iteration, the single fresh token afterwards).
+        let deltas: Vec<(usize, &[i64])> = beams
             .iter()
-            .map(|b| DecoderRow {
-                tokens: b.tokens.clone(),
-                mem_row: 0,
-            })
+            .map(|b| (b.row, &b.state.tokens[b.sess_len..]))
             .collect();
-        let lp = backend.decode(&rows, &memory)?;
+        let lp = sess.extend(&deltas)?;
         stats.decoder_calls += 1;
-        stats.decoder_rows += rows.len();
+        stats.decoder_rows += deltas.len();
+        drop(deltas);
+        for b in beams.iter_mut() {
+            b.sess_len = b.state.tokens.len();
+        }
 
         // Expand every live beam by its top-n successors.
-        let mut candidates: Vec<BeamState> = Vec::with_capacity(beams.len() * n);
+        let mut candidates: Vec<(BeamState, usize)> = Vec::with_capacity(beams.len() * n);
         for (i, b) in beams.iter().enumerate() {
-            let j = b.tokens.len() - 1;
+            let j = b.state.tokens.len() - 1;
             for (tok, logp) in lp.topk(i, j, n) {
                 if tok == BOS_ID || tok == crate::vocab::PAD_ID {
                     continue; // structural tokens never extend a hypothesis
                 }
-                let mut tokens = b.tokens.clone();
+                let mut tokens = b.state.tokens.clone();
                 tokens.push(tok);
-                candidates.push(BeamState {
-                    tokens,
-                    score: b.score + logp as f64,
-                });
+                candidates.push((
+                    BeamState {
+                        tokens,
+                        score: b.state.score + logp as f64,
+                    },
+                    i,
+                ));
             }
         }
-        rank_candidates(&mut candidates);
+        rank_by(&mut candidates, |c| &c.0);
         candidates.truncate(n);
 
-        beams = Vec::with_capacity(n);
-        for c in candidates {
+        let mut next: Vec<Live> = Vec::with_capacity(n);
+        for (c, pi) in candidates {
             let gen_len = c.tokens.len() - 1;
             if *c.tokens.last().unwrap() == EOS_ID {
                 pool.push_finished(&c.tokens[..c.tokens.len() - 1], c.score, gen_len);
@@ -182,15 +208,29 @@ pub fn beam_search<B: Backend>(backend: &B, src: &[i64], n: usize) -> Result<Dec
                 // Window exhausted: retire as-is (no EOS).
                 pool.push_finished(&c.tokens, c.score, gen_len);
             } else {
-                beams.push(c);
+                let row = sess.fork(beams[pi].row);
+                next.push(Live {
+                    state: c,
+                    row,
+                    sess_len: beams[pi].sess_len,
+                });
             }
         }
-        let best_live_norm = beams.first().map(|b| b.norm()).unwrap_or(f64::NEG_INFINITY);
+        // Parents are superseded by their forks.
+        for b in &beams {
+            sess.release(b.row);
+        }
+        beams = next;
+        let best_live_norm = beams
+            .first()
+            .map(|b| b.state.norm())
+            .unwrap_or(f64::NEG_INFINITY);
         if pool.can_stop(best_live_norm) {
             break;
         }
     }
 
+    stats.absorb_session(&sess.stats());
     stats.wall = t0.elapsed();
     Ok(DecodeOutput {
         hyps: pool.sorted(),

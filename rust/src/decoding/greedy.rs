@@ -1,12 +1,147 @@
-//! Standard greedy decoding — the paper's baseline for Table 2.
+//! Standard greedy decoding — the paper's baseline for Table 2 — on
+//! incremental sessions.
+//!
+//! The decoding state lives in a [`GreedyRun`]: one session row per
+//! query ("lane"), extended by exactly one token per step, so a
+//! KV-cached backend computes one position per lane per step instead of
+//! re-running the whole prefix. Lanes can be admitted while the run is
+//! live (the coordinator's continuous batching); a freshly admitted lane
+//! simply joins the next step's `extend` call.
 
 use std::time::Instant;
 
 use anyhow::Result;
 
-use crate::vocab::EOS_ID;
+use crate::vocab::{BOS_ID, EOS_ID};
 
-use super::{Backend, DecodeOutput, DecodeStats, DecoderRow, Hypothesis};
+use super::{Backend, DecodeOutput, DecodeStats, DecoderSession, Hypothesis, SessionStats};
+
+struct Lane {
+    row: usize,
+    /// BOS + emitted tokens (including EOS once emitted).
+    tokens: Vec<i64>,
+    /// How many of `tokens` the session has committed (computed).
+    sess_len: usize,
+    score: f64,
+    done: bool,
+}
+
+/// A live greedy decode over a [`DecoderSession`]. See module docs.
+pub struct GreedyRun<'a> {
+    sess: Box<dyn DecoderSession + 'a>,
+    lanes: Vec<Lane>,
+    calls: usize,
+    rows_submitted: usize,
+}
+
+impl<'a> GreedyRun<'a> {
+    pub fn new(sess: Box<dyn DecoderSession + 'a>) -> GreedyRun<'a> {
+        GreedyRun {
+            sess,
+            lanes: Vec::new(),
+            calls: 0,
+            rows_submitted: 0,
+        }
+    }
+
+    /// Mutable access to the underlying session (for `append_memory`
+    /// when admitting new queries into a live run).
+    pub fn session_mut(&mut self) -> &mut (dyn DecoderSession + 'a) {
+        &mut *self.sess
+    }
+
+    /// Add a lane decoding against `mem_row`. Returns the lane id.
+    pub fn admit(&mut self, mem_row: usize) -> usize {
+        let row = self.sess.new_row(mem_row);
+        self.lanes.push(Lane {
+            row,
+            tokens: vec![BOS_ID],
+            sess_len: 0,
+            score: 0.0,
+            done: false,
+        });
+        self.lanes.len() - 1
+    }
+
+    pub fn n_lanes(&self) -> usize {
+        self.lanes.len()
+    }
+
+    pub fn n_live(&self) -> usize {
+        self.lanes.iter().filter(|l| !l.done).count()
+    }
+
+    pub fn finished(&self) -> bool {
+        self.lanes.iter().all(|l| l.done)
+    }
+
+    pub fn calls(&self) -> usize {
+        self.calls
+    }
+
+    pub fn rows_submitted(&self) -> usize {
+        self.rows_submitted
+    }
+
+    pub fn session_stats(&self) -> SessionStats {
+        self.sess.stats()
+    }
+
+    /// One lock-step generation step across all live lanes (one decoder
+    /// call). Returns the lanes that finished on this step.
+    pub fn step(&mut self) -> Result<Vec<usize>> {
+        let t_len = self.sess.dims().t_len;
+        let mut idxs: Vec<usize> = Vec::new();
+        let mut deltas: Vec<(usize, &[i64])> = Vec::new();
+        for (li, lane) in self.lanes.iter().enumerate() {
+            if lane.done {
+                continue;
+            }
+            idxs.push(li);
+            deltas.push((lane.row, &lane.tokens[lane.sess_len..]));
+        }
+        if idxs.is_empty() {
+            return Ok(Vec::new());
+        }
+        let lp = self.sess.extend(&deltas)?;
+        self.calls += 1;
+        self.rows_submitted += deltas.len();
+        drop(deltas);
+
+        let mut just_finished = Vec::new();
+        for (k, &li) in idxs.iter().enumerate() {
+            let lane = &mut self.lanes[li];
+            lane.sess_len = lane.tokens.len();
+            let j = lane.tokens.len() - 1;
+            let tok = lp.argmax(k, j);
+            lane.score += lp.logp(k, j, tok) as f64;
+            lane.tokens.push(tok);
+            if tok == EOS_ID || lane.tokens.len() >= t_len {
+                lane.done = true;
+                just_finished.push(li);
+            }
+        }
+        for &li in &just_finished {
+            // The trailing token is never committed; free the row's cache.
+            self.sess.release(self.lanes[li].row);
+        }
+        Ok(just_finished)
+    }
+
+    /// The decoded hypothesis of a finished (or still running) lane:
+    /// generated tokens without BOS, truncated at EOS.
+    pub fn hypothesis(&self, lane: usize) -> Hypothesis {
+        let l = &self.lanes[lane];
+        let mut tokens: Vec<i64> = l.tokens[1..].to_vec();
+        if let Some(pos) = tokens.iter().position(|&t| t == EOS_ID) {
+            tokens.truncate(pos);
+        }
+        Hypothesis {
+            tokens,
+            score: l.score,
+        }
+    }
+}
 
 /// Greedy-decode one query (batch size 1). `src` is BOS/EOS-wrapped.
 pub fn greedy<B: Backend>(backend: &B, src: &[i64]) -> Result<DecodeOutput> {
@@ -16,69 +151,38 @@ pub fn greedy<B: Backend>(backend: &B, src: &[i64]) -> Result<DecodeOutput> {
 
 /// Greedy-decode a batch of queries in lock-step, one decoder call per
 /// generation step (the Table 2 "B=32" configuration).
-///
-/// Finished rows keep riding along until every row is done — the standard
-/// padded-batch regime whose wall-clock is set by the longest sequence.
 pub fn greedy_batch<B: Backend>(backend: &B, srcs: &[&[i64]]) -> Result<Vec<DecodeOutput>> {
     let t0 = Instant::now();
-    let dims = backend.dims();
     let memory = backend.encode(srcs)?;
-    let mut stats = DecodeStats {
+    let n = srcs.len();
+    let mut run = GreedyRun::new(backend.begin(memory)?);
+    for i in 0..n {
+        run.admit(i);
+    }
+    while !run.finished() {
+        run.step()?;
+    }
+    let wall = t0.elapsed();
+
+    let sess = run.session_stats();
+    let base = DecodeStats {
+        decoder_calls: run.calls(),
         encoder_calls: 1,
+        decoder_rows: run.rows_submitted(),
+        tokens_computed: sess.tokens_computed,
+        tokens_reused: sess.tokens_reused,
         ..Default::default()
     };
-
-    let n = srcs.len();
-    let mut rows: Vec<DecoderRow> = (0..n)
-        .map(|i| DecoderRow {
-            tokens: vec![crate::vocab::BOS_ID],
-            mem_row: i,
-        })
-        .collect();
-    let mut scores = vec![0f64; n];
-    let mut done = vec![false; n];
-
-    while !done.iter().all(|&d| d) && rows[0].tokens.len() < dims.t_len {
-        let lp = backend.decode(&rows, &memory)?;
-        stats.decoder_calls += 1;
-        stats.decoder_rows += n;
-        for i in 0..n {
-            if done[i] {
-                // Keep row length in lock-step so the batch stays rectangular
-                // after right-alignment; content is ignored.
-                rows[i].tokens.push(EOS_ID);
-                continue;
-            }
-            let j = rows[i].tokens.len() - 1;
-            let tok = lp.argmax(i, j);
-            scores[i] += lp.logp(i, j, tok) as f64;
-            rows[i].tokens.push(tok);
-            stats.acceptance.total_tokens += 1;
-            if tok == EOS_ID {
-                done[i] = true;
-            }
-        }
-    }
-
-    let wall = t0.elapsed();
     Ok((0..n)
         .map(|i| {
-            let mut tokens: Vec<i64> = rows[i].tokens[1..].to_vec();
-            if let Some(pos) = tokens.iter().position(|&t| t == EOS_ID) {
-                tokens.truncate(pos);
-            }
-            let mut s = DecodeStats {
-                wall: wall / n as u32,
-                ..stats
-            };
+            let hyp = run.hypothesis(i);
+            let mut s = base;
             // Per-output stats share the batch totals; wall time is
             // apportioned evenly (callers mostly aggregate anyway).
-            s.acceptance.total_tokens = tokens.len();
+            s.wall = wall / n as u32;
+            s.acceptance.total_tokens = hyp.tokens.len();
             DecodeOutput {
-                hyps: vec![Hypothesis {
-                    tokens,
-                    score: scores[i],
-                }],
+                hyps: vec![hyp],
                 stats: s,
             }
         })
@@ -127,5 +231,42 @@ mod tests {
         let src = vec![BOS_ID, 10, 11, crate::vocab::EOS_ID];
         let out = greedy(&m, &src).unwrap();
         assert_eq!(out.hyps[0].tokens.len(), 15); // t_len - BOS
+    }
+
+    #[test]
+    fn stats_track_stateless_recompute_cost() {
+        // Through the StatelessSession every step recomputes the whole
+        // prefix: Σ_{k=1..L+1} k positions for L generated tokens + EOS.
+        let m = CopyModel::new(96, 96, 40);
+        let src = vec![BOS_ID, 10, 11, 12, crate::vocab::EOS_ID];
+        let out = greedy(&m, &src).unwrap();
+        let l = out.hyps[0].tokens.len(); // 3 + EOS step = 4 calls
+        let expect: usize = (1..=l + 1).sum();
+        assert_eq!(out.stats.tokens_computed, expect);
+        assert_eq!(out.stats.tokens_reused, 0);
+        assert!(out.stats.recompute_per_token() > 1.0);
+    }
+
+    #[test]
+    fn lanes_admitted_mid_run_finish_correctly() {
+        // Simulates the coordinator admitting a query into a live
+        // session between batching ticks.
+        let m = CopyModel::new(96, 96, 40);
+        let a: Vec<i64> = vec![BOS_ID, 10, 11, 12, 13, 14, crate::vocab::EOS_ID];
+        let b: Vec<i64> = vec![BOS_ID, 20, 21, crate::vocab::EOS_ID];
+        let memory = m.encode(&[&a]).unwrap();
+        let mut run = GreedyRun::new(m.begin(memory).unwrap());
+        let la = run.admit(0);
+        run.step().unwrap();
+        run.step().unwrap();
+        // Newcomer joins after two ticks.
+        let extra = m.encode(&[&b]).unwrap();
+        let base = run.session_mut().append_memory(&extra);
+        let lb = run.admit(base);
+        while !run.finished() {
+            run.step().unwrap();
+        }
+        assert_eq!(run.hypothesis(la).tokens, m.target_for(&a));
+        assert_eq!(run.hypothesis(lb).tokens, m.target_for(&b));
     }
 }

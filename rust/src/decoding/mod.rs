@@ -1,29 +1,60 @@
-//! Decoding algorithms over an abstract model backend.
+//! Decoding algorithms over an abstract model backend, built on
+//! **incremental decoding sessions**.
 //!
 //! This module implements the paper's contribution: standard greedy and
 //! beam-search decoding, plus their speculative counterparts that copy
 //! query-SMILES subsequences into the target (§2.1 and Appendix B).
 //!
+//! # The session model
+//!
+//! Speculative decoding cuts the *number* of decoder calls, but a
+//! stateless `decode(rows)` interface still recomputes self-attention
+//! over the full prefix on every call, so per-step cost grows
+//! quadratically with target length. The companion optimization is KV
+//! caching: [`Backend::begin`] opens a [`DecoderSession`] that owns the
+//! encoder memory plus per-row decoder state, and exposes
+//!
+//! * [`DecoderSession::extend`] — append a window of tokens to chosen
+//!   rows and run **one** decoder forward pass over just the appended
+//!   region (the prefix's K/V come from the cache),
+//! * [`DecoderSession::truncate`] — roll back rejected draft tokens,
+//! * [`DecoderSession::fork`] — cheap copy-on-write branching for
+//!   beam-search / SBS hypotheses,
+//! * [`DecoderSession::append_memory`] — admit new queries into a live
+//!   session (the coordinator's continuous batching).
+//!
+//! Every decoder in this module drives a session; backends without a
+//! cache-aware implementation get the [`StatelessSession`] adapter, which
+//! reproduces the old recompute-everything behaviour behind the same
+//! interface. The *conditional-consistency contract* (below) makes
+//! cached and stateless decoding **token-exact equal** — property tests
+//! in `rust/tests/session_parity.rs` hold this as a hard invariant, not
+//! a tolerance check.
+//!
 //! All algorithms are generic over [`Backend`], which is implemented by
-//! the PJRT runtime (`runtime::PjrtBackend`, the production path), by the
-//! pure-Rust reference transformer (`runtime::reference`), and by
-//! deterministic mock models (`testutil`) used to property-test the
-//! algorithm invariants:
+//! the PJRT runtime (`runtime::PjrtBackend`, the production path, with a
+//! stateless-recompute session until artifacts grow cache inputs), by
+//! the pure-Rust reference transformer (`model::reference`, with a real
+//! KV-cached session), and by deterministic mock models (`testutil`)
+//! used to property-test the algorithm invariants:
 //!
 //! * speculative greedy is **token-exact** vs greedy,
 //! * speculative beam search with a never-accepted draft reduces to
 //!   standard beam search,
+//! * session-cached decoding is **token-exact** vs stateless decoding,
 //! * acceptance statistics are consistent with emitted tokens.
 
 mod beam;
 mod greedy;
 mod sbs;
+mod session;
 mod spec_greedy;
 
 pub use beam::beam_search;
-pub use greedy::{greedy, greedy_batch};
+pub use greedy::{greedy, greedy_batch, GreedyRun};
 pub use sbs::{hyps_to_smiles, sbs, sbs_traced, SbsConfig, SbsIterTrace, SbsTrace};
-pub use spec_greedy::{spec_greedy, spec_greedy_batch};
+pub use session::StatelessSession;
+pub use spec_greedy::{spec_greedy, spec_greedy_batch, SpecGreedyRun};
 
 use std::time::Duration;
 
@@ -173,11 +204,27 @@ impl LogProbs {
 
     /// Top-`k` successors at position `j` of `row`, sorted descending by
     /// log-probability (ties → lowest id first).
+    ///
+    /// Uses `select_nth_unstable_by` to partition the top `k` in O(V)
+    /// before sorting only those — beam search calls this per kept beam
+    /// per step, and the old full O(V log V) sort was pure overhead for
+    /// k ≪ V. The documented tie-break (lowest id first among equal
+    /// log-probs) is part of the comparator, so partial selection keeps
+    /// the exact same output as the full sort.
     pub fn topk(&self, row: usize, j: usize, k: usize) -> Vec<(i64, f32)> {
         let d = self.dist(row, j);
+        let k = k.min(d.len());
+        if k == 0 {
+            return Vec::new();
+        }
+        let cmp =
+            |a: &usize, b: &usize| d[*b].partial_cmp(&d[*a]).unwrap().then(a.cmp(b));
         let mut idx: Vec<usize> = (0..d.len()).collect();
-        idx.sort_by(|&a, &b| d[b].partial_cmp(&d[a]).unwrap().then(a.cmp(&b)));
-        idx.truncate(k);
+        if k < idx.len() {
+            idx.select_nth_unstable_by(k - 1, cmp);
+            idx.truncate(k);
+        }
+        idx.sort_by(cmp);
         idx.into_iter().map(|i| (i as i64, d[i])).collect()
     }
 }
@@ -187,7 +234,8 @@ impl LogProbs {
 /// Implementations must guarantee the *conditional-consistency contract*:
 /// the successor distribution at position `j` of a row depends only on the
 /// row's tokens `0..=j` and its memory row — never on other rows in the
-/// batch or on padding. Speculative decoding's losslessness rests on this.
+/// batch or on padding. Speculative decoding's losslessness — and the
+/// token-exactness of session caching — rest on this.
 pub trait Backend {
     fn dims(&self) -> ModelDims;
 
@@ -197,6 +245,81 @@ pub trait Backend {
     /// One decoder forward pass over `rows` (each row unpadded, starting
     /// with BOS; backends right-align into the fixed window).
     fn decode(&self, rows: &[DecoderRow], memory: &Memory) -> Result<LogProbs>;
+
+    /// Open an incremental decoding session over `memory`.
+    ///
+    /// The default wraps the backend in a [`StatelessSession`], which
+    /// re-submits full prefixes through [`Backend::decode`] — correct
+    /// for every conditionally-consistent backend, with no caching win.
+    /// Cache-aware backends (the pure-Rust reference transformer)
+    /// override this with sessions that reuse per-layer K/V state.
+    fn begin(&self, memory: Memory) -> Result<Box<dyn DecoderSession + '_>>
+    where
+        Self: Sized,
+    {
+        Ok(Box::new(StatelessSession::new(self, memory)))
+    }
+}
+
+/// Accounting for one [`DecoderSession`]: how much decoder work was done
+/// vs served from cache. `tokens_computed + tokens_reused` is the
+/// stateless-equivalent position count; the ratio is the FLOPs-proxy win.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SessionStats {
+    /// Decoder forward passes issued by `extend`.
+    pub extend_calls: usize,
+    /// Token positions actually computed (embedding + attention + FFN).
+    pub tokens_computed: usize,
+    /// Token positions whose per-layer K/V were reused from the cache
+    /// (a stateless backend would have recomputed them).
+    pub tokens_reused: usize,
+}
+
+/// One live incremental decode: per-row token state plus whatever cache
+/// the backend keeps (per-layer K/V for the reference transformer, plain
+/// token buffers for the stateless adapter).
+///
+/// Row ids are session-local handles. All mutators panic on a released
+/// row id — that is a decoder bug, not a recoverable condition.
+pub trait DecoderSession {
+    fn dims(&self) -> ModelDims;
+
+    /// The encoder memory this session decodes against.
+    fn memory(&self) -> &Memory;
+
+    /// Append freshly encoded rows to the session memory (continuous
+    /// batching: new queries joining a live session). Returns the index
+    /// of the first appended memory row.
+    fn append_memory(&mut self, extra: &Memory) -> usize;
+
+    /// Create an empty row attending to `mem_row`. Returns its id.
+    fn new_row(&mut self, mem_row: usize) -> usize;
+
+    /// Copy-on-write clone of `row`'s state. Returns the new row id.
+    fn fork(&mut self, row: usize) -> usize;
+
+    /// Roll `row` back to its first `len` tokens (`len` ≤ current).
+    fn truncate(&mut self, row: usize, len: usize);
+
+    /// Drop a row, freeing its cache. The id must not be used again.
+    fn release(&mut self, row: usize);
+
+    /// Current committed token count of `row`.
+    fn row_len(&self, row: usize) -> usize;
+
+    /// Append `tokens` to each listed row (ids must be distinct) and run
+    /// **one** decoder forward pass over the appended windows.
+    ///
+    /// The result's rows are indexed in `deltas` order with `row_lens`
+    /// equal to the post-append lengths, and its stored window covers at
+    /// least positions `j ∈ [max(len_before - 1, 0), len_after - 1]` of
+    /// each row — the successor distributions of the last pre-extend
+    /// token and of every appended token, i.e. everything needed to emit
+    /// the next token and to verify the appended draft region.
+    fn extend(&mut self, deltas: &[(usize, &[i64])]) -> Result<LogProbs>;
+
+    /// Cache accounting so far.
+    fn stats(&self) -> SessionStats;
 }
 
 /// Instrumentation for one decode run.
@@ -208,6 +331,11 @@ pub struct DecodeStats {
     pub encoder_calls: usize,
     /// Total decoder rows across all calls (effective batch · calls).
     pub decoder_rows: usize,
+    /// Decoder token positions actually computed across all calls.
+    pub tokens_computed: usize,
+    /// Token positions served from a session K/V cache instead of being
+    /// recomputed (always 0 on the stateless path).
+    pub tokens_reused: usize,
     /// Draft-token acceptance accounting.
     pub acceptance: Acceptance,
     /// Wall time of the whole decode.
@@ -219,8 +347,37 @@ impl DecodeStats {
         self.decoder_calls += o.decoder_calls;
         self.encoder_calls += o.encoder_calls;
         self.decoder_rows += o.decoder_rows;
+        self.tokens_computed += o.tokens_computed;
+        self.tokens_reused += o.tokens_reused;
         self.acceptance.merge(&o.acceptance);
         self.wall += o.wall;
+    }
+
+    /// Absorb a finished session's cache accounting.
+    pub fn absorb_session(&mut self, s: &SessionStats) {
+        self.tokens_computed += s.tokens_computed;
+        self.tokens_reused += s.tokens_reused;
+    }
+
+    /// The per-step decoder FLOPs proxy: token positions computed per
+    /// emitted token. Stateless greedy pays ~L/2 here (it recomputes the
+    /// whole prefix every step); a KV-cached session pays ~1.
+    pub fn recompute_per_token(&self) -> f64 {
+        if self.acceptance.total_tokens == 0 {
+            0.0
+        } else {
+            self.tokens_computed as f64 / self.acceptance.total_tokens as f64
+        }
+    }
+
+    /// Fraction of stateless-equivalent positions served from cache.
+    pub fn reuse_fraction(&self) -> f64 {
+        let total = self.tokens_computed + self.tokens_reused;
+        if total == 0 {
+            0.0
+        } else {
+            self.tokens_reused as f64 / total as f64
+        }
     }
 }
 
@@ -275,6 +432,28 @@ mod tests {
         let top = lp.topk(0, 0, 3);
         assert_eq!(top.iter().map(|t| t.0).collect::<Vec<_>>(), vec![0, 1, 2]);
         assert_eq!(lp.argmax(0, 0), 0);
+    }
+
+    #[test]
+    fn topk_partial_selection_pins_tie_order() {
+        // Ties straddling the selection cut: ids 0, 2, 3 share 0.5; with
+        // k = 3 the partial selection must keep exactly {1, 0, 2} and
+        // order them (0.7, id 1) then the 0.5s by ascending id — the
+        // same output the old full sort produced.
+        let data = vec![0.5, 0.7, 0.5, 0.5, 0.2];
+        let lp = LogProbs::new(data, vec![1], 1, 5);
+        let top = lp.topk(0, 0, 3);
+        assert_eq!(
+            top.iter().map(|t| t.0).collect::<Vec<_>>(),
+            vec![1, 0, 2]
+        );
+        // k larger than vocab degrades gracefully to a full sort.
+        let all = lp.topk(0, 0, 99);
+        assert_eq!(
+            all.iter().map(|t| t.0).collect::<Vec<_>>(),
+            vec![1, 0, 2, 3, 4]
+        );
+        assert!(lp.topk(0, 0, 0).is_empty());
     }
 
     #[test]

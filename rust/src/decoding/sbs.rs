@@ -1,4 +1,5 @@
-//! Speculative beam search (SBS) — the paper's Algorithm 1 (Appendix B).
+//! Speculative beam search (SBS) — the paper's Algorithm 1 (Appendix B) —
+//! on incremental sessions.
 //!
 //! At every iteration each live beam is concatenated with every draft and
 //! the whole ragged batch is verified in one decoder forward pass (rows are
@@ -8,6 +9,14 @@
 //! lengths* are proposed along that accepted prefix (`sample`: for every
 //! accepted length `j`, the top-n successor tokens), ranked by cumulative
 //! log-probability (`sortAndExtract`), and the best `n` survive.
+//!
+//! Session mechanics: each (beam × draft) verify row is a
+//! [`fork`](super::DecoderSession::fork) of the beam's committed row
+//! extended by `pending ‖ draft`; each surviving candidate forks the row
+//! of the draft it was sampled from and
+//! [`truncate`](super::DecoderSession::truncate)s it back to its accepted
+//! prefix, so the accepted tokens' K/V are *reused*, never recomputed.
+//! All other forks are released at the end of the iteration.
 //!
 //! With a never-accepted draft (DL=0 ⇒ a single BOS draft) the candidate
 //! set degenerates to "top-n successors of each beam" — exactly standard
@@ -20,8 +29,8 @@ use anyhow::Result;
 use crate::draft::{extract_drafts, DraftConfig};
 use crate::vocab::{BOS_ID, EOS_ID, PAD_ID};
 
-use super::beam::{rank_candidates, BeamPool, BeamState};
-use super::{clip_draft, Backend, DecodeOutput, DecodeStats, DecoderRow, Hypothesis};
+use super::beam::{rank_by, BeamPool, BeamState};
+use super::{clip_draft, Backend, DecodeOutput, DecodeStats, Hypothesis};
 
 /// Speculative-beam-search configuration.
 #[derive(Debug, Clone)]
@@ -83,6 +92,23 @@ pub fn sbs_traced<B: Backend>(
     Ok((out, trace))
 }
 
+/// A live beam: its search state plus session bookkeeping.
+struct Live {
+    state: BeamState,
+    /// Committed session row (length `sess_len`); the trailing token of
+    /// `state.tokens` is still pending.
+    row: usize,
+    sess_len: usize,
+}
+
+/// A proposed candidate: search state plus where its verified prefix
+/// lives (`from_row` up to `keep_len` committed positions).
+struct Cand {
+    state: BeamState,
+    from_row: usize,
+    keep_len: usize,
+}
+
 fn sbs_impl<B: Backend>(
     backend: &B,
     src: &[i64],
@@ -92,6 +118,7 @@ fn sbs_impl<B: Backend>(
     let t0 = Instant::now();
     let dims = backend.dims();
     let memory = backend.encode(&[src])?;
+    let mut sess = backend.begin(memory)?;
     let mut stats = DecodeStats {
         encoder_calls: 1,
         ..Default::default()
@@ -105,9 +132,14 @@ fn sbs_impl<B: Backend>(
         .collect();
     let mut drafts = extract_drafts(&inner, &cfg.draft);
 
-    let mut beams = vec![BeamState {
-        tokens: vec![BOS_ID],
-        score: 0.0,
+    let root = sess.new_row(0);
+    let mut beams = vec![Live {
+        state: BeamState {
+            tokens: vec![BOS_ID],
+            score: 0.0,
+        },
+        row: root,
+        sess_len: 0,
     }];
     let mut pool = BeamPool::new(cfg.n);
 
@@ -118,29 +150,41 @@ fn sbs_impl<B: Backend>(
             drafts.truncate(max_drafts);
         }
 
-        // concatDraftsToSequences.
-        let mut rows: Vec<DecoderRow> = Vec::with_capacity(beams.len() * drafts.len());
-        let mut row_meta: Vec<(usize, usize)> = Vec::new(); // (beam, draft_len)
+        // concatDraftsToSequences: one fork of the beam's committed row
+        // per draft, extended by the pending suffix plus the draft.
+        let mut frows: Vec<usize> = Vec::new();
+        let mut delta_buf: Vec<Vec<i64>> = Vec::new();
+        let mut row_meta: Vec<(usize, usize, usize)> = Vec::new(); // (beam, draft, clipped_len)
         for (bi, b) in beams.iter().enumerate() {
-            for d in &drafts {
-                let clipped = clip_draft(d, b.tokens.len(), dims.t_len);
-                let mut tokens = b.tokens.clone();
-                tokens.extend_from_slice(clipped);
-                rows.push(DecoderRow { tokens, mem_row: 0 });
-                row_meta.push((bi, clipped.len()));
+            for (di, d) in drafts.iter().enumerate() {
+                let clipped = clip_draft(d, b.state.tokens.len(), dims.t_len);
+                let mut delta = b.state.tokens[b.sess_len..].to_vec();
+                delta.extend_from_slice(clipped);
+                let clen = clipped.len();
+                frows.push(sess.fork(b.row));
+                delta_buf.push(delta);
+                row_meta.push((bi, di, clen));
             }
         }
-        let lp = backend.decode(&rows, &memory)?;
+        let deltas: Vec<(usize, &[i64])> = frows
+            .iter()
+            .zip(&delta_buf)
+            .map(|(&r, d)| (r, d.as_slice()))
+            .collect();
+        let lp = sess.extend(&deltas)?;
         stats.decoder_calls += 1;
-        stats.decoder_rows += rows.len();
+        stats.decoder_rows += deltas.len();
+        let n_rows_iter = deltas.len();
+        drop(deltas);
 
         // selectBestDraft per beam: most accepted tokens, ties → first.
         let mut best: Vec<Option<(usize, usize)>> = vec![None; beams.len()];
-        for (r, &(bi, dlen)) in row_meta.iter().enumerate() {
-            let p = beams[bi].tokens.len();
+        for (r, &(bi, di, clen)) in row_meta.iter().enumerate() {
+            let p = beams[bi].state.tokens.len();
+            let draft = &drafts[di];
             let mut k = 0usize;
-            while k < dlen {
-                let d_tok = rows[r].tokens[p + k];
+            while k < clen {
+                let d_tok = draft[k];
                 if d_tok == EOS_ID || d_tok == BOS_ID || d_tok == PAD_ID {
                     break;
                 }
@@ -159,13 +203,15 @@ fn sbs_impl<B: Backend>(
         // — for every accepted length j (0..=k), the top-n successor
         // tokens, scored by their true cumulative log-probability. The
         // paper's Figure 3: `(k+1) · n` candidates per beam.
-        let mut candidates: Vec<BeamState> = Vec::new();
+        let mut candidates: Vec<Cand> = Vec::new();
         for (bi, b) in beams.iter().enumerate() {
             let (r, k) = best[bi].unwrap();
-            let p = b.tokens.len();
+            let di = row_meta[r].1;
+            let draft = &drafts[di];
+            let p = b.state.tokens.len();
             let mut draft_prefix_logp = 0f64;
             for j in 0..=k {
-                let d_next = (j < k).then(|| rows[r].tokens[p + j]);
+                let d_next = (j < k).then(|| draft[j]);
                 for (tok, logp) in lp.topk(r, p - 1 + j, cfg.n) {
                     if tok == BOS_ID || tok == PAD_ID {
                         continue;
@@ -180,12 +226,16 @@ fn sbs_impl<B: Backend>(
                     if Some(tok) == d_next {
                         continue;
                     }
-                    let mut tokens = b.tokens.clone();
-                    tokens.extend_from_slice(&rows[r].tokens[p..p + j]);
+                    let mut tokens = b.state.tokens.clone();
+                    tokens.extend_from_slice(&draft[..j]);
                     tokens.push(tok);
-                    candidates.push(BeamState {
-                        tokens,
-                        score: b.score + draft_prefix_logp + logp as f64,
+                    candidates.push(Cand {
+                        state: BeamState {
+                            tokens,
+                            score: b.state.score + draft_prefix_logp + logp as f64,
+                        },
+                        from_row: frows[r],
+                        keep_len: p + j,
                     });
                 }
                 if let Some(d_tok) = d_next {
@@ -198,9 +248,9 @@ fn sbs_impl<B: Backend>(
         // Candidates of unequal lengths can collide (beam "ab" + draft "c"
         // equals beam "abc" extended directly); identical sequences have
         // identical scores by conditional consistency — keep one. Ranking
-        // is the shared length-normalized order (see `rank_candidates`).
-        rank_candidates(&mut candidates);
-        candidates.dedup_by(|a, b| a.tokens == b.tokens);
+        // is the shared length-normalized order (see `rank_by`).
+        rank_by(&mut candidates, |c| &c.state);
+        candidates.dedup_by(|a, b| a.state.tokens == b.state.tokens);
 
         // sortAndExtract + retire finished.
         //
@@ -212,7 +262,7 @@ fn sbs_impl<B: Backend>(
         // ⌈n/2⌉ survivors per parent beam in the first pass; remaining
         // slots fill rank-order in a second pass.
         let per_parent_cap = cfg.n.div_ceil(2);
-        let mut kept: Vec<BeamState> = Vec::with_capacity(cfg.n);
+        let mut kept: Vec<&Cand> = Vec::with_capacity(cfg.n);
         let mut kept_idx: Vec<usize> = Vec::new();
         let mut parent_count = vec![0usize; beams.len()];
         let parent_of = |tokens: &[i64]| -> usize {
@@ -220,8 +270,11 @@ fn sbs_impl<B: Backend>(
             beams
                 .iter()
                 .enumerate()
-                .filter(|(_, b)| tokens.len() > b.tokens.len() && tokens[..b.tokens.len()] == b.tokens[..])
-                .map(|(i, b)| (i, b.tokens.len()))
+                .filter(|(_, b)| {
+                    tokens.len() > b.state.tokens.len()
+                        && tokens[..b.state.tokens.len()] == b.state.tokens[..]
+                })
+                .map(|(i, b)| (i, b.state.tokens.len()))
                 .max_by_key(|&(_, l)| l)
                 .map(|(i, _)| i)
                 .unwrap_or(0)
@@ -230,12 +283,12 @@ fn sbs_impl<B: Backend>(
             if kept.len() >= cfg.n {
                 break;
             }
-            let p_idx = parent_of(&c.tokens);
+            let p_idx = parent_of(&c.state.tokens);
             // One-token extensions are exactly standard beam search's
             // candidates: they always compete freely (this also keeps
             // SBS(DL=0) ≡ BS exact). Only the *speculative* multi-token
             // candidates are capped per parent.
-            let bs_like = c.tokens.len() == beams[p_idx].tokens.len() + 1;
+            let bs_like = c.state.tokens.len() == beams[p_idx].state.tokens.len() + 1;
             if !bs_like && parent_count[p_idx] >= per_parent_cap {
                 continue;
             }
@@ -243,7 +296,7 @@ fn sbs_impl<B: Backend>(
                 parent_count[p_idx] += 1;
             }
             kept_idx.push(ci_idx);
-            kept.push(c.clone());
+            kept.push(c);
         }
         // Fill pass: rank order, ignoring the cap.
         if kept.len() < cfg.n {
@@ -253,33 +306,42 @@ fn sbs_impl<B: Backend>(
                 }
                 if !kept_idx.contains(&ci_idx) {
                     kept_idx.push(ci_idx);
-                    kept.push(c.clone());
+                    kept.push(c);
                 }
             }
         }
         // Re-rank the kept set and process retire/keep decisions in order.
-        rank_candidates(&mut kept);
+        let mut kept: Vec<Cand> = kept
+            .into_iter()
+            .map(|c| Cand {
+                state: c.state.clone(),
+                from_row: c.from_row,
+                keep_len: c.keep_len,
+            })
+            .collect();
+        rank_by(&mut kept, |c| &c.state);
         let candidates = kept;
-        let mut kept: Vec<BeamState> = Vec::with_capacity(cfg.n);
-        let prev_top_len = beams[0].tokens.len();
+        let mut kept: Vec<Cand> = Vec::with_capacity(cfg.n);
+        let prev_top_len = beams[0].state.tokens.len();
         for c in candidates {
             if kept.len() >= cfg.n {
                 break;
             }
-            let gen_len = c.tokens.len() - 1;
-            if *c.tokens.last().unwrap() == EOS_ID {
+            let t = &c.state.tokens;
+            let gen_len = t.len() - 1;
+            if *t.last().unwrap() == EOS_ID {
                 // A surviving prefix beam can re-derive an extension that
                 // already finished on an earlier iteration; such repeats
                 // must not consume hypothesis slots again.
-                if pool.contains(&c.tokens[..c.tokens.len() - 1]) {
+                if pool.contains(&t[..t.len() - 1]) {
                     continue;
                 }
-                pool.push_finished(&c.tokens[..c.tokens.len() - 1], c.score, gen_len);
+                pool.push_finished(&t[..t.len() - 1], c.state.score, gen_len);
                 // finished hypotheses also occupy candidate slots, exactly
                 // as in `beam_search`.
                 kept.push(c);
-            } else if c.tokens.len() >= dims.t_len {
-                pool.push_finished(&c.tokens, c.score, gen_len);
+            } else if t.len() >= dims.t_len {
+                pool.push_finished(t, c.state.score, gen_len);
                 kept.push(c);
             } else {
                 kept.push(c);
@@ -288,35 +350,59 @@ fn sbs_impl<B: Backend>(
         // Acceptance accounting on the top kept candidate: its length
         // growth beyond 1 is accepted draft copy.
         if let Some(top) = kept.first() {
-            let grew = top.tokens.len().saturating_sub(prev_top_len);
+            let grew = top.state.tokens.len().saturating_sub(prev_top_len);
             stats.acceptance.total_tokens += grew;
             stats.acceptance.accepted_draft_tokens += grew.saturating_sub(1);
         }
 
-        let live: Vec<BeamState> = kept
-            .iter()
-            .filter(|c| *c.tokens.last().unwrap() != EOS_ID && c.tokens.len() < dims.t_len)
-            .cloned()
-            .collect();
-
         if let Some(tr) = trace.as_deref_mut() {
             tr.iterations.push(SbsIterTrace {
                 candidates_generated: n_generated,
-                rows: rows.len(),
+                rows: n_rows_iter,
                 kept: kept
                     .iter()
-                    .map(|c| (c.tokens[1..].to_vec(), c.score))
+                    .map(|c| (c.state.tokens[1..].to_vec(), c.state.score))
                     .collect(),
             });
         }
 
-        beams = live;
-        let best_live_norm = beams.first().map(|b| b.norm()).unwrap_or(f64::NEG_INFINITY);
+        // Build the next generation of live beams: fork the verified
+        // prefix out of the winning verify row, roll back the rejected
+        // tail, and leave the candidate's fresh token pending.
+        let mut next: Vec<Live> = Vec::new();
+        for c in kept {
+            let t = &c.state.tokens;
+            if *t.last().unwrap() == EOS_ID || t.len() >= dims.t_len {
+                continue; // retired above
+            }
+            let row = sess.fork(c.from_row);
+            sess.truncate(row, c.keep_len);
+            next.push(Live {
+                sess_len: c.keep_len,
+                row,
+                state: c.state,
+            });
+        }
+
+        // Verify forks and superseded parent rows are done.
+        for &r in &frows {
+            sess.release(r);
+        }
+        for b in &beams {
+            sess.release(b.row);
+        }
+
+        beams = next;
+        let best_live_norm = beams
+            .first()
+            .map(|b| b.state.norm())
+            .unwrap_or(f64::NEG_INFINITY);
         if pool.can_stop(best_live_norm) {
             break;
         }
     }
 
+    stats.absorb_session(&sess.stats());
     stats.wall = t0.elapsed();
     Ok((
         DecodeOutput {

@@ -1,0 +1,203 @@
+//! The stateless-recompute [`DecoderSession`] adapter.
+//!
+//! Wraps any [`Backend`] behind the session interface by keeping plain
+//! per-row token buffers and re-submitting full prefixes through
+//! [`Backend::decode`] on every `extend`. This is the compatibility
+//! bridge: the mock backends in `testutil`, and any backend without a
+//! cache-aware session (the PJRT path until its artifacts grow cache
+//! inputs), all decode through it — with exactly the pre-session
+//! behaviour and cost (`tokens_reused` stays 0).
+//!
+//! It is also the oracle in the session-parity property tests: because a
+//! conditionally-consistent backend's distributions depend only on each
+//! row's own prefix, a cached session must produce bit-identical
+//! log-probabilities to this adapter.
+
+use anyhow::Result;
+
+use super::{Backend, DecoderRow, DecoderSession, LogProbs, Memory, ModelDims, SessionStats};
+
+struct Row {
+    tokens: Vec<i64>,
+    mem_row: usize,
+}
+
+/// See module docs.
+pub struct StatelessSession<'a, B: Backend> {
+    backend: &'a B,
+    memory: Memory,
+    rows: Vec<Option<Row>>,
+    stats: SessionStats,
+}
+
+impl<'a, B: Backend> StatelessSession<'a, B> {
+    pub fn new(backend: &'a B, memory: Memory) -> StatelessSession<'a, B> {
+        StatelessSession {
+            backend,
+            memory,
+            rows: Vec::new(),
+            stats: SessionStats::default(),
+        }
+    }
+
+    fn row(&self, row: usize) -> &Row {
+        self.rows[row].as_ref().expect("released session row")
+    }
+
+    fn row_mut(&mut self, row: usize) -> &mut Row {
+        self.rows[row].as_mut().expect("released session row")
+    }
+}
+
+impl<B: Backend> DecoderSession for StatelessSession<'_, B> {
+    fn dims(&self) -> ModelDims {
+        self.backend.dims()
+    }
+
+    fn memory(&self) -> &Memory {
+        &self.memory
+    }
+
+    fn append_memory(&mut self, extra: &Memory) -> usize {
+        assert_eq!(extra.s_len, self.memory.s_len, "memory s_len mismatch");
+        assert_eq!(extra.d_model, self.memory.d_model, "memory width mismatch");
+        let base = self.memory.batch;
+        self.memory.data.extend_from_slice(&extra.data);
+        self.memory.pad.extend_from_slice(&extra.pad);
+        self.memory.batch += extra.batch;
+        base
+    }
+
+    fn new_row(&mut self, mem_row: usize) -> usize {
+        assert!(mem_row < self.memory.batch, "memory row out of range");
+        self.rows.push(Some(Row {
+            tokens: Vec::new(),
+            mem_row,
+        }));
+        self.rows.len() - 1
+    }
+
+    fn fork(&mut self, row: usize) -> usize {
+        let src = self.row(row);
+        let copy = Row {
+            tokens: src.tokens.clone(),
+            mem_row: src.mem_row,
+        };
+        self.rows.push(Some(copy));
+        self.rows.len() - 1
+    }
+
+    fn truncate(&mut self, row: usize, len: usize) {
+        let r = self.row_mut(row);
+        assert!(len <= r.tokens.len(), "truncate beyond row length");
+        r.tokens.truncate(len);
+    }
+
+    fn release(&mut self, row: usize) {
+        self.rows[row] = None;
+    }
+
+    fn row_len(&self, row: usize) -> usize {
+        self.row(row).tokens.len()
+    }
+
+    fn extend(&mut self, deltas: &[(usize, &[i64])]) -> Result<LogProbs> {
+        let t_len = self.backend.dims().t_len;
+        let mut call_rows: Vec<DecoderRow> = Vec::with_capacity(deltas.len());
+        for &(row, toks) in deltas {
+            let r = self.rows[row].as_mut().expect("released session row");
+            r.tokens.extend_from_slice(toks);
+            assert!(
+                r.tokens.len() <= t_len,
+                "row length {} exceeds window {t_len}",
+                r.tokens.len()
+            );
+            call_rows.push(DecoderRow {
+                tokens: r.tokens.clone(),
+                mem_row: r.mem_row,
+            });
+        }
+        self.stats.extend_calls += 1;
+        for cr in &call_rows {
+            // Full recompute: every position of every submitted row.
+            self.stats.tokens_computed += cr.tokens.len();
+        }
+        self.backend.decode(&call_rows, &self.memory)
+    }
+
+    fn stats(&self) -> SessionStats {
+        self.stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::CopyModel;
+    use crate::vocab::{BOS_ID, EOS_ID};
+
+    #[test]
+    fn stateless_session_matches_direct_decode() {
+        let m = CopyModel::new(32, 32, 20);
+        let src: Vec<i64> = vec![BOS_ID, 10, 11, 12, EOS_ID];
+        let memory = m.encode(&[&src]).unwrap();
+        let direct = m
+            .decode(
+                &[DecoderRow {
+                    tokens: vec![BOS_ID, 10, 11],
+                    mem_row: 0,
+                }],
+                &memory,
+            )
+            .unwrap();
+
+        let mut sess = m.begin(m.encode(&[&src]).unwrap()).unwrap();
+        let r = sess.new_row(0);
+        let lp = sess.extend(&[(r, &[BOS_ID, 10, 11])]).unwrap();
+        for j in 0..3 {
+            for v in 0..20 {
+                assert_eq!(direct.logp(0, j, v), lp.logp(0, j, v));
+            }
+        }
+        let s = sess.stats();
+        assert_eq!(s.extend_calls, 1);
+        assert_eq!(s.tokens_computed, 3);
+        assert_eq!(s.tokens_reused, 0);
+    }
+
+    #[test]
+    fn fork_truncate_release_roundtrip() {
+        let m = CopyModel::new(32, 32, 20);
+        let src: Vec<i64> = vec![BOS_ID, 10, 11, EOS_ID];
+        let mut sess = m.begin(m.encode(&[&src]).unwrap()).unwrap();
+        let a = sess.new_row(0);
+        sess.extend(&[(a, &[BOS_ID, 10])]).unwrap();
+        let b = sess.fork(a);
+        assert_eq!(sess.row_len(b), 2);
+        sess.extend(&[(b, &[11])]).unwrap();
+        assert_eq!(sess.row_len(a), 2, "fork must not touch the parent");
+        assert_eq!(sess.row_len(b), 3);
+        sess.truncate(b, 1);
+        assert_eq!(sess.row_len(b), 1);
+        sess.release(a);
+        // Released ids stay allocated (never reused); b still works.
+        let lp = sess.extend(&[(b, &[10])]).unwrap();
+        assert_eq!(lp.n_rows(), 1);
+    }
+
+    #[test]
+    fn append_memory_offsets_rows() {
+        let m = CopyModel::new(32, 32, 20);
+        let s1: Vec<i64> = vec![BOS_ID, 10, EOS_ID];
+        let s2: Vec<i64> = vec![BOS_ID, 12, 13, EOS_ID];
+        let mut sess = m.begin(m.encode(&[&s1]).unwrap()).unwrap();
+        let extra = m.encode(&[&s2]).unwrap();
+        let base = sess.append_memory(&extra);
+        assert_eq!(base, 1);
+        assert_eq!(sess.memory().batch, 2);
+        let r = sess.new_row(base);
+        let lp = sess.extend(&[(r, &[BOS_ID])]).unwrap();
+        // CopyModel's first target token for s2 is 12.
+        assert_eq!(lp.argmax(0, 0), 12);
+    }
+}

@@ -1,4 +1,4 @@
-//! Speculative greedy decoding (§2.1, Figure 2).
+//! Speculative greedy decoding (§2.1, Figure 2) on incremental sessions.
 //!
 //! At every step, every draft is concatenated to the current prefix and the
 //! whole set is verified in **one** decoder forward pass (drafts inflate the
@@ -7,15 +7,245 @@
 //! advances the sequence by 1..=DL+1 tokens. The produced sequence is
 //! token-exact equal to standard greedy decoding — speculative decoding
 //! "does not affect the content of the predicted sequence in any way".
+//!
+//! Session mechanics per step and per query: the committed prefix row is
+//! [`fork`](super::DecoderSession::fork)ed once per draft and each fork is
+//! extended by `pending ‖ draft` (a KV-cached backend computes only that
+//! window). The winning fork is [`truncate`](super::DecoderSession::truncate)d
+//! back to the accepted length and becomes the new committed row; the
+//! losers are released.
 
 use std::time::Instant;
 
 use anyhow::Result;
 
-use crate::draft::{extract_drafts, DraftConfig};
+use crate::draft::{extract_drafts, Acceptance, DraftConfig};
 use crate::vocab::{BOS_ID, EOS_ID};
 
-use super::{clip_draft, Backend, DecodeOutput, DecodeStats, DecoderRow, Hypothesis};
+use super::{
+    clip_draft, Backend, DecodeOutput, DecodeStats, DecoderSession, Hypothesis, SessionStats,
+};
+
+struct SpecLane {
+    /// Committed session row (length `sess_len`).
+    row: usize,
+    /// BOS + emitted tokens (the trailing fresh token is not yet
+    /// committed to the session; it rides into the next step's delta).
+    tokens: Vec<i64>,
+    sess_len: usize,
+    drafts: Vec<Vec<i64>>,
+    score: f64,
+    done: bool,
+    accepted: usize,
+}
+
+/// A live speculative-greedy decode over a [`DecoderSession`].
+pub struct SpecGreedyRun<'a> {
+    sess: Box<dyn DecoderSession + 'a>,
+    cfg: DraftConfig,
+    lanes: Vec<SpecLane>,
+    calls: usize,
+    rows_submitted: usize,
+}
+
+impl<'a> SpecGreedyRun<'a> {
+    pub fn new(sess: Box<dyn DecoderSession + 'a>, cfg: DraftConfig) -> SpecGreedyRun<'a> {
+        SpecGreedyRun {
+            sess,
+            cfg,
+            lanes: Vec::new(),
+            calls: 0,
+            rows_submitted: 0,
+        }
+    }
+
+    pub fn session_mut(&mut self) -> &mut (dyn DecoderSession + 'a) {
+        &mut *self.sess
+    }
+
+    /// Add a lane for the BOS/EOS-wrapped query `src` decoding against
+    /// `mem_row`. Drafts come from the query *without* its wrapping.
+    pub fn admit(&mut self, mem_row: usize, src: &[i64]) -> usize {
+        let inner: Vec<i64> = src
+            .iter()
+            .copied()
+            .filter(|&t| t != BOS_ID && t != EOS_ID)
+            .collect();
+        let row = self.sess.new_row(mem_row);
+        self.lanes.push(SpecLane {
+            row,
+            tokens: vec![BOS_ID],
+            sess_len: 0,
+            drafts: extract_drafts(&inner, &self.cfg),
+            score: 0.0,
+            done: false,
+            accepted: 0,
+        });
+        self.lanes.len() - 1
+    }
+
+    pub fn n_lanes(&self) -> usize {
+        self.lanes.len()
+    }
+
+    pub fn n_live(&self) -> usize {
+        self.lanes.iter().filter(|l| !l.done).count()
+    }
+
+    pub fn finished(&self) -> bool {
+        self.lanes.iter().all(|l| l.done)
+    }
+
+    pub fn calls(&self) -> usize {
+        self.calls
+    }
+
+    pub fn rows_submitted(&self) -> usize {
+        self.rows_submitted
+    }
+
+    pub fn session_stats(&self) -> SessionStats {
+        self.sess.stats()
+    }
+
+    /// Per-lane acceptance accounting (total includes the EOS step, as
+    /// the paper counts it).
+    pub fn lane_acceptance(&self, lane: usize) -> Acceptance {
+        let l = &self.lanes[lane];
+        Acceptance {
+            accepted_draft_tokens: l.accepted,
+            total_tokens: self.hypothesis(lane).tokens.len() + 1,
+        }
+    }
+
+    /// One speculative step across all live lanes (one decoder call over
+    /// `Σ_live |drafts|` fork rows). Returns the lanes that finished.
+    pub fn step(&mut self) -> Result<Vec<usize>> {
+        let t_len = self.sess.dims().t_len;
+
+        // concatDraftsToSequences: fork the committed row per draft and
+        // extend each fork by pending ‖ clipped draft.
+        let mut frows: Vec<usize> = Vec::new();
+        let mut delta_buf: Vec<Vec<i64>> = Vec::new();
+        // (lane, draft index, clipped length) per fork row.
+        let mut meta: Vec<(usize, usize, usize)> = Vec::new();
+        for li in 0..self.lanes.len() {
+            if self.lanes[li].done {
+                continue;
+            }
+            let n_drafts = self.lanes[li].drafts.len();
+            for di in 0..n_drafts {
+                let lane = &self.lanes[li];
+                let clipped = clip_draft(&lane.drafts[di], lane.tokens.len(), t_len);
+                let mut delta = lane.tokens[lane.sess_len..].to_vec();
+                delta.extend_from_slice(clipped);
+                let clen = clipped.len();
+                frows.push(self.sess.fork(lane.row));
+                delta_buf.push(delta);
+                meta.push((li, di, clen));
+            }
+        }
+        if frows.is_empty() {
+            return Ok(Vec::new());
+        }
+        let deltas: Vec<(usize, &[i64])> = frows
+            .iter()
+            .zip(&delta_buf)
+            .map(|(&r, d)| (r, d.as_slice()))
+            .collect();
+        let lp = self.sess.extend(&deltas)?;
+        self.calls += 1;
+        self.rows_submitted += deltas.len();
+        drop(deltas);
+
+        // selectBestDraft: per lane, the fork with the most accepted
+        // tokens (ties → first).
+        let mut best: Vec<Option<(usize, usize)>> = vec![None; self.lanes.len()]; // (meta idx, k)
+        for (r, &(li, di, clen)) in meta.iter().enumerate() {
+            let lane = &self.lanes[li];
+            let p = lane.tokens.len();
+            let draft = &lane.drafts[di];
+            let mut k = 0usize;
+            while k < clen {
+                if lp.argmax(r, p - 1 + k) != draft[k] {
+                    break;
+                }
+                k += 1;
+            }
+            match best[li] {
+                Some((_, bk)) if bk >= k => {}
+                _ => best[li] = Some((r, k)),
+            }
+        }
+
+        // Emit accepted tokens + one fresh argmax per lane, then swap the
+        // committed session row to the winning fork (truncated back to
+        // the accepted length) and release the losers.
+        let mut just_finished = Vec::new();
+        for li in 0..self.lanes.len() {
+            let Some((r, k)) = best[li] else { continue };
+            let (emitted, old_row) = {
+                let lane = &self.lanes[li];
+                let p = lane.tokens.len();
+                let (_, di, _) = meta[r];
+                let mut e: Vec<i64> = lane.drafts[di][..k].to_vec();
+                e.push(lp.argmax(r, p - 1 + k));
+                (e, lane.row)
+            };
+            let p = self.lanes[li].tokens.len();
+            {
+                let lane = &mut self.lanes[li];
+                for (idx, &tok) in emitted.iter().enumerate() {
+                    lane.score += lp.logp(r, p - 1 + idx, tok) as f64;
+                    lane.tokens.push(tok);
+                    if tok == EOS_ID {
+                        lane.done = true;
+                        break;
+                    }
+                    if idx < k {
+                        lane.accepted += 1;
+                    }
+                    if lane.tokens.len() >= t_len {
+                        lane.done = true;
+                        break;
+                    }
+                }
+            }
+            // Winning fork keeps the verified prefix p + k; everything
+            // else computed for it this step is rolled back.
+            let win = frows[r];
+            self.sess.truncate(win, p + k);
+            self.sess.release(old_row);
+            let lane = &mut self.lanes[li];
+            lane.row = win;
+            lane.sess_len = (p + k).min(lane.tokens.len());
+            if lane.done {
+                just_finished.push(li);
+                self.sess.release(win);
+            }
+        }
+        // Release losing forks.
+        for (r, &(li, _, _)) in meta.iter().enumerate() {
+            if best[li].map(|(br, _)| br) != Some(r) {
+                self.sess.release(frows[r]);
+            }
+        }
+        Ok(just_finished)
+    }
+
+    /// Hypothesis of a lane: generated tokens, truncated at EOS.
+    pub fn hypothesis(&self, lane: usize) -> Hypothesis {
+        let l = &self.lanes[lane];
+        let mut tokens: Vec<i64> = l.tokens[1..].to_vec();
+        if let Some(pos) = tokens.iter().position(|&t| t == EOS_ID) {
+            tokens.truncate(pos);
+        }
+        Hypothesis {
+            tokens,
+            score: l.score,
+        }
+    }
+}
 
 /// Speculatively greedy-decode one query (batch size 1).
 pub fn spec_greedy<B: Backend>(
@@ -39,125 +269,34 @@ pub fn spec_greedy_batch<B: Backend>(
     cfg: &DraftConfig,
 ) -> Result<Vec<DecodeOutput>> {
     let t0 = Instant::now();
-    let dims = backend.dims();
     let memory = backend.encode(srcs)?;
-    let mut stats = DecodeStats {
+    let n = srcs.len();
+    let mut run = SpecGreedyRun::new(backend.begin(memory)?, cfg.clone());
+    for (i, src) in srcs.iter().enumerate() {
+        run.admit(i, src);
+    }
+    while !run.finished() {
+        run.step()?;
+    }
+    let wall = t0.elapsed();
+
+    let sess = run.session_stats();
+    let base = DecodeStats {
+        decoder_calls: run.calls(),
         encoder_calls: 1,
+        decoder_rows: run.rows_submitted(),
+        tokens_computed: sess.tokens_computed,
+        tokens_reused: sess.tokens_reused,
         ..Default::default()
     };
-
-    let n = srcs.len();
-    // Drafts come from the query *without* its BOS/EOS wrapping.
-    let drafts: Vec<Vec<Vec<i64>>> = srcs
-        .iter()
-        .map(|s| {
-            let inner: Vec<i64> = s
-                .iter()
-                .copied()
-                .filter(|&t| t != BOS_ID && t != EOS_ID)
-                .collect();
-            extract_drafts(&inner, cfg)
-        })
-        .collect();
-
-    let mut prefixes: Vec<Vec<i64>> = vec![vec![BOS_ID]; n];
-    let mut scores = vec![0f64; n];
-    let mut done = vec![false; n];
-    let mut accepted_total = vec![0usize; n];
-
-    while !done.iter().all(|&d| d) {
-        // Assemble rows: prefix ‖ draft for every draft of every live query.
-        let mut rows: Vec<DecoderRow> = Vec::new();
-        // (query, draft_clipped_len) per row, for result mapping.
-        let mut row_meta: Vec<(usize, usize)> = Vec::new();
-        for q in 0..n {
-            if done[q] {
-                continue;
-            }
-            for d in &drafts[q] {
-                let clipped = clip_draft(d, prefixes[q].len(), dims.t_len);
-                let mut tokens = prefixes[q].clone();
-                tokens.extend_from_slice(clipped);
-                rows.push(DecoderRow {
-                    tokens,
-                    mem_row: q,
-                });
-                row_meta.push((q, clipped.len()));
-            }
-        }
-        if rows.is_empty() {
-            break;
-        }
-        let lp = backend.decode(&rows, &memory)?;
-        stats.decoder_calls += 1;
-        stats.decoder_rows += rows.len();
-
-        // For each live query pick the row with the most accepted tokens.
-        let mut best: Vec<Option<(usize, usize)>> = vec![None; n]; // (row, k)
-        for (r, &(q, dlen)) in row_meta.iter().enumerate() {
-            let p = prefixes[q].len();
-            let mut k = 0usize;
-            while k < dlen {
-                let predicted = lp.argmax(r, p - 1 + k);
-                if predicted != rows[r].tokens[p + k] {
-                    break;
-                }
-                k += 1;
-            }
-            match best[q] {
-                Some((_, bk)) if bk >= k => {}
-                _ => best[q] = Some((r, k)),
-            }
-        }
-
-        for q in 0..n {
-            let Some((r, k)) = best[q] else { continue };
-            let p = prefixes[q].len();
-            // Emit the k accepted draft tokens, then the fresh argmax after
-            // them. Stop early if EOS shows up anywhere in the run.
-            let mut emitted: Vec<i64> = rows[r].tokens[p..p + k].to_vec();
-            let fresh = lp.argmax(r, p - 1 + k);
-            emitted.push(fresh);
-            let mut n_accepted = 0usize;
-            for (idx, &tok) in emitted.iter().enumerate() {
-                scores[q] += lp.logp(r, p - 1 + idx, tok) as f64;
-                prefixes[q].push(tok);
-                stats.acceptance.total_tokens += 1;
-                if tok == EOS_ID {
-                    done[q] = true;
-                    break;
-                }
-                if idx < k {
-                    n_accepted += 1;
-                    stats.acceptance.accepted_draft_tokens += 1;
-                }
-                if prefixes[q].len() >= dims.t_len {
-                    done[q] = true;
-                    break;
-                }
-            }
-            accepted_total[q] += n_accepted;
-        }
-    }
-
-    let wall = t0.elapsed();
     Ok((0..n)
         .map(|q| {
-            let mut tokens: Vec<i64> = prefixes[q][1..].to_vec();
-            if let Some(pos) = tokens.iter().position(|&t| t == EOS_ID) {
-                tokens.truncate(pos);
-            }
-            let mut s = DecodeStats {
-                wall: wall / n as u32,
-                ..stats
-            };
-            s.acceptance.total_tokens = tokens.len() + 1; // incl. EOS step
-            s.acceptance.accepted_draft_tokens = accepted_total[q];
+            let hyp = run.hypothesis(q);
+            let mut s = base;
+            s.wall = wall / n as u32;
+            s.acceptance = run.lane_acceptance(q);
             DecodeOutput {
-                hyps: vec![Hypothesis {
-                    tokens,
-                    score: scores[q],
-                }],
+                hyps: vec![hyp],
                 stats: s,
             }
         })
@@ -168,8 +307,8 @@ pub fn spec_greedy_batch<B: Backend>(
 mod tests {
     use super::*;
     use crate::decoding::greedy;
-    use crate::testutil::{random_wrapped_src, CopyModel, HashModel};
     use crate::rng::Rng;
+    use crate::testutil::{random_wrapped_src, CopyModel, HashModel};
 
     /// THE core invariant (paper §2.1): speculative decoding does not
     /// change the produced sequence in any way.

@@ -39,29 +39,51 @@ impl DraftConfig {
     }
 }
 
+/// FNV-1a over a token window — the dedup prefilter key.
+fn window_hash(w: &[i64]) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for &t in w {
+        h ^= t as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
 /// Extract draft sequences from a tokenized query.
 ///
 /// Returns at least one draft: when `draft_len == 0` or the query is too
 /// short for a full window, the fallback is a single `[BOS]` draft that the
 /// model can never accept (BOS never follows another token in training),
 /// reducing the speculative algorithms to their standard counterparts.
+///
+/// Dedup is a `HashSet` of window hashes with an exact confirm on hash
+/// hit — O(N_w) over the query's windows instead of the old
+/// O(N_w²) `drafts.contains` scan (which hurt exactly when callers lift
+/// `max_drafts`, e.g. the long-query sweeps). Duplicates never consume
+/// `max_drafts` slots, so dedup lets *later distinct* windows into the
+/// kept set — pinned by a regression test below.
 pub fn extract_drafts(query: &[i64], cfg: &DraftConfig) -> Vec<Vec<i64>> {
     let dl = cfg.draft_len;
     if dl == 0 || query.len() < dl {
         return vec![vec![BOS_ID]];
     }
     let mut drafts: Vec<Vec<i64>> = Vec::new();
-    let push = |w: Vec<i64>, drafts: &mut Vec<Vec<i64>>| {
+    let mut seen: std::collections::HashSet<u64> = std::collections::HashSet::new();
+    let push = |w: Vec<i64>, drafts: &mut Vec<Vec<i64>>, seen: &mut std::collections::HashSet<u64>| {
         if drafts.len() >= cfg.max_drafts {
             return;
         }
-        if cfg.dedup && drafts.contains(&w) {
-            return;
+        if cfg.dedup {
+            // Hash prefilter; on a hit, confirm against the kept windows
+            // so a (cosmically unlikely) collision can't drop a draft.
+            if !seen.insert(window_hash(&w)) && drafts.contains(&w) {
+                return;
+            }
         }
         drafts.push(w);
     };
     for start in 0..=(query.len() - dl) {
-        push(query[start..start + dl].to_vec(), &mut drafts);
+        push(query[start..start + dl].to_vec(), &mut drafts, &mut seen);
     }
     if cfg.dilated {
         // Windows that skip one token: cover deletions of a single token
@@ -73,7 +95,7 @@ pub fn extract_drafts(query: &[i64], cfg: &DraftConfig) -> Vec<Vec<i64>> {
                 .filter(|(i, _)| *i != dl / 2)
                 .map(|(_, &t)| t)
                 .collect();
-            push(w, &mut drafts);
+            push(w, &mut drafts, &mut seen);
         }
     }
     if drafts.is_empty() {
@@ -159,6 +181,39 @@ mod tests {
     fn short_query_gives_bos_sentinel() {
         let drafts = extract_drafts(&q(3), &DraftConfig::new(10));
         assert_eq!(drafts, vec![vec![BOS_ID]]);
+    }
+
+    #[test]
+    fn dedup_frees_cap_slots_for_later_distinct_windows() {
+        // Periodic head: [5,6,5,6,5,6,5,6] yields only two distinct
+        // 2-windows ([5,6] and [6,5]); the 10 distinct windows of the
+        // ramp tail must still fit under a cap of 8 because duplicates
+        // never consume `max_drafts` slots.
+        let mut query = vec![5i64, 6, 5, 6, 5, 6, 5, 6];
+        query.extend(10..20); // windows [6,10], [10,11], ..., [18,19]
+        let cfg = DraftConfig {
+            max_drafts: 8,
+            ..DraftConfig::new(2)
+        };
+        let drafts = extract_drafts(&query, &cfg);
+        assert_eq!(drafts.len(), 8);
+        // First-occurrence order: the two periodic windows, then the tail.
+        assert_eq!(drafts[0], vec![5, 6]);
+        assert_eq!(drafts[1], vec![6, 5]);
+        assert_eq!(drafts[2], vec![6, 10]);
+        assert_eq!(drafts[3], vec![10, 11]);
+        assert_eq!(drafts[7], vec![14, 15]);
+        // Without dedup the duplicates eat the cap before the tail.
+        let nodedup = extract_drafts(
+            &query,
+            &DraftConfig {
+                dedup: false,
+                max_drafts: 8,
+                ..DraftConfig::new(2)
+            },
+        );
+        assert_eq!(nodedup.len(), 8);
+        assert!(!nodedup.contains(&vec![10, 11]));
     }
 
     #[test]

@@ -17,10 +17,13 @@
 //! performance story, this one is the oracle.
 
 use std::path::Path;
+use std::sync::Arc;
 
 use anyhow::Result;
 
-use crate::decoding::{Backend, DecoderRow, LogProbs, Memory, ModelDims};
+use crate::decoding::{
+    Backend, DecoderRow, DecoderSession, LogProbs, Memory, ModelDims, SessionStats,
+};
 use crate::model::weights::{load_config, Tensor, Weights};
 
 /// Model hyper-parameters (matches `ModelConfig` in model.py).
@@ -118,22 +121,23 @@ fn add_pe(row: &mut [f32], pos: i64, d: usize) {
     }
 }
 
-/// Multi-head attention: q rows attend to kv rows. `allow(i, j)` gates
-/// whether query i may attend key j (the additive-mask analogue).
-fn mha<F: Fn(usize, usize) -> bool>(
-    xq: &[f32],
+/// Scaled-dot-product attention over already-projected q/k/v rows.
+/// `allow(i, j)` gates whether query i may attend key j (the
+/// additive-mask analogue). Factored out of [`mha`] so the KV-cached
+/// session path runs the *same arithmetic in the same order* against
+/// cached key/value buffers — bit-identical results are a tested
+/// invariant, not an accident.
+fn attn_core<F: Fn(usize, usize) -> bool>(
+    q: &[f32],
     nq: usize,
-    xkv: &[f32],
+    k: &[f32],
+    v: &[f32],
     nk: usize,
-    p: &AttnParams,
     n_heads: usize,
     d_model: usize,
     allow: F,
 ) -> Vec<f32> {
     let dh = d_model / n_heads;
-    let q = linear(xq, nq, &p.wq, &p.bq);
-    let k = linear(xkv, nk, &p.wk, &p.bk);
-    let v = linear(xkv, nk, &p.wv, &p.bv);
     let scale = 1.0 / (dh as f32).sqrt();
     let mut ctx = vec![0f32; nq * d_model];
     let mut scores = vec![0f32; nk];
@@ -171,6 +175,25 @@ fn mha<F: Fn(usize, usize) -> bool>(
             }
         }
     }
+    ctx
+}
+
+/// Multi-head attention: q rows attend to kv rows. `allow(i, j)` gates
+/// whether query i may attend key j (the additive-mask analogue).
+fn mha<F: Fn(usize, usize) -> bool>(
+    xq: &[f32],
+    nq: usize,
+    xkv: &[f32],
+    nk: usize,
+    p: &AttnParams,
+    n_heads: usize,
+    d_model: usize,
+    allow: F,
+) -> Vec<f32> {
+    let q = linear(xq, nq, &p.wq, &p.bq);
+    let k = linear(xkv, nk, &p.wk, &p.bk);
+    let v = linear(xkv, nk, &p.wv, &p.bv);
+    let ctx = attn_core(&q, nq, &k, &v, nk, n_heads, d_model, allow);
     linear(&ctx, nq, &p.wo, &p.bo)
 }
 
@@ -453,5 +476,297 @@ impl Backend for RustBackend {
             }
         }
         Ok(LogProbs::new(out, lens, t_len, v))
+    }
+
+    fn begin(&self, memory: Memory) -> Result<Box<dyn DecoderSession + '_>> {
+        Ok(Box::new(CachedSession::new(self, memory)))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// KV-cached incremental decoding session
+// ---------------------------------------------------------------------------
+
+/// Per-layer self-attention K/V of one row, row-major `[len, d_model]`.
+#[derive(Clone)]
+struct LayerKv {
+    k: Vec<f32>,
+    v: Vec<f32>,
+}
+
+/// Committed state of one session row. Forks share it through an `Arc`
+/// (copy-on-write: the first `extend` after a fork clones exactly once).
+#[derive(Clone)]
+struct RowCache {
+    tokens: Vec<i64>,
+    /// One entry per decoder layer.
+    kv: Vec<LayerKv>,
+    /// Per-position successor log-probs, `[len, vocab]` — kept so that
+    /// `extend` can serve the window position `len_before - 1` (the
+    /// successor of the last committed token) without recomputing it,
+    /// and so truncated rows can re-expose earlier distributions.
+    lp: Vec<f32>,
+}
+
+struct SessRow {
+    mem_row: usize,
+    cache: Arc<RowCache>,
+    /// Logical committed length. `truncate` only moves this (O(1)); the
+    /// shared buffers are trimmed lazily by the next `extend` once the
+    /// row holds a unique copy.
+    len: usize,
+}
+
+/// Cross-attention K/V of one memory row (one entry per decoder layer,
+/// `[mem_n, d_model]` each) — computed once per memory row per session
+/// instead of once per decoder call.
+struct CrossKv {
+    k: Vec<f32>,
+    v: Vec<f32>,
+    mem_n: usize,
+}
+
+/// The reference backend's [`DecoderSession`]: incremental self-attention
+/// K/V, session-cached cross-attention K/V, and cached per-position
+/// log-probs. Produces **bit-identical** log-probabilities to
+/// [`RustBackend::decode`] — the conditional-consistency contract makes
+/// this a hard invariant, property-tested in
+/// `rust/tests/session_parity.rs`.
+pub struct CachedSession<'a> {
+    backend: &'a RustBackend,
+    memory: Memory,
+    cross: Vec<Option<Arc<Vec<CrossKv>>>>,
+    rows: Vec<Option<SessRow>>,
+    stats: SessionStats,
+}
+
+impl<'a> CachedSession<'a> {
+    pub fn new(backend: &'a RustBackend, memory: Memory) -> CachedSession<'a> {
+        let batch = memory.batch;
+        CachedSession {
+            backend,
+            memory,
+            cross: (0..batch).map(|_| None).collect(),
+            rows: Vec::new(),
+            stats: SessionStats::default(),
+        }
+    }
+
+    fn row(&self, row: usize) -> &SessRow {
+        self.rows[row].as_ref().expect("released session row")
+    }
+
+    /// Lazily project this memory row's cross-attention K/V per layer —
+    /// the same `linear` calls `mha` issued per decode call, hoisted to
+    /// once per session.
+    fn cross_for(&mut self, mem_row: usize) -> Arc<Vec<CrossKv>> {
+        if self.cross[mem_row].is_none() {
+            let d = self.backend.cfg.d_model;
+            let mem_pad = self.memory.pad_row(mem_row);
+            let mem_n = mem_pad.iter().take_while(|&&p| p > 0.0).count();
+            let mem = &self.memory.row(mem_row)[..mem_n * d];
+            let per_layer = self
+                .backend
+                .dec
+                .iter()
+                .map(|layer| CrossKv {
+                    k: linear(mem, mem_n, &layer.cross_attn.wk, &layer.cross_attn.bk),
+                    v: linear(mem, mem_n, &layer.cross_attn.wv, &layer.cross_attn.bv),
+                    mem_n,
+                })
+                .collect();
+            self.cross[mem_row] = Some(Arc::new(per_layer));
+        }
+        Arc::clone(self.cross[mem_row].as_ref().unwrap())
+    }
+}
+
+impl RustBackend {
+    /// Compute the decoder stack for `new_toks` appended to the committed
+    /// row state in `cache`, reusing the cached per-layer K/V of the
+    /// prefix. Mirrors the per-row body of [`RustBackend::decode`]
+    /// operation for operation.
+    fn extend_row(&self, cache: &mut RowCache, cross: &[CrossKv], new_toks: &[i64]) {
+        let d = self.cfg.d_model;
+        let v = self.cfg.vocab;
+        let p = cache.tokens.len();
+        let m = new_toks.len();
+        if m == 0 {
+            return;
+        }
+        let positions: Vec<i64> = (p as i64..(p + m) as i64).collect();
+        let mut x = self.embed(new_toks, &positions);
+        cache.tokens.extend_from_slice(new_toks);
+
+        for (li, layer) in self.dec.iter().enumerate() {
+            // Causal self-attention over cached + fresh K/V.
+            let h = layer_normed(&x, m, d, &layer.ln1.g, &layer.ln1.b);
+            let q = linear(&h, m, &layer.self_attn.wq, &layer.self_attn.bq);
+            let k_new = linear(&h, m, &layer.self_attn.wk, &layer.self_attn.bk);
+            let v_new = linear(&h, m, &layer.self_attn.wv, &layer.self_attn.bv);
+            let kv = &mut cache.kv[li];
+            kv.k.extend_from_slice(&k_new);
+            kv.v.extend_from_slice(&v_new);
+            let nk = p + m;
+            let ctx = attn_core(&q, m, &kv.k, &kv.v, nk, self.cfg.n_heads, d, |i, j| {
+                j <= p + i // causal in global positions
+            });
+            let a = linear(&ctx, m, &layer.self_attn.wo, &layer.self_attn.bo);
+            add_assign(&mut x, &a);
+
+            // Cross-attention against the session-cached memory K/V.
+            let h = layer_normed(&x, m, d, &layer.ln2.g, &layer.ln2.b);
+            let q = linear(&h, m, &layer.cross_attn.wq, &layer.cross_attn.bq);
+            let ck = &cross[li];
+            let ctx = attn_core(
+                &q,
+                m,
+                &ck.k,
+                &ck.v,
+                ck.mem_n,
+                self.cfg.n_heads,
+                d,
+                |_, _| true,
+            );
+            let a = linear(&ctx, m, &layer.cross_attn.wo, &layer.cross_attn.bo);
+            add_assign(&mut x, &a);
+
+            let h = layer_normed(&x, m, d, &layer.ln3.g, &layer.ln3.b);
+            let mut f = linear(&h, m, &layer.ffn.w1, &layer.ffn.b1);
+            relu(&mut f);
+            let f = linear(&f, m, &layer.ffn.w2, &layer.ffn.b2);
+            add_assign(&mut x, &f);
+        }
+        layer_norm(&mut x, m, d, &self.dec_ln_f.g, &self.dec_ln_f.b);
+        let logits = linear(&x, m, &self.out_w, &self.out_b);
+        for i in 0..m {
+            let lrow = &logits[i * v..(i + 1) * v];
+            let mx = lrow.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let z: f32 = lrow.iter().map(|&l| (l - mx).exp()).sum();
+            let lz = mx + z.ln();
+            for &l in lrow {
+                cache.lp.push(l - lz);
+            }
+        }
+    }
+}
+
+impl DecoderSession for CachedSession<'_> {
+    fn dims(&self) -> ModelDims {
+        Backend::dims(self.backend)
+    }
+
+    fn memory(&self) -> &Memory {
+        &self.memory
+    }
+
+    fn append_memory(&mut self, extra: &Memory) -> usize {
+        assert_eq!(extra.s_len, self.memory.s_len, "memory s_len mismatch");
+        assert_eq!(extra.d_model, self.memory.d_model, "memory width mismatch");
+        let base = self.memory.batch;
+        self.memory.data.extend_from_slice(&extra.data);
+        self.memory.pad.extend_from_slice(&extra.pad);
+        self.memory.batch += extra.batch;
+        self.cross.extend((0..extra.batch).map(|_| None));
+        base
+    }
+
+    fn new_row(&mut self, mem_row: usize) -> usize {
+        assert!(mem_row < self.memory.batch, "memory row out of range");
+        let n_dec = self.backend.cfg.n_dec;
+        self.rows.push(Some(SessRow {
+            mem_row,
+            cache: Arc::new(RowCache {
+                tokens: Vec::new(),
+                kv: (0..n_dec)
+                    .map(|_| LayerKv {
+                        k: Vec::new(),
+                        v: Vec::new(),
+                    })
+                    .collect(),
+                lp: Vec::new(),
+            }),
+            len: 0,
+        }));
+        self.rows.len() - 1
+    }
+
+    fn fork(&mut self, row: usize) -> usize {
+        let src = self.row(row);
+        let copy = SessRow {
+            mem_row: src.mem_row,
+            cache: Arc::clone(&src.cache),
+            len: src.len,
+        };
+        self.rows.push(Some(copy));
+        self.rows.len() - 1
+    }
+
+    fn truncate(&mut self, row: usize, len: usize) {
+        let sr = self.rows[row].as_mut().expect("released session row");
+        assert!(len <= sr.len, "truncate beyond row length");
+        sr.len = len;
+    }
+
+    fn release(&mut self, row: usize) {
+        self.rows[row] = None;
+    }
+
+    fn row_len(&self, row: usize) -> usize {
+        self.row(row).len
+    }
+
+    fn extend(&mut self, deltas: &[(usize, &[i64])]) -> Result<LogProbs> {
+        let (t_len, v) = (self.backend.cfg.t_len, self.backend.cfg.vocab);
+        let d = self.backend.cfg.d_model;
+        self.stats.extend_calls += 1;
+
+        let mut lens = Vec::with_capacity(deltas.len());
+        let mut window = 1usize;
+        for &(row, toks) in deltas {
+            let mem_row = self.row(row).mem_row;
+            let cross = self.cross_for(mem_row);
+            let sr = self.rows[row].as_mut().expect("released session row");
+            let len_before = sr.len;
+            anyhow::ensure!(
+                len_before + toks.len() <= t_len,
+                "row length {} exceeds bucket {t_len}",
+                len_before + toks.len()
+            );
+            // Unshare (one clone if forked) and roll the buffers back to
+            // the logical length before appending.
+            let cache = Arc::make_mut(&mut sr.cache);
+            cache.tokens.truncate(len_before);
+            cache.lp.truncate(len_before * v);
+            for kv in cache.kv.iter_mut() {
+                kv.k.truncate(len_before * d);
+                kv.v.truncate(len_before * d);
+            }
+            self.backend.extend_row(cache, &cross, toks);
+            sr.len = len_before + toks.len();
+            self.stats.tokens_computed += toks.len();
+            self.stats.tokens_reused += len_before;
+            lens.push(sr.len);
+            let needed = (toks.len() + usize::from(len_before > 0)).min(sr.len);
+            window = window.max(needed);
+        }
+
+        // Assemble the shared-window view from the per-row log-prob
+        // caches (unfilled leading columns are unreadable by contract).
+        let mut data = vec![0f32; deltas.len() * window * v];
+        for (ri, &(row, _)) in deltas.iter().enumerate() {
+            let sr = self.row(row);
+            let len = sr.len;
+            for j in len.saturating_sub(window)..len {
+                let wcol = window - len + j;
+                let dst = (ri * window + wcol) * v;
+                data[dst..dst + v].copy_from_slice(&sr.cache.lp[j * v..(j + 1) * v]);
+            }
+        }
+        Ok(LogProbs::new_windowed(data, lens, t_len, v, window))
+    }
+
+    fn stats(&self) -> SessionStats {
+        self.stats
     }
 }

@@ -35,6 +35,15 @@ pub struct Weights {
 }
 
 impl Weights {
+    /// Assemble a checkpoint in memory (tests build tiny random models;
+    /// the session-parity property tests run the reference transformer
+    /// without any file on disk).
+    pub fn from_tensors<I: IntoIterator<Item = (String, Tensor)>>(tensors: I) -> Weights {
+        Weights {
+            tensors: tensors.into_iter().collect(),
+        }
+    }
+
     pub fn load(path: &Path) -> Result<Weights> {
         let data = std::fs::read(path).with_context(|| format!("read {}", path.display()))?;
         if data.len() < 8 || &data[0..4] != b"RXW1" {

@@ -14,7 +14,7 @@ use std::path::Path;
 
 use anyhow::Result;
 
-use crate::decoding::{Backend, DecoderRow, LogProbs, Memory, ModelDims};
+use crate::decoding::{Backend, DecoderRow, DecoderSession, LogProbs, Memory, ModelDims};
 use crate::model::RustBackend;
 
 /// Runtime-selectable backend: the PJRT production path or the pure-Rust
@@ -76,6 +76,16 @@ impl Backend for AnyBackend {
         match self {
             AnyBackend::Pjrt(b) => b.decode(rows, memory),
             AnyBackend::Rust(b) => b.decode(rows, memory),
+        }
+    }
+
+    fn begin(&self, memory: Memory) -> Result<Box<dyn DecoderSession + '_>> {
+        // Dispatch so the reference backend's KV-cached session is used
+        // (the default would wrap AnyBackend itself in a stateless
+        // adapter and silently lose the cache).
+        match self {
+            AnyBackend::Pjrt(b) => b.begin(memory),
+            AnyBackend::Rust(b) => b.begin(memory),
         }
     }
 }

@@ -20,7 +20,9 @@ use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
-use crate::decoding::{Backend, DecoderRow, LogProbs, Memory, ModelDims};
+use crate::decoding::{
+    Backend, DecoderRow, DecoderSession, LogProbs, Memory, ModelDims, StatelessSession,
+};
 use crate::model::{Config, Weights};
 use crate::vocab::PAD_ID;
 
@@ -60,6 +62,12 @@ pub struct ArtifactSet {
     /// Same grid, B=1 fast path: shared memory row broadcast on-device,
     /// log-probs emitted only for the trailing `DECFAST_WINDOW` columns.
     decfast: BTreeMap<(usize, usize), LazyExe>,
+    /// Cache-shaped decoder executables: take per-layer K/V buffers as
+    /// extra arguments and compute only the appended window. aot.py does
+    /// not emit these yet (ROADMAP: "artifact-side cache inputs"); the
+    /// manifest kind is registered here so sessions switch from the
+    /// stateless-recompute fallback the moment artifacts grow them.
+    deccache: BTreeMap<(usize, usize), LazyExe>,
 }
 
 /// The production backend: PJRT-compiled AOT artifacts.
@@ -110,6 +118,7 @@ impl PjrtBackend {
         let mut enc = BTreeMap::new();
         let mut dec = BTreeMap::new();
         let mut decfast = BTreeMap::new();
+        let mut deccache = BTreeMap::new();
         for line in manifest.lines() {
             if line.is_empty() {
                 continue;
@@ -135,6 +144,9 @@ impl PjrtBackend {
                 "decfast" => {
                     decfast.insert((tlen, eb), lazy);
                 }
+                "deccache" => {
+                    deccache.insert((tlen, eb), lazy);
+                }
                 other => bail!("unknown artifact kind {other}"),
             }
         }
@@ -144,7 +156,12 @@ impl PjrtBackend {
         Ok(PjrtBackend {
             client,
             cfg,
-            arts: ArtifactSet { enc, dec, decfast },
+            arts: ArtifactSet {
+                enc,
+                dec,
+                decfast,
+                deccache,
+            },
             weight_bufs,
             calls: std::cell::RefCell::new(Vec::new()),
         })
@@ -207,10 +224,18 @@ impl PjrtBackend {
             .values()
             .chain(self.arts.dec.values())
             .chain(self.arts.decfast.values())
+            .chain(self.arts.deccache.values())
         {
             lazy.get(&self.client)?;
         }
         Ok(())
+    }
+
+    /// Whether the manifest registered cache-shaped decoder artifacts
+    /// (`deccache` kind). When false — the current aot.py output —
+    /// sessions use the stateless-recompute fallback.
+    pub fn has_cache_artifacts(&self) -> bool {
+        !self.arts.deccache.is_empty()
     }
 
     /// Largest effective-batch bucket (for chunking).
@@ -380,5 +405,15 @@ impl Backend for PjrtBackend {
             out[base * row_sz..(base + n) * row_sz].copy_from_slice(&lp[..n * row_sz]);
         }
         Ok(LogProbs::new_windowed(out, lens, t_len, v, window))
+    }
+
+    fn begin(&self, memory: Memory) -> Result<Box<dyn DecoderSession + '_>> {
+        // Cache-shaped artifacts would let the session keep device-
+        // resident per-layer K/V buffers between `extend` calls and run a
+        // `deccache` executable over just the appended window. Until
+        // aot.py emits them (`has_cache_artifacts()`), every session
+        // falls back to stateless recompute through `decode`, which
+        // preserves the decfast B=1 path and bucket selection unchanged.
+        Ok(Box::new(StatelessSession::new(self, memory)))
     }
 }

@@ -18,6 +18,7 @@
 use anyhow::Result;
 
 use crate::decoding::{Backend, DecoderRow, LogProbs, Memory, ModelDims};
+use crate::model::{Config, RustBackend, Tensor, Weights};
 use crate::rng::Rng;
 use crate::vocab::{BOS_ID, EOS_ID, PAD_ID, UNK_ID};
 
@@ -294,6 +295,106 @@ pub fn random_wrapped_src(rng: &mut Rng, min_len: usize, max_len: usize, vocab: 
     }
     src.push(EOS_ID);
     src
+}
+
+/// Delegating wrapper that **suppresses** a backend's cache-aware session
+/// override: it forwards `dims`/`encode`/`decode` but inherits the
+/// default [`Backend::begin`], so every decode goes through the
+/// stateless-recompute [`StatelessSession`](crate::decoding::StatelessSession).
+/// The oracle side of the cached-vs-stateless parity property tests.
+pub struct ForceStateless<'a, B: Backend>(pub &'a B);
+
+impl<B: Backend> Backend for ForceStateless<'_, B> {
+    fn dims(&self) -> ModelDims {
+        self.0.dims()
+    }
+
+    fn encode(&self, srcs: &[&[i64]]) -> Result<Memory> {
+        self.0.encode(srcs)
+    }
+
+    fn decode(&self, rows: &[DecoderRow], memory: &Memory) -> Result<LogProbs> {
+        self.0.decode(rows, memory)
+    }
+    // No `begin` override: the default StatelessSession applies.
+}
+
+/// A tiny reference transformer with seeded-random weights, built fully
+/// in memory. Small dims keep the scalar reference code fast enough for
+/// property sweeps; the *shape* of computation (multi-head attention,
+/// pre-LN blocks, cross-attention, log-softmax head) is the real one, so
+/// parity between its cached and stateless sessions exercises every
+/// layer of the incremental path.
+pub fn random_rust_backend(seed: u64, vocab: usize, s_len: usize, t_len: usize) -> RustBackend {
+    let cfg = Config {
+        vocab,
+        d_model: 16,
+        n_heads: 2,
+        d_ff: 32,
+        n_enc: 1,
+        n_dec: 2,
+        s_len,
+        t_len,
+    };
+    fn rand_t(name: &str, dims: Vec<usize>, scale: f32, rng: &mut Rng) -> (String, Tensor) {
+        let n: usize = dims.iter().product();
+        let data: Vec<f32> = (0..n)
+            .map(|_| (rng.f64() as f32 - 0.5) * 2.0 * scale)
+            .collect();
+        (name.to_string(), Tensor { dims, data })
+    }
+    fn ln_t(name: &str, d: usize, one: bool) -> (String, Tensor) {
+        (
+            name.to_string(),
+            Tensor {
+                dims: vec![d],
+                data: vec![if one { 1.0 } else { 0.0 }; d],
+            },
+        )
+    }
+    fn attn(prefix: &str, d: usize, tensors: &mut Vec<(String, Tensor)>, rng: &mut Rng) {
+        for w in ["wq", "wk", "wv", "wo"] {
+            tensors.push(rand_t(&format!("{prefix}.{w}"), vec![d, d], 0.3, rng));
+        }
+        for b in ["bq", "bk", "bv", "bo"] {
+            tensors.push(rand_t(&format!("{prefix}.{b}"), vec![d], 0.05, rng));
+        }
+    }
+    let mut rng = Rng::new(seed ^ 0x5EED_CAFE);
+    let mut tensors: Vec<(String, Tensor)> = Vec::new();
+    let d = cfg.d_model;
+    tensors.push(rand_t("tok_emb", vec![cfg.vocab, d], 0.5, &mut rng));
+    tensors.push(rand_t("out_w", vec![d, cfg.vocab], 0.5, &mut rng));
+    tensors.push(rand_t("out_b", vec![cfg.vocab], 0.1, &mut rng));
+    tensors.push(ln_t("enc_ln_f.g", d, true));
+    tensors.push(ln_t("enc_ln_f.b", d, false));
+    tensors.push(ln_t("dec_ln_f.g", d, true));
+    tensors.push(ln_t("dec_ln_f.b", d, false));
+    for i in 0..cfg.n_enc {
+        for ln in ["ln1", "ln2"] {
+            tensors.push(ln_t(&format!("enc{i}.{ln}.g"), d, true));
+            tensors.push(ln_t(&format!("enc{i}.{ln}.b"), d, false));
+        }
+        attn(&format!("enc{i}.attn"), d, &mut tensors, &mut rng);
+        tensors.push(rand_t(&format!("enc{i}.ffn.w1"), vec![d, cfg.d_ff], 0.3, &mut rng));
+        tensors.push(rand_t(&format!("enc{i}.ffn.b1"), vec![cfg.d_ff], 0.1, &mut rng));
+        tensors.push(rand_t(&format!("enc{i}.ffn.w2"), vec![cfg.d_ff, d], 0.3, &mut rng));
+        tensors.push(rand_t(&format!("enc{i}.ffn.b2"), vec![d], 0.1, &mut rng));
+    }
+    for i in 0..cfg.n_dec {
+        for ln in ["ln1", "ln2", "ln3"] {
+            tensors.push(ln_t(&format!("dec{i}.{ln}.g"), d, true));
+            tensors.push(ln_t(&format!("dec{i}.{ln}.b"), d, false));
+        }
+        attn(&format!("dec{i}.self_attn"), d, &mut tensors, &mut rng);
+        attn(&format!("dec{i}.cross_attn"), d, &mut tensors, &mut rng);
+        tensors.push(rand_t(&format!("dec{i}.ffn.w1"), vec![d, cfg.d_ff], 0.3, &mut rng));
+        tensors.push(rand_t(&format!("dec{i}.ffn.b1"), vec![cfg.d_ff], 0.1, &mut rng));
+        tensors.push(rand_t(&format!("dec{i}.ffn.w2"), vec![cfg.d_ff, d], 0.3, &mut rng));
+        tensors.push(rand_t(&format!("dec{i}.ffn.b2"), vec![d], 0.1, &mut rng));
+    }
+    let weights = Weights::from_tensors(tensors);
+    RustBackend::from_weights(&weights, cfg).expect("random backend assembly")
 }
 
 #[cfg(test)]

@@ -1,0 +1,229 @@
+//! The session-caching contract, held as a *hard* invariant: decoding
+//! through the reference backend's KV-cached session (`extend` /
+//! `truncate` / `fork`) must be **token-exact and score-exact** against
+//! the stateless recompute path, for every decoding algorithm.
+//!
+//! This is not a tolerance check. By the conditional-consistency
+//! contract, a row's distributions depend only on its own prefix, and
+//! the cached path runs the same scalar arithmetic in the same order as
+//! the stateless one (`attn_core` is shared), so any drift — however
+//! small — is a bug in the cache, not numerical noise.
+//!
+//! The model under test is a tiny seeded-random Molecular-Transformer
+//! (real multi-head attention, pre-LN blocks, cross-attention,
+//! log-softmax head), built in memory by `testutil::random_rust_backend`.
+
+use rxnspec::decoding::{
+    beam_search, greedy, sbs, spec_greedy, Backend, DecoderRow, SbsConfig,
+};
+use rxnspec::draft::DraftConfig;
+use rxnspec::rng::Rng;
+use rxnspec::testutil::{random_rust_backend, random_wrapped_src, ForceStateless};
+use rxnspec::vocab::BOS_ID;
+
+const VOCAB: usize = 24;
+const S_LEN: usize = 32;
+const T_LEN: usize = 32;
+
+#[test]
+fn prop_cached_greedy_is_bit_identical_to_stateless() {
+    let mut rng = Rng::new(0x11);
+    for seed in 0..8u64 {
+        let backend = random_rust_backend(seed, VOCAB, S_LEN, T_LEN);
+        let oracle = ForceStateless(&backend);
+        let src = random_wrapped_src(&mut rng, 4, 16, VOCAB);
+        let cached = greedy(&backend, &src).unwrap();
+        let stateless = greedy(&oracle, &src).unwrap();
+        assert_eq!(
+            cached.hyps[0].tokens, stateless.hyps[0].tokens,
+            "seed {seed}: greedy tokens diverged"
+        );
+        assert!(
+            cached.hyps[0].score == stateless.hyps[0].score,
+            "seed {seed}: greedy score diverged: {} vs {}",
+            cached.hyps[0].score,
+            stateless.hyps[0].score
+        );
+        // The win the cache exists for: ~1 computed position per emitted
+        // token, against the stateless quadratic recompute.
+        assert!(cached.stats.tokens_reused > 0, "seed {seed}: no reuse");
+        assert!(
+            cached.stats.tokens_computed < stateless.stats.tokens_computed,
+            "seed {seed}: cache did not reduce computed positions"
+        );
+        assert_eq!(stateless.stats.tokens_reused, 0);
+    }
+}
+
+#[test]
+fn prop_cached_spec_greedy_is_bit_identical_to_stateless() {
+    let mut rng = Rng::new(0x22);
+    for seed in 0..8u64 {
+        let backend = random_rust_backend(seed + 100, VOCAB, S_LEN, T_LEN);
+        let oracle = ForceStateless(&backend);
+        let src = random_wrapped_src(&mut rng, 5, 18, VOCAB);
+        for dl in [0usize, 3, 7] {
+            let cfg = DraftConfig::new(dl);
+            let cached = spec_greedy(&backend, &src, &cfg).unwrap();
+            let stateless = spec_greedy(&oracle, &src, &cfg).unwrap();
+            assert_eq!(
+                cached.hyps[0].tokens, stateless.hyps[0].tokens,
+                "seed {seed} dl {dl}: spec tokens diverged"
+            );
+            assert!(
+                cached.hyps[0].score == stateless.hyps[0].score,
+                "seed {seed} dl {dl}: spec score diverged"
+            );
+            assert_eq!(
+                cached.stats.decoder_calls, stateless.stats.decoder_calls,
+                "seed {seed} dl {dl}: call counts diverged"
+            );
+            // And the session path must still be lossless vs plain greedy.
+            let g = greedy(&backend, &src).unwrap();
+            assert_eq!(cached.hyps[0].tokens, g.hyps[0].tokens);
+        }
+    }
+}
+
+#[test]
+fn prop_cached_beam_search_is_bit_identical_to_stateless() {
+    let mut rng = Rng::new(0x33);
+    for seed in 0..6u64 {
+        let backend = random_rust_backend(seed + 200, VOCAB, S_LEN, T_LEN);
+        let oracle = ForceStateless(&backend);
+        let src = random_wrapped_src(&mut rng, 5, 16, VOCAB);
+        for n in [1usize, 3, 5] {
+            let cached = beam_search(&backend, &src, n).unwrap();
+            let stateless = beam_search(&oracle, &src, n).unwrap();
+            assert_eq!(
+                cached.hyps.len(),
+                stateless.hyps.len(),
+                "seed {seed} n {n}: hyp counts diverged"
+            );
+            for (a, b) in cached.hyps.iter().zip(&stateless.hyps) {
+                assert_eq!(a.tokens, b.tokens, "seed {seed} n {n}: beam diverged");
+                assert!(a.score == b.score, "seed {seed} n {n}: score diverged");
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_cached_sbs_is_bit_identical_to_stateless() {
+    let mut rng = Rng::new(0x44);
+    for seed in 0..6u64 {
+        let backend = random_rust_backend(seed + 300, VOCAB, S_LEN, T_LEN);
+        let oracle = ForceStateless(&backend);
+        let src = random_wrapped_src(&mut rng, 6, 18, VOCAB);
+        for (n, dl) in [(1usize, 4usize), (3, 0), (3, 5), (5, 8)] {
+            let cfg = SbsConfig::new(n, dl);
+            let cached = sbs(&backend, &src, &cfg).unwrap();
+            let stateless = sbs(&oracle, &src, &cfg).unwrap();
+            assert_eq!(
+                cached.hyps.len(),
+                stateless.hyps.len(),
+                "seed {seed} n {n} dl {dl}: hyp counts diverged"
+            );
+            for (a, b) in cached.hyps.iter().zip(&stateless.hyps) {
+                assert_eq!(
+                    a.tokens, b.tokens,
+                    "seed {seed} n {n} dl {dl}: sbs diverged"
+                );
+                assert!(a.score == b.score, "seed {seed} n {n} dl {dl}: score diverged");
+            }
+        }
+    }
+}
+
+/// Drive extend/truncate/fork directly and compare every exposed
+/// log-probability bit-for-bit against a fresh stateless decode of the
+/// same teacher-forced rows.
+#[test]
+fn extend_truncate_fork_logprobs_bit_exact() {
+    let backend = random_rust_backend(0xD1CE, VOCAB, S_LEN, T_LEN);
+    let src: Vec<i64> = vec![BOS_ID, 5, 6, 7, 8, 9, rxnspec::vocab::EOS_ID];
+    let memory = backend.encode(&[&src]).unwrap();
+
+    let mut sess = backend.begin(backend.encode(&[&src]).unwrap()).unwrap();
+    let a = sess.new_row(0);
+    // Commit [BOS, 5, 6] in two uneven extends.
+    sess.extend(&[(a, &[BOS_ID])]).unwrap();
+    sess.extend(&[(a, &[5, 6])]).unwrap();
+    // Fork, roll the fork back one token, extend it differently.
+    let b = sess.fork(a);
+    sess.truncate(b, 2);
+    let lp_b = sess.extend(&[(b, &[9, 10])]).unwrap();
+    // Extend the parent after the fork diverged (copy-on-write must have
+    // kept its state intact).
+    let lp_a = sess.extend(&[(a, &[7])]).unwrap();
+
+    // Stateless oracle rows.
+    let rows = vec![
+        DecoderRow {
+            tokens: vec![BOS_ID, 5, 9, 10],
+            mem_row: 0,
+        },
+        DecoderRow {
+            tokens: vec![BOS_ID, 5, 6, 7],
+            mem_row: 0,
+        },
+    ];
+    let lp_ref = backend.decode(&rows, &memory).unwrap();
+
+    for v in 0..VOCAB as i64 {
+        // Fork row: window covers successors of positions 1..=3.
+        for j in [1usize, 2, 3] {
+            assert!(
+                lp_b.logp(0, j, v) == lp_ref.logp(0, j, v),
+                "fork row: j {j} v {v}: {} vs {}",
+                lp_b.logp(0, j, v),
+                lp_ref.logp(0, j, v)
+            );
+        }
+        // Parent row after divergent fork: successors of positions 2..=3.
+        for j in [2usize, 3] {
+            assert!(
+                lp_a.logp(0, j, v) == lp_ref.logp(1, j, v),
+                "parent row: j {j} v {v}: {} vs {}",
+                lp_a.logp(0, j, v),
+                lp_ref.logp(1, j, v)
+            );
+        }
+    }
+
+    let stats = sess.stats();
+    // BOS + [5,6] + [9,10] + [7] = 6 computed positions, never more.
+    assert_eq!(stats.tokens_computed, 6);
+    assert!(stats.tokens_reused > 0);
+}
+
+/// Sessions across multiple memory rows (batch decode + append_memory)
+/// keep rows bound to the right query.
+#[test]
+fn cached_session_append_memory_matches_fresh_session() {
+    let backend = random_rust_backend(0xFEED, VOCAB, S_LEN, T_LEN);
+    let s1: Vec<i64> = vec![BOS_ID, 4, 5, rxnspec::vocab::EOS_ID];
+    let s2: Vec<i64> = vec![BOS_ID, 6, 7, 8, rxnspec::vocab::EOS_ID];
+
+    // One session seeded with s1, s2 appended mid-flight.
+    let mut sess = backend.begin(backend.encode(&[&s1]).unwrap()).unwrap();
+    let r1 = sess.new_row(0);
+    sess.extend(&[(r1, &[BOS_ID])]).unwrap();
+    let base = sess.append_memory(&backend.encode(&[&s2]).unwrap());
+    let r2 = sess.new_row(base);
+    let lp = sess.extend(&[(r2, &[BOS_ID, 9])]).unwrap();
+
+    // Fresh session over s2 alone.
+    let mut fresh = backend.begin(backend.encode(&[&s2]).unwrap()).unwrap();
+    let fr = fresh.new_row(0);
+    let lp_fresh = fresh.extend(&[(fr, &[BOS_ID, 9])]).unwrap();
+
+    for j in 0..2 {
+        for v in 0..VOCAB as i64 {
+            assert!(
+                lp.logp(0, j, v) == lp_fresh.logp(0, j, v),
+                "appended-memory row diverged at j {j} v {v}"
+            );
+        }
+    }
+}

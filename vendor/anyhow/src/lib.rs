@@ -1,0 +1,176 @@
+//! Minimal offline shim of the `anyhow` API surface used by `rxnspec`.
+//!
+//! Differences from real `anyhow`, all invisible to this workspace:
+//! context is flattened into the message eagerly (`"{context}: {cause}"`)
+//! rather than kept as a lazily-rendered source chain, and there is no
+//! downcasting or backtrace capture.
+
+use std::fmt;
+
+/// A type-erased error: a rendered message.
+///
+/// Deliberately does **not** implement [`std::error::Error`], exactly like
+/// real `anyhow::Error` — that is what makes the blanket
+/// `From<E: std::error::Error>` conversion below coherent.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Construct from anything printable (the `anyhow!` macro's engine).
+    pub fn msg<M: fmt::Display>(m: M) -> Error {
+        Error { msg: m.to_string() }
+    }
+
+    /// Prepend a context line, mirroring `anyhow`'s outermost-first
+    /// rendering of `.context(...)` chains.
+    pub fn context<C: fmt::Display>(self, c: C) -> Error {
+        Error {
+            msg: format!("{c}: {}", self.msg),
+        }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        // Render the source chain now; nothing in this workspace downcasts.
+        let mut msg = e.to_string();
+        let mut src = e.source();
+        while let Some(s) = src {
+            msg.push_str(": ");
+            msg.push_str(&s.to_string());
+            src = s.source();
+        }
+        Error { msg }
+    }
+}
+
+/// `anyhow::Result` with the usual defaulted error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to a `Result` or `Option` error path.
+pub trait Context<T> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, c: C) -> Result<T, Error>;
+    fn with_context<C: fmt::Display + Send + Sync + 'static, F: FnOnce() -> C>(
+        self,
+        f: F,
+    ) -> Result<T, Error>;
+}
+
+impl<T, E: fmt::Display + Send + Sync + 'static> Context<T> for Result<T, E> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, c: C) -> Result<T, Error> {
+        self.map_err(|e| Error {
+            msg: format!("{c}: {e}"),
+        })
+    }
+
+    fn with_context<C: fmt::Display + Send + Sync + 'static, F: FnOnce() -> C>(
+        self,
+        f: F,
+    ) -> Result<T, Error> {
+        self.map_err(|e| Error {
+            msg: format!("{}: {e}", f()),
+        })
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, c: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(c))
+    }
+
+    fn with_context<C: fmt::Display + Send + Sync + 'static, F: FnOnce() -> C>(
+        self,
+        f: F,
+    ) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from format arguments.
+#[macro_export]
+macro_rules! anyhow {
+    ($fmt:literal $(, $arg:expr)* $(,)?) => {
+        $crate::Error::msg(format!($fmt $(, $arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Return early with an [`Error`] built from format arguments.
+#[macro_export]
+macro_rules! bail {
+    ($($tt:tt)*) => {
+        return Err($crate::anyhow!($($tt)*))
+    };
+}
+
+/// Return early with an error unless a condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::Error::msg(concat!("condition failed: ", stringify!($cond))));
+        }
+    };
+    ($cond:expr, $($tt:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($tt)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Result<usize> {
+        let n: usize = s.parse()?; // From<ParseIntError> via blanket impl
+        ensure!(n < 100, "n too big: {n}");
+        Ok(n)
+    }
+
+    #[test]
+    fn question_mark_and_ensure() {
+        assert_eq!(parse("7").unwrap(), 7);
+        assert!(parse("x").is_err());
+        assert_eq!(parse("200").unwrap_err().to_string(), "n too big: 200");
+    }
+
+    #[test]
+    fn context_flattens() {
+        let e: Result<()> = Err(anyhow!("inner"));
+        let e = e.context("outer").unwrap_err();
+        assert_eq!(e.to_string(), "outer: inner");
+        let o: Option<usize> = None;
+        assert_eq!(
+            o.with_context(|| "missing").unwrap_err().to_string(),
+            "missing"
+        );
+    }
+
+    #[test]
+    fn bail_formats() {
+        fn f(flag: bool) -> Result<()> {
+            if flag {
+                bail!("flag was {flag}");
+            }
+            Ok(())
+        }
+        assert!(f(false).is_ok());
+        assert_eq!(f(true).unwrap_err().to_string(), "flag was true");
+    }
+}
