@@ -11,13 +11,14 @@
 //!     cargo run --release --example casp_planner [n_targets] [-- --roundtrip]
 
 use std::path::Path;
+use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::Result;
 use rxnspec::bench::{eval_setup, limit};
 use rxnspec::decoding::{greedy, Backend};
 use rxnspec::planner::{
-    ForwardCheck, Planner, PlannerConfig, RetroDecoder, RetroModel, Stock,
+    ForwardCheck, Planner, PlannerCache, PlannerConfig, RetroDecoder, RetroModel, Stock,
 };
 use rxnspec::runtime::AnyBackend;
 use rxnspec::vocab::Vocab;
@@ -85,6 +86,9 @@ fn main() -> Result<()> {
             RetroDecoder::Sbs { .. } => "SBS   ",
         };
         println!("--- decoder: {label} ---");
+        // One expansion memo per decoder (shared across targets, never
+        // across decoders — entries are raw model output).
+        let cache = Arc::new(PlannerCache::new(4096, 4));
         for ex in split.iter().take(n_targets) {
             let model = RetroModel::new(&retro_backend, &vocab, *decoder);
             let t0 = Instant::now();
@@ -94,9 +98,13 @@ fn main() -> Result<()> {
                         backend: fb,
                         vocab: fv,
                     };
-                    Planner::with_forward(&model, &stock, &fwd, cfg.clone()).plan(&ex.src)?
+                    Planner::with_forward(&model, &stock, &fwd, cfg.clone())
+                        .with_cache(Arc::clone(&cache))
+                        .plan(&ex.src)?
                 }
-                None => Planner::new(&model, &stock, cfg.clone()).plan(&ex.src)?,
+                None => Planner::new(&model, &stock, cfg.clone())
+                    .with_cache(Arc::clone(&cache))
+                    .plan(&ex.src)?,
             };
             let wall = t0.elapsed().as_secs_f64();
             totals[di].0 += wall;
@@ -105,20 +113,28 @@ fn main() -> Result<()> {
                 Some(r) => {
                     totals[di].1 += 1;
                     println!(
-                        "solved {} in {:.1}s ({} expansions, {} decoder calls)",
+                        "solved {} in {:.1}s ({} expansions, {} cache hits, {} decoder calls)",
                         ex.src,
                         wall,
                         stats.expansions,
+                        stats.cache_hits,
                         model.decoder_calls.get()
                     );
                     print!("{}", r.render());
                 }
                 None => println!(
-                    "unsolved {} in {:.1}s ({} expansions)",
-                    ex.src, wall, stats.expansions
+                    "unsolved {} in {:.1}s ({} expansions, {} cache hits)",
+                    ex.src, wall, stats.expansions, stats.cache_hits
                 ),
             }
         }
+        let cs = cache.stats();
+        println!(
+            "expansion memo: {} entries, {} hits / {} lookups",
+            cs.len,
+            cs.hits,
+            cs.hits + cs.misses
+        );
         println!();
     }
     println!(

@@ -45,6 +45,7 @@ fn main() -> anyhow::Result<()> {
     let state = Arc::new(ServerState {
         queue: RequestQueue::new(32, Duration::from_millis(5)),
         metrics: Arc::new(Metrics::default()),
+        cache: Arc::new(rxnspec::cache::ServeCache::default()),
         shutdown: AtomicBool::new(false),
     });
     let listener = TcpListener::bind(("127.0.0.1", port))?;
@@ -57,7 +58,13 @@ fn main() -> anyhow::Result<()> {
     let worker_state = Arc::clone(&state);
     let worker = std::thread::spawn(move || {
         let (vocab, backend, _) = eval_setup("fwd").expect("worker setup");
-        run_worker(&backend, &vocab, &worker_state.queue, &worker_state.metrics);
+        run_worker(
+            &backend,
+            &vocab,
+            &worker_state.queue,
+            &worker_state.metrics,
+            &worker_state.cache,
+        );
     });
 
     let mut client = Client::connect(&addr)?;
@@ -93,34 +100,59 @@ fn main() -> anyhow::Result<()> {
     }
 
     // --- phase 2: concurrent burst (dynamic batching) ------------------
+    // Fresh queries where available: phase 1 already warmed the result
+    // cache for its slice, and a cold burst is what exercises batching.
     let burst = queries.len().min(16);
-    let t0 = Instant::now();
-    let handles: Vec<_> = queries[..burst]
+    let burst_queries: Vec<String> = split
         .iter()
-        .map(|q| {
-            let addr = addr.clone();
-            let q = q.to_string();
-            std::thread::spawn(move || -> anyhow::Result<f64> {
-                let mut c = Client::connect(&addr)?;
-                let p = c.predict("spec:10", &q)?;
-                Ok(p.latency_ms)
-            })
-        })
+        .skip(n_requests)
+        .take(burst)
+        .map(|e| e.src.clone())
         .collect();
-    let mut lat: Vec<f64> = handles
-        .into_iter()
-        .map(|h| h.join().unwrap())
-        .collect::<anyhow::Result<Vec<_>>>()?;
-    lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    let wall = t0.elapsed().as_secs_f64();
-    println!(
-        "{:<26} n={:<4} p50={:.0}ms p95={:.0}ms thpt={:.2} req/s (batched)",
-        "concurrent burst spec:10",
-        burst,
-        percentile(&lat, 0.50),
-        percentile(&lat, 0.95),
-        burst as f64 / wall,
-    );
+    let (burst_queries, first_note): (Vec<String>, &str) = if burst_queries.len() == burst {
+        (burst_queries, "batched, cold")
+    } else {
+        // Split too small for fresh queries: phase 1 already warmed these
+        // under the same cache tag, so this burst is served from cache
+        // and no longer measures batching — say so instead of lying.
+        (
+            queries[..burst].iter().map(|q| q.to_string()).collect(),
+            "cache-warm: split too small for a cold burst",
+        )
+    };
+    for (label, note) in [
+        ("concurrent burst spec:10", first_note),
+        ("repeat burst spec:10", "served from result cache"),
+    ] {
+        let t0 = Instant::now();
+        let handles: Vec<_> = burst_queries
+            .iter()
+            .map(|q| {
+                let addr = addr.clone();
+                let q = q.to_string();
+                std::thread::spawn(move || -> anyhow::Result<(f64, usize)> {
+                    let mut c = Client::connect(&addr)?;
+                    let p = c.predict("spec:10", &q)?;
+                    Ok((p.latency_ms, p.decoder_calls))
+                })
+            })
+            .collect();
+        let results: Vec<(f64, usize)> = handles
+            .into_iter()
+            .map(|h| h.join().unwrap())
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        let mut lat: Vec<f64> = results.iter().map(|r| r.0).collect();
+        let calls: usize = results.iter().map(|r| r.1).sum();
+        lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let wall = t0.elapsed().as_secs_f64();
+        println!(
+            "{label:<26} n={:<4} p50={:.0}ms p95={:.0}ms thpt={:.2} req/s calls={calls} ({note})",
+            burst_queries.len(),
+            percentile(&lat, 0.50),
+            percentile(&lat, 0.95),
+            burst_queries.len() as f64 / wall,
+        );
+    }
 
     // --- server-side metrics -------------------------------------------
     println!("\n--- server STATS ---");

@@ -5,10 +5,17 @@
 //! DL=10 on USPTO-MIT). This bench regenerates both: the worked example,
 //! and an acceptance-rate / calls-per-token sweep over draft length on a
 //! corpus subset — the curve behind the Table 2 speedups.
+//!
+//! The sweep additionally runs through the cache subsystem: each query
+//! passes twice over a `ResultCache` (the repeat pass measures the hit
+//! rate on recurring traffic) while a `DraftStore` warms online from the
+//! produced targets, so acceptance splits into query-copy vs
+//! corpus-learned draft sources (`acc_query` / `acc_corpus` columns).
 
 use rxnspec::bench::{eval_setup, limit, report, Measurement};
+use rxnspec::cache::{DraftStore, ResultCache};
 use rxnspec::chem::tokenize;
-use rxnspec::decoding::spec_greedy;
+use rxnspec::decoding::{spec_greedy, spec_greedy_corpus};
 use rxnspec::draft::{extract_drafts, Acceptance, DraftConfig};
 use std::time::Instant;
 
@@ -55,21 +62,41 @@ fn main() -> anyhow::Result<()> {
     let mut rows = Vec::new();
     for dl in [1usize, 2, 4, 6, 8, 10, 12] {
         let cfg = DraftConfig::new(dl);
+        // Fresh per-DL cache pair: the store warms online from produced
+        // targets; the result cache serves the repeat pass.
+        let store = DraftStore::new(dl.max(2), 2048);
+        let rcache: ResultCache<Vec<i64>> = ResultCache::new(1024, 4);
         let mut acc = Acceptance::default();
+        let (mut acc_query, mut acc_corpus) = (0usize, 0usize);
         let mut calls = 0usize;
         let mut toks = 0usize;
         let t0 = Instant::now();
-        for s in &srcs {
-            let out = spec_greedy(&backend, s, &cfg)?;
-            acc.merge(&out.stats.acceptance);
-            calls += out.stats.decoder_calls;
-            toks += out.hyps[0].tokens.len() + 1;
+        for _pass in 0..2 {
+            for s in &srcs {
+                // A hit is served without decoding — the stored target
+                // replays verbatim (duplicate split entries may already
+                // hit on the first pass).
+                if rcache.get(dl as u64, s).is_some() {
+                    continue;
+                }
+                let out = spec_greedy_corpus(&backend, s, &cfg, &store.top_k(8))?;
+                acc.merge(&out.stats.acceptance);
+                acc_query += out.stats.accepted_query_tokens;
+                acc_corpus += out.stats.accepted_corpus_tokens;
+                calls += out.stats.decoder_calls;
+                toks += out.hyps[0].tokens.len() + 1;
+                store.record(&out.hyps[0].tokens);
+                rcache.insert(dl as u64, s.clone(), out.hyps[0].tokens.clone());
+            }
         }
         let wall = t0.elapsed();
+        let cs = rcache.stats();
         eprintln!(
-            "  DL={dl:<2} acc={:.2} tokens/call={:.2}",
+            "  DL={dl:<2} acc={:.2} tokens/call={:.2} cache_hit_rate={:.2} corpus_share={:.3}",
             acc.rate(),
-            toks as f64 / calls as f64
+            toks as f64 / calls as f64,
+            cs.hit_rate(),
+            acc_corpus as f64 / (acc_query + acc_corpus).max(1) as f64,
         );
         rows.push(Measurement {
             label: format!("DL={dl}"),
@@ -78,6 +105,15 @@ fn main() -> anyhow::Result<()> {
                 ("acceptance".into(), acc.rate()),
                 ("tokens_per_call".into(), toks as f64 / calls as f64),
                 ("calls".into(), calls as f64),
+                (
+                    "acc_query".into(),
+                    acc_query as f64 / acc.total_tokens.max(1) as f64,
+                ),
+                (
+                    "acc_corpus".into(),
+                    acc_corpus as f64 / acc.total_tokens.max(1) as f64,
+                ),
+                ("cache_hit_rate".into(), cs.hit_rate()),
             ],
         });
     }
@@ -87,5 +123,9 @@ fn main() -> anyhow::Result<()> {
         &rows,
     );
     println!("\npaper reference: 79% average acceptance at DL=10 on USPTO-MIT");
+    println!(
+        "cache columns: acc_query/acc_corpus split total acceptance by draft source; \
+         cache_hit_rate is the repeat-pass ResultCache rate (~0.5 by construction)"
+    );
     Ok(())
 }

@@ -1,0 +1,218 @@
+//! Corpus-learned draft windows mined from previously accepted targets.
+//!
+//! The paper's drafting copies subsequences of the *current query* only
+//! (§2.1). Industrial traffic is repetitive — multi-step planning hammers
+//! the single-step model with recurring intermediates — so targets the
+//! server already produced are a second, corpus-level draft source. The
+//! store indexes fixed-length n-grams of completed target sequences with
+//! occurrence counts; `top_k` returns the most frequently seen windows to
+//! merge behind the query-copy drafts (one shared dedup set and the
+//! shared `max_drafts` cap live in `draft::extract_drafts_merged`).
+//!
+//! Exactness: a corpus draft is a *proposal*, never an emission — the
+//! accept/reject rule still compares every draft token against the
+//! model's own argmax, so stale, foreign, or adversarially poisoned
+//! windows cost at most wasted verify rows (see `tests/cache_exactness.rs`).
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use super::stats::DraftStoreStats;
+
+struct Entry {
+    count: u64,
+    /// First-observation order; breaks count ties deterministically.
+    seq: u64,
+}
+
+struct Inner {
+    counts: HashMap<Vec<i64>, Entry>,
+    seq: u64,
+}
+
+/// Bounded n-gram index over accepted target windows.
+pub struct DraftStore {
+    window: usize,
+    capacity: usize,
+    inner: Mutex<Inner>,
+    recorded: AtomicU64,
+    evicted: AtomicU64,
+}
+
+impl DraftStore {
+    /// `window`: n-gram length recorded from targets. `capacity`: max
+    /// distinct windows kept (floored at 1).
+    pub fn new(window: usize, capacity: usize) -> DraftStore {
+        DraftStore {
+            window: window.max(1),
+            capacity: capacity.max(1),
+            inner: Mutex::new(Inner {
+                counts: HashMap::new(),
+                seq: 0,
+            }),
+            recorded: AtomicU64::new(0),
+            evicted: AtomicU64::new(0),
+        }
+    }
+
+    /// Record every stride-1 window of a completed target sequence.
+    pub fn record(&self, target: &[i64]) {
+        if target.len() < self.window {
+            return;
+        }
+        let mut guard = self.inner.lock().unwrap();
+        let inner = &mut *guard;
+        let mut recorded = 0u64;
+        for start in 0..=(target.len() - self.window) {
+            let win = &target[start..start + self.window];
+            inner.seq += 1;
+            let seq = inner.seq;
+            inner
+                .counts
+                .entry(win.to_vec())
+                .and_modify(|e| e.count += 1)
+                .or_insert(Entry { count: 1, seq });
+            recorded += 1;
+        }
+        let evicted = evict_over_capacity(inner, self.capacity);
+        drop(guard);
+        self.recorded.fetch_add(recorded, Ordering::Relaxed);
+        self.evicted.fetch_add(evicted, Ordering::Relaxed);
+    }
+
+    /// Record one window verbatim (any length) — used by tests to plant
+    /// adversarial entries and by callers with pre-sliced windows.
+    pub fn record_window(&self, window: &[i64]) {
+        if window.is_empty() {
+            return;
+        }
+        let mut guard = self.inner.lock().unwrap();
+        let inner = &mut *guard;
+        inner.seq += 1;
+        let seq = inner.seq;
+        inner
+            .counts
+            .entry(window.to_vec())
+            .and_modify(|e| e.count += 1)
+            .or_insert(Entry { count: 1, seq });
+        let evicted = evict_over_capacity(inner, self.capacity);
+        drop(guard);
+        self.recorded.fetch_add(1, Ordering::Relaxed);
+        self.evicted.fetch_add(evicted, Ordering::Relaxed);
+    }
+
+    /// The `k` most established windows: highest count first, ties broken
+    /// by earliest first observation (deterministic).
+    pub fn top_k(&self, k: usize) -> Vec<Vec<i64>> {
+        if k == 0 {
+            return Vec::new();
+        }
+        let guard = self.inner.lock().unwrap();
+        let mut order: Vec<(u64, u64, &Vec<i64>)> = guard
+            .counts
+            .iter()
+            .map(|(w, e)| (e.count, e.seq, w))
+            .collect();
+        order.sort_by(|a, b| b.0.cmp(&a.0).then(a.1.cmp(&b.1)));
+        order.into_iter().take(k).map(|(_, _, w)| w.clone()).collect()
+    }
+
+    /// Distinct windows currently indexed.
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().counts.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn stats(&self) -> DraftStoreStats {
+        DraftStoreStats {
+            windows: self.len(),
+            capacity: self.capacity,
+            recorded: self.recorded.load(Ordering::Relaxed),
+            evicted: self.evicted.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Drop the weakest entries — lowest count, ties → oldest (smallest
+/// `seq`), so among equally rare windows the store rotates toward recent
+/// traffic and a full store of one-offs cannot fossilize.
+///
+/// Evicts in a batch down to ⅞ of `capacity` (not just to `capacity`),
+/// so the O(n) threshold-select + retain pass runs once per
+/// `capacity / 8` inserts instead of on every `record` at steady state —
+/// this sits on the worker's completion path under the store mutex. No
+/// per-entry clones: `(count, seq)` pairs are unique (seq is unique), so
+/// a rank threshold identifies exactly the entries to retain.
+fn evict_over_capacity(inner: &mut Inner, capacity: usize) -> u64 {
+    if inner.counts.len() <= capacity {
+        return 0;
+    }
+    let target = capacity - capacity / 8;
+    let n_evict = inner.counts.len() - target;
+    let mut ranks: Vec<(u64, u64)> = inner.counts.values().map(|e| (e.count, e.seq)).collect();
+    ranks.select_nth_unstable(n_evict - 1);
+    let threshold = ranks[n_evict - 1];
+    inner.counts.retain(|_, e| (e.count, e.seq) > threshold);
+    n_evict as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_slides_stride_one_windows() {
+        let s = DraftStore::new(3, 64);
+        s.record(&[1, 2, 3, 4]); // windows [1,2,3], [2,3,4]
+        assert_eq!(s.len(), 2);
+        assert_eq!(s.stats().recorded, 2);
+        let top = s.top_k(10);
+        assert!(top.contains(&vec![1, 2, 3]));
+        assert!(top.contains(&vec![2, 3, 4]));
+        // Too-short targets record nothing.
+        s.record(&[7, 8]);
+        assert_eq!(s.stats().recorded, 2);
+    }
+
+    #[test]
+    fn top_k_orders_by_count_then_first_seen() {
+        let s = DraftStore::new(2, 64);
+        s.record(&[1, 2]); // [1,2] x1 (seq 1)
+        s.record(&[3, 4]); // [3,4] x1 (seq 2)
+        s.record(&[3, 4]); // [3,4] x2
+        s.record(&[5, 6]); // [5,6] x1 (seq 4)
+        let top = s.top_k(3);
+        assert_eq!(top[0], vec![3, 4]); // highest count
+        assert_eq!(top[1], vec![1, 2]); // tie → earliest seen
+        assert_eq!(top[2], vec![5, 6]);
+        assert_eq!(s.top_k(1).len(), 1);
+        assert!(s.top_k(0).is_empty());
+    }
+
+    #[test]
+    fn capacity_evicts_weakest_entries() {
+        let s = DraftStore::new(2, 2);
+        s.record_window(&[1, 1]);
+        s.record_window(&[1, 1]); // established, count 2
+        s.record_window(&[2, 2]);
+        s.record_window(&[3, 3]); // over capacity: weakest-oldest goes
+        assert_eq!(s.len(), 2);
+        assert!(s.stats().evicted >= 1);
+        let top = s.top_k(4);
+        assert!(top.contains(&vec![1, 1]), "established window must survive");
+        assert!(top.contains(&vec![3, 3]), "fresh window rotates in");
+    }
+
+    #[test]
+    fn mixed_window_lengths_coexist_via_record_window() {
+        let s = DraftStore::new(4, 16);
+        s.record_window(&[9, 9]);
+        s.record(&[1, 2, 3, 4, 5]);
+        assert_eq!(s.len(), 3);
+        assert!(s.top_k(8).contains(&vec![9, 9]));
+    }
+}

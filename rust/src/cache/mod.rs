@@ -1,0 +1,235 @@
+//! Cross-request reuse: a reaction result cache plus a corpus-learned
+//! draft store.
+//!
+//! The paper accelerates one decode at a time; this subsystem accelerates
+//! the *traffic*. Industrial workloads — multi-step retrosynthetic
+//! planning above all — hit the single-step model with highly repetitive
+//! queries, so two reuse mechanisms stack on top of speculative decoding:
+//!
+//! * [`ResultCache`] — a sharded, capacity-bounded LRU keyed by
+//!   `(decoder kind, tokenized query)` that memoizes **completed**
+//!   predictions. A hit skips decoding entirely and is served verbatim,
+//!   bit-identical to the run that produced it.
+//! * [`DraftStore`] — an n-gram index over previously accepted target
+//!   windows. Its `top_k` windows are merged *behind* the paper's
+//!   query-copy drafts (one shared dedup set, one shared `N_d` cap — see
+//!   `draft::extract_drafts_merged`), giving the speculative decoders a
+//!   corpus-learned draft source on top of the current query.
+//!
+//! # Exactness
+//!
+//! Neither component can change served content:
+//!
+//! * a `ResultCache` hit replays a stored completed output;
+//! * a `DraftStore` window is only a *proposal* — the accept/reject rule
+//!   compares every draft token against the model's own argmax, so for
+//!   greedy-speculative decoding the emitted sequence is provably
+//!   identical with the store warm, cold, or adversarially poisoned, and
+//!   for SBS never-accepted corpus windows are provably output-neutral
+//!   while accepted ones only deepen the verified greedy prefix (the same
+//!   lever as raising `DL`, which Table 4 shows is accuracy-neutral —
+//!   but which can reorder the candidate frontier, so the *serving*
+//!   default keeps SBS corpus-free; see
+//!   [`CacheConfig::corpus_drafts_for_sbs`]).
+//!
+//! Property tests in `rust/tests/cache_exactness.rs` pin all of this.
+
+mod draft_store;
+mod result_cache;
+mod stats;
+
+pub use draft_store::DraftStore;
+pub use result_cache::ResultCache;
+pub use stats::{DraftStoreStats, ResultCacheStats};
+
+/// Knobs for the serving-side cache pair.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CacheConfig {
+    /// Master switch; `false` makes every component a no-op.
+    pub enabled: bool,
+    /// Total `ResultCache` entries across shards.
+    pub result_capacity: usize,
+    /// Independently locked LRU shards.
+    pub result_shards: usize,
+    /// Distinct target windows the `DraftStore` keeps.
+    pub draft_capacity: usize,
+    /// n-gram length recorded from completed targets.
+    pub draft_window: usize,
+    /// Corpus drafts fetched per request (they still share the
+    /// `max_drafts` cap with query-copy windows).
+    pub corpus_draft_budget: usize,
+    /// Also feed corpus drafts to SBS requests. Off by default: accepted
+    /// corpus windows deepen SBS's speculative lookahead, which — unlike
+    /// greedy-spec — can reorder the candidate frontier, so served SBS
+    /// outputs would depend on what the store happened to contain.
+    /// Leaving this off keeps every served prediction bit-identical to
+    /// the cold/disabled path (greedy-spec corpus drafts are provably
+    /// output-neutral and stay on regardless).
+    pub corpus_drafts_for_sbs: bool,
+}
+
+impl Default for CacheConfig {
+    fn default() -> Self {
+        CacheConfig {
+            enabled: true,
+            result_capacity: 4096,
+            result_shards: 8,
+            draft_capacity: 4096,
+            draft_window: 8,
+            corpus_draft_budget: 8,
+            corpus_drafts_for_sbs: false,
+        }
+    }
+}
+
+/// A memoized completed prediction, exactly as the worker replied it
+/// (minus per-run cost counters, which are zero on a hit).
+#[derive(Debug, Clone, PartialEq)]
+pub struct CachedPrediction {
+    /// (SMILES, cumulative log-prob) pairs, best first.
+    pub hyps: Vec<(String, f64)>,
+    /// Acceptance rate of the run that produced the entry.
+    pub acceptance_rate: f64,
+}
+
+/// The serving coordinator's cache pair behind one handle.
+pub struct ServeCache {
+    cfg: CacheConfig,
+    results: ResultCache<CachedPrediction>,
+    drafts: DraftStore,
+}
+
+impl ServeCache {
+    pub fn new(cfg: CacheConfig) -> ServeCache {
+        ServeCache {
+            results: ResultCache::new(cfg.result_capacity, cfg.result_shards),
+            drafts: DraftStore::new(cfg.draft_window, cfg.draft_capacity),
+            cfg,
+        }
+    }
+
+    /// A cache that never hits, never records, and fetches no drafts.
+    pub fn disabled() -> ServeCache {
+        ServeCache::new(CacheConfig {
+            enabled: false,
+            ..CacheConfig::default()
+        })
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.cfg.enabled
+    }
+
+    pub fn config(&self) -> &CacheConfig {
+        &self.cfg
+    }
+
+    pub fn results(&self) -> &ResultCache<CachedPrediction> {
+        &self.results
+    }
+
+    pub fn drafts(&self) -> &DraftStore {
+        &self.drafts
+    }
+
+    /// Corpus drafts for the next greedy-spec request (empty when
+    /// disabled). Output-neutral there for any store content.
+    pub fn corpus_drafts(&self) -> Vec<Vec<i64>> {
+        if !self.cfg.enabled {
+            return Vec::new();
+        }
+        self.drafts.top_k(self.cfg.corpus_draft_budget)
+    }
+
+    /// Corpus drafts for an SBS request — empty unless the operator
+    /// opted in via [`CacheConfig::corpus_drafts_for_sbs`] (see that
+    /// knob for why the default trades acceptance for strict
+    /// replay-exactness).
+    pub fn corpus_drafts_for_sbs(&self) -> Vec<Vec<i64>> {
+        if !self.cfg.corpus_drafts_for_sbs {
+            return Vec::new();
+        }
+        self.corpus_drafts()
+    }
+
+    /// One-line *occupancy* summary for the `STATS` serving surface.
+    /// Traffic counters (hits/misses/inserts/evictions) live in the
+    /// coordinator's `Metrics` snapshot — one copy per STATS reply, not
+    /// two that must be kept in lockstep.
+    pub fn describe(&self) -> String {
+        let r = self.results.stats();
+        let d = self.drafts.stats();
+        format!(
+            "cache: enabled={} results={}/{} draft_windows={}/{} windows_recorded={} \
+             window_evictions={}",
+            self.cfg.enabled, r.len, r.capacity, d.windows, d.capacity, d.recorded, d.evicted,
+        )
+    }
+}
+
+impl Default for ServeCache {
+    fn default() -> Self {
+        ServeCache::new(CacheConfig::default())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn serve_cache_roundtrip_is_verbatim() {
+        let c = ServeCache::default();
+        assert!(c.enabled());
+        let pred = CachedPrediction {
+            hyps: vec![("CCO".to_string(), -0.25)],
+            acceptance_rate: 0.79,
+        };
+        c.results().insert(1, vec![4, 5, 6], pred.clone());
+        assert_eq!(c.results().get(1, &[4, 5, 6]), Some(pred));
+        assert!(c.results().get(2, &[4, 5, 6]).is_none());
+    }
+
+    #[test]
+    fn disabled_cache_fetches_no_drafts() {
+        let c = ServeCache::disabled();
+        assert!(!c.enabled());
+        c.drafts().record(&[1, 2, 3, 4, 5, 6, 7, 8, 9]);
+        assert!(c.corpus_drafts().is_empty());
+        assert!(c.describe().contains("enabled=false"));
+    }
+
+    #[test]
+    fn sbs_corpus_drafts_require_opt_in() {
+        let c = ServeCache::default();
+        c.drafts().record(&[1, 2, 3, 4, 5, 6, 7, 8, 9]);
+        assert!(!c.corpus_drafts().is_empty());
+        assert!(
+            c.corpus_drafts_for_sbs().is_empty(),
+            "SBS must not see corpus drafts unless opted in"
+        );
+        let c2 = ServeCache::new(CacheConfig {
+            corpus_drafts_for_sbs: true,
+            ..CacheConfig::default()
+        });
+        c2.drafts().record(&[1, 2, 3, 4, 5, 6, 7, 8, 9]);
+        assert!(!c2.corpus_drafts_for_sbs().is_empty());
+    }
+
+    #[test]
+    fn describe_reports_occupancy() {
+        let c = ServeCache::default();
+        let pred = CachedPrediction {
+            hyps: vec![],
+            acceptance_rate: 0.0,
+        };
+        c.results().insert(0, vec![1], pred);
+        c.drafts().record(&[1, 2, 3, 4, 5, 6, 7, 8]);
+        let s = c.describe();
+        assert!(s.contains("results=1/4096"));
+        assert!(s.contains("draft_windows=1/4096"));
+        assert!(s.contains("windows_recorded=1"));
+        // Traffic counters are the Metrics snapshot's job, not ours.
+        assert!(!s.contains("hit_rate"));
+    }
+}

@@ -1,0 +1,221 @@
+//! Sharded, capacity-bounded LRU memo of completed predictions.
+//!
+//! Keys are `(decoder-kind tag, tokenized query)`: two requests share an
+//! entry only when both the query *and* the decoding procedure match, so a
+//! hit can be served verbatim — bit-identical to what the decode produced
+//! (the cache stores exactly the completed output, never a recompute).
+//!
+//! Sharding bounds lock contention on the serving path: the key hashes to
+//! one of `n_shards` independently locked LRUs, each holding
+//! `capacity / n_shards` entries. Recency is a per-shard logical clock —
+//! a `BTreeMap<tick, key>` ordered index beside the `HashMap` — so both
+//! touch and evict are O(log n), no intrusive list needed.
+
+use std::collections::{BTreeMap, HashMap};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use super::stats::ResultCacheStats;
+
+/// Cache key: a caller-chosen decoder-kind tag plus the tokenized query.
+type Key = (u64, Vec<i64>);
+
+struct Slot<V> {
+    value: V,
+    tick: u64,
+}
+
+struct Shard<V> {
+    map: HashMap<Key, Slot<V>>,
+    /// tick → key, ascending = least recently used first.
+    lru: BTreeMap<u64, Key>,
+    clock: u64,
+}
+
+impl<V> Shard<V> {
+    fn new() -> Shard<V> {
+        Shard {
+            map: HashMap::new(),
+            lru: BTreeMap::new(),
+            clock: 0,
+        }
+    }
+}
+
+/// The memo. Generic over the cached value so the serving coordinator
+/// (completed replies) and the planner (disconnection lists) share one
+/// implementation.
+pub struct ResultCache<V> {
+    shards: Vec<Mutex<Shard<V>>>,
+    shard_capacity: usize,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    inserts: AtomicU64,
+    evictions: AtomicU64,
+}
+
+fn key_hash(tag: u64, query: &[i64]) -> u64 {
+    let mut h = 0xcbf29ce484222325u64 ^ tag.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    for &t in query {
+        h ^= t as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+impl<V: Clone> ResultCache<V> {
+    /// `capacity` entries total, spread over `n_shards` locks (both
+    /// floored at 1).
+    pub fn new(capacity: usize, n_shards: usize) -> ResultCache<V> {
+        let n = n_shards.max(1);
+        ResultCache {
+            shards: (0..n).map(|_| Mutex::new(Shard::new())).collect(),
+            shard_capacity: capacity.div_ceil(n).max(1),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            inserts: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+        }
+    }
+
+    fn shard_of(&self, tag: u64, query: &[i64]) -> usize {
+        (key_hash(tag, query) % self.shards.len() as u64) as usize
+    }
+
+    /// Look up a memoized value, refreshing its recency on a hit.
+    pub fn get(&self, tag: u64, query: &[i64]) -> Option<V> {
+        let idx = self.shard_of(tag, query);
+        let mut guard = self.shards[idx].lock().unwrap();
+        let sh = &mut *guard;
+        let key = (tag, query.to_vec());
+        sh.clock += 1;
+        let tick = sh.clock;
+        if let Some(slot) = sh.map.get_mut(&key) {
+            let old = slot.tick;
+            slot.tick = tick;
+            let value = slot.value.clone();
+            sh.lru.remove(&old);
+            sh.lru.insert(tick, key);
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            Some(value)
+        } else {
+            self.misses.fetch_add(1, Ordering::Relaxed);
+            None
+        }
+    }
+
+    /// Insert (or refresh) an entry. Returns how many entries were
+    /// evicted to make room (0 or 1).
+    pub fn insert(&self, tag: u64, query: Vec<i64>, value: V) -> u64 {
+        let idx = self.shard_of(tag, &query);
+        let mut guard = self.shards[idx].lock().unwrap();
+        let sh = &mut *guard;
+        let key = (tag, query);
+        sh.clock += 1;
+        let tick = sh.clock;
+        let mut evicted = 0u64;
+        if let Some(slot) = sh.map.get_mut(&key) {
+            let old = slot.tick;
+            slot.tick = tick;
+            slot.value = value;
+            sh.lru.remove(&old);
+            sh.lru.insert(tick, key);
+        } else {
+            sh.map.insert(key.clone(), Slot { value, tick });
+            sh.lru.insert(tick, key);
+            if sh.map.len() > self.shard_capacity {
+                if let Some((_, lru_key)) = sh.lru.pop_first() {
+                    sh.map.remove(&lru_key);
+                    evicted = 1;
+                }
+            }
+        }
+        drop(guard);
+        self.inserts.fetch_add(1, Ordering::Relaxed);
+        self.evictions.fetch_add(evicted, Ordering::Relaxed);
+        evicted
+    }
+
+    /// Entries currently resident across all shards.
+    pub fn len(&self) -> usize {
+        self.shards
+            .iter()
+            .map(|s| s.lock().unwrap().map.len())
+            .sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Counter + occupancy snapshot.
+    pub fn stats(&self) -> ResultCacheStats {
+        ResultCacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            inserts: self.inserts.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+            len: self.len(),
+            capacity: self.shard_capacity * self.shards.len(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_is_bit_identical_and_counted() {
+        let c: ResultCache<Vec<i64>> = ResultCache::new(16, 2);
+        assert!(c.get(1, &[5, 6]).is_none());
+        c.insert(1, vec![5, 6], vec![9, 8, 7]);
+        assert_eq!(c.get(1, &[5, 6]), Some(vec![9, 8, 7]));
+        // Same query, different decoder tag: a distinct entry.
+        assert!(c.get(2, &[5, 6]).is_none());
+        let s = c.stats();
+        assert_eq!((s.hits, s.misses, s.inserts, s.evictions), (1, 2, 1, 0));
+        assert_eq!(s.len, 1);
+        assert!((s.hit_rate() - 1.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn insert_refreshes_existing_entry() {
+        let c: ResultCache<i64> = ResultCache::new(4, 1);
+        c.insert(0, vec![1], 10);
+        c.insert(0, vec![1], 20);
+        assert_eq!(c.get(0, &[1]), Some(20));
+        assert_eq!(c.len(), 1);
+        assert_eq!(c.stats().evictions, 0);
+    }
+
+    #[test]
+    fn lru_evicts_least_recently_used() {
+        // Single shard for a deterministic recency order.
+        let c: ResultCache<i64> = ResultCache::new(3, 1);
+        c.insert(0, vec![1], 1);
+        c.insert(0, vec![2], 2);
+        c.insert(0, vec![3], 3);
+        // Touch [1] so [2] becomes the LRU entry.
+        assert_eq!(c.get(0, &[1]), Some(1));
+        let ev = c.insert(0, vec![4], 4);
+        assert_eq!(ev, 1);
+        assert!(c.get(0, &[2]).is_none(), "LRU entry must be evicted");
+        assert_eq!(c.get(0, &[1]), Some(1));
+        assert_eq!(c.get(0, &[3]), Some(3));
+        assert_eq!(c.get(0, &[4]), Some(4));
+        assert_eq!(c.len(), 3);
+        assert_eq!(c.stats().evictions, 1);
+    }
+
+    #[test]
+    fn capacity_is_bounded_across_shards() {
+        let c: ResultCache<usize> = ResultCache::new(32, 4);
+        for i in 0..1000usize {
+            c.insert(7, vec![i as i64, (i * 31) as i64], i);
+        }
+        let s = c.stats();
+        assert!(s.len <= s.capacity);
+        assert!(s.evictions as usize >= 1000 - s.capacity);
+    }
+}

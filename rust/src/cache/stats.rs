@@ -1,0 +1,54 @@
+//! Point-in-time snapshots of cache state — the serving `STATS` surface
+//! and the bench columns read these instead of poking at atomics.
+
+/// Snapshot of a [`ResultCache`](super::ResultCache)'s counters.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ResultCacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub inserts: u64,
+    pub evictions: u64,
+    /// Entries currently resident.
+    pub len: usize,
+    /// Total capacity across shards.
+    pub capacity: usize,
+}
+
+impl ResultCacheStats {
+    /// Hits over lookups; 0.0 before any lookup.
+    pub fn hit_rate(&self) -> f64 {
+        let lookups = self.hits + self.misses;
+        if lookups == 0 {
+            0.0
+        } else {
+            self.hits as f64 / lookups as f64
+        }
+    }
+}
+
+/// Snapshot of a [`DraftStore`](super::DraftStore)'s counters.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct DraftStoreStats {
+    /// Distinct windows currently indexed.
+    pub windows: usize,
+    /// Maximum distinct windows kept.
+    pub capacity: usize,
+    /// Window observations recorded (including repeats).
+    pub recorded: u64,
+    /// Windows dropped by capacity eviction.
+    pub evicted: u64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hit_rate_handles_empty_and_mixed() {
+        let mut s = ResultCacheStats::default();
+        assert_eq!(s.hit_rate(), 0.0);
+        s.hits = 3;
+        s.misses = 1;
+        assert!((s.hit_rate() - 0.75).abs() < 1e-12);
+    }
+}

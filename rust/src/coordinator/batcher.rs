@@ -34,6 +34,18 @@ impl DecodeMode {
         self == other && matches!(self, DecodeMode::Greedy | DecodeMode::SpecGreedy { .. })
     }
 
+    /// Stable "decoder kind" discriminant for the result cache: two
+    /// requests share a cached prediction only when both the query and
+    /// this tag match. Variant in the low byte, parameters above it.
+    pub fn cache_tag(&self) -> u64 {
+        match self {
+            DecodeMode::Greedy => 1,
+            DecodeMode::SpecGreedy { dl } => 2 | ((*dl as u64) << 8),
+            DecodeMode::Beam { n } => 3 | ((*n as u64) << 8),
+            DecodeMode::Sbs { n, dl } => 4 | ((*n as u64) << 8) | ((*dl as u64) << 32),
+        }
+    }
+
     /// Parse `greedy`, `spec:<dl>`, `bs:<n>`, `sbs:<n>:<dl>`.
     pub fn parse(s: &str) -> Option<DecodeMode> {
         let parts: Vec<&str> = s.split(':').collect();
@@ -189,6 +201,28 @@ mod tests {
         }
         assert!(DecodeMode::parse("nope").is_none());
         assert!(DecodeMode::parse("sbs:x:1").is_none());
+    }
+
+    #[test]
+    fn cache_tags_discriminate_decoder_kinds() {
+        let modes = [
+            DecodeMode::Greedy,
+            DecodeMode::SpecGreedy { dl: 4 },
+            DecodeMode::SpecGreedy { dl: 10 },
+            DecodeMode::Beam { n: 5 },
+            DecodeMode::Sbs { n: 5, dl: 4 },
+            DecodeMode::Sbs { n: 5, dl: 10 },
+            DecodeMode::Sbs { n: 4, dl: 10 },
+        ];
+        for (i, a) in modes.iter().enumerate() {
+            for (j, b) in modes.iter().enumerate() {
+                assert_eq!(
+                    a.cache_tag() == b.cache_tag(),
+                    i == j,
+                    "tag collision between {a} and {b}"
+                );
+            }
+        }
     }
 
     #[test]

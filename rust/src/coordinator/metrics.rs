@@ -117,6 +117,15 @@ pub struct Metrics {
     pub decoder_calls: AtomicU64,
     pub batches: AtomicU64,
     pub batched_requests: AtomicU64,
+    /// Result-cache traffic (`cache::ResultCache` consulted at admission).
+    pub cache_hits: AtomicU64,
+    pub cache_misses: AtomicU64,
+    pub cache_inserts: AtomicU64,
+    pub cache_evictions: AtomicU64,
+    /// Draft-source attribution of accepted tokens: paper-style query
+    /// copies vs corpus-learned `cache::DraftStore` windows.
+    pub draft_accepted_query: AtomicU64,
+    pub draft_accepted_corpus: AtomicU64,
 }
 
 impl Metrics {
@@ -136,6 +145,18 @@ impl Metrics {
             if toks == 0 { 0.0 } else { acc as f64 / toks as f64 },
             if calls == 0 { 0.0 } else { toks as f64 / calls as f64 },
             breq as f64 / batches as f64,
+        ));
+        let ch = self.cache_hits.load(Ordering::Relaxed);
+        let cm = self.cache_misses.load(Ordering::Relaxed);
+        let lookups = ch + cm;
+        s.push_str(&format!(
+            "cache_hits={ch} cache_misses={cm} cache_hit_rate={:.3} cache_inserts={} \
+             cache_evictions={} draft_accepted_query={} draft_accepted_corpus={}\n",
+            if lookups == 0 { 0.0 } else { ch as f64 / lookups as f64 },
+            self.cache_inserts.load(Ordering::Relaxed),
+            self.cache_evictions.load(Ordering::Relaxed),
+            self.draft_accepted_query.load(Ordering::Relaxed),
+            self.draft_accepted_corpus.load(Ordering::Relaxed),
         ));
         s.push_str(&self.request_latency.summary("request_latency"));
         s.push('\n');
@@ -192,5 +213,24 @@ mod tests {
         let snap = m.snapshot();
         assert!(snap.contains("acceptance_rate=0.790"));
         assert!(snap.contains("tokens_per_call=4.00"));
+    }
+
+    #[test]
+    fn metrics_snapshot_exposes_cache_counters() {
+        let m = Metrics::default();
+        m.cache_hits.store(3, Ordering::Relaxed);
+        m.cache_misses.store(1, Ordering::Relaxed);
+        m.cache_inserts.store(1, Ordering::Relaxed);
+        m.cache_evictions.store(0, Ordering::Relaxed);
+        m.draft_accepted_query.store(70, Ordering::Relaxed);
+        m.draft_accepted_corpus.store(9, Ordering::Relaxed);
+        let snap = m.snapshot();
+        assert!(snap.contains("cache_hits=3"));
+        assert!(snap.contains("cache_hit_rate=0.750"));
+        assert!(snap.contains("draft_accepted_query=70"));
+        assert!(snap.contains("draft_accepted_corpus=9"));
+        // Empty registry renders a zero rate, not NaN.
+        let empty = Metrics::default();
+        assert!(empty.snapshot().contains("cache_hit_rate=0.000"));
     }
 }

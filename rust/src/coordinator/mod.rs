@@ -3,7 +3,9 @@
 //! * [`batcher`] — FIFO request queue with dynamic batching of compatible
 //!   greedy/speculative requests.
 //! * [`worker`] — the model thread: drains batches, runs the decoding
-//!   algorithms against the backend, replies over channels.
+//!   algorithms against the backend, replies over channels; consults the
+//!   [`cache`](crate::cache) pair before admission and feeds it after
+//!   every completion.
 //! * [`server`] — TCP line-protocol front end + blocking client.
 //! * [`metrics`] — counters and latency histograms (acceptance rate,
 //!   tokens/call, queue wait, decode latency).

@@ -4,7 +4,7 @@
 //! Protocol (one request per line, UTF-8):
 //!     PREDICT <decoder> <smiles>      decoder ∈ greedy | spec:<dl> |
 //!                                     bs:<n> | sbs:<n>:<dl>
-//!     STATS                           metrics snapshot
+//!     STATS                           cache state + metrics snapshot
 //!     PING                            liveness
 //!     QUIT                            close connection
 //!
@@ -23,6 +23,7 @@ use std::time::Instant;
 
 use anyhow::Result;
 
+use crate::cache::ServeCache;
 use crate::coordinator::batcher::{DecodeMode, RequestQueue};
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::worker::{Job, JobResult};
@@ -31,6 +32,8 @@ use crate::coordinator::worker::{Job, JobResult};
 pub struct ServerState {
     pub queue: RequestQueue<Job>,
     pub metrics: Arc<Metrics>,
+    /// The worker's cache pair; `STATS` renders its live state.
+    pub cache: Arc<ServeCache>,
     pub shutdown: AtomicBool,
 }
 
@@ -90,7 +93,14 @@ fn handle_line(line: &str, state: &Arc<ServerState>) -> LineReply {
     let mut parts = line.splitn(3, ' ');
     match parts.next() {
         Some("PING") => LineReply::Text("PONG".to_string()),
-        Some("STATS") => LineReply::Text(state.metrics.snapshot()),
+        Some("STATS") => {
+            // Cache line first, metrics after — the metrics snapshot ends
+            // with the decode_latency line clients use as a terminator.
+            let mut s = state.cache.describe();
+            s.push('\n');
+            s.push_str(&state.metrics.snapshot());
+            LineReply::Text(s)
+        }
         Some("QUIT") => LineReply::Quit,
         Some("PREDICT") => {
             let (Some(dec), Some(smiles)) = (parts.next(), parts.next()) else {
@@ -222,6 +232,7 @@ mod tests {
         let state = Arc::new(ServerState {
             queue: RequestQueue::new(8, Duration::from_millis(1)),
             metrics: Arc::new(Metrics::default()),
+            cache: Arc::new(ServeCache::default()),
             shutdown: AtomicBool::new(false),
         });
         let listener = TcpListener::bind("127.0.0.1:0").unwrap();
@@ -233,7 +244,13 @@ mod tests {
         let worker = std::thread::spawn(move || {
             let backend = CopyModel::new(96, 96, 20);
             let vocab = Vocab::build(["CCONF", "c1ccccc1Br"]).unwrap();
-            run_worker(&backend, &vocab, &worker_state.queue, &worker_state.metrics);
+            run_worker(
+                &backend,
+                &vocab,
+                &worker_state.queue,
+                &worker_state.metrics,
+                &worker_state.cache,
+            );
         });
 
         let mut c = Client::connect(&addr).unwrap();
@@ -245,11 +262,17 @@ mod tests {
         assert!(p.acceptance_rate > 0.0);
         let p = c.predict("sbs:2:4", "CCO").unwrap();
         assert!(!p.hyps.is_empty());
+        // A repeated request is served from the result cache, verbatim.
+        let hit = c.predict("spec:4", "c1ccccc1").unwrap();
+        assert_eq!(hit.hyps[0].0, "c1ccccc1");
+        assert_eq!(hit.decoder_calls, 0, "repeat must be a cache hit");
         // Errors are per-request, connection stays usable.
         assert!(c.predict("greedy", "!!bad!!").is_err());
         assert!(c.ping().unwrap());
         let stats = c.stats().unwrap();
+        assert!(stats.contains("cache: enabled=true"));
         assert!(stats.contains("requests="));
+        assert!(stats.contains("cache_hits=1"));
 
         let _ = vocab;
         state.queue.close();
@@ -261,6 +284,7 @@ mod tests {
         let state = Arc::new(ServerState {
             queue: RequestQueue::new(2, Duration::from_millis(1)),
             metrics: Arc::new(Metrics::default()),
+            cache: Arc::new(ServeCache::default()),
             shutdown: AtomicBool::new(false),
         });
         match handle_line("PREDICT wat CCO", &state) {

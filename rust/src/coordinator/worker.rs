@@ -15,6 +15,14 @@
 //! waiting behind the whole batch — continuous batching. Beam and SBS
 //! requests still run solo (their effective batch is already
 //! beams × drafts).
+//!
+//! Cross-request reuse rides through a [`ServeCache`]: every request is
+//! checked against the result cache *before admission* (initial batch
+//! members and mid-session newcomers alike — a hit replies instantly and
+//! never occupies a lane), every completed prediction is memoized, its
+//! accepted target feeds the corpus [`DraftStore`](crate::cache::DraftStore),
+//! and the speculative decoders draft from the store's top windows on the
+//! next request.
 
 use std::sync::atomic::Ordering;
 use std::sync::{mpsc, Arc};
@@ -22,6 +30,7 @@ use std::time::Instant;
 
 use anyhow::Result;
 
+use crate::cache::{CachedPrediction, ServeCache};
 use crate::coordinator::batcher::{DecodeMode, Request, RequestQueue};
 use crate::coordinator::metrics::Metrics;
 use crate::decoding::{beam_search, sbs, Backend, GreedyRun, SbsConfig, SpecGreedyRun};
@@ -51,6 +60,7 @@ pub fn run_worker<B: Backend>(
     vocab: &Vocab,
     queue: &RequestQueue<Job>,
     metrics: &Arc<Metrics>,
+    cache: &ServeCache,
 ) {
     while let Some(batch) = queue.pop_batch() {
         let now = Instant::now();
@@ -59,12 +69,71 @@ pub fn run_worker<B: Backend>(
                 .queue_wait
                 .record(now.duration_since(r.enqueued));
         }
-        metrics.batches.fetch_add(1, Ordering::Relaxed);
-        metrics
-            .batched_requests
-            .fetch_add(batch.len() as u64, Ordering::Relaxed);
-        process_batch(backend, vocab, batch, queue, metrics);
+        // batches / batched_requests count actual decode admissions (in
+        // stream_batch / solo_batch), so cache hits — which never occupy
+        // a lane — don't distort the mean-batch metric in either
+        // direction.
+        process_batch(backend, vocab, batch, queue, metrics, cache);
     }
+}
+
+/// Consult the result cache for one admitted request. On a hit the reply
+/// is sent verbatim (bit-identical to the run that produced the entry,
+/// with zero decoder calls) and `true` is returned so the caller skips
+/// decoding entirely.
+fn try_cache_reply(
+    cache: &ServeCache,
+    metrics: &Metrics,
+    mode: DecodeMode,
+    ids: &[i64],
+    r: &Request<Job>,
+) -> bool {
+    if !cache.enabled() {
+        return false;
+    }
+    match cache.results().get(mode.cache_tag(), ids) {
+        Some(pred) => {
+            metrics.cache_hits.fetch_add(1, Ordering::Relaxed);
+            metrics.requests_total.fetch_add(1, Ordering::Relaxed);
+            let _ = r.payload.resp.send(Ok(Reply {
+                hyps: pred.hyps,
+                decoder_calls: 0,
+                acceptance_rate: pred.acceptance_rate,
+            }));
+            true
+        }
+        None => {
+            metrics.cache_misses.fetch_add(1, Ordering::Relaxed);
+            false
+        }
+    }
+}
+
+/// Memoize a completed prediction and mine its accepted target into the
+/// corpus draft store.
+fn record_completion(
+    cache: &ServeCache,
+    metrics: &Metrics,
+    mode: DecodeMode,
+    ids: &[i64],
+    hyps: &[(String, f64)],
+    top_tokens: &[i64],
+    acceptance_rate: f64,
+) {
+    if !cache.enabled() {
+        return;
+    }
+    let evicted = cache.results().insert(
+        mode.cache_tag(),
+        ids.to_vec(),
+        CachedPrediction {
+            hyps: hyps.to_vec(),
+            acceptance_rate,
+        },
+    );
+    metrics.cache_inserts.fetch_add(1, Ordering::Relaxed);
+    metrics.cache_evictions.fetch_add(evicted, Ordering::Relaxed);
+    cache.drafts().record(top_tokens);
 }
 
 /// Encode one request's SMILES, failing the request over its channel on
@@ -96,14 +165,15 @@ fn process_batch<B: Backend>(
     batch: Vec<Request<Job>>,
     queue: &RequestQueue<Job>,
     metrics: &Arc<Metrics>,
+    cache: &ServeCache,
 ) {
     let mode = batch[0].mode;
     match mode {
         DecodeMode::Greedy | DecodeMode::SpecGreedy { .. } => {
-            stream_batch(backend, vocab, batch, queue, metrics, mode)
+            stream_batch(backend, vocab, batch, queue, metrics, cache, mode)
         }
         DecodeMode::Beam { .. } | DecodeMode::Sbs { .. } => {
-            solo_batch(backend, vocab, batch, metrics, mode)
+            solo_batch(backend, vocab, batch, metrics, cache, mode)
         }
     }
 }
@@ -114,16 +184,30 @@ fn solo_batch<B: Backend>(
     vocab: &Vocab,
     batch: Vec<Request<Job>>,
     metrics: &Arc<Metrics>,
+    cache: &ServeCache,
     mode: DecodeMode,
 ) {
     for r in &batch {
         let Some(src) = validate(backend, vocab, r, metrics) else {
             continue;
         };
+        if try_cache_reply(cache, metrics, mode, &src, r) {
+            continue;
+        }
+        metrics.batches.fetch_add(1, Ordering::Relaxed);
+        metrics.batched_requests.fetch_add(1, Ordering::Relaxed);
         let t0 = Instant::now();
         let out = match mode {
             DecodeMode::Beam { n } => beam_search(backend, &src, n),
-            DecodeMode::Sbs { n, dl } => sbs(backend, &src, &SbsConfig::new(n, dl)),
+            DecodeMode::Sbs { n, dl } => {
+                let mut cfg = SbsConfig::new(n, dl);
+                // Empty unless the operator opted in: accepted corpus
+                // windows can reorder SBS's candidate frontier, and the
+                // serving default keeps outputs bit-identical to the
+                // cold path (greedy-spec corpus drafts are always safe).
+                cfg.corpus_drafts = cache.corpus_drafts_for_sbs();
+                sbs(backend, &src, &cfg)
+            }
             _ => unreachable!("solo_batch only handles beam/sbs"),
         };
         match out {
@@ -133,6 +217,14 @@ fn solo_batch<B: Backend>(
                     .fetch_add(out.stats.acceptance.total_tokens as u64, Ordering::Relaxed);
                 metrics.draft_tokens_accepted.fetch_add(
                     out.stats.acceptance.accepted_draft_tokens as u64,
+                    Ordering::Relaxed,
+                );
+                metrics.draft_accepted_query.fetch_add(
+                    out.stats.accepted_query_tokens as u64,
+                    Ordering::Relaxed,
+                );
+                metrics.draft_accepted_corpus.fetch_add(
+                    out.stats.accepted_corpus_tokens as u64,
                     Ordering::Relaxed,
                 );
                 metrics
@@ -148,6 +240,17 @@ fn solo_batch<B: Backend>(
                     decoder_calls: out.stats.decoder_calls,
                     acceptance_rate: out.stats.acceptance.rate(),
                 };
+                if let Some(top) = out.hyps.first() {
+                    record_completion(
+                        cache,
+                        metrics,
+                        mode,
+                        &src,
+                        &reply.hyps,
+                        &top.tokens,
+                        reply.acceptance_rate,
+                    );
+                }
                 let _ = r.payload.resp.send(Ok(reply));
             }
             Err(e) => {
@@ -224,6 +327,14 @@ impl<'a> Run<'a> {
             Run::Spec(r) => (r.hypothesis(lane), r.lane_acceptance(lane)),
         }
     }
+
+    /// Accepted-token split `(query_copy, corpus)` for one lane.
+    fn source_acceptance(&self, lane: usize) -> (usize, usize) {
+        match self {
+            Run::Greedy(_) => (0, 0),
+            Run::Spec(r) => r.lane_source_acceptance(lane),
+        }
+    }
 }
 
 /// Greedy / speculative-greedy: run a live session, replying per lane as
@@ -234,20 +345,28 @@ fn stream_batch<B: Backend>(
     batch: Vec<Request<Job>>,
     queue: &RequestQueue<Job>,
     metrics: &Arc<Metrics>,
+    cache: &ServeCache,
     mode: DecodeMode,
 ) {
     let max_lanes = queue.max_batch.max(1);
 
-    // Validate and encode the initial batch.
+    // Validate and encode the initial batch; cache hits reply now and
+    // never occupy a lane.
     let mut valid: Vec<(Request<Job>, Vec<i64>)> = Vec::new();
     for r in batch {
-        if let Some(ids) = validate(backend, vocab, &r, metrics) {
-            valid.push((r, ids));
+        let Some(ids) = validate(backend, vocab, &r, metrics) else {
+            continue;
+        };
+        if try_cache_reply(cache, metrics, mode, &ids, &r) {
+            continue;
         }
+        metrics.batched_requests.fetch_add(1, Ordering::Relaxed);
+        valid.push((r, ids));
     }
     if valid.is_empty() {
         return;
     }
+    metrics.batches.fetch_add(1, Ordering::Relaxed);
     let refs: Vec<&[i64]> = valid.iter().map(|(_, ids)| ids.as_slice()).collect();
     let fail_all = |valid: &[(Request<Job>, Vec<i64>)], e: String| {
         for (r, _) in valid {
@@ -264,18 +383,24 @@ fn stream_batch<B: Backend>(
         Err(e) => return fail_all(&valid, format!("session failed: {e}")),
     };
     let mut run = match mode {
-        DecodeMode::SpecGreedy { dl } => Run::Spec(SpecGreedyRun::new(sess, DraftConfig::new(dl))),
+        DecodeMode::SpecGreedy { dl } => Run::Spec(SpecGreedyRun::with_corpus(
+            sess,
+            DraftConfig::new(dl),
+            cache.corpus_drafts(),
+        )),
         _ => Run::Greedy(GreedyRun::new(sess)),
     };
 
     // Lane bookkeeping: reply channel, per-request decode timer, the
     // session call count at admission (so the per-request decoder_calls
-    // stat covers only this request's lifetime), replied?
+    // stat covers only this request's lifetime), replied?, and the
+    // encoded query (the completion's cache key).
     struct LaneCtx {
         resp: mpsc::Sender<JobResult>,
         t0: Instant,
         calls_at_admit: usize,
         replied: bool,
+        ids: Vec<i64>,
     }
     let mut lanes: Vec<LaneCtx> = Vec::new();
     for (i, (r, ids)) in valid.iter().enumerate() {
@@ -286,6 +411,7 @@ fn stream_batch<B: Backend>(
             t0: Instant::now(),
             calls_at_admit: run.calls(),
             replied: false,
+            ids: ids.clone(),
         });
     }
     drop(valid);
@@ -312,18 +438,34 @@ fn stream_batch<B: Backend>(
         };
         for li in finished {
             let (hyp, acc) = run.hyp_and_acceptance(li);
+            let (src_q, src_c) = run.source_acceptance(li);
             metrics
                 .tokens_generated
                 .fetch_add(acc.total_tokens as u64, Ordering::Relaxed);
             metrics
                 .draft_tokens_accepted
                 .fetch_add(acc.accepted_draft_tokens as u64, Ordering::Relaxed);
+            metrics
+                .draft_accepted_query
+                .fetch_add(src_q as u64, Ordering::Relaxed);
+            metrics
+                .draft_accepted_corpus
+                .fetch_add(src_c as u64, Ordering::Relaxed);
             metrics.requests_total.fetch_add(1, Ordering::Relaxed);
             let reply = Reply {
                 hyps: vec![(vocab.decode(&hyp.tokens), hyp.score)],
                 decoder_calls: run.calls() - lanes[li].calls_at_admit,
                 acceptance_rate: acc.rate(),
             };
+            record_completion(
+                cache,
+                metrics,
+                mode,
+                &lanes[li].ids,
+                &reply.hyps,
+                &hyp.tokens,
+                reply.acceptance_rate,
+            );
             let _ = lanes[li].resp.send(Ok(reply));
             lanes[li].replied = true;
             metrics.decode_latency.record(lanes[li].t0.elapsed());
@@ -341,10 +483,14 @@ fn stream_batch<B: Backend>(
             let mut adm: Vec<(Request<Job>, Vec<i64>)> = Vec::new();
             for r in newcomers {
                 metrics.queue_wait.record(now.duration_since(r.enqueued));
-                metrics.batched_requests.fetch_add(1, Ordering::Relaxed);
-                if let Some(ids) = validate(backend, vocab, &r, metrics) {
-                    adm.push((r, ids));
+                let Some(ids) = validate(backend, vocab, &r, metrics) else {
+                    continue;
+                };
+                if try_cache_reply(cache, metrics, mode, &ids, &r) {
+                    continue;
                 }
+                metrics.batched_requests.fetch_add(1, Ordering::Relaxed);
+                adm.push((r, ids));
             }
             if !adm.is_empty() {
                 let refs: Vec<&[i64]> = adm.iter().map(|(_, ids)| ids.as_slice()).collect();
@@ -359,6 +505,7 @@ fn stream_batch<B: Backend>(
                                 t0: Instant::now(),
                                 calls_at_admit: run.calls(),
                                 replied: false,
+                                ids: ids.clone(),
                             });
                         }
                     }
@@ -404,11 +551,12 @@ mod tests {
         let backend = CopyModel::new(96, 96, vocab.len());
         let queue = RequestQueue::new(8, Duration::from_millis(1));
         let metrics = Arc::new(Metrics::default());
+        let cache = ServeCache::default();
 
         let rx1 = send_job(&queue, DecodeMode::Greedy, "CCO");
         let rx2 = send_job(&queue, DecodeMode::SpecGreedy { dl: 2 }, "c1ccccc1");
         queue.close();
-        run_worker(&backend, &vocab, &queue, &metrics);
+        run_worker(&backend, &vocab, &queue, &metrics, &cache);
 
         // CopyModel regenerates the source tokens.
         let r1 = rx1.recv().unwrap().unwrap();
@@ -416,6 +564,9 @@ mod tests {
         let r2 = rx2.recv().unwrap().unwrap();
         assert_eq!(r2.hyps[0].0, "c1ccccc1");
         assert!(metrics.requests_total.load(Ordering::Relaxed) == 2);
+        // Both completions were memoized and mined for draft windows.
+        assert_eq!(metrics.cache_inserts.load(Ordering::Relaxed), 2);
+        assert_eq!(cache.results().len(), 2);
     }
 
     #[test]
@@ -426,7 +577,7 @@ mod tests {
         let metrics = Arc::new(Metrics::default());
         let rx = send_job(&queue, DecodeMode::Greedy, "C C O");
         queue.close();
-        run_worker(&backend, &vocab, &queue, &metrics);
+        run_worker(&backend, &vocab, &queue, &metrics, &ServeCache::default());
         assert!(rx.recv().unwrap().is_err());
         assert_eq!(metrics.requests_failed.load(Ordering::Relaxed), 1);
     }
@@ -440,7 +591,7 @@ mod tests {
         let rx1 = send_job(&queue, DecodeMode::Beam { n: 3 }, "CCO");
         let rx2 = send_job(&queue, DecodeMode::Sbs { n: 3, dl: 4 }, "CCO");
         queue.close();
-        run_worker(&backend, &vocab, &queue, &metrics);
+        run_worker(&backend, &vocab, &queue, &metrics, &ServeCache::default());
         let r1 = rx1.recv().unwrap().unwrap();
         let r2 = rx2.recv().unwrap().unwrap();
         assert_eq!(r1.hyps[0].0, "CCO");
@@ -457,13 +608,14 @@ mod tests {
         let backend = CopyModel::new(96, 96, vocab.len());
         let queue = RequestQueue::new(8, Duration::from_millis(1));
         let metrics = Arc::new(Metrics::default());
+        let cache = ServeCache::default();
 
         let rx1 = send_job(&queue, DecodeMode::Greedy, "c1ccccc1");
         let batch = queue.pop_batch().unwrap();
         assert_eq!(batch.len(), 1);
         // Arrives between batching ticks — after pop, before decode ends.
         let rx2 = send_job(&queue, DecodeMode::Greedy, "CCO");
-        process_batch(&backend, &vocab, batch, &queue, &metrics);
+        process_batch(&backend, &vocab, batch, &queue, &metrics, &cache);
 
         assert_eq!(rx1.recv().unwrap().unwrap().hyps[0].0, "c1ccccc1");
         assert_eq!(
@@ -486,9 +638,82 @@ mod tests {
         let rx1 = send_job(&queue, DecodeMode::Greedy, "CCO");
         let batch = queue.pop_batch().unwrap();
         let _rx2 = send_job(&queue, DecodeMode::Beam { n: 2 }, "CCO");
-        process_batch(&backend, &vocab, batch, &queue, &metrics);
+        process_batch(&backend, &vocab, batch, &queue, &metrics, &ServeCache::default());
 
         assert!(rx1.recv().unwrap().is_ok());
         assert_eq!(queue.len(), 1, "beam request must stay queued");
+    }
+
+    /// A repeated request is served from the result cache: zero decoder
+    /// calls, reply bit-identical to the decoded one.
+    #[test]
+    fn repeat_request_hits_cache_with_identical_reply() {
+        let vocab = tiny_vocab();
+        let backend = CopyModel::new(96, 96, vocab.len());
+        let queue = RequestQueue::new(8, Duration::from_millis(1));
+        let metrics = Arc::new(Metrics::default());
+        let cache = ServeCache::default();
+
+        let rx1 = send_job(&queue, DecodeMode::SpecGreedy { dl: 2 }, "c1ccccc1");
+        let b1 = queue.pop_batch().unwrap();
+        process_batch(&backend, &vocab, b1, &queue, &metrics, &cache);
+        let r1 = rx1.recv().unwrap().unwrap();
+        assert!(r1.decoder_calls > 0);
+
+        let rx2 = send_job(&queue, DecodeMode::SpecGreedy { dl: 2 }, "c1ccccc1");
+        let b2 = queue.pop_batch().unwrap();
+        process_batch(&backend, &vocab, b2, &queue, &metrics, &cache);
+        let r2 = rx2.recv().unwrap().unwrap();
+        assert_eq!(r2.decoder_calls, 0, "hit must skip decoding");
+        assert_eq!(r2.hyps, r1.hyps, "cached reply must be bit-identical");
+        assert_eq!(r2.acceptance_rate, r1.acceptance_rate);
+        assert_eq!(metrics.cache_hits.load(Ordering::Relaxed), 1);
+        assert_eq!(metrics.cache_misses.load(Ordering::Relaxed), 1);
+        assert_eq!(metrics.requests_total.load(Ordering::Relaxed), 2);
+
+        // A different decoder kind over the same query is a miss.
+        let rx3 = send_job(&queue, DecodeMode::Greedy, "c1ccccc1");
+        let b3 = queue.pop_batch().unwrap();
+        process_batch(&backend, &vocab, b3, &queue, &metrics, &cache);
+        let r3 = rx3.recv().unwrap().unwrap();
+        assert!(r3.decoder_calls > 0);
+        assert_eq!(metrics.cache_hits.load(Ordering::Relaxed), 1);
+    }
+
+    /// Beam/SBS results are memoized too, and a disabled cache never
+    /// hits, inserts, or records.
+    #[test]
+    fn solo_modes_memoize_and_disabled_cache_is_inert() {
+        let vocab = tiny_vocab();
+        let backend = CopyModel::new(96, 96, vocab.len());
+        let metrics = Arc::new(Metrics::default());
+        let cache = ServeCache::default();
+
+        // "c1ccccc1" decodes to 8 tokens — exactly one default-width
+        // (8) draft-store window, so mining is observable.
+        let queue = RequestQueue::new(8, Duration::from_millis(1));
+        let rx1 = send_job(&queue, DecodeMode::Sbs { n: 2, dl: 4 }, "c1ccccc1");
+        let rx2 = send_job(&queue, DecodeMode::Sbs { n: 2, dl: 4 }, "c1ccccc1");
+        queue.close();
+        run_worker(&backend, &vocab, &queue, &metrics, &cache);
+        let r1 = rx1.recv().unwrap().unwrap();
+        let r2 = rx2.recv().unwrap().unwrap();
+        assert_eq!(r1.hyps, r2.hyps);
+        assert_eq!(r2.decoder_calls, 0);
+        assert!(!cache.drafts().is_empty(), "accepted target must be mined");
+
+        let off = ServeCache::disabled();
+        let metrics2 = Arc::new(Metrics::default());
+        let queue2 = RequestQueue::new(8, Duration::from_millis(1));
+        let rx3 = send_job(&queue2, DecodeMode::Greedy, "CCO");
+        let rx4 = send_job(&queue2, DecodeMode::Greedy, "CCO");
+        queue2.close();
+        run_worker(&backend, &vocab, &queue2, &metrics2, &off);
+        assert!(rx3.recv().unwrap().unwrap().decoder_calls > 0);
+        assert!(rx4.recv().unwrap().unwrap().decoder_calls > 0);
+        assert_eq!(metrics2.cache_hits.load(Ordering::Relaxed), 0);
+        assert_eq!(metrics2.cache_inserts.load(Ordering::Relaxed), 0);
+        assert!(off.results().is_empty());
+        assert!(off.drafts().is_empty());
     }
 }

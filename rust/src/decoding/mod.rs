@@ -54,7 +54,9 @@ pub use beam::beam_search;
 pub use greedy::{greedy, greedy_batch, GreedyRun};
 pub use sbs::{hyps_to_smiles, sbs, sbs_traced, SbsConfig, SbsIterTrace, SbsTrace};
 pub use session::StatelessSession;
-pub use spec_greedy::{spec_greedy, spec_greedy_batch, SpecGreedyRun};
+pub use spec_greedy::{
+    spec_greedy, spec_greedy_batch, spec_greedy_batch_corpus, spec_greedy_corpus, SpecGreedyRun,
+};
 
 use std::time::Duration;
 
@@ -338,6 +340,12 @@ pub struct DecodeStats {
     pub tokens_reused: usize,
     /// Draft-token acceptance accounting.
     pub acceptance: Acceptance,
+    /// Accepted draft tokens that came from query-copy windows
+    /// (`DraftSource::QueryCopy`).
+    pub accepted_query_tokens: usize,
+    /// Accepted draft tokens that came from corpus-learned windows
+    /// (`DraftSource::Corpus`, mined by a `cache::DraftStore`).
+    pub accepted_corpus_tokens: usize,
     /// Wall time of the whole decode.
     pub wall: Duration,
 }
@@ -350,6 +358,8 @@ impl DecodeStats {
         self.tokens_computed += o.tokens_computed;
         self.tokens_reused += o.tokens_reused;
         self.acceptance.merge(&o.acceptance);
+        self.accepted_query_tokens += o.accepted_query_tokens;
+        self.accepted_corpus_tokens += o.accepted_corpus_tokens;
         self.wall += o.wall;
     }
 

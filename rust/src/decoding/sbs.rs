@@ -26,7 +26,7 @@ use std::time::Instant;
 
 use anyhow::Result;
 
-use crate::draft::{extract_drafts, DraftConfig};
+use crate::draft::{extract_drafts_merged, DraftConfig, DraftSource};
 use crate::vocab::{BOS_ID, EOS_ID, PAD_ID};
 
 use super::beam::{rank_by, BeamPool, BeamState};
@@ -46,6 +46,13 @@ pub struct SbsConfig {
     /// number of drafts ... however, this compromises the acceptance
     /// rate").
     pub max_rows: usize,
+    /// Corpus-learned draft windows (`cache::DraftStore::top_k`), merged
+    /// *behind* the query-copy windows under the shared `max_drafts` cap.
+    /// Never-accepted corpus windows are provably output-neutral (they
+    /// lose every best-draft selection and row truncation cuts from the
+    /// tail); accepted ones deepen the verified greedy prefix — the same
+    /// effect as a longer `DL`.
+    pub corpus_drafts: Vec<Vec<i64>>,
 }
 
 impl SbsConfig {
@@ -54,6 +61,7 @@ impl SbsConfig {
             n,
             draft: DraftConfig::new(draft_len),
             max_rows: 256,
+            corpus_drafts: Vec::new(),
         }
     }
 }
@@ -102,11 +110,13 @@ struct Live {
 }
 
 /// A proposed candidate: search state plus where its verified prefix
-/// lives (`from_row` up to `keep_len` committed positions).
+/// lives (`from_row` up to `keep_len` committed positions) and which
+/// draft source its accepted prefix came from.
 struct Cand {
     state: BeamState,
     from_row: usize,
     keep_len: usize,
+    src: DraftSource,
 }
 
 fn sbs_impl<B: Backend>(
@@ -124,13 +134,14 @@ fn sbs_impl<B: Backend>(
         ..Default::default()
     };
 
-    // getDrafts: windows of the unwrapped query.
+    // getDrafts: windows of the unwrapped query, then corpus-learned
+    // windows behind them (shared dedup set, shared max_drafts cap).
     let inner: Vec<i64> = src
         .iter()
         .copied()
         .filter(|&t| t != BOS_ID && t != EOS_ID)
         .collect();
-    let mut drafts = extract_drafts(&inner, &cfg.draft);
+    let mut drafts = extract_drafts_merged(&inner, &cfg.draft, &cfg.corpus_drafts);
 
     let root = sess.new_row(0);
     let mut beams = vec![Live {
@@ -157,7 +168,7 @@ fn sbs_impl<B: Backend>(
         let mut row_meta: Vec<(usize, usize, usize)> = Vec::new(); // (beam, draft, clipped_len)
         for (bi, b) in beams.iter().enumerate() {
             for (di, d) in drafts.iter().enumerate() {
-                let clipped = clip_draft(d, b.state.tokens.len(), dims.t_len);
+                let clipped = clip_draft(&d.tokens, b.state.tokens.len(), dims.t_len);
                 let mut delta = b.state.tokens[b.sess_len..].to_vec();
                 delta.extend_from_slice(clipped);
                 let clen = clipped.len();
@@ -181,7 +192,7 @@ fn sbs_impl<B: Backend>(
         let mut best: Vec<Option<(usize, usize)>> = vec![None; beams.len()];
         for (r, &(bi, di, clen)) in row_meta.iter().enumerate() {
             let p = beams[bi].state.tokens.len();
-            let draft = &drafts[di];
+            let draft = &drafts[di].tokens;
             let mut k = 0usize;
             while k < clen {
                 let d_tok = draft[k];
@@ -207,7 +218,8 @@ fn sbs_impl<B: Backend>(
         for (bi, b) in beams.iter().enumerate() {
             let (r, k) = best[bi].unwrap();
             let di = row_meta[r].1;
-            let draft = &drafts[di];
+            let win_source = drafts[di].source;
+            let draft = &drafts[di].tokens;
             let p = b.state.tokens.len();
             let mut draft_prefix_logp = 0f64;
             for j in 0..=k {
@@ -236,6 +248,7 @@ fn sbs_impl<B: Backend>(
                         },
                         from_row: frows[r],
                         keep_len: p + j,
+                        src: win_source,
                     });
                 }
                 if let Some(d_tok) = d_next {
@@ -317,6 +330,7 @@ fn sbs_impl<B: Backend>(
                 state: c.state.clone(),
                 from_row: c.from_row,
                 keep_len: c.keep_len,
+                src: c.src,
             })
             .collect();
         rank_by(&mut kept, |c| &c.state);
@@ -352,7 +366,13 @@ fn sbs_impl<B: Backend>(
         if let Some(top) = kept.first() {
             let grew = top.state.tokens.len().saturating_sub(prev_top_len);
             stats.acceptance.total_tokens += grew;
-            stats.acceptance.accepted_draft_tokens += grew.saturating_sub(1);
+            let accepted = grew.saturating_sub(1);
+            stats.acceptance.accepted_draft_tokens += accepted;
+            match top.src {
+                DraftSource::QueryCopy => stats.accepted_query_tokens += accepted,
+                DraftSource::Corpus => stats.accepted_corpus_tokens += accepted,
+                DraftSource::Sentinel => {}
+            }
         }
 
         if let Some(tr) = trace.as_deref_mut() {

@@ -19,7 +19,7 @@ use std::time::Instant;
 
 use anyhow::Result;
 
-use crate::draft::{extract_drafts, Acceptance, DraftConfig};
+use crate::draft::{extract_drafts_merged, Acceptance, Draft, DraftConfig, DraftSource};
 use crate::vocab::{BOS_ID, EOS_ID};
 
 use super::{
@@ -33,16 +33,22 @@ struct SpecLane {
     /// committed to the session; it rides into the next step's delta).
     tokens: Vec<i64>,
     sess_len: usize,
-    drafts: Vec<Vec<i64>>,
+    drafts: Vec<Draft>,
     score: f64,
     done: bool,
     accepted: usize,
+    /// Per-source split of `accepted` (query-copy vs corpus windows).
+    accepted_query: usize,
+    accepted_corpus: usize,
 }
 
 /// A live speculative-greedy decode over a [`DecoderSession`].
 pub struct SpecGreedyRun<'a> {
     sess: Box<dyn DecoderSession + 'a>,
     cfg: DraftConfig,
+    /// Corpus-learned windows (`cache::DraftStore::top_k`) merged behind
+    /// each lane's query-copy drafts under the shared `max_drafts` cap.
+    corpus: Vec<Vec<i64>>,
     lanes: Vec<SpecLane>,
     calls: usize,
     rows_submitted: usize,
@@ -50,9 +56,21 @@ pub struct SpecGreedyRun<'a> {
 
 impl<'a> SpecGreedyRun<'a> {
     pub fn new(sess: Box<dyn DecoderSession + 'a>, cfg: DraftConfig) -> SpecGreedyRun<'a> {
+        SpecGreedyRun::with_corpus(sess, cfg, Vec::new())
+    }
+
+    /// A run whose lanes additionally draft from corpus-learned windows.
+    /// Output is unchanged for any corpus content — drafts only propose;
+    /// the accept rule keeps the emitted sequence exactly greedy.
+    pub fn with_corpus(
+        sess: Box<dyn DecoderSession + 'a>,
+        cfg: DraftConfig,
+        corpus: Vec<Vec<i64>>,
+    ) -> SpecGreedyRun<'a> {
         SpecGreedyRun {
             sess,
             cfg,
+            corpus,
             lanes: Vec::new(),
             calls: 0,
             rows_submitted: 0,
@@ -76,10 +94,12 @@ impl<'a> SpecGreedyRun<'a> {
             row,
             tokens: vec![BOS_ID],
             sess_len: 0,
-            drafts: extract_drafts(&inner, &self.cfg),
+            drafts: extract_drafts_merged(&inner, &self.cfg, &self.corpus),
             score: 0.0,
             done: false,
             accepted: 0,
+            accepted_query: 0,
+            accepted_corpus: 0,
         });
         self.lanes.len() - 1
     }
@@ -118,6 +138,13 @@ impl<'a> SpecGreedyRun<'a> {
         }
     }
 
+    /// Per-lane accepted-token split: `(query_copy, corpus)`. The two
+    /// always sum to `lane_acceptance(lane).accepted_draft_tokens`.
+    pub fn lane_source_acceptance(&self, lane: usize) -> (usize, usize) {
+        let l = &self.lanes[lane];
+        (l.accepted_query, l.accepted_corpus)
+    }
+
     /// One speculative step across all live lanes (one decoder call over
     /// `Σ_live |drafts|` fork rows). Returns the lanes that finished.
     pub fn step(&mut self) -> Result<Vec<usize>> {
@@ -136,7 +163,7 @@ impl<'a> SpecGreedyRun<'a> {
             let n_drafts = self.lanes[li].drafts.len();
             for di in 0..n_drafts {
                 let lane = &self.lanes[li];
-                let clipped = clip_draft(&lane.drafts[di], lane.tokens.len(), t_len);
+                let clipped = clip_draft(&lane.drafts[di].tokens, lane.tokens.len(), t_len);
                 let mut delta = lane.tokens[lane.sess_len..].to_vec();
                 delta.extend_from_slice(clipped);
                 let clen = clipped.len();
@@ -164,7 +191,7 @@ impl<'a> SpecGreedyRun<'a> {
         for (r, &(li, di, clen)) in meta.iter().enumerate() {
             let lane = &self.lanes[li];
             let p = lane.tokens.len();
-            let draft = &lane.drafts[di];
+            let draft = &lane.drafts[di].tokens;
             let mut k = 0usize;
             while k < clen {
                 if lp.argmax(r, p - 1 + k) != draft[k] {
@@ -184,13 +211,13 @@ impl<'a> SpecGreedyRun<'a> {
         let mut just_finished = Vec::new();
         for li in 0..self.lanes.len() {
             let Some((r, k)) = best[li] else { continue };
-            let (emitted, old_row) = {
+            let (emitted, old_row, win_source) = {
                 let lane = &self.lanes[li];
                 let p = lane.tokens.len();
                 let (_, di, _) = meta[r];
-                let mut e: Vec<i64> = lane.drafts[di][..k].to_vec();
+                let mut e: Vec<i64> = lane.drafts[di].tokens[..k].to_vec();
                 e.push(lp.argmax(r, p - 1 + k));
-                (e, lane.row)
+                (e, lane.row, lane.drafts[di].source)
             };
             let p = self.lanes[li].tokens.len();
             {
@@ -204,6 +231,11 @@ impl<'a> SpecGreedyRun<'a> {
                     }
                     if idx < k {
                         lane.accepted += 1;
+                        match win_source {
+                            DraftSource::QueryCopy => lane.accepted_query += 1,
+                            DraftSource::Corpus => lane.accepted_corpus += 1,
+                            DraftSource::Sentinel => {}
+                        }
                     }
                     if lane.tokens.len() >= t_len {
                         lane.done = true;
@@ -257,6 +289,19 @@ pub fn spec_greedy<B: Backend>(
     Ok(out.pop().unwrap())
 }
 
+/// [`spec_greedy`] with corpus-learned drafts merged behind the query
+/// copies. Output is token-exact vs [`greedy`](super::greedy) for any
+/// corpus content.
+pub fn spec_greedy_corpus<B: Backend>(
+    backend: &B,
+    src: &[i64],
+    cfg: &DraftConfig,
+    corpus: &[Vec<i64>],
+) -> Result<DecodeOutput> {
+    let mut out = spec_greedy_batch_corpus(backend, &[src], cfg, corpus)?;
+    Ok(out.pop().unwrap())
+}
+
 /// Speculative greedy decoding over a batch of queries.
 ///
 /// Every live query contributes `|drafts|` rows per call, so the effective
@@ -268,10 +313,20 @@ pub fn spec_greedy_batch<B: Backend>(
     srcs: &[&[i64]],
     cfg: &DraftConfig,
 ) -> Result<Vec<DecodeOutput>> {
+    spec_greedy_batch_corpus(backend, srcs, cfg, &[])
+}
+
+/// [`spec_greedy_batch`] with an additional corpus draft source.
+pub fn spec_greedy_batch_corpus<B: Backend>(
+    backend: &B,
+    srcs: &[&[i64]],
+    cfg: &DraftConfig,
+    corpus: &[Vec<i64>],
+) -> Result<Vec<DecodeOutput>> {
     let t0 = Instant::now();
     let memory = backend.encode(srcs)?;
     let n = srcs.len();
-    let mut run = SpecGreedyRun::new(backend.begin(memory)?, cfg.clone());
+    let mut run = SpecGreedyRun::with_corpus(backend.begin(memory)?, cfg.clone(), corpus.to_vec());
     for (i, src) in srcs.iter().enumerate() {
         run.admit(i, src);
     }
@@ -295,6 +350,9 @@ pub fn spec_greedy_batch<B: Backend>(
             let mut s = base;
             s.wall = wall / n as u32;
             s.acceptance = run.lane_acceptance(q);
+            let (aq, ac) = run.lane_source_acceptance(q);
+            s.accepted_query_tokens = aq;
+            s.accepted_corpus_tokens = ac;
             DecodeOutput {
                 hyps: vec![hyp],
                 stats: s,
@@ -363,6 +421,29 @@ mod tests {
         assert_eq!(s.hyps[0].tokens, g.hyps[0].tokens);
         assert_eq!(s.stats.decoder_calls, g.stats.decoder_calls);
         assert_eq!(s.stats.acceptance.accepted_draft_tokens, 0);
+    }
+
+    #[test]
+    fn corpus_drafts_attributed_and_exact() {
+        // CopyModel's target is the inner query verbatim. A query shorter
+        // than DL yields no query windows, so acceptance must come from
+        // the corpus source alone — and the output stays exactly greedy.
+        let m = CopyModel::new(96, 96, 40);
+        let src = vec![BOS_ID, 10, 11, 12, 13, 14, EOS_ID];
+        let g = greedy(&m, &src).unwrap();
+        let corpus = vec![vec![10, 11, 12], vec![12, 13, 14]];
+        let s = spec_greedy_corpus(&m, &src, &DraftConfig::new(10), &corpus).unwrap();
+        assert_eq!(s.hyps[0].tokens, g.hyps[0].tokens);
+        assert_eq!(s.stats.accepted_query_tokens, 0);
+        assert!(s.stats.accepted_corpus_tokens > 0);
+        assert_eq!(
+            s.stats.accepted_query_tokens + s.stats.accepted_corpus_tokens,
+            s.stats.acceptance.accepted_draft_tokens
+        );
+        assert!(
+            s.stats.decoder_calls < g.stats.decoder_calls,
+            "corpus drafts should cut calls on the copy regime"
+        );
     }
 
     #[test]

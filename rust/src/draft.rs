@@ -6,10 +6,37 @@
 //! continuations. Reactions leave large molecule fragments untouched, so
 //! these copies have a high acceptance rate (~79% reported).
 //!
-//! Only the first `max_drafts` (the paper's `N_d ≈ 25`, Appendix B) are
-//! kept, to bound the effective-batch inflation described in §3.3.
+//! A second draft source supplements the query copies:
+//! **corpus-learned windows** mined from previously accepted targets by a
+//! [`cache::DraftStore`](crate::cache::DraftStore). Both sources merge in
+//! [`extract_drafts_merged`] behind *one* shared dedup set and *one*
+//! shared `max_drafts` cap (the paper's `N_d ≈ 25`, Appendix B, which
+//! bounds the effective-batch inflation described in §3.3) — a window is
+//! never verified twice just because two sources proposed it. Query
+//! copies keep strict priority: they fill the cap first, so enabling the
+//! corpus source can only *add* drafts, never displace a query window —
+//! the exactness arguments in `cache/mod.rs` lean on this ordering.
 
 use crate::vocab::BOS_ID;
+
+/// Where a draft window came from — decoders attribute per-source
+/// acceptance in `DecodeStats` with this.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DraftSource {
+    /// Sliding window of the current query (the paper's §2.1 copies).
+    QueryCopy,
+    /// Corpus-learned window from a [`cache::DraftStore`](crate::cache::DraftStore).
+    Corpus,
+    /// The never-accepted BOS sentinel (DL=0, or no usable windows).
+    Sentinel,
+}
+
+/// One draft window plus its provenance.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Draft {
+    pub tokens: Vec<i64>,
+    pub source: DraftSource,
+}
 
 /// Configuration for query-copy draft extraction.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -49,57 +76,102 @@ fn window_hash(w: &[i64]) -> u64 {
     h
 }
 
-/// Extract draft sequences from a tokenized query.
+/// Extract draft sequences from a tokenized query (query-copy source
+/// only). See [`extract_drafts_merged`] for the full contract.
+pub fn extract_drafts(query: &[i64], cfg: &DraftConfig) -> Vec<Vec<i64>> {
+    extract_drafts_merged(query, cfg, &[])
+        .into_iter()
+        .map(|d| d.tokens)
+        .collect()
+}
+
+/// Extract drafts from a tokenized query *and* a corpus-learned window
+/// list, merged behind one dedup set and one `max_drafts` cap.
 ///
-/// Returns at least one draft: when `draft_len == 0` or the query is too
-/// short for a full window, the fallback is a single `[BOS]` draft that the
+/// Ordering contract: query-copy windows first (plain, then dilated),
+/// corpus windows after — so the corpus source can never displace a
+/// query window, only fill leftover cap slots. Corpus windows may have
+/// any length (the decoders clip and verify token-by-token).
+///
+/// Returns at least one draft: when `draft_len == 0`, or no source yields
+/// a usable window, the fallback is a single `[BOS]` sentinel that the
 /// model can never accept (BOS never follows another token in training),
-/// reducing the speculative algorithms to their standard counterparts.
+/// reducing the speculative algorithms to their standard counterparts. A
+/// query shorter than `draft_len` contributes no windows of its own but
+/// corpus windows still apply.
 ///
 /// Dedup is a `HashSet` of window hashes with an exact confirm on hash
-/// hit — O(N_w) over the query's windows instead of the old
+/// hit — O(N_w) over all proposed windows instead of the old
 /// O(N_w²) `drafts.contains` scan (which hurt exactly when callers lift
-/// `max_drafts`, e.g. the long-query sweeps). Duplicates never consume
-/// `max_drafts` slots, so dedup lets *later distinct* windows into the
-/// kept set — pinned by a regression test below.
-pub fn extract_drafts(query: &[i64], cfg: &DraftConfig) -> Vec<Vec<i64>> {
+/// `max_drafts`, e.g. the long-query sweeps). The set is shared across
+/// sources, so duplicates never consume `max_drafts` slots — whether they
+/// repeat within the query or between query and corpus — and dedup lets
+/// *later distinct* windows into the kept set (pinned by regression
+/// tests below).
+pub fn extract_drafts_merged(
+    query: &[i64],
+    cfg: &DraftConfig,
+    corpus: &[Vec<i64>],
+) -> Vec<Draft> {
     let dl = cfg.draft_len;
-    if dl == 0 || query.len() < dl {
-        return vec![vec![BOS_ID]];
+    if dl == 0 {
+        return vec![Draft {
+            tokens: vec![BOS_ID],
+            source: DraftSource::Sentinel,
+        }];
     }
-    let mut drafts: Vec<Vec<i64>> = Vec::new();
+    let mut drafts: Vec<Draft> = Vec::new();
     let mut seen: std::collections::HashSet<u64> = std::collections::HashSet::new();
-    let push = |w: Vec<i64>, drafts: &mut Vec<Vec<i64>>, seen: &mut std::collections::HashSet<u64>| {
+    let push = |w: Vec<i64>,
+                source: DraftSource,
+                drafts: &mut Vec<Draft>,
+                seen: &mut std::collections::HashSet<u64>| {
         if drafts.len() >= cfg.max_drafts {
             return;
         }
         if cfg.dedup {
             // Hash prefilter; on a hit, confirm against the kept windows
             // so a (cosmically unlikely) collision can't drop a draft.
-            if !seen.insert(window_hash(&w)) && drafts.contains(&w) {
+            if !seen.insert(window_hash(&w)) && drafts.iter().any(|d| d.tokens == w) {
                 return;
             }
         }
-        drafts.push(w);
+        drafts.push(Draft { tokens: w, source });
     };
-    for start in 0..=(query.len() - dl) {
-        push(query[start..start + dl].to_vec(), &mut drafts, &mut seen);
-    }
-    if cfg.dilated {
-        // Windows that skip one token: cover deletions of a single token
-        // between reactant and product strings.
-        for start in 0..query.len().saturating_sub(dl) {
-            let w: Vec<i64> = query[start..=start + dl]
-                .iter()
-                .enumerate()
-                .filter(|(i, _)| *i != dl / 2)
-                .map(|(_, &t)| t)
-                .collect();
-            push(w, &mut drafts, &mut seen);
+    if query.len() >= dl {
+        for start in 0..=(query.len() - dl) {
+            push(
+                query[start..start + dl].to_vec(),
+                DraftSource::QueryCopy,
+                &mut drafts,
+                &mut seen,
+            );
+        }
+        if cfg.dilated {
+            // Windows that skip one token: cover deletions of a single
+            // token between reactant and product strings.
+            for start in 0..query.len().saturating_sub(dl) {
+                let w: Vec<i64> = query[start..=start + dl]
+                    .iter()
+                    .enumerate()
+                    .filter(|(i, _)| *i != dl / 2)
+                    .map(|(_, &t)| t)
+                    .collect();
+                push(w, DraftSource::QueryCopy, &mut drafts, &mut seen);
+            }
         }
     }
+    for w in corpus {
+        if w.is_empty() {
+            continue;
+        }
+        push(w.clone(), DraftSource::Corpus, &mut drafts, &mut seen);
+    }
     if drafts.is_empty() {
-        return vec![vec![BOS_ID]];
+        return vec![Draft {
+            tokens: vec![BOS_ID],
+            source: DraftSource::Sentinel,
+        }];
     }
     drafts
 }
@@ -244,6 +316,78 @@ mod tests {
         assert!(drafts.contains(&vec![10, 12]));
         assert!(drafts.contains(&vec![11, 13]));
         assert_eq!(drafts.len(), 5);
+    }
+
+    #[test]
+    fn merged_sources_share_one_dedup_set_and_cap() {
+        // Query windows: [10,11], [11,12], [12,13]. Corpus proposes a
+        // duplicate of a query window plus two fresh windows; the
+        // duplicate must not consume a cap slot.
+        let corpus = vec![vec![11, 12], vec![50, 51], vec![60, 61]];
+        let cfg = DraftConfig {
+            max_drafts: 5,
+            ..DraftConfig::new(2)
+        };
+        let drafts = extract_drafts_merged(&q(4), &cfg, &corpus);
+        assert_eq!(drafts.len(), 5);
+        let tokens: Vec<&Vec<i64>> = drafts.iter().map(|d| &d.tokens).collect();
+        assert_eq!(tokens, vec![
+            &vec![10, 11],
+            &vec![11, 12],
+            &vec![12, 13],
+            &vec![50, 51],
+            &vec![60, 61],
+        ]);
+        assert_eq!(drafts[2].source, DraftSource::QueryCopy);
+        assert_eq!(drafts[3].source, DraftSource::Corpus);
+        // Cross-source duplicate appears once, attributed to the query
+        // (first occurrence wins).
+        assert_eq!(
+            drafts.iter().filter(|d| d.tokens == vec![11, 12]).count(),
+            1
+        );
+        assert_eq!(drafts[1].source, DraftSource::QueryCopy);
+    }
+
+    #[test]
+    fn query_windows_keep_priority_under_the_cap() {
+        // Cap of 3 is filled by the query alone; corpus windows can only
+        // fill leftover slots, never displace query copies.
+        let corpus = vec![vec![90, 91], vec![92, 93]];
+        let cfg = DraftConfig {
+            max_drafts: 3,
+            ..DraftConfig::new(2)
+        };
+        let drafts = extract_drafts_merged(&q(4), &cfg, &corpus);
+        assert!(drafts.iter().all(|d| d.source == DraftSource::QueryCopy));
+        let plain = extract_drafts(&q(4), &cfg);
+        let tokens: Vec<Vec<i64>> = drafts.into_iter().map(|d| d.tokens).collect();
+        assert_eq!(tokens, plain);
+    }
+
+    #[test]
+    fn short_query_still_uses_corpus_windows() {
+        // Query too short for its own windows: corpus drafts (of any
+        // length) apply instead of the BOS sentinel.
+        let corpus = vec![vec![40, 41, 42], vec![43, 44]];
+        let drafts = extract_drafts_merged(&q(3), &DraftConfig::new(10), &corpus);
+        assert_eq!(drafts.len(), 2);
+        assert!(drafts.iter().all(|d| d.source == DraftSource::Corpus));
+        // Empty corpus windows are skipped; nothing usable ⇒ sentinel.
+        let empty = extract_drafts_merged(&q(3), &DraftConfig::new(10), &[vec![]]);
+        assert_eq!(empty.len(), 1);
+        assert_eq!(empty[0].source, DraftSource::Sentinel);
+        assert_eq!(empty[0].tokens, vec![BOS_ID]);
+    }
+
+    #[test]
+    fn dl_zero_ignores_corpus() {
+        // DL=0 means "speculation off": the sentinel applies even with a
+        // warm corpus, preserving SBS(DL=0) ≡ standard beam search.
+        let corpus = vec![vec![40, 41]];
+        let drafts = extract_drafts_merged(&q(10), &DraftConfig::new(0), &corpus);
+        assert_eq!(drafts.len(), 1);
+        assert_eq!(drafts[0].source, DraftSource::Sentinel);
     }
 
     #[test]

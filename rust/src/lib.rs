@@ -18,6 +18,7 @@
 //!   called from L2, validated against a pure-jnp oracle.
 
 pub mod bench;
+pub mod cache;
 pub mod chem;
 pub mod coordinator;
 pub mod decoding;

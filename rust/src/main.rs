@@ -18,6 +18,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
+use rxnspec::cache::ServeCache;
 use rxnspec::chem::read_split;
 use rxnspec::coordinator::{run_worker, serve, DecodeMode, Metrics, RequestQueue, ServerState};
 use rxnspec::decoding::{beam_search, greedy, sbs, spec_greedy, Backend, DecodeOutput, SbsConfig};
@@ -32,6 +33,7 @@ fn usage() -> ! {
 USAGE:
   rxnspec serve   [--task fwd|retro] [--backend pjrt|rust] [--artifacts DIR]
                   [--data DIR] [--port N] [--batch-max N] [--batch-wait-ms N]
+                  [--cache on|off]
   rxnspec predict --smiles SMILES [--decoder D] [--task ...] [--backend ...]
   rxnspec eval    [--decoder D] [--limit N] [--task ...] [--backend ...]
   rxnspec parity  [--limit N] [--task ...]
@@ -53,6 +55,7 @@ struct Opts {
     port: u16,
     batch_max: usize,
     batch_wait_ms: u64,
+    cache: bool,
 }
 
 impl Default for Opts {
@@ -68,6 +71,7 @@ impl Default for Opts {
             port: 7878,
             batch_max: 32,
             batch_wait_ms: 5,
+            cache: true,
         }
     }
 }
@@ -88,6 +92,13 @@ fn parse_opts(args: &[String]) -> Opts {
             "--port" => o.port = need(i).parse().unwrap_or_else(|_| usage()),
             "--batch-max" => o.batch_max = need(i).parse().unwrap_or_else(|_| usage()),
             "--batch-wait-ms" => o.batch_wait_ms = need(i).parse().unwrap_or_else(|_| usage()),
+            "--cache" => {
+                o.cache = match need(i).as_str() {
+                    "on" => true,
+                    "off" => false,
+                    _ => usage(),
+                }
+            }
             _ => usage(),
         }
         i += 2;
@@ -117,19 +128,30 @@ fn cmd_serve(opts: Opts) -> Result<()> {
     let backend = AnyBackend::load(&opts.backend, &opts.artifacts, &opts.task)?;
     eprintln!("precompiling artifacts...");
     backend.precompile()?;
+    let cache = if opts.cache {
+        ServeCache::default()
+    } else {
+        ServeCache::disabled()
+    };
     let state = Arc::new(ServerState {
         queue: RequestQueue::new(opts.batch_max, Duration::from_millis(opts.batch_wait_ms)),
         metrics: Arc::new(Metrics::default()),
+        cache: Arc::new(cache),
         shutdown: AtomicBool::new(false),
     });
     let listener = TcpListener::bind(("0.0.0.0", opts.port))?;
     eprintln!(
-        "rxnspec serving task={} backend={} on port {} (batch_max={}, wait={}ms)",
-        opts.task, opts.backend, opts.port, opts.batch_max, opts.batch_wait_ms
+        "rxnspec serving task={} backend={} on port {} (batch_max={}, wait={}ms, cache={})",
+        opts.task,
+        opts.backend,
+        opts.port,
+        opts.batch_max,
+        opts.batch_wait_ms,
+        if opts.cache { "on" } else { "off" }
     );
     let accept_state = Arc::clone(&state);
     let accept = std::thread::spawn(move || serve(listener, accept_state));
-    run_worker(&backend, &vocab, &state.queue, &state.metrics);
+    run_worker(&backend, &vocab, &state.queue, &state.metrics, &state.cache);
     let _ = accept.join();
     Ok(())
 }

@@ -21,7 +21,9 @@
 mod search;
 mod stock;
 
-pub use search::{ForwardCheck, PlanStats, Planner, PlannerConfig, Route, RouteStep};
+pub use search::{
+    ForwardCheck, PlanStats, Planner, PlannerCache, PlannerConfig, Route, RouteStep,
+};
 pub use stock::Stock;
 
 use anyhow::Result;

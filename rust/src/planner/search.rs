@@ -7,13 +7,34 @@
 //! is round-trip checked with the forward (product-prediction) model —
 //! the standard CASP consistency filter, and a nice use of both of this
 //! repo's trained artifacts in one system.
+//!
+//! **Expansion memoization**: retrosynthetic search trees revisit the
+//! same intermediate on different branches constantly — and separate
+//! targets share intermediates too. A shared [`PlannerCache`] (the cache
+//! subsystem's [`ResultCache`] over disconnection lists) threads through
+//! expansions so each distinct molecule costs one single-step model call
+//! per cache lifetime; `PlanStats::cache_hits` counts the saved calls.
 
 use std::collections::BinaryHeap;
+use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::Result;
 
+use crate::cache::ResultCache;
+
 use super::{Disconnection, SingleStepModel, Stock};
+
+/// Shared memo of single-step proposals, keyed by (beam width, molecule).
+/// Share one cache per underlying model only — entries are raw model
+/// output, so two different models must not exchange them.
+pub type PlannerCache = ResultCache<Vec<Disconnection>>;
+
+/// Cache key for a molecule SMILES (the cache subsystem keys on token
+/// sequences; byte values serve for strings).
+fn mol_key(mol: &str) -> Vec<i64> {
+    mol.bytes().map(|b| b as i64).collect()
+}
 
 /// Forward-model interface for round-trip checking.
 pub trait ForwardCheck {
@@ -109,6 +130,9 @@ impl Route {
 pub struct PlanStats {
     pub expansions: usize,
     pub nodes_generated: usize,
+    /// Expansions whose proposals came from the shared [`PlannerCache`]
+    /// instead of a single-step model call.
+    pub cache_hits: usize,
     pub solved: bool,
     pub wall: std::time::Duration,
 }
@@ -150,6 +174,9 @@ pub struct Planner<'a, M: SingleStepModel, F: ForwardCheck = ()> {
     pub stock: &'a Stock,
     pub forward: Option<&'a F>,
     pub cfg: PlannerConfig,
+    /// Shared expansion memo; `None` disables memoization. Shareable
+    /// across `plan` calls and planner instances over the same model.
+    pub cache: Option<Arc<PlannerCache>>,
 }
 
 impl<'a, M: SingleStepModel> Planner<'a, M, ()> {
@@ -159,6 +186,7 @@ impl<'a, M: SingleStepModel> Planner<'a, M, ()> {
             stock,
             forward: None,
             cfg,
+            cache: None,
         }
     }
 }
@@ -175,7 +203,32 @@ impl<'a, M: SingleStepModel, F: ForwardCheck> Planner<'a, M, F> {
             stock,
             forward: Some(forward),
             cfg,
+            cache: None,
         }
+    }
+
+    /// Attach a shared expansion memo (builder style).
+    pub fn with_cache(mut self, cache: Arc<PlannerCache>) -> Self {
+        self.cache = Some(cache);
+        self
+    }
+
+    /// One molecule's proposals, via the shared cache when attached. The
+    /// cache stores raw model output (pre-filter: `accept` is
+    /// node-dependent and re-runs per expansion).
+    fn propose_cached(&self, mol: &str, stats: &mut PlanStats) -> Result<Vec<Disconnection>> {
+        let Some(cache) = &self.cache else {
+            return self.model.propose(mol, self.cfg.n_suggestions);
+        };
+        let tag = self.cfg.n_suggestions as u64;
+        let key = mol_key(mol);
+        if let Some(hit) = cache.get(tag, &key) {
+            stats.cache_hits += 1;
+            return Ok(hit);
+        }
+        let proposals = self.model.propose(mol, self.cfg.n_suggestions)?;
+        cache.insert(tag, key, proposals.clone());
+        Ok(proposals)
     }
 
     /// Search for a route that turns `target` into stock molecules.
@@ -227,7 +280,7 @@ impl<'a, M: SingleStepModel, F: ForwardCheck> Planner<'a, M, F> {
             // Expand the first open molecule.
             let mol = node.open[0].clone();
             stats.expansions += 1;
-            let proposals = self.model.propose(&mol, self.cfg.n_suggestions)?;
+            let proposals = self.propose_cached(&mol, &mut stats)?;
             for d in proposals {
                 if !self.accept(&mol, &d, &node) {
                     continue;
@@ -291,9 +344,11 @@ mod tests {
     use super::*;
     use std::collections::HashMap;
 
-    /// Scripted single-step model for unit tests.
+    /// Scripted single-step model for unit tests; counts `propose` calls
+    /// so memoization is observable.
     struct Stub {
         table: HashMap<String, Vec<Disconnection>>,
+        calls: std::cell::Cell<usize>,
     }
 
     impl Stub {
@@ -310,12 +365,16 @@ mod tests {
                         .collect(),
                 );
             }
-            Stub { table }
+            Stub {
+                table,
+                calls: std::cell::Cell::new(0),
+            }
         }
     }
 
     impl SingleStepModel for Stub {
         fn propose(&self, product: &str, n: usize) -> Result<Vec<Disconnection>> {
+            self.calls.set(self.calls.get() + 1);
             let mut v = self.table.get(product).cloned().unwrap_or_default();
             v.truncate(n);
             Ok(v)
@@ -459,6 +518,75 @@ mod tests {
         };
         let p = Planner::with_forward(&model, &st, &fwd_ok, cfg);
         assert!(p.plan("P").unwrap().0.is_some());
+    }
+
+    /// A branching target whose intermediate `M` is needed on two
+    /// branches. The cache must spend one model call on `M`, hitting on
+    /// its second expansion.
+    fn branching_model() -> Stub {
+        Stub::new(&[
+            ("P", &[(&["X", "Y"], -0.1)]),
+            ("X", &[(&["M"], -0.1)]),
+            ("Y", &[(&["M"], -0.1)]),
+            ("M", &[(&["A"], -0.1)]),
+        ])
+    }
+
+    fn deep_cfg() -> PlannerConfig {
+        PlannerConfig {
+            max_depth: 10,
+            expansion_budget: 50,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn cache_memoizes_repeated_intermediates_within_a_plan() {
+        let st = stock(&["A"]);
+
+        // Cold baseline: M is proposed twice (once per branch).
+        let cold_model = branching_model();
+        let p = Planner::new(&cold_model, &st, deep_cfg());
+        let (route, stats) = p.plan("P").unwrap();
+        assert!(route.is_some());
+        assert_eq!(stats.cache_hits, 0);
+        let cold_calls = cold_model.calls.get();
+        assert_eq!(cold_calls, 5, "P, X, Y, M, M");
+
+        // Warm: the second M expansion is a cache hit — strictly fewer
+        // model calls for the identical route.
+        let model = branching_model();
+        let cache = Arc::new(PlannerCache::new(256, 2));
+        let p = Planner::new(&model, &st, deep_cfg()).with_cache(Arc::clone(&cache));
+        let (warm_route, warm_stats) = p.plan("P").unwrap();
+        assert_eq!(warm_route, route, "memoization must not change the route");
+        assert_eq!(warm_stats.cache_hits, 1);
+        assert!(
+            model.calls.get() < cold_calls,
+            "expected strictly fewer model calls: {} vs {cold_calls}",
+            model.calls.get()
+        );
+        assert_eq!(model.calls.get(), 4);
+        // Expansion accounting is unchanged — hits still expand nodes.
+        assert_eq!(warm_stats.expansions, stats.expansions);
+    }
+
+    #[test]
+    fn cache_shared_across_plans_skips_all_repeat_calls() {
+        let st = stock(&["A"]);
+        let model = branching_model();
+        let cache = Arc::new(PlannerCache::new(256, 2));
+        let p = Planner::new(&model, &st, deep_cfg()).with_cache(Arc::clone(&cache));
+        let (r1, _) = p.plan("P").unwrap();
+        let calls_after_first = model.calls.get();
+        let (r2, s2) = p.plan("P").unwrap();
+        assert_eq!(r1, r2);
+        assert_eq!(
+            model.calls.get(),
+            calls_after_first,
+            "a warm cache must serve every expansion"
+        );
+        assert_eq!(s2.cache_hits, s2.expansions);
     }
 
     #[test]

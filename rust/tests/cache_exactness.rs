@@ -1,0 +1,202 @@
+//! Property tests for the cache subsystem's exactness guarantees
+//! (ISSUE 2 acceptance criterion): with the `ResultCache` and the
+//! `DraftStore` enabled, served predictions and decoder outputs are
+//! bit-identical to the cold/disabled path.
+//!
+//! * **Speculative greedy** is token-exact vs plain greedy for *any*
+//!   draft store content — warm, foreign, or adversarially poisoned —
+//!   because the accept rule compares every draft token against the
+//!   model's own argmax (the paper's §2.1 losslessness, extended to the
+//!   corpus source).
+//! * **SBS** with never-accepted corpus windows is bit-identical to SBS
+//!   without the store: candidates are generated only from each beam's
+//!   best draft, a never-accepted window loses every best-draft
+//!   selection (ties keep the earlier, query-copy row), query windows
+//!   keep cap priority, and row truncation cuts from the tail.
+//! * **ResultCache** replays stored completions verbatim (covered at the
+//!   worker/server layer in `coordinator` unit tests and `serving_e2e`).
+
+use rxnspec::cache::DraftStore;
+use rxnspec::decoding::{beam_search, greedy, sbs, spec_greedy_corpus, SbsConfig};
+use rxnspec::draft::DraftConfig;
+use rxnspec::rng::Rng;
+use rxnspec::testutil::{random_wrapped_src, CopyModel, HashModel};
+use rxnspec::vocab::{BOS_ID, EOS_ID, PAD_ID};
+
+/// Plant adversarial windows: special tokens, repeats, and valid-looking
+/// but wrong sequences (all ids within the mock vocab).
+fn poison(store: &DraftStore, vocab: i64) {
+    store.record_window(&[BOS_ID, BOS_ID, PAD_ID, EOS_ID]);
+    store.record_window(&[EOS_ID, 5, 5, 5]);
+    store.record_window(&[PAD_ID; 6]);
+    store.record_window(&[vocab - 1, vocab - 2, vocab - 3, vocab - 4]);
+    store.record_window(&[7; 12]);
+}
+
+/// THE tentpole invariant: greedy-speculative decoding with a warm *and*
+/// poisoned draft store emits exactly the greedy sequence, for an
+/// arbitrary conditional model.
+#[test]
+fn prop_spec_greedy_with_draft_store_bit_identical() {
+    let mut rng = Rng::new(0xCAC4E);
+    for case in 0..20u64 {
+        let m = HashModel::new(64, 64, 32, case + 1000);
+        let store = DraftStore::new(4, 1024);
+        // Warm the store with real targets from other queries (foreign
+        // but plausible windows) and from the query under test itself.
+        for _ in 0..3 {
+            let s = random_wrapped_src(&mut rng, 6, 20, 32);
+            let g = greedy(&m, &s).unwrap();
+            store.record(&g.hyps[0].tokens);
+        }
+        let src = random_wrapped_src(&mut rng, 4, 20, 32);
+        let g = greedy(&m, &src).unwrap();
+        store.record(&g.hyps[0].tokens);
+        poison(&store, 32);
+
+        for dl in [2usize, 4, 10] {
+            let corpus = store.top_k(16);
+            let s = spec_greedy_corpus(&m, &src, &DraftConfig::new(dl), &corpus).unwrap();
+            assert_eq!(
+                s.hyps[0].tokens, g.hyps[0].tokens,
+                "case {case} dl {dl}: draft store changed the output"
+            );
+            assert!(
+                (s.hyps[0].score - g.hyps[0].score).abs() < 1e-5,
+                "case {case} dl {dl}: score drifted"
+            );
+            assert!(
+                s.stats.decoder_calls <= g.stats.decoder_calls,
+                "case {case} dl {dl}: corpus drafts made decoding slower than greedy"
+            );
+            // Source attribution is a partition of accepted tokens.
+            assert_eq!(
+                s.stats.accepted_query_tokens + s.stats.accepted_corpus_tokens,
+                s.stats.acceptance.accepted_draft_tokens,
+                "case {case} dl {dl}: attribution must sum to total acceptance"
+            );
+        }
+    }
+}
+
+/// On the copy regime (the chemistry case) a store warmed with the true
+/// target yields corpus acceptances — still token-exact, fewer calls.
+#[test]
+fn warm_store_accepts_corpus_windows_on_copy_regime() {
+    let m = CopyModel::new(96, 96, 40);
+    let src = vec![BOS_ID, 10, 11, 12, 13, 14, 15, 16, EOS_ID];
+    let g = greedy(&m, &src).unwrap();
+    let store = DraftStore::new(3, 256);
+    store.record(&g.hyps[0].tokens);
+    poison(&store, 40);
+    // DL longer than the query disables query-copy windows entirely, so
+    // every acceptance must come from the corpus source.
+    let s = spec_greedy_corpus(&m, &src, &DraftConfig::new(20), &store.top_k(16)).unwrap();
+    assert_eq!(s.hyps[0].tokens, g.hyps[0].tokens);
+    assert_eq!(s.stats.accepted_query_tokens, 0);
+    assert!(
+        s.stats.accepted_corpus_tokens > 0,
+        "true-target windows must be accepted"
+    );
+    assert!(
+        s.stats.decoder_calls < g.stats.decoder_calls,
+        "corpus drafts must cut decoder calls ({} vs {})",
+        s.stats.decoder_calls,
+        g.stats.decoder_calls
+    );
+}
+
+/// SBS with never-accepted (poisoned) corpus windows returns the exact
+/// hypothesis set of SBS without the store — tokens and scores.
+#[test]
+fn prop_sbs_with_poisoned_store_bit_identical() {
+    let mut rng = Rng::new(0xD00D);
+    for case in 0..12u64 {
+        let m = HashModel::new(64, 64, 32, case + 2000);
+        let src = random_wrapped_src(&mut rng, 5, 18, 32);
+        for n in [2usize, 4] {
+            let mut base_cfg = SbsConfig::new(n, 5);
+            // Leave cap room so the poisoned windows really enter rows.
+            base_cfg.draft.max_drafts = 100;
+            let base = sbs(&m, &src, &base_cfg).unwrap();
+
+            let mut poisoned_cfg = base_cfg.clone();
+            poisoned_cfg.corpus_drafts = vec![
+                vec![BOS_ID, 9, 9, 9, 9],
+                vec![PAD_ID, 4, 4, 4, 4],
+                vec![BOS_ID, BOS_ID, BOS_ID],
+                vec![EOS_ID, 6, 6],
+            ];
+            let p = sbs(&m, &src, &poisoned_cfg).unwrap();
+
+            assert_eq!(
+                base.hyps.len(),
+                p.hyps.len(),
+                "case {case} n {n}: hypothesis count changed"
+            );
+            for (a, b) in base.hyps.iter().zip(&p.hyps) {
+                assert_eq!(a.tokens, b.tokens, "case {case} n {n}: tokens diverged");
+                assert!(
+                    (a.score - b.score).abs() < 1e-12,
+                    "case {case} n {n}: scores diverged"
+                );
+            }
+            assert_eq!(
+                p.stats.accepted_corpus_tokens, 0,
+                "case {case} n {n}: poisoned windows must never be accepted"
+            );
+        }
+    }
+}
+
+/// SBS with a warm store on the copy regime: the top hypothesis stays
+/// the beam-search top-1 while corpus drafts cut decoder calls.
+#[test]
+fn sbs_warm_store_keeps_top1_and_cuts_calls_on_copy_regime() {
+    let m = CopyModel::new(96, 96, 40);
+    let src = vec![
+        BOS_ID, 10, 11, 12, 13, 14, 15, 16, 17, 18, 19, 20, 21, EOS_ID,
+    ];
+    let bs = beam_search(&m, &src, 3).unwrap();
+    let cold = sbs(&m, &src, &SbsConfig::new(3, 8)).unwrap();
+
+    let store = DraftStore::new(8, 256);
+    store.record(&bs.hyps[0].tokens);
+    poison(&store, 40);
+    let mut warm_cfg = SbsConfig::new(3, 8);
+    warm_cfg.corpus_drafts = store.top_k(8);
+    let warm = sbs(&m, &src, &warm_cfg).unwrap();
+
+    assert_eq!(warm.hyps[0].tokens, bs.hyps[0].tokens, "top-1 must hold");
+    assert_eq!(warm.hyps[0].tokens, cold.hyps[0].tokens);
+    assert!(
+        warm.stats.decoder_calls <= cold.stats.decoder_calls,
+        "warm store must not cost extra calls ({} vs {})",
+        warm.stats.decoder_calls,
+        cold.stats.decoder_calls
+    );
+}
+
+/// DL=0 with a warm store still reduces SBS to standard beam search —
+/// the store must not resurrect speculation the caller turned off.
+#[test]
+fn dl0_with_warm_store_still_equals_beam_search() {
+    let mut rng = Rng::new(0xB0B0);
+    let m = HashModel::new(64, 64, 32, 4242);
+    let store = DraftStore::new(4, 256);
+    for _ in 0..3 {
+        let s = random_wrapped_src(&mut rng, 6, 18, 32);
+        let g = greedy(&m, &s).unwrap();
+        store.record(&g.hyps[0].tokens);
+    }
+    let src = random_wrapped_src(&mut rng, 6, 18, 32);
+    let bs = beam_search(&m, &src, 4).unwrap();
+    let mut cfg = SbsConfig::new(4, 0);
+    cfg.corpus_drafts = store.top_k(8);
+    let sb = sbs(&m, &src, &cfg).unwrap();
+    assert_eq!(bs.hyps.len(), sb.hyps.len());
+    for (a, b) in bs.hyps.iter().zip(&sb.hyps) {
+        assert_eq!(a.tokens, b.tokens);
+        assert!((a.score - b.score).abs() < 1e-9);
+    }
+}

@@ -145,6 +145,7 @@ fn tcp_serving_round_trip_with_pjrt() {
     let state = Arc::new(ServerState {
         queue: RequestQueue::new(8, Duration::from_millis(2)),
         metrics: Arc::new(Metrics::default()),
+        cache: Arc::new(rxnspec::cache::ServeCache::default()),
         shutdown: AtomicBool::new(false),
     });
     let listener = TcpListener::bind("127.0.0.1:0").unwrap();
@@ -156,7 +157,13 @@ fn tcp_serving_round_trip_with_pjrt() {
         // PJRT handles are not Send: construct inside the thread.
         let vocab = Vocab::load(Path::new("data/vocab.txt")).unwrap();
         let backend = AnyBackend::load("pjrt", Path::new("artifacts"), "fwd").unwrap();
-        run_worker(&backend, &vocab, &worker_state.queue, &worker_state.metrics);
+        run_worker(
+            &backend,
+            &vocab,
+            &worker_state.queue,
+            &worker_state.metrics,
+            &worker_state.cache,
+        );
     });
 
     let mut c = Client::connect(&addr).unwrap();
@@ -168,6 +175,10 @@ fn tcp_serving_round_trip_with_pjrt() {
     assert!(spec_p.decoder_calls <= greedy_p.decoder_calls);
     let beam_p = c.predict("bs:3", q).unwrap();
     assert_eq!(beam_p.hyps.len(), 3);
+    // Repeat traffic is served from the result cache, bit-identically.
+    let cached_p = c.predict("greedy", q).unwrap();
+    assert_eq!(cached_p.decoder_calls, 0, "repeat must hit the cache");
+    assert_eq!(cached_p.hyps, greedy_p.hyps);
 
     state.queue.close();
     worker.join().unwrap();
