@@ -12,7 +12,7 @@
 //! produced targets, so acceptance splits into query-copy vs
 //! corpus-learned draft sources (`acc_query` / `acc_corpus` columns).
 
-use rxnspec::bench::{eval_setup, limit, report, Measurement};
+use rxnspec::bench::{bench_json_path, eval_setup, json, json_flag, limit, report, Measurement};
 use rxnspec::cache::{DraftStore, ResultCache};
 use rxnspec::chem::tokenize;
 use rxnspec::decoding::{spec_greedy, spec_greedy_corpus};
@@ -127,5 +127,29 @@ fn main() -> anyhow::Result<()> {
         "cache columns: acc_query/acc_corpus split total acceptance by draft source; \
          cache_hit_rate is the repeat-pass ResultCache rate (~0.5 by construction)"
     );
+
+    // Machine-readable perf trajectory (`--json`): per-DL acceptance and
+    // tokens/call merged into BENCH_kernels.json.
+    if json_flag() {
+        let mut entries: Vec<(String, json::Val)> = Vec::new();
+        for r in &rows {
+            entries.push((
+                r.label.clone(),
+                json::Val::obj(vec![
+                    (
+                        "acceptance".into(),
+                        json::Val::num(r.aux_metric("acceptance")),
+                    ),
+                    (
+                        "tokens_per_call".into(),
+                        json::Val::num(r.aux_metric("tokens_per_call")),
+                    ),
+                ]),
+            ));
+        }
+        let path = bench_json_path();
+        json::merge_section(&path, "fig2_acceptance", json::Val::obj(entries))?;
+        println!("(updated {})", path.display());
+    }
     Ok(())
 }

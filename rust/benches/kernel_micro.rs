@@ -1,0 +1,191 @@
+//! Kernel-layer micro benchmarks: packed-GEMM latency, cross-row fused
+//! `extend` packing, and synthetic-model decode throughput.
+//!
+//! Unlike the table/figure benches this needs **no data or artifacts** —
+//! everything runs against in-memory synthetic models — so it doubles as
+//! the CI perf-smoke step. Flags:
+//!
+//! * `--smoke`  fewer samples / smaller sweeps (CI),
+//! * `--json`   write/update the `BENCH_kernels.json` perf trajectory
+//!   (tok/s, ns/GEMM, recomp_tok, packed-rows-per-call).
+
+use std::time::Instant;
+
+use rxnspec::bench::{bench_json_path, json, json_flag, measure, report};
+use rxnspec::decoding::{greedy_batch, spec_greedy_batch, Backend, DecoderSession};
+use rxnspec::draft::DraftConfig;
+use rxnspec::kernels::PackedLinear;
+use rxnspec::model::Config;
+use rxnspec::rng::Rng;
+use rxnspec::testutil::{random_rust_backend_cfg, random_wrapped_src, ForceStateless};
+
+fn rand_vec(rng: &mut Rng, n: usize) -> Vec<f32> {
+    (0..n).map(|_| (rng.f64() as f32 - 0.5) * 2.0).collect()
+}
+
+fn main() -> anyhow::Result<()> {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let emit_json = json_flag();
+    let samples = if smoke { 2 } else { 5 };
+    let mut entries: Vec<(String, json::Val)> = Vec::new();
+    let mut rows = Vec::new();
+    let mut rng = Rng::new(0xBE7C);
+
+    // --- packed GEMM latency sweep -------------------------------------
+    // (n, din, dout): a batched layer pass, a single-row layer pass, and
+    // an output-head-shaped tall GEMM.
+    let shapes = [(32usize, 256usize, 256usize), (1, 256, 256), (8, 256, 1024)];
+    let iters = if smoke { 20 } else { 200 };
+    for &(n, din, dout) in &shapes {
+        let w = rand_vec(&mut rng, din * dout);
+        let b = rand_vec(&mut rng, dout);
+        let x = rand_vec(&mut rng, n * din);
+        let packed = PackedLinear::pack(&w, din, dout, &b);
+        let mut sink = 0f32;
+        let label = format!("gemm {n}x{din}x{dout}");
+        let m = measure(&label, 1, samples, || {
+            for _ in 0..iters {
+                let y = packed.apply(&x, n, 1);
+                sink += y[0];
+            }
+            vec![("iters".into(), iters as f64)]
+        });
+        let ns_per = m.mean_s() * 1e9 / iters as f64;
+        let gflops = (2.0 * n as f64 * din as f64 * dout as f64 * iters as f64)
+            / (m.mean_s() * 1e9);
+        eprintln!("  {label}: {ns_per:.0} ns/GEMM, {gflops:.2} GFLOP/s (sink {sink:.1})");
+        entries.push((
+            format!("gemm_{n}x{din}x{dout}_ns"),
+            json::Val::num(ns_per),
+        ));
+        entries.push((
+            format!("gemm_{n}x{din}x{dout}_gflops"),
+            json::Val::num(gflops),
+        ));
+        rows.push(m);
+    }
+
+    // --- synthetic-model decode throughput -----------------------------
+    let cfg = Config {
+        vocab: 48,
+        d_model: 64,
+        n_heads: 4,
+        d_ff: 128,
+        n_enc: 2,
+        n_dec: 2,
+        s_len: 48,
+        t_len: 48,
+    };
+    let backend = random_rust_backend_cfg(7, cfg);
+    let n_q = if smoke { 4 } else { 16 };
+    let srcs: Vec<Vec<i64>> = (0..n_q)
+        .map(|_| random_wrapped_src(&mut rng, 10, 28, cfg.vocab))
+        .collect();
+    let refs: Vec<&[i64]> = srcs.iter().map(|s| s.as_slice()).collect();
+
+    let mut toks = 0usize;
+    let mut computed = 0usize;
+    let m = measure("greedy (KV-cached)", 0, samples, || {
+        toks = 0;
+        computed = 0;
+        for s in &refs {
+            let out = greedy_batch(&backend, &[s]).unwrap();
+            toks += out[0].hyps[0].tokens.len() + 1;
+            computed += out[0].stats.tokens_computed;
+        }
+        vec![("tokens".into(), toks as f64)]
+    });
+    let greedy_tok_s = toks as f64 / m.mean_s();
+    let recomp_tok = computed as f64 / toks.max(1) as f64;
+    entries.push(("greedy_tok_s".into(), json::Val::num(greedy_tok_s)));
+    entries.push(("greedy_recomp_tok".into(), json::Val::num(recomp_tok)));
+    rows.push(m);
+
+    let m = measure("greedy (stateless)", 0, samples, || {
+        let nocache = ForceStateless(&backend);
+        let mut t = 0usize;
+        for s in &refs {
+            let out = greedy_batch(&nocache, &[s]).unwrap();
+            t += out[0].hyps[0].tokens.len() + 1;
+        }
+        vec![("tokens".into(), t as f64)]
+    });
+    entries.push((
+        "stateless_tok_s".into(),
+        json::Val::num(toks as f64 / m.mean_s()),
+    ));
+    rows.push(m);
+
+    let cfg_dl = DraftConfig::new(8);
+    let m = measure("spec-greedy (DL=8)", 0, samples, || {
+        let mut t = 0usize;
+        for s in &refs {
+            let out = spec_greedy_batch(&backend, &[s], &cfg_dl).unwrap();
+            t += out[0].hyps[0].tokens.len() + 1;
+        }
+        vec![("tokens".into(), t as f64)]
+    });
+    entries.push((
+        "spec_dl8_tok_s".into(),
+        json::Val::num(toks as f64 / m.mean_s()),
+    ));
+    rows.push(m);
+
+    // --- cross-row fused extend: packed rows per call ------------------
+    let lanes = 8usize.min(refs.len());
+    let memory = backend.encode(&refs[..lanes])?;
+    let mut sess = backend.begin_cached(memory);
+    let mut srows = Vec::new();
+    for i in 0..lanes {
+        srows.push(sess.new_row(i));
+    }
+    // Mixed window lengths per tick, like a spec-greedy batch.
+    let t0 = Instant::now();
+    let steps = if smoke { 8 } else { 32 };
+    for step in 0..steps {
+        let deltas: Vec<(usize, &[i64])> = srows
+            .iter()
+            .enumerate()
+            .map(|(i, &r)| {
+                let w = 1 + (step + i) % 3;
+                (r, &srcs[i][..w.min(srcs[i].len())])
+            })
+            .filter(|&(_, t)| !t.is_empty())
+            .collect();
+        // Roll back so the bucket never overflows across steps.
+        for &(r, _) in &deltas {
+            let keep = sess.row_len(r).min(4);
+            sess.truncate(r, keep);
+        }
+        sess.extend(&deltas)?;
+    }
+    let fused_wall = t0.elapsed();
+    let st = sess.stats();
+    let rows_per_call = st.packed_rows as f64 / st.extend_calls.max(1) as f64;
+    eprintln!(
+        "  fused extend: {} calls, {} rows packed ({rows_per_call:.2} rows/call), \
+         lp high-water {} positions, {:.3}s",
+        st.extend_calls,
+        st.packed_rows,
+        st.lp_high_water,
+        fused_wall.as_secs_f64()
+    );
+    entries.push(("packed_rows_per_call".into(), json::Val::num(rows_per_call)));
+    entries.push((
+        "lp_high_water".into(),
+        json::Val::num(st.lp_high_water as f64),
+    ));
+
+    report("kernel_micro", "Kernel layer — packed GEMM / fused extend", &rows);
+    println!(
+        "\ngreedy {greedy_tok_s:.1} tok/s (recomp_tok {recomp_tok:.2}), \
+         packed {rows_per_call:.2} rows/extend-call"
+    );
+
+    if emit_json {
+        let path = bench_json_path();
+        json::merge_section(&path, "kernel_micro", json::Val::obj(entries))?;
+        println!("(updated {})", path.display());
+    }
+    Ok(())
+}

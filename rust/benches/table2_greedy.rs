@@ -12,7 +12,9 @@
 //! times differ, the *shape* (ordering and rough ratios) is the claim
 //! under reproduction. RXNSPEC_LIMIT controls the subset (default 60).
 
-use rxnspec::bench::{eval_setup, limit, measure, report, speedup, DeviceModel};
+use rxnspec::bench::{
+    bench_json_path, eval_setup, json, json_flag, limit, measure, report, speedup, DeviceModel,
+};
 use rxnspec::cache::{DraftStore, ResultCache};
 use rxnspec::decoding::{greedy_batch, spec_greedy_batch, spec_greedy_batch_corpus, Backend};
 use rxnspec::draft::DraftConfig;
@@ -196,9 +198,7 @@ fn main() -> anyhow::Result<()> {
         speedup(&rows[0], &rows[3]),
         speedup(&rows[0], &rows[4]),
     );
-    let aux = |r: &rxnspec::bench::Measurement, k: &str| {
-        r.aux.iter().find(|a| a.0 == k).map(|a| a.1).unwrap_or(0.0)
-    };
+    let aux = |r: &rxnspec::bench::Measurement, k: &str| r.aux_metric(k);
     println!(
         "parallel-device projection: greedy {:.2}s -> DL=4 {:.2}s ({:.2}x), DL=10 {:.2}s ({:.2}x)",
         aux(&rows[0], "proj_s"),
@@ -265,5 +265,30 @@ fn main() -> anyhow::Result<()> {
         "losslessness check passed (greedy == speculative == no-cache == warm-store \
          == cached outputs)"
     );
+
+    // Machine-readable perf trajectory (`--json`): tok/s + recomp_tok per
+    // configuration, merged into BENCH_kernels.json next to the
+    // kernel_micro section.
+    if json_flag() {
+        let mut entries: Vec<(String, json::Val)> = Vec::new();
+        for r in &rows {
+            let toks = aux(r, "tokens");
+            entries.push((
+                r.label.clone(),
+                json::Val::obj(vec![
+                    ("tok_s".into(), json::Val::num(toks / r.mean_s().max(1e-12))),
+                    ("recomp_tok".into(), json::Val::num(aux(r, "recomp_tok"))),
+                    ("calls".into(), json::Val::num(aux(r, "calls"))),
+                ]),
+            ));
+        }
+        entries.push((
+            "speedup_dl10_vs_greedy".into(),
+            json::Val::num(speedup(greedy_row, cold10_row)),
+        ));
+        let path = bench_json_path();
+        json::merge_section(&path, "table2_greedy", json::Val::obj(entries))?;
+        println!("(updated {})", path.display());
+    }
     Ok(())
 }

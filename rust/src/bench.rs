@@ -20,6 +20,16 @@ impl Measurement {
         self.samples.iter().map(|d| d.as_secs_f64()).sum::<f64>() / self.samples.len() as f64
     }
 
+    /// Auxiliary metric by name (0.0 when absent) — the lookup the bench
+    /// binaries share instead of re-rolling per-file closures.
+    pub fn aux_metric(&self, key: &str) -> f64 {
+        self.aux
+            .iter()
+            .find(|a| a.0 == key)
+            .map(|a| a.1)
+            .unwrap_or(0.0)
+    }
+
     pub fn std_s(&self) -> f64 {
         let m = self.mean_s();
         let var = self
@@ -234,6 +244,405 @@ pub fn limit(default: usize) -> usize {
         .ok()
         .and_then(|v| v.parse().ok())
         .unwrap_or(default)
+}
+
+/// True when the bench binary was invoked with `--json` (emit/update the
+/// machine-readable `BENCH_kernels.json` perf trajectory).
+pub fn json_flag() -> bool {
+    std::env::args().any(|a| a == "--json")
+}
+
+/// Repo-root path of the perf-trajectory file. Cargo runs bench binaries
+/// with cwd = the *package* root (`rust/`), not the workspace root, so a
+/// bare relative path would write `rust/BENCH_kernels.json` and CI would
+/// upload the stale committed copy. Anchored via `CARGO_MANIFEST_DIR`;
+/// `RXNSPEC_BENCH_JSON` overrides for ad-hoc runs.
+pub fn bench_json_path() -> std::path::PathBuf {
+    match std::env::var("RXNSPEC_BENCH_JSON") {
+        Ok(p) => std::path::PathBuf::from(p),
+        Err(_) => std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+            .join("..")
+            .join("BENCH_kernels.json"),
+    }
+}
+
+/// Minimal JSON support for the perf-trajectory file (`BENCH_kernels.json`).
+/// The offline dependency set has no serde; this is a small hand-rolled
+/// value type + parser + renderer, enough for nested objects of numbers
+/// and strings, with stable key order (insertion order is preserved).
+pub mod json {
+    use std::path::Path;
+
+    use anyhow::{bail, Context, Result};
+
+    #[derive(Debug, Clone, PartialEq)]
+    pub enum Val {
+        Null,
+        Bool(bool),
+        Num(f64),
+        Str(String),
+        Arr(Vec<Val>),
+        Obj(Vec<(String, Val)>),
+    }
+
+    impl Val {
+        pub fn num(x: f64) -> Val {
+            Val::Num(x)
+        }
+
+        pub fn str(s: &str) -> Val {
+            Val::Str(s.to_string())
+        }
+
+        pub fn obj(entries: Vec<(String, Val)>) -> Val {
+            Val::Obj(entries)
+        }
+
+        /// Object member lookup.
+        pub fn get(&self, key: &str) -> Option<&Val> {
+            match self {
+                Val::Obj(entries) => entries.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+                _ => None,
+            }
+        }
+
+        /// Insert-or-replace an object member (keeps first-insert order).
+        pub fn set(&mut self, key: &str, val: Val) {
+            if let Val::Obj(entries) = self {
+                if let Some(e) = entries.iter_mut().find(|(k, _)| k == key) {
+                    e.1 = val;
+                } else {
+                    entries.push((key.to_string(), val));
+                }
+            }
+        }
+
+        pub fn render(&self) -> String {
+            let mut s = String::new();
+            self.render_into(&mut s, 0);
+            s
+        }
+
+        fn render_into(&self, out: &mut String, indent: usize) {
+            match self {
+                Val::Null => out.push_str("null"),
+                Val::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+                Val::Num(x) => {
+                    if !x.is_finite() {
+                        out.push_str("null");
+                    } else if x.fract() == 0.0 && x.abs() < 1e15 {
+                        out.push_str(&format!("{:.0}", x));
+                    } else {
+                        out.push_str(&format!("{}", x));
+                    }
+                }
+                Val::Str(s) => render_str(s, out),
+                Val::Arr(items) => {
+                    if items.is_empty() {
+                        out.push_str("[]");
+                        return;
+                    }
+                    out.push('[');
+                    for (i, v) in items.iter().enumerate() {
+                        if i > 0 {
+                            out.push(',');
+                        }
+                        out.push('\n');
+                        out.push_str(&"  ".repeat(indent + 1));
+                        v.render_into(out, indent + 1);
+                    }
+                    out.push('\n');
+                    out.push_str(&"  ".repeat(indent));
+                    out.push(']');
+                }
+                Val::Obj(entries) => {
+                    if entries.is_empty() {
+                        out.push_str("{}");
+                        return;
+                    }
+                    out.push('{');
+                    for (i, (k, v)) in entries.iter().enumerate() {
+                        if i > 0 {
+                            out.push(',');
+                        }
+                        out.push('\n');
+                        out.push_str(&"  ".repeat(indent + 1));
+                        render_str(k, out);
+                        out.push_str(": ");
+                        v.render_into(out, indent + 1);
+                    }
+                    out.push('\n');
+                    out.push_str(&"  ".repeat(indent));
+                    out.push('}');
+                }
+            }
+        }
+    }
+
+    fn render_str(s: &str, out: &mut String) {
+        out.push('"');
+        for c in s.chars() {
+            match c {
+                '"' => out.push_str("\\\""),
+                '\\' => out.push_str("\\\\"),
+                '\n' => out.push_str("\\n"),
+                '\t' => out.push_str("\\t"),
+                '\r' => out.push_str("\\r"),
+                c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+                c => out.push(c),
+            }
+        }
+        out.push('"');
+    }
+
+    pub fn parse(s: &str) -> Result<Val> {
+        let b: Vec<char> = s.chars().collect();
+        let mut i = 0usize;
+        let v = parse_val(&b, &mut i)?;
+        skip_ws(&b, &mut i);
+        if i != b.len() {
+            bail!("trailing characters at offset {i}");
+        }
+        Ok(v)
+    }
+
+    fn skip_ws(b: &[char], i: &mut usize) {
+        while *i < b.len() && b[*i].is_whitespace() {
+            *i += 1;
+        }
+    }
+
+    fn expect(b: &[char], i: &mut usize, c: char) -> Result<()> {
+        skip_ws(b, i);
+        if *i < b.len() && b[*i] == c {
+            *i += 1;
+            Ok(())
+        } else {
+            bail!("expected {c:?} at offset {}", *i)
+        }
+    }
+
+    fn parse_val(b: &[char], i: &mut usize) -> Result<Val> {
+        skip_ws(b, i);
+        match b.get(*i) {
+            None => bail!("unexpected end of input"),
+            Some('{') => {
+                *i += 1;
+                let mut entries = Vec::new();
+                skip_ws(b, i);
+                if b.get(*i) == Some(&'}') {
+                    *i += 1;
+                    return Ok(Val::Obj(entries));
+                }
+                loop {
+                    skip_ws(b, i);
+                    let key = parse_string(b, i)?;
+                    expect(b, i, ':')?;
+                    let v = parse_val(b, i)?;
+                    entries.push((key, v));
+                    skip_ws(b, i);
+                    match b.get(*i) {
+                        Some(',') => *i += 1,
+                        Some('}') => {
+                            *i += 1;
+                            return Ok(Val::Obj(entries));
+                        }
+                        _ => bail!("expected ',' or '}}' at offset {}", *i),
+                    }
+                }
+            }
+            Some('[') => {
+                *i += 1;
+                let mut items = Vec::new();
+                skip_ws(b, i);
+                if b.get(*i) == Some(&']') {
+                    *i += 1;
+                    return Ok(Val::Arr(items));
+                }
+                loop {
+                    items.push(parse_val(b, i)?);
+                    skip_ws(b, i);
+                    match b.get(*i) {
+                        Some(',') => *i += 1,
+                        Some(']') => {
+                            *i += 1;
+                            return Ok(Val::Arr(items));
+                        }
+                        _ => bail!("expected ',' or ']' at offset {}", *i),
+                    }
+                }
+            }
+            Some('"') => Ok(Val::Str(parse_string(b, i)?)),
+            Some('t') if matches(b, *i, "true") => {
+                *i += 4;
+                Ok(Val::Bool(true))
+            }
+            Some('f') if matches(b, *i, "false") => {
+                *i += 5;
+                Ok(Val::Bool(false))
+            }
+            Some('n') if matches(b, *i, "null") => {
+                *i += 4;
+                Ok(Val::Null)
+            }
+            Some(_) => {
+                let start = *i;
+                while *i < b.len()
+                    && (b[*i].is_ascii_digit()
+                        || matches!(b[*i], '-' | '+' | '.' | 'e' | 'E'))
+                {
+                    *i += 1;
+                }
+                if start == *i {
+                    bail!("unexpected character at offset {start}");
+                }
+                let tok: String = b[start..*i].iter().collect();
+                Ok(Val::Num(tok.parse::<f64>().context("bad number")?))
+            }
+        }
+    }
+
+    fn matches(b: &[char], i: usize, word: &str) -> bool {
+        word.chars()
+            .enumerate()
+            .all(|(k, c)| b.get(i + k) == Some(&c))
+    }
+
+    fn parse_string(b: &[char], i: &mut usize) -> Result<String> {
+        skip_ws(b, i);
+        if b.get(*i) != Some(&'"') {
+            bail!("expected string at offset {}", *i);
+        }
+        *i += 1;
+        let mut s = String::new();
+        while let Some(&c) = b.get(*i) {
+            *i += 1;
+            match c {
+                '"' => return Ok(s),
+                '\\' => {
+                    let e = *b.get(*i).context("dangling escape")?;
+                    *i += 1;
+                    match e {
+                        '"' => s.push('"'),
+                        '\\' => s.push('\\'),
+                        '/' => s.push('/'),
+                        'n' => s.push('\n'),
+                        't' => s.push('\t'),
+                        'r' => s.push('\r'),
+                        'b' => s.push('\u{8}'),
+                        'f' => s.push('\u{c}'),
+                        'u' => {
+                            if *i + 4 > b.len() {
+                                bail!("truncated \\u escape");
+                            }
+                            let hex: String = b[*i..*i + 4].iter().collect();
+                            *i += 4;
+                            let cp = u32::from_str_radix(&hex, 16).context("bad \\u escape")?;
+                            s.push(char::from_u32(cp).unwrap_or('\u{fffd}'));
+                        }
+                        other => bail!("unknown escape \\{other}"),
+                    }
+                }
+                c => s.push(c),
+            }
+        }
+        bail!("unterminated string")
+    }
+
+    /// Read `path` (an object; created if missing), insert-or-replace the
+    /// top-level member `section` with `entries`, write it back. Every
+    /// `--json` bench run updates only its own section, so the perf
+    /// trajectory accumulates across benches without clobbering. An
+    /// existing file that fails to parse (or whose root is not an object)
+    /// is an **error**, never silently overwritten — a truncated or
+    /// hand-mangled trajectory must be fixed or deleted explicitly.
+    pub fn merge_section(path: &Path, section: &str, entries: Val) -> Result<()> {
+        let mut root = match std::fs::read_to_string(path) {
+            Ok(body) => match parse(&body) {
+                Ok(v @ Val::Obj(_)) => v,
+                Ok(_) => bail!(
+                    "{}: root is not a JSON object; refusing to overwrite",
+                    path.display()
+                ),
+                Err(e) => bail!(
+                    "{}: unparsable ({e}); fix or delete it before re-running with --json",
+                    path.display()
+                ),
+            },
+            Err(_) => Val::Obj(Vec::new()),
+        };
+        root.set(section, entries);
+        let body = root.render() + "\n";
+        std::fs::write(path, body).with_context(|| format!("write {}", path.display()))?;
+        Ok(())
+    }
+
+    #[cfg(test)]
+    mod tests {
+        use super::*;
+
+        #[test]
+        fn roundtrip_nested_object() {
+            let src = r#"{"a": 1.5, "b": {"c": [1, 2, "x\n"], "d": true}, "e": null}"#;
+            let v = parse(src).unwrap();
+            assert_eq!(v.get("a"), Some(&Val::Num(1.5)));
+            let reparsed = parse(&v.render()).unwrap();
+            assert_eq!(v, reparsed);
+        }
+
+        #[test]
+        fn set_replaces_and_appends() {
+            let mut v = Val::obj(vec![("x".into(), Val::num(1.0))]);
+            v.set("x", Val::num(2.0));
+            v.set("y", Val::str("hi"));
+            assert_eq!(v.get("x"), Some(&Val::Num(2.0)));
+            assert_eq!(v.get("y"), Some(&Val::Str("hi".into())));
+        }
+
+        #[test]
+        fn merge_section_accumulates_across_writes() {
+            let dir = std::env::temp_dir().join("rxnspec_json_test");
+            std::fs::create_dir_all(&dir).unwrap();
+            let p = dir.join("bench.json");
+            let _ = std::fs::remove_file(&p);
+            merge_section(&p, "a", Val::obj(vec![("k".into(), Val::num(1.0))])).unwrap();
+            merge_section(&p, "b", Val::obj(vec![("k".into(), Val::num(2.0))])).unwrap();
+            merge_section(&p, "a", Val::obj(vec![("k".into(), Val::num(3.0))])).unwrap();
+            let root = parse(&std::fs::read_to_string(&p).unwrap()).unwrap();
+            assert_eq!(root.get("a").unwrap().get("k"), Some(&Val::Num(3.0)));
+            assert_eq!(root.get("b").unwrap().get("k"), Some(&Val::Num(2.0)));
+        }
+
+        #[test]
+        fn merge_section_refuses_to_clobber_broken_files() {
+            let dir = std::env::temp_dir().join("rxnspec_json_test");
+            std::fs::create_dir_all(&dir).unwrap();
+            let p = dir.join("broken.json");
+            std::fs::write(&p, "{\"a\": 1,}").unwrap(); // trailing comma
+            let before = std::fs::read_to_string(&p).unwrap();
+            assert!(merge_section(&p, "b", Val::obj(vec![])).is_err());
+            assert_eq!(std::fs::read_to_string(&p).unwrap(), before);
+
+            let p2 = dir.join("nonobj.json");
+            std::fs::write(&p2, "[1, 2]").unwrap();
+            assert!(merge_section(&p2, "b", Val::obj(vec![])).is_err());
+        }
+
+        #[test]
+        fn numbers_render_cleanly() {
+            assert_eq!(Val::num(3.0).render(), "3");
+            assert_eq!(Val::num(0.25).render(), "0.25");
+            assert_eq!(Val::num(f64::NAN).render(), "null");
+        }
+
+        #[test]
+        fn rejects_malformed_input() {
+            assert!(parse("{").is_err());
+            assert!(parse(r#"{"a" 1}"#).is_err());
+            assert!(parse("[1, 2,]").is_err());
+            assert!(parse("nope").is_err());
+        }
+    }
 }
 
 #[cfg(test)]

@@ -126,6 +126,13 @@ pub struct Metrics {
     /// copies vs corpus-learned `cache::DraftStore` windows.
     pub draft_accepted_query: AtomicU64,
     pub draft_accepted_corpus: AtomicU64,
+    /// Kernel-layer session accounting: `extend` ticks and the rows
+    /// packed into them (`packed_rows / extend_calls` = mean fused batch
+    /// per tick), plus the high-water mark of per-row retained log-prob
+    /// positions.
+    pub extend_calls: AtomicU64,
+    pub packed_rows: AtomicU64,
+    pub lp_high_water: AtomicU64,
 }
 
 impl Metrics {
@@ -157,6 +164,14 @@ impl Metrics {
             self.cache_evictions.load(Ordering::Relaxed),
             self.draft_accepted_query.load(Ordering::Relaxed),
             self.draft_accepted_corpus.load(Ordering::Relaxed),
+        ));
+        let ec = self.extend_calls.load(Ordering::Relaxed);
+        let pr = self.packed_rows.load(Ordering::Relaxed);
+        s.push_str(&format!(
+            "kernel: extend_calls={ec} packed_rows={pr} packed_rows_per_call={:.2} \
+             lp_high_water={}\n",
+            if ec == 0 { 0.0 } else { pr as f64 / ec as f64 },
+            self.lp_high_water.load(Ordering::Relaxed),
         ));
         s.push_str(&self.request_latency.summary("request_latency"));
         s.push('\n');

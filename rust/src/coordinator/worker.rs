@@ -314,6 +314,13 @@ impl<'a> Run<'a> {
         }
     }
 
+    fn session_stats(&self) -> crate::decoding::SessionStats {
+        match self {
+            Run::Greedy(r) => r.session_stats(),
+            Run::Spec(r) => r.session_stats(),
+        }
+    }
+
     fn hyp_and_acceptance(&self, lane: usize) -> (crate::decoding::Hypothesis, Acceptance) {
         match self {
             Run::Greedy(r) => {
@@ -518,6 +525,19 @@ fn stream_batch<B: Backend>(
             metrics
                 .decoder_calls
                 .fetch_add(run.calls() as u64, Ordering::Relaxed);
+            // Kernel-layer accounting: every step() was one fused extend
+            // over all live lanes, so rows-per-call here is the packed
+            // batch size the coordinator sustained.
+            let s = run.session_stats();
+            metrics
+                .extend_calls
+                .fetch_add(s.extend_calls as u64, Ordering::Relaxed);
+            metrics
+                .packed_rows
+                .fetch_add(s.packed_rows as u64, Ordering::Relaxed);
+            metrics
+                .lp_high_water
+                .fetch_max(s.lp_high_water as u64, Ordering::Relaxed);
             return;
         }
     }

@@ -275,6 +275,14 @@ pub struct SessionStats {
     /// Token positions whose per-layer K/V were reused from the cache
     /// (a stateless backend would have recomputed them).
     pub tokens_reused: usize,
+    /// Rows submitted across all `extend` calls. For backends with a
+    /// cross-row batched extend (the reference transformer) every call's
+    /// rows share one packed layer pass, so `packed_rows / extend_calls`
+    /// is the mean packed-batch size per tick.
+    pub packed_rows: usize,
+    /// High-water mark of per-row retained log-prob positions (the
+    /// bounded `RowCache::lp` suffix; 0 for backends without one).
+    pub lp_high_water: usize,
 }
 
 /// One live incremental decode: per-row token state plus whatever cache

@@ -118,6 +118,7 @@ impl<B: Backend> DecoderSession for StatelessSession<'_, B> {
             });
         }
         self.stats.extend_calls += 1;
+        self.stats.packed_rows += deltas.len();
         for cr in &call_rows {
             // Full recompute: every position of every submitted row.
             self.stats.tokens_computed += cr.tokens.len();

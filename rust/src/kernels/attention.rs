@@ -1,0 +1,378 @@
+//! Head-blocked scaled-dot-product attention over contiguous per-head
+//! K/V panels.
+//!
+//! The reference backend's old `attn_core` strided through interleaved
+//! `[len, d_model]` K/V buffers, touching `d_model`-spaced slivers per
+//! head. [`KvPanels`] instead stores one contiguous `[len, d_head]`
+//! panel per head, so the score loop and the context accumulation both
+//! stream dense memory. Panels also make the KV cache's `append` /
+//! `truncate` head-local and cheap.
+//!
+//! Determinism: per `(head, query)` the key scores, the running max, the
+//! exp-sum and the value accumulation all run `j = 0..len` ascending —
+//! identical for batched, single-row, and head-threaded calls.
+
+/// Minimum `nq·nk·d_head·n_heads` product before head-partitioned
+/// threading pays for scoped spawns.
+const PAR_MIN_WORK: usize = 1 << 14;
+
+/// Per-layer attention K/V of one row, stored as contiguous per-head
+/// panels (`[len, d_head]` each).
+#[derive(Debug, Clone)]
+pub struct KvPanels {
+    d_head: usize,
+    len: usize,
+    k: Vec<Vec<f32>>,
+    v: Vec<Vec<f32>>,
+}
+
+impl KvPanels {
+    pub fn new(n_heads: usize, d_head: usize) -> KvPanels {
+        KvPanels {
+            d_head,
+            len: 0,
+            k: vec![Vec::new(); n_heads],
+            v: vec![Vec::new(); n_heads],
+        }
+    }
+
+    pub fn n_heads(&self) -> usize {
+        self.k.len()
+    }
+
+    pub fn d_head(&self) -> usize {
+        self.d_head
+    }
+
+    /// Number of cached positions.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn k_panel(&self, h: usize) -> &[f32] {
+        &self.k[h]
+    }
+
+    pub fn v_panel(&self, h: usize) -> &[f32] {
+        &self.v[h]
+    }
+
+    /// Append `m` positions whose K and V rows live head-interleaved
+    /// (`[m, n_heads·d_head]`) inside a wider row-major matrix: row `r`'s
+    /// K starts at `data[r·stride + k_off]`, its V at
+    /// `data[r·stride + v_off]`. This is how the fused-QKV GEMM output
+    /// (`stride = 3·d_model`) lands in the cache without an intermediate
+    /// copy.
+    pub fn append_strided(
+        &mut self,
+        data: &[f32],
+        m: usize,
+        stride: usize,
+        k_off: usize,
+        v_off: usize,
+    ) {
+        let dh = self.d_head;
+        for (h, (kp, vp)) in self.k.iter_mut().zip(self.v.iter_mut()).enumerate() {
+            for r in 0..m {
+                let base = r * stride + h * dh;
+                kp.extend_from_slice(&data[base + k_off..base + k_off + dh]);
+                vp.extend_from_slice(&data[base + v_off..base + v_off + dh]);
+            }
+        }
+        self.len += m;
+    }
+
+    /// Append from separate head-interleaved `[m, d_model]` K and V
+    /// matrices (the cross-attention memory projection).
+    pub fn append(&mut self, k_rows: &[f32], v_rows: &[f32], m: usize) {
+        let d_model = self.d_head * self.k.len();
+        let dh = self.d_head;
+        debug_assert!(k_rows.len() >= m * d_model && v_rows.len() >= m * d_model);
+        for (h, (kp, vp)) in self.k.iter_mut().zip(self.v.iter_mut()).enumerate() {
+            for r in 0..m {
+                let base = r * d_model + h * dh;
+                kp.extend_from_slice(&k_rows[base..base + dh]);
+                vp.extend_from_slice(&v_rows[base..base + dh]);
+            }
+        }
+        self.len += m;
+    }
+
+    /// Roll the cache back to its first `len` positions.
+    pub fn truncate(&mut self, len: usize) {
+        if len >= self.len {
+            return;
+        }
+        let dh = self.d_head;
+        for (kp, vp) in self.k.iter_mut().zip(self.v.iter_mut()) {
+            kp.truncate(len * dh);
+            vp.truncate(len * dh);
+        }
+        self.len = len;
+    }
+}
+
+/// One head's attention: queries `i` live head-interleaved in `q` (row
+/// `i`, head `h` at `q[q_base + i·q_stride + h·d_head]`); context rows
+/// land at `out[i·out_stride + out_base]`. `causal_offset = Some(p)`
+/// lets query `i` attend keys `j ≤ p + i` (global positions);
+/// `None` attends every cached key (cross-attention).
+#[allow(clippy::too_many_arguments)]
+fn attn_one_head(
+    q: &[f32],
+    q_stride: usize,
+    q_base: usize,
+    nq: usize,
+    kv: &KvPanels,
+    h: usize,
+    causal_offset: Option<usize>,
+    out: &mut [f32],
+    out_stride: usize,
+    out_base: usize,
+) {
+    let dh = kv.d_head;
+    let nk = kv.len;
+    let scale = 1.0 / (dh as f32).sqrt();
+    let kp = kv.k_panel(h);
+    let vp = kv.v_panel(h);
+    let mut scores = vec![0f32; nk];
+    for i in 0..nq {
+        let qo = q_base + i * q_stride + h * dh;
+        let qi = &q[qo..qo + dh];
+        let lim = match causal_offset {
+            Some(p) => (p + i + 1).min(nk),
+            None => nk,
+        };
+        let mut mx = f32::NEG_INFINITY;
+        for (j, s) in scores[..lim].iter_mut().enumerate() {
+            let kj = &kp[j * dh..j * dh + dh];
+            let mut acc = 0f32;
+            for (a, b) in qi.iter().zip(kj) {
+                acc += a * b;
+            }
+            let sv = acc * scale;
+            *s = sv;
+            if sv > mx {
+                mx = sv;
+            }
+        }
+        let mut z = 0f32;
+        for s in scores[..lim].iter_mut() {
+            *s = (*s - mx).exp();
+            z += *s;
+        }
+        let inv = 1.0 / z;
+        let co = i * out_stride + out_base;
+        let ci = &mut out[co..co + dh];
+        for c in ci.iter_mut() {
+            *c = 0.0;
+        }
+        for (j, &w0) in scores[..lim].iter().enumerate() {
+            let w = w0 * inv;
+            if w == 0.0 {
+                continue;
+            }
+            let vj = &vp[j * dh..j * dh + dh];
+            for (c, &vv) in ci.iter_mut().zip(vj) {
+                *c += w * vv;
+            }
+        }
+    }
+}
+
+/// Head-blocked attention of `nq` interleaved queries against panel K/V;
+/// context written head-interleaved into `ctx` (`[nq, n_heads·d_head]`).
+/// See [`attn_one_head`] for the query layout and masking semantics.
+pub fn attn_panels(
+    q: &[f32],
+    q_stride: usize,
+    q_base: usize,
+    nq: usize,
+    kv: &KvPanels,
+    causal_offset: Option<usize>,
+    ctx: &mut [f32],
+) {
+    let d_model = kv.n_heads() * kv.d_head();
+    for h in 0..kv.n_heads() {
+        attn_one_head(
+            q,
+            q_stride,
+            q_base,
+            nq,
+            kv,
+            h,
+            causal_offset,
+            ctx,
+            d_model,
+            h * kv.d_head(),
+        );
+    }
+}
+
+/// [`attn_panels`] with the heads partitioned across up to `threads`
+/// scoped threads (each head computed into its own scratch panel, merged
+/// serially) — bit-identical to the serial call, since per-head
+/// arithmetic is untouched.
+#[allow(clippy::too_many_arguments)]
+pub fn attn_panels_threaded(
+    q: &[f32],
+    q_stride: usize,
+    q_base: usize,
+    nq: usize,
+    kv: &KvPanels,
+    causal_offset: Option<usize>,
+    ctx: &mut [f32],
+    threads: usize,
+) {
+    let nh = kv.n_heads();
+    let dh = kv.d_head();
+    let work = nq * kv.len() * dh * nh;
+    if threads <= 1 || nh <= 1 || work < PAR_MIN_WORK {
+        attn_panels(q, q_stride, q_base, nq, kv, causal_offset, ctx);
+        return;
+    }
+    let d_model = nh * dh;
+    let per = nh.div_ceil(threads.min(nh));
+    let mut scratch: Vec<Vec<f32>> = (0..nh).map(|_| vec![0f32; nq * dh]).collect();
+    std::thread::scope(|s| {
+        for (ci, bufs) in scratch.chunks_mut(per).enumerate() {
+            let h0 = ci * per;
+            s.spawn(move || {
+                for (k, buf) in bufs.iter_mut().enumerate() {
+                    attn_one_head(q, q_stride, q_base, nq, kv, h0 + k, causal_offset, buf, dh, 0);
+                }
+            });
+        }
+    });
+    for (h, buf) in scratch.iter().enumerate() {
+        for i in 0..nq {
+            let co = i * d_model + h * dh;
+            ctx[co..co + dh].copy_from_slice(&buf[i * dh..(i + 1) * dh]);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn rand_vec(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| (rng.f64() as f32 - 0.5) * 2.0).collect()
+    }
+
+    fn filled_panels(rng: &mut Rng, nh: usize, dh: usize, len: usize) -> KvPanels {
+        let d = nh * dh;
+        let mut kv = KvPanels::new(nh, dh);
+        let k = rand_vec(rng, len * d);
+        let v = rand_vec(rng, len * d);
+        kv.append(&k, &v, len);
+        kv
+    }
+
+    #[test]
+    fn append_strided_matches_plain_append() {
+        let mut rng = Rng::new(1);
+        let (nh, dh, m) = (3usize, 4usize, 5usize);
+        let d = nh * dh;
+        // A fused-QKV-shaped matrix [m, 3d]: K at offset d, V at 2d.
+        let fused = rand_vec(&mut rng, m * 3 * d);
+        let mut a = KvPanels::new(nh, dh);
+        a.append_strided(&fused, m, 3 * d, d, 2 * d);
+        let mut k_rows = vec![0f32; m * d];
+        let mut v_rows = vec![0f32; m * d];
+        for r in 0..m {
+            k_rows[r * d..(r + 1) * d].copy_from_slice(&fused[r * 3 * d + d..r * 3 * d + 2 * d]);
+            v_rows[r * d..(r + 1) * d]
+                .copy_from_slice(&fused[r * 3 * d + 2 * d..r * 3 * d + 3 * d]);
+        }
+        let mut b = KvPanels::new(nh, dh);
+        b.append(&k_rows, &v_rows, m);
+        assert_eq!(a.len(), b.len());
+        for h in 0..nh {
+            assert_eq!(a.k_panel(h), b.k_panel(h));
+            assert_eq!(a.v_panel(h), b.v_panel(h));
+        }
+    }
+
+    #[test]
+    fn truncate_rolls_back_appends() {
+        let mut rng = Rng::new(2);
+        let (nh, dh) = (2usize, 3usize);
+        let d = nh * dh;
+        let k1 = rand_vec(&mut rng, 4 * d);
+        let v1 = rand_vec(&mut rng, 4 * d);
+        let mut kv = KvPanels::new(nh, dh);
+        kv.append(&k1, &v1, 4);
+        let snap_k: Vec<Vec<f32>> = (0..nh).map(|h| kv.k_panel(h)[..2 * dh].to_vec()).collect();
+        kv.truncate(2);
+        assert_eq!(kv.len(), 2);
+        for h in 0..nh {
+            assert_eq!(kv.k_panel(h), snap_k[h].as_slice());
+        }
+        // Truncate past the end is a no-op.
+        kv.truncate(10);
+        assert_eq!(kv.len(), 2);
+    }
+
+    #[test]
+    fn causal_mask_ignores_future_keys() {
+        // With causal_offset = Some(p), query i's context must be
+        // independent of keys beyond p + i.
+        let mut rng = Rng::new(3);
+        let (nh, dh, nk) = (2usize, 4usize, 6usize);
+        let d = nh * dh;
+        let kv_full = filled_panels(&mut rng, nh, dh, nk);
+        let mut kv_cut = kv_full.clone();
+        kv_cut.truncate(3); // keys 0..3 = everything query 0 (p=2) may see
+        let q = rand_vec(&mut rng, d);
+        let mut ctx_full = vec![0f32; d];
+        let mut ctx_cut = vec![0f32; d];
+        attn_panels(&q, d, 0, 1, &kv_full, Some(2), &mut ctx_full);
+        attn_panels(&q, d, 0, 1, &kv_cut, Some(2), &mut ctx_cut);
+        assert_eq!(ctx_full, ctx_cut);
+    }
+
+    #[test]
+    fn threaded_attention_is_bit_identical_to_serial() {
+        let mut rng = Rng::new(4);
+        // Crosses the PAR_MIN_WORK gate: 8·64·8·4 = 16384.
+        let (nh, dh, nk, nq) = (4usize, 8usize, 64usize, 8usize);
+        let d = nh * dh;
+        let kv = filled_panels(&mut rng, nh, dh, nk);
+        let q = rand_vec(&mut rng, nq * d);
+        for mask in [None, Some(nk - nq)] {
+            let mut serial = vec![0f32; nq * d];
+            attn_panels(&q, d, 0, nq, &kv, mask, &mut serial);
+            for threads in [2usize, 3, 4, 9] {
+                let mut par = vec![0f32; nq * d];
+                attn_panels_threaded(&q, d, 0, nq, &kv, mask, &mut par, threads);
+                assert_eq!(serial, par, "threads={threads} mask={mask:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn strided_queries_match_contiguous_queries() {
+        // Reading queries out of a wider matrix (the fused-QKV output)
+        // must equal reading them from a dense [nq, d] copy.
+        let mut rng = Rng::new(5);
+        let (nh, dh, nk, nq) = (2usize, 4usize, 5usize, 3usize);
+        let d = nh * dh;
+        let kv = filled_panels(&mut rng, nh, dh, nk);
+        let wide = rand_vec(&mut rng, nq * 3 * d);
+        let mut dense = vec![0f32; nq * d];
+        for r in 0..nq {
+            dense[r * d..(r + 1) * d].copy_from_slice(&wide[r * 3 * d..r * 3 * d + d]);
+        }
+        let mut ctx_wide = vec![0f32; nq * d];
+        let mut ctx_dense = vec![0f32; nq * d];
+        attn_panels(&wide, 3 * d, 0, nq, &kv, Some(1), &mut ctx_wide);
+        attn_panels(&dense, d, 0, nq, &kv, Some(1), &mut ctx_dense);
+        assert_eq!(ctx_wide, ctx_dense);
+    }
+}

@@ -1,0 +1,42 @@
+//! The compute-kernel layer: every dense-algebra operation of the
+//! pure-Rust reference backend, packaged as reusable, deterministic,
+//! optionally-threaded kernels.
+//!
+//! Before this layer existed, `model::reference` ran naive scalar triple
+//! loops per call. The kernels here keep the *same arithmetic per output
+//! element* while restructuring the work for throughput:
+//!
+//! * [`PackedLinear`] — weights are re-laid-out **once at load time**
+//!   into transposed, tile-aligned column panels feeding a blocked,
+//!   register-tiled GEMM with the bias fused into the accumulators
+//!   (`gemm` module). Several projections over the same input can be
+//!   packed into one fused matrix (`pack_fused`, used for QKV).
+//! * [`KvPanels`] / [`attn_panels`] — attention K/V held as contiguous
+//!   per-head panels so each head's score/context loops stream over
+//!   dense memory (`attention` module).
+//! * [`threads`] — an opt-in scoped-thread partitioner (rows for GEMM,
+//!   heads for attention) sized from `std::thread::available_parallelism`
+//!   via `RXNSPEC_THREADS`; no new dependencies, no persistent pool.
+//!
+//! # Determinism contract
+//!
+//! Every kernel computes each output element with a **fixed reduction
+//! order** that does not depend on tiling, row blocking, thread count,
+//! or which other rows share the batch:
+//!
+//! * GEMM: `bias[o]` then `k = 0..din` ascending, for every `(row, o)`.
+//! * Attention: per `(head, query)`, key scores, the running max, the
+//!   exp-sum and the value accumulation all run `j = 0..len` ascending.
+//!
+//! Consequently a batched call is bit-identical to the equivalent
+//! sequence of single-row calls, and a threaded call is bit-identical to
+//! the single-threaded one — the property the session-parity and
+//! kernel-parity test suites hold as hard invariants.
+
+pub mod attention;
+pub mod gemm;
+pub mod threads;
+
+pub use attention::{attn_panels, attn_panels_threaded, KvPanels};
+pub use gemm::PackedLinear;
+pub use threads::default_threads;

@@ -1,0 +1,80 @@
+//! Opt-in scoped-thread partitioning for the kernel layer.
+//!
+//! Threading is **off by default** (`RXNSPEC_THREADS` unset or `1`);
+//! `RXNSPEC_THREADS=auto` sizes the partitioner from
+//! `std::thread::available_parallelism`, any other value is an explicit
+//! thread count. Kernels partition work into contiguous chunks with
+//! disjoint outputs, so the reduction order of every output element is
+//! unchanged and threaded results are bit-identical to single-threaded
+//! ones (see the module docs of [`crate::kernels`]).
+//!
+//! There is no persistent pool: callers gate on a minimum work size so a
+//! scoped spawn only happens when it pays for itself.
+
+use std::sync::OnceLock;
+
+/// Resolve the process-wide default kernel thread count once.
+///
+/// * unset / unparsable / `0` / `1` → `1` (threading off),
+/// * `auto` → `std::thread::available_parallelism()`,
+/// * `N` → `N`.
+pub fn default_threads() -> usize {
+    static N: OnceLock<usize> = OnceLock::new();
+    *N.get_or_init(|| match std::env::var("RXNSPEC_THREADS") {
+        Ok(v) if v.trim() == "auto" => std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1),
+        Ok(v) => v.trim().parse::<usize>().unwrap_or(1).max(1),
+        Err(_) => 1,
+    })
+}
+
+/// Run `f` over every item, the slice split into at most `threads`
+/// contiguous chunks, each chunk on its own scoped thread. Items are
+/// mutated in place; chunks are disjoint, so this is deterministic for
+/// any per-item-independent `f`.
+pub fn for_each_partitioned<T: Send, F: Fn(&mut T) + Sync>(items: &mut [T], threads: usize, f: F) {
+    let n = items.len();
+    if threads <= 1 || n <= 1 {
+        for it in items.iter_mut() {
+            f(it);
+        }
+        return;
+    }
+    let chunk = n.div_ceil(threads.min(n));
+    std::thread::scope(|s| {
+        for part in items.chunks_mut(chunk) {
+            let fref = &f;
+            s.spawn(move || {
+                for it in part.iter_mut() {
+                    fref(it);
+                }
+            });
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn partitioned_map_touches_every_item_once() {
+        let mut xs: Vec<u64> = (0..37).collect();
+        for_each_partitioned(&mut xs, 4, |x| *x += 1000);
+        for (i, &x) in xs.iter().enumerate() {
+            assert_eq!(x, 1000 + i as u64);
+        }
+        // Degenerate partitions.
+        let mut ys: Vec<u64> = vec![7];
+        for_each_partitioned(&mut ys, 8, |y| *y *= 2);
+        assert_eq!(ys, vec![14]);
+        let mut empty: Vec<u64> = Vec::new();
+        for_each_partitioned(&mut empty, 3, |_| unreachable!());
+    }
+
+    #[test]
+    fn default_threads_is_at_least_one() {
+        assert!(default_threads() >= 1);
+    }
+}

@@ -3,5 +3,5 @@
 pub mod reference;
 pub mod weights;
 
-pub use reference::{Config, RustBackend};
+pub use reference::{CachedSession, Config, RustBackend};
 pub use weights::{load_config, Tensor, Weights};

@@ -13,8 +13,16 @@
 //! agreement on all but pathological ties; `rust/tests/backend_parity.rs`
 //! quantifies it.
 //!
-//! The compute here is straightforward scalar code: the PJRT path is the
-//! performance story, this one is the oracle.
+//! All dense math runs on the compute-kernel layer (`crate::kernels`):
+//! weights are pre-packed at load time into tile-aligned GEMM panels
+//! (self-attention QKV fused into one packed matrix), attention K/V live
+//! as contiguous per-head panels, and `CachedSession::extend` packs every
+//! row's appended window into **one** activation matrix per layer — one
+//! packed pass per layer per batching tick instead of one per row. The
+//! kernels' fixed-reduction-order contract makes stateless decode,
+//! single-row extend, batched extend and threaded execution all
+//! bit-identical (`rust/tests/session_parity.rs`,
+//! `rust/tests/kernel_parity.rs`).
 
 use std::path::Path;
 use std::sync::Arc;
@@ -24,6 +32,7 @@ use anyhow::Result;
 use crate::decoding::{
     Backend, DecoderRow, DecoderSession, LogProbs, Memory, ModelDims, SessionStats,
 };
+use crate::kernels::{attn_panels_threaded, default_threads, KvPanels, PackedLinear};
 use crate::model::weights::{load_config, Tensor, Weights};
 
 /// Model hyper-parameters (matches `ModelConfig` in model.py).
@@ -64,33 +73,13 @@ impl Config {
     }
 }
 
-const NEG_INF: f32 = -1e9;
+/// Default per-row log-prob retention (positions) when `RXNSPEC_LP_RETAIN`
+/// is unset — comfortably above any draft window the decoders submit.
+const DEFAULT_LP_RETAIN: usize = 64;
 
 // ---------------------------------------------------------------------------
-// Small dense-algebra helpers (row-major [rows, cols] in flat Vec<f32>)
+// Small per-row helpers (row-major [rows, cols] in flat Vec<f32>)
 // ---------------------------------------------------------------------------
-
-/// y[r,:] += x[r,:] @ w + b for all rows; x is [n, din], w [din, dout].
-fn linear(x: &[f32], n: usize, w: &Tensor, b: &Tensor) -> Vec<f32> {
-    let (din, dout) = (w.dims[0], w.dims[1]);
-    debug_assert_eq!(x.len(), n * din);
-    let mut y = vec![0f32; n * dout];
-    for r in 0..n {
-        let xr = &x[r * din..(r + 1) * din];
-        let yr = &mut y[r * dout..(r + 1) * dout];
-        yr.copy_from_slice(&b.data);
-        for (i, &xv) in xr.iter().enumerate() {
-            if xv == 0.0 {
-                continue;
-            }
-            let wrow = &w.data[i * dout..(i + 1) * dout];
-            for (o, &wv) in yr.iter_mut().zip(wrow) {
-                *o += xv * wv;
-            }
-        }
-    }
-    y
-}
 
 fn layer_norm(x: &mut [f32], n: usize, d: usize, g: &Tensor, b: &Tensor) {
     for r in 0..n {
@@ -110,7 +99,8 @@ fn layer_normed(x: &[f32], n: usize, d: usize, g: &Tensor, b: &Tensor) -> Vec<f3
     y
 }
 
-/// Sinusoidal positional encoding row for one position id.
+/// Sinusoidal positional encoding row for one position id (the fallback
+/// for positions beyond the precomputed table; also builds the table).
 fn add_pe(row: &mut [f32], pos: i64, d: usize) {
     let half = d / 2;
     for i in 0..half {
@@ -119,82 +109,6 @@ fn add_pe(row: &mut [f32], pos: i64, d: usize) {
         row[i] += ang.sin();
         row[half + i] += ang.cos();
     }
-}
-
-/// Scaled-dot-product attention over already-projected q/k/v rows.
-/// `allow(i, j)` gates whether query i may attend key j (the
-/// additive-mask analogue). Factored out of [`mha`] so the KV-cached
-/// session path runs the *same arithmetic in the same order* against
-/// cached key/value buffers — bit-identical results are a tested
-/// invariant, not an accident.
-fn attn_core<F: Fn(usize, usize) -> bool>(
-    q: &[f32],
-    nq: usize,
-    k: &[f32],
-    v: &[f32],
-    nk: usize,
-    n_heads: usize,
-    d_model: usize,
-    allow: F,
-) -> Vec<f32> {
-    let dh = d_model / n_heads;
-    let scale = 1.0 / (dh as f32).sqrt();
-    let mut ctx = vec![0f32; nq * d_model];
-    let mut scores = vec![0f32; nk];
-    for h in 0..n_heads {
-        let off = h * dh;
-        for i in 0..nq {
-            let qi = &q[i * d_model + off..i * d_model + off + dh];
-            let mut mx = f32::NEG_INFINITY;
-            for j in 0..nk {
-                let s = if allow(i, j) {
-                    let kj = &k[j * d_model + off..j * d_model + off + dh];
-                    qi.iter().zip(kj).map(|(a, b)| a * b).sum::<f32>() * scale
-                } else {
-                    NEG_INF
-                };
-                scores[j] = s;
-                mx = mx.max(s);
-            }
-            let mut z = 0f32;
-            for s in scores[..nk].iter_mut() {
-                *s = (*s - mx).exp();
-                z += *s;
-            }
-            let inv = 1.0 / z;
-            let ci = &mut ctx[i * d_model + off..i * d_model + off + dh];
-            for j in 0..nk {
-                let w = scores[j] * inv;
-                if w == 0.0 {
-                    continue;
-                }
-                let vj = &v[j * d_model + off..j * d_model + off + dh];
-                for (c, &vv) in ci.iter_mut().zip(vj) {
-                    *c += w * vv;
-                }
-            }
-        }
-    }
-    ctx
-}
-
-/// Multi-head attention: q rows attend to kv rows. `allow(i, j)` gates
-/// whether query i may attend key j (the additive-mask analogue).
-fn mha<F: Fn(usize, usize) -> bool>(
-    xq: &[f32],
-    nq: usize,
-    xkv: &[f32],
-    nk: usize,
-    p: &AttnParams,
-    n_heads: usize,
-    d_model: usize,
-    allow: F,
-) -> Vec<f32> {
-    let q = linear(xq, nq, &p.wq, &p.bq);
-    let k = linear(xkv, nk, &p.wk, &p.bk);
-    let v = linear(xkv, nk, &p.wv, &p.bv);
-    let ctx = attn_core(&q, nq, &k, &v, nk, n_heads, d_model, allow);
-    linear(&ctx, nq, &p.wo, &p.bo)
 }
 
 fn add_assign(x: &mut [f32], y: &[f32]) {
@@ -211,26 +125,39 @@ fn relu(x: &mut [f32]) {
     }
 }
 
+/// log-softmax of one logits row into `out` (same length).
+fn log_softmax_row_into(lrow: &[f32], out: &mut [f32]) {
+    let mx = lrow.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let z: f32 = lrow.iter().map(|&l| (l - mx).exp()).sum();
+    let lz = mx + z.ln();
+    for (o, &l) in out.iter_mut().zip(lrow) {
+        *o = l - lz;
+    }
+}
+
 // ---------------------------------------------------------------------------
-// Parameter bundles
+// Parameter bundles (packed at load time)
 // ---------------------------------------------------------------------------
 
-struct AttnParams {
-    wq: Tensor,
-    wk: Tensor,
-    wv: Tensor,
-    wo: Tensor,
-    bq: Tensor,
-    bk: Tensor,
-    bv: Tensor,
-    bo: Tensor,
+/// Self-attention: one fused packed GEMM over `wq|wk|wv` plus the output
+/// projection.
+struct SelfAttnParams {
+    qkv: PackedLinear,
+    wo: PackedLinear,
+}
+
+/// Cross-attention keeps separate projections: K/V run once per memory
+/// row per session, queries once per appended window.
+struct CrossAttnParams {
+    wq: PackedLinear,
+    wk: PackedLinear,
+    wv: PackedLinear,
+    wo: PackedLinear,
 }
 
 struct FfnParams {
-    w1: Tensor,
-    b1: Tensor,
-    w2: Tensor,
-    b2: Tensor,
+    w1: PackedLinear,
+    w2: PackedLinear,
 }
 
 struct LnParams {
@@ -240,39 +167,68 @@ struct LnParams {
 
 struct EncLayer {
     ln1: LnParams,
-    attn: AttnParams,
+    attn: SelfAttnParams,
     ln2: LnParams,
     ffn: FfnParams,
 }
 
 struct DecLayer {
     ln1: LnParams,
-    self_attn: AttnParams,
+    self_attn: SelfAttnParams,
     ln2: LnParams,
-    cross_attn: AttnParams,
+    cross_attn: CrossAttnParams,
     ln3: LnParams,
     ffn: FfnParams,
 }
 
-fn attn_params(w: &Weights, prefix: &str) -> Result<AttnParams> {
-    Ok(AttnParams {
-        wq: w.get(&format!("{prefix}.wq"))?.clone(),
-        wk: w.get(&format!("{prefix}.wk"))?.clone(),
-        wv: w.get(&format!("{prefix}.wv"))?.clone(),
-        wo: w.get(&format!("{prefix}.wo"))?.clone(),
-        bq: w.get(&format!("{prefix}.bq"))?.clone(),
-        bk: w.get(&format!("{prefix}.bk"))?.clone(),
-        bv: w.get(&format!("{prefix}.bv"))?.clone(),
-        bo: w.get(&format!("{prefix}.bo"))?.clone(),
+fn packed(w: &Weights, wname: &str, bname: &str) -> Result<PackedLinear> {
+    let wt = w.get(wname)?;
+    let bt = w.get(bname)?;
+    anyhow::ensure!(wt.dims.len() == 2, "{wname}: expected 2-D weight");
+    Ok(PackedLinear::pack(
+        &wt.data,
+        wt.dims[0],
+        wt.dims[1],
+        &bt.data,
+    ))
+}
+
+fn self_attn_params(w: &Weights, prefix: &str) -> Result<SelfAttnParams> {
+    let wq = w.get(&format!("{prefix}.wq"))?;
+    let wk = w.get(&format!("{prefix}.wk"))?;
+    let wv = w.get(&format!("{prefix}.wv"))?;
+    let bq = w.get(&format!("{prefix}.bq"))?;
+    let bk = w.get(&format!("{prefix}.bk"))?;
+    let bv = w.get(&format!("{prefix}.bv"))?;
+    anyhow::ensure!(
+        wq.dims.len() == 2 && wk.dims == wq.dims && wv.dims == wq.dims,
+        "{prefix}: inconsistent QKV shapes"
+    );
+    let qkv = PackedLinear::pack_fused(
+        &[&wq.data, &wk.data, &wv.data],
+        &[&bq.data, &bk.data, &bv.data],
+        wq.dims[0],
+        &[wq.dims[1], wk.dims[1], wv.dims[1]],
+    );
+    Ok(SelfAttnParams {
+        qkv,
+        wo: packed(w, &format!("{prefix}.wo"), &format!("{prefix}.bo"))?,
+    })
+}
+
+fn cross_attn_params(w: &Weights, prefix: &str) -> Result<CrossAttnParams> {
+    Ok(CrossAttnParams {
+        wq: packed(w, &format!("{prefix}.wq"), &format!("{prefix}.bq"))?,
+        wk: packed(w, &format!("{prefix}.wk"), &format!("{prefix}.bk"))?,
+        wv: packed(w, &format!("{prefix}.wv"), &format!("{prefix}.bv"))?,
+        wo: packed(w, &format!("{prefix}.wo"), &format!("{prefix}.bo"))?,
     })
 }
 
 fn ffn_params(w: &Weights, prefix: &str) -> Result<FfnParams> {
     Ok(FfnParams {
-        w1: w.get(&format!("{prefix}.w1"))?.clone(),
-        b1: w.get(&format!("{prefix}.b1"))?.clone(),
-        w2: w.get(&format!("{prefix}.w2"))?.clone(),
-        b2: w.get(&format!("{prefix}.b2"))?.clone(),
+        w1: packed(w, &format!("{prefix}.w1"), &format!("{prefix}.b1"))?,
+        w2: packed(w, &format!("{prefix}.w2"), &format!("{prefix}.b2"))?,
     })
 }
 
@@ -283,16 +239,24 @@ fn ln_params(w: &Weights, prefix: &str) -> Result<LnParams> {
     })
 }
 
-/// The reference backend: weights + config, implements [`Backend`].
+/// The reference backend: pre-packed weights + config, implements
+/// [`Backend`].
 pub struct RustBackend {
     cfg: Config,
     tok_emb: Tensor,
-    out_w: Tensor,
-    out_b: Tensor,
+    out: PackedLinear,
     enc_ln_f: LnParams,
     dec_ln_f: LnParams,
     enc: Vec<EncLayer>,
     dec: Vec<DecLayer>,
+    /// Sinusoidal positional-encoding table `[pe_len, d_model]`,
+    /// precomputed once at load for every position either bucket can
+    /// reach (no per-embed `exp`/`ln`).
+    pe: Vec<f32>,
+    pe_len: usize,
+    /// Kernel thread budget (1 = off; `RXNSPEC_THREADS` sets the
+    /// default, [`RustBackend::set_threads`] overrides it).
+    threads: usize,
 }
 
 impl RustBackend {
@@ -308,7 +272,7 @@ impl RustBackend {
         for i in 0..cfg.n_enc {
             enc.push(EncLayer {
                 ln1: ln_params(w, &format!("enc{i}.ln1"))?,
-                attn: attn_params(w, &format!("enc{i}.attn"))?,
+                attn: self_attn_params(w, &format!("enc{i}.attn"))?,
                 ln2: ln_params(w, &format!("enc{i}.ln2"))?,
                 ffn: ffn_params(w, &format!("enc{i}.ffn"))?,
             });
@@ -317,22 +281,30 @@ impl RustBackend {
         for i in 0..cfg.n_dec {
             dec.push(DecLayer {
                 ln1: ln_params(w, &format!("dec{i}.ln1"))?,
-                self_attn: attn_params(w, &format!("dec{i}.self_attn"))?,
+                self_attn: self_attn_params(w, &format!("dec{i}.self_attn"))?,
                 ln2: ln_params(w, &format!("dec{i}.ln2"))?,
-                cross_attn: attn_params(w, &format!("dec{i}.cross_attn"))?,
+                cross_attn: cross_attn_params(w, &format!("dec{i}.cross_attn"))?,
                 ln3: ln_params(w, &format!("dec{i}.ln3"))?,
                 ffn: ffn_params(w, &format!("dec{i}.ffn"))?,
             });
         }
+        let d = cfg.d_model;
+        let pe_len = cfg.s_len.max(cfg.t_len);
+        let mut pe = vec![0f32; pe_len * d];
+        for pos in 0..pe_len {
+            add_pe(&mut pe[pos * d..(pos + 1) * d], pos as i64, d);
+        }
         Ok(RustBackend {
             cfg,
             tok_emb: w.get("tok_emb")?.clone(),
-            out_w: w.get("out_w")?.clone(),
-            out_b: w.get("out_b")?.clone(),
+            out: packed(w, "out_w", "out_b")?,
             enc_ln_f: ln_params(w, "enc_ln_f")?,
             dec_ln_f: ln_params(w, "dec_ln_f")?,
             enc,
             dec,
+            pe,
+            pe_len,
+            threads: default_threads(),
         })
     }
 
@@ -340,19 +312,105 @@ impl RustBackend {
         self.cfg
     }
 
-    fn embed(&self, tokens: &[i64], positions: &[i64]) -> Vec<f32> {
+    /// Override the kernel thread budget (1 disables threading). The
+    /// partitioner is deterministic: outputs are bit-identical at any
+    /// setting.
+    pub fn set_threads(&mut self, threads: usize) {
+        self.threads = threads.max(1);
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    fn embed_into(&self, tokens: &[i64], positions: &[i64], out: &mut [f32]) {
         let d = self.cfg.d_model;
         let scale = (d as f32).sqrt();
-        let mut x = vec![0f32; tokens.len() * d];
         for (i, &t) in tokens.iter().enumerate() {
-            let row = &mut x[i * d..(i + 1) * d];
+            let row = &mut out[i * d..(i + 1) * d];
             let emb = &self.tok_emb.data[t as usize * d..(t as usize + 1) * d];
             for (o, &e) in row.iter_mut().zip(emb) {
                 *o = e * scale;
             }
-            add_pe(row, positions[i], d);
+            let pos = positions[i];
+            if pos >= 0 && (pos as usize) < self.pe_len {
+                let pr = &self.pe[pos as usize * d..(pos as usize + 1) * d];
+                for (o, &p) in row.iter_mut().zip(pr) {
+                    *o += p;
+                }
+            } else {
+                add_pe(row, pos, d);
+            }
         }
+    }
+
+    fn embed(&self, tokens: &[i64], positions: &[i64]) -> Vec<f32> {
+        let mut x = vec![0f32; tokens.len() * self.cfg.d_model];
+        self.embed_into(tokens, positions, &mut x);
         x
+    }
+
+    /// Fused self-attention block over already-normed `h`: one packed
+    /// QKV GEMM, K/V appended to `kv`, head-blocked attention (causal
+    /// from global offset `p`, or unmasked), output projection.
+    fn fused_self_attn(
+        &self,
+        h: &[f32],
+        n: usize,
+        params: &SelfAttnParams,
+        kv: &mut KvPanels,
+        causal_offset: Option<usize>,
+    ) -> Vec<f32> {
+        let d = self.cfg.d_model;
+        let qkv = params.qkv.apply(h, n, self.threads);
+        kv.append_strided(&qkv, n, 3 * d, d, 2 * d);
+        let mut ctx = vec![0f32; n * d];
+        attn_panels_threaded(&qkv, 3 * d, 0, n, kv, causal_offset, &mut ctx, self.threads);
+        params.wo.apply(&ctx, n, self.threads)
+    }
+
+    /// Cross-attention block with K/V projected fresh from `mem` (the
+    /// stateless path; sessions hoist the projection via [`KvPanels`]).
+    fn cross_attn_full(
+        &self,
+        h: &[f32],
+        n: usize,
+        params: &CrossAttnParams,
+        mem: &[f32],
+        mem_n: usize,
+    ) -> Vec<f32> {
+        let kv = self.project_cross_kv(params, mem, mem_n);
+        self.cross_attn_cached(h, n, params, &kv)
+    }
+
+    /// Project one memory row's cross-attention K/V panels.
+    fn project_cross_kv(&self, params: &CrossAttnParams, mem: &[f32], mem_n: usize) -> KvPanels {
+        let k = params.wk.apply(mem, mem_n, self.threads);
+        let v = params.wv.apply(mem, mem_n, self.threads);
+        let mut kv = KvPanels::new(self.cfg.n_heads, self.cfg.d_head());
+        kv.append(&k, &v, mem_n);
+        kv
+    }
+
+    /// Cross-attention block against already-projected K/V panels.
+    fn cross_attn_cached(
+        &self,
+        h: &[f32],
+        n: usize,
+        params: &CrossAttnParams,
+        kv: &KvPanels,
+    ) -> Vec<f32> {
+        let d = self.cfg.d_model;
+        let q = params.wq.apply(h, n, self.threads);
+        let mut ctx = vec![0f32; n * d];
+        attn_panels_threaded(&q, d, 0, n, kv, None, &mut ctx, self.threads);
+        params.wo.apply(&ctx, n, self.threads)
+    }
+
+    fn ffn(&self, h: &[f32], n: usize, p: &FfnParams) -> Vec<f32> {
+        let mut f = p.w1.apply(h, n, self.threads);
+        relu(&mut f);
+        p.w2.apply(&f, n, self.threads)
     }
 }
 
@@ -377,21 +435,12 @@ impl Backend for RustBackend {
             let mut x = self.embed(src, &positions);
             for layer in &self.enc {
                 let h = layer_normed(&x, n, d, &layer.ln1.g, &layer.ln1.b);
-                let a = mha(
-                    &h,
-                    n,
-                    &h,
-                    n,
-                    &layer.attn,
-                    self.cfg.n_heads,
-                    d,
-                    |_, _| true, // compact rows: no pad keys exist
-                );
+                let mut kv = KvPanels::new(self.cfg.n_heads, self.cfg.d_head());
+                // compact rows: no pad keys exist, so no mask
+                let a = self.fused_self_attn(&h, n, &layer.attn, &mut kv, None);
                 add_assign(&mut x, &a);
                 let h = layer_normed(&x, n, d, &layer.ln2.g, &layer.ln2.b);
-                let mut f = linear(&h, n, &layer.ffn.w1, &layer.ffn.b1);
-                relu(&mut f);
-                let f = linear(&f, n, &layer.ffn.w2, &layer.ffn.b2);
+                let f = self.ffn(&h, n, &layer.ffn);
                 add_assign(&mut x, &f);
             }
             layer_norm(&mut x, n, d, &self.enc_ln_f.g, &self.enc_ln_f.b);
@@ -431,55 +480,30 @@ impl Backend for RustBackend {
 
             for layer in &self.dec {
                 let h = layer_normed(&x, n, d, &layer.ln1.g, &layer.ln1.b);
-                let a = mha(
-                    &h,
-                    n,
-                    &h,
-                    n,
-                    &layer.self_attn,
-                    self.cfg.n_heads,
-                    d,
-                    |i, j| j <= i, // causal
-                );
+                let mut kv = KvPanels::new(self.cfg.n_heads, self.cfg.d_head());
+                let a = self.fused_self_attn(&h, n, &layer.self_attn, &mut kv, Some(0));
                 add_assign(&mut x, &a);
                 let h = layer_normed(&x, n, d, &layer.ln2.g, &layer.ln2.b);
-                let a = mha(
-                    &h,
-                    n,
-                    mem,
-                    mem_n,
-                    &layer.cross_attn,
-                    self.cfg.n_heads,
-                    d,
-                    |_, _| true,
-                );
+                let a = self.cross_attn_full(&h, n, &layer.cross_attn, mem, mem_n);
                 add_assign(&mut x, &a);
                 let h = layer_normed(&x, n, d, &layer.ln3.g, &layer.ln3.b);
-                let mut f = linear(&h, n, &layer.ffn.w1, &layer.ffn.b1);
-                relu(&mut f);
-                let f = linear(&f, n, &layer.ffn.w2, &layer.ffn.b2);
+                let f = self.ffn(&h, n, &layer.ffn);
                 add_assign(&mut x, &f);
             }
             layer_norm(&mut x, n, d, &self.dec_ln_f.g, &self.dec_ln_f.b);
-            let logits = linear(&x, n, &self.out_w, &self.out_b);
+            let logits = self.out.apply(&x, n, self.threads);
             // log_softmax per position, written right-aligned into [T, V].
             let base = ri * t_len * v + (t_len - n) * v;
             for i in 0..n {
                 let lrow = &logits[i * v..(i + 1) * v];
-                let mx = lrow.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
-                let z: f32 = lrow.iter().map(|&l| (l - mx).exp()).sum();
-                let lz = mx + z.ln();
-                let orow = &mut out[base + i * v..base + (i + 1) * v];
-                for (o, &l) in orow.iter_mut().zip(lrow) {
-                    *o = l - lz;
-                }
+                log_softmax_row_into(lrow, &mut out[base + i * v..base + (i + 1) * v]);
             }
         }
         Ok(LogProbs::new(out, lens, t_len, v))
     }
 
     fn begin(&self, memory: Memory) -> Result<Box<dyn DecoderSession + '_>> {
-        Ok(Box::new(CachedSession::new(self, memory)))
+        Ok(Box::new(self.begin_cached(memory)))
     }
 }
 
@@ -487,25 +511,22 @@ impl Backend for RustBackend {
 // KV-cached incremental decoding session
 // ---------------------------------------------------------------------------
 
-/// Per-layer self-attention K/V of one row, row-major `[len, d_model]`.
-#[derive(Clone)]
-struct LayerKv {
-    k: Vec<f32>,
-    v: Vec<f32>,
-}
-
 /// Committed state of one session row. Forks share it through an `Arc`
 /// (copy-on-write: the first `extend` after a fork clones exactly once).
 #[derive(Clone)]
 struct RowCache {
     tokens: Vec<i64>,
-    /// One entry per decoder layer.
-    kv: Vec<LayerKv>,
-    /// Per-position successor log-probs, `[len, vocab]` — kept so that
-    /// `extend` can serve the window position `len_before - 1` (the
-    /// successor of the last committed token) without recomputing it,
-    /// and so truncated rows can re-expose earlier distributions.
+    /// One per-head-panel K/V cache per decoder layer.
+    kv: Vec<KvPanels>,
+    /// Retained **suffix** of per-position successor log-probs,
+    /// `[retained, vocab]` starting at absolute position `lp_start` —
+    /// kept so `extend` can serve the window position `len_before - 1`
+    /// without recomputing it. Bounded to the session's retention cap
+    /// after every extend; a truncate that rewinds past the suffix is
+    /// healed by bit-identically recomputing one position (see
+    /// `CachedSession::extend`).
     lp: Vec<f32>,
+    lp_start: usize,
 }
 
 struct SessRow {
@@ -517,49 +538,57 @@ struct SessRow {
     len: usize,
 }
 
-/// Cross-attention K/V of one memory row (one entry per decoder layer,
-/// `[mem_n, d_model]` each) — computed once per memory row per session
-/// instead of once per decoder call.
-struct CrossKv {
-    k: Vec<f32>,
-    v: Vec<f32>,
-    mem_n: usize,
-}
-
 /// The reference backend's [`DecoderSession`]: incremental self-attention
-/// K/V, session-cached cross-attention K/V, and cached per-position
-/// log-probs. Produces **bit-identical** log-probabilities to
-/// [`RustBackend::decode`] — the conditional-consistency contract makes
-/// this a hard invariant, property-tested in
-/// `rust/tests/session_parity.rs`.
+/// K/V panels, session-cached cross-attention K/V, and a bounded cache of
+/// per-position log-probs. `extend` packs every row's appended window
+/// into one `[Σmᵢ, d_model]` activation matrix per layer — N per-row
+/// layer passes become one packed pass per layer. Produces
+/// **bit-identical** log-probabilities to [`RustBackend::decode`] — the
+/// kernels' fixed reduction order makes this a hard invariant,
+/// property-tested in `rust/tests/session_parity.rs` and
+/// `rust/tests/kernel_parity.rs`.
 pub struct CachedSession<'a> {
     backend: &'a RustBackend,
     memory: Memory,
-    cross: Vec<Option<Arc<Vec<CrossKv>>>>,
+    cross: Vec<Option<Arc<Vec<KvPanels>>>>,
     rows: Vec<Option<SessRow>>,
     stats: SessionStats,
+    lp_retain: usize,
 }
 
 impl<'a> CachedSession<'a> {
     pub fn new(backend: &'a RustBackend, memory: Memory) -> CachedSession<'a> {
         let batch = memory.batch;
+        let lp_retain = std::env::var("RXNSPEC_LP_RETAIN")
+            .ok()
+            .and_then(|v| v.parse::<usize>().ok())
+            .unwrap_or(DEFAULT_LP_RETAIN)
+            .max(1);
         CachedSession {
             backend,
             memory,
             cross: (0..batch).map(|_| None).collect(),
             rows: Vec::new(),
             stats: SessionStats::default(),
+            lp_retain,
         }
+    }
+
+    /// Cap the per-row log-prob retention (positions; min 1). Lower caps
+    /// save `positions × vocab` floats per row; rewinds past the cap are
+    /// healed by recomputing one position bit-identically.
+    pub fn set_lp_retention(&mut self, positions: usize) {
+        self.lp_retain = positions.max(1);
     }
 
     fn row(&self, row: usize) -> &SessRow {
         self.rows[row].as_ref().expect("released session row")
     }
 
-    /// Lazily project this memory row's cross-attention K/V per layer —
-    /// the same `linear` calls `mha` issued per decode call, hoisted to
-    /// once per session.
-    fn cross_for(&mut self, mem_row: usize) -> Arc<Vec<CrossKv>> {
+    /// Lazily project this memory row's cross-attention K/V panels per
+    /// layer — the same GEMMs the stateless path issues per decode call,
+    /// hoisted to once per session.
+    fn cross_for(&mut self, mem_row: usize) -> Arc<Vec<KvPanels>> {
         if self.cross[mem_row].is_none() {
             let d = self.backend.cfg.d_model;
             let mem_pad = self.memory.pad_row(mem_row);
@@ -569,11 +598,7 @@ impl<'a> CachedSession<'a> {
                 .backend
                 .dec
                 .iter()
-                .map(|layer| CrossKv {
-                    k: linear(mem, mem_n, &layer.cross_attn.wk, &layer.cross_attn.bk),
-                    v: linear(mem, mem_n, &layer.cross_attn.wv, &layer.cross_attn.bv),
-                    mem_n,
-                })
+                .map(|layer| self.backend.project_cross_kv(&layer.cross_attn, mem, mem_n))
                 .collect();
             self.cross[mem_row] = Some(Arc::new(per_layer));
         }
@@ -581,71 +606,116 @@ impl<'a> CachedSession<'a> {
     }
 }
 
+/// One row's slice of a batched extend pass: its (already rolled-back)
+/// cache, its per-layer cross-attention panels, and the token window to
+/// append.
+struct ExtendJob<'a> {
+    cache: &'a mut RowCache,
+    cross: &'a [KvPanels],
+    toks: &'a [i64],
+}
+
 impl RustBackend {
-    /// Compute the decoder stack for `new_toks` appended to the committed
-    /// row state in `cache`, reusing the cached per-layer K/V of the
-    /// prefix. Mirrors the per-row body of [`RustBackend::decode`]
-    /// operation for operation.
-    fn extend_row(&self, cache: &mut RowCache, cross: &[CrossKv], new_toks: &[i64]) {
+    /// Run the decoder stack **once** over every job's appended window,
+    /// packed into one `[Σmᵢ, d_model]` activation matrix per layer.
+    /// GEMMs, layer norms, the FFN and the output head are cross-row
+    /// packed; attention stays per-row against each row's own K/V
+    /// history. Per-row arithmetic is identical to a sequence of
+    /// single-row passes (the kernels' row-independence contract), so
+    /// batching never changes results.
+    fn extend_rows_batched(&self, jobs: &mut [ExtendJob<'_>]) {
         let d = self.cfg.d_model;
         let v = self.cfg.vocab;
-        let p = cache.tokens.len();
-        let m = new_toks.len();
-        if m == 0 {
+        let total: usize = jobs.iter().map(|j| j.toks.len()).sum();
+        if total == 0 {
             return;
         }
-        let positions: Vec<i64> = (p as i64..(p + m) as i64).collect();
-        let mut x = self.embed(new_toks, &positions);
-        cache.tokens.extend_from_slice(new_toks);
-
+        let mut offs = Vec::with_capacity(jobs.len());
+        let mut starts = Vec::with_capacity(jobs.len());
+        let mut x = vec![0f32; total * d];
+        {
+            let mut off = 0usize;
+            for job in jobs.iter_mut() {
+                let m = job.toks.len();
+                offs.push(off);
+                let p = job.cache.tokens.len();
+                starts.push(p);
+                if m > 0 {
+                    let positions: Vec<i64> = (p as i64..(p + m) as i64).collect();
+                    self.embed_into(job.toks, &positions, &mut x[off * d..(off + m) * d]);
+                    job.cache.tokens.extend_from_slice(job.toks);
+                }
+                off += m;
+            }
+        }
+        let n = total;
         for (li, layer) in self.dec.iter().enumerate() {
-            // Causal self-attention over cached + fresh K/V.
-            let h = layer_normed(&x, m, d, &layer.ln1.g, &layer.ln1.b);
-            let q = linear(&h, m, &layer.self_attn.wq, &layer.self_attn.bq);
-            let k_new = linear(&h, m, &layer.self_attn.wk, &layer.self_attn.bk);
-            let v_new = linear(&h, m, &layer.self_attn.wv, &layer.self_attn.bv);
-            let kv = &mut cache.kv[li];
-            kv.k.extend_from_slice(&k_new);
-            kv.v.extend_from_slice(&v_new);
-            let nk = p + m;
-            let ctx = attn_core(&q, m, &kv.k, &kv.v, nk, self.cfg.n_heads, d, |i, j| {
-                j <= p + i // causal in global positions
-            });
-            let a = linear(&ctx, m, &layer.self_attn.wo, &layer.self_attn.bo);
+            // Causal self-attention: one fused QKV GEMM over the packed
+            // windows, then per-row append + attention against that
+            // row's own cache.
+            let h = layer_normed(&x, n, d, &layer.ln1.g, &layer.ln1.b);
+            let qkv = layer.self_attn.qkv.apply(&h, n, self.threads);
+            let mut ctx = vec![0f32; n * d];
+            for (ji, job) in jobs.iter_mut().enumerate() {
+                let m = job.toks.len();
+                if m == 0 {
+                    continue;
+                }
+                let off = offs[ji];
+                let kv = &mut job.cache.kv[li];
+                kv.append_strided(&qkv[off * 3 * d..], m, 3 * d, d, 2 * d);
+                attn_panels_threaded(
+                    &qkv,
+                    3 * d,
+                    off * 3 * d,
+                    m,
+                    kv,
+                    Some(starts[ji]),
+                    &mut ctx[off * d..(off + m) * d],
+                    self.threads,
+                );
+            }
+            let a = layer.self_attn.wo.apply(&ctx, n, self.threads);
             add_assign(&mut x, &a);
 
-            // Cross-attention against the session-cached memory K/V.
-            let h = layer_normed(&x, m, d, &layer.ln2.g, &layer.ln2.b);
-            let q = linear(&h, m, &layer.cross_attn.wq, &layer.cross_attn.bq);
-            let ck = &cross[li];
-            let ctx = attn_core(
-                &q,
-                m,
-                &ck.k,
-                &ck.v,
-                ck.mem_n,
-                self.cfg.n_heads,
-                d,
-                |_, _| true,
-            );
-            let a = linear(&ctx, m, &layer.cross_attn.wo, &layer.cross_attn.bo);
+            // Cross-attention against the session-cached memory panels.
+            let h = layer_normed(&x, n, d, &layer.ln2.g, &layer.ln2.b);
+            let q = layer.cross_attn.wq.apply(&h, n, self.threads);
+            let mut ctx = vec![0f32; n * d];
+            for (ji, job) in jobs.iter().enumerate() {
+                let m = job.toks.len();
+                if m == 0 {
+                    continue;
+                }
+                let off = offs[ji];
+                attn_panels_threaded(
+                    &q,
+                    d,
+                    off * d,
+                    m,
+                    &job.cross[li],
+                    None,
+                    &mut ctx[off * d..(off + m) * d],
+                    self.threads,
+                );
+            }
+            let a = layer.cross_attn.wo.apply(&ctx, n, self.threads);
             add_assign(&mut x, &a);
 
-            let h = layer_normed(&x, m, d, &layer.ln3.g, &layer.ln3.b);
-            let mut f = linear(&h, m, &layer.ffn.w1, &layer.ffn.b1);
-            relu(&mut f);
-            let f = linear(&f, m, &layer.ffn.w2, &layer.ffn.b2);
+            let h = layer_normed(&x, n, d, &layer.ln3.g, &layer.ln3.b);
+            let f = self.ffn(&h, n, &layer.ffn);
             add_assign(&mut x, &f);
         }
-        layer_norm(&mut x, m, d, &self.dec_ln_f.g, &self.dec_ln_f.b);
-        let logits = linear(&x, m, &self.out_w, &self.out_b);
-        for i in 0..m {
-            let lrow = &logits[i * v..(i + 1) * v];
-            let mx = lrow.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
-            let z: f32 = lrow.iter().map(|&l| (l - mx).exp()).sum();
-            let lz = mx + z.ln();
-            for &l in lrow {
-                cache.lp.push(l - lz);
+        layer_norm(&mut x, n, d, &self.dec_ln_f.g, &self.dec_ln_f.b);
+        let logits = self.out.apply(&x, n, self.threads);
+        for (ji, job) in jobs.iter_mut().enumerate() {
+            let m = job.toks.len();
+            let off = offs[ji];
+            for i in 0..m {
+                let lrow = &logits[(off + i) * v..(off + i + 1) * v];
+                let base = job.cache.lp.len();
+                job.cache.lp.resize(base + v, 0.0);
+                log_softmax_row_into(lrow, &mut job.cache.lp[base..]);
             }
         }
     }
@@ -673,18 +743,16 @@ impl DecoderSession for CachedSession<'_> {
 
     fn new_row(&mut self, mem_row: usize) -> usize {
         assert!(mem_row < self.memory.batch, "memory row out of range");
-        let n_dec = self.backend.cfg.n_dec;
+        let cfg = &self.backend.cfg;
         self.rows.push(Some(SessRow {
             mem_row,
             cache: Arc::new(RowCache {
                 tokens: Vec::new(),
-                kv: (0..n_dec)
-                    .map(|_| LayerKv {
-                        k: Vec::new(),
-                        v: Vec::new(),
-                    })
+                kv: (0..cfg.n_dec)
+                    .map(|_| KvPanels::new(cfg.n_heads, cfg.d_head()))
                     .collect(),
                 lp: Vec::new(),
+                lp_start: 0,
             }),
             len: 0,
         }));
@@ -718,55 +786,136 @@ impl DecoderSession for CachedSession<'_> {
 
     fn extend(&mut self, deltas: &[(usize, &[i64])]) -> Result<LogProbs> {
         let (t_len, v) = (self.backend.cfg.t_len, self.backend.cfg.vocab);
-        let d = self.backend.cfg.d_model;
         self.stats.extend_calls += 1;
+        self.stats.packed_rows += deltas.len();
 
-        let mut lens = Vec::with_capacity(deltas.len());
-        let mut window = 1usize;
+        // Validate everything before mutating anything.
         for &(row, toks) in deltas {
-            let mem_row = self.row(row).mem_row;
-            let cross = self.cross_for(mem_row);
-            let sr = self.rows[row].as_mut().expect("released session row");
-            let len_before = sr.len;
+            let sr = self.rows[row].as_ref().expect("released session row");
             anyhow::ensure!(
-                len_before + toks.len() <= t_len,
+                sr.len + toks.len() <= t_len,
                 "row length {} exceeds bucket {t_len}",
-                len_before + toks.len()
+                sr.len + toks.len()
             );
+        }
+
+        struct Prep<'t> {
+            row: usize,
+            sr: SessRow,
+            cross: Arc<Vec<KvPanels>>,
+            /// Borrows the caller's window on the common path; owns a
+            /// prepended copy only for the rare deep-rewind heal.
+            toks: std::borrow::Cow<'t, [i64]>,
+            len_before: usize,
+            delta_len: usize,
+        }
+        let mut prep: Vec<Prep<'_>> = Vec::with_capacity(deltas.len());
+        for &(row, toks) in deltas {
+            let mem_row = self.rows[row].as_ref().expect("released session row").mem_row;
+            let cross = self.cross_for(mem_row);
+            let mut sr = self.rows[row].take().expect("released session row");
+            let len_before = sr.len;
             // Unshare (one clone if forked) and roll the buffers back to
-            // the logical length before appending.
+            // the logical length before appending. A deep truncate may
+            // have rewound past the retained log-prob suffix; in that
+            // case re-commit the last prefix token through the decoder
+            // so the window can serve position len_before - 1 — the
+            // recomputation is bit-identical (same kernels against the
+            // same cached K/V prefix).
             let cache = Arc::make_mut(&mut sr.cache);
-            cache.tokens.truncate(len_before);
-            cache.lp.truncate(len_before * v);
-            for kv in cache.kv.iter_mut() {
-                kv.k.truncate(len_before * d);
-                kv.v.truncate(len_before * d);
+            let (start, job_toks) = if len_before > 0 && len_before - 1 < cache.lp_start {
+                let mut jt = Vec::with_capacity(toks.len() + 1);
+                jt.push(cache.tokens[len_before - 1]);
+                jt.extend_from_slice(toks);
+                (len_before - 1, std::borrow::Cow::Owned(jt))
+            } else {
+                (len_before, std::borrow::Cow::Borrowed(toks))
+            };
+            cache.tokens.truncate(start);
+            if start <= cache.lp_start {
+                cache.lp.clear();
+                cache.lp_start = start;
+            } else {
+                cache.lp.truncate((start - cache.lp_start) * v);
             }
-            self.backend.extend_row(cache, &cross, toks);
-            sr.len = len_before + toks.len();
-            self.stats.tokens_computed += toks.len();
-            self.stats.tokens_reused += len_before;
-            lens.push(sr.len);
-            let needed = (toks.len() + usize::from(len_before > 0)).min(sr.len);
+            for kv in cache.kv.iter_mut() {
+                kv.truncate(start);
+            }
+            self.stats.tokens_computed += job_toks.len();
+            self.stats.tokens_reused += start;
+            prep.push(Prep {
+                row,
+                sr,
+                cross,
+                toks: job_toks,
+                len_before,
+                delta_len: toks.len(),
+            });
+        }
+
+        // One packed decoder pass per layer across every row's window.
+        {
+            let mut jobs: Vec<ExtendJob<'_>> = prep
+                .iter_mut()
+                .map(|p| ExtendJob {
+                    cache: Arc::make_mut(&mut p.sr.cache),
+                    cross: &p.cross[..],
+                    toks: &p.toks[..],
+                })
+                .collect();
+            self.backend.extend_rows_batched(&mut jobs);
+        }
+
+        // Window sizing over logical lengths (same contract as before).
+        let mut lens = Vec::with_capacity(prep.len());
+        let mut window = 1usize;
+        for p in prep.iter_mut() {
+            p.sr.len = p.len_before + p.delta_len;
+            lens.push(p.sr.len);
+            let needed = (p.delta_len + usize::from(p.len_before > 0)).min(p.sr.len);
             window = window.max(needed);
         }
 
         // Assemble the shared-window view from the per-row log-prob
-        // caches (unfilled leading columns are unreadable by contract).
-        let mut data = vec![0f32; deltas.len() * window * v];
-        for (ri, &(row, _)) in deltas.iter().enumerate() {
-            let sr = self.row(row);
-            let len = sr.len;
-            for j in len.saturating_sub(window)..len {
+        // caches (columns before a row's retained suffix are unreadable
+        // by contract), then trim each cache to the retention bound.
+        let mut data = vec![0f32; prep.len() * window * v];
+        for (ri, p) in prep.iter().enumerate() {
+            let cache = &p.sr.cache;
+            let len = p.sr.len;
+            let lo = len.saturating_sub(window).max(cache.lp_start);
+            for j in lo..len {
                 let wcol = window - len + j;
                 let dst = (ri * window + wcol) * v;
-                data[dst..dst + v].copy_from_slice(&sr.cache.lp[j * v..(j + 1) * v]);
+                let src = (j - cache.lp_start) * v;
+                data[dst..dst + v].copy_from_slice(&cache.lp[src..src + v]);
             }
+        }
+        for mut p in prep {
+            {
+                let cache = Arc::get_mut(&mut p.sr.cache).expect("cache just unshared");
+                let retained = cache.lp.len() / v;
+                self.stats.lp_high_water = self.stats.lp_high_water.max(retained);
+                if retained > self.lp_retain {
+                    let excess = retained - self.lp_retain;
+                    cache.lp.drain(..excess * v);
+                    cache.lp_start += excess;
+                }
+            }
+            self.rows[p.row] = Some(p.sr);
         }
         Ok(LogProbs::new_windowed(data, lens, t_len, v, window))
     }
 
     fn stats(&self) -> SessionStats {
         self.stats
+    }
+}
+
+impl RustBackend {
+    /// Open a [`CachedSession`] as a concrete type (tests and tools use
+    /// this to reach knobs like [`CachedSession::set_lp_retention`]).
+    pub fn begin_cached(&self, memory: Memory) -> CachedSession<'_> {
+        CachedSession::new(self, memory)
     }
 }

@@ -326,16 +326,25 @@ impl<B: Backend> Backend for ForceStateless<'_, B> {
 /// parity between its cached and stateless sessions exercises every
 /// layer of the incremental path.
 pub fn random_rust_backend(seed: u64, vocab: usize, s_len: usize, t_len: usize) -> RustBackend {
-    let cfg = Config {
-        vocab,
-        d_model: 16,
-        n_heads: 2,
-        d_ff: 32,
-        n_enc: 1,
-        n_dec: 2,
-        s_len,
-        t_len,
-    };
+    random_rust_backend_cfg(
+        seed,
+        Config {
+            vocab,
+            d_model: 16,
+            n_heads: 2,
+            d_ff: 32,
+            n_enc: 1,
+            n_dec: 2,
+            s_len,
+            t_len,
+        },
+    )
+}
+
+/// [`random_rust_backend`] with explicit dimensions — the kernel-layer
+/// benches and threading-parity tests use larger configs so the GEMM /
+/// attention partitioners actually engage.
+pub fn random_rust_backend_cfg(seed: u64, cfg: Config) -> RustBackend {
     fn rand_t(name: &str, dims: Vec<usize>, scale: f32, rng: &mut Rng) -> (String, Tensor) {
         let n: usize = dims.iter().product();
         let data: Vec<f32> = (0..n)

@@ -1,0 +1,274 @@
+//! Kernel-layer invariants, held as *hard* (bit-exact) properties:
+//!
+//! * **Batched extend ≡ sequential extends** — `CachedSession::extend`
+//!   over N rows with mixed window lengths packs everything into one
+//!   layer pass per layer; results must be bit-identical to N sequential
+//!   single-row extends, and to the stateless-recompute oracle.
+//! * **Threaded ≡ single-threaded** — the row/head partitioner never
+//!   changes a bit (fixed per-element reduction order).
+//! * **Bounded log-prob retention ≡ unbounded** — a deep truncate past
+//!   the retained suffix is healed by recomputing one position
+//!   bit-identically; only the computed-token accounting differs.
+
+use rxnspec::decoding::{greedy, Backend, DecoderRow, DecoderSession};
+use rxnspec::model::Config;
+use rxnspec::rng::Rng;
+use rxnspec::testutil::{
+    random_rust_backend, random_rust_backend_cfg, random_wrapped_src, ForceStateless,
+};
+use rxnspec::vocab::BOS_ID;
+
+const VOCAB: usize = 24;
+const S_LEN: usize = 32;
+const T_LEN: usize = 32;
+
+#[test]
+fn prop_batched_extend_matches_sequential_and_stateless() {
+    let mut rng = Rng::new(0x77);
+    for seed in 0..5u64 {
+        let backend = random_rust_backend(seed + 400, VOCAB, S_LEN, T_LEN);
+        let srcs: Vec<Vec<i64>> = (0..3)
+            .map(|_| random_wrapped_src(&mut rng, 4, 12, VOCAB))
+            .collect();
+        let refs: Vec<&[i64]> = srcs.iter().map(|s| s.as_slice()).collect();
+
+        // Committed prefixes and final windows of mixed lengths.
+        let prefixes: [Vec<i64>; 3] = [
+            vec![BOS_ID],
+            vec![BOS_ID, 5, 6],
+            vec![BOS_ID, 7, 8, 9, 10],
+        ];
+        let windows: [Vec<i64>; 3] = [vec![4, 5, 6], vec![11], vec![6, 7]];
+
+        // Session A: the final extend is one batched call over all rows.
+        let mut sa = backend.begin(backend.encode(&refs).unwrap()).unwrap();
+        let rows_a: Vec<usize> = (0..3).map(|i| sa.new_row(i)).collect();
+        for (i, &r) in rows_a.iter().enumerate() {
+            sa.extend(&[(r, prefixes[i].as_slice())]).unwrap();
+        }
+        let deltas: Vec<(usize, &[i64])> = rows_a
+            .iter()
+            .enumerate()
+            .map(|(i, &r)| (r, windows[i].as_slice()))
+            .collect();
+        let lp_a = sa.extend(&deltas).unwrap();
+
+        // Session B: identical state, one row per final extend call.
+        let mut sb = backend.begin(backend.encode(&refs).unwrap()).unwrap();
+        let rows_b: Vec<usize> = (0..3).map(|i| sb.new_row(i)).collect();
+        for (i, &r) in rows_b.iter().enumerate() {
+            sb.extend(&[(r, prefixes[i].as_slice())]).unwrap();
+        }
+        let lp_b: Vec<_> = rows_b
+            .iter()
+            .enumerate()
+            .map(|(i, &r)| sb.extend(&[(r, windows[i].as_slice())]).unwrap())
+            .collect();
+
+        // Stateless oracle over the same teacher-forced rows.
+        let oracle = ForceStateless(&backend);
+        let mut so = oracle.begin(backend.encode(&refs).unwrap()).unwrap();
+        let rows_o: Vec<usize> = (0..3).map(|i| so.new_row(i)).collect();
+        for (i, &r) in rows_o.iter().enumerate() {
+            so.extend(&[(r, prefixes[i].as_slice())]).unwrap();
+        }
+        let deltas_o: Vec<(usize, &[i64])> = rows_o
+            .iter()
+            .enumerate()
+            .map(|(i, &r)| (r, windows[i].as_slice()))
+            .collect();
+        let lp_o = so.extend(&deltas_o).unwrap();
+
+        for i in 0..3 {
+            let len_before = prefixes[i].len();
+            let len_after = len_before + windows[i].len();
+            for j in (len_before - 1)..len_after {
+                for v in 0..VOCAB as i64 {
+                    let a = lp_a.logp(i, j, v);
+                    let b = lp_b[i].logp(0, j, v);
+                    let o = lp_o.logp(i, j, v);
+                    assert!(
+                        a == b,
+                        "seed {seed} row {i} j {j} v {v}: batched {a} vs sequential {b}"
+                    );
+                    assert!(
+                        a == o,
+                        "seed {seed} row {i} j {j} v {v}: batched {a} vs stateless {o}"
+                    );
+                }
+            }
+        }
+
+        // Packed-rows accounting: 3 single-row prefix calls + one fused
+        // 3-row call.
+        let st = sa.stats();
+        assert_eq!(st.extend_calls, 4);
+        assert_eq!(st.packed_rows, 6);
+        assert_eq!(sb.stats().extend_calls, 6);
+        assert_eq!(sb.stats().packed_rows, 6);
+    }
+}
+
+#[test]
+fn threaded_backend_is_bit_identical_to_single_thread() {
+    // Dims large enough that both the GEMM row partitioner
+    // (n·din·dout ≥ 2^16) and the attention head partitioner
+    // (nq·nk·d_head·n_heads ≥ 2^14) actually engage.
+    let cfg = Config {
+        vocab: 32,
+        d_model: 64,
+        n_heads: 4,
+        d_ff: 256,
+        n_enc: 1,
+        n_dec: 2,
+        s_len: 32,
+        t_len: 32,
+    };
+    let b1 = random_rust_backend_cfg(0xAB, cfg);
+    let mut b4 = random_rust_backend_cfg(0xAB, cfg);
+    b4.set_threads(4);
+    assert_eq!(b4.threads(), 4);
+
+    let mut rng = Rng::new(0x99);
+    let src = random_wrapped_src(&mut rng, 12, 24, cfg.vocab);
+
+    // Encoder parity, bit for bit.
+    let mem1 = b1.encode(&[&src]).unwrap();
+    let mem4 = b4.encode(&[&src]).unwrap();
+    assert_eq!(mem1.data, mem4.data, "threaded encoder diverged");
+
+    // Full teacher-forced decode parity (16 positions engages the head
+    // partitioner: 16·16·16·4 = 2^14).
+    let mut tokens = vec![BOS_ID];
+    for t in 0..15i64 {
+        tokens.push(4 + (t % 20));
+    }
+    let row = DecoderRow { tokens, mem_row: 0 };
+    let lp1 = b1.decode(std::slice::from_ref(&row), &mem1).unwrap();
+    let lp4 = b4.decode(std::slice::from_ref(&row), &mem4).unwrap();
+    for j in 0..row.tokens.len() {
+        for v in 0..cfg.vocab as i64 {
+            assert!(
+                lp1.logp(0, j, v) == lp4.logp(0, j, v),
+                "threaded decode diverged at j {j} v {v}"
+            );
+        }
+    }
+
+    // End-to-end greedy decode parity (sessions + batched extends).
+    let g1 = greedy(&b1, &src).unwrap();
+    let g4 = greedy(&b4, &src).unwrap();
+    assert_eq!(g1.hyps[0].tokens, g4.hyps[0].tokens);
+    assert!(g1.hyps[0].score == g4.hyps[0].score);
+}
+
+#[test]
+fn lp_retention_bound_heals_deep_rewinds_bit_exactly() {
+    let backend = random_rust_backend(0x1234, VOCAB, S_LEN, T_LEN);
+    let src: Vec<i64> = vec![BOS_ID, 4, 5, 6, rxnspec::vocab::EOS_ID];
+
+    let mut tight = backend.begin_cached(backend.encode(&[&src]).unwrap());
+    tight.set_lp_retention(2);
+    let mut loose = backend.begin_cached(backend.encode(&[&src]).unwrap());
+
+    let rt = tight.new_row(0);
+    let rl = loose.new_row(0);
+    let toks: Vec<i64> = vec![BOS_ID, 5, 6, 7, 8, 9];
+    let lp_t = tight.extend(&[(rt, toks.as_slice())]).unwrap();
+    let lp_l = loose.extend(&[(rl, toks.as_slice())]).unwrap();
+    // Retention trims *after* the window is assembled, so the first call
+    // still exposes every appended position.
+    for j in 0..toks.len() {
+        for v in 0..VOCAB as i64 {
+            assert!(lp_t.logp(0, j, v) == lp_l.logp(0, j, v), "first window j {j} v {v}");
+        }
+    }
+
+    // Deep rewind: with retention 2 the suffix starts at position 4, so
+    // truncating to 2 rewinds past it; the next extend must re-commit
+    // position 1 internally and still serve a bit-exact window.
+    tight.truncate(rt, 2);
+    loose.truncate(rl, 2);
+    let lp_t2 = tight.extend(&[(rt, &[10, 11])]).unwrap();
+    let lp_l2 = loose.extend(&[(rl, &[10, 11])]).unwrap();
+    for j in [1usize, 2, 3] {
+        for v in 0..VOCAB as i64 {
+            assert!(
+                lp_t2.logp(0, j, v) == lp_l2.logp(0, j, v),
+                "post-rewind window j {j} v {v}"
+            );
+        }
+    }
+
+    // Oracle check of the healed row: [BOS, 5] ++ [10, 11].
+    let memory = backend.encode(&[&src]).unwrap();
+    let lp_ref = backend
+        .decode(
+            &[DecoderRow {
+                tokens: vec![BOS_ID, 5, 10, 11],
+                mem_row: 0,
+            }],
+            &memory,
+        )
+        .unwrap();
+    for j in [1usize, 2, 3] {
+        for v in 0..VOCAB as i64 {
+            assert!(
+                lp_t2.logp(0, j, v) == lp_ref.logp(0, j, v),
+                "healed row vs stateless decode j {j} v {v}"
+            );
+        }
+    }
+
+    // Accounting: the tight session recomputed exactly one extra
+    // position; the high-water mark saw the unbounded first burst.
+    let st = tight.stats();
+    let sl = loose.stats();
+    assert_eq!(st.tokens_computed, sl.tokens_computed + 1);
+    assert_eq!(st.lp_high_water, 6);
+    assert_eq!(sl.lp_high_water, 6);
+    assert_eq!(st.tokens_reused + 1, sl.tokens_reused);
+}
+
+#[test]
+fn batched_extend_after_fork_and_truncate_matches_stateless() {
+    // Forked COW rows with divergent histories joining one batched
+    // extend — the shape beam search / SBS produce every step.
+    let backend = random_rust_backend(0xC0C0, VOCAB, S_LEN, T_LEN);
+    let src: Vec<i64> = vec![BOS_ID, 5, 6, 7, 8, 9, rxnspec::vocab::EOS_ID];
+    let memory = backend.encode(&[&src]).unwrap();
+
+    let mut sess = backend.begin(backend.encode(&[&src]).unwrap()).unwrap();
+    let a = sess.new_row(0);
+    sess.extend(&[(a, &[BOS_ID, 5, 6])]).unwrap();
+    let b = sess.fork(a);
+    sess.truncate(b, 2);
+    // One batched call extending the parent and the rewound fork.
+    let lp = sess.extend(&[(a, &[7, 8]), (b, &[9])]).unwrap();
+
+    let rows = vec![
+        DecoderRow {
+            tokens: vec![BOS_ID, 5, 6, 7, 8],
+            mem_row: 0,
+        },
+        DecoderRow {
+            tokens: vec![BOS_ID, 5, 9],
+            mem_row: 0,
+        },
+    ];
+    let lp_ref = backend.decode(&rows, &memory).unwrap();
+    for v in 0..VOCAB as i64 {
+        for j in [2usize, 3, 4] {
+            assert!(
+                lp.logp(0, j, v) == lp_ref.logp(0, j, v),
+                "parent row j {j} v {v}"
+            );
+        }
+        for j in [1usize, 2] {
+            assert!(
+                lp.logp(1, j, v) == lp_ref.logp(1, j, v),
+                "forked row j {j} v {v}"
+            );
+        }
+    }
+}
