@@ -1,20 +1,28 @@
-//! Kernel-layer micro benchmarks: packed-GEMM latency, cross-row fused
-//! `extend` packing, and synthetic-model decode throughput.
+//! Kernel-layer micro benchmarks: packed-GEMM latency under both SIMD
+//! dispatch levels, pool-vs-scoped-spawn threading overhead, encoder
+//! cross-row packing, cross-row fused `extend` packing, and
+//! synthetic-model decode throughput.
 //!
 //! Unlike the table/figure benches this needs **no data or artifacts** —
 //! everything runs against in-memory synthetic models — so it doubles as
 //! the CI perf-smoke step. Flags:
 //!
 //! * `--smoke`  fewer samples / smaller sweeps (CI),
-//! * `--json`   write/update the `BENCH_kernels.json` perf trajectory
-//!   (tok/s, ns/GEMM, recomp_tok, packed-rows-per-call).
+//! * `--json`   write/update the `BENCH_kernels.json` perf trajectory.
+//!   The section name carries the active dispatch (`kernel_micro` under
+//!   SIMD, `kernel_micro_scalar` when `RXNSPEC_SIMD=off` forces the
+//!   portable fallback), so CI can record both paths in one artifact;
+//!   the GEMM sweep additionally measures both levels explicitly per
+//!   shape (`*_gflops` = portable fallback, `*_simd_gflops` = detected
+//!   SIMD backend).
 
 use std::time::Instant;
 
 use rxnspec::bench::{bench_json_path, json, json_flag, measure, report};
 use rxnspec::decoding::{greedy_batch, spec_greedy_batch, Backend, DecoderSession};
 use rxnspec::draft::DraftConfig;
-use rxnspec::kernels::PackedLinear;
+use rxnspec::kernels::simd::{simd_level, SimdLevel};
+use rxnspec::kernels::{threads, PackedLinear};
 use rxnspec::model::Config;
 use rxnspec::rng::Rng;
 use rxnspec::testutil::{random_rust_backend_cfg, random_wrapped_src, ForceStateless};
@@ -30,8 +38,21 @@ fn main() -> anyhow::Result<()> {
     let mut entries: Vec<(String, json::Val)> = Vec::new();
     let mut rows = Vec::new();
     let mut rng = Rng::new(0xBE7C);
+    let level = simd_level();
+    eprintln!("simd dispatch: {}", level.name());
+    if level == SimdLevel::Scalar && std::env::var("RXNSPEC_SIMD").is_err() {
+        // Not forced off, yet detection came up empty: the run will
+        // record the `kernel_micro_scalar` section and no SIMD numbers
+        // will exist in the artifact. Say so loudly instead of letting
+        // the trajectory silently look like a partial run.
+        eprintln!(
+            "warning: CPU reports no avx2+fma — recording scalar-fallback \
+             numbers only (section kernel_micro_scalar)"
+        );
+    }
+    entries.push(("simd_level".into(), json::Val::str(level.name())));
 
-    // --- packed GEMM latency sweep -------------------------------------
+    // --- packed GEMM latency sweep, both dispatch levels ---------------
     // (n, din, dout): a batched layer pass, a single-row layer pass, and
     // an output-head-shaped tall GEMM.
     let shapes = [(32usize, 256usize, 256usize), (1, 256, 256), (8, 256, 1024)];
@@ -41,28 +62,88 @@ fn main() -> anyhow::Result<()> {
         let b = rand_vec(&mut rng, dout);
         let x = rand_vec(&mut rng, n * din);
         let packed = PackedLinear::pack(&w, din, dout, &b);
-        let mut sink = 0f32;
-        let label = format!("gemm {n}x{din}x{dout}");
-        let m = measure(&label, 1, samples, || {
-            for _ in 0..iters {
-                let y = packed.apply(&x, n, 1);
-                sink += y[0];
+        let mut y = vec![0f32; n * dout];
+        let levels: &[SimdLevel] = if level == SimdLevel::Scalar {
+            &[SimdLevel::Scalar]
+        } else {
+            &[SimdLevel::Scalar, SimdLevel::Avx2]
+        };
+        for &lv in levels {
+            let mut sink = 0f32;
+            let label = format!("gemm {n}x{din}x{dout} [{}]", lv.name());
+            let m = measure(&label, 1, samples, || {
+                for _ in 0..iters {
+                    packed.apply_into_with(&x, n, &mut y, 1, lv);
+                    sink += y[0];
+                }
+                vec![("iters".into(), iters as f64)]
+            });
+            let ns_per = m.mean_s() * 1e9 / iters as f64;
+            let gflops = (2.0 * n as f64 * din as f64 * dout as f64 * iters as f64)
+                / (m.mean_s() * 1e9);
+            eprintln!("  {label}: {ns_per:.0} ns/GEMM, {gflops:.2} GFLOP/s (sink {sink:.1})");
+            let suffix = match lv {
+                SimdLevel::Scalar => "",
+                SimdLevel::Avx2 => "_simd",
+            };
+            entries.push((
+                format!("gemm_{n}x{din}x{dout}{suffix}_ns"),
+                json::Val::num(ns_per),
+            ));
+            entries.push((
+                format!("gemm_{n}x{din}x{dout}{suffix}_gflops"),
+                json::Val::num(gflops),
+            ));
+            rows.push(m);
+        }
+    }
+
+    // --- pool vs scoped-spawn dispatch overhead ------------------------
+    // Trivial per-item work over a handful of chunks: what's measured is
+    // the fork/join round trip itself, the cost the adaptive
+    // `par_min_macs` gate amortizes.
+    {
+        let disp_iters = if smoke { 50 } else { 300 };
+        let n_items = 8usize;
+        let m_pool = measure("dispatch pool (8 chunks)", 1, samples, || {
+            let mut items = vec![0u64; n_items];
+            for _ in 0..disp_iters {
+                threads::for_each_partitioned(&mut items, n_items, |x| {
+                    *x = x.wrapping_add(1)
+                });
             }
-            vec![("iters".into(), iters as f64)]
+            vec![("iters".into(), disp_iters as f64)]
         });
-        let ns_per = m.mean_s() * 1e9 / iters as f64;
-        let gflops = (2.0 * n as f64 * din as f64 * dout as f64 * iters as f64)
-            / (m.mean_s() * 1e9);
-        eprintln!("  {label}: {ns_per:.0} ns/GEMM, {gflops:.2} GFLOP/s (sink {sink:.1})");
+        let pool_ns = m_pool.mean_s() * 1e9 / disp_iters as f64;
+        rows.push(m_pool);
+        let m_spawn = measure("dispatch scoped-spawn (8 chunks)", 1, samples, || {
+            let mut items = vec![0u64; n_items];
+            for _ in 0..disp_iters {
+                threads::for_each_partitioned_scoped(&mut items, n_items, |x| {
+                    *x = x.wrapping_add(1)
+                });
+            }
+            vec![("iters".into(), disp_iters as f64)]
+        });
+        let spawn_ns = m_spawn.mean_s() * 1e9 / disp_iters as f64;
+        rows.push(m_spawn);
+        eprintln!(
+            "  dispatch: pool {pool_ns:.0} ns vs scoped-spawn {spawn_ns:.0} ns \
+             ({:.1}x), cold-measured pool dispatch {} ns, gate {} MACs",
+            spawn_ns / pool_ns.max(1.0),
+            threads::pool_dispatch_ns(),
+            threads::par_min_macs(),
+        );
         entries.push((
-            format!("gemm_{n}x{din}x{dout}_ns"),
-            json::Val::num(ns_per),
+            "pool_dispatch_ns".into(),
+            json::Val::num(threads::pool_dispatch_ns() as f64),
         ));
+        entries.push(("pool_dispatch_hot_ns".into(), json::Val::num(pool_ns)));
+        entries.push(("spawn_dispatch_ns".into(), json::Val::num(spawn_ns)));
         entries.push((
-            format!("gemm_{n}x{din}x{dout}_gflops"),
-            json::Val::num(gflops),
+            "par_min_macs".into(),
+            json::Val::num(threads::par_min_macs() as f64),
         ));
-        rows.push(m);
     }
 
     // --- synthetic-model decode throughput -----------------------------
@@ -131,8 +212,39 @@ fn main() -> anyhow::Result<()> {
     ));
     rows.push(m);
 
-    // --- cross-row fused extend: packed rows per call ------------------
+    // --- encoder cross-row packing -------------------------------------
     let lanes = 8usize.min(refs.len());
+    let src_tokens: usize = refs[..lanes].iter().map(|s| s.len()).sum();
+    let enc_iters = if smoke { 4 } else { 16 };
+    let m_b = measure("encode (batched)", 1, samples, || {
+        for _ in 0..enc_iters {
+            let _ = backend.encode(&refs[..lanes]).unwrap();
+        }
+        vec![("src_tokens".into(), (src_tokens * enc_iters) as f64)]
+    });
+    let enc_batched_tok_s = (src_tokens * enc_iters) as f64 / m_b.mean_s();
+    let m_p = measure("encode (per-row)", 1, samples, || {
+        for _ in 0..enc_iters {
+            for s in &refs[..lanes] {
+                let _ = backend.encode(&[s]).unwrap();
+            }
+        }
+        vec![("src_tokens".into(), (src_tokens * enc_iters) as f64)]
+    });
+    let enc_per_row_tok_s = (src_tokens * enc_iters) as f64 / m_p.mean_s();
+    eprintln!(
+        "  encode: batched {enc_batched_tok_s:.0} src-tok/s vs per-row \
+         {enc_per_row_tok_s:.0} src-tok/s over {lanes} rows"
+    );
+    entries.push(("encode_src_tok_s".into(), json::Val::num(enc_batched_tok_s)));
+    entries.push((
+        "encode_per_row_src_tok_s".into(),
+        json::Val::num(enc_per_row_tok_s),
+    ));
+    rows.push(m_b);
+    rows.push(m_p);
+
+    // --- cross-row fused extend: packed rows per call ------------------
     let memory = backend.encode(&refs[..lanes])?;
     let mut sess = backend.begin_cached(memory);
     let mut srows = Vec::new();
@@ -162,8 +274,10 @@ fn main() -> anyhow::Result<()> {
     let fused_wall = t0.elapsed();
     let st = sess.stats();
     let rows_per_call = st.packed_rows as f64 / st.extend_calls.max(1) as f64;
+    let src_rows_per_call = st.packed_src_rows as f64 / st.encode_calls.max(1) as f64;
     eprintln!(
         "  fused extend: {} calls, {} rows packed ({rows_per_call:.2} rows/call), \
+         encoder {src_rows_per_call:.2} src rows/call, \
          lp high-water {} positions, {:.3}s",
         st.extend_calls,
         st.packed_rows,
@@ -172,20 +286,34 @@ fn main() -> anyhow::Result<()> {
     );
     entries.push(("packed_rows_per_call".into(), json::Val::num(rows_per_call)));
     entries.push((
+        "packed_src_rows_per_call".into(),
+        json::Val::num(src_rows_per_call),
+    ));
+    entries.push((
         "lp_high_water".into(),
         json::Val::num(st.lp_high_water as f64),
     ));
 
-    report("kernel_micro", "Kernel layer — packed GEMM / fused extend", &rows);
+    report(
+        "kernel_micro",
+        "Kernel layer — SIMD GEMM / pool dispatch / packed encode / fused extend",
+        &rows,
+    );
     println!(
         "\ngreedy {greedy_tok_s:.1} tok/s (recomp_tok {recomp_tok:.2}), \
-         packed {rows_per_call:.2} rows/extend-call"
+         packed {rows_per_call:.2} rows/extend-call, \
+         {src_rows_per_call:.2} src rows/encode-call [{}]",
+        level.name()
     );
 
     if emit_json {
         let path = bench_json_path();
-        json::merge_section(&path, "kernel_micro", json::Val::obj(entries))?;
-        println!("(updated {})", path.display());
+        let section = match level {
+            SimdLevel::Scalar => "kernel_micro_scalar",
+            SimdLevel::Avx2 => "kernel_micro",
+        };
+        json::merge_section(&path, section, json::Val::obj(entries))?;
+        println!("(updated {} section {section})", path.display());
     }
     Ok(())
 }

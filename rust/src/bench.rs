@@ -549,13 +549,17 @@ pub mod json {
         bail!("unterminated string")
     }
 
-    /// Read `path` (an object; created if missing), insert-or-replace the
-    /// top-level member `section` with `entries`, write it back. Every
-    /// `--json` bench run updates only its own section, so the perf
-    /// trajectory accumulates across benches without clobbering. An
-    /// existing file that fails to parse (or whose root is not an object)
-    /// is an **error**, never silently overwritten — a truncated or
-    /// hand-mangled trajectory must be fixed or deleted explicitly.
+    /// Read `path` (an object; created if missing), merge `entries` into
+    /// the top-level member `section`, write it back. Every `--json`
+    /// bench run updates only its own section, so the perf trajectory
+    /// accumulates across benches without clobbering — and **within** a
+    /// section the merge is key-wise: a partial run (smoke sweeps, a
+    /// bench aborted halfway, a dispatch leg that measures fewer shapes)
+    /// overwrites only the metrics it re-measured and never drops the
+    /// rest of the section. An existing file that fails to parse (or
+    /// whose root is not an object) is an **error**, never silently
+    /// overwritten — a truncated or hand-mangled trajectory must be
+    /// fixed or deleted explicitly.
     pub fn merge_section(path: &Path, section: &str, entries: Val) -> Result<()> {
         let mut root = match std::fs::read_to_string(path) {
             Ok(body) => match parse(&body) {
@@ -571,7 +575,17 @@ pub mod json {
             },
             Err(_) => Val::Obj(Vec::new()),
         };
-        root.set(section, entries);
+        let merged = match (root.get(section), entries) {
+            (Some(old @ Val::Obj(_)), Val::Obj(new_entries)) => {
+                let mut m = old.clone();
+                for (k, v) in new_entries {
+                    m.set(&k, v);
+                }
+                m
+            }
+            (_, entries) => entries,
+        };
+        root.set(section, merged);
         let body = root.render() + "\n";
         std::fs::write(path, body).with_context(|| format!("write {}", path.display()))?;
         Ok(())
@@ -611,6 +625,36 @@ pub mod json {
             let root = parse(&std::fs::read_to_string(&p).unwrap()).unwrap();
             assert_eq!(root.get("a").unwrap().get("k"), Some(&Val::Num(3.0)));
             assert_eq!(root.get("b").unwrap().get("k"), Some(&Val::Num(2.0)));
+        }
+
+        #[test]
+        fn merge_section_unions_keys_within_a_section() {
+            // A partial run must overwrite only the metrics it
+            // re-measured, never drop the rest of the section.
+            let dir = std::env::temp_dir().join("rxnspec_json_test");
+            std::fs::create_dir_all(&dir).unwrap();
+            let p = dir.join("partial.json");
+            let _ = std::fs::remove_file(&p);
+            merge_section(
+                &p,
+                "kernel_micro",
+                Val::obj(vec![
+                    ("gemm_ns".into(), Val::num(100.0)),
+                    ("greedy_tok_s".into(), Val::num(50.0)),
+                ]),
+            )
+            .unwrap();
+            // Partial re-run: only one key re-measured.
+            merge_section(
+                &p,
+                "kernel_micro",
+                Val::obj(vec![("gemm_ns".into(), Val::num(90.0))]),
+            )
+            .unwrap();
+            let root = parse(&std::fs::read_to_string(&p).unwrap()).unwrap();
+            let sec = root.get("kernel_micro").unwrap();
+            assert_eq!(sec.get("gemm_ns"), Some(&Val::Num(90.0)));
+            assert_eq!(sec.get("greedy_tok_s"), Some(&Val::Num(50.0)));
         }
 
         #[test]

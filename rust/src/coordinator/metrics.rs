@@ -133,6 +133,11 @@ pub struct Metrics {
     pub extend_calls: AtomicU64,
     pub packed_rows: AtomicU64,
     pub lp_high_water: AtomicU64,
+    /// Encoder-side packing: encode passes and the source rows packed
+    /// into them (`packed_src_rows / encode_calls` = mean packed encoder
+    /// batch per call).
+    pub encode_calls: AtomicU64,
+    pub packed_src_rows: AtomicU64,
 }
 
 impl Metrics {
@@ -167,10 +172,14 @@ impl Metrics {
         ));
         let ec = self.extend_calls.load(Ordering::Relaxed);
         let pr = self.packed_rows.load(Ordering::Relaxed);
+        let enc = self.encode_calls.load(Ordering::Relaxed);
+        let psr = self.packed_src_rows.load(Ordering::Relaxed);
         s.push_str(&format!(
             "kernel: extend_calls={ec} packed_rows={pr} packed_rows_per_call={:.2} \
+             encode_calls={enc} packed_src_rows={psr} packed_src_rows_per_call={:.2} \
              lp_high_water={}\n",
             if ec == 0 { 0.0 } else { pr as f64 / ec as f64 },
+            if enc == 0 { 0.0 } else { psr as f64 / enc as f64 },
             self.lp_high_water.load(Ordering::Relaxed),
         ));
         s.push_str(&self.request_latency.summary("request_latency"));
@@ -239,7 +248,10 @@ mod tests {
         m.cache_evictions.store(0, Ordering::Relaxed);
         m.draft_accepted_query.store(70, Ordering::Relaxed);
         m.draft_accepted_corpus.store(9, Ordering::Relaxed);
+        m.encode_calls.store(4, Ordering::Relaxed);
+        m.packed_src_rows.store(10, Ordering::Relaxed);
         let snap = m.snapshot();
+        assert!(snap.contains("packed_src_rows_per_call=2.50"));
         assert!(snap.contains("cache_hits=3"));
         assert!(snap.contains("cache_hit_rate=0.750"));
         assert!(snap.contains("draft_accepted_query=70"));

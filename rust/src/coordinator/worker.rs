@@ -536,6 +536,12 @@ fn stream_batch<B: Backend>(
                 .packed_rows
                 .fetch_add(s.packed_rows as u64, Ordering::Relaxed);
             metrics
+                .encode_calls
+                .fetch_add(s.encode_calls as u64, Ordering::Relaxed);
+            metrics
+                .packed_src_rows
+                .fetch_add(s.packed_src_rows as u64, Ordering::Relaxed);
+            metrics
                 .lp_high_water
                 .fetch_max(s.lp_high_water as u64, Ordering::Relaxed);
             return;

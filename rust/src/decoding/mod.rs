@@ -283,6 +283,14 @@ pub struct SessionStats {
     /// High-water mark of per-row retained log-prob positions (the
     /// bounded `RowCache::lp` suffix; 0 for backends without one).
     pub lp_high_water: usize,
+    /// Encoder passes that fed this session's memory (one for `begin`,
+    /// one per `append_memory`).
+    pub encode_calls: usize,
+    /// Source rows across those passes. The reference backend packs
+    /// every pass's rows into one activation matrix per encoder layer,
+    /// so `packed_src_rows / encode_calls` is the mean packed encoder
+    /// batch per call.
+    pub packed_src_rows: usize,
 }
 
 /// One live incremental decode: per-row token state plus whatever cache

@@ -32,11 +32,18 @@ pub struct StatelessSession<'a, B: Backend> {
 
 impl<'a, B: Backend> StatelessSession<'a, B> {
     pub fn new(backend: &'a B, memory: Memory) -> StatelessSession<'a, B> {
+        let batch = memory.batch;
         StatelessSession {
             backend,
             memory,
             rows: Vec::new(),
-            stats: SessionStats::default(),
+            // Same encoder accounting as the cached session: the memory
+            // came from one encode call over `batch` source rows.
+            stats: SessionStats {
+                encode_calls: 1,
+                packed_src_rows: batch,
+                ..SessionStats::default()
+            },
         }
     }
 
@@ -65,6 +72,8 @@ impl<B: Backend> DecoderSession for StatelessSession<'_, B> {
         self.memory.data.extend_from_slice(&extra.data);
         self.memory.pad.extend_from_slice(&extra.pad);
         self.memory.batch += extra.batch;
+        self.stats.encode_calls += 1;
+        self.stats.packed_src_rows += extra.batch;
         base
     }
 

@@ -1,28 +1,49 @@
-//! Head-blocked scaled-dot-product attention over contiguous per-head
-//! K/V panels.
+//! Head-blocked scaled-dot-product attention over per-head K/V panels,
+//! running on the wide-lane SIMD layer.
 //!
-//! The reference backend's old `attn_core` strided through interleaved
-//! `[len, d_model]` K/V buffers, touching `d_model`-spaced slivers per
-//! head. [`KvPanels`] instead stores one contiguous `[len, d_head]`
-//! panel per head, so the score loop and the context accumulation both
-//! stream dense memory. Panels also make the KV cache's `append` /
-//! `truncate` head-local and cheap.
+//! [`KvPanels`] stores the two operands in the layout each consuming
+//! loop wants to vectorize over:
 //!
-//! Determinism: per `(head, query)` the key scores, the running max, the
-//! exp-sum and the value accumulation all run `j = 0..len` ascending —
-//! identical for batched, single-row, and head-threaded calls.
+//! * **K is dimension-major**: lane `h·d_head + d` holds key component
+//!   `d` of head `h` for every cached position, j-ascending. The score
+//!   loop then runs one broadcast-`q[d]` × contiguous-key-lane op per
+//!   query dimension — vectorized **across keys**, which are the score
+//!   row's output elements, while each score keeps its d-ascending
+//!   reduction order.
+//! * **V is row-major** per head (`[len, d_head]` panels): the context
+//!   accumulation runs one broadcast-weight × contiguous-value-row op
+//!   per key — vectorized **across context dimensions** (the output
+//!   elements), each keeping its j-ascending reduction order.
+//!
+//! Panels keep the KV cache's `append` / `truncate` head-local and
+//! cheap. The micro-loops dispatch at runtime between AVX2 intrinsics
+//! and the portable [`F32Lanes`] fallback (see [`crate::kernels::simd`]).
+//!
+//! The transposed K layout is a deliberate append-vs-read trade:
+//! appending one position costs `d_model` strided element pushes (one
+//! per lane) instead of `n_heads` contiguous copies, but each appended
+//! key is then *read* at unit stride by every later score pass —
+//! `O(len · d_head)` lane-vectorized reads per query against a
+//! `O(d_head)` one-time append cost, which wins for any cache that is
+//! attended more than once.
+//!
+//! Determinism: per `(head, query)` the key scores (d ascending each),
+//! the scale multiply, the running max, the exp-sum and the value
+//! accumulation (j ascending each) are identical for batched,
+//! single-row, head-threaded, and either-SIMD-backend calls.
 
-/// Minimum `nq·nk·d_head·n_heads` product before head-partitioned
-/// threading pays for scoped spawns.
-const PAR_MIN_WORK: usize = 1 << 14;
+use crate::kernels::simd::{self, F32Lanes, SimdLevel, LANES};
+use crate::kernels::threads;
 
-/// Per-layer attention K/V of one row, stored as contiguous per-head
-/// panels (`[len, d_head]` each).
+/// Per-layer attention K/V of one row, stored as per-head panels (see
+/// module docs for the K/V layouts).
 #[derive(Debug, Clone)]
 pub struct KvPanels {
     d_head: usize,
     len: usize,
+    /// `n_heads · d_head` dimension-major key lanes, each `len` long.
     k: Vec<Vec<f32>>,
+    /// `n_heads` row-major value panels, each `[len, d_head]`.
     v: Vec<Vec<f32>>,
 }
 
@@ -31,13 +52,13 @@ impl KvPanels {
         KvPanels {
             d_head,
             len: 0,
-            k: vec![Vec::new(); n_heads],
+            k: vec![Vec::new(); n_heads * d_head],
             v: vec![Vec::new(); n_heads],
         }
     }
 
     pub fn n_heads(&self) -> usize {
-        self.k.len()
+        self.v.len()
     }
 
     pub fn d_head(&self) -> usize {
@@ -53,8 +74,10 @@ impl KvPanels {
         self.len == 0
     }
 
-    pub fn k_panel(&self, h: usize) -> &[f32] {
-        &self.k[h]
+    /// Key component `d` of head `h` across all cached positions
+    /// (j-ascending).
+    pub fn k_lane(&self, h: usize, d: usize) -> &[f32] {
+        &self.k[h * self.d_head + d]
     }
 
     pub fn v_panel(&self, h: usize) -> &[f32] {
@@ -76,11 +99,17 @@ impl KvPanels {
         v_off: usize,
     ) {
         let dh = self.d_head;
-        for (h, (kp, vp)) in self.k.iter_mut().zip(self.v.iter_mut()).enumerate() {
+        for (hd, lane) in self.k.iter_mut().enumerate() {
+            lane.reserve(m);
             for r in 0..m {
-                let base = r * stride + h * dh;
-                kp.extend_from_slice(&data[base + k_off..base + k_off + dh]);
-                vp.extend_from_slice(&data[base + v_off..base + v_off + dh]);
+                lane.push(data[r * stride + k_off + hd]);
+            }
+        }
+        for (h, vp) in self.v.iter_mut().enumerate() {
+            vp.reserve(m * dh);
+            for r in 0..m {
+                let base = r * stride + v_off + h * dh;
+                vp.extend_from_slice(&data[base..base + dh]);
             }
         }
         self.len += m;
@@ -89,13 +118,19 @@ impl KvPanels {
     /// Append from separate head-interleaved `[m, d_model]` K and V
     /// matrices (the cross-attention memory projection).
     pub fn append(&mut self, k_rows: &[f32], v_rows: &[f32], m: usize) {
-        let d_model = self.d_head * self.k.len();
         let dh = self.d_head;
+        let d_model = dh * self.v.len();
         debug_assert!(k_rows.len() >= m * d_model && v_rows.len() >= m * d_model);
-        for (h, (kp, vp)) in self.k.iter_mut().zip(self.v.iter_mut()).enumerate() {
+        for (hd, lane) in self.k.iter_mut().enumerate() {
+            lane.reserve(m);
+            for r in 0..m {
+                lane.push(k_rows[r * d_model + hd]);
+            }
+        }
+        for (h, vp) in self.v.iter_mut().enumerate() {
+            vp.reserve(m * dh);
             for r in 0..m {
                 let base = r * d_model + h * dh;
-                kp.extend_from_slice(&k_rows[base..base + dh]);
                 vp.extend_from_slice(&v_rows[base..base + dh]);
             }
         }
@@ -108,11 +143,124 @@ impl KvPanels {
             return;
         }
         let dh = self.d_head;
-        for (kp, vp) in self.k.iter_mut().zip(self.v.iter_mut()) {
-            kp.truncate(len * dh);
+        for lane in self.k.iter_mut() {
+            lane.truncate(len);
+        }
+        for vp in self.v.iter_mut() {
             vp.truncate(len * dh);
         }
         self.len = len;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Micro-loops (portable + AVX2, bit-identical pairs)
+// ---------------------------------------------------------------------------
+
+/// `scores[j] += qd · lane[j]` over all `j` — the per-query-dimension
+/// rank-1 update of the score row (keys are the lanes).
+fn score_update_lanes(scores: &mut [f32], qd: f32, lane: &[f32]) {
+    let n = scores.len();
+    let ql = F32Lanes::splat(qd);
+    let mut j = 0usize;
+    while j + LANES <= n {
+        let acc = F32Lanes::load(&scores[j..j + LANES])
+            .mul_then_add(ql, F32Lanes::load(&lane[j..j + LANES]));
+        acc.store(&mut scores[j..j + LANES]);
+        j += LANES;
+    }
+    while j < n {
+        scores[j] += qd * lane[j];
+        j += 1;
+    }
+}
+
+/// AVX2 twin of [`score_update_lanes`] — identical per-element
+/// arithmetic and order.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2,fma")]
+unsafe fn score_update_avx2(scores: &mut [f32], qd: f32, lane: &[f32]) {
+    use crate::kernels::simd::avx2 as v;
+    let n = scores.len();
+    let ql = v::splat(qd);
+    let mut j = 0usize;
+    while j + LANES <= n {
+        let acc = v::mul_then_add(
+            v::load(&scores[j..j + LANES]),
+            ql,
+            v::load(&lane[j..j + LANES]),
+        );
+        v::store(acc, &mut scores[j..j + LANES]);
+        j += LANES;
+    }
+    while j < n {
+        scores[j] += qd * lane[j];
+        j += 1;
+    }
+}
+
+/// `ci[d] += w · vj[d]` over all `d` — one key's weighted value row
+/// added into the context (dimensions are the lanes).
+fn av_update_lanes(ci: &mut [f32], w: f32, vj: &[f32]) {
+    let dh = ci.len();
+    let wl = F32Lanes::splat(w);
+    let mut d = 0usize;
+    while d + LANES <= dh {
+        let acc = F32Lanes::load(&ci[d..d + LANES])
+            .mul_then_add(wl, F32Lanes::load(&vj[d..d + LANES]));
+        acc.store(&mut ci[d..d + LANES]);
+        d += LANES;
+    }
+    while d < dh {
+        ci[d] += w * vj[d];
+        d += 1;
+    }
+}
+
+/// AVX2 twin of [`av_update_lanes`].
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2,fma")]
+unsafe fn av_update_avx2(ci: &mut [f32], w: f32, vj: &[f32]) {
+    use crate::kernels::simd::avx2 as v;
+    let dh = ci.len();
+    let wl = v::splat(w);
+    let mut d = 0usize;
+    while d + LANES <= dh {
+        let acc = v::mul_then_add(v::load(&ci[d..d + LANES]), wl, v::load(&vj[d..d + LANES]));
+        v::store(acc, &mut ci[d..d + LANES]);
+        d += LANES;
+    }
+    while d < dh {
+        ci[d] += w * vj[d];
+        d += 1;
+    }
+}
+
+// Both dispatchers re-check the CPU before entering `#[target_feature]`
+// code: `SimdLevel` is a plain public enum, so a caller-supplied `Avx2`
+// is no proof of support — it falls back to the portable lanes instead.
+
+#[inline]
+fn score_update(scores: &mut [f32], qd: f32, lane: &[f32], level: SimdLevel) {
+    match level {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: guarded by runtime detection.
+        SimdLevel::Avx2 if simd::avx2_available() => unsafe {
+            score_update_avx2(scores, qd, lane)
+        },
+        SimdLevel::Avx2 => score_update_lanes(scores, qd, lane),
+        SimdLevel::Scalar => score_update_lanes(scores, qd, lane),
+    }
+}
+
+#[inline]
+fn av_update(ci: &mut [f32], w: f32, vj: &[f32], level: SimdLevel) {
+    match level {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: guarded by runtime detection.
+        SimdLevel::Avx2 if simd::avx2_available() => unsafe { av_update_avx2(ci, w, vj) },
+        SimdLevel::Avx2 => av_update_lanes(ci, w, vj),
+        SimdLevel::Scalar => av_update_lanes(ci, w, vj),
     }
 }
 
@@ -133,11 +281,11 @@ fn attn_one_head(
     out: &mut [f32],
     out_stride: usize,
     out_base: usize,
+    level: SimdLevel,
 ) {
     let dh = kv.d_head;
     let nk = kv.len;
     let scale = 1.0 / (dh as f32).sqrt();
-    let kp = kv.k_panel(h);
     let vp = kv.v_panel(h);
     let mut scores = vec![0f32; nk];
     for i in 0..nq {
@@ -147,17 +295,20 @@ fn attn_one_head(
             Some(p) => (p + i + 1).min(nk),
             None => nk,
         };
+        // Scores: one rank-1 lane update per query dimension, so each
+        // score_j reduces d-ascending exactly like a scalar dot.
+        for s in scores[..lim].iter_mut() {
+            *s = 0.0;
+        }
+        for (d, &qd) in qi.iter().enumerate() {
+            score_update(&mut scores[..lim], qd, &kv.k_lane(h, d)[..lim], level);
+        }
+        // Scale + running max, j ascending.
         let mut mx = f32::NEG_INFINITY;
-        for (j, s) in scores[..lim].iter_mut().enumerate() {
-            let kj = &kp[j * dh..j * dh + dh];
-            let mut acc = 0f32;
-            for (a, b) in qi.iter().zip(kj) {
-                acc += a * b;
-            }
-            let sv = acc * scale;
-            *s = sv;
-            if sv > mx {
-                mx = sv;
+        for s in scores[..lim].iter_mut() {
+            *s *= scale;
+            if *s > mx {
+                mx = *s;
             }
         }
         let mut z = 0f32;
@@ -171,22 +322,18 @@ fn attn_one_head(
         for c in ci.iter_mut() {
             *c = 0.0;
         }
+        // Context: one weighted value-row lane update per key, so each
+        // ci[d] reduces j-ascending.
         for (j, &w0) in scores[..lim].iter().enumerate() {
-            let w = w0 * inv;
-            if w == 0.0 {
-                continue;
-            }
-            let vj = &vp[j * dh..j * dh + dh];
-            for (c, &vv) in ci.iter_mut().zip(vj) {
-                *c += w * vv;
-            }
+            av_update(ci, w0 * inv, &vp[j * dh..(j + 1) * dh], level);
         }
     }
 }
 
 /// Head-blocked attention of `nq` interleaved queries against panel K/V;
-/// context written head-interleaved into `ctx` (`[nq, n_heads·d_head]`).
-/// See [`attn_one_head`] for the query layout and masking semantics.
+/// context written head-interleaved into `ctx` (`[nq, n_heads·d_head]`),
+/// at the process-wide SIMD dispatch level. See [`attn_one_head`] for
+/// the query layout and masking semantics.
 pub fn attn_panels(
     q: &[f32],
     q_stride: usize,
@@ -195,6 +342,22 @@ pub fn attn_panels(
     kv: &KvPanels,
     causal_offset: Option<usize>,
     ctx: &mut [f32],
+) {
+    attn_panels_with(q, q_stride, q_base, nq, kv, causal_offset, ctx, simd::simd_level());
+}
+
+/// [`attn_panels`] with an explicit SIMD dispatch level — the bench /
+/// property-test hook; results are bit-identical at every level.
+#[allow(clippy::too_many_arguments)]
+pub fn attn_panels_with(
+    q: &[f32],
+    q_stride: usize,
+    q_base: usize,
+    nq: usize,
+    kv: &KvPanels,
+    causal_offset: Option<usize>,
+    ctx: &mut [f32],
+    level: SimdLevel,
 ) {
     let d_model = kv.n_heads() * kv.d_head();
     for h in 0..kv.n_heads() {
@@ -209,14 +372,16 @@ pub fn attn_panels(
             ctx,
             d_model,
             h * kv.d_head(),
+            level,
         );
     }
 }
 
 /// [`attn_panels`] with the heads partitioned across up to `threads`
-/// scoped threads (each head computed into its own scratch panel, merged
-/// serially) — bit-identical to the serial call, since per-head
-/// arithmetic is untouched.
+/// persistent-pool lanes (each head computed into its own scratch
+/// panel, merged serially) once the call clears the adaptive
+/// [`threads::par_min_attn_work`] gate — bit-identical to the serial
+/// call, since per-head arithmetic is untouched.
 #[allow(clippy::too_many_arguments)]
 pub fn attn_panels_threaded(
     q: &[f32],
@@ -228,24 +393,64 @@ pub fn attn_panels_threaded(
     ctx: &mut [f32],
     threads: usize,
 ) {
+    attn_panels_threaded_with(
+        q,
+        q_stride,
+        q_base,
+        nq,
+        kv,
+        causal_offset,
+        ctx,
+        threads,
+        simd::simd_level(),
+    )
+}
+
+/// [`attn_panels_threaded`] with an explicit SIMD dispatch level.
+#[allow(clippy::too_many_arguments)]
+pub fn attn_panels_threaded_with(
+    q: &[f32],
+    q_stride: usize,
+    q_base: usize,
+    nq: usize,
+    kv: &KvPanels,
+    causal_offset: Option<usize>,
+    ctx: &mut [f32],
+    threads: usize,
+    level: SimdLevel,
+) {
     let nh = kv.n_heads();
     let dh = kv.d_head();
     let work = nq * kv.len() * dh * nh;
-    if threads <= 1 || nh <= 1 || work < PAR_MIN_WORK {
-        attn_panels(q, q_stride, q_base, nq, kv, causal_offset, ctx);
+    if threads <= 1 || nh <= 1 || work < threads::par_min_attn_work() {
+        attn_panels_with(q, q_stride, q_base, nq, kv, causal_offset, ctx, level);
         return;
     }
     let d_model = nh * dh;
     let per = nh.div_ceil(threads.min(nh));
     let mut scratch: Vec<Vec<f32>> = (0..nh).map(|_| vec![0f32; nq * dh]).collect();
-    std::thread::scope(|s| {
-        for (ci, bufs) in scratch.chunks_mut(per).enumerate() {
-            let h0 = ci * per;
-            s.spawn(move || {
-                for (k, buf) in bufs.iter_mut().enumerate() {
-                    attn_one_head(q, q_stride, q_base, nq, kv, h0 + k, causal_offset, buf, dh, 0);
-                }
-            });
+    let mut parts: Vec<(usize, &mut [Vec<f32>])> = scratch
+        .chunks_mut(per)
+        .enumerate()
+        .map(|(ci, bufs)| (ci * per, bufs))
+        .collect();
+    let n_parts = parts.len();
+    threads::for_each_partitioned(&mut parts, n_parts, |p| {
+        let h0 = p.0;
+        for (k, buf) in p.1.iter_mut().enumerate() {
+            attn_one_head(
+                q,
+                q_stride,
+                q_base,
+                nq,
+                kv,
+                h0 + k,
+                causal_offset,
+                buf,
+                dh,
+                0,
+                level,
+            );
         }
     });
     for (h, buf) in scratch.iter().enumerate() {
@@ -274,6 +479,18 @@ mod tests {
         kv
     }
 
+    fn assert_same_panels(a: &KvPanels, b: &KvPanels) {
+        assert_eq!(a.len(), b.len());
+        assert_eq!(a.n_heads(), b.n_heads());
+        assert_eq!(a.d_head(), b.d_head());
+        for h in 0..a.n_heads() {
+            for d in 0..a.d_head() {
+                assert_eq!(a.k_lane(h, d), b.k_lane(h, d), "k lane h={h} d={d}");
+            }
+            assert_eq!(a.v_panel(h), b.v_panel(h), "v panel h={h}");
+        }
+    }
+
     #[test]
     fn append_strided_matches_plain_append() {
         let mut rng = Rng::new(1);
@@ -292,10 +509,15 @@ mod tests {
         }
         let mut b = KvPanels::new(nh, dh);
         b.append(&k_rows, &v_rows, m);
-        assert_eq!(a.len(), b.len());
+        assert_same_panels(&a, &b);
+        // The lane layout itself: lane (h,d) at position j is row j's
+        // K component h·dh + d.
         for h in 0..nh {
-            assert_eq!(a.k_panel(h), b.k_panel(h));
-            assert_eq!(a.v_panel(h), b.v_panel(h));
+            for d0 in 0..dh {
+                for j in 0..m {
+                    assert_eq!(a.k_lane(h, d0)[j], k_rows[j * d + h * dh + d0]);
+                }
+            }
         }
     }
 
@@ -308,11 +530,17 @@ mod tests {
         let v1 = rand_vec(&mut rng, 4 * d);
         let mut kv = KvPanels::new(nh, dh);
         kv.append(&k1, &v1, 4);
-        let snap_k: Vec<Vec<f32>> = (0..nh).map(|h| kv.k_panel(h)[..2 * dh].to_vec()).collect();
+        let snap_k: Vec<Vec<f32>> = (0..nh)
+            .flat_map(|h| (0..dh).map(move |d0| (h, d0)))
+            .map(|(h, d0)| kv.k_lane(h, d0)[..2].to_vec())
+            .collect();
         kv.truncate(2);
         assert_eq!(kv.len(), 2);
-        for h in 0..nh {
-            assert_eq!(kv.k_panel(h), snap_k[h].as_slice());
+        for (i, (h, d0)) in (0..nh)
+            .flat_map(|h| (0..dh).map(move |d0| (h, d0)))
+            .enumerate()
+        {
+            assert_eq!(kv.k_lane(h, d0), snap_k[i].as_slice());
         }
         // Truncate past the end is a no-op.
         kv.truncate(10);
@@ -338,10 +566,42 @@ mod tests {
     }
 
     #[test]
+    fn simd_dispatch_is_bit_identical_to_scalar_fallback() {
+        // Shapes that exercise lane tails in both loops: nk and dh not
+        // multiples of LANES, plus causal masks trimming lim. The AVX2
+        // level is requested explicitly whenever the CPU supports it
+        // (dispatch re-checks support), so an `RXNSPEC_SIMD=off` run
+        // can't silently reduce this to scalar-vs-scalar.
+        let level = if simd::avx2_available() {
+            SimdLevel::Avx2
+        } else {
+            simd::simd_level()
+        };
+        let mut rng = Rng::new(6);
+        for &(nh, dh, nk, nq) in &[(2usize, 3usize, 11usize, 3usize), (1, 8, 16, 1), (3, 5, 7, 4)]
+        {
+            let d = nh * dh;
+            let kv = filled_panels(&mut rng, nh, dh, nk);
+            let q = rand_vec(&mut rng, nq * d);
+            for mask in [None, Some(nk.saturating_sub(nq))] {
+                let mut scalar = vec![0f32; nq * d];
+                attn_panels_with(&q, d, 0, nq, &kv, mask, &mut scalar, SimdLevel::Scalar);
+                let mut auto = vec![0f32; nq * d];
+                attn_panels_with(&q, d, 0, nq, &kv, mask, &mut auto, level);
+                assert_eq!(
+                    scalar, auto,
+                    "nh={nh} dh={dh} nk={nk} nq={nq} mask={mask:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
     fn threaded_attention_is_bit_identical_to_serial() {
         let mut rng = Rng::new(4);
-        // Crosses the PAR_MIN_WORK gate: 8·64·8·4 = 16384.
-        let (nh, dh, nk, nq) = (4usize, 8usize, 64usize, 8usize);
+        // Work product 16·64·16·4 = 2^16 meets the adaptive gate's
+        // upper clamp, so head partitioning engages at any measurement.
+        let (nh, dh, nk, nq) = (4usize, 16usize, 64usize, 16usize);
         let d = nh * dh;
         let kv = filled_panels(&mut rng, nh, dh, nk);
         let q = rand_vec(&mut rng, nq * d);

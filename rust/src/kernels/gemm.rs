@@ -1,24 +1,34 @@
-//! Packed, blocked, register-tiled GEMM with a fused bias term.
+//! Packed, blocked, register-tiled GEMM with a fused bias term, running
+//! on the wide-lane SIMD layer.
 //!
 //! Weights are re-laid-out **once** (at model load) into column panels:
 //! panel `p` covers output columns `[p·TILE_COLS, (p+1)·TILE_COLS)` and
 //! stores them k-major, so the hot loop streams one contiguous
 //! `TILE_COLS`-wide row of weights per `k` while broadcasting a handful
-//! of activations — the layout a vectorizing compiler turns into packed
-//! FMA lanes. The tail panel is zero-padded (padded lanes accumulate
-//! exact zeros and are never stored).
+//! of activations. `TILE_COLS` equals the SIMD lane width
+//! ([`crate::kernels::simd::LANES`]): each accumulator strip is exactly
+//! one vector register, updated by a broadcast-activation ×
+//! packed-panel-row lane op per `k`. The micro-kernel dispatches at
+//! runtime between the AVX2 intrinsic backend and the portable
+//! [`F32Lanes`] fallback (see [`crate::kernels::simd`]); the tail panel
+//! and its bias strip are zero-padded so both paths stay branch-light
+//! (padded lanes accumulate exact zeros and are never stored).
 //!
 //! Determinism: every output element is `bias[o] + Σ_k x[r,k]·w[k,o]`
-//! with `k` ascending, independent of row blocking, column tiling and
-//! thread partitioning — see [`crate::kernels`] module docs.
+//! with `k` ascending and two roundings per term, independent of row
+//! blocking, column tiling, thread partitioning **and SIMD dispatch
+//! level** — the lanes run across output columns only, never across the
+//! `k` reduction. See [`crate::kernels`] module docs and
+//! `rust/tests/kernel_parity.rs`.
 
-/// Output-column tile width (one register strip of accumulators).
-pub const TILE_COLS: usize = 8;
+use crate::kernels::simd::{self, F32Lanes, SimdLevel, LANES};
+use crate::kernels::threads;
+
+/// Output-column tile width (one register strip of accumulators). Must
+/// equal the SIMD lane width.
+pub const TILE_COLS: usize = LANES;
 /// Rows processed per micro-kernel invocation (activation broadcast reuse).
 const TILE_ROWS: usize = 4;
-/// Minimum multiply-accumulate count before row-partitioned threading
-/// pays for a scoped spawn.
-const PAR_MIN_MACS: usize = 1 << 16;
 
 /// A pre-packed dense layer `y = x·W + b` (`W: [din, dout]`, row-major
 /// input `x: [n, din]`).
@@ -29,7 +39,10 @@ pub struct PackedLinear {
     /// `ceil(dout / TILE_COLS)` column panels, each `[din, TILE_COLS]`
     /// k-major, the tail panel zero-padded.
     panels: Vec<f32>,
-    bias: Vec<f32>,
+    /// Bias padded to the panel grid (`panels.len() / din` strips of
+    /// `TILE_COLS`, tail zero-padded) so accumulator init is one lane
+    /// load per panel.
+    bias_pad: Vec<f32>,
 }
 
 impl PackedLinear {
@@ -49,11 +62,13 @@ impl PackedLinear {
                 }
             }
         }
+        let mut bias_pad = vec![0f32; np * TILE_COLS];
+        bias_pad[..dout].copy_from_slice(bias);
         PackedLinear {
             din,
             dout,
             panels,
-            bias: bias.to_vec(),
+            bias_pad,
         }
     }
 
@@ -101,31 +116,65 @@ impl PackedLinear {
         y
     }
 
-    /// `y = x·W + b` into a caller-provided buffer. Rows are partitioned
-    /// across up to `threads` scoped threads once the call is large
-    /// enough to amortize the spawns; results are bit-identical at any
-    /// thread count.
+    /// `y = x·W + b` into a caller-provided buffer, at the process-wide
+    /// SIMD dispatch level. Rows are partitioned across up to `threads`
+    /// persistent-pool lanes once the call clears the adaptive
+    /// [`threads::par_min_macs`] gate; results are bit-identical at any
+    /// thread count and dispatch level.
     pub fn apply_into(&self, x: &[f32], n: usize, y: &mut [f32], threads: usize) {
+        self.apply_into_with(x, n, y, threads, simd::simd_level());
+    }
+
+    /// [`PackedLinear::apply_into`] with an explicit SIMD dispatch level
+    /// — the bench / property-test hook for comparing backends.
+    pub fn apply_into_with(
+        &self,
+        x: &[f32],
+        n: usize,
+        y: &mut [f32],
+        threads: usize,
+        level: SimdLevel,
+    ) {
         assert_eq!(x.len(), n * self.din, "input shape mismatch");
         assert_eq!(y.len(), n * self.dout, "output shape mismatch");
-        let par = threads > 1 && n > 1 && n * self.din * self.dout >= PAR_MIN_MACS;
+        let par = threads > 1 && n > 1 && n * self.din * self.dout >= threads::par_min_macs();
         if !par {
-            self.apply_serial(x, n, y);
+            self.apply_serial(x, n, y, level);
             return;
         }
         let rows_per = n.div_ceil(threads.min(n));
-        std::thread::scope(|s| {
-            for (ci, chunk) in y.chunks_mut(rows_per * self.dout).enumerate() {
-                let rows = chunk.len() / self.dout;
-                let xs = &x[ci * rows_per * self.din..][..rows * self.din];
-                s.spawn(move || self.apply_serial(xs, rows, chunk));
-            }
+        let mut parts: Vec<(&[f32], &mut [f32])> = Vec::new();
+        for (ci, chunk) in y.chunks_mut(rows_per * self.dout).enumerate() {
+            let rows = chunk.len() / self.dout;
+            parts.push((&x[ci * rows_per * self.din..][..rows * self.din], chunk));
+        }
+        let n_parts = parts.len();
+        threads::for_each_partitioned(&mut parts, n_parts, |p| {
+            let rows = p.1.len() / self.dout;
+            self.apply_serial(p.0, rows, p.1, level);
         });
     }
 
-    /// The blocked micro-kernel: `TILE_ROWS × TILE_COLS` accumulator
-    /// tiles, bias fused into the accumulator init, `k` ascending.
-    fn apply_serial(&self, x: &[f32], n: usize, y: &mut [f32]) {
+    /// Dispatch the serial micro-kernel by SIMD level. A requested
+    /// `Avx2` is re-checked against the CPU (`SimdLevel` is a plain
+    /// public enum, so the level alone is no proof of support) and
+    /// falls back to the portable lanes when unavailable.
+    fn apply_serial(&self, x: &[f32], n: usize, y: &mut [f32], level: SimdLevel) {
+        match level {
+            #[cfg(target_arch = "x86_64")]
+            // SAFETY: guarded by runtime detection.
+            SimdLevel::Avx2 if simd::avx2_available() => unsafe {
+                self.apply_serial_avx2(x, n, y)
+            },
+            SimdLevel::Avx2 => self.apply_serial_lanes(x, n, y),
+            SimdLevel::Scalar => self.apply_serial_lanes(x, n, y),
+        }
+    }
+
+    /// The blocked micro-kernel on portable lanes: `TILE_ROWS` vector
+    /// accumulators (one `TILE_COLS`-wide strip each), bias fused into
+    /// the accumulator init, `k` ascending.
+    fn apply_serial_lanes(&self, x: &[f32], n: usize, y: &mut [f32]) {
         let (din, dout) = (self.din, self.dout);
         let mut r = 0usize;
         while r < n {
@@ -133,21 +182,57 @@ impl PackedLinear {
             for (p, panel) in self.panels.chunks_exact(din * TILE_COLS).enumerate() {
                 let o0 = p * TILE_COLS;
                 let oc = TILE_COLS.min(dout - o0);
-                let mut acc = [[0f32; TILE_COLS]; TILE_ROWS];
-                for a in acc.iter_mut().take(mr) {
-                    a[..oc].copy_from_slice(&self.bias[o0..o0 + oc]);
-                }
+                let binit = F32Lanes::load(&self.bias_pad[o0..o0 + LANES]);
+                let mut acc = [binit; TILE_ROWS];
                 for (k, wrow) in panel.chunks_exact(TILE_COLS).enumerate() {
+                    let wl = F32Lanes::load(wrow);
                     for (ri, a) in acc.iter_mut().take(mr).enumerate() {
-                        let xv = x[(r + ri) * din + k];
-                        for (aj, &wj) in a.iter_mut().zip(wrow) {
-                            *aj += xv * wj;
-                        }
+                        *a = a.mul_then_add(F32Lanes::splat(x[(r + ri) * din + k]), wl);
                     }
                 }
                 for (ri, a) in acc.iter().take(mr).enumerate() {
                     let yo = (r + ri) * dout + o0;
-                    y[yo..yo + oc].copy_from_slice(&a[..oc]);
+                    y[yo..yo + oc].copy_from_slice(&a.0[..oc]);
+                }
+            }
+            r += mr;
+        }
+    }
+
+    /// The same micro-kernel on AVX2 intrinsics — identical arithmetic
+    /// per element (broadcast × panel row, `mul` then `add`, `k`
+    /// ascending), so bit-identical to [`Self::apply_serial_lanes`].
+    #[cfg(target_arch = "x86_64")]
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn apply_serial_avx2(&self, x: &[f32], n: usize, y: &mut [f32]) {
+        use crate::kernels::simd::avx2 as v;
+        let (din, dout) = (self.din, self.dout);
+        let mut r = 0usize;
+        while r < n {
+            let mr = TILE_ROWS.min(n - r);
+            for (p, panel) in self.panels.chunks_exact(din * TILE_COLS).enumerate() {
+                let o0 = p * TILE_COLS;
+                let oc = TILE_COLS.min(dout - o0);
+                let binit = v::load(&self.bias_pad[o0..o0 + LANES]);
+                let mut acc = [binit; TILE_ROWS];
+                for (k, wrow) in panel.chunks_exact(TILE_COLS).enumerate() {
+                    let wl = v::load(wrow);
+                    for (ri, a) in acc.iter_mut().take(mr).enumerate() {
+                        *a = v::mul_then_add(*a, v::splat(x[(r + ri) * din + k]), wl);
+                    }
+                }
+                if oc == TILE_COLS {
+                    for (ri, a) in acc.iter().take(mr).enumerate() {
+                        let yo = (r + ri) * dout + o0;
+                        v::store(*a, &mut y[yo..yo + LANES]);
+                    }
+                } else {
+                    let mut tmp = [0f32; LANES];
+                    for (ri, a) in acc.iter().take(mr).enumerate() {
+                        v::store(*a, &mut tmp);
+                        let yo = (r + ri) * dout + o0;
+                        y[yo..yo + oc].copy_from_slice(&tmp[..oc]);
+                    }
                 }
             }
             r += mr;
@@ -192,17 +277,22 @@ mod tests {
             let packed = PackedLinear::pack(&w, din, dout, &b);
             assert_eq!(packed.din(), din);
             assert_eq!(packed.dout(), dout);
-            let y = packed.apply(&x, n, 1);
             let y_ref = naive(&x, n, &w, din, dout, &b);
-            assert_eq!(y, y_ref, "n={n} din={din} dout={dout}");
+            // Both dispatch levels against the scalar oracle.
+            let y = packed.apply(&x, n, 1);
+            assert_eq!(y, y_ref, "auto level: n={n} din={din} dout={dout}");
+            let mut y_s = vec![0f32; n * dout];
+            packed.apply_into_with(&x, n, &mut y_s, 1, SimdLevel::Scalar);
+            assert_eq!(y_s, y_ref, "scalar level: n={n} din={din} dout={dout}");
         }
     }
 
     #[test]
     fn threaded_gemm_is_bit_identical_to_single_thread() {
         let mut rng = Rng::new(0xBEEF);
-        // Big enough to cross the PAR_MIN_MACS gate (64·64·64 = 262144),
-        // with a row count that doesn't divide evenly by the threads.
+        // Big enough to clear the adaptive gate's upper clamp
+        // (65·64·64 = 266240 > 2^18), with a row count that doesn't
+        // divide evenly by the threads.
         let (n, din, dout) = (65usize, 64usize, 64usize);
         let w = rand_vec(&mut rng, din * dout);
         let b = rand_vec(&mut rng, dout);
@@ -260,7 +350,7 @@ mod tests {
     fn batched_rows_match_single_row_calls() {
         // Row independence: the value of row r must not depend on which
         // other rows share the call — the property cross-row batched
-        // `extend` rests on.
+        // `extend` (and now batched `encode`) rests on.
         let mut rng = Rng::new(0x5151);
         let (din, dout) = (13usize, 21usize);
         let w = rand_vec(&mut rng, din * dout);

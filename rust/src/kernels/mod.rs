@@ -14,29 +14,41 @@
 //! * [`KvPanels`] / [`attn_panels`] — attention K/V held as contiguous
 //!   per-head panels so each head's score/context loops stream over
 //!   dense memory (`attention` module).
-//! * [`threads`] — an opt-in scoped-thread partitioner (rows for GEMM,
-//!   heads for attention) sized from `std::thread::available_parallelism`
-//!   via `RXNSPEC_THREADS`; no new dependencies, no persistent pool.
+//! * [`simd`] — the wide-lane layer under both of the above: a fixed
+//!   [`simd::LANES`]-wide vector model with a portable `[f32; 8]`
+//!   fallback ([`simd::F32Lanes`]) and an AVX2 intrinsic backend
+//!   selected once at runtime (`RXNSPEC_SIMD` forces the fallback).
+//!   Kernels vectorize across **output lanes only**, never across a
+//!   reduction dimension, so both backends are bit-identical.
+//! * [`threads`] — an opt-in deterministic partitioner (rows for GEMM,
+//!   heads for attention) over a **persistent pool of parked workers**
+//!   (std-only; no per-call thread spawns), sized from
+//!   `std::thread::available_parallelism` via `RXNSPEC_THREADS`, with
+//!   work-size gates adapted to the measured dispatch cost.
 //!
 //! # Determinism contract
 //!
 //! Every kernel computes each output element with a **fixed reduction
 //! order** that does not depend on tiling, row blocking, thread count,
-//! or which other rows share the batch:
+//! SIMD dispatch level, or which other rows share the batch:
 //!
 //! * GEMM: `bias[o]` then `k = 0..din` ascending, for every `(row, o)`.
-//! * Attention: per `(head, query)`, key scores, the running max, the
-//!   exp-sum and the value accumulation all run `j = 0..len` ascending.
+//! * Attention: per `(head, query)`, each key score reduces its query
+//!   dimensions `d = 0..d_head` ascending; the scale multiply, running
+//!   max, exp-sum and value accumulation all run `j = 0..len` ascending.
 //!
 //! Consequently a batched call is bit-identical to the equivalent
-//! sequence of single-row calls, and a threaded call is bit-identical to
-//! the single-threaded one — the property the session-parity and
+//! sequence of single-row calls, a threaded call is bit-identical to
+//! the single-threaded one, and the AVX2 path is bit-identical to the
+//! portable fallback — the properties the session-parity and
 //! kernel-parity test suites hold as hard invariants.
 
 pub mod attention;
 pub mod gemm;
+pub mod simd;
 pub mod threads;
 
 pub use attention::{attn_panels, attn_panels_threaded, KvPanels};
 pub use gemm::PackedLinear;
+pub use simd::{simd_level, SimdLevel};
 pub use threads::default_threads;

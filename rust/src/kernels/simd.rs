@@ -1,0 +1,230 @@
+//! Wide-lane SIMD abstraction for the compute kernels.
+//!
+//! Every kernel vectorizes **across output lanes only** — the 8 output
+//! columns of a GEMM panel, 8 keys of an attention score row, 8 context
+//! dimensions of an AV accumulation — never across a reduction
+//! dimension. Each output element therefore keeps the exact scalar
+//! reduction order (`k`/`d`/`j` ascending, one rounding per multiply and
+//! one per add), so the SIMD and portable paths are **bit-identical by
+//! construction**; `rust/tests/kernel_parity.rs` property-tests this.
+//!
+//! Two backends share the [`LANES`]-wide model:
+//!
+//! * [`F32Lanes`] — a portable `[f32; LANES]` value type whose ops are
+//!   plain per-lane arithmetic. This is the always-available fallback
+//!   (and compiles to decent autovectorized code on its own).
+//! * [`avx2`] (x86_64 only) — thin `#[target_feature]` wrappers over the
+//!   AVX2 `__m256` intrinsics, selected at **runtime** when the CPU
+//!   reports `avx2`+`fma` support (see [`simd_level`]).
+//!
+//! Note the deliberate absence of fused multiply-add anywhere: an FMA
+//! rounds once where the scalar contract rounds twice, so
+//! [`avx2::mul_then_add`] is an explicit `mul` + `add` pair even though
+//! the dispatch requires the `fma` CPU flag (the flag gates the whole
+//! modern-x86 feature generation we target, and keeps the door open for
+//! kernels that opt out of bit-exactness later).
+//!
+//! `RXNSPEC_SIMD` overrides detection: `auto` (default) detects, while
+//! `off` / `scalar` / `0` force the portable fallback — the knob CI uses
+//! to record both dispatch paths in `BENCH_kernels.json`.
+
+use std::sync::OnceLock;
+
+/// Fixed vector width (f32 lanes). Equals one AVX2 `__m256` register and
+/// one GEMM output-column tile ([`crate::kernels::gemm::TILE_COLS`]).
+pub const LANES: usize = 8;
+
+/// Which micro-kernel backend calls dispatch to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SimdLevel {
+    /// Portable [`F32Lanes`] fallback (per-lane scalar arithmetic).
+    Scalar,
+    /// AVX2 intrinsics (x86_64, runtime-detected).
+    Avx2,
+}
+
+impl SimdLevel {
+    /// Short name for logs / bench metric labels.
+    pub fn name(self) -> &'static str {
+        match self {
+            SimdLevel::Scalar => "scalar",
+            SimdLevel::Avx2 => "avx2",
+        }
+    }
+}
+
+fn detect() -> SimdLevel {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if std::arch::is_x86_feature_detected!("avx2")
+            && std::arch::is_x86_feature_detected!("fma")
+        {
+            return SimdLevel::Avx2;
+        }
+    }
+    SimdLevel::Scalar
+}
+
+/// Process-wide dispatch level, resolved once: `RXNSPEC_SIMD` set to
+/// `off` / `scalar` / `0` forces [`SimdLevel::Scalar`]; anything else
+/// (including unset / `auto`) runs CPU feature detection.
+pub fn simd_level() -> SimdLevel {
+    static LEVEL: OnceLock<SimdLevel> = OnceLock::new();
+    *LEVEL.get_or_init(|| match std::env::var("RXNSPEC_SIMD") {
+        Ok(v) if matches!(v.trim(), "off" | "scalar" | "0") => SimdLevel::Scalar,
+        _ => detect(),
+    })
+}
+
+/// True when the AVX2 backend is actually executable on this CPU
+/// (independent of any `RXNSPEC_SIMD` override). Every dispatch site
+/// re-checks this before entering `#[target_feature]` code, so a
+/// caller-supplied [`SimdLevel::Avx2`] — the level is a plain public
+/// enum — can never reach the intrinsics on unsupported hardware; it
+/// silently falls back to the portable lanes instead.
+#[inline]
+pub fn avx2_available() -> bool {
+    static OK: OnceLock<bool> = OnceLock::new();
+    *OK.get_or_init(|| detect() == SimdLevel::Avx2)
+}
+
+/// A [`LANES`]-wide f32 vector with portable per-lane ops — the scalar
+/// fallback backend, and the reference semantics the AVX2 backend must
+/// reproduce bit for bit.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct F32Lanes(pub [f32; LANES]);
+
+impl F32Lanes {
+    #[inline(always)]
+    pub fn zero() -> F32Lanes {
+        F32Lanes([0.0; LANES])
+    }
+
+    #[inline(always)]
+    pub fn splat(v: f32) -> F32Lanes {
+        F32Lanes([v; LANES])
+    }
+
+    /// Load the first [`LANES`] values of `s` (`s.len() >= LANES`).
+    #[inline(always)]
+    pub fn load(s: &[f32]) -> F32Lanes {
+        let mut a = [0f32; LANES];
+        a.copy_from_slice(&s[..LANES]);
+        F32Lanes(a)
+    }
+
+    /// Store into the first [`LANES`] values of `d`.
+    #[inline(always)]
+    pub fn store(self, d: &mut [f32]) {
+        d[..LANES].copy_from_slice(&self.0);
+    }
+
+    /// `self + a·b` per lane, rounding the product and the sum
+    /// **separately** (two roundings) — the scalar semantics every
+    /// kernel's bit-exactness contract is written against. Deliberately
+    /// not a fused multiply-add.
+    #[inline(always)]
+    pub fn mul_then_add(self, a: F32Lanes, b: F32Lanes) -> F32Lanes {
+        let mut o = self.0;
+        for ((c, &x), &y) in o.iter_mut().zip(&a.0).zip(&b.0) {
+            *c += x * y;
+        }
+        F32Lanes(o)
+    }
+}
+
+/// AVX2 backend: thin wrappers over `core::arch::x86_64` intrinsics.
+/// Callers hold the dispatch proof — [`simd_level`] returned
+/// [`SimdLevel::Avx2`] — and are themselves `#[target_feature]`
+/// functions, so these inline into them.
+#[cfg(target_arch = "x86_64")]
+pub mod avx2 {
+    use core::arch::x86_64::{
+        __m256, _mm256_add_ps, _mm256_loadu_ps, _mm256_mul_ps, _mm256_set1_ps, _mm256_storeu_ps,
+    };
+
+    use super::LANES;
+
+    /// # Safety
+    /// AVX2 must be available (dispatch via [`super::simd_level`]);
+    /// `s.len() >= LANES`.
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn load(s: &[f32]) -> __m256 {
+        debug_assert!(s.len() >= LANES);
+        _mm256_loadu_ps(s.as_ptr())
+    }
+
+    /// # Safety
+    /// AVX2 must be available.
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn splat(v: f32) -> __m256 {
+        _mm256_set1_ps(v)
+    }
+
+    /// `acc + a·b` per lane with **two roundings** (`mul` then `add`,
+    /// never `fmadd` — fusing would single-round and break bit parity
+    /// with the portable fallback).
+    ///
+    /// # Safety
+    /// AVX2 must be available.
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn mul_then_add(acc: __m256, a: __m256, b: __m256) -> __m256 {
+        _mm256_add_ps(acc, _mm256_mul_ps(a, b))
+    }
+
+    /// # Safety
+    /// AVX2 must be available; `d.len() >= LANES`.
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn store(v: __m256, d: &mut [f32]) {
+        debug_assert!(d.len() >= LANES);
+        _mm256_storeu_ps(d.as_mut_ptr(), v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn portable_lanes_match_scalar_arithmetic() {
+        let a = F32Lanes::load(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0]);
+        let b = F32Lanes::splat(0.5);
+        let acc = F32Lanes::zero().mul_then_add(a, b);
+        let mut out = [0f32; LANES];
+        acc.store(&mut out);
+        for (i, &o) in out.iter().enumerate() {
+            assert_eq!(o, (i as f32 + 1.0) * 0.5);
+        }
+    }
+
+    #[test]
+    fn level_resolves_and_names() {
+        let l = simd_level();
+        assert!(matches!(l, SimdLevel::Scalar | SimdLevel::Avx2));
+        assert!(!l.name().is_empty());
+    }
+
+    #[cfg(target_arch = "x86_64")]
+    #[test]
+    fn avx2_backend_is_bit_identical_to_portable() {
+        if simd_level() != SimdLevel::Avx2 {
+            return; // CPU (or RXNSPEC_SIMD) rules the backend out
+        }
+        // acc + a*b over values with inexact products, both backends.
+        let acc0 = [0.137f32, -2.5, 3.1, 0.0, -0.625, 9.7, 1e-3, 4.2];
+        let av = [1.1f32, -0.3, 2.7, 5.5, -6.1, 0.9, 3.3, -1.7];
+        let bv = [0.77f32, 0.13, -4.9, 2.2, 1.01, -8.8, 0.505, 6.6];
+        let portable = F32Lanes::load(&acc0)
+            .mul_then_add(F32Lanes::load(&av), F32Lanes::load(&bv));
+        let mut got = [0f32; LANES];
+        unsafe {
+            let r = avx2::mul_then_add(avx2::load(&acc0), avx2::load(&av), avx2::load(&bv));
+            avx2::store(r, &mut got);
+        }
+        assert_eq!(portable.0, got);
+    }
+}

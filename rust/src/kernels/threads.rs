@@ -1,39 +1,374 @@
-//! Opt-in scoped-thread partitioning for the kernel layer.
+//! Opt-in deterministic threading for the kernel layer, backed by a
+//! **persistent pool of parked workers**.
 //!
 //! Threading is **off by default** (`RXNSPEC_THREADS` unset or `1`);
 //! `RXNSPEC_THREADS=auto` sizes the partitioner from
-//! `std::thread::available_parallelism`, any other value is an explicit
-//! thread count. Kernels partition work into contiguous chunks with
-//! disjoint outputs, so the reduction order of every output element is
-//! unchanged and threaded results are bit-identical to single-threaded
-//! ones (see the module docs of [`crate::kernels`]).
+//! `std::thread::available_parallelism`, any other positive integer is
+//! an explicit thread count (an unparsable value logs a one-time stderr
+//! warning and disables threading). Kernels partition work into
+//! contiguous chunks with disjoint outputs, so the reduction order of
+//! every output element is unchanged and threaded results are
+//! bit-identical to single-threaded ones (see the module docs of
+//! [`crate::kernels`]).
 //!
-//! There is no persistent pool: callers gate on a minimum work size so a
-//! scoped spawn only happens when it pays for itself.
+//! Earlier revisions paid a fresh `std::thread::scope` spawn per
+//! threaded call, which forced conservative work-size gates. The pool
+//! (std-only: a mutex-guarded injector queue plus condvars, no new
+//! dependencies) spawns workers **once**, on demand by dispatch width
+//! up to `available_parallelism - 1`; workers park on a condvar
+//! between jobs. [`for_each_partitioned`] keeps the exact same API and
+//! determinism contract: the caller runs the first chunk inline,
+//! self-drains its own still-queued chunks while waiting (never a
+//! concurrent dispatch's — no hostage latency), and returns only after
+//! every chunk completed (a panicking chunk resurfaces as a panic in
+//! the caller). Jobs must not themselves dispatch to the pool (kernel
+//! chunks are serial by construction).
+//!
+//! The dispatch round-trip is measured once at pool start
+//! ([`pool_dispatch_ns`]) and feeds the **adaptive** work-size gates
+//! ([`par_min_macs`], [`par_min_attn_work`]) that decide when a kernel
+//! call is large enough to fork. [`for_each_partitioned_scoped`] keeps
+//! the old scoped-spawn path alive for the pool-vs-spawn bench and the
+//! parity property tests.
 
-use std::sync::OnceLock;
+use std::any::Any;
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::time::Instant;
 
 /// Resolve the process-wide default kernel thread count once.
 ///
-/// * unset / unparsable / `0` / `1` → `1` (threading off),
+/// * unset / `0` / `1` → `1` (threading off),
 /// * `auto` → `std::thread::available_parallelism()`,
-/// * `N` → `N`.
+/// * positive integer `N` → `N`,
+/// * anything else → `1`, with a one-time warning on stderr.
 pub fn default_threads() -> usize {
     static N: OnceLock<usize> = OnceLock::new();
     *N.get_or_init(|| match std::env::var("RXNSPEC_THREADS") {
         Ok(v) if v.trim() == "auto" => std::thread::available_parallelism()
             .map(|n| n.get())
             .unwrap_or(1),
-        Ok(v) => v.trim().parse::<usize>().unwrap_or(1).max(1),
+        Ok(v) => match v.trim().parse::<usize>() {
+            Ok(n) => n.max(1),
+            Err(_) => {
+                eprintln!(
+                    "rxnspec: ignoring unparsable RXNSPEC_THREADS={v:?} \
+                     (accepted: unset or 1 = off, `auto`, or a positive integer); \
+                     kernel threading disabled"
+                );
+                1
+            }
+        },
         Err(_) => 1,
     })
 }
 
+// ---------------------------------------------------------------------------
+// The persistent pool
+// ---------------------------------------------------------------------------
+
+/// One queued chunk: a monomorphized trampoline plus a pointer to its
+/// stack-held [`ChunkCtx`]. The dispatcher keeps the context alive until
+/// its latch opens, which happens only from inside `run`. `latch`
+/// duplicates the context's latch pointer so the dispatcher can
+/// self-drain **its own** queued chunks without popping (and being
+/// blocked behind) a concurrent dispatch's work.
+struct RawJob {
+    run: unsafe fn(*const ()),
+    ctx: *const (),
+    latch: *const Latch,
+}
+
+// SAFETY: the pointers reference a `ChunkCtx` (plus the slice and
+// closure it points at) that the dispatching thread keeps alive and
+// unmoved until the job signals its latch; chunk slices are disjoint.
+unsafe impl Send for RawJob {}
+
+struct Shared {
+    queue: Mutex<VecDeque<RawJob>>,
+    work_ready: Condvar,
+    /// Workers spawned so far — grown on demand by dispatch width (see
+    /// [`Pool::ensure_workers`]), never torn down.
+    spawned: Mutex<usize>,
+}
+
+type PanicPayload = Box<dyn Any + Send>;
+
+/// Completion latch for one dispatch: remaining chunk count plus the
+/// first panic payload caught in any chunk (re-raised by the caller,
+/// preserving the diagnostics the old scoped-spawn path surfaced via
+/// `std::thread::scope`'s join).
+struct Latch {
+    state: Mutex<(usize, Option<PanicPayload>)>,
+    done: Condvar,
+}
+
+impl Latch {
+    fn new(jobs: usize) -> Latch {
+        Latch {
+            state: Mutex::new((jobs, None)),
+            done: Condvar::new(),
+        }
+    }
+
+    fn signal(&self, panic: Option<PanicPayload>) {
+        let mut st = self.state.lock().unwrap_or_else(|e| e.into_inner());
+        st.0 -= 1;
+        if panic.is_some() && st.1.is_none() {
+            st.1 = panic;
+        }
+        if st.0 == 0 {
+            self.done.notify_all();
+        }
+    }
+
+    /// Block until every job signalled; returns the first panic payload.
+    fn wait(&self) -> Option<PanicPayload> {
+        let mut st = self.state.lock().unwrap_or_else(|e| e.into_inner());
+        while st.0 > 0 {
+            st = self.done.wait(st).unwrap_or_else(|e| e.into_inner());
+        }
+        st.1.take()
+    }
+}
+
+/// Per-chunk context, stack-held by the dispatcher for the duration of
+/// the dispatch.
+struct ChunkCtx<T, F> {
+    items: *mut T,
+    len: usize,
+    f: *const F,
+    latch: *const Latch,
+}
+
+unsafe fn run_chunk<T: Send, F: Fn(&mut T) + Sync>(p: *const ()) {
+    let ctx = &*(p.cast::<ChunkCtx<T, F>>());
+    let latch = &*ctx.latch;
+    let items = std::slice::from_raw_parts_mut(ctx.items, ctx.len);
+    let f = &*ctx.f;
+    let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        for it in items.iter_mut() {
+            f(it);
+        }
+    }));
+    latch.signal(result.err());
+}
+
+fn worker_loop(sh: Arc<Shared>) {
+    loop {
+        let job = {
+            let mut q = sh.queue.lock().unwrap_or_else(|e| e.into_inner());
+            loop {
+                if let Some(j) = q.pop_front() {
+                    break j;
+                }
+                // Park until a dispatcher enqueues work.
+                q = sh.work_ready.wait(q).unwrap_or_else(|e| e.into_inner());
+            }
+        };
+        // SAFETY: see `RawJob`; panics are contained inside `run_chunk`.
+        unsafe { (job.run)(job.ctx) };
+    }
+}
+
+struct Pool {
+    shared: Arc<Shared>,
+    /// Worker ceiling: the dispatcher always works a chunk itself, so
+    /// one fewer than the hardware threads (min 1 so explicit thread
+    /// requests work even on single-core boxes).
+    max_workers: usize,
+    dispatch_ns: u64,
+}
+
+impl Pool {
+    fn start() -> Pool {
+        let hw = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1);
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(VecDeque::new()),
+            work_ready: Condvar::new(),
+            spawned: Mutex::new(0),
+        });
+        let mut pool = Pool {
+            shared,
+            max_workers: hw.saturating_sub(1).max(1),
+            dispatch_ns: 1,
+        };
+        // Measure the fork/join round trip (one trivial job per lane)
+        // — the overhead the adaptive gates must amortize. A small
+        // dispatch, so a big host serving a small `RXNSPEC_THREADS`
+        // budget doesn't spawn a full worker complement up front; and
+        // untimed warm-ups first, so the one-time worker spawns never
+        // land inside the timed window (the gates must reflect
+        // steady-state dispatch, not spawn cost).
+        let mut sink = vec![0u64; hw.min(4)];
+        for _ in 0..2 {
+            pool.run_parts(&mut sink, 1, &|x: &mut u64| *x = x.wrapping_add(1));
+        }
+        let reps: u32 = 16;
+        let t0 = Instant::now();
+        for _ in 0..reps {
+            pool.run_parts(&mut sink, 1, &|x: &mut u64| *x = x.wrapping_add(1));
+        }
+        pool.dispatch_ns = ((t0.elapsed().as_nanos() / reps as u128) as u64).max(1);
+        pool
+    }
+
+    /// Grow the worker set to serve `jobs` queued chunks, up to the
+    /// `max_workers` ceiling. Demand-driven: a process whose dispatches
+    /// never exceed N chunks never holds more than N parked threads.
+    fn ensure_workers(&self, jobs: usize) {
+        let want = jobs.min(self.max_workers);
+        let mut spawned = self.shared.spawned.lock().unwrap_or_else(|e| e.into_inner());
+        while *spawned < want {
+            let sh = Arc::clone(&self.shared);
+            std::thread::Builder::new()
+                .name(format!("rxnspec-kernel-{}", *spawned))
+                .spawn(move || worker_loop(sh))
+                .expect("failed to spawn kernel pool worker");
+            *spawned += 1;
+        }
+    }
+
+    /// Split `items` into `chunk`-sized contiguous chunks; the caller
+    /// runs the first inline (then self-drains its own still-queued
+    /// chunks), pool workers take the rest. Returns after every chunk
+    /// completed.
+    fn run_parts<T: Send, F: Fn(&mut T) + Sync>(&self, items: &mut [T], chunk: usize, f: &F) {
+        let mut it = items.chunks_mut(chunk);
+        let Some(first) = it.next() else {
+            return;
+        };
+        let rest: Vec<&mut [T]> = it.collect();
+        if rest.is_empty() {
+            for x in first.iter_mut() {
+                f(x);
+            }
+            return;
+        }
+        self.ensure_workers(rest.len());
+        let latch = Latch::new(rest.len());
+        let me = &latch as *const Latch;
+        let ctxs: Vec<ChunkCtx<T, F>> = rest
+            .into_iter()
+            .map(|c| ChunkCtx {
+                items: c.as_mut_ptr(),
+                len: c.len(),
+                f: f as *const F,
+                latch: me,
+            })
+            .collect();
+        {
+            let mut q = self.shared.queue.lock().unwrap_or_else(|e| e.into_inner());
+            for ctx in &ctxs {
+                q.push_back(RawJob {
+                    run: run_chunk::<T, F>,
+                    ctx: (ctx as *const ChunkCtx<T, F>).cast(),
+                    latch: me,
+                });
+            }
+        }
+        self.shared.work_ready.notify_all();
+        // Run our own chunk, panic-deferred: the queued contexts must
+        // stay alive until the latch opens, so we join before unwinding.
+        let mine = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            for x in first.iter_mut() {
+                f(x);
+            }
+        }));
+        // Self-drain: pick up any of *our* chunks still queued instead
+        // of blocking while workers are busy. Only our own — popping a
+        // concurrent dispatch's (possibly large) chunk would hold this
+        // call hostage past its own completion.
+        loop {
+            let job = {
+                let mut q = self.shared.queue.lock().unwrap_or_else(|e| e.into_inner());
+                q.iter()
+                    .position(|j| std::ptr::eq(j.latch, me))
+                    .and_then(|i| q.remove(i))
+            };
+            let Some(j) = job else { break };
+            // SAFETY: see `RawJob`.
+            unsafe { (j.run)(j.ctx) };
+        }
+        let job_panic = latch.wait();
+        if let Err(p) = mine {
+            std::panic::resume_unwind(p);
+        }
+        if let Some(p) = job_panic {
+            // Re-raise the chunk's own payload so diagnostics (assert
+            // messages, bounds-check locations) survive the pool hop.
+            std::panic::resume_unwind(p);
+        }
+    }
+}
+
+fn pool() -> &'static Pool {
+    static POOL: OnceLock<Pool> = OnceLock::new();
+    POOL.get_or_init(Pool::start)
+}
+
+/// Measured fork/join round-trip latency of one pool dispatch, in
+/// nanoseconds (sampled once at pool start). Starts the pool on first
+/// call.
+pub fn pool_dispatch_ns() -> u64 {
+    pool().dispatch_ns
+}
+
+/// Number of pool workers spawned so far (grown on demand by dispatch
+/// width; the caller thread adds one more working lane on top). Starts
+/// the pool on first call.
+pub fn pool_workers() -> usize {
+    let p = pool();
+    *p.shared.spawned.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Minimum GEMM multiply-accumulate count (`n·din·dout`) before row
+/// partitioning pays for a pool dispatch. Adaptive: derived from the
+/// measured [`pool_dispatch_ns`] so the fork cost stays a small
+/// fraction of the forked work (assuming a conservative ~1 MAC/ns
+/// serial throughput), clamped so a pathological measurement can never
+/// thread tiny calls or disable threading outright.
+pub fn par_min_macs() -> usize {
+    static GATE: OnceLock<usize> = OnceLock::new();
+    *GATE.get_or_init(|| ((pool_dispatch_ns() as usize) * 8).clamp(1 << 13, 1 << 18))
+}
+
+/// Attention analogue of [`par_min_macs`] over the
+/// `nq·nk·d_head·n_heads` work product — attention does several flops
+/// per product unit, so the gate sits lower, with its own clamp.
+pub fn par_min_attn_work() -> usize {
+    static GATE: OnceLock<usize> = OnceLock::new();
+    *GATE.get_or_init(|| ((pool_dispatch_ns() as usize) * 2).clamp(1 << 11, 1 << 16))
+}
+
 /// Run `f` over every item, the slice split into at most `threads`
-/// contiguous chunks, each chunk on its own scoped thread. Items are
-/// mutated in place; chunks are disjoint, so this is deterministic for
-/// any per-item-independent `f`.
+/// contiguous chunks executed on the persistent pool (the caller works
+/// the first chunk itself). Items are mutated in place; chunks are
+/// disjoint, so this is deterministic for any per-item-independent `f`
+/// — bit-identical to the serial loop and to
+/// [`for_each_partitioned_scoped`] at every thread count.
 pub fn for_each_partitioned<T: Send, F: Fn(&mut T) + Sync>(items: &mut [T], threads: usize, f: F) {
+    let n = items.len();
+    if threads <= 1 || n <= 1 {
+        for it in items.iter_mut() {
+            f(it);
+        }
+        return;
+    }
+    let chunk = n.div_ceil(threads.min(n));
+    pool().run_parts(items, chunk, &f);
+}
+
+/// The pre-pool implementation: one fresh scoped thread per chunk.
+/// Kept for the pool-vs-spawn micro bench and the partitioner parity
+/// property tests; identical chunking, identical results.
+pub fn for_each_partitioned_scoped<T: Send, F: Fn(&mut T) + Sync>(
+    items: &mut [T],
+    threads: usize,
+    f: F,
+) {
     let n = items.len();
     if threads <= 1 || n <= 1 {
         for it in items.iter_mut() {
@@ -71,6 +406,80 @@ mod tests {
         assert_eq!(ys, vec![14]);
         let mut empty: Vec<u64> = Vec::new();
         for_each_partitioned(&mut empty, 3, |_| unreachable!());
+    }
+
+    #[test]
+    fn pool_matches_scoped_and_serial() {
+        let f = |x: &mut f32| {
+            // A few non-associative float steps so any ordering bug
+            // would change bits.
+            *x = (*x * 1.7 + 0.3) * 0.9;
+            *x += *x * 0.01;
+        };
+        let base: Vec<f32> = (0..101).map(|i| i as f32 * 0.37 - 5.0).collect();
+        let mut serial = base.clone();
+        for it in serial.iter_mut() {
+            f(it);
+        }
+        for threads in [2usize, 3, 5, 16] {
+            let mut pooled = base.clone();
+            for_each_partitioned(&mut pooled, threads, f);
+            assert_eq!(serial, pooled, "pool threads={threads}");
+            let mut scoped = base.clone();
+            for_each_partitioned_scoped(&mut scoped, threads, f);
+            assert_eq!(serial, scoped, "scoped threads={threads}");
+        }
+    }
+
+    #[test]
+    fn jobs_may_outnumber_workers() {
+        // Far more chunks than pool workers: every chunk must still run
+        // exactly once.
+        let mut xs: Vec<u64> = (0..257).collect();
+        for_each_partitioned(&mut xs, 64, |x| *x = x.wrapping_mul(3) + 1);
+        for (i, &x) in xs.iter().enumerate() {
+            assert_eq!(x, (i as u64).wrapping_mul(3) + 1);
+        }
+    }
+
+    #[test]
+    fn pool_survives_reuse_across_dispatches() {
+        for round in 0..32u64 {
+            let mut xs: Vec<u64> = (0..19).collect();
+            for_each_partitioned(&mut xs, 4, |x| *x += round);
+            for (i, &x) in xs.iter().enumerate() {
+                assert_eq!(x, i as u64 + round);
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "boom")]
+    fn pool_propagates_worker_job_panics_with_payload() {
+        let mut xs: Vec<u64> = (0..64).collect();
+        // Item 63 lands in the last chunk (a pool worker's), so the
+        // panic crosses the latch back into the caller — with its
+        // original payload intact.
+        for_each_partitioned(&mut xs, 4, |x| {
+            if *x == 63 {
+                panic!("boom");
+            }
+        });
+    }
+
+    #[test]
+    fn dispatch_cost_and_gates_are_sane() {
+        assert!(pool_dispatch_ns() >= 1);
+        // A two-chunk dispatch guarantees at least one worker exists
+        // regardless of test order or core count (demand-grown pool).
+        let mut xs = [0u64, 1];
+        for_each_partitioned(&mut xs, 2, |x| *x += 1);
+        assert_eq!(xs, [1, 2]);
+        assert!(pool_workers() >= 1);
+        let g = par_min_macs();
+        assert!((1 << 13..=1 << 18).contains(&g), "gate {g}");
+        let a = par_min_attn_work();
+        assert!((1 << 11..=1 << 16).contains(&a), "attn gate {a}");
     }
 
     #[test]

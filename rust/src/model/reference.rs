@@ -16,12 +16,16 @@
 //! All dense math runs on the compute-kernel layer (`crate::kernels`):
 //! weights are pre-packed at load time into tile-aligned GEMM panels
 //! (self-attention QKV fused into one packed matrix), attention K/V live
-//! as contiguous per-head panels, and `CachedSession::extend` packs every
-//! row's appended window into **one** activation matrix per layer — one
-//! packed pass per layer per batching tick instead of one per row. The
-//! kernels' fixed-reduction-order contract makes stateless decode,
-//! single-row extend, batched extend and threaded execution all
-//! bit-identical (`rust/tests/session_parity.rs`,
+//! as contiguous per-head panels, the micro-kernels dispatch onto
+//! explicit SIMD lanes (`kernels::simd`), and **both** directions of the
+//! model cross-row pack: `CachedSession::extend` packs every row's
+//! appended window into one activation matrix per decoder layer, and
+//! `encode` packs every source row into one activation matrix per
+//! encoder layer — one fused-QKV GEMM per layer per call instead of one
+//! per row (`SessionStats::packed_src_rows` counts the encoder side).
+//! The kernels' fixed-reduction-order contract makes stateless decode,
+//! single-row extend, batched extend, batched encode, threaded and
+//! SIMD execution all bit-identical (`rust/tests/session_parity.rs`,
 //! `rust/tests/kernel_parity.rs`).
 
 use std::path::Path;
@@ -426,25 +430,67 @@ impl Backend for RustBackend {
 
     fn encode(&self, srcs: &[&[i64]]) -> Result<Memory> {
         let (s_len, d) = (self.cfg.s_len, self.cfg.d_model);
-        let mut data = vec![0f32; srcs.len() * s_len * d];
-        let mut pad = vec![0f32; srcs.len() * s_len];
-        for (bi, src) in srcs.iter().enumerate() {
+        // Cross-row packing, mirroring `extend_rows_batched`: every
+        // source row's tokens are packed into one `[Σnᵢ, d_model]`
+        // activation matrix, so each encoder layer issues **one** fused
+        // QKV GEMM, one output projection and one FFN pass for the whole
+        // batch instead of one per row. Attention stays per-row against
+        // each row's own keys (compact rows: no pad keys exist, so no
+        // mask); the kernels' row-independence contract makes this
+        // bit-identical to encoding each row alone
+        // (`rust/tests/kernel_parity.rs`).
+        let mut offs = Vec::with_capacity(srcs.len());
+        let mut total = 0usize;
+        for src in srcs {
             let n = src.len();
             anyhow::ensure!(n <= s_len, "src length {n} exceeds bucket {s_len}");
-            let positions: Vec<i64> = (0..n as i64).collect();
-            let mut x = self.embed(src, &positions);
-            for layer in &self.enc {
-                let h = layer_normed(&x, n, d, &layer.ln1.g, &layer.ln1.b);
-                let mut kv = KvPanels::new(self.cfg.n_heads, self.cfg.d_head());
-                // compact rows: no pad keys exist, so no mask
-                let a = self.fused_self_attn(&h, n, &layer.attn, &mut kv, None);
-                add_assign(&mut x, &a);
-                let h = layer_normed(&x, n, d, &layer.ln2.g, &layer.ln2.b);
-                let f = self.ffn(&h, n, &layer.ffn);
-                add_assign(&mut x, &f);
+            offs.push(total);
+            total += n;
+        }
+        let mut x = vec![0f32; total * d];
+        for (src, &off) in srcs.iter().zip(&offs) {
+            let positions: Vec<i64> = (0..src.len() as i64).collect();
+            self.embed_into(src, &positions, &mut x[off * d..(off + src.len()) * d]);
+        }
+        // One reusable K/V panel set: truncate(0) keeps every lane's
+        // capacity, so rows and layers after the first append without
+        // reallocating.
+        let mut kv = KvPanels::new(self.cfg.n_heads, self.cfg.d_head());
+        for layer in &self.enc {
+            let h = layer_normed(&x, total, d, &layer.ln1.g, &layer.ln1.b);
+            let qkv = layer.attn.qkv.apply(&h, total, self.threads);
+            let mut ctx = vec![0f32; total * d];
+            for (src, &off) in srcs.iter().zip(&offs) {
+                let n = src.len();
+                if n == 0 {
+                    continue;
+                }
+                kv.truncate(0);
+                kv.append_strided(&qkv[off * 3 * d..], n, 3 * d, d, 2 * d);
+                attn_panels_threaded(
+                    &qkv,
+                    3 * d,
+                    off * 3 * d,
+                    n,
+                    &kv,
+                    None,
+                    &mut ctx[off * d..(off + n) * d],
+                    self.threads,
+                );
             }
-            layer_norm(&mut x, n, d, &self.enc_ln_f.g, &self.enc_ln_f.b);
-            data[bi * s_len * d..bi * s_len * d + n * d].copy_from_slice(&x);
+            let a = layer.attn.wo.apply(&ctx, total, self.threads);
+            add_assign(&mut x, &a);
+            let h = layer_normed(&x, total, d, &layer.ln2.g, &layer.ln2.b);
+            let f = self.ffn(&h, total, &layer.ffn);
+            add_assign(&mut x, &f);
+        }
+        layer_norm(&mut x, total, d, &self.enc_ln_f.g, &self.enc_ln_f.b);
+        let mut data = vec![0f32; srcs.len() * s_len * d];
+        let mut pad = vec![0f32; srcs.len() * s_len];
+        for (bi, (src, &off)) in srcs.iter().zip(&offs).enumerate() {
+            let n = src.len();
+            data[bi * s_len * d..bi * s_len * d + n * d]
+                .copy_from_slice(&x[off * d..(off + n) * d]);
             for p in pad[bi * s_len..bi * s_len + n].iter_mut() {
                 *p = 1.0;
             }
@@ -569,7 +615,13 @@ impl<'a> CachedSession<'a> {
             memory,
             cross: (0..batch).map(|_| None).collect(),
             rows: Vec::new(),
-            stats: SessionStats::default(),
+            // The session's memory came from one (cross-row packed)
+            // encoder call over `batch` source rows.
+            stats: SessionStats {
+                encode_calls: 1,
+                packed_src_rows: batch,
+                ..SessionStats::default()
+            },
             lp_retain,
         }
     }
@@ -738,6 +790,8 @@ impl DecoderSession for CachedSession<'_> {
         self.memory.pad.extend_from_slice(&extra.pad);
         self.memory.batch += extra.batch;
         self.cross.extend((0..extra.batch).map(|_| None));
+        self.stats.encode_calls += 1;
+        self.stats.packed_src_rows += extra.batch;
         base
     }
 

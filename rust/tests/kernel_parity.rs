@@ -4,13 +4,23 @@
 //!   over N rows with mixed window lengths packs everything into one
 //!   layer pass per layer; results must be bit-identical to N sequential
 //!   single-row extends, and to the stateless-recompute oracle.
+//! * **Batched encode ≡ per-row encode** — `encode` packs every source
+//!   row into one activation matrix per encoder layer; each memory row
+//!   must be bit-identical to encoding that row alone.
+//! * **SIMD ≡ scalar fallback** — the AVX2 micro-kernels vectorize
+//!   across output lanes only, so every dispatch level produces the
+//!   same bits on any shape (tail panels, n=1 rows included).
 //! * **Threaded ≡ single-threaded** — the row/head partitioner never
-//!   changes a bit (fixed per-element reduction order).
+//!   changes a bit (fixed per-element reduction order), whether chunks
+//!   run on the persistent pool, on scoped spawns, or inline.
 //! * **Bounded log-prob retention ≡ unbounded** — a deep truncate past
 //!   the retained suffix is healed by recomputing one position
 //!   bit-identically; only the computed-token accounting differs.
 
 use rxnspec::decoding::{greedy, Backend, DecoderRow, DecoderSession};
+use rxnspec::kernels::attention::attn_panels_with;
+use rxnspec::kernels::simd::{avx2_available, simd_level, SimdLevel};
+use rxnspec::kernels::{threads, KvPanels, PackedLinear};
 use rxnspec::model::Config;
 use rxnspec::rng::Rng;
 use rxnspec::testutil::{
@@ -21,6 +31,156 @@ use rxnspec::vocab::BOS_ID;
 const VOCAB: usize = 24;
 const S_LEN: usize = 32;
 const T_LEN: usize = 32;
+
+fn rand_vec(rng: &mut Rng, n: usize) -> Vec<f32> {
+    (0..n).map(|_| (rng.f64() as f32 - 0.5) * 2.0).collect()
+}
+
+/// The level to hold against the scalar fallback: explicitly `Avx2`
+/// whenever the CPU supports it — independent of the `RXNSPEC_SIMD`
+/// override, so the parity properties can't silently degrade into
+/// scalar-vs-scalar under the env knob. (Safe: every dispatch site
+/// re-checks `avx2_available` before entering intrinsic code.)
+fn parity_level() -> SimdLevel {
+    if avx2_available() {
+        SimdLevel::Avx2
+    } else {
+        simd_level()
+    }
+}
+
+#[test]
+fn prop_simd_gemm_bit_identical_to_scalar_fallback() {
+    let mut rng = Rng::new(0x51D0);
+    let active = parity_level();
+    // Deliberate edge shapes (tail panels, n=1 rows, single column) plus
+    // randomized draws.
+    let mut shapes = vec![
+        (1usize, 1usize, 1usize),
+        (1, 7, 8),
+        (1, 8, 9),
+        (2, 3, 19),
+        (4, 16, 8),
+        (5, 13, 24),
+    ];
+    for _ in 0..12 {
+        shapes.push((rng.range(1, 9), rng.range(1, 40), rng.range(1, 40)));
+    }
+    for (n, din, dout) in shapes {
+        let w = rand_vec(&mut rng, din * dout);
+        let b = rand_vec(&mut rng, dout);
+        let x = rand_vec(&mut rng, n * din);
+        let packed = PackedLinear::pack(&w, din, dout, &b);
+        let mut y_scalar = vec![0f32; n * dout];
+        packed.apply_into_with(&x, n, &mut y_scalar, 1, SimdLevel::Scalar);
+        let mut y_active = vec![0f32; n * dout];
+        packed.apply_into_with(&x, n, &mut y_active, 1, active);
+        assert_eq!(
+            y_scalar,
+            y_active,
+            "n={n} din={din} dout={dout} level={}",
+            active.name()
+        );
+    }
+}
+
+#[test]
+fn prop_simd_attention_bit_identical_to_scalar_fallback() {
+    let mut rng = Rng::new(0x51D1);
+    let active = parity_level();
+    for trial in 0..10 {
+        let nh = rng.range(1, 4);
+        let dh = rng.range(1, 20); // lane tails in the AV loop
+        let nk = rng.range(1, 30); // lane tails in the score loop
+        let nq = rng.range(1, 5);
+        let d = nh * dh;
+        let mut kv = KvPanels::new(nh, dh);
+        let k = rand_vec(&mut rng, nk * d);
+        let v = rand_vec(&mut rng, nk * d);
+        kv.append(&k, &v, nk);
+        let q = rand_vec(&mut rng, nq * d);
+        for mask in [None, Some(nk.saturating_sub(nq))] {
+            let mut scalar = vec![0f32; nq * d];
+            attn_panels_with(&q, d, 0, nq, &kv, mask, &mut scalar, SimdLevel::Scalar);
+            let mut auto = vec![0f32; nq * d];
+            attn_panels_with(&q, d, 0, nq, &kv, mask, &mut auto, active);
+            assert_eq!(
+                scalar, auto,
+                "trial {trial}: nh={nh} dh={dh} nk={nk} nq={nq} mask={mask:?}"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_pool_scoped_and_serial_partitioners_bit_identical() {
+    let mut rng = Rng::new(0xB001);
+    for trial in 0..5 {
+        let n = rng.range(1, 200);
+        let base = rand_vec(&mut rng, n);
+        // A per-item chain of non-associative float steps: any
+        // partitioner bug (wrong chunk, double visit, missed item)
+        // changes bits.
+        let f = |x: &mut f32| {
+            let mut acc = *x;
+            for k in 0..16 {
+                acc = acc * 0.93 + (k as f32) * 0.011;
+                acc += acc * -0.007;
+            }
+            *x = acc;
+        };
+        let mut serial = base.clone();
+        threads::for_each_partitioned(&mut serial, 1, f);
+        for nthreads in [2usize, 3, 8, 32] {
+            let mut pooled = base.clone();
+            threads::for_each_partitioned(&mut pooled, nthreads, f);
+            assert_eq!(serial, pooled, "trial {trial} pool threads={nthreads}");
+            let mut scoped = base.clone();
+            threads::for_each_partitioned_scoped(&mut scoped, nthreads, f);
+            assert_eq!(serial, scoped, "trial {trial} scoped threads={nthreads}");
+        }
+    }
+}
+
+#[test]
+fn prop_batched_encode_matches_per_row_encode() {
+    let mut rng = Rng::new(0xE4C0);
+    for seed in 0..4u64 {
+        let backend = random_rust_backend(seed + 900, VOCAB, S_LEN, T_LEN);
+        // Mixed lengths, including a minimal wrapped row.
+        let srcs: Vec<Vec<i64>> = (0..4)
+            .map(|i| random_wrapped_src(&mut rng, 2 + i, 5 + 4 * i, VOCAB))
+            .collect();
+        let refs: Vec<&[i64]> = srcs.iter().map(|s| s.as_slice()).collect();
+        let mem_b = backend.encode(&refs).unwrap();
+        assert_eq!(mem_b.batch, refs.len());
+        for (i, r) in refs.iter().enumerate() {
+            let mem_i = backend.encode(&[r]).unwrap();
+            assert_eq!(mem_b.row(i), mem_i.row(0), "seed {seed} row {i} data");
+            assert_eq!(mem_b.pad_row(i), mem_i.pad_row(0), "seed {seed} row {i} pad");
+        }
+    }
+}
+
+#[test]
+fn session_tracks_encoder_packing_stats() {
+    let backend = random_rust_backend(0x517A, VOCAB, S_LEN, T_LEN);
+    let mut rng = Rng::new(0x517B);
+    let srcs: Vec<Vec<i64>> = (0..3)
+        .map(|_| random_wrapped_src(&mut rng, 3, 8, VOCAB))
+        .collect();
+    let refs: Vec<&[i64]> = srcs.iter().map(|s| s.as_slice()).collect();
+    let mut sess = backend.begin(backend.encode(&refs).unwrap()).unwrap();
+    let st = sess.stats();
+    assert_eq!(st.encode_calls, 1);
+    assert_eq!(st.packed_src_rows, 3);
+    // Continuous batching: a newcomer's encode pass is accounted too.
+    let extra = backend.encode(&refs[..1]).unwrap();
+    sess.append_memory(&extra);
+    let st = sess.stats();
+    assert_eq!(st.encode_calls, 2);
+    assert_eq!(st.packed_src_rows, 4);
+}
 
 #[test]
 fn prop_batched_extend_matches_sequential_and_stateless() {
