@@ -4,12 +4,24 @@ Emits, per task (`fwd`, `retro`) and bucket:
     artifacts/enc_{task}_b{B}.hlo.txt       (src, src_pad, *weights) → (mem,)
     artifacts/dec_{task}_b{EB}_t{T}.hlo.txt (tgt, pos, tgt_pad, mem, mem_pad,
                                              *weights) → (logp,)
-plus `artifacts/manifest.tsv` (`kind\ttask\teb\ttlen\tfile`).
+    artifacts/deccache_{task}_b{EB}_t{W}.hlo.txt
+                                            (tgt_window, pos, tgt_pad, mem,
+                                             mem_pad, k_cache[L,EB,T,d],
+                                             v_cache[L,EB,T,d], cache_len,
+                                             *weights)
+                                            → (logp_window, k_cache', v_cache')
+plus `artifacts/manifest.tsv` (columns `kind\ttask\teb\ttlen\tfile`; `meta`
+rows carry `key`/`value` in the eb/tlen columns — see MANIFEST_COLUMNS).
 
 Decoder artifacts come in a (EB, T) grid: EB is the effective batch
 (beams × drafts) and T the decoder window. Most of a decode happens at
 short prefixes, and without a KV cache the per-call cost is ∝ T — the
 window buckets recover that factor (picked per call by the Rust runtime).
+The `deccache` grid goes further: T there is the *appended-window* bucket
+W, the per-layer K/V of the committed prefix ride as device-resident
+buffers, and per-call cost is ∝ W — the ~L/2 → ~1 recompute-per-token
+win for every decoder once the Rust `DecoderSession` threads the caches
+call to call.
 
 Design choices (see DESIGN.md §5):
   * **HLO text**, not serialized protos — jax ≥ 0.5 emits 64-bit
@@ -24,12 +36,14 @@ Design choices (see DESIGN.md §5):
     (interpret mode → plain HLO, runnable on CPU PJRT).
 
 Usage: python -m compile.aot [--out DIR] [--tasks fwd,retro]
-       [--enc-buckets 1,8,32] [--dec-buckets 1,2,4,8,16,32,64]
+       [--enc-buckets 1,8,32] [--dec-buckets 1,4,8,16,32,64]
+       [--dec-t-buckets 24,48,96] [--cache-windows 1,4,8,16]
 """
 
 from __future__ import annotations
 
 import argparse
+import hashlib
 from pathlib import Path
 
 import jax
@@ -37,12 +51,39 @@ import jax.numpy as jnp
 from jax._src.lib import xla_client as xc
 
 from . import weights_io
-from .model import ModelConfig, decode_logprobs, encode
+from .model import ModelConfig, decode_logprobs, decode_logprobs_cached, encode
 
 # Trailing-columns window of the decfast artifacts. Must be ≥ the largest
 # draft length + 1 (verify region) — the Rust runtime only routes calls
-# whose read pattern fits (rust/src/runtime/pjrt.rs).
+# whose read pattern fits. Not assumed on the Rust side: the value is
+# written into manifest.tsv as a `meta decfast_window` row and read back
+# by rust/src/runtime/pjrt.rs, which rejects mismatched artifacts.
 DECFAST_WINDOW = 16
+
+# Appended-window buckets of the cache-shaped decoder grid. The largest
+# must cover a full draft verify region (DECFAST_WINDOW); the small ones
+# keep the per-token greedy step from paying a 16-wide window.
+CACHE_WINDOWS = (1, 4, 8, 16)
+
+# The manifest column contract, shared with the Rust parser
+# (rust/src/runtime/pjrt.rs::parse_manifest) and pinned by the golden
+# round-trip test (rust/tests/manifest_golden.rs ↔
+# python/tests/test_train_smoke.py).
+MANIFEST_COLUMNS = "kind\ttask\teb\ttlen\tfile"
+
+
+def manifest_row(kind: str, task: str, eb: int, tlen: int, fname: str) -> str:
+    """One artifact row, in MANIFEST_COLUMNS order."""
+    return f"{kind}\t{task}\t{eb}\t{tlen}\t{fname}"
+
+
+def meta_row(task: str, key: str, value: int | str) -> str:
+    """One `meta` row: `key`/`value` ride in the eb/tlen columns, the
+    file column is `-` (no artifact). The Rust parser only interprets
+    values of keys it knows; unknown keys (and non-numeric values) pass
+    through untouched — but every byte still lands in the manifest text
+    the runtime hashes into its cache-version identity."""
+    return f"meta\t{task}\t{key}\t{value}\t-"
 
 
 def to_hlo_text(lowered) -> str:
@@ -53,7 +94,9 @@ def to_hlo_text(lowered) -> str:
     return comp.as_hlo_text()
 
 
-def lower_task(task: str, out: Path, enc_buckets, dec_buckets, dec_t_buckets) -> list[str]:
+def lower_task(
+    task: str, out: Path, enc_buckets, dec_buckets, dec_t_buckets, cache_windows
+) -> list[str]:
     params = weights_io.load(out / f"weights_{task}.bin")
     cfg = ModelConfig(**weights_io.load_config(out / f"config_{task}.txt"))
     flat = weights_io.flatten(params)
@@ -63,7 +106,24 @@ def lower_task(task: str, out: Path, enc_buckets, dec_buckets, dec_t_buckets) ->
     def rebuild(leaves):
         return weights_io.unflatten(dict(zip(names, leaves)))
 
-    manifest: list[str] = []
+    # Clamped like the decfast lowering itself (`x[:, -W:, :]` can never
+    # read more than t_len columns) — so a small-window model's manifest
+    # always passes the Rust loader's decfast_window ≤ t_len check.
+    manifest: list[str] = [
+        meta_row(task, "decfast_window", min(DECFAST_WINDOW, cfg.t_len))
+    ]
+
+    # Digest of every artifact byte written for this task, emitted as a
+    # `meta content_digest` row. The Rust runtime hashes the manifest
+    # text into its cache-version identity, so regenerated artifacts
+    # (new jax/aot.py, same weights and buckets) still flush stale
+    # cross-request cache entries.
+    digest = hashlib.sha256()
+
+    def write_artifact(fname: str, text: str) -> None:
+        (out / fname).write_text(text)
+        digest.update(text.encode())
+        print(f"  wrote {fname}")
 
     def enc_fn(src, src_pad, *leaves):
         p = rebuild(leaves)
@@ -76,9 +136,8 @@ def lower_task(task: str, out: Path, enc_buckets, dec_buckets, dec_t_buckets) ->
             *leaf_specs,
         )
         fname = f"enc_{task}_b{b}.hlo.txt"
-        (out / fname).write_text(to_hlo_text(lowered))
-        manifest.append(f"enc\t{task}\t{b}\t0\t{fname}")
-        print(f"  wrote {fname}")
+        write_artifact(fname, to_hlo_text(lowered))
+        manifest.append(manifest_row("enc", task, b, 0, fname))
 
     def dec_fn(tgt, pos, tgt_pad, mem, mem_pad, *leaves):
         p = rebuild(leaves)
@@ -106,6 +165,18 @@ def lower_task(task: str, out: Path, enc_buckets, dec_buckets, dec_t_buckets) ->
             ),
         )
 
+    # deccache: the KV-cached session path. Per-layer K/V of the committed
+    # prefix arrive as arguments (device-resident buffers threaded call to
+    # call by the Rust session) and only the appended window is computed;
+    # the returned caches carry the window's K/V written at
+    # cache_len..cache_len+m so the next call extends them in place.
+    def deccache_fn(tgt_w, pos, tgt_pad, mem, mem_pad, k_c, v_c, cache_len, *leaves):
+        p = rebuild(leaves)
+        return decode_logprobs_cached(
+            p, cfg, tgt_w, pos, tgt_pad, mem, mem_pad, k_c, v_c, cache_len,
+            use_pallas=True,
+        )
+
     t_buckets = sorted({min(t, cfg.t_len) for t in dec_t_buckets})
     for b in dec_buckets:
         for t in t_buckets:
@@ -118,9 +189,8 @@ def lower_task(task: str, out: Path, enc_buckets, dec_buckets, dec_t_buckets) ->
                 *leaf_specs,
             )
             fname = f"dec_{task}_b{b}_t{t}.hlo.txt"
-            (out / fname).write_text(to_hlo_text(lowered))
-            manifest.append(f"dec\t{task}\t{b}\t{t}\t{fname}")
-            print(f"  wrote {fname}")
+            write_artifact(fname, to_hlo_text(lowered))
+            manifest.append(manifest_row("dec", task, b, t, fname))
 
             lowered = jax.jit(decfast_fn, keep_unused=True).lower(
                 jax.ShapeDtypeStruct((b, t), jnp.int32),
@@ -131,21 +201,46 @@ def lower_task(task: str, out: Path, enc_buckets, dec_buckets, dec_t_buckets) ->
                 *leaf_specs,
             )
             fname = f"decfast_{task}_b{b}_t{t}.hlo.txt"
-            (out / fname).write_text(to_hlo_text(lowered))
-            manifest.append(f"decfast\t{task}\t{b}\t{t}\t{fname}")
-            print(f"  wrote {fname}")
+            write_artifact(fname, to_hlo_text(lowered))
+            manifest.append(manifest_row("decfast", task, b, t, fname))
 
+        for w in sorted({min(w, cfg.t_len) for w in cache_windows}):
+            lowered = jax.jit(deccache_fn, keep_unused=True).lower(
+                jax.ShapeDtypeStruct((b, w), jnp.int32),
+                jax.ShapeDtypeStruct((b, w), jnp.int32),
+                jax.ShapeDtypeStruct((b, w), jnp.float32),
+                jax.ShapeDtypeStruct((b, cfg.s_len, cfg.d_model), jnp.float32),
+                jax.ShapeDtypeStruct((b, cfg.s_len), jnp.float32),
+                jax.ShapeDtypeStruct((cfg.n_dec, b, cfg.t_len, cfg.d_model), jnp.float32),
+                jax.ShapeDtypeStruct((cfg.n_dec, b, cfg.t_len, cfg.d_model), jnp.float32),
+                jax.ShapeDtypeStruct((b,), jnp.int32),
+                *leaf_specs,
+            )
+            fname = f"deccache_{task}_b{b}_t{w}.hlo.txt"
+            write_artifact(fname, to_hlo_text(lowered))
+            manifest.append(manifest_row("deccache", task, b, w, fname))
+
+    manifest.append(meta_row(task, "content_digest", digest.hexdigest()[:16]))
     return manifest
 
 
-def main():
+def build_parser() -> argparse.ArgumentParser:
+    """The CLI surface. Defaults are pinned against the usage docstring by
+    python/tests/test_train_smoke.py (they drifted apart once)."""
     ap = argparse.ArgumentParser()
     ap.add_argument("--out", default="../artifacts")
     ap.add_argument("--tasks", default="fwd,retro")
     ap.add_argument("--enc-buckets", default="1,8,32")
     ap.add_argument("--dec-buckets", default="1,4,8,16,32,64")
     ap.add_argument("--dec-t-buckets", default="24,48,96")
-    args = ap.parse_args()
+    ap.add_argument(
+        "--cache-windows", default=",".join(str(w) for w in CACHE_WINDOWS)
+    )
+    return ap
+
+
+def main():
+    args = build_parser().parse_args()
 
     out = Path(args.out)
     out.mkdir(parents=True, exist_ok=True)
@@ -158,6 +253,7 @@ def main():
             [int(x) for x in args.enc_buckets.split(",")],
             [int(x) for x in args.dec_buckets.split(",")],
             [int(x) for x in args.dec_t_buckets.split(",")],
+            [int(x) for x in args.cache_windows.split(",")],
         )
     (out / "manifest.tsv").write_text("\n".join(manifest) + "\n")
     print(f"[aot] manifest: {len(manifest)} artifacts")

@@ -253,3 +253,105 @@ def decode_logprobs(
         x = x[:, -out_window:, :]
     logits = x @ params["out_w"] + params["out_b"]
     return jax.nn.log_softmax(logits, axis=-1)
+
+
+def decode_logprobs_cached(
+    params,
+    cfg: ModelConfig,
+    tgt_window,
+    tgt_pos,
+    tgt_pad,
+    mem,
+    mem_pad,
+    k_cache,
+    v_cache,
+    cache_len,
+    *,
+    use_pallas: bool = False,
+):
+    """Cache-shaped decoder forward: attention over the appended window only.
+
+    The KV-cache formulation: each call appends a small window of tokens
+    to a committed prefix whose per-layer self-attention K/V already live
+    in `k_cache`/`v_cache`, so the decoder stack runs over `W` positions
+    instead of the whole prefix (the ~L/2 → ~1 recompute-per-token win
+    the Rust runtime's `deccache` sessions realize).
+
+    Args:
+      tgt_window: [B, W] i32 — appended tokens, **right-padded** (real
+                  tokens occupy slots 0..m; contrast the left-padded full
+                  decoder: right padding keeps the cache write contiguous
+                  at `cache_len`)
+      tgt_pos:    [B, W] i32 — absolute position ids (`cache_len + slot`
+                  on real slots)
+      tgt_pad:    [B, W] f32 — 1.0 on real slots
+      mem:        [B, S, D] f32 — encoder output, one row per lane
+      mem_pad:    [B, S] f32
+      k_cache:    [L, B, T, D] f32 — per-decoder-layer self-attention keys
+                  of the committed prefix (post-projection, pre-head-split);
+                  slots ≥ `cache_len` are ignored and overwritten
+      v_cache:    [L, B, T, D] f32 — same for values
+      cache_len:  [B] i32 — committed prefix length per lane
+
+    Returns `(logp [B, W, V], k_cache' [L, B, T, D], v_cache')`: successor
+    log-probs for the window plus the updated caches (input caches with
+    the window's K/V written at slots `cache_len..cache_len+m`; slots
+    beyond stay untouched — stale contents there are masked out of every
+    attention, so a host-side rewind is just a smaller `cache_len`).
+    """
+    b, w = tgt_window.shape
+    t_cap = k_cache.shape[2]
+    x = params["tok_emb"][tgt_window] * jnp.sqrt(float(cfg.d_model))
+    x = x + sinusoidal_pe(tgt_pos, cfg.d_model)
+
+    # Cache-slot geometry, shared by the masked attention and the cache
+    # write. `jwin[b, t]` is the window slot that cache slot `t` receives
+    # this call (negative / ≥ W means "not written").
+    t_idx = jnp.arange(t_cap, dtype=jnp.int32)
+    cl = cache_len.astype(jnp.int32)[:, None]  # [B, 1]
+    jwin = t_idx[None, :] - cl  # [B, T]
+    in_window = (jwin >= 0) & (jwin < w)
+    jwin_c = jnp.clip(jwin, 0, w - 1)
+    # A cache slot is a *real* key iff it is committed prefix, or it is
+    # written this call from a real (non-pad) window slot.
+    win_real = jnp.take_along_axis(tgt_pad, jwin_c, axis=1) * in_window  # [B, T]
+    key_real = jnp.where(t_idx[None, :] < cl, 1.0, win_real)  # [B, T]
+    # Causal: query slot i (absolute position cache_len + i) may attend
+    # cache slot t iff t ≤ cache_len + i. Combined into one additive mask
+    # so NEG_INF never accumulates.
+    i_idx = jnp.arange(w, dtype=jnp.int32)
+    causal = t_idx[None, None, :] <= cl[:, :, None] + i_idx[None, :, None]  # [B, W, T]
+    allowed = jnp.where(causal, key_real[:, None, :], 0.0)
+    self_mask = (1.0 - allowed)[:, None, :, :] * NEG_INF  # [B, 1, W, T]
+    cross_mask = (1.0 - mem_pad)[:, None, None, :] * NEG_INF
+
+    write = (win_real > 0)[:, :, None]  # [B, T, 1]
+
+    def scatter_window(cache, new):
+        # Clamp-free per-lane write of `new[b, jwin[b, t]]` into slot `t`
+        # for slots inside the window: gather + select instead of a
+        # dynamic-update-slice, so per-lane `cache_len` offsets never
+        # clamp or spill past T.
+        gathered = jnp.take_along_axis(new, jwin_c[:, :, None], axis=1)  # [B, T, D]
+        return jnp.where(write, gathered, cache)
+
+    f = mha_pallas if use_pallas else mha_ref
+    k_out = []
+    v_out = []
+    for i in range(cfg.n_dec):
+        p = params[f"dec{i}"]
+        sa = p["self_attn"]
+        h = _layer_norm(p["ln1"], x)
+        q = _split_heads(h @ sa["wq"] + sa["bq"], cfg.n_heads)
+        k_upd = scatter_window(k_cache[i], h @ sa["wk"] + sa["bk"])
+        v_upd = scatter_window(v_cache[i], h @ sa["wv"] + sa["bv"])
+        k_out.append(k_upd)
+        v_out.append(v_upd)
+        o = f(q, _split_heads(k_upd, cfg.n_heads), _split_heads(v_upd, cfg.n_heads), self_mask)
+        x = x + _merge_heads(o) @ sa["wo"] + sa["bo"]
+        h = _layer_norm(p["ln2"], x)
+        x = x + _attention(p["cross_attn"], cfg, h, mem, cross_mask, use_pallas)
+        x = x + _ffn(p["ffn"], _layer_norm(p["ln3"], x))
+    x = _layer_norm(params["dec_ln_f"], x)
+    logits = x @ params["out_w"] + params["out_b"]
+    return jax.nn.log_softmax(logits, axis=-1), jnp.stack(k_out), jnp.stack(v_out)

@@ -14,7 +14,13 @@ import numpy as np
 import pytest
 
 from compile.data import BOS_ID, EOS_ID, PAD_ID
-from compile.model import ModelConfig, decode_logprobs, encode, init_params
+from compile.model import (
+    ModelConfig,
+    decode_logprobs,
+    decode_logprobs_cached,
+    encode,
+    init_params,
+)
 
 CFG = ModelConfig(vocab=31, d_model=32, n_heads=2, d_ff=64, n_enc=2, n_dec=2, s_len=16, t_len=16)
 
@@ -142,6 +148,90 @@ def test_src_pad_does_not_leak(params):
         params, CFG, tgt, pos, tpad, encode(params, CFG, jnp.asarray(src_b), jnp.asarray(pad_a)), jnp.asarray(pad_a)
     )
     np.testing.assert_allclose(np.asarray(la)[0, :2], np.asarray(lb)[0, :2], rtol=1e-4, atol=1e-5)
+
+
+def window_inputs(chunk, start, w):
+    """Right-padded deccache window inputs for `chunk` at prefix `start`."""
+    tgt = np.zeros((1, w), np.int32)
+    pos = np.zeros((1, w), np.int32)
+    pad = np.zeros((1, w), np.float32)
+    tgt[0, : len(chunk)] = chunk
+    pos[0, : len(chunk)] = start + np.arange(len(chunk))
+    pad[0, : len(chunk)] = 1.0
+    return jnp.asarray(tgt), jnp.asarray(pos), jnp.asarray(pad)
+
+
+def empty_cache():
+    shape = (CFG.n_dec, 1, CFG.t_len, CFG.d_model)
+    return jnp.zeros(shape, jnp.float32), jnp.zeros(shape, jnp.float32)
+
+
+def test_cached_decoder_matches_full(params):
+    # Incremental windows through decode_logprobs_cached must reproduce
+    # the full-prefix decoder position for position — the contract the
+    # Rust deccache sessions rely on.
+    src, spad = wrap_src([5, 6, 7, 8])
+    mem = encode(params, CFG, src, spad)
+    tokens = [BOS_ID, 5, 6, 7, 8, 9, 10, 11, 12]
+    tf, pf, df = right_pad_row(tokens, CFG.t_len)
+    full = np.asarray(decode_logprobs(params, CFG, tf, pf, df, mem, spad))
+
+    k, v = empty_cache()
+    got = np.zeros((len(tokens), CFG.vocab), np.float32)
+    start = 0
+    w = 4  # fixed window bucket; real lengths vary per call
+    for wlen in [1, 3, 2, 3]:
+        tgt, pos, pad = window_inputs(tokens[start : start + wlen], start, w)
+        lp, k, v = decode_logprobs_cached(
+            params, CFG, tgt, pos, pad, mem, spad, k, v,
+            jnp.asarray([start], jnp.int32),
+        )
+        got[start : start + wlen] = np.asarray(lp)[0, :wlen]
+        start += wlen
+    assert start == len(tokens)
+    np.testing.assert_allclose(got, full[0, : len(tokens)], rtol=1e-4, atol=1e-4)
+
+
+def test_cached_decoder_rewind_overwrites_stale_slots(params):
+    # A rewind is just a smaller cache_len: stale K/V beyond it must be
+    # masked/overwritten, so re-extending with different tokens matches a
+    # fresh full decode of the new sequence (the stale-cache bug class
+    # this artifact shape must not reintroduce).
+    src, spad = wrap_src([5, 6, 7])
+    mem = encode(params, CFG, src, spad)
+    committed = [BOS_ID, 5, 6, 7, 8, 9, 10]
+    k, v = empty_cache()
+    tgt, pos, pad = window_inputs(committed, 0, 8)
+    _, k, v = decode_logprobs_cached(
+        params, CFG, tgt, pos, pad, mem, spad, k, v, jnp.asarray([0], jnp.int32)
+    )
+    # Rewind to 3 committed tokens, extend a diverging window.
+    keep, fresh = committed[:3], [11, 12, 13]
+    tgt, pos, pad = window_inputs(fresh, len(keep), 4)
+    lp, k, v = decode_logprobs_cached(
+        params, CFG, tgt, pos, pad, mem, spad, k, v,
+        jnp.asarray([len(keep)], jnp.int32),
+    )
+    tf, pf, df = right_pad_row(keep + fresh, CFG.t_len)
+    full = np.asarray(decode_logprobs(params, CFG, tf, pf, df, mem, spad))
+    np.testing.assert_allclose(
+        np.asarray(lp)[0, : len(fresh)],
+        full[0, len(keep) : len(keep) + len(fresh)],
+        rtol=1e-4,
+        atol=1e-4,
+    )
+
+
+def test_cached_decoder_pallas_matches_ref(params):
+    src, spad = wrap_src([5, 6, 7])
+    mem = encode(params, CFG, src, spad)
+    k, v = empty_cache()
+    tgt, pos, pad = window_inputs([BOS_ID, 5, 6], 0, 4)
+    args = (params, CFG, tgt, pos, pad, mem, spad, k, v, jnp.asarray([0], jnp.int32))
+    lr, kr, vr = decode_logprobs_cached(*args, use_pallas=False)
+    lp, kp, vp = decode_logprobs_cached(*args, use_pallas=True)
+    np.testing.assert_allclose(np.asarray(lr)[0, :3], np.asarray(lp)[0, :3], rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(kr), np.asarray(kp), rtol=2e-4, atol=2e-5)
 
 
 def test_pallas_and_ref_model_level_equivalence(params):

@@ -1,5 +1,8 @@
 """Training smoke: a few steps on a tiny model must reduce the loss and
-the batch assembler must honour the layout contract."""
+the batch assembler must honour the layout contract. Also pins the AOT
+CLI surface: argparse defaults vs the usage docstring (they drifted
+apart once) and the manifest column contract shared with the Rust
+parser (rust/tests/data/manifest_golden.tsv)."""
 
 import sys
 from pathlib import Path
@@ -69,6 +72,82 @@ def test_lr_schedule_warmup_then_decay():
     assert lrs[0] < lrs[1] < lrs[2]  # warmup
     assert lrs[3] < lrs[2]  # decay
     assert float(lr_schedule(jnp.asarray(0.0), 128)) > 0  # step clamp
+
+
+def test_aot_usage_docstring_matches_argparse_defaults():
+    # The usage block once advertised `--dec-buckets 1,2,4,8,16,32,64`
+    # while the argparse default was `1,4,8,16,32,64`. Pin every
+    # bucket-flag default to the docstring so they cannot drift again.
+    from compile import aot
+
+    defaults = {
+        a.option_strings[0]: a.default
+        for a in aot.build_parser()._actions
+        if a.option_strings
+    }
+    for flag in ("--enc-buckets", "--dec-buckets", "--dec-t-buckets", "--cache-windows"):
+        assert flag in defaults, f"missing {flag}"
+        expect = f"[{flag} {defaults[flag]}]"
+        assert expect in aot.__doc__, (
+            f"usage docstring out of sync with argparse: expected {expect!r}"
+        )
+
+
+def test_manifest_rows_match_rust_golden_file():
+    # The manifest column contract (`kind\ttask\teb\ttlen\tfile`, plus
+    # `meta` key/value rows) is shared with rust/src/runtime/pjrt.rs.
+    # Regenerate the checked-in golden sample from the Python helpers and
+    # require an exact match — the Rust side parses the same file in
+    # rust/tests/manifest_golden.rs.
+    from compile import aot
+
+    golden = (
+        Path(__file__).resolve().parents[2]
+        / "rust"
+        / "tests"
+        / "data"
+        / "manifest_golden.tsv"
+    ).read_text()
+    digests = {"fwd": "9c1d3adf00aa43b2", "retro": "5e2b7c90d1f4a688"}
+    lines = []
+    for task, ebs in (("fwd", (1, 8)), ("retro", (1,))):
+        lines.append(aot.meta_row(task, "decfast_window", aot.DECFAST_WINDOW))
+        for eb in ebs:
+            lines.append(aot.manifest_row("enc", task, eb, 0, f"enc_{task}_b{eb}.hlo.txt"))
+        if task == "fwd":
+            for eb, t in ((1, 24), (8, 96)):
+                lines.append(
+                    aot.manifest_row("dec", task, eb, t, f"dec_{task}_b{eb}_t{t}.hlo.txt")
+                )
+                lines.append(
+                    aot.manifest_row(
+                        "decfast", task, eb, t, f"decfast_{task}_b{eb}_t{t}.hlo.txt"
+                    )
+                )
+            deccache = ((1, 1), (1, 16), (8, 4), (8, 16))
+        else:
+            for eb, t in ((1, 48),):
+                lines.append(
+                    aot.manifest_row("dec", task, eb, t, f"dec_{task}_b{eb}_t{t}.hlo.txt")
+                )
+                lines.append(
+                    aot.manifest_row(
+                        "decfast", task, eb, t, f"decfast_{task}_b{eb}_t{t}.hlo.txt"
+                    )
+                )
+            deccache = ((4, 8),)
+        for eb, w in deccache:
+            lines.append(
+                aot.manifest_row(
+                    "deccache", task, eb, w, f"deccache_{task}_b{eb}_t{w}.hlo.txt"
+                )
+            )
+        lines.append(aot.meta_row(task, "content_digest", digests[task]))
+    regenerated = "\n".join(lines) + "\n"
+    assert sorted(regenerated.splitlines()) == sorted(golden.splitlines()), (
+        "python manifest helpers no longer reproduce the golden manifest"
+    )
+    assert aot.MANIFEST_COLUMNS == "kind\ttask\teb\ttlen\tfile"
 
 
 def test_loss_fn_masks_padding(vocab):

@@ -212,10 +212,12 @@ fn main() -> anyhow::Result<()> {
         aux(&rows[3], "acc_rate") * 100.0
     );
     // The session-cache acceptance criterion: ≥2x fewer token positions
-    // recomputed per emitted token vs the stateless baseline (the
-    // reference backend's KV-cached session computes each position once;
-    // the PJRT fallback reports parity until artifacts grow cache
-    // inputs).
+    // recomputed per emitted token vs the stateless baseline. Both
+    // session-capable backends compute each position once — the
+    // reference transformer via its KV-cached CachedSession, the PJRT
+    // backend via the deccache artifacts (recomp_tok ~L/2 → ~1); only a
+    // PJRT artifact set without deccache rows still reports parity here
+    // (stateless-recompute fallback).
     let (cached, stateless) = (aux(&rows[0], "recomp_tok"), aux(&rows[1], "recomp_tok"));
     println!(
         "decoder FLOPs proxy (tokens recomputed per emitted token): \

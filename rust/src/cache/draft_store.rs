@@ -118,6 +118,14 @@ impl DraftStore {
         order.into_iter().take(k).map(|(_, _, w)| w.clone()).collect()
     }
 
+    /// Drop every indexed window (model redeploy: mined windows are only
+    /// valid per artifact version — a new model's targets are a new
+    /// corpus). The observation sequence keeps counting so tie-break
+    /// order stays monotonic across flushes.
+    pub fn clear(&self) {
+        self.inner.lock().unwrap().counts.clear();
+    }
+
     /// Distinct windows currently indexed.
     pub fn len(&self) -> usize {
         self.inner.lock().unwrap().counts.len()

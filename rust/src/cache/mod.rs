@@ -97,6 +97,7 @@ pub struct ServeCache {
     cfg: CacheConfig,
     results: ResultCache<CachedPrediction>,
     drafts: DraftStore,
+    artifact_version: std::sync::atomic::AtomicU64,
 }
 
 impl ServeCache {
@@ -105,6 +106,23 @@ impl ServeCache {
             results: ResultCache::new(cfg.result_capacity, cfg.result_shards),
             drafts: DraftStore::new(cfg.draft_window, cfg.draft_capacity),
             cfg,
+            artifact_version: std::sync::atomic::AtomicU64::new(0),
+        }
+    }
+
+    /// Bind the cache pair to a model/artifact identity
+    /// (`AnyBackend::artifact_version()`): cached predictions and mined
+    /// draft windows are only valid per artifact version, so a redeploy
+    /// (different weights or artifacts) flushes both stores and folds the
+    /// new version into every future result-cache key. Rebinding the
+    /// same version is a no-op — serving setup calls this once per
+    /// backend load.
+    pub fn bind_artifact_version(&self, version: u64) {
+        use std::sync::atomic::Ordering;
+        let old = self.artifact_version.swap(version, Ordering::Relaxed);
+        self.results.set_version(version);
+        if old != version {
+            self.drafts.clear();
         }
     }
 
@@ -214,6 +232,32 @@ mod tests {
         });
         c2.drafts().record(&[1, 2, 3, 4, 5, 6, 7, 8, 9]);
         assert!(!c2.corpus_drafts_for_sbs().is_empty());
+    }
+
+    #[test]
+    fn artifact_rebind_flushes_results_and_drafts() {
+        let c = ServeCache::default();
+        let pred = CachedPrediction {
+            hyps: vec![("CCO".to_string(), -0.5)],
+            acceptance_rate: 0.5,
+        };
+        c.results().insert(1, vec![4, 5], pred);
+        c.drafts().record(&[1, 2, 3, 4, 5, 6, 7, 8]);
+        c.bind_artifact_version(0xA11FA);
+        assert!(
+            c.results().get(1, &[4, 5]).is_none(),
+            "prediction from the old model must not survive a redeploy"
+        );
+        assert!(c.results().is_empty());
+        assert!(c.drafts().is_empty(), "mined windows are per-model too");
+        // Same version again: entries written after the rebind survive.
+        let pred2 = CachedPrediction {
+            hyps: vec![("CC".to_string(), -0.1)],
+            acceptance_rate: 0.0,
+        };
+        c.results().insert(1, vec![4, 5], pred2.clone());
+        c.bind_artifact_version(0xA11FA);
+        assert_eq!(c.results().get(1, &[4, 5]), Some(pred2));
     }
 
     #[test]

@@ -45,9 +45,17 @@ impl<V> Shard<V> {
 /// The memo. Generic over the cached value so the serving coordinator
 /// (completed replies) and the planner (disconnection lists) share one
 /// implementation.
+///
+/// Entries are only valid for the model that produced them: the caller's
+/// tag is combined with an **artifact version** ([`ResultCache::set_version`])
+/// before keying, so entries written under one model identity can never
+/// hit under another — and a version change additionally flushes every
+/// shard (belt and suspenders: the fold guards even persisted/raced
+/// entries, the flush reclaims the memory immediately).
 pub struct ResultCache<V> {
     shards: Vec<Mutex<Shard<V>>>,
     shard_capacity: usize,
+    version: AtomicU64,
     hits: AtomicU64,
     misses: AtomicU64,
     inserts: AtomicU64,
@@ -71,10 +79,38 @@ impl<V: Clone> ResultCache<V> {
         ResultCache {
             shards: (0..n).map(|_| Mutex::new(Shard::new())).collect(),
             shard_capacity: capacity.div_ceil(n).max(1),
+            version: AtomicU64::new(0),
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
             inserts: AtomicU64::new(0),
             evictions: AtomicU64::new(0),
+        }
+    }
+
+    /// Fold the artifact version into a caller tag. Keys store the
+    /// *effective* tag, so even an entry that somehow survived a flush
+    /// (or arrived from a future persisted store) cannot hit across a
+    /// model redeploy.
+    fn effective_tag(&self, tag: u64) -> u64 {
+        tag ^ self.version.load(Ordering::Relaxed).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+    }
+
+    /// Bind the cache to a model/artifact identity. A changed version
+    /// flushes every shard (flush-on-mismatch) and re-tags all future
+    /// keys; rebinding the same version is a no-op.
+    pub fn set_version(&self, version: u64) {
+        let old = self.version.swap(version, Ordering::Relaxed);
+        if old != version {
+            self.clear();
+        }
+    }
+
+    /// Drop every entry (all shards).
+    pub fn clear(&self) {
+        for s in &self.shards {
+            let mut g = s.lock().unwrap();
+            g.map.clear();
+            g.lru.clear();
         }
     }
 
@@ -84,6 +120,7 @@ impl<V: Clone> ResultCache<V> {
 
     /// Look up a memoized value, refreshing its recency on a hit.
     pub fn get(&self, tag: u64, query: &[i64]) -> Option<V> {
+        let tag = self.effective_tag(tag);
         let idx = self.shard_of(tag, query);
         let mut guard = self.shards[idx].lock().unwrap();
         let sh = &mut *guard;
@@ -107,6 +144,7 @@ impl<V: Clone> ResultCache<V> {
     /// Insert (or refresh) an entry. Returns how many entries were
     /// evicted to make room (0 or 1).
     pub fn insert(&self, tag: u64, query: Vec<i64>, value: V) -> u64 {
+        let tag = self.effective_tag(tag);
         let idx = self.shard_of(tag, &query);
         let mut guard = self.shards[idx].lock().unwrap();
         let sh = &mut *guard;
@@ -206,6 +244,28 @@ mod tests {
         assert_eq!(c.get(0, &[4]), Some(4));
         assert_eq!(c.len(), 3);
         assert_eq!(c.stats().evictions, 1);
+    }
+
+    #[test]
+    fn version_change_misses_and_flushes() {
+        let c: ResultCache<i64> = ResultCache::new(8, 2);
+        c.insert(1, vec![5, 6], 42);
+        assert_eq!(c.get(1, &[5, 6]), Some(42));
+        // Redeploy: a different artifact version must miss AND flush.
+        c.set_version(0x0DD5EED);
+        assert!(
+            c.get(1, &[5, 6]).is_none(),
+            "entry from the old model must not survive a redeploy"
+        );
+        assert_eq!(c.len(), 0, "flush-on-mismatch must drop all entries");
+        c.insert(1, vec![5, 6], 43);
+        assert_eq!(c.get(1, &[5, 6]), Some(43));
+        // Rebinding the same version is a no-op.
+        c.set_version(0x0DD5EED);
+        assert_eq!(c.get(1, &[5, 6]), Some(43));
+        // Another redeploy re-tags again.
+        c.set_version(7);
+        assert!(c.get(1, &[5, 6]).is_none());
     }
 
     #[test]

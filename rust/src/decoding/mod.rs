@@ -33,10 +33,11 @@
 //!
 //! All algorithms are generic over [`Backend`], which is implemented by
 //! the PJRT runtime (`runtime::PjrtBackend`, the production path, with a
-//! stateless-recompute session until artifacts grow cache inputs), by
-//! the pure-Rust reference transformer (`model::reference`, with a real
-//! KV-cached session), and by deterministic mock models (`testutil`)
-//! used to property-test the algorithm invariants:
+//! KV-cached session over `deccache` artifacts and a stateless-recompute
+//! fallback for artifact sets without them), by the pure-Rust reference
+//! transformer (`model::reference`, with a real KV-cached session), and
+//! by deterministic mock models (`testutil`) used to property-test the
+//! algorithm invariants:
 //!
 //! * speculative greedy is **token-exact** vs greedy,
 //! * speculative beam search with a never-accepted draft reduces to
@@ -47,7 +48,7 @@
 mod beam;
 mod greedy;
 mod sbs;
-mod session;
+pub(crate) mod session;
 mod spec_greedy;
 
 pub use beam::beam_search;

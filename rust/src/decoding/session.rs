@@ -4,9 +4,10 @@
 //! per-row token buffers and re-submitting full prefixes through
 //! [`Backend::decode`] on every `extend`. This is the compatibility
 //! bridge: the mock backends in `testutil`, and any backend without a
-//! cache-aware session (the PJRT path until its artifacts grow cache
-//! inputs), all decode through it — with exactly the pre-session
-//! behaviour and cost (`tokens_reused` stays 0).
+//! cache-aware session — for the PJRT path that now means only artifact
+//! sets *without* `deccache` rows (or runs forced via
+//! `RXNSPEC_NO_DECCACHE`) — all decode through it, with exactly the
+//! pre-session behaviour and cost (`tokens_reused` stays 0).
 //!
 //! It is also the oracle in the session-parity property tests: because a
 //! conditionally-consistent backend's distributions depend only on each
@@ -16,6 +17,113 @@
 use anyhow::Result;
 
 use super::{Backend, DecoderRow, DecoderSession, LogProbs, Memory, ModelDims, SessionStats};
+
+/// Default per-row log-prob retention (positions) when `RXNSPEC_LP_RETAIN`
+/// is unset — comfortably above any draft window the decoders submit.
+/// Shared by every cache-aware session (the reference transformer's and
+/// the PJRT deccache session), so the two cannot drift apart.
+pub(crate) const DEFAULT_LP_RETAIN: usize = 64;
+
+/// The `RXNSPEC_LP_RETAIN` knob, parsed once per session: how many
+/// positions of per-row successor log-probs to retain (min 1; deeper
+/// rewinds are healed by one exact recompute).
+pub(crate) fn lp_retention_from_env() -> usize {
+    std::env::var("RXNSPEC_LP_RETAIN")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .unwrap_or(DEFAULT_LP_RETAIN)
+        .max(1)
+}
+
+// ---------------------------------------------------------------------------
+// Shared cache-aware-session mechanics
+//
+// The reference transformer's `CachedSession` and the PJRT
+// `CachedPjrtSession` keep different cache representations (KvPanels vs
+// flat device mirrors) but implement the *same* session contract. The
+// contract-critical arithmetic lives here once, so the two cannot drift:
+// the deep-rewind heal + log-prob rollback, the result-window sizing,
+// the windowed-LogProbs assembly, and the retention drain.
+// ---------------------------------------------------------------------------
+
+/// Roll one row's token history and retained log-prob suffix back to the
+/// extend submit point. A rewind past the retained suffix is healed by
+/// prepending the last committed token to the job (its recompute against
+/// the cached K/V prefix is exact). Returns `(start, job_tokens)`:
+/// `start` is the committed length the backend resumes from, and
+/// `job_tokens` the window to compute (callers append it to `tokens`
+/// when their compute step doesn't).
+pub(crate) fn rollback_for_extend<'t>(
+    tokens: &mut Vec<i64>,
+    lp: &mut Vec<f32>,
+    lp_start: &mut usize,
+    len_before: usize,
+    toks: &'t [i64],
+    vocab: usize,
+) -> (usize, std::borrow::Cow<'t, [i64]>) {
+    let (start, job) = if len_before > 0 && len_before - 1 < *lp_start {
+        let mut jt = Vec::with_capacity(toks.len() + 1);
+        jt.push(tokens[len_before - 1]);
+        jt.extend_from_slice(toks);
+        (len_before - 1, std::borrow::Cow::Owned(jt))
+    } else {
+        (len_before, std::borrow::Cow::Borrowed(toks))
+    };
+    tokens.truncate(start);
+    if start <= *lp_start {
+        lp.clear();
+        *lp_start = start;
+    } else {
+        lp.truncate((start - *lp_start) * vocab);
+    }
+    (start, job)
+}
+
+/// Stored-window columns one row needs from an extend's result: the
+/// successor distributions of the last pre-extend token and of every
+/// appended token (the `DecoderSession::extend` contract).
+pub(crate) fn needed_window(len_before: usize, delta_len: usize) -> usize {
+    (delta_len + usize::from(len_before > 0)).min(len_before + delta_len)
+}
+
+/// Copy one row's readable log-prob columns into the shared windowed
+/// result buffer (`[rows, window, vocab]`, rows right-aligned). Columns
+/// before the retained suffix are unreadable by contract and stay zero.
+pub(crate) fn assemble_window_row(
+    data: &mut [f32],
+    ri: usize,
+    window: usize,
+    vocab: usize,
+    len: usize,
+    lp: &[f32],
+    lp_start: usize,
+) {
+    let lo = len.saturating_sub(window).max(lp_start);
+    for j in lo..len {
+        let wcol = window - len + j;
+        let dst = (ri * window + wcol) * vocab;
+        let src = (j - lp_start) * vocab;
+        data[dst..dst + vocab].copy_from_slice(&lp[src..src + vocab]);
+    }
+}
+
+/// Drain a row's log-prob suffix down to `retain` positions, advancing
+/// `lp_start`. Returns the pre-trim retained count (the
+/// `lp_high_water` sample).
+pub(crate) fn trim_lp_suffix(
+    lp: &mut Vec<f32>,
+    lp_start: &mut usize,
+    vocab: usize,
+    retain: usize,
+) -> usize {
+    let retained = lp.len() / vocab;
+    if retained > retain {
+        let excess = retained - retain;
+        lp.drain(..excess * vocab);
+        *lp_start += excess;
+    }
+    retained
+}
 
 struct Row {
     tokens: Vec<i64>,

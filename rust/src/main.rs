@@ -133,6 +133,9 @@ fn cmd_serve(opts: Opts) -> Result<()> {
     } else {
         ServeCache::disabled()
     };
+    // Cache entries are only valid per artifact version: bind the loaded
+    // model's identity so a redeploy can never serve stale predictions.
+    cache.bind_artifact_version(backend.artifact_version());
     let state = Arc::new(ServerState {
         queue: RequestQueue::new(opts.batch_max, Duration::from_millis(opts.batch_wait_ms)),
         metrics: Arc::new(Metrics::default()),

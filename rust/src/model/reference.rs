@@ -33,6 +33,10 @@ use std::sync::Arc;
 
 use anyhow::Result;
 
+use crate::decoding::session::{
+    assemble_window_row, lp_retention_from_env, needed_window, rollback_for_extend,
+    trim_lp_suffix,
+};
 use crate::decoding::{
     Backend, DecoderRow, DecoderSession, LogProbs, Memory, ModelDims, SessionStats,
 };
@@ -76,10 +80,6 @@ impl Config {
         self.d_model / self.n_heads
     }
 }
-
-/// Default per-row log-prob retention (positions) when `RXNSPEC_LP_RETAIN`
-/// is unset — comfortably above any draft window the decoders submit.
-const DEFAULT_LP_RETAIN: usize = 64;
 
 // ---------------------------------------------------------------------------
 // Small per-row helpers (row-major [rows, cols] in flat Vec<f32>)
@@ -261,6 +261,9 @@ pub struct RustBackend {
     /// Kernel thread budget (1 = off; `RXNSPEC_THREADS` sets the
     /// default, [`RustBackend::set_threads`] overrides it).
     threads: usize,
+    /// Checkpoint content hash — the artifact identity folded into
+    /// cross-request cache keys (`cache::ServeCache`).
+    version: u64,
 }
 
 impl RustBackend {
@@ -309,11 +312,17 @@ impl RustBackend {
             pe,
             pe_len,
             threads: default_threads(),
+            version: w.content_hash(),
         })
     }
 
     pub fn config(&self) -> Config {
         self.cfg
+    }
+
+    /// Checkpoint identity for cross-request cache keying.
+    pub fn artifact_version(&self) -> u64 {
+        self.version
     }
 
     /// Override the kernel thread budget (1 disables threading). The
@@ -605,11 +614,7 @@ pub struct CachedSession<'a> {
 impl<'a> CachedSession<'a> {
     pub fn new(backend: &'a RustBackend, memory: Memory) -> CachedSession<'a> {
         let batch = memory.batch;
-        let lp_retain = std::env::var("RXNSPEC_LP_RETAIN")
-            .ok()
-            .and_then(|v| v.parse::<usize>().ok())
-            .unwrap_or(DEFAULT_LP_RETAIN)
-            .max(1);
+        let lp_retain = lp_retention_from_env();
         CachedSession {
             backend,
             memory,
@@ -771,6 +776,122 @@ impl RustBackend {
             }
         }
     }
+
+    /// Pure-Rust mirror of the `deccache` AOT artifact semantics
+    /// (`python/compile/model.py::decode_logprobs_cached`): one decoder
+    /// pass over each lane's appended window against flat `[L, EB, T, D]`
+    /// K/V caches, windows right-padded, `cache_len[lane]` committed
+    /// positions per lane, the window's K/V written back at slots
+    /// `cache_len..cache_len+m` (everything else untouched).
+    ///
+    /// This is the executor the PJRT cached-session machinery is
+    /// property-tested against (`testutil::RefDeccacheExec`): per lane it
+    /// runs the exact kernels the reference `CachedSession` runs —
+    /// fused-QKV GEMM, panel attention with causal offset `cache_len`,
+    /// session-equivalent cross-attention — so its outputs are
+    /// **bit-identical** to the stateless oracle by the kernels'
+    /// fixed-reduction-order contract. (The real artifact computes the
+    /// same function with XLA kernels; artifact↔reference closeness is
+    /// backend_parity's job.)
+    ///
+    /// Returns `[EB, W, V]` log-probs (pad slots zero-filled).
+    #[allow(clippy::too_many_arguments)]
+    pub fn deccache_apply(
+        &self,
+        w: usize,
+        eb: usize,
+        tgt: &[i64],
+        pos: &[i64],
+        tgt_pad: &[f32],
+        cache_len: &[i64],
+        k_cache: &mut [f32],
+        v_cache: &mut [f32],
+        mem: &Memory,
+        mem_rows: &[usize],
+    ) -> Result<Vec<f32>> {
+        let (d, v, t_cap) = (self.cfg.d_model, self.cfg.vocab, self.cfg.t_len);
+        let n_l = self.cfg.n_dec;
+        anyhow::ensure!(
+            k_cache.len() == n_l * eb * t_cap * d && v_cache.len() == k_cache.len(),
+            "deccache_apply: cache shape mismatch"
+        );
+        anyhow::ensure!(
+            tgt.len() == eb * w && pos.len() == eb * w && tgt_pad.len() == eb * w,
+            "deccache_apply: window shape mismatch"
+        );
+        let dh = self.cfg.d_head();
+        let mut logp = vec![0f32; eb * w * v];
+        for lane in 0..eb {
+            let m = (0..w).take_while(|&j| tgt_pad[lane * w + j] > 0.0).count();
+            if m == 0 {
+                continue;
+            }
+            let start = cache_len[lane] as usize;
+            anyhow::ensure!(
+                start + m <= t_cap,
+                "deccache_apply: lane {lane} overflows cache capacity {t_cap}"
+            );
+            let toks = &tgt[lane * w..lane * w + m];
+            let positions = &pos[lane * w..lane * w + m];
+            let mut x = vec![0f32; m * d];
+            self.embed_into(toks, positions, &mut x);
+
+            // Load the committed prefix into per-head panels, per layer.
+            let mut kvs: Vec<KvPanels> = (0..n_l)
+                .map(|l| {
+                    let base = (l * eb + lane) * t_cap * d;
+                    let mut kv = KvPanels::new(self.cfg.n_heads, dh);
+                    kv.append(
+                        &k_cache[base..base + start * d],
+                        &v_cache[base..base + start * d],
+                        start,
+                    );
+                    kv
+                })
+                .collect();
+
+            let mem_pad = mem.pad_row(mem_rows[lane]);
+            let mem_n = mem_pad.iter().take_while(|&&p| p > 0.0).count();
+            let mrow = &mem.row(mem_rows[lane])[..mem_n * d];
+
+            for (li, layer) in self.dec.iter().enumerate() {
+                let h = layer_normed(&x, m, d, &layer.ln1.g, &layer.ln1.b);
+                // The exact block the cached session runs (bit-identity
+                // by construction, not by parallel maintenance).
+                let a = self.fused_self_attn(&h, m, &layer.self_attn, &mut kvs[li], Some(start));
+                add_assign(&mut x, &a);
+                let h = layer_normed(&x, m, d, &layer.ln2.g, &layer.ln2.b);
+                let a = self.cross_attn_full(&h, m, &layer.cross_attn, mrow, mem_n);
+                add_assign(&mut x, &a);
+                let h = layer_normed(&x, m, d, &layer.ln3.g, &layer.ln3.b);
+                let f = self.ffn(&h, m, &layer.ffn);
+                add_assign(&mut x, &f);
+            }
+            layer_norm(&mut x, m, d, &self.dec_ln_f.g, &self.dec_ln_f.b);
+            let logits = self.out.apply(&x, m, self.threads);
+            for i in 0..m {
+                log_softmax_row_into(
+                    &logits[i * v..(i + 1) * v],
+                    &mut logp[(lane * w + i) * v..(lane * w + i + 1) * v],
+                );
+            }
+
+            // Write the window's K/V back into the flat caches.
+            for (l, kv) in kvs.iter().enumerate() {
+                let base = (l * eb + lane) * t_cap * d;
+                for s in start..start + m {
+                    for h in 0..self.cfg.n_heads {
+                        for dd in 0..dh {
+                            k_cache[base + s * d + h * dh + dd] = kv.k_lane(h, dd)[s];
+                        }
+                        v_cache[base + s * d + h * dh..base + s * d + (h + 1) * dh]
+                            .copy_from_slice(&kv.v_panel(h)[s * dh..(s + 1) * dh]);
+                    }
+                }
+            }
+        }
+        Ok(logp)
+    }
 }
 
 impl DecoderSession for CachedSession<'_> {
@@ -870,28 +991,18 @@ impl DecoderSession for CachedSession<'_> {
             let mut sr = self.rows[row].take().expect("released session row");
             let len_before = sr.len;
             // Unshare (one clone if forked) and roll the buffers back to
-            // the logical length before appending. A deep truncate may
-            // have rewound past the retained log-prob suffix; in that
-            // case re-commit the last prefix token through the decoder
-            // so the window can serve position len_before - 1 — the
-            // recomputation is bit-identical (same kernels against the
-            // same cached K/V prefix).
+            // the logical length before appending — the shared
+            // session-contract helper handles the deep-rewind heal
+            // (re-committing the last prefix token bit-identically).
             let cache = Arc::make_mut(&mut sr.cache);
-            let (start, job_toks) = if len_before > 0 && len_before - 1 < cache.lp_start {
-                let mut jt = Vec::with_capacity(toks.len() + 1);
-                jt.push(cache.tokens[len_before - 1]);
-                jt.extend_from_slice(toks);
-                (len_before - 1, std::borrow::Cow::Owned(jt))
-            } else {
-                (len_before, std::borrow::Cow::Borrowed(toks))
-            };
-            cache.tokens.truncate(start);
-            if start <= cache.lp_start {
-                cache.lp.clear();
-                cache.lp_start = start;
-            } else {
-                cache.lp.truncate((start - cache.lp_start) * v);
-            }
+            let (start, job_toks) = rollback_for_extend(
+                &mut cache.tokens,
+                &mut cache.lp,
+                &mut cache.lp_start,
+                len_before,
+                toks,
+                v,
+            );
             for kv in cache.kv.iter_mut() {
                 kv.truncate(start);
             }
@@ -926,35 +1037,23 @@ impl DecoderSession for CachedSession<'_> {
         for p in prep.iter_mut() {
             p.sr.len = p.len_before + p.delta_len;
             lens.push(p.sr.len);
-            let needed = (p.delta_len + usize::from(p.len_before > 0)).min(p.sr.len);
-            window = window.max(needed);
+            window = window.max(needed_window(p.len_before, p.delta_len));
         }
 
         // Assemble the shared-window view from the per-row log-prob
-        // caches (columns before a row's retained suffix are unreadable
-        // by contract), then trim each cache to the retention bound.
+        // caches, then trim each cache to the retention bound (shared
+        // session-contract helpers).
         let mut data = vec![0f32; prep.len() * window * v];
         for (ri, p) in prep.iter().enumerate() {
             let cache = &p.sr.cache;
-            let len = p.sr.len;
-            let lo = len.saturating_sub(window).max(cache.lp_start);
-            for j in lo..len {
-                let wcol = window - len + j;
-                let dst = (ri * window + wcol) * v;
-                let src = (j - cache.lp_start) * v;
-                data[dst..dst + v].copy_from_slice(&cache.lp[src..src + v]);
-            }
+            assemble_window_row(&mut data, ri, window, v, p.sr.len, &cache.lp, cache.lp_start);
         }
         for mut p in prep {
             {
                 let cache = Arc::get_mut(&mut p.sr.cache).expect("cache just unshared");
-                let retained = cache.lp.len() / v;
+                let retained =
+                    trim_lp_suffix(&mut cache.lp, &mut cache.lp_start, v, self.lp_retain);
                 self.stats.lp_high_water = self.stats.lp_high_water.max(retained);
-                if retained > self.lp_retain {
-                    let excess = retained - self.lp_retain;
-                    cache.lp.drain(..excess * v);
-                    cache.lp_start += excess;
-                }
             }
             self.rows[p.row] = Some(p.sr);
         }

@@ -104,6 +104,24 @@ impl Weights {
         v
     }
 
+    /// FNV-1a over sorted names, shapes and raw f32 bits: the checkpoint
+    /// identity folded into cross-request cache keys (`cache::ServeCache`
+    /// flushes on mismatch so entries never survive a model redeploy).
+    pub fn content_hash(&self) -> u64 {
+        let mut h = 0xcbf29ce484222325u64;
+        for name in self.names() {
+            h = fnv1a(h, name.as_bytes());
+            let t = &self.tensors[name];
+            for &d in &t.dims {
+                h = fnv1a(h, &(d as u64).to_le_bytes());
+            }
+            for &x in &t.data {
+                h = fnv1a(h, &x.to_bits().to_le_bytes());
+            }
+        }
+        h
+    }
+
     pub fn len(&self) -> usize {
         self.tensors.len()
     }
@@ -111,6 +129,17 @@ impl Weights {
     pub fn is_empty(&self) -> bool {
         self.tensors.is_empty()
     }
+}
+
+/// One FNV-1a fold step over a byte run — the single hash primitive
+/// behind every artifact/weights identity (`Weights::content_hash`,
+/// `runtime::pjrt`'s manifest fold), so the constants live in one place.
+pub fn fnv1a(mut h: u64, bytes: &[u8]) -> u64 {
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
 }
 
 /// `config_{task}.txt` reader: `key=value` lines (see weights_io.py).
@@ -173,6 +202,21 @@ mod tests {
         assert_eq!(t.at2(1, 2), 5.0);
         assert_eq!(w.get("c").unwrap().data, vec![1.5, -2.5]);
         assert!(w.get("nope").is_err());
+    }
+
+    #[test]
+    fn content_hash_tracks_content() {
+        let t = |data: Vec<f32>| Tensor {
+            dims: vec![data.len()],
+            data,
+        };
+        let a = Weights::from_tensors(vec![("x".to_string(), t(vec![1.0, 2.0]))]);
+        let b = Weights::from_tensors(vec![("x".to_string(), t(vec![1.0, 2.0]))]);
+        let c = Weights::from_tensors(vec![("x".to_string(), t(vec![1.0, 2.5]))]);
+        let d = Weights::from_tensors(vec![("y".to_string(), t(vec![1.0, 2.0]))]);
+        assert_eq!(a.content_hash(), b.content_hash());
+        assert_ne!(a.content_hash(), c.content_hash());
+        assert_ne!(a.content_hash(), d.content_hash());
     }
 
     #[test]

@@ -1,0 +1,548 @@
+//! The artifact-backed KV-cached [`DecoderSession`]: per-row host K/V
+//! mirrors, bucket routing over the `deccache` artifact grid, and
+//! device-buffer input reuse threaded call to call.
+//!
+//! The `deccache` artifact (lowered by `python/compile/aot.py`) has the
+//! signature
+//!
+//! ```text
+//! (tgt_window[EB,W], pos[EB,W], tgt_pad[EB,W], mem[EB,S,D], mem_pad[EB,S],
+//!  k_cache[L,EB,T,D], v_cache[L,EB,T,D], cache_len[EB], *weights)
+//!     → (logp_window[EB,W,V], k_cache', v_cache')
+//! ```
+//!
+//! where `W` is the appended-window bucket, `T` the full decoder window
+//! (`t_len`, the cache capacity) and `L` the decoder layer count. The
+//! window is **right-padded** (real tokens at slots `0..m`), positions are
+//! explicit, and the returned caches are the inputs with the window's K/V
+//! written at slots `cache_len..cache_len+m` — everything else untouched
+//! and masked, so a *rewind is purely host-side*: `truncate` just lowers
+//! the logical length, stale cache slots beyond it are masked out of
+//! every later attention and overwritten by the next `extend`. That
+//! host-side-rewind property is what makes `fork`/`truncate` O(1) against
+//! a device-resident cache.
+//!
+//! [`CachedPjrtSession`] drives any [`DeccacheExec`] — the production
+//! implementation uploads buffers and runs the PJRT executable
+//! (`runtime::pjrt::PjrtDeccacheExec`); the test/bench implementation
+//! mirrors the artifact semantics with the reference kernels
+//! (`testutil::RefDeccacheExec`), so the session machinery is
+//! property-tested bit-exactly against the stateless oracle even though
+//! the offline build cannot execute real artifacts.
+//!
+//! # Segmented passes
+//!
+//! One `extend` may append more tokens to a row than the largest window
+//! bucket holds (e.g. a deep-rewind heal pushing a full draft-verify
+//! window one past the grid). The session then advances every pending
+//! row by up to the largest bucket per **pass**, running sequential
+//! executor calls — later segments read the earlier segments' K/V from
+//! the updated caches — instead of hard-erroring on traffic the
+//! stateless fallback would serve.
+//!
+//! # Device-buffer reuse
+//!
+//! The steady decode loop extends the *same rows in the same order* every
+//! tick, so the previous call's output K/V buffers are exactly the next
+//! call's inputs. When the executor reports its outputs stayed
+//! device-resident and the lane signature `(ordered row ids, EB bucket)`
+//! is unchanged, `extend` passes `kv_host: None` and the executor feeds
+//! its retained buffers back — skipping the `[L,EB,T,D]` host→device
+//! upload, the dominant per-call transfer. Host mirrors stay authoritative
+//! (outputs are downloaded each call), so any signature break — fork,
+//! release, re-bucketing, chunking — falls back to a fresh upload with no
+//! correctness edge.
+//!
+//! # Accounting
+//!
+//! Same contract as the reference `CachedSession`: `tokens_computed`
+//! counts window positions actually run, `tokens_reused` counts prefix
+//! positions served from the cache, so `benches/table2_greedy.rs`'s
+//! `recomp_tok` drops from ~L/2 to ~1 once artifacts carry `deccache`
+//! rows. Per-row successor log-probs are retained as a bounded suffix
+//! (`RXNSPEC_LP_RETAIN`, default 64 positions); a truncate that rewinds
+//! past the suffix is healed by re-submitting one committed token — the
+//! recompute reads the same cached K/V prefix, so it is exact.
+
+use std::borrow::Cow;
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::decoding::session::{
+    assemble_window_row, lp_retention_from_env, needed_window, rollback_for_extend,
+    trim_lp_suffix,
+};
+use crate::decoding::{DecoderSession, LogProbs, Memory, ModelDims, SessionStats};
+use crate::vocab::PAD_ID;
+
+/// One cache-shaped decoder invocation, padded to its `(W, EB)` bucket.
+/// All matrices are row-major and flattened.
+pub struct DeccacheCall<'a> {
+    /// Window bucket (columns of `tgt`/`pos`/`tgt_pad`).
+    pub w: usize,
+    /// Effective-batch bucket (lanes; trailing lanes may be padding).
+    pub eb: usize,
+    /// Real (non-padding) lanes in this call — executors log this, not
+    /// the padded `eb`, so call-log row counts stay comparable with the
+    /// stateless `decode` path's.
+    pub n_rows: usize,
+    /// `[EB, W]` appended tokens, right-padded with `PAD_ID`.
+    pub tgt: Vec<i64>,
+    /// `[EB, W]` absolute position ids (`cache_len + slot` on real slots).
+    pub pos: Vec<i64>,
+    /// `[EB, W]` 1.0 on real slots.
+    pub tgt_pad: Vec<f32>,
+    /// `[EB]` committed prefix length per lane.
+    pub cache_len: Vec<i64>,
+    /// Host K/V to upload (`[L, EB, T, D]` each), or `None` to reuse the
+    /// executor's device-resident output buffers from the previous call
+    /// (the caller guarantees the lane layout is unchanged).
+    pub kv_host: Option<(Vec<f32>, Vec<f32>)>,
+    /// Session memory; `mem_rows[lane]` picks the row each lane attends.
+    pub mem: &'a Memory,
+    pub mem_rows: &'a [usize],
+}
+
+/// A completed `deccache` invocation.
+pub struct DeccacheOut {
+    /// `[EB, W, V]` successor log-probs (pad slots undefined).
+    pub logp: Vec<f32>,
+    /// `[L, EB, T, D]` updated key cache (host copy).
+    pub k_cache: Vec<f32>,
+    /// `[L, EB, T, D]` updated value cache (host copy).
+    pub v_cache: Vec<f32>,
+    /// Whether the executor retained the output K/V on-device, making the
+    /// next call eligible for `kv_host: None` input reuse.
+    pub device_resident: bool,
+}
+
+/// An executor of `deccache` artifact calls. Implemented by the PJRT
+/// runtime (real artifacts) and by the reference-kernel mirror in
+/// `testutil` (property tests, benches).
+pub trait DeccacheExec {
+    fn dims(&self) -> ModelDims;
+
+    /// Decoder layer count `L` of the K/V cache shape.
+    fn n_layers(&self) -> usize;
+
+    /// The registered `(window, effective-batch)` buckets, ascending.
+    fn grid(&self) -> Vec<(usize, usize)>;
+
+    fn run(&self, call: DeccacheCall<'_>) -> Result<DeccacheOut>;
+}
+
+/// Shared state of one session row: committed tokens, per-layer host K/V
+/// mirrors (`[L, T, D]` flat, slots `< len` valid) and the retained
+/// log-prob suffix. Forks share it through an `Arc` (copy-on-write: the
+/// first mutating `extend` after a fork clones exactly once — the same
+/// pattern as the reference session's `RowCache`, and what keeps
+/// beam/SBS forking cheap against megabyte-sized mirrors).
+#[derive(Clone)]
+struct PjRowCache {
+    /// Token history; the prefix `0..len` is the committed sequence
+    /// (`truncate` only lowers the row's `len`, the tail is trimmed
+    /// lazily by the next `extend`).
+    tokens: Vec<i64>,
+    /// `[L, T, D]` flattened self-attention key mirror.
+    k: Vec<f32>,
+    /// `[L, T, D]` flattened value mirror.
+    v: Vec<f32>,
+    /// Retained suffix of per-position successor log-probs,
+    /// `[retained, V]` starting at absolute position `lp_start`.
+    lp: Vec<f32>,
+    lp_start: usize,
+}
+
+struct PjRow {
+    mem_row: usize,
+    /// Logical committed length (`truncate` is O(1): only this moves).
+    len: usize,
+    cache: Arc<PjRowCache>,
+}
+
+/// See module docs.
+pub struct CachedPjrtSession<E: DeccacheExec> {
+    exec: E,
+    memory: Memory,
+    rows: Vec<Option<PjRow>>,
+    stats: SessionStats,
+    lp_retain: usize,
+    grid: Vec<(usize, usize)>,
+    n_layers: usize,
+    dims: ModelDims,
+    /// `(ordered row ids, EB bucket)` of the last single-chunk call whose
+    /// output K/V the executor still holds on-device.
+    last_sig: Option<(Vec<usize>, usize)>,
+    kv_uploads_skipped: u64,
+}
+
+impl<E: DeccacheExec> CachedPjrtSession<E> {
+    pub fn new(exec: E, memory: Memory) -> CachedPjrtSession<E> {
+        let batch = memory.batch;
+        let dims = exec.dims();
+        let grid = exec.grid();
+        assert!(!grid.is_empty(), "deccache session requires a non-empty artifact grid");
+        let n_layers = exec.n_layers();
+        CachedPjrtSession {
+            exec,
+            memory,
+            rows: Vec::new(),
+            // Same encoder accounting as every session: the memory came
+            // from one encode call over `batch` source rows.
+            stats: SessionStats {
+                encode_calls: 1,
+                packed_src_rows: batch,
+                ..SessionStats::default()
+            },
+            lp_retain: lp_retention_from_env(),
+            grid,
+            n_layers,
+            dims,
+            last_sig: None,
+            kv_uploads_skipped: 0,
+        }
+    }
+
+    /// How many `[L,EB,T,D]` host→device K/V uploads the device-resident
+    /// reuse path elided so far.
+    pub fn kv_uploads_skipped(&self) -> u64 {
+        self.kv_uploads_skipped
+    }
+
+    /// Cap the per-row log-prob retention (positions; min 1) — same knob
+    /// as the reference session's. Rewinds past the cap are healed by
+    /// re-submitting one committed token, exactly.
+    pub fn set_lp_retention(&mut self, positions: usize) {
+        self.lp_retain = positions.max(1);
+    }
+
+    fn row(&self, row: usize) -> &PjRow {
+        self.rows[row].as_ref().expect("released session row")
+    }
+
+    /// Smallest window bucket ≥ `need` (else the largest available).
+    fn window_bucket(&self, need: usize) -> usize {
+        self.grid
+            .iter()
+            .map(|&(w, _)| w)
+            .filter(|&w| w >= need)
+            .min()
+            .unwrap_or_else(|| self.grid.iter().map(|&(w, _)| w).max().unwrap())
+    }
+
+    /// Smallest EB bucket ≥ `n` within window `w` (else the largest).
+    fn eb_bucket(&self, w: usize, n: usize) -> usize {
+        self.grid
+            .iter()
+            .filter(|&&(ww, _)| ww == w)
+            .map(|&(_, b)| b)
+            .find(|&b| b >= n)
+            .unwrap_or_else(|| {
+                self.grid
+                    .iter()
+                    .filter(|&&(ww, _)| ww == w)
+                    .map(|&(_, b)| b)
+                    .max()
+                    .unwrap()
+            })
+    }
+
+    /// Largest EB bucket registered for window `w` (which must be a
+    /// bucket returned by [`Self::window_bucket`]).
+    fn max_eb_for(&self, w: usize) -> usize {
+        self.grid.iter().filter(|&&(ww, _)| ww == w).map(|&(_, b)| b).max().unwrap()
+    }
+}
+
+impl<E: DeccacheExec> DecoderSession for CachedPjrtSession<E> {
+    fn dims(&self) -> ModelDims {
+        self.dims
+    }
+
+    fn memory(&self) -> &Memory {
+        &self.memory
+    }
+
+    fn append_memory(&mut self, extra: &Memory) -> usize {
+        assert_eq!(extra.s_len, self.memory.s_len, "memory s_len mismatch");
+        assert_eq!(extra.d_model, self.memory.d_model, "memory width mismatch");
+        let base = self.memory.batch;
+        self.memory.data.extend_from_slice(&extra.data);
+        self.memory.pad.extend_from_slice(&extra.pad);
+        self.memory.batch += extra.batch;
+        self.stats.encode_calls += 1;
+        self.stats.packed_src_rows += extra.batch;
+        base
+    }
+
+    fn new_row(&mut self, mem_row: usize) -> usize {
+        assert!(mem_row < self.memory.batch, "memory row out of range");
+        let sz = self.n_layers * self.dims.t_len * self.dims.d_model;
+        self.rows.push(Some(PjRow {
+            mem_row,
+            len: 0,
+            cache: Arc::new(PjRowCache {
+                tokens: Vec::new(),
+                k: vec![0f32; sz],
+                v: vec![0f32; sz],
+                lp: Vec::new(),
+                lp_start: 0,
+            }),
+        }));
+        self.rows.len() - 1
+    }
+
+    fn fork(&mut self, row: usize) -> usize {
+        let src = self.row(row);
+        let copy = PjRow {
+            mem_row: src.mem_row,
+            len: src.len,
+            cache: Arc::clone(&src.cache),
+        };
+        self.rows.push(Some(copy));
+        self.rows.len() - 1
+    }
+
+    fn truncate(&mut self, row: usize, len: usize) {
+        // Host-side rewind: stale cache slots ≥ len stay in both the
+        // mirrors and any device-resident buffer — masked by `cache_len`
+        // and overwritten by the next extend — so this is O(1) and does
+        // NOT invalidate device reuse.
+        let r = self.rows[row].as_mut().expect("released session row");
+        assert!(len <= r.len, "truncate beyond row length");
+        r.len = len;
+    }
+
+    fn release(&mut self, row: usize) {
+        self.rows[row] = None;
+    }
+
+    fn row_len(&self, row: usize) -> usize {
+        self.row(row).len
+    }
+
+    fn extend(&mut self, deltas: &[(usize, &[i64])]) -> Result<LogProbs> {
+        let (t_len, d, v) = (self.dims.t_len, self.dims.d_model, self.dims.vocab);
+        self.stats.extend_calls += 1;
+        self.stats.packed_rows += deltas.len();
+
+        // Validate everything before mutating anything.
+        for &(row, toks) in deltas {
+            let r = self.rows[row].as_ref().expect("released session row");
+            anyhow::ensure!(
+                r.len + toks.len() <= t_len,
+                "row length {} exceeds window {t_len}",
+                r.len + toks.len()
+            );
+        }
+
+        // Roll token/log-prob mirrors back to the submit point. A deep
+        // truncate may have rewound past the retained log-prob suffix;
+        // heal by re-submitting the last committed token (exact: the
+        // recompute reads the same cached K/V prefix).
+        struct Prep<'t> {
+            row: usize,
+            /// Submit base: `cache_len` of this row's first segment.
+            start: usize,
+            /// The full job (heal token + delta tokens).
+            toks: Cow<'t, [i64]>,
+            /// Segmented progress through `toks`.
+            done: usize,
+            len_before: usize,
+            delta_len: usize,
+        }
+        let mut prep: Vec<Prep<'_>> = Vec::with_capacity(deltas.len());
+        for &(row, toks) in deltas {
+            let r = self.rows[row].as_mut().expect("released session row");
+            let len_before = r.len;
+            // Unshare (one clone if forked) and roll back to the submit
+            // point via the shared session-contract helper, which also
+            // performs the deep-rewind heal. The K/V mirrors need no
+            // rollback: stale slots are masked by `cache_len` and
+            // overwritten in place.
+            let cache = Arc::make_mut(&mut r.cache);
+            let (start, job_toks) = rollback_for_extend(
+                &mut cache.tokens,
+                &mut cache.lp,
+                &mut cache.lp_start,
+                len_before,
+                toks,
+                v,
+            );
+            cache.tokens.extend_from_slice(&job_toks);
+            self.stats.tokens_computed += job_toks.len();
+            self.stats.tokens_reused += start;
+            prep.push(Prep {
+                row,
+                start,
+                toks: job_toks,
+                done: 0,
+                len_before,
+                delta_len: toks.len(),
+            });
+        }
+
+        // Segmented executor passes (see module docs): every pass
+        // advances each pending row by up to the largest window bucket;
+        // rows with no appended tokens are served entirely from their
+        // retained log-prob suffix. One window bucket per pass (like
+        // `decode`'s one bucket per call), chunked by *that window's*
+        // largest EB so a non-rectangular grid can never route a chunk
+        // into a batch bucket it doesn't have.
+        let max_w = self.grid.iter().map(|&(w, _)| w).max().unwrap();
+        loop {
+            let lanes: Vec<usize> =
+                (0..prep.len()).filter(|&i| prep[i].done < prep[i].toks.len()).collect();
+            if lanes.is_empty() {
+                break;
+            }
+            let need_w = lanes
+                .iter()
+                .map(|&i| (prep[i].toks.len() - prep[i].done).min(max_w))
+                .max()
+                .unwrap();
+            let w = self.window_bucket(need_w);
+            let w_max_eb = self.max_eb_for(w);
+            let single_chunk = lanes.len() <= w_max_eb;
+            for chunk in lanes.chunks(w_max_eb) {
+                let n = chunk.len();
+                let eb = self.eb_bucket(w, n);
+                anyhow::ensure!(n <= eb, "extend chunk {n} exceeds largest eb bucket {eb}");
+
+                let mut tgt = vec![PAD_ID; eb * w];
+                let mut pos = vec![0i64; eb * w];
+                let mut pad = vec![0f32; eb * w];
+                let mut cache_len = vec![0i64; eb];
+                let mut mem_rows = vec![0usize; eb];
+                let mut segs = vec![0usize; n];
+                for (li, &pi) in chunk.iter().enumerate() {
+                    let p = &prep[pi];
+                    let base = p.start + p.done;
+                    let seg = (p.toks.len() - p.done).min(w);
+                    segs[li] = seg;
+                    for j in 0..seg {
+                        tgt[li * w + j] = p.toks[p.done + j];
+                        pos[li * w + j] = (base + j) as i64;
+                        pad[li * w + j] = 1.0;
+                    }
+                    cache_len[li] = base as i64;
+                    mem_rows[li] = self.row(p.row).mem_row;
+                }
+
+                // Device-buffer input reuse: same ordered rows in the
+                // same EB bucket as the previous (single-chunk,
+                // device-resident) call means the executor's retained
+                // output K/V *are* this call's inputs — skip the
+                // [L,EB,T,D] upload. Later segments of one oversized
+                // extend qualify too.
+                let ids: Vec<usize> = chunk.iter().map(|&pi| prep[pi].row).collect();
+                let sig_match = match &self.last_sig {
+                    Some((pids, peb)) => *pids == ids && *peb == eb,
+                    None => false,
+                };
+                let reuse = single_chunk && sig_match;
+                let kv_host = if reuse {
+                    self.kv_uploads_skipped += 1;
+                    None
+                } else {
+                    let sz = self.n_layers * eb * t_len * d;
+                    let mut k = vec![0f32; sz];
+                    let mut vv = vec![0f32; sz];
+                    for (li, &pi) in chunk.iter().enumerate() {
+                        let p = &prep[pi];
+                        let r = self.rows[p.row].as_ref().unwrap();
+                        let take = (p.start + p.done) * d;
+                        for l in 0..self.n_layers {
+                            let src = l * t_len * d;
+                            let dst = (l * eb + li) * t_len * d;
+                            k[dst..dst + take].copy_from_slice(&r.cache.k[src..src + take]);
+                            vv[dst..dst + take].copy_from_slice(&r.cache.v[src..src + take]);
+                        }
+                    }
+                    Some((k, vv))
+                };
+
+                // Pessimistically drop the reuse signature before
+                // running: a reuse-path call consumes the executor's
+                // retained buffers even when it fails, so a stale
+                // signature after an error would wedge every later
+                // extend on the same lanes. Restored below on success.
+                self.last_sig = None;
+                let out = self.exec.run(DeccacheCall {
+                    w,
+                    eb,
+                    n_rows: n,
+                    tgt,
+                    pos,
+                    tgt_pad: pad,
+                    cache_len,
+                    kv_host,
+                    mem: &self.memory,
+                    mem_rows: &mem_rows,
+                })?;
+                anyhow::ensure!(
+                    out.logp.len() == eb * w * v
+                        && out.k_cache.len() == self.n_layers * eb * t_len * d
+                        && out.v_cache.len() == out.k_cache.len(),
+                    "deccache executor returned mis-shaped outputs"
+                );
+
+                // Scatter the segment's K/V and log-probs back into the
+                // row mirrors (only slots base..base+seg changed).
+                for (li, &pi) in chunk.iter().enumerate() {
+                    let seg = segs[li];
+                    let base = prep[pi].start + prep[pi].done;
+                    let r = self.rows[prep[pi].row].as_mut().unwrap();
+                    let cache = Arc::make_mut(&mut r.cache);
+                    for l in 0..self.n_layers {
+                        let src = ((l * eb + li) * t_len + base) * d;
+                        let dst = (l * t_len + base) * d;
+                        cache.k[dst..dst + seg * d]
+                            .copy_from_slice(&out.k_cache[src..src + seg * d]);
+                        cache.v[dst..dst + seg * d]
+                            .copy_from_slice(&out.v_cache[src..src + seg * d]);
+                    }
+                    for j in 0..seg {
+                        let src = (li * w + j) * v;
+                        cache.lp.extend_from_slice(&out.logp[src..src + v]);
+                    }
+                    prep[pi].done += seg;
+                }
+                self.last_sig = if single_chunk && out.device_resident {
+                    Some((ids, eb))
+                } else {
+                    None
+                };
+            }
+        }
+
+        // Window sizing and assembly over logical lengths — the same
+        // contract as every session: the stored window covers positions
+        // [max(len_before-1, 0), len_after-1] of each row.
+        let mut lens = Vec::with_capacity(prep.len());
+        let mut window = 1usize;
+        for p in &prep {
+            let len_after = p.len_before + p.delta_len;
+            self.rows[p.row].as_mut().unwrap().len = len_after;
+            lens.push(len_after);
+            window = window.max(needed_window(p.len_before, p.delta_len));
+        }
+        let mut data = vec![0f32; prep.len() * window * v];
+        for (ri, p) in prep.iter().enumerate() {
+            let r = self.rows[p.row].as_ref().unwrap();
+            assemble_window_row(&mut data, ri, window, v, r.len, &r.cache.lp, r.cache.lp_start);
+        }
+        for p in &prep {
+            let r = self.rows[p.row].as_mut().unwrap();
+            let cache = Arc::make_mut(&mut r.cache);
+            let retained = trim_lp_suffix(&mut cache.lp, &mut cache.lp_start, v, self.lp_retain);
+            self.stats.lp_high_water = self.stats.lp_high_water.max(retained);
+        }
+        Ok(LogProbs::new_windowed(data, lens, t_len, v, window))
+    }
+
+    fn stats(&self) -> SessionStats {
+        self.stats
+    }
+}

@@ -6,9 +6,11 @@
 //! the same [`Backend`](crate::decoding::Backend) trait the decoding
 //! algorithms use. Python is never on this path.
 
+pub mod deccache;
 pub mod pjrt;
 
-pub use pjrt::{ArtifactSet, PjrtBackend};
+pub use deccache::{CachedPjrtSession, DeccacheCall, DeccacheExec, DeccacheOut};
+pub use pjrt::{ArtifactSet, PjrtBackend, PjrtDeccacheExec};
 
 use std::path::Path;
 
@@ -41,6 +43,16 @@ impl AnyBackend {
         match self {
             AnyBackend::Pjrt(b) => b.take_call_log(),
             AnyBackend::Rust(_) => Vec::new(),
+        }
+    }
+
+    /// Artifact/weights identity for cross-request cache keying — cache
+    /// entries are only valid per model version, so the serving setup
+    /// binds this into `cache::ServeCache` (flush-on-mismatch).
+    pub fn artifact_version(&self) -> u64 {
+        match self {
+            AnyBackend::Pjrt(b) => b.artifact_version(),
+            AnyBackend::Rust(b) => b.artifact_version(),
         }
     }
 

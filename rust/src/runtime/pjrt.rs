@@ -14,6 +14,14 @@
 //! Decoder rows are right-aligned into the fixed `[EB, T]` window — the
 //! paper's `padLeft` — with explicit position ids `col - pad_offset`, so
 //! one compiled executable serves every mix of prefix and draft lengths.
+//!
+//! When the manifest registers cache-shaped `deccache` artifacts,
+//! [`PjrtBackend::begin`] opens a KV-cached
+//! [`CachedPjrtSession`](crate::runtime::deccache::CachedPjrtSession)
+//! driven by [`PjrtDeccacheExec`] — attention over the appended window
+//! only, device-resident K/V threaded call to call. Without them (or
+//! under `RXNSPEC_NO_DECCACHE`) sessions fall back to the
+//! stateless-recompute [`StatelessSession`].
 
 use std::collections::BTreeMap;
 use std::path::Path;
@@ -23,7 +31,9 @@ use anyhow::{bail, Context, Result};
 use crate::decoding::{
     Backend, DecoderRow, DecoderSession, LogProbs, Memory, ModelDims, StatelessSession,
 };
+use crate::model::weights::fnv1a;
 use crate::model::{Config, Weights};
+use crate::runtime::deccache::{CachedPjrtSession, DeccacheCall, DeccacheExec, DeccacheOut};
 use crate::vocab::PAD_ID;
 
 /// Lazily compiled executable: artifact path + compile-on-first-use slot.
@@ -45,10 +55,107 @@ impl LazyExe {
     }
 }
 
-/// Trailing-columns window of decfast artifacts (matches aot.py's
-/// DECFAST_WINDOW). Calls whose consumers might read earlier positions
-/// must take the full `dec` path.
+/// Default trailing-columns window of decfast artifacts, used only for
+/// manifests that predate the `meta decfast_window` row. Current
+/// manifests carry the value explicitly (aot.py writes it; see
+/// [`parse_manifest`]) so the two sides cannot silently disagree.
 pub const DECFAST_WINDOW: usize = 16;
+
+/// The manifest column contract, shared with the Python emitter
+/// (`python/compile/aot.py::MANIFEST_COLUMNS`) and pinned by the golden
+/// round-trip test (`rust/tests/manifest_golden.rs` ↔
+/// `python/tests/test_train_smoke.py`).
+pub const MANIFEST_COLUMNS: &str = "kind\ttask\teb\ttlen\tfile";
+
+/// One task's artifact registry parsed out of `manifest.tsv`.
+///
+/// Column contract ([`MANIFEST_COLUMNS`]): `kind\ttask\teb\ttlen\tfile`,
+/// five tab-separated columns on every line. Parse order is explicit —
+/// `kind` is matched **first**, then the remaining columns are
+/// interpreted per kind:
+///
+/// * artifact kinds (`enc`/`dec`/`decfast`/`deccache`) parse `eb` then
+///   `tlen` as integers; the decoder grids are keyed `(tlen, eb)` —
+///   window first — because routing picks the window bucket before the
+///   batch bucket;
+/// * `meta` rows reuse the `eb`/`tlen` columns as a `key`/`value` pair
+///   (file column `-`); unknown meta keys are ignored for forward
+///   compatibility.
+#[derive(Debug, Default)]
+pub struct ParsedManifest {
+    /// batch bucket → file name.
+    pub enc: BTreeMap<usize, String>,
+    /// (window bucket T, effective-batch bucket EB) → file name.
+    pub dec: BTreeMap<(usize, usize), String>,
+    /// Same grid, B=1 fast path.
+    pub decfast: BTreeMap<(usize, usize), String>,
+    /// (appended-window bucket W, EB) → cache-shaped decoder file name.
+    pub deccache: BTreeMap<(usize, usize), String>,
+    /// `meta decfast_window` value, when present.
+    pub decfast_window: Option<usize>,
+}
+
+/// Parse one `manifest.tsv` body for `task`. Rows of other tasks are
+/// skipped; malformed rows (wrong column count, unknown kind, non-numeric
+/// buckets) are hard errors — a manifest is a contract, not a best-effort
+/// hint.
+pub fn parse_manifest(text: &str, task: &str) -> Result<ParsedManifest> {
+    let mut m = ParsedManifest::default();
+    for (ln, line) in text.lines().enumerate() {
+        if line.is_empty() {
+            continue;
+        }
+        let f: Vec<&str> = line.split('\t').collect();
+        anyhow::ensure!(
+            f.len() == 5,
+            "manifest line {}: expected 5 tab-separated columns ({:?}), got {}",
+            ln + 1,
+            MANIFEST_COLUMNS,
+            f.len()
+        );
+        if f[1] != task {
+            continue;
+        }
+        match f[0] {
+            "meta" => {
+                // Unknown meta keys are a forward-compatible no-op — a
+                // future emitter may carry non-numeric values, so only
+                // known keys get their value parsed.
+                if f[2] == "decfast_window" {
+                    let value: usize = f[3].parse().with_context(|| {
+                        format!("manifest line {}: meta value {:?}", ln + 1, f[3])
+                    })?;
+                    m.decfast_window = Some(value);
+                }
+            }
+            kind @ ("enc" | "dec" | "decfast" | "deccache") => {
+                let eb: usize = f[2]
+                    .parse()
+                    .with_context(|| format!("manifest line {}: eb {:?}", ln + 1, f[2]))?;
+                let tlen: usize = f[3]
+                    .parse()
+                    .with_context(|| format!("manifest line {}: tlen {:?}", ln + 1, f[3]))?;
+                let fname = f[4].to_string();
+                match kind {
+                    "enc" => {
+                        m.enc.insert(eb, fname);
+                    }
+                    "dec" => {
+                        m.dec.insert((tlen, eb), fname);
+                    }
+                    "decfast" => {
+                        m.decfast.insert((tlen, eb), fname);
+                    }
+                    _ => {
+                        m.deccache.insert((tlen, eb), fname);
+                    }
+                }
+            }
+            other => bail!("unknown artifact kind {other:?} at manifest line {}", ln + 1),
+        }
+    }
+    Ok(m)
+}
 
 /// Registered artifacts for one task (`fwd` or `retro`).
 pub struct ArtifactSet {
@@ -60,13 +167,13 @@ pub struct ArtifactSet {
     /// that fits the longest row of the call.
     dec: BTreeMap<(usize, usize), LazyExe>,
     /// Same grid, B=1 fast path: shared memory row broadcast on-device,
-    /// log-probs emitted only for the trailing `DECFAST_WINDOW` columns.
+    /// log-probs emitted only for the trailing `decfast_window` columns.
     decfast: BTreeMap<(usize, usize), LazyExe>,
-    /// Cache-shaped decoder executables: take per-layer K/V buffers as
-    /// extra arguments and compute only the appended window. aot.py does
-    /// not emit these yet (ROADMAP: "artifact-side cache inputs"); the
-    /// manifest kind is registered here so sessions switch from the
-    /// stateless-recompute fallback the moment artifacts grow them.
+    /// Cache-shaped decoder executables, keyed (appended-window W, EB):
+    /// take per-layer K/V buffers as extra arguments and compute only the
+    /// appended window. Emitted by aot.py's `deccache` grid; when present
+    /// (`has_cache_artifacts()`) sessions run KV-cached instead of the
+    /// stateless-recompute fallback.
     deccache: BTreeMap<(usize, usize), LazyExe>,
 }
 
@@ -77,6 +184,17 @@ pub struct PjrtBackend {
     arts: ArtifactSet,
     /// Device-resident weight buffers (lexicographic flat-key order).
     weight_bufs: Vec<xla::PjRtBuffer>,
+    /// Trailing-columns window of the decfast artifacts — read from the
+    /// manifest's `meta decfast_window` row (the compiled-in
+    /// [`DECFAST_WINDOW`] is only the legacy-manifest default).
+    decfast_window: usize,
+    /// Artifact/weights identity (manifest ⊕ checkpoint content hash) —
+    /// folded into cross-request cache keys so entries cannot survive a
+    /// model redeploy (`cache::ServeCache::bind_artifact_version`).
+    /// aot.py writes a `meta content_digest` row over every artifact
+    /// byte, so hashing the manifest text covers regenerated artifacts
+    /// even when weights and bucket rows are unchanged.
+    version: u64,
     /// Decoder-call instrumentation ((rows, window) per call), readable
     /// by benchmarks and the parallel-device projection.
     calls: std::cell::RefCell<Vec<(usize, usize)>>,
@@ -94,8 +212,9 @@ fn compile(client: &xla::PjRtClient, path: &Path) -> Result<xla::PjRtLoadedExecu
 
 impl PjrtBackend {
     /// Load every artifact for `task` from `dir` (per the manifest written
-    /// by aot.py: `manifest.tsv` lines `kind\ttask\tbucket\tfile`) plus
-    /// the task's weights, uploaded to the device once.
+    /// by aot.py — see [`MANIFEST_COLUMNS`] and [`parse_manifest`] for
+    /// the column contract) plus the task's weights, uploaded to the
+    /// device once.
     pub fn load(dir: &Path, task: &str) -> Result<PjrtBackend> {
         let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
         let cfg = Config::from_file(&dir.join(format!("config_{task}.txt")))?;
@@ -115,41 +234,59 @@ impl PjrtBackend {
         let manifest = std::fs::read_to_string(dir.join("manifest.tsv")).with_context(|| {
             format!("read {}/manifest.tsv (run `make artifacts`)", dir.display())
         })?;
-        let mut enc = BTreeMap::new();
-        let mut dec = BTreeMap::new();
-        let mut decfast = BTreeMap::new();
-        let mut deccache = BTreeMap::new();
-        for line in manifest.lines() {
-            if line.is_empty() {
-                continue;
+        let parsed = parse_manifest(&manifest, task)?;
+        let version = fnv1a(weights.content_hash(), manifest.as_bytes());
+
+        // The decfast window is a *contract* between aot.py's lowering
+        // and this runtime's LogProbs windowing: a wrong value silently
+        // misindexes every distribution. New manifests carry it; reject
+        // combinations that cannot be served instead of assuming.
+        let decfast_window = parsed.decfast_window.unwrap_or(DECFAST_WINDOW);
+        anyhow::ensure!(
+            decfast_window >= 1 && decfast_window <= cfg.t_len,
+            "manifest decfast_window {decfast_window} incompatible with t_len {}",
+            cfg.t_len
+        );
+        if !parsed.deccache.is_empty() {
+            anyhow::ensure!(
+                parsed.decfast_window.is_some(),
+                "manifest registers deccache artifacts but lacks the `meta decfast_window` \
+                 row — artifacts and manifest disagree; regenerate with current aot.py"
+            );
+            for &(w, _) in parsed.deccache.keys() {
+                anyhow::ensure!(
+                    w >= 1 && w <= cfg.t_len,
+                    "deccache window bucket {w} incompatible with t_len {}",
+                    cfg.t_len
+                );
             }
-            let f: Vec<&str> = line.split('\t').collect();
-            if f.len() != 5 || f[1] != task {
-                continue;
-            }
-            let eb: usize = f[2].parse()?;
-            let tlen: usize = f[3].parse()?;
+        }
+
+        fn lazy_entry(dir: &Path, fname: &str) -> Result<LazyExe> {
             let lazy = LazyExe {
-                path: dir.join(f[4]),
+                path: dir.join(fname),
                 exe: std::cell::OnceCell::new(),
             };
             anyhow::ensure!(lazy.path.exists(), "missing artifact {}", lazy.path.display());
-            match f[0] {
-                "enc" => {
-                    enc.insert(eb, lazy);
-                }
-                "dec" => {
-                    dec.insert((tlen, eb), lazy);
-                }
-                "decfast" => {
-                    decfast.insert((tlen, eb), lazy);
-                }
-                "deccache" => {
-                    deccache.insert((tlen, eb), lazy);
-                }
-                other => bail!("unknown artifact kind {other}"),
-            }
+            Ok(lazy)
         }
+        fn lazy_grid(
+            dir: &Path,
+            entries: &BTreeMap<(usize, usize), String>,
+        ) -> Result<BTreeMap<(usize, usize), LazyExe>> {
+            let mut out = BTreeMap::new();
+            for (&key, fname) in entries {
+                out.insert(key, lazy_entry(dir, fname)?);
+            }
+            Ok(out)
+        }
+        let mut enc = BTreeMap::new();
+        for (&eb, fname) in &parsed.enc {
+            enc.insert(eb, lazy_entry(dir, fname)?);
+        }
+        let dec = lazy_grid(dir, &parsed.dec)?;
+        let decfast = lazy_grid(dir, &parsed.decfast)?;
+        let deccache = lazy_grid(dir, &parsed.deccache)?;
         if enc.is_empty() || dec.is_empty() {
             bail!("no artifacts for task {task} in {}", dir.display());
         }
@@ -163,12 +300,19 @@ impl PjrtBackend {
                 deccache,
             },
             weight_bufs,
+            decfast_window,
+            version,
             calls: std::cell::RefCell::new(Vec::new()),
         })
     }
 
     pub fn config(&self) -> Config {
         self.cfg
+    }
+
+    /// Artifact/weights identity for cross-request cache keying.
+    pub fn artifact_version(&self) -> u64 {
+        self.version
     }
 
     /// Smallest bucket ≥ `n`, or the largest available (callers chunk).
@@ -232,8 +376,8 @@ impl PjrtBackend {
     }
 
     /// Whether the manifest registered cache-shaped decoder artifacts
-    /// (`deccache` kind). When false — the current aot.py output —
-    /// sessions use the stateless-recompute fallback.
+    /// (`deccache` kind). When true, [`PjrtBackend::begin`] opens a
+    /// KV-cached session; when false, the stateless-recompute fallback.
     pub fn has_cache_artifacts(&self) -> bool {
         !self.arts.deccache.is_empty()
     }
@@ -292,6 +436,125 @@ impl PjrtBackend {
     }
 }
 
+/// The production [`DeccacheExec`]: uploads the padded call, runs the
+/// `(W, EB)` artifact, and **retains the output K/V buffers on-device**
+/// so the next steady-loop call can pass `kv_host: None` and skip the
+/// `[L,EB,T,D]` host→device transfer (the dominant per-call copy once
+/// the window shrinks to ~1 token). Host copies of the updated caches
+/// are still downloaded every call — they keep the session's per-row
+/// mirrors authoritative across fork/re-bucket/chunk breaks; eliding
+/// that download for unbroken runs is a further optimization this
+/// executor's surface already permits.
+pub struct PjrtDeccacheExec<'a> {
+    backend: &'a PjrtBackend,
+    /// Retained output K/V device buffers of the last call + their EB.
+    dev: std::cell::RefCell<Option<(xla::PjRtBuffer, xla::PjRtBuffer, usize)>>,
+}
+
+impl<'a> PjrtDeccacheExec<'a> {
+    pub fn new(backend: &'a PjrtBackend) -> PjrtDeccacheExec<'a> {
+        PjrtDeccacheExec {
+            backend,
+            dev: std::cell::RefCell::new(None),
+        }
+    }
+}
+
+impl DeccacheExec for PjrtDeccacheExec<'_> {
+    fn dims(&self) -> ModelDims {
+        self.backend.dims()
+    }
+
+    fn n_layers(&self) -> usize {
+        self.backend.cfg.n_dec
+    }
+
+    fn grid(&self) -> Vec<(usize, usize)> {
+        self.backend.arts.deccache.keys().copied().collect()
+    }
+
+    fn run(&self, call: DeccacheCall<'_>) -> Result<DeccacheOut> {
+        let b = self.backend;
+        let (s_len, d, t_len) = (b.cfg.s_len, b.cfg.d_model, b.cfg.t_len);
+        let n_l = b.cfg.n_dec;
+        let (w, eb) = (call.w, call.eb);
+        // Call-log contract is (real rows, window) — same as `decode` —
+        // so the bench projections never count padding lanes.
+        b.calls.borrow_mut().push((call.n_rows, w));
+
+        let tgt: Vec<i32> = call.tgt.iter().map(|&t| t as i32).collect();
+        let pos: Vec<i32> = call.pos.iter().map(|&p| p as i32).collect();
+        let clen: Vec<i32> = call.cache_len.iter().map(|&c| c as i32).collect();
+        let mut mem = vec![0f32; eb * s_len * d];
+        let mut mpad = vec![0f32; eb * s_len];
+        for (r, &mr) in call.mem_rows.iter().enumerate() {
+            mem[r * s_len * d..(r + 1) * s_len * d].copy_from_slice(call.mem.row(mr));
+            mpad[r * s_len..(r + 1) * s_len].copy_from_slice(call.mem.pad_row(mr));
+        }
+
+        let (k_in, v_in) = match call.kv_host {
+            Some((k, v)) => (
+                b.upload_f32(&k, &[n_l, eb, t_len, d])?,
+                b.upload_f32(&v, &[n_l, eb, t_len, d])?,
+            ),
+            None => {
+                let retained = self.dev.borrow_mut().take();
+                let (kb, vb, peb) = retained
+                    .context("deccache input reuse requested without retained device buffers")?;
+                anyhow::ensure!(peb == eb, "deccache reuse across EB buckets ({peb} vs {eb})");
+                (kb, vb)
+            }
+        };
+
+        let tgt_b = b.upload_i32(&tgt, &[eb, w])?;
+        let pos_b = b.upload_i32(&pos, &[eb, w])?;
+        let pad_b = b.upload_f32(&call.tgt_pad, &[eb, w])?;
+        let mem_b = b.upload_f32(&mem, &[eb, s_len, d])?;
+        let mpad_b = b.upload_f32(&mpad, &[eb, s_len])?;
+        let clen_b = b.upload_i32(&clen, &[eb])?;
+
+        let exe = b.arts.deccache[&(w, eb)].get(&b.client)?;
+        let mut args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(8 + b.weight_bufs.len());
+        args.extend([&tgt_b, &pos_b, &pad_b, &mem_b, &mpad_b, &k_in, &v_in, &clen_b]);
+        args.extend(b.weight_bufs.iter());
+        let mut results = exe.execute_b::<&xla::PjRtBuffer>(&args)?;
+        anyhow::ensure!(!results.is_empty(), "deccache execution returned no results");
+        let outs = results.swap_remove(0);
+
+        // Bindings may untuple the 3-tuple result into three buffers
+        // (keepable on-device) or hand back one tuple literal.
+        if outs.len() == 3 {
+            let mut it = outs.into_iter();
+            let logp_b = it.next().unwrap();
+            let kb = it.next().unwrap();
+            let vb = it.next().unwrap();
+            let logp = logp_b.to_literal_sync()?.to_vec::<f32>()?;
+            let k_cache = kb.to_literal_sync()?.to_vec::<f32>()?;
+            let v_cache = vb.to_literal_sync()?.to_vec::<f32>()?;
+            *self.dev.borrow_mut() = Some((kb, vb, eb));
+            Ok(DeccacheOut {
+                logp,
+                k_cache,
+                v_cache,
+                device_resident: true,
+            })
+        } else {
+            let lit = outs
+                .into_iter()
+                .next()
+                .context("deccache execution returned an empty buffer list")?
+                .to_literal_sync()?;
+            let (l, k, v) = lit.to_tuple3()?;
+            Ok(DeccacheOut {
+                logp: l.to_vec::<f32>()?,
+                k_cache: k.to_vec::<f32>()?,
+                v_cache: v.to_vec::<f32>()?,
+                device_resident: false,
+            })
+        }
+    }
+}
+
 impl Backend for PjrtBackend {
     fn dims(&self) -> ModelDims {
         ModelDims {
@@ -334,13 +597,17 @@ impl Backend for PjrtBackend {
 
         // B=1 fast path: every row attends to the same (single) memory
         // row, so the artifact broadcasts it on-device and returns only
-        // the trailing DECFAST_WINDOW columns — all that greedy/
+        // the trailing decfast_window columns — all that greedy/
         // speculative/beam steps ever read (rows are left-padded).
         let fast = !self.arts.decfast.is_empty()
             && memory.batch == 1
             && rows.iter().all(|r| r.mem_row == 0)
             && std::env::var_os("RXNSPEC_NO_DECFAST").is_none();
-        let window = if fast { DECFAST_WINDOW.min(t_len) } else { t_len };
+        let window = if fast {
+            self.decfast_window.min(t_len)
+        } else {
+            t_len
+        };
 
         let mem_buf = if fast {
             Some((
@@ -408,12 +675,61 @@ impl Backend for PjrtBackend {
     }
 
     fn begin(&self, memory: Memory) -> Result<Box<dyn DecoderSession + '_>> {
-        // Cache-shaped artifacts would let the session keep device-
-        // resident per-layer K/V buffers between `extend` calls and run a
-        // `deccache` executable over just the appended window. Until
-        // aot.py emits them (`has_cache_artifacts()`), every session
-        // falls back to stateless recompute through `decode`, which
-        // preserves the decfast B=1 path and bucket selection unchanged.
+        // Cache-shaped artifacts present: open the KV-cached session —
+        // device-resident per-layer K/V threaded call to call, attention
+        // over the appended window only. Otherwise (or when the operator
+        // forces it with RXNSPEC_NO_DECCACHE) fall back to stateless
+        // recompute through `decode`, which preserves the decfast B=1
+        // path and bucket selection unchanged.
+        if self.has_cache_artifacts() && std::env::var_os("RXNSPEC_NO_DECCACHE").is_none() {
+            return Ok(Box::new(CachedPjrtSession::new(PjrtDeccacheExec::new(self), memory)));
+        }
         Ok(Box::new(StatelessSession::new(self, memory)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "meta\tfwd\tdecfast_window\t16\t-\n\
+                          enc\tfwd\t1\t0\tenc_fwd_b1.hlo.txt\n\
+                          dec\tfwd\t1\t24\tdec_fwd_b1_t24.hlo.txt\n\
+                          decfast\tfwd\t1\t24\tdecfast_fwd_b1_t24.hlo.txt\n\
+                          deccache\tfwd\t1\t4\tdeccache_fwd_b1_t4.hlo.txt\n";
+
+    #[test]
+    fn parse_manifest_routes_kinds_and_meta() {
+        let m = parse_manifest(SAMPLE, "fwd").unwrap();
+        assert_eq!(m.enc[&1], "enc_fwd_b1.hlo.txt");
+        // Decoder grids are keyed (tlen, eb) — window first.
+        assert_eq!(m.dec[&(24, 1)], "dec_fwd_b1_t24.hlo.txt");
+        assert_eq!(m.decfast[&(24, 1)], "decfast_fwd_b1_t24.hlo.txt");
+        assert_eq!(m.deccache[&(4, 1)], "deccache_fwd_b1_t4.hlo.txt");
+        assert_eq!(m.decfast_window, Some(16));
+    }
+
+    #[test]
+    fn parse_manifest_skips_other_tasks() {
+        let m = parse_manifest(SAMPLE, "retro").unwrap();
+        assert!(m.enc.is_empty() && m.dec.is_empty() && m.deccache.is_empty());
+        assert_eq!(m.decfast_window, None);
+    }
+
+    #[test]
+    fn parse_manifest_rejects_malformed_rows() {
+        assert!(parse_manifest("enc\tfwd\t1\t0", "fwd").is_err()); // 4 columns
+        assert!(parse_manifest("bogus\tfwd\t1\t0\tx.hlo.txt", "fwd").is_err());
+        assert!(parse_manifest("dec\tfwd\tx\t24\tf.hlo.txt", "fwd").is_err());
+        assert!(parse_manifest("meta\tfwd\tdecfast_window\tx\t-", "fwd").is_err());
+    }
+
+    #[test]
+    fn parse_manifest_ignores_unknown_meta_keys() {
+        let m = parse_manifest("meta\tfwd\tfuture_knob\t3\t-\n", "fwd").unwrap();
+        assert_eq!(m.decfast_window, None);
+        // Unknown keys may carry non-numeric values (forward compat).
+        let m = parse_manifest("meta\tfwd\tcheckpoint_digest\t3fa9c1\t-\n", "fwd").unwrap();
+        assert_eq!(m.decfast_window, None);
     }
 }

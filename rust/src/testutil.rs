@@ -17,9 +17,10 @@
 
 use anyhow::Result;
 
-use crate::decoding::{Backend, DecoderRow, LogProbs, Memory, ModelDims};
+use crate::decoding::{Backend, DecoderRow, DecoderSession, LogProbs, Memory, ModelDims};
 use crate::model::{Config, RustBackend, Tensor, Weights};
 use crate::rng::Rng;
+use crate::runtime::{CachedPjrtSession, DeccacheCall, DeccacheExec, DeccacheOut};
 use crate::vocab::{BOS_ID, EOS_ID, PAD_ID, UNK_ID};
 
 /// Number of reserved special ids; mock vocab tokens start here.
@@ -317,6 +318,134 @@ impl<B: Backend> Backend for ForceStateless<'_, B> {
         self.0.decode(rows, memory)
     }
     // No `begin` override: the default StatelessSession applies.
+}
+
+/// Reference-kernel [`DeccacheExec`]: mirrors the `deccache` artifact
+/// semantics with [`RustBackend::deccache_apply`], including the
+/// device-resident output retention the real PJRT executor performs —
+/// `kv_host: None` calls are served from the previous call's retained
+/// caches, so parity tests exercise the session's buffer-reuse path too.
+///
+/// Because `deccache_apply` runs the exact kernels the reference
+/// `CachedSession` runs, a [`CachedPjrtSession`] driven by this executor
+/// is **bit-identical** to the stateless oracle — the invariant
+/// `rust/tests/session_parity.rs` holds for the PJRT session machinery.
+pub struct RefDeccacheExec<'a> {
+    backend: &'a RustBackend,
+    grid: Vec<(usize, usize)>,
+    retained: std::cell::RefCell<Option<(Vec<f32>, Vec<f32>, usize)>>,
+}
+
+impl<'a> RefDeccacheExec<'a> {
+    pub fn new(backend: &'a RustBackend, grid: Vec<(usize, usize)>) -> RefDeccacheExec<'a> {
+        RefDeccacheExec {
+            backend,
+            grid,
+            retained: std::cell::RefCell::new(None),
+        }
+    }
+}
+
+impl DeccacheExec for RefDeccacheExec<'_> {
+    fn dims(&self) -> ModelDims {
+        Backend::dims(self.backend)
+    }
+
+    fn n_layers(&self) -> usize {
+        self.backend.config().n_dec
+    }
+
+    fn grid(&self) -> Vec<(usize, usize)> {
+        self.grid.clone()
+    }
+
+    fn run(&self, call: DeccacheCall<'_>) -> Result<DeccacheOut> {
+        let (mut k, mut v) = match call.kv_host {
+            Some((k, v)) => (k, v),
+            None => {
+                let retained = self.retained.borrow_mut().take();
+                let (k, v, eb) = retained.expect("kv reuse without retained caches");
+                assert_eq!(eb, call.eb, "kv reuse across EB buckets");
+                (k, v)
+            }
+        };
+        let logp = self.backend.deccache_apply(
+            call.w,
+            call.eb,
+            &call.tgt,
+            &call.pos,
+            &call.tgt_pad,
+            &call.cache_len,
+            &mut k,
+            &mut v,
+            call.mem,
+            call.mem_rows,
+        )?;
+        let out = DeccacheOut {
+            logp,
+            k_cache: k.clone(),
+            v_cache: v.clone(),
+            device_resident: true,
+        };
+        *self.retained.borrow_mut() = Some((k, v, call.eb));
+        Ok(out)
+    }
+}
+
+/// Backend wrapper that decodes through the **PJRT cached-session
+/// machinery** (`runtime::deccache::CachedPjrtSession`) with the
+/// reference executor standing in for real artifacts — the stand-in the
+/// parity tests and the `kernel_micro` bench use to measure/verify the
+/// deccache path offline. `dims`/`encode`/`decode` delegate to the
+/// wrapped reference backend.
+pub struct DeccacheHarness<'a> {
+    backend: &'a RustBackend,
+    grid: Vec<(usize, usize)>,
+}
+
+impl<'a> DeccacheHarness<'a> {
+    /// Default grid mirrors aot.py's: windows {1, 4, 8, 16} (clamped to
+    /// t_len) × effective batches {1, 2, 4, 8, 16}.
+    pub fn new(backend: &'a RustBackend) -> DeccacheHarness<'a> {
+        let t_len = backend.config().t_len;
+        let mut grid = Vec::new();
+        for w in [1usize, 4, 8, 16] {
+            if w > t_len {
+                continue;
+            }
+            for eb in [1usize, 2, 4, 8, 16] {
+                grid.push((w, eb));
+            }
+        }
+        DeccacheHarness { backend, grid }
+    }
+
+    pub fn with_grid(backend: &'a RustBackend, grid: Vec<(usize, usize)>) -> DeccacheHarness<'a> {
+        DeccacheHarness { backend, grid }
+    }
+
+    /// The concrete cached session (tests reach `kv_uploads_skipped`).
+    pub fn begin_cached(&self, memory: Memory) -> CachedPjrtSession<RefDeccacheExec<'a>> {
+        CachedPjrtSession::new(RefDeccacheExec::new(self.backend, self.grid.clone()), memory)
+    }
+}
+
+impl Backend for DeccacheHarness<'_> {
+    fn dims(&self) -> ModelDims {
+        Backend::dims(self.backend)
+    }
+
+    fn encode(&self, srcs: &[&[i64]]) -> Result<Memory> {
+        self.backend.encode(srcs)
+    }
+
+    fn decode(&self, rows: &[DecoderRow], memory: &Memory) -> Result<LogProbs> {
+        self.backend.decode(rows, memory)
+    }
+
+    fn begin(&self, memory: Memory) -> Result<Box<dyn DecoderSession + '_>> {
+        Ok(Box::new(self.begin_cached(memory)))
+    }
 }
 
 /// A tiny reference transformer with seeded-random weights, built fully

@@ -1,0 +1,68 @@
+//! Golden round-trip of the manifest column contract.
+//!
+//! `rust/tests/data/manifest_golden.tsv` is a checked-in sample of what
+//! `python -m compile.aot` writes; the Python side regenerates it from
+//! its row helpers (`python/tests/test_train_smoke.py::
+//! test_manifest_rows_match_rust_golden_file`) and this test parses the
+//! same bytes with the production Rust parser — so the two sides cannot
+//! drift apart silently (the column comment and the emitter did, once).
+
+use rxnspec::runtime::pjrt::{parse_manifest, DECFAST_WINDOW, MANIFEST_COLUMNS};
+
+const GOLDEN: &str = include_str!("data/manifest_golden.tsv");
+
+#[test]
+fn golden_manifest_parses_for_both_tasks() {
+    let fwd = parse_manifest(GOLDEN, "fwd").unwrap();
+    assert_eq!(fwd.decfast_window, Some(16));
+    assert_eq!(fwd.enc.keys().copied().collect::<Vec<_>>(), vec![1, 8]);
+    // Decoder grids are keyed (tlen, eb) — window first — while the file
+    // columns are eb-then-tlen; the parse order is explicit, not
+    // positional guesswork.
+    assert!(fwd.dec.contains_key(&(24, 1)));
+    assert!(fwd.dec.contains_key(&(96, 8)));
+    assert_eq!(fwd.decfast[&(24, 1)], "decfast_fwd_b1_t24.hlo.txt");
+    assert_eq!(
+        fwd.deccache.keys().copied().collect::<Vec<_>>(),
+        vec![(1, 1), (4, 8), (16, 1), (16, 8)]
+    );
+    assert_eq!(fwd.deccache[&(16, 8)], "deccache_fwd_b8_t16.hlo.txt");
+
+    let retro = parse_manifest(GOLDEN, "retro").unwrap();
+    assert_eq!(retro.decfast_window, Some(16));
+    assert_eq!(retro.enc.keys().copied().collect::<Vec<_>>(), vec![1]);
+    assert_eq!(
+        retro.deccache.keys().copied().collect::<Vec<_>>(),
+        vec![(8, 4)]
+    );
+    assert_eq!(retro.deccache[&(8, 4)], "deccache_retro_b4_t8.hlo.txt");
+}
+
+#[test]
+fn golden_manifest_pins_the_column_contract() {
+    // The documented contract, the compiled-in legacy default, and the
+    // golden file's meta row must all agree.
+    assert_eq!(MANIFEST_COLUMNS, "kind\ttask\teb\ttlen\tfile");
+    assert_eq!(DECFAST_WINDOW, 16);
+    assert!(GOLDEN.lines().any(|l| l == "meta\tfwd\tdecfast_window\t16\t-"));
+    // The artifact-content digest is an unknown meta key to this parser
+    // (non-numeric value); it must pass through without error because
+    // its bytes feed the cache-version hash, not the parse.
+    assert!(GOLDEN.lines().any(|l| l.starts_with("meta\tfwd\tcontent_digest\t")));
+    // Every non-empty line has exactly the contract's five columns.
+    for line in GOLDEN.lines().filter(|l| !l.is_empty()) {
+        assert_eq!(line.split('\t').count(), 5, "bad golden line: {line:?}");
+    }
+}
+
+#[test]
+fn manifest_parser_rejects_contract_violations() {
+    // Wrong column count, unknown kind, non-numeric buckets: hard errors.
+    assert!(parse_manifest("enc\tfwd\t1\t0", "fwd").is_err());
+    assert!(parse_manifest("enc\tfwd\t1\t0\ta.hlo.txt\textra", "fwd").is_err());
+    assert!(parse_manifest("bogus\tfwd\t1\t0\tx.hlo.txt", "fwd").is_err());
+    assert!(parse_manifest("deccache\tfwd\teight\t4\tf.hlo.txt", "fwd").is_err());
+    // Other-task rows and blank lines are skipped, not errors.
+    let m = parse_manifest("enc\tretro\t1\t0\te.hlo.txt\n\n", "fwd").unwrap();
+    assert!(m.enc.is_empty());
+}

@@ -14,11 +14,13 @@
 //! log-softmax head), built in memory by `testutil::random_rust_backend`.
 
 use rxnspec::decoding::{
-    beam_search, greedy, sbs, spec_greedy, Backend, DecoderRow, SbsConfig,
+    beam_search, greedy, sbs, spec_greedy, Backend, DecoderRow, DecoderSession, SbsConfig,
 };
 use rxnspec::draft::DraftConfig;
 use rxnspec::rng::Rng;
-use rxnspec::testutil::{random_rust_backend, random_wrapped_src, ForceStateless};
+use rxnspec::testutil::{
+    random_rust_backend, random_wrapped_src, DeccacheHarness, ForceStateless,
+};
 use rxnspec::vocab::BOS_ID;
 
 const VOCAB: usize = 24;
@@ -195,6 +197,269 @@ fn extend_truncate_fork_logprobs_bit_exact() {
     // BOS + [5,6] + [9,10] + [7] = 6 computed positions, never more.
     assert_eq!(stats.tokens_computed, 6);
     assert!(stats.tokens_reused > 0);
+}
+
+// ---------------------------------------------------------------------------
+// PJRT deccache-session parity (`runtime::deccache::CachedPjrtSession`)
+//
+// The session machinery the PJRT backend uses over `deccache` artifacts,
+// driven here by the reference-kernel executor (`RefDeccacheExec`), whose
+// per-lane arithmetic is the exact kernel sequence the reference cached
+// session runs — so bit-identity against the stateless oracle is a hard
+// invariant, not a tolerance. A run against *real* artifacts needs a real
+// XLA (see pjrt_real_artifact_session_parity below, #[ignore]d under the
+// offline vendor stub).
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_pjrt_cached_session_decoders_bit_identical_to_stateless() {
+    let mut rng = Rng::new(0x55);
+    for seed in 0..6u64 {
+        let backend = random_rust_backend(seed + 400, VOCAB, S_LEN, T_LEN);
+        let harness = DeccacheHarness::new(&backend);
+        let oracle = ForceStateless(&backend);
+        let src = random_wrapped_src(&mut rng, 5, 16, VOCAB);
+
+        let g_c = greedy(&harness, &src).unwrap();
+        let g_s = greedy(&oracle, &src).unwrap();
+        assert_eq!(g_c.hyps[0].tokens, g_s.hyps[0].tokens, "seed {seed}: greedy");
+        assert!(g_c.hyps[0].score == g_s.hyps[0].score, "seed {seed}: greedy score");
+        // The win the deccache artifacts exist for.
+        assert!(g_c.stats.tokens_reused > 0, "seed {seed}: no reuse");
+        assert!(g_c.stats.tokens_computed < g_s.stats.tokens_computed);
+
+        for dl in [0usize, 4, 8] {
+            let cfg = DraftConfig::new(dl);
+            let s_c = spec_greedy(&harness, &src, &cfg).unwrap();
+            let s_s = spec_greedy(&oracle, &src, &cfg).unwrap();
+            assert_eq!(
+                s_c.hyps[0].tokens, s_s.hyps[0].tokens,
+                "seed {seed} dl {dl}: spec tokens"
+            );
+            assert!(s_c.hyps[0].score == s_s.hyps[0].score, "seed {seed} dl {dl}");
+            assert_eq!(s_c.stats.decoder_calls, s_s.stats.decoder_calls);
+            assert_eq!(s_c.hyps[0].tokens, g_c.hyps[0].tokens, "losslessness");
+        }
+
+        for n in [2usize, 4] {
+            let b_c = beam_search(&harness, &src, n).unwrap();
+            let b_s = beam_search(&oracle, &src, n).unwrap();
+            assert_eq!(b_c.hyps.len(), b_s.hyps.len(), "seed {seed} n {n}");
+            for (a, b) in b_c.hyps.iter().zip(&b_s.hyps) {
+                assert_eq!(a.tokens, b.tokens, "seed {seed} n {n}: beam");
+                assert!(a.score == b.score, "seed {seed} n {n}: beam score");
+            }
+        }
+
+        let cfg = SbsConfig::new(3, 5);
+        let x_c = sbs(&harness, &src, &cfg).unwrap();
+        let x_s = sbs(&oracle, &src, &cfg).unwrap();
+        assert_eq!(x_c.hyps.len(), x_s.hyps.len(), "seed {seed}: sbs");
+        for (a, b) in x_c.hyps.iter().zip(&x_s.hyps) {
+            assert_eq!(a.tokens, b.tokens, "seed {seed}: sbs tokens");
+            assert!(a.score == b.score, "seed {seed}: sbs score");
+        }
+    }
+}
+
+/// Drive the PJRT session's extend/truncate/fork surface directly —
+/// including a rewind past the retained log-prob suffix (heal path) —
+/// and compare every exposed log-probability bit-for-bit against a fresh
+/// stateless decode.
+#[test]
+fn pjrt_session_extend_truncate_fork_bit_exact() {
+    let backend = random_rust_backend(0xDECC, VOCAB, S_LEN, T_LEN);
+    let harness = DeccacheHarness::new(&backend);
+    let src: Vec<i64> = vec![BOS_ID, 5, 6, 7, 8, 9, rxnspec::vocab::EOS_ID];
+    let memory = backend.encode(&[&src]).unwrap();
+
+    let mut sess = harness.begin_cached(backend.encode(&[&src]).unwrap());
+    let a = sess.new_row(0);
+    sess.extend(&[(a, &[BOS_ID])]).unwrap();
+    sess.extend(&[(a, &[5, 6])]).unwrap();
+    let b = sess.fork(a);
+    sess.truncate(b, 2);
+    let lp_b = sess.extend(&[(b, &[9, 10])]).unwrap();
+    let lp_a = sess.extend(&[(a, &[7])]).unwrap();
+
+    let rows = vec![
+        DecoderRow {
+            tokens: vec![BOS_ID, 5, 9, 10],
+            mem_row: 0,
+        },
+        DecoderRow {
+            tokens: vec![BOS_ID, 5, 6, 7],
+            mem_row: 0,
+        },
+    ];
+    let lp_ref = backend.decode(&rows, &memory).unwrap();
+    for v in 0..VOCAB as i64 {
+        for j in [1usize, 2, 3] {
+            assert!(
+                lp_b.logp(0, j, v) == lp_ref.logp(0, j, v),
+                "fork row: j {j} v {v}"
+            );
+        }
+        for j in [2usize, 3] {
+            assert!(
+                lp_a.logp(0, j, v) == lp_ref.logp(1, j, v),
+                "parent row: j {j} v {v}"
+            );
+        }
+    }
+    let stats = sess.stats();
+    assert_eq!(stats.tokens_computed, 6, "one computed position per token");
+    assert!(stats.tokens_reused > 0);
+}
+
+/// The steady loop (same rows, same order, same EB bucket every tick)
+/// must thread the executor's retained K/V instead of re-uploading.
+#[test]
+fn pjrt_session_reuses_device_buffers_in_steady_loop() {
+    let backend = random_rust_backend(0xB0F5, VOCAB, S_LEN, T_LEN);
+    let harness = DeccacheHarness::new(&backend);
+    let src: Vec<i64> = vec![BOS_ID, 4, 5, 6, rxnspec::vocab::EOS_ID];
+
+    let mut sess = harness.begin_cached(backend.encode(&[&src]).unwrap());
+    let r = sess.new_row(0);
+    sess.extend(&[(r, &[BOS_ID])]).unwrap();
+    assert_eq!(sess.kv_uploads_skipped(), 0, "first call must upload");
+    for tok in [5i64, 6, 7, 8] {
+        sess.extend(&[(r, &[tok])]).unwrap();
+    }
+    assert_eq!(
+        sess.kv_uploads_skipped(),
+        4,
+        "steady single-row loop must skip every upload after the first"
+    );
+    // A fork entering the batch breaks the signature exactly once.
+    let f = sess.fork(r);
+    sess.extend(&[(r, &[9]), (f, &[10])]).unwrap();
+    assert_eq!(sess.kv_uploads_skipped(), 4, "new lane set must re-upload");
+    sess.extend(&[(r, &[11]), (f, &[12])]).unwrap();
+    assert_eq!(sess.kv_uploads_skipped(), 5, "then reuse resumes");
+    // Truncate is a host-side rewind: it must NOT break reuse.
+    sess.truncate(r, 3);
+    sess.extend(&[(r, &[13]), (f, &[14])]).unwrap();
+    assert_eq!(sess.kv_uploads_skipped(), 6, "truncate keeps device reuse");
+}
+
+/// A truncate that rewinds past the bounded log-prob suffix is healed by
+/// re-submitting one committed token — bit-identical, because the
+/// recompute reads the same cached K/V prefix.
+#[test]
+fn pjrt_session_deep_rewind_heal_is_bit_exact() {
+    let backend = random_rust_backend(0x4EA1, VOCAB, S_LEN, T_LEN);
+    let harness = DeccacheHarness::new(&backend);
+    let src: Vec<i64> = vec![BOS_ID, 6, 7, 8, rxnspec::vocab::EOS_ID];
+    let memory = backend.encode(&[&src]).unwrap();
+    let mut sess = harness.begin_cached(backend.encode(&[&src]).unwrap());
+    sess.set_lp_retention(1);
+    let r = sess.new_row(0);
+    sess.extend(&[(r, &[BOS_ID, 5, 6])]).unwrap();
+    // Rewind past the 1-position suffix, extend differently.
+    sess.truncate(r, 2);
+    let lp = sess.extend(&[(r, &[9])]).unwrap();
+    let lp_ref = backend
+        .decode(
+            &[DecoderRow {
+                tokens: vec![BOS_ID, 5, 9],
+                mem_row: 0,
+            }],
+            &memory,
+        )
+        .unwrap();
+    for v in 0..VOCAB as i64 {
+        for j in [1usize, 2] {
+            assert!(
+                lp.logp(0, j, v) == lp_ref.logp(0, j, v),
+                "healed rewind diverged at j {j} v {v}"
+            );
+        }
+    }
+}
+
+/// An extend wider than the largest deccache window bucket (e.g. a deep
+/// rewind heal pushing a full verify window one past the grid) is served
+/// by sequential segmented passes — bit-identical, never a hard error.
+#[test]
+fn pjrt_session_oversized_extend_segments_across_calls() {
+    let backend = random_rust_backend(0x5E6, VOCAB, S_LEN, T_LEN);
+    // Tiny grid: the largest window bucket holds 4 tokens.
+    let harness = DeccacheHarness::with_grid(&backend, vec![(1, 1), (4, 1)]);
+    let src: Vec<i64> = vec![BOS_ID, 9, 10, rxnspec::vocab::EOS_ID];
+    let memory = backend.encode(&[&src]).unwrap();
+    let mut sess = harness.begin_cached(backend.encode(&[&src]).unwrap());
+    let r = sess.new_row(0);
+    let toks: Vec<i64> = vec![BOS_ID, 5, 6, 7, 8, 9, 10];
+    let lp = sess.extend(&[(r, &toks)]).unwrap();
+    let lp_ref = backend
+        .decode(
+            &[DecoderRow {
+                tokens: toks.clone(),
+                mem_row: 0,
+            }],
+            &memory,
+        )
+        .unwrap();
+    for v in 0..VOCAB as i64 {
+        for j in 0..toks.len() {
+            assert!(
+                lp.logp(0, j, v) == lp_ref.logp(0, j, v),
+                "segmented extend diverged at j {j} v {v}"
+            );
+        }
+    }
+    assert_eq!(sess.stats().tokens_computed, toks.len());
+}
+
+/// Zero-delta extends (a row just re-reading its head position) are
+/// served from the retained log-prob suffix without an executor call.
+#[test]
+fn pjrt_session_zero_delta_served_from_retention() {
+    let backend = random_rust_backend(0x0DE1, VOCAB, S_LEN, T_LEN);
+    let harness = DeccacheHarness::new(&backend);
+    let src: Vec<i64> = vec![BOS_ID, 7, 8, rxnspec::vocab::EOS_ID];
+    let memory = backend.encode(&[&src]).unwrap();
+    let mut sess = harness.begin_cached(backend.encode(&[&src]).unwrap());
+    let r = sess.new_row(0);
+    let first = sess.extend(&[(r, &[BOS_ID, 7])]).unwrap();
+    let again = sess.extend(&[(r, &[])]).unwrap();
+    let lp_ref = backend
+        .decode(
+            &[DecoderRow {
+                tokens: vec![BOS_ID, 7],
+                mem_row: 0,
+            }],
+            &memory,
+        )
+        .unwrap();
+    for v in 0..VOCAB as i64 {
+        assert!(first.logp(0, 1, v) == lp_ref.logp(0, 1, v));
+        assert!(again.logp(0, 1, v) == lp_ref.logp(0, 1, v));
+    }
+}
+
+/// Parity of the cached session against **real compiled artifacts**.
+/// Requires a real `xla` binding plus `RXNSPEC_ARTIFACTS` pointing at an
+/// aot.py output with `deccache` rows — the offline vendor stub can
+/// compile nothing, so this is #[ignore]d by default (run with
+/// `cargo test -- --ignored` on a machine with xla_extension installed).
+#[test]
+#[ignore = "needs real xla bindings + compiled deccache artifacts (RXNSPEC_ARTIFACTS)"]
+fn pjrt_real_artifact_session_parity() {
+    let arts = std::env::var("RXNSPEC_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    let backend = rxnspec::runtime::PjrtBackend::load(std::path::Path::new(&arts), "fwd")
+        .expect("load PJRT backend");
+    assert!(
+        backend.has_cache_artifacts(),
+        "artifact set has no deccache rows; regenerate with current aot.py"
+    );
+    let src: Vec<i64> = vec![BOS_ID, 5, 6, 7, rxnspec::vocab::EOS_ID];
+    let cached = greedy(&backend, &src).unwrap();
+    let stateless = greedy(&ForceStateless(&backend), &src).unwrap();
+    assert_eq!(cached.hyps[0].tokens, stateless.hyps[0].tokens);
+    assert!(cached.stats.tokens_reused > 0);
 }
 
 /// Sessions across multiple memory rows (batch decode + append_memory)

@@ -108,6 +108,12 @@ impl Literal {
         match self.0 {}
     }
 
+    /// Destructure a 3-tuple literal — the `deccache` artifact's
+    /// `(logp_window, k_cache', v_cache')` return shape.
+    pub fn to_tuple3(&self) -> Result<(Literal, Literal, Literal)> {
+        match self.0 {}
+    }
+
     pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
         match self.0 {}
     }
