@@ -19,7 +19,9 @@
 use std::time::Instant;
 
 use rxnspec::bench::{bench_json_path, json, json_flag, measure, report};
-use rxnspec::decoding::{greedy_batch, spec_greedy_batch, Backend, DecoderSession};
+use rxnspec::decoding::{
+    greedy_batch, spec_greedy_batch, ArenaConfig, Backend, DecoderSession, SessionStats,
+};
 use rxnspec::draft::DraftConfig;
 use rxnspec::kernels::simd::{simd_level, SimdLevel};
 use rxnspec::kernels::{threads, PackedLinear};
@@ -348,6 +350,114 @@ fn main() -> anyhow::Result<()> {
         json::Val::num(st.lp_high_water as f64),
     ));
 
+    // --- paged KV arena: fork / truncate / heal --------------------------
+    // A 32-row SBS-style fork storm off a 40-token prefix. Dense forks
+    // are O(1) Arc shares that pay a **full RowCache clone** (every
+    // layer's K/V mirror) on the first divergent write; paged forks pay
+    // one page-table clone plus a single COW'd tail page. The headline
+    // invariant — paged bytes copied per fork strictly below the dense
+    // per-fork row bytes — is asserted, not just recorded.
+    {
+        let n_forks = 32usize;
+        let prefix: Vec<i64> = (0..40u64).map(|i| 2 + (i % 40) as i64).collect();
+        let one = [3i64];
+        let storm_iters = if smoke { 2 } else { 8 };
+        let arena_cfg = ArenaConfig::default();
+
+        let mut run_storm = |paged: bool| -> anyhow::Result<(f64, SessionStats)> {
+            let mut wall = 0f64;
+            let mut last = SessionStats::default();
+            for _ in 0..storm_iters {
+                let mut sess = backend
+                    .begin_cached_with(backend.encode(&[refs[0]])?, paged.then_some(arena_cfg));
+                let root = sess.new_row(0);
+                sess.extend(&[(root, &prefix)])?;
+                let t0 = Instant::now();
+                let forks: Vec<usize> = (0..n_forks).map(|_| sess.fork(root)).collect();
+                let deltas: Vec<(usize, &[i64])> =
+                    forks.iter().map(|&f| (f, one.as_slice())).collect();
+                sess.extend(&deltas)?;
+                wall += t0.elapsed().as_secs_f64();
+                last = sess.stats();
+            }
+            Ok((wall / storm_iters as f64, last))
+        };
+        let (dense_s, _) = run_storm(false)?;
+        let (paged_s, pst) = run_storm(true)?;
+        // Dense divergence clones both K/V mirrors across every layer.
+        let dense_bytes_per_fork = (2 * cfg.n_dec * prefix.len() * cfg.d_model * 4) as f64;
+        let paged_bytes_per_fork =
+            pst.fork_pages_copied as f64 * pst.kv_page_bytes as f64 / n_forks as f64;
+        let peak_kv_bytes = (pst.kv_pages_high_water * pst.kv_page_bytes) as f64;
+        assert!(
+            paged_bytes_per_fork < dense_bytes_per_fork,
+            "COW fork must copy less than a dense row clone: {paged_bytes_per_fork} vs \
+             {dense_bytes_per_fork}"
+        );
+        eprintln!(
+            "  fork storm ({n_forks} rows): dense {:.0} µs vs paged {:.0} µs, \
+             {paged_bytes_per_fork:.0} B/fork copied vs dense {dense_bytes_per_fork:.0} B/fork, \
+             {} pages resident (peak {peak_kv_bytes:.0} B)",
+            dense_s * 1e6,
+            paged_s * 1e6,
+            pst.kv_pages_resident,
+        );
+        entries.push(("fork_storm_dense_us".into(), json::Val::num(dense_s * 1e6)));
+        entries.push(("fork_storm_paged_us".into(), json::Val::num(paged_s * 1e6)));
+        entries.push((
+            "fork_dense_bytes_per_fork".into(),
+            json::Val::num(dense_bytes_per_fork),
+        ));
+        entries.push((
+            "fork_paged_bytes_per_fork".into(),
+            json::Val::num(paged_bytes_per_fork),
+        ));
+        entries.push((
+            "fork_pages_copied".into(),
+            json::Val::num(pst.fork_pages_copied as f64),
+        ));
+        entries.push((
+            "kv_pages_resident".into(),
+            json::Val::num(pst.kv_pages_resident as f64),
+        ));
+        entries.push(("peak_kv_bytes".into(), json::Val::num(peak_kv_bytes)));
+
+        // Eviction + rehydration under a one-page budget: two rows
+        // alternating extends perpetually evict each other; every evicted
+        // extend heals by exact recompute (deep-rewind path).
+        let starved = ArenaConfig {
+            page_positions: arena_cfg.page_positions,
+            budget_bytes: Some(1),
+        };
+        let heal_steps = if smoke { 4usize } else { 7 };
+        let mut sess = backend.begin_cached_with(backend.encode(&[refs[0]])?, Some(starved));
+        let a = sess.new_row(0);
+        let b = sess.new_row(0);
+        let t0 = Instant::now();
+        for step in 0..heal_steps {
+            let toks: Vec<i64> = (0..3).map(|i| 2 + ((step * 3 + i) % 37) as i64).collect();
+            sess.extend(&[(a, &toks)])?;
+            sess.extend(&[(b, &toks)])?;
+        }
+        let heal_wall = t0.elapsed().as_secs_f64();
+        let hst = sess.arena_stats().expect("starved session is paged");
+        eprintln!(
+            "  heal (1-page budget, {heal_steps}x2 extends): {} evictions, \
+             {} pages rehydrated, {:.0} µs",
+            hst.evictions,
+            hst.rehydrated_pages,
+            heal_wall * 1e6,
+        );
+        entries.push((
+            "arena_evictions".into(),
+            json::Val::num(hst.evictions as f64),
+        ));
+        entries.push((
+            "heal_rehydrated_pages".into(),
+            json::Val::num(hst.rehydrated_pages as f64),
+        ));
+    }
+
     report(
         "kernel_micro",
         "Kernel layer — SIMD GEMM / pool dispatch / packed encode / fused extend",
@@ -362,11 +472,18 @@ fn main() -> anyhow::Result<()> {
 
     if emit_json {
         let path = bench_json_path();
-        let section = match level {
-            SimdLevel::Scalar => "kernel_micro_scalar",
-            SimdLevel::Avx2 => "kernel_micro",
+        // Section name carries the dispatch level AND the arena mode the
+        // env-driven sessions above ran under, so CI's RXNSPEC_ARENA=off
+        // smoke leg records its own trajectory instead of clobbering the
+        // paged one.
+        let mut section = match level {
+            SimdLevel::Scalar => "kernel_micro_scalar".to_string(),
+            SimdLevel::Avx2 => "kernel_micro".to_string(),
         };
-        json::merge_section(&path, section, json::Val::obj(entries))?;
+        if ArenaConfig::from_env().is_none() {
+            section.push_str("_arena_off");
+        }
+        json::merge_section(&path, &section, json::Val::obj(entries))?;
         println!("(updated {} section {section})", path.display());
     }
     Ok(())

@@ -138,6 +138,15 @@ pub struct Metrics {
     /// batch per call).
     pub encode_calls: AtomicU64,
     pub packed_src_rows: AtomicU64,
+    /// Paged KV arena residency: currently resident pages (gauge —
+    /// latest session snapshot wins), the high-water page count, total
+    /// budget evictions, and pages copied by divergent-write COW after
+    /// forks. All zero when `RXNSPEC_ARENA=off` (dense path).
+    pub kv_pages_resident: AtomicU64,
+    pub kv_pages_high_water: AtomicU64,
+    pub kv_page_bytes: AtomicU64,
+    pub arena_evictions: AtomicU64,
+    pub fork_pages_copied: AtomicU64,
 }
 
 impl Metrics {
@@ -181,6 +190,16 @@ impl Metrics {
             if ec == 0 { 0.0 } else { pr as f64 / ec as f64 },
             if enc == 0 { 0.0 } else { psr as f64 / enc as f64 },
             self.lp_high_water.load(Ordering::Relaxed),
+        ));
+        let pages = self.kv_pages_resident.load(Ordering::Relaxed);
+        let page_b = self.kv_page_bytes.load(Ordering::Relaxed);
+        s.push_str(&format!(
+            "arena: kv_pages_resident={pages} kv_pages_high_water={} kv_page_bytes={page_b} \
+             kv_bytes_resident={} arena_evictions={} fork_pages_copied={}\n",
+            self.kv_pages_high_water.load(Ordering::Relaxed),
+            pages * page_b,
+            self.arena_evictions.load(Ordering::Relaxed),
+            self.fork_pages_copied.load(Ordering::Relaxed),
         ));
         s.push_str(&self.request_latency.summary("request_latency"));
         s.push('\n');
@@ -237,6 +256,22 @@ mod tests {
         let snap = m.snapshot();
         assert!(snap.contains("acceptance_rate=0.790"));
         assert!(snap.contains("tokens_per_call=4.00"));
+    }
+
+    #[test]
+    fn metrics_snapshot_exposes_arena_counters() {
+        let m = Metrics::default();
+        m.kv_pages_resident.store(12, Ordering::Relaxed);
+        m.kv_pages_high_water.store(20, Ordering::Relaxed);
+        m.kv_page_bytes.store(4096, Ordering::Relaxed);
+        m.arena_evictions.store(3, Ordering::Relaxed);
+        m.fork_pages_copied.store(7, Ordering::Relaxed);
+        let snap = m.snapshot();
+        assert!(snap.contains("kv_pages_resident=12"));
+        assert!(snap.contains("kv_pages_high_water=20"));
+        assert!(snap.contains("kv_bytes_resident=49152"));
+        assert!(snap.contains("arena_evictions=3"));
+        assert!(snap.contains("fork_pages_copied=7"));
     }
 
     #[test]

@@ -544,6 +544,23 @@ fn stream_batch<B: Backend>(
             metrics
                 .lp_high_water
                 .fetch_max(s.lp_high_water as u64, Ordering::Relaxed);
+            // Arena residency: the gauge takes the latest finished run's
+            // snapshot; high-water and the monotone counters accumulate.
+            metrics
+                .kv_pages_resident
+                .store(s.kv_pages_resident as u64, Ordering::Relaxed);
+            metrics
+                .kv_pages_high_water
+                .fetch_max(s.kv_pages_high_water as u64, Ordering::Relaxed);
+            metrics
+                .kv_page_bytes
+                .store(s.kv_page_bytes as u64, Ordering::Relaxed);
+            metrics
+                .arena_evictions
+                .fetch_add(s.arena_evictions as u64, Ordering::Relaxed);
+            metrics
+                .fork_pages_copied
+                .fetch_add(s.fork_pages_copied as u64, Ordering::Relaxed);
             return;
         }
     }

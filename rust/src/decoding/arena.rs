@@ -1,0 +1,640 @@
+//! Page-pooled KV arena: the residency layer behind both cache-aware
+//! sessions.
+//!
+//! Dense cached sessions own one K/V buffer per row sized for the full
+//! decoder window, and `fork()` Arc-shares it only until the first
+//! divergent write — at which point the whole row is deep-copied. Under
+//! fork-heavy beam/SBS serving that is O(rows × t_len) memory and
+//! O(t_len) bytes copied per divergence. The arena replaces row
+//! ownership with **page tables**: K/V lives in fixed-size pages
+//! (`RXNSPEC_KV_PAGE` positions each, default 16) pooled in one slab,
+//! rows hold `Vec<page id>` tables, and pages are refcounted so
+//!
+//! * `fork()` clones the page table and bumps refcounts — O(pages)
+//!   pointer work, zero float traffic;
+//! * the first divergent write copy-on-writes only the shared partial
+//!   tail page (one page, not the row);
+//! * `truncate()` returns whole pages past the cut to the free list;
+//! * a soft memory budget (`RXNSPEC_KV_BUDGET`) triggers LRU eviction of
+//!   cold rows' pages — evicted rows stay valid and are *rehydrated* by
+//!   the sessions' deep-rewind heal (an exact recompute, so eviction can
+//!   never change a logit).
+//!
+//! The arena stores opaque f32 blobs: each page holds `page_positions ×
+//! pos_floats` floats for K and the same for V, where `pos_floats` is
+//! whatever one position costs the owning session across all layers
+//! (`n_layers × d_model` for both current sessions). The *layout inside
+//! a page* is the session's contract with its attention/upload code —
+//! the arena only manages residency, sharing, and reuse.
+//!
+//! `RXNSPEC_ARENA=off` disables the arena ([`ArenaConfig::from_env`]
+//! returns `None`) and sessions fall back to the dense per-row path,
+//! which doubles as the parity oracle for the paged one.
+
+/// Default page size in positions when `RXNSPEC_KV_PAGE` is unset.
+pub const DEFAULT_PAGE_POSITIONS: usize = 16;
+
+/// Arena sizing knobs, resolved from the environment once per session.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ArenaConfig {
+    /// Positions per page (min 1).
+    pub page_positions: usize,
+    /// Soft K/V residency budget in bytes; `None` = unbounded. Crossing
+    /// the budget evicts cold unpinned rows, but allocation proceeds
+    /// even when nothing is evictable (the budget sheds cold state, it
+    /// does not fail hot requests).
+    pub budget_bytes: Option<usize>,
+}
+
+impl Default for ArenaConfig {
+    fn default() -> ArenaConfig {
+        ArenaConfig {
+            page_positions: DEFAULT_PAGE_POSITIONS,
+            budget_bytes: None,
+        }
+    }
+}
+
+impl ArenaConfig {
+    /// Resolve the arena knobs: `RXNSPEC_ARENA` set to `off` / `0` /
+    /// `false` / `dense` disables the arena entirely (dense fallback);
+    /// otherwise `RXNSPEC_KV_PAGE` sets the page size in positions and
+    /// `RXNSPEC_KV_BUDGET` the soft byte budget (plain bytes, or with a
+    /// `k` / `m` / `g` suffix, powers of 1024).
+    pub fn from_env() -> Option<ArenaConfig> {
+        if let Ok(v) = std::env::var("RXNSPEC_ARENA") {
+            if matches!(v.trim(), "off" | "0" | "false" | "dense") {
+                return None;
+            }
+        }
+        let page_positions = std::env::var("RXNSPEC_KV_PAGE")
+            .ok()
+            .and_then(|v| v.trim().parse::<usize>().ok())
+            .unwrap_or(DEFAULT_PAGE_POSITIONS)
+            .max(1);
+        let budget_bytes = std::env::var("RXNSPEC_KV_BUDGET")
+            .ok()
+            .and_then(|v| parse_bytes(&v));
+        Some(ArenaConfig {
+            page_positions,
+            budget_bytes,
+        })
+    }
+}
+
+fn parse_bytes(s: &str) -> Option<usize> {
+    let t = s.trim().to_ascii_lowercase();
+    let (digits, mult) = if let Some(d) = t.strip_suffix('g') {
+        (d, 1usize << 30)
+    } else if let Some(d) = t.strip_suffix('m') {
+        (d, 1usize << 20)
+    } else if let Some(d) = t.strip_suffix('k') {
+        (d, 1usize << 10)
+    } else {
+        (t.as_str(), 1)
+    };
+    digits.trim().parse::<usize>().ok().map(|n| n.saturating_mul(mult))
+}
+
+/// Handle to one row's page table. Plain index; the arena never reuses
+/// a live id, and released ids are recycled only after `release`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TableId(u32);
+
+/// Residency/traffic counters, sampled via [`KvArena::stats`].
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ArenaStats {
+    /// Pages currently referenced by at least one table.
+    pub pages_resident: usize,
+    /// High-water mark of resident pages.
+    pub pages_high_water: usize,
+    /// Cold tables evicted to stay near the budget.
+    pub evictions: usize,
+    /// Pages deep-copied by copy-on-write divergence after a fork.
+    pub fork_pages_copied: usize,
+    /// Pages recomputed by the heal path after an eviction.
+    pub rehydrated_pages: usize,
+    /// Positions per page.
+    pub page_positions: usize,
+    /// Bytes of one page (K + V blobs).
+    pub page_bytes: usize,
+    /// Tables currently live (created minus released).
+    pub live_tables: usize,
+}
+
+struct Page {
+    k: Vec<f32>,
+    v: Vec<f32>,
+    refs: u32,
+}
+
+struct Table {
+    pages: Vec<u32>,
+    /// Valid (resident) positions; always `<=` the owning row's logical
+    /// length, and strictly less only right after an eviction.
+    positions: usize,
+    last_touch: u64,
+    /// Pinned tables are never eviction candidates — sessions pin every
+    /// row of an in-flight extend batch so one row's page allocation
+    /// cannot evict a sibling mid-pass.
+    pinned: bool,
+    live: bool,
+}
+
+/// See module docs. One arena serves one session (single-threaded by
+/// construction, like the sessions themselves); the budget is therefore
+/// per session.
+pub struct KvArena {
+    page_positions: usize,
+    pos_floats: usize,
+    budget_pages: Option<usize>,
+    pages: Vec<Page>,
+    free_pages: Vec<u32>,
+    tables: Vec<Table>,
+    free_tables: Vec<u32>,
+    clock: u64,
+    resident: usize,
+    high_water: usize,
+    evictions: usize,
+    fork_pages_copied: usize,
+    rehydrated_pages: usize,
+}
+
+impl KvArena {
+    /// `pos_floats` is the per-position float cost of ONE of the two
+    /// blobs (K or V) across all layers — `n_layers × d_model` for both
+    /// cached sessions.
+    pub fn new(cfg: &ArenaConfig, pos_floats: usize) -> KvArena {
+        let page_positions = cfg.page_positions.max(1);
+        let page_bytes = 2 * page_positions * pos_floats * std::mem::size_of::<f32>();
+        let budget_pages = cfg
+            .budget_bytes
+            .map(|b| (b / page_bytes.max(1)).max(1));
+        KvArena {
+            page_positions,
+            pos_floats,
+            budget_pages,
+            pages: Vec::new(),
+            free_pages: Vec::new(),
+            tables: Vec::new(),
+            free_tables: Vec::new(),
+            clock: 0,
+            resident: 0,
+            high_water: 0,
+            evictions: 0,
+            fork_pages_copied: 0,
+            rehydrated_pages: 0,
+        }
+    }
+
+    pub fn page_positions(&self) -> usize {
+        self.page_positions
+    }
+
+    /// Bytes of one page: K blob + V blob.
+    pub fn page_bytes(&self) -> usize {
+        2 * self.page_positions * self.pos_floats * std::mem::size_of::<f32>()
+    }
+
+    fn tick(&mut self) -> u64 {
+        self.clock += 1;
+        self.clock
+    }
+
+    fn insert_table(&mut self, t: Table) -> TableId {
+        if let Some(id) = self.free_tables.pop() {
+            self.tables[id as usize] = t;
+            TableId(id)
+        } else {
+            self.tables.push(t);
+            TableId((self.tables.len() - 1) as u32)
+        }
+    }
+
+    /// Create an empty table (a fresh row).
+    pub fn new_table(&mut self) -> TableId {
+        let now = self.tick();
+        self.insert_table(Table {
+            pages: Vec::new(),
+            positions: 0,
+            last_touch: now,
+            pinned: false,
+            live: true,
+        })
+    }
+
+    /// O(pages) copy-on-write fork: clone the page table, bump page
+    /// refcounts. No float is touched until a divergent write.
+    pub fn fork(&mut self, src: TableId) -> TableId {
+        let now = self.tick();
+        let (pages, positions) = {
+            let s = &mut self.tables[src.0 as usize];
+            debug_assert!(s.live, "fork of a released table");
+            s.last_touch = now;
+            (s.pages.clone(), s.positions)
+        };
+        for &p in &pages {
+            self.pages[p as usize].refs += 1;
+        }
+        self.insert_table(Table {
+            pages,
+            positions,
+            last_touch: now,
+            pinned: false,
+            live: true,
+        })
+    }
+
+    /// Drop a table, unreferencing all its pages.
+    pub fn release(&mut self, t: TableId) {
+        let pages = {
+            let e = &mut self.tables[t.0 as usize];
+            debug_assert!(e.live, "double release of a table");
+            e.live = false;
+            e.positions = 0;
+            e.pinned = false;
+            std::mem::take(&mut e.pages)
+        };
+        for p in pages {
+            self.unref_page(p);
+        }
+        self.free_tables.push(t.0);
+    }
+
+    fn unref_page(&mut self, p: u32) {
+        let pg = &mut self.pages[p as usize];
+        debug_assert!(pg.refs > 0, "unref of a free page");
+        pg.refs -= 1;
+        if pg.refs == 0 {
+            self.resident -= 1;
+            self.free_pages.push(p);
+        }
+    }
+
+    /// Valid resident positions of `t` (the owning row's `kv_valid` for
+    /// the rollback helper — less than the row length only after an
+    /// eviction).
+    pub fn positions(&self, t: TableId) -> usize {
+        self.tables[t.0 as usize].positions
+    }
+
+    /// Shrink `t` to `positions`, returning whole pages past the cut to
+    /// the free list (the partial page containing the new tail stays).
+    /// Clamps to the resident count, so callers may pass the row's
+    /// logical length even right after an eviction.
+    pub fn truncate(&mut self, t: TableId, positions: usize) {
+        let keep_pages = {
+            let e = &mut self.tables[t.0 as usize];
+            debug_assert!(e.live, "truncate of a released table");
+            e.positions = e.positions.min(positions);
+            e.positions.div_ceil(self.page_positions)
+        };
+        let drop: Vec<u32> = self.tables[t.0 as usize].pages.split_off(keep_pages);
+        for p in drop {
+            self.unref_page(p);
+        }
+    }
+
+    /// Pin/unpin `t` for the duration of an extend batch (pinned tables
+    /// are never evicted).
+    pub fn set_pinned(&mut self, t: TableId, pinned: bool) {
+        let e = &mut self.tables[t.0 as usize];
+        debug_assert!(e.live, "pin of a released table");
+        e.pinned = pinned;
+    }
+
+    /// Make positions `[start, start + m)` of `t` writable and mark them
+    /// resident: rolls the table back to `start`, copy-on-writes the
+    /// shared partial tail page (the lazy half of an O(pages) fork),
+    /// and allocates fresh pages to cover `start + m` — evicting cold
+    /// unpinned tables first when the budget is exceeded. Callers then
+    /// write K/V through [`KvArena::page_kv_mut`].
+    pub fn prepare_append(&mut self, t: TableId, start: usize, m: usize) {
+        debug_assert!(
+            start <= self.tables[t.0 as usize].positions,
+            "append resumes past resident positions"
+        );
+        self.truncate(t, start);
+        let now = self.tick();
+        // Protect `t` from the eviction scan while we allocate for it.
+        let was_pinned = {
+            let e = &mut self.tables[t.0 as usize];
+            e.last_touch = now;
+            std::mem::replace(&mut e.pinned, true)
+        };
+        if m > 0 {
+            let p = self.page_positions;
+            let first = start / p;
+            let last = (start + m - 1) / p;
+            let n_pages = self.tables[t.0 as usize].pages.len();
+            if first < n_pages {
+                // The write starts inside the kept partial tail page;
+                // unshare it if a fork sibling still references it.
+                debug_assert_eq!(first + 1, n_pages);
+                let old = self.tables[t.0 as usize].pages[first];
+                if self.pages[old as usize].refs > 1 {
+                    let new = self.alloc_page();
+                    let (kc, vc) = {
+                        let s = &self.pages[old as usize];
+                        (s.k.clone(), s.v.clone())
+                    };
+                    {
+                        let d = &mut self.pages[new as usize];
+                        d.k = kc;
+                        d.v = vc;
+                    }
+                    self.tables[t.0 as usize].pages[first] = new;
+                    self.unref_page(old);
+                    self.fork_pages_copied += 1;
+                }
+            }
+            for _ in n_pages..=last {
+                let new = self.alloc_page();
+                self.tables[t.0 as usize].pages.push(new);
+            }
+            self.tables[t.0 as usize].positions = start + m;
+        }
+        self.tables[t.0 as usize].pinned = was_pinned;
+    }
+
+    fn alloc_page(&mut self) -> u32 {
+        if let Some(budget) = self.budget_pages {
+            while self.resident >= budget && self.evict_one() {}
+        }
+        let id = if let Some(id) = self.free_pages.pop() {
+            id
+        } else {
+            let n = self.page_positions * self.pos_floats;
+            self.pages.push(Page {
+                k: vec![0.0; n],
+                v: vec![0.0; n],
+                refs: 0,
+            });
+            (self.pages.len() - 1) as u32
+        };
+        let pg = &mut self.pages[id as usize];
+        debug_assert_eq!(pg.refs, 0, "allocated page still referenced");
+        pg.refs = 1;
+        self.resident += 1;
+        if self.resident > self.high_water {
+            self.high_water = self.resident;
+        }
+        id
+    }
+
+    /// Evict the least-recently-touched unpinned table with resident
+    /// pages. Its row stays logically valid — the session heals it with
+    /// an exact recompute on its next extend. Returns false when no
+    /// candidate exists (budget is soft).
+    fn evict_one(&mut self) -> bool {
+        let mut best: Option<(u64, usize)> = None;
+        for (i, e) in self.tables.iter().enumerate() {
+            if !e.live || e.pinned || e.pages.is_empty() {
+                continue;
+            }
+            let better = match best {
+                None => true,
+                Some((lt, _)) => e.last_touch < lt,
+            };
+            if better {
+                best = Some((e.last_touch, i));
+            }
+        }
+        let Some((_, i)) = best else { return false };
+        let pages = {
+            let e = &mut self.tables[i];
+            e.positions = 0;
+            std::mem::take(&mut e.pages)
+        };
+        for p in pages {
+            self.unref_page(p);
+        }
+        self.evictions += 1;
+        true
+    }
+
+    /// Record pages recomputed by a heal that resumed below the row's
+    /// committed length because of an eviction (stats only).
+    pub fn note_rehydrated(&mut self, positions: usize) {
+        self.rehydrated_pages += positions.div_ceil(self.page_positions);
+    }
+
+    /// The page ids backing `t`, in position order (page `i` holds
+    /// positions `[i·P, (i+1)·P)`).
+    pub fn table_pages(&self, t: TableId) -> &[u32] {
+        &self.tables[t.0 as usize].pages
+    }
+
+    /// One page's K blob (`page_positions × pos_floats` floats; layout
+    /// within is the owning session's contract).
+    pub fn page_k(&self, page: u32) -> &[f32] {
+        &self.pages[page as usize].k
+    }
+
+    /// One page's V blob.
+    pub fn page_v(&self, page: u32) -> &[f32] {
+        &self.pages[page as usize].v
+    }
+
+    /// Mutable K and V blobs of one page. Callers must hold the page
+    /// unshared (via [`KvArena::prepare_append`]) before writing.
+    pub fn page_kv_mut(&mut self, page: u32) -> (&mut [f32], &mut [f32]) {
+        let pg = &mut self.pages[page as usize];
+        debug_assert_eq!(pg.refs, 1, "write to a shared or free page");
+        (&mut pg.k, &mut pg.v)
+    }
+
+    pub fn live_tables(&self) -> usize {
+        self.tables.iter().filter(|e| e.live).count()
+    }
+
+    pub fn stats(&self) -> ArenaStats {
+        ArenaStats {
+            pages_resident: self.resident,
+            pages_high_water: self.high_water,
+            evictions: self.evictions,
+            fork_pages_copied: self.fork_pages_copied,
+            rehydrated_pages: self.rehydrated_pages,
+            page_positions: self.page_positions,
+            page_bytes: self.page_bytes(),
+            live_tables: self.live_tables(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const PF: usize = 4; // tiny per-position float cost for tests
+
+    fn arena(page: usize, budget_pages: Option<usize>) -> KvArena {
+        let cfg = ArenaConfig {
+            page_positions: page,
+            budget_bytes: budget_pages.map(|p| p * 2 * page * PF * 4),
+        };
+        KvArena::new(&cfg, PF)
+    }
+
+    fn fill(a: &mut KvArena, t: TableId, start: usize, m: usize, tag: f32) {
+        a.prepare_append(t, start, m);
+        let p = a.page_positions();
+        for pos in start..start + m {
+            let pid = a.table_pages(t)[pos / p];
+            let slot = pos % p;
+            let (k, v) = a.page_kv_mut(pid);
+            for f in 0..PF {
+                k[slot * PF + f] = tag + pos as f32;
+                v[slot * PF + f] = -(tag + pos as f32);
+            }
+        }
+    }
+
+    fn read_k(a: &KvArena, t: TableId, pos: usize) -> f32 {
+        let p = a.page_positions();
+        let pid = a.table_pages(t)[pos / p];
+        a.page_k(pid)[(pos % p) * PF]
+    }
+
+    #[test]
+    fn fork_shares_pages_and_release_frees_them() {
+        let mut a = arena(4, None);
+        let t = a.new_table();
+        fill(&mut a, t, 0, 10, 100.0);
+        assert_eq!(a.positions(t), 10);
+        assert_eq!(a.stats().pages_resident, 3);
+
+        let f = a.fork(t);
+        // No new pages: the fork shares all three.
+        assert_eq!(a.stats().pages_resident, 3);
+        assert_eq!(a.table_pages(f), a.table_pages(t));
+        assert_eq!(a.positions(f), 10);
+
+        a.release(t);
+        assert_eq!(a.stats().pages_resident, 3, "fork keeps pages alive");
+        a.release(f);
+        assert_eq!(a.stats().pages_resident, 0, "all pages freed at drop");
+        assert_eq!(a.live_tables(), 0);
+    }
+
+    #[test]
+    fn divergent_write_cows_only_the_tail_page() {
+        let mut a = arena(4, None);
+        let t = a.new_table();
+        fill(&mut a, t, 0, 10, 0.0); // pages 0..3, tail page half full
+        let f = a.fork(t);
+
+        // Diverge the fork: append 2 positions starting at 10.
+        fill(&mut a, f, 10, 2, 50.0);
+        let s = a.stats();
+        assert_eq!(s.fork_pages_copied, 1, "only the shared tail page copies");
+        // Full pages stay shared; the tail page split.
+        assert_eq!(&a.table_pages(t)[..2], &a.table_pages(f)[..2]);
+        assert_ne!(a.table_pages(t)[2], a.table_pages(f)[2]);
+        assert_eq!(s.pages_resident, 4);
+
+        // Parent data is untouched; fork kept the copied prefix.
+        assert_eq!(read_k(&a, t, 9), 9.0);
+        assert_eq!(read_k(&a, f, 9), 9.0);
+        assert_eq!(read_k(&a, f, 11), 61.0);
+
+        a.release(t);
+        a.release(f);
+        assert_eq!(a.stats().pages_resident, 0);
+    }
+
+    #[test]
+    fn truncate_releases_whole_pages_and_keeps_the_partial_tail() {
+        let mut a = arena(4, None);
+        let t = a.new_table();
+        fill(&mut a, t, 0, 12, 0.0); // exactly 3 pages
+        a.truncate(t, 5);
+        assert_eq!(a.positions(t), 5);
+        assert_eq!(a.table_pages(t).len(), 2, "partial tail page stays");
+        assert_eq!(a.stats().pages_resident, 2);
+        // Truncate clamps to resident positions (no-op growth attempt).
+        a.truncate(t, 9);
+        assert_eq!(a.positions(t), 5);
+        a.truncate(t, 0);
+        assert_eq!(a.stats().pages_resident, 0);
+        a.release(t);
+    }
+
+    #[test]
+    fn freed_pages_are_reused_not_regrown() {
+        let mut a = arena(4, None);
+        let t = a.new_table();
+        fill(&mut a, t, 0, 8, 0.0);
+        a.truncate(t, 0);
+        let slab = a.pages.len();
+        fill(&mut a, t, 0, 8, 1.0);
+        assert_eq!(a.pages.len(), slab, "allocation reuses the free list");
+        a.release(t);
+        assert_eq!(a.stats().pages_resident, 0);
+    }
+
+    #[test]
+    fn budget_evicts_the_coldest_unpinned_table() {
+        // Budget of 2 pages; page = 4 positions.
+        let mut a = arena(4, Some(2));
+        let cold = a.new_table();
+        fill(&mut a, cold, 0, 8, 0.0); // 2 pages, at budget
+        let hot = a.new_table();
+        fill(&mut a, hot, 0, 8, 10.0); // must evict `cold`
+        let s = a.stats();
+        assert_eq!(s.evictions, 1);
+        assert_eq!(a.positions(cold), 0, "evicted row loses residency");
+        assert_eq!(a.positions(hot), 8, "allocating row keeps its pages");
+        assert_eq!(s.pages_resident, 2);
+
+        // The evicted table is still usable: rehydrate from scratch.
+        fill(&mut a, cold, 0, 3, 20.0);
+        a.note_rehydrated(3);
+        assert_eq!(a.stats().rehydrated_pages, 1);
+        assert_eq!(read_k(&a, cold, 2), 22.0);
+
+        a.release(cold);
+        a.release(hot);
+        assert_eq!(a.stats().pages_resident, 0);
+    }
+
+    #[test]
+    fn pinned_tables_survive_budget_pressure() {
+        let mut a = arena(4, Some(1));
+        let t = a.new_table();
+        a.set_pinned(t, true);
+        fill(&mut a, t, 0, 12, 0.0); // 3 pages, all over budget
+        assert_eq!(a.stats().evictions, 0, "nothing evictable: soft budget");
+        assert_eq!(a.positions(t), 12);
+        a.set_pinned(t, false);
+        let u = a.new_table();
+        fill(&mut a, u, 0, 4, 1.0);
+        assert!(a.stats().evictions >= 1, "unpinned table now evicts");
+        a.release(t);
+        a.release(u);
+        assert_eq!(a.stats().pages_resident, 0);
+    }
+
+    #[test]
+    fn prepare_append_heals_from_a_mid_page_start() {
+        let mut a = arena(4, None);
+        let t = a.new_table();
+        fill(&mut a, t, 0, 7, 0.0);
+        // Rewind to 5 and append 3: tail page rewritten in place.
+        fill(&mut a, t, 5, 3, 30.0);
+        assert_eq!(a.positions(t), 8);
+        assert_eq!(read_k(&a, t, 4), 4.0, "kept prefix intact");
+        assert_eq!(read_k(&a, t, 6), 36.0, "rewound positions rewritten");
+        assert_eq!(a.stats().fork_pages_copied, 0, "no sharing, no copy");
+        a.release(t);
+    }
+
+    #[test]
+    fn env_config_parses_budget_suffixes() {
+        assert_eq!(parse_bytes("4096"), Some(4096));
+        assert_eq!(parse_bytes("64k"), Some(64 << 10));
+        assert_eq!(parse_bytes("8M"), Some(8 << 20));
+        assert_eq!(parse_bytes("1g"), Some(1 << 30));
+        assert_eq!(parse_bytes("nope"), None);
+    }
+}

@@ -45,12 +45,14 @@
 //! * session-cached decoding is **token-exact** vs stateless decoding,
 //! * acceptance statistics are consistent with emitted tokens.
 
+pub mod arena;
 mod beam;
 mod greedy;
 mod sbs;
 pub(crate) mod session;
 mod spec_greedy;
 
+pub use arena::{ArenaConfig, ArenaStats, KvArena, TableId};
 pub use beam::beam_search;
 pub use greedy::{greedy, greedy_batch, GreedyRun};
 pub use sbs::{hyps_to_smiles, sbs, sbs_traced, SbsConfig, SbsIterTrace, SbsTrace};
@@ -292,6 +294,18 @@ pub struct SessionStats {
     /// so `packed_src_rows / encode_calls` is the mean packed encoder
     /// batch per call.
     pub packed_src_rows: usize,
+    /// Paged-KV-arena pages resident when `stats()` was read (0 on the
+    /// dense `RXNSPEC_ARENA=off` path and for sessions without K/V).
+    pub kv_pages_resident: usize,
+    /// High-water mark of resident arena pages.
+    pub kv_pages_high_water: usize,
+    /// Bytes of one arena page (K + V blobs); `kv_pages_high_water ×
+    /// kv_page_bytes` is the session's peak K/V footprint.
+    pub kv_page_bytes: usize,
+    /// Cold rows evicted from the arena under `RXNSPEC_KV_BUDGET`.
+    pub arena_evictions: usize,
+    /// Pages deep-copied by copy-on-write divergence after `fork`.
+    pub fork_pages_copied: usize,
 }
 
 /// One live incremental decode: per-row token state plus whatever cache

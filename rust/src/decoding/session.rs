@@ -49,25 +49,41 @@ pub(crate) fn lp_retention_from_env() -> usize {
 /// Roll one row's token history and retained log-prob suffix back to the
 /// extend submit point. A rewind past the retained suffix is healed by
 /// prepending the last committed token to the job (its recompute against
-/// the cached K/V prefix is exact). Returns `(start, job_tokens)`:
-/// `start` is the committed length the backend resumes from, and
-/// `job_tokens` the window to compute (callers append it to `tokens`
-/// when their compute step doesn't).
-pub(crate) fn rollback_for_extend<'t>(
+/// the cached K/V prefix is exact). `kv_valid` is how many positions of
+/// the row's K/V are still resident: always `len_before` for dense
+/// caches, less after a paged arena evicted the row — the resume point
+/// drops to `min(kv_valid, lp-rule start)` and every position from there
+/// to `len_before` is prepended to the job, so the rehydration recompute
+/// is exact by the kernels' bit-exactness contract and eviction can
+/// never change a logit. Returns `(start, job_tokens)`: `start` is the
+/// committed length the backend resumes from, and `job_tokens` the
+/// window to compute (callers append it to `tokens` when their compute
+/// step doesn't).
+pub(crate) fn rollback_for_extend_kv<'t>(
     tokens: &mut Vec<i64>,
     lp: &mut Vec<f32>,
     lp_start: &mut usize,
     len_before: usize,
+    kv_valid: usize,
     toks: &'t [i64],
     vocab: usize,
 ) -> (usize, std::borrow::Cow<'t, [i64]>) {
-    let (start, job) = if len_before > 0 && len_before - 1 < *lp_start {
-        let mut jt = Vec::with_capacity(toks.len() + 1);
-        jt.push(tokens[len_before - 1]);
-        jt.extend_from_slice(toks);
-        (len_before - 1, std::borrow::Cow::Owned(jt))
+    // The log-prob rule: serving the window needs the successor
+    // distribution of position len_before - 1, so a rewind past the
+    // retained suffix heals by recomputing that one position.
+    let lp_rule_start = if len_before > 0 && len_before - 1 < *lp_start {
+        len_before - 1
     } else {
-        (len_before, std::borrow::Cow::Borrowed(toks))
+        len_before
+    };
+    let start = lp_rule_start.min(kv_valid.min(len_before));
+    let job = if start == len_before {
+        std::borrow::Cow::Borrowed(toks)
+    } else {
+        let mut jt = Vec::with_capacity(len_before - start + toks.len());
+        jt.extend_from_slice(&tokens[start..len_before]);
+        jt.extend_from_slice(toks);
+        std::borrow::Cow::Owned(jt)
     };
     tokens.truncate(start);
     if start <= *lp_start {

@@ -151,6 +151,93 @@ impl KvPanels {
         }
         self.len = len;
     }
+
+    /// Paged constructor: borrow `len` cached positions from page-pooled
+    /// storage instead of owned panels. Each entry of `pages` is one
+    /// page's `(K, V)` blobs for **one layer**, holding `page` positions
+    /// in the panel layouts scaled down to a page:
+    ///
+    /// * K dimension-major `[n_heads·d_head, page]` — lane `(h, d)` at
+    ///   `k[(h·d_head + d)·page ..][..page]`, slot-ascending;
+    /// * V row-major per head `[n_heads, page, d_head]` — slot `s` of
+    ///   head `h` at `v[(h·page + s)·d_head ..][..d_head]`.
+    ///
+    /// The score/AV micro-loops therefore stay on contiguous lanes
+    /// *within* a page and chunk at page boundaries, which is
+    /// bit-identical to the dense panels (see [`attn_panels_paged`]).
+    pub fn paged<'a>(
+        n_heads: usize,
+        d_head: usize,
+        len: usize,
+        page: usize,
+        pages: Vec<(&'a [f32], &'a [f32])>,
+    ) -> PagedKv<'a> {
+        debug_assert!(page >= 1);
+        debug_assert!(pages.len() * page >= len, "page table too short for len");
+        debug_assert!(pages
+            .iter()
+            .all(|(k, v)| k.len() >= n_heads * d_head * page && v.len() >= n_heads * d_head * page));
+        PagedKv {
+            n_heads,
+            d_head,
+            len,
+            page,
+            pages,
+        }
+    }
+}
+
+/// A borrowed page-strided view of one layer's K/V — what the paged KV
+/// arena hands the attention kernels. Built via [`KvPanels::paged`].
+#[derive(Debug, Clone)]
+pub struct PagedKv<'a> {
+    n_heads: usize,
+    d_head: usize,
+    len: usize,
+    /// Positions per page.
+    page: usize,
+    /// Page `p` holds positions `[p·page, (p+1)·page)`.
+    pages: Vec<(&'a [f32], &'a [f32])>,
+}
+
+impl<'a> PagedKv<'a> {
+    pub fn n_heads(&self) -> usize {
+        self.n_heads
+    }
+
+    pub fn d_head(&self) -> usize {
+        self.d_head
+    }
+
+    /// Number of cached positions.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Positions per page.
+    pub fn page(&self) -> usize {
+        self.page
+    }
+
+    /// Key component `d` of head `h` across page `p`'s slots.
+    #[inline]
+    fn k_lane_page(&self, p: usize, h: usize, d: usize) -> &'a [f32] {
+        let (k, _) = self.pages[p];
+        let base = (h * self.d_head + d) * self.page;
+        &k[base..base + self.page]
+    }
+
+    /// Value row of global position `p·page + slot`, head `h`.
+    #[inline]
+    fn v_row(&self, p: usize, h: usize, slot: usize) -> &'a [f32] {
+        let (_, v) = self.pages[p];
+        let base = (h * self.page + slot) * self.d_head;
+        &v[base..base + self.d_head]
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -264,6 +351,39 @@ fn av_update(ci: &mut [f32], w: f32, vj: &[f32], level: SimdLevel) {
     }
 }
 
+/// Either K/V representation behind one attention call: owned dense
+/// panels or a borrowed page-strided arena view. Per-element arithmetic
+/// and reduction orders are identical through both arms, so the two are
+/// bit-identical for the same cached values.
+#[derive(Clone, Copy)]
+enum KvRef<'a> {
+    Dense(&'a KvPanels),
+    Paged(&'a PagedKv<'a>),
+}
+
+impl KvRef<'_> {
+    fn n_heads(self) -> usize {
+        match self {
+            KvRef::Dense(kv) => kv.n_heads(),
+            KvRef::Paged(pv) => pv.n_heads(),
+        }
+    }
+
+    fn d_head(self) -> usize {
+        match self {
+            KvRef::Dense(kv) => kv.d_head(),
+            KvRef::Paged(pv) => pv.d_head(),
+        }
+    }
+
+    fn len(self) -> usize {
+        match self {
+            KvRef::Dense(kv) => kv.len(),
+            KvRef::Paged(pv) => pv.len(),
+        }
+    }
+}
+
 /// One head's attention: queries `i` live head-interleaved in `q` (row
 /// `i`, head `h` at `q[q_base + i·q_stride + h·d_head]`); context rows
 /// land at `out[i·out_stride + out_base]`. `causal_offset = Some(p)`
@@ -275,7 +395,7 @@ fn attn_one_head(
     q_stride: usize,
     q_base: usize,
     nq: usize,
-    kv: &KvPanels,
+    kv: KvRef<'_>,
     h: usize,
     causal_offset: Option<usize>,
     out: &mut [f32],
@@ -283,10 +403,9 @@ fn attn_one_head(
     out_base: usize,
     level: SimdLevel,
 ) {
-    let dh = kv.d_head;
-    let nk = kv.len;
+    let dh = kv.d_head();
+    let nk = kv.len();
     let scale = 1.0 / (dh as f32).sqrt();
-    let vp = kv.v_panel(h);
     let mut scores = vec![0f32; nk];
     for i in 0..nq {
         let qo = q_base + i * q_stride + h * dh;
@@ -296,12 +415,36 @@ fn attn_one_head(
             None => nk,
         };
         // Scores: one rank-1 lane update per query dimension, so each
-        // score_j reduces d-ascending exactly like a scalar dot.
+        // score_j reduces d-ascending exactly like a scalar dot. The
+        // paged arm runs the same update chunked at page boundaries —
+        // the update is elementwise and the SIMD/scalar split is itself
+        // bit-identical per element, so chunking changes no score.
         for s in scores[..lim].iter_mut() {
             *s = 0.0;
         }
-        for (d, &qd) in qi.iter().enumerate() {
-            score_update(&mut scores[..lim], qd, &kv.k_lane(h, d)[..lim], level);
+        match kv {
+            KvRef::Dense(kv) => {
+                for (d, &qd) in qi.iter().enumerate() {
+                    score_update(&mut scores[..lim], qd, &kv.k_lane(h, d)[..lim], level);
+                }
+            }
+            KvRef::Paged(pv) => {
+                for (d, &qd) in qi.iter().enumerate() {
+                    let mut j0 = 0usize;
+                    let mut p = 0usize;
+                    while j0 < lim {
+                        let take = (lim - j0).min(pv.page);
+                        score_update(
+                            &mut scores[j0..j0 + take],
+                            qd,
+                            &pv.k_lane_page(p, h, d)[..take],
+                            level,
+                        );
+                        j0 += take;
+                        p += 1;
+                    }
+                }
+            }
         }
         // Scale + running max, j ascending.
         let mut mx = f32::NEG_INFINITY;
@@ -323,9 +466,20 @@ fn attn_one_head(
             *c = 0.0;
         }
         // Context: one weighted value-row lane update per key, so each
-        // ci[d] reduces j-ascending.
-        for (j, &w0) in scores[..lim].iter().enumerate() {
-            av_update(ci, w0 * inv, &vp[j * dh..(j + 1) * dh], level);
+        // ci[d] reduces j-ascending — the paged arm reads value rows
+        // through the page table, same order, same arithmetic.
+        match kv {
+            KvRef::Dense(kv) => {
+                let vp = kv.v_panel(h);
+                for (j, &w0) in scores[..lim].iter().enumerate() {
+                    av_update(ci, w0 * inv, &vp[j * dh..(j + 1) * dh], level);
+                }
+            }
+            KvRef::Paged(pv) => {
+                for (j, &w0) in scores[..lim].iter().enumerate() {
+                    av_update(ci, w0 * inv, pv.v_row(j / pv.page, h, j % pv.page), level);
+                }
+            }
         }
     }
 }
@@ -355,6 +509,50 @@ pub fn attn_panels_with(
     q_base: usize,
     nq: usize,
     kv: &KvPanels,
+    causal_offset: Option<usize>,
+    ctx: &mut [f32],
+    level: SimdLevel,
+) {
+    attn_ref_with(q, q_stride, q_base, nq, KvRef::Dense(kv), causal_offset, ctx, level);
+}
+
+/// [`attn_panels`] over a page-strided arena view ([`KvPanels::paged`]),
+/// at the process-wide SIMD dispatch level. Bit-identical to the dense
+/// call over the same cached values.
+pub fn attn_panels_paged(
+    q: &[f32],
+    q_stride: usize,
+    q_base: usize,
+    nq: usize,
+    kv: &PagedKv<'_>,
+    causal_offset: Option<usize>,
+    ctx: &mut [f32],
+) {
+    attn_panels_paged_with(q, q_stride, q_base, nq, kv, causal_offset, ctx, simd::simd_level());
+}
+
+/// [`attn_panels_paged`] with an explicit SIMD dispatch level.
+#[allow(clippy::too_many_arguments)]
+pub fn attn_panels_paged_with(
+    q: &[f32],
+    q_stride: usize,
+    q_base: usize,
+    nq: usize,
+    kv: &PagedKv<'_>,
+    causal_offset: Option<usize>,
+    ctx: &mut [f32],
+    level: SimdLevel,
+) {
+    attn_ref_with(q, q_stride, q_base, nq, KvRef::Paged(kv), causal_offset, ctx, level);
+}
+
+#[allow(clippy::too_many_arguments)]
+fn attn_ref_with(
+    q: &[f32],
+    q_stride: usize,
+    q_base: usize,
+    nq: usize,
+    kv: KvRef<'_>,
     causal_offset: Option<usize>,
     ctx: &mut [f32],
     level: SimdLevel,
@@ -419,11 +617,63 @@ pub fn attn_panels_threaded_with(
     threads: usize,
     level: SimdLevel,
 ) {
+    attn_ref_threaded_with(
+        q,
+        q_stride,
+        q_base,
+        nq,
+        KvRef::Dense(kv),
+        causal_offset,
+        ctx,
+        threads,
+        level,
+    );
+}
+
+/// [`attn_panels_threaded`] over a page-strided arena view — same
+/// adaptive head partitioning and work gate, so the paged threaded call
+/// is bit-identical to both its serial form and the dense path.
+#[allow(clippy::too_many_arguments)]
+pub fn attn_panels_paged_threaded(
+    q: &[f32],
+    q_stride: usize,
+    q_base: usize,
+    nq: usize,
+    kv: &PagedKv<'_>,
+    causal_offset: Option<usize>,
+    ctx: &mut [f32],
+    threads: usize,
+) {
+    attn_ref_threaded_with(
+        q,
+        q_stride,
+        q_base,
+        nq,
+        KvRef::Paged(kv),
+        causal_offset,
+        ctx,
+        threads,
+        simd::simd_level(),
+    );
+}
+
+#[allow(clippy::too_many_arguments)]
+fn attn_ref_threaded_with(
+    q: &[f32],
+    q_stride: usize,
+    q_base: usize,
+    nq: usize,
+    kv: KvRef<'_>,
+    causal_offset: Option<usize>,
+    ctx: &mut [f32],
+    threads: usize,
+    level: SimdLevel,
+) {
     let nh = kv.n_heads();
     let dh = kv.d_head();
     let work = nq * kv.len() * dh * nh;
     if threads <= 1 || nh <= 1 || work < threads::par_min_attn_work() {
-        attn_panels_with(q, q_stride, q_base, nq, kv, causal_offset, ctx, level);
+        attn_ref_with(q, q_stride, q_base, nq, kv, causal_offset, ctx, level);
         return;
     }
     let d_model = nh * dh;
@@ -611,6 +861,112 @@ mod tests {
             for threads in [2usize, 3, 4, 9] {
                 let mut par = vec![0f32; nq * d];
                 attn_panels_threaded(&q, d, 0, nq, &kv, mask, &mut par, threads);
+                assert_eq!(serial, par, "threads={threads} mask={mask:?}");
+            }
+        }
+    }
+
+    /// Chop a dense cache into page blobs in the [`KvPanels::paged`]
+    /// per-page layouts (what the arena-backed sessions materialize).
+    fn page_blobs(kv: &KvPanels, page: usize) -> Vec<(Vec<f32>, Vec<f32>)> {
+        let (nh, dh) = (kv.n_heads(), kv.d_head());
+        let n_pages = kv.len().div_ceil(page);
+        let mut out = Vec::with_capacity(n_pages);
+        for p in 0..n_pages {
+            let mut k = vec![0f32; nh * dh * page];
+            let mut v = vec![0f32; nh * dh * page];
+            for s in 0..page {
+                let j = p * page + s;
+                if j >= kv.len() {
+                    break;
+                }
+                for h in 0..nh {
+                    for d in 0..dh {
+                        k[(h * dh + d) * page + s] = kv.k_lane(h, d)[j];
+                    }
+                    let dst = (h * page + s) * dh;
+                    v[dst..dst + dh].copy_from_slice(&kv.v_panel(h)[j * dh..(j + 1) * dh]);
+                }
+            }
+            out.push((k, v));
+        }
+        out
+    }
+
+    #[test]
+    fn paged_view_is_bit_identical_to_dense_panels() {
+        // Page sizes deliberately off the LANES grid (1, 3, 5) force the
+        // SIMD chunking to split where the dense loop would have run a
+        // full vector — bit-identical anyway, because the vector and
+        // scalar per-element arithmetic are themselves identical.
+        let level = if simd::avx2_available() {
+            SimdLevel::Avx2
+        } else {
+            simd::simd_level()
+        };
+        let mut rng = Rng::new(7);
+        for &(nh, dh, nk, nq) in &[(2usize, 3usize, 11usize, 3usize), (1, 8, 16, 2), (3, 5, 7, 4)]
+        {
+            let d = nh * dh;
+            let kv = filled_panels(&mut rng, nh, dh, nk);
+            let q = rand_vec(&mut rng, nq * d);
+            for page in [1usize, 3, 5, 8, 16, 32] {
+                let blobs = page_blobs(&kv, page);
+                let view = KvPanels::paged(
+                    nh,
+                    dh,
+                    kv.len(),
+                    page,
+                    blobs.iter().map(|(k, v)| (k.as_slice(), v.as_slice())).collect(),
+                );
+                for mask in [None, Some(nk.saturating_sub(nq))] {
+                    let mut dense = vec![0f32; nq * d];
+                    attn_panels_with(&q, d, 0, nq, &kv, mask, &mut dense, level);
+                    let mut paged = vec![0f32; nq * d];
+                    attn_panels_paged_with(&q, d, 0, nq, &view, mask, &mut paged, level);
+                    assert_eq!(
+                        dense, paged,
+                        "nh={nh} dh={dh} nk={nk} nq={nq} page={page} mask={mask:?}"
+                    );
+                    let mut scalar = vec![0f32; nq * d];
+                    attn_panels_paged_with(
+                        &q,
+                        d,
+                        0,
+                        nq,
+                        &view,
+                        mask,
+                        &mut scalar,
+                        SimdLevel::Scalar,
+                    );
+                    assert_eq!(paged, scalar, "paged scalar/simd split page={page}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn paged_threaded_attention_is_bit_identical_to_dense_serial() {
+        let mut rng = Rng::new(8);
+        let (nh, dh, nk, nq) = (4usize, 16usize, 64usize, 16usize);
+        let d = nh * dh;
+        let kv = filled_panels(&mut rng, nh, dh, nk);
+        let q = rand_vec(&mut rng, nq * d);
+        let page = 12; // off the LANES grid, partial tail page
+        let blobs = page_blobs(&kv, page);
+        let view = KvPanels::paged(
+            nh,
+            dh,
+            kv.len(),
+            page,
+            blobs.iter().map(|(k, v)| (k.as_slice(), v.as_slice())).collect(),
+        );
+        for mask in [None, Some(nk - nq)] {
+            let mut serial = vec![0f32; nq * d];
+            attn_panels(&q, d, 0, nq, &kv, mask, &mut serial);
+            for threads in [1usize, 2, 4, 9] {
+                let mut par = vec![0f32; nq * d];
+                attn_panels_paged_threaded(&q, d, 0, nq, &view, mask, &mut par, threads);
                 assert_eq!(serial, par, "threads={threads} mask={mask:?}");
             }
         }

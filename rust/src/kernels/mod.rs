@@ -48,7 +48,10 @@ pub mod gemm;
 pub mod simd;
 pub mod threads;
 
-pub use attention::{attn_panels, attn_panels_threaded, KvPanels};
+pub use attention::{
+    attn_panels, attn_panels_paged, attn_panels_paged_threaded, attn_panels_threaded, KvPanels,
+    PagedKv,
+};
 pub use gemm::PackedLinear;
 pub use simd::{simd_level, SimdLevel};
 pub use threads::default_threads;

@@ -34,13 +34,17 @@ use std::sync::Arc;
 use anyhow::Result;
 
 use crate::decoding::session::{
-    assemble_window_row, lp_retention_from_env, needed_window, rollback_for_extend,
+    assemble_window_row, lp_retention_from_env, needed_window, rollback_for_extend_kv,
     trim_lp_suffix,
 };
 use crate::decoding::{
-    Backend, DecoderRow, DecoderSession, LogProbs, Memory, ModelDims, SessionStats,
+    ArenaConfig, ArenaStats, Backend, DecoderRow, DecoderSession, KvArena, LogProbs, Memory,
+    ModelDims, SessionStats, TableId,
 };
-use crate::kernels::{attn_panels_threaded, default_threads, KvPanels, PackedLinear};
+use crate::kernels::{
+    attn_panels_paged_threaded, attn_panels_threaded, default_threads, KvPanels, PackedLinear,
+    PagedKv,
+};
 use crate::model::weights::{load_config, Tensor, Weights};
 
 /// Model hyper-parameters (matches `ModelConfig` in model.py).
@@ -568,10 +572,15 @@ impl Backend for RustBackend {
 
 /// Committed state of one session row. Forks share it through an `Arc`
 /// (copy-on-write: the first `extend` after a fork clones exactly once).
+/// In paged-arena mode the K/V lives in the session's [`KvArena`]
+/// instead (`SessRow::table`), so the Arc-COW clone covers only the
+/// scalar state here — tokens and the bounded log-prob suffix.
 #[derive(Clone)]
 struct RowCache {
     tokens: Vec<i64>,
-    /// One per-head-panel K/V cache per decoder layer.
+    /// One per-head-panel K/V cache per decoder layer — dense
+    /// (`RXNSPEC_ARENA=off`) mode only; empty when the row's K/V lives
+    /// in the arena.
     kv: Vec<KvPanels>,
     /// Retained **suffix** of per-position successor log-probs,
     /// `[retained, vocab]` starting at absolute position `lp_start` —
@@ -591,6 +600,10 @@ struct SessRow {
     /// shared buffers are trimmed lazily by the next `extend` once the
     /// row holds a unique copy.
     len: usize,
+    /// Paged mode: this row's page table in the session arena. `fork`
+    /// clones only the table (O(pages) refcount bumps); the shared
+    /// partial tail page is copied lazily on first divergent write.
+    table: Option<TableId>,
 }
 
 /// The reference backend's [`DecoderSession`]: incremental self-attention
@@ -609,12 +622,27 @@ pub struct CachedSession<'a> {
     rows: Vec<Option<SessRow>>,
     stats: SessionStats,
     lp_retain: usize,
+    /// Page-pooled K/V residency (`RXNSPEC_ARENA`; `None` = dense
+    /// per-row panels, the fallback and parity oracle).
+    arena: Option<KvArena>,
 }
 
 impl<'a> CachedSession<'a> {
     pub fn new(backend: &'a RustBackend, memory: Memory) -> CachedSession<'a> {
+        CachedSession::with_arena(backend, memory, ArenaConfig::from_env())
+    }
+
+    /// Open a session with an explicit arena mode, bypassing the
+    /// `RXNSPEC_ARENA` environment knobs (tests drive paged and dense
+    /// sessions side by side this way without touching process env).
+    pub fn with_arena(
+        backend: &'a RustBackend,
+        memory: Memory,
+        arena: Option<ArenaConfig>,
+    ) -> CachedSession<'a> {
         let batch = memory.batch;
         let lp_retain = lp_retention_from_env();
+        let arena = arena.map(|cfg| KvArena::new(&cfg, backend.cfg.n_dec * backend.cfg.d_model));
         CachedSession {
             backend,
             memory,
@@ -628,7 +656,13 @@ impl<'a> CachedSession<'a> {
                 ..SessionStats::default()
             },
             lp_retain,
+            arena,
         }
+    }
+
+    /// Arena residency counters, `None` on the dense path.
+    pub fn arena_stats(&self) -> Option<ArenaStats> {
+        self.arena.as_ref().map(|a| a.stats())
     }
 
     /// Cap the per-row log-prob retention (positions; min 1). Lower caps
@@ -663,11 +697,21 @@ impl<'a> CachedSession<'a> {
     }
 }
 
+/// Where one extend job's self-attention K/V lives: the row's own dense
+/// panels, or a page table in the session arena (pages already prepared
+/// — rolled back, unshared, allocated — by the caller).
+enum JobKv<'a> {
+    Dense(&'a mut Vec<KvPanels>),
+    Paged(TableId),
+}
+
 /// One row's slice of a batched extend pass: its (already rolled-back)
-/// cache, its per-layer cross-attention panels, and the token window to
-/// append.
+/// scalar cache parts, its K/V designator, its per-layer cross-attention
+/// panels, and the token window to append.
 struct ExtendJob<'a> {
-    cache: &'a mut RowCache,
+    tokens: &'a mut Vec<i64>,
+    lp: &'a mut Vec<f32>,
+    kv: JobKv<'a>,
     cross: &'a [KvPanels],
     toks: &'a [i64],
 }
@@ -677,10 +721,11 @@ impl RustBackend {
     /// packed into one `[Σmᵢ, d_model]` activation matrix per layer.
     /// GEMMs, layer norms, the FFN and the output head are cross-row
     /// packed; attention stays per-row against each row's own K/V
-    /// history. Per-row arithmetic is identical to a sequence of
-    /// single-row passes (the kernels' row-independence contract), so
-    /// batching never changes results.
-    fn extend_rows_batched(&self, jobs: &mut [ExtendJob<'_>]) {
+    /// history — dense panels or a page-strided arena view, which the
+    /// kernels guarantee bit-identical. Per-row arithmetic is identical
+    /// to a sequence of single-row passes (the kernels' row-independence
+    /// contract), so batching never changes results.
+    fn extend_rows_batched(&self, jobs: &mut [ExtendJob<'_>], mut arena: Option<&mut KvArena>) {
         let d = self.cfg.d_model;
         let v = self.cfg.vocab;
         let total: usize = jobs.iter().map(|j| j.toks.len()).sum();
@@ -695,12 +740,12 @@ impl RustBackend {
             for job in jobs.iter_mut() {
                 let m = job.toks.len();
                 offs.push(off);
-                let p = job.cache.tokens.len();
+                let p = job.tokens.len();
                 starts.push(p);
                 if m > 0 {
                     let positions: Vec<i64> = (p as i64..(p + m) as i64).collect();
                     self.embed_into(job.toks, &positions, &mut x[off * d..(off + m) * d]);
-                    job.cache.tokens.extend_from_slice(job.toks);
+                    job.tokens.extend_from_slice(job.toks);
                 }
                 off += m;
             }
@@ -719,18 +764,47 @@ impl RustBackend {
                     continue;
                 }
                 let off = offs[ji];
-                let kv = &mut job.cache.kv[li];
-                kv.append_strided(&qkv[off * 3 * d..], m, 3 * d, d, 2 * d);
-                attn_panels_threaded(
-                    &qkv,
-                    3 * d,
-                    off * 3 * d,
-                    m,
-                    kv,
-                    Some(starts[ji]),
-                    &mut ctx[off * d..(off + m) * d],
-                    self.threads,
-                );
+                match &mut job.kv {
+                    JobKv::Dense(kvs) => {
+                        let kv = &mut kvs[li];
+                        kv.append_strided(&qkv[off * 3 * d..], m, 3 * d, d, 2 * d);
+                        attn_panels_threaded(
+                            &qkv,
+                            3 * d,
+                            off * 3 * d,
+                            m,
+                            kv,
+                            Some(starts[ji]),
+                            &mut ctx[off * d..(off + m) * d],
+                            self.threads,
+                        );
+                    }
+                    JobKv::Paged(table) => {
+                        let ar = arena.as_deref_mut().expect("paged job without an arena");
+                        self.append_kv_paged(
+                            ar,
+                            *table,
+                            li,
+                            &qkv[off * 3 * d..],
+                            m,
+                            3 * d,
+                            d,
+                            2 * d,
+                            starts[ji],
+                        );
+                        let view = self.paged_layer_view(ar, *table, li, starts[ji] + m);
+                        attn_panels_paged_threaded(
+                            &qkv,
+                            3 * d,
+                            off * 3 * d,
+                            m,
+                            &view,
+                            Some(starts[ji]),
+                            &mut ctx[off * d..(off + m) * d],
+                            self.threads,
+                        );
+                    }
+                }
             }
             let a = layer.self_attn.wo.apply(&ctx, n, self.threads);
             add_assign(&mut x, &a);
@@ -770,11 +844,76 @@ impl RustBackend {
             let off = offs[ji];
             for i in 0..m {
                 let lrow = &logits[(off + i) * v..(off + i + 1) * v];
-                let base = job.cache.lp.len();
-                job.cache.lp.resize(base + v, 0.0);
-                log_softmax_row_into(lrow, &mut job.cache.lp[base..]);
+                let base = job.lp.len();
+                job.lp.resize(base + v, 0.0);
+                log_softmax_row_into(lrow, &mut job.lp[base..]);
             }
         }
+    }
+
+    /// Write `m` appended positions' K/V (rows of a fused-QKV matrix:
+    /// row `r`'s K at `data[r·stride + k_off]`, V at `data[r·stride +
+    /// v_off]`) into the row's arena pages at layer `li`, starting at
+    /// global position `start`. Page blobs are `[n_dec, d_model·P]`
+    /// per buffer; within layer `li`'s slice the layouts are exactly
+    /// [`KvPanels::paged`]'s: K lanes `[d_model, P]`, V panels
+    /// `[n_heads, P, d_head]`.
+    #[allow(clippy::too_many_arguments)]
+    fn append_kv_paged(
+        &self,
+        arena: &mut KvArena,
+        table: TableId,
+        li: usize,
+        data: &[f32],
+        m: usize,
+        stride: usize,
+        k_off: usize,
+        v_off: usize,
+        start: usize,
+    ) {
+        let d = self.cfg.d_model;
+        let dh = self.cfg.d_head();
+        let pp = arena.page_positions();
+        let lbase = li * d * pp;
+        for r in 0..m {
+            let pos = start + r;
+            let pid = arena.table_pages(table)[pos / pp];
+            let slot = pos % pp;
+            let (pk, pv) = arena.page_kv_mut(pid);
+            for hd in 0..d {
+                pk[lbase + hd * pp + slot] = data[r * stride + k_off + hd];
+            }
+            for h in 0..self.cfg.n_heads {
+                let dst = lbase + (h * pp + slot) * dh;
+                let src = r * stride + v_off + h * dh;
+                pv[dst..dst + dh].copy_from_slice(&data[src..src + dh]);
+            }
+        }
+    }
+
+    /// Borrow layer `li` of a row's pages as a page-strided attention
+    /// view over positions `0..len`.
+    fn paged_layer_view<'v>(
+        &self,
+        arena: &'v KvArena,
+        table: TableId,
+        li: usize,
+        len: usize,
+    ) -> PagedKv<'v> {
+        let d = self.cfg.d_model;
+        let pp = arena.page_positions();
+        let lbase = li * d * pp;
+        let n_pages = len.div_ceil(pp);
+        let pages = arena.table_pages(table)[..n_pages]
+            .iter()
+            .map(|&pid| {
+                (
+                    &arena.page_k(pid)[lbase..lbase + d * pp],
+                    &arena.page_v(pid)[lbase..lbase + d * pp],
+                )
+            })
+            .collect();
+        KvPanels::paged(self.cfg.n_heads, self.cfg.d_head(), len, pp, pages)
     }
 
     /// Pure-Rust mirror of the `deccache` AOT artifact semantics
@@ -919,28 +1058,41 @@ impl DecoderSession for CachedSession<'_> {
     fn new_row(&mut self, mem_row: usize) -> usize {
         assert!(mem_row < self.memory.batch, "memory row out of range");
         let cfg = &self.backend.cfg;
+        let table = self.arena.as_mut().map(|a| a.new_table());
+        let kv = if table.is_some() {
+            Vec::new()
+        } else {
+            (0..cfg.n_dec)
+                .map(|_| KvPanels::new(cfg.n_heads, cfg.d_head()))
+                .collect()
+        };
         self.rows.push(Some(SessRow {
             mem_row,
             cache: Arc::new(RowCache {
                 tokens: Vec::new(),
-                kv: (0..cfg.n_dec)
-                    .map(|_| KvPanels::new(cfg.n_heads, cfg.d_head()))
-                    .collect(),
+                kv,
                 lp: Vec::new(),
                 lp_start: 0,
             }),
             len: 0,
+            table,
         }));
         self.rows.len() - 1
     }
 
     fn fork(&mut self, row: usize) -> usize {
         let src = self.row(row);
-        let copy = SessRow {
+        let mut copy = SessRow {
             mem_row: src.mem_row,
             cache: Arc::clone(&src.cache),
             len: src.len,
+            table: src.table,
         };
+        // Paged: O(pages) table clone + refcount bumps; no K/V floats
+        // move until a divergent write COWs the shared tail page.
+        if let Some(t) = copy.table {
+            copy.table = Some(self.arena.as_mut().expect("table without an arena").fork(t));
+        }
         self.rows.push(Some(copy));
         self.rows.len() - 1
     }
@@ -949,10 +1101,20 @@ impl DecoderSession for CachedSession<'_> {
         let sr = self.rows[row].as_mut().expect("released session row");
         assert!(len <= sr.len, "truncate beyond row length");
         sr.len = len;
+        // Paged: return whole pages past the cut to the free list now
+        // (the partial page holding the new tail stays resident for the
+        // next extend's heal).
+        if let (Some(arena), Some(t)) = (self.arena.as_mut(), sr.table) {
+            arena.truncate(t, len);
+        }
     }
 
     fn release(&mut self, row: usize) {
-        self.rows[row] = None;
+        if let Some(sr) = self.rows[row].take() {
+            if let (Some(arena), Some(t)) = (self.arena.as_mut(), sr.table) {
+                arena.release(t);
+            }
+        }
     }
 
     fn row_len(&self, row: usize) -> usize {
@@ -974,6 +1136,18 @@ impl DecoderSession for CachedSession<'_> {
             );
         }
 
+        // Pin every batch row's page table for the whole extend: one
+        // row's page allocation must never evict a sibling that is about
+        // to be (or already was) prepared in this same pass.
+        if let Some(arena) = self.arena.as_mut() {
+            for &(row, _) in deltas {
+                let sr = self.rows[row].as_ref().expect("released session row");
+                if let Some(t) = sr.table {
+                    arena.set_pinned(t, true);
+                }
+            }
+        }
+
         struct Prep<'t> {
             row: usize,
             sr: SessRow,
@@ -990,21 +1164,43 @@ impl DecoderSession for CachedSession<'_> {
             let cross = self.cross_for(mem_row);
             let mut sr = self.rows[row].take().expect("released session row");
             let len_before = sr.len;
-            // Unshare (one clone if forked) and roll the buffers back to
-            // the logical length before appending — the shared
-            // session-contract helper handles the deep-rewind heal
-            // (re-committing the last prefix token bit-identically).
+            // K/V still resident for this row: everything (dense), or
+            // whatever survived eviction (paged) — the rollback helper
+            // deepens the resume point to cover the gap, and the heal
+            // recompute is exact.
+            let kv_valid = match (self.arena.as_ref(), sr.table) {
+                (Some(a), Some(t)) => a.positions(t),
+                _ => len_before,
+            };
+            // Unshare the scalar cache (one clone if forked) and roll
+            // the buffers back to the resume point — the shared
+            // session-contract helper handles both the deep-rewind heal
+            // and eviction rehydration (bit-identical recomputes).
             let cache = Arc::make_mut(&mut sr.cache);
-            let (start, job_toks) = rollback_for_extend(
+            let (start, job_toks) = rollback_for_extend_kv(
                 &mut cache.tokens,
                 &mut cache.lp,
                 &mut cache.lp_start,
                 len_before,
+                kv_valid,
                 toks,
                 v,
             );
-            for kv in cache.kv.iter_mut() {
-                kv.truncate(start);
+            match (self.arena.as_mut(), sr.table) {
+                (Some(arena), Some(t)) => {
+                    if kv_valid < len_before {
+                        arena.note_rehydrated(len_before - start);
+                    }
+                    // Roll the page table back and make the append range
+                    // writable (COW-unshare the tail page, allocate).
+                    arena.truncate(t, start);
+                    arena.prepare_append(t, start, job_toks.len());
+                }
+                _ => {
+                    for kv in cache.kv.iter_mut() {
+                        kv.truncate(start);
+                    }
+                }
             }
             self.stats.tokens_computed += job_toks.len();
             self.stats.tokens_reused += start;
@@ -1022,13 +1218,23 @@ impl DecoderSession for CachedSession<'_> {
         {
             let mut jobs: Vec<ExtendJob<'_>> = prep
                 .iter_mut()
-                .map(|p| ExtendJob {
-                    cache: Arc::make_mut(&mut p.sr.cache),
-                    cross: &p.cross[..],
-                    toks: &p.toks[..],
+                .map(|p| {
+                    let table = p.sr.table;
+                    let cache = Arc::make_mut(&mut p.sr.cache);
+                    let kv = match table {
+                        Some(t) => JobKv::Paged(t),
+                        None => JobKv::Dense(&mut cache.kv),
+                    };
+                    ExtendJob {
+                        tokens: &mut cache.tokens,
+                        lp: &mut cache.lp,
+                        kv,
+                        cross: &p.cross[..],
+                        toks: &p.toks[..],
+                    }
                 })
                 .collect();
-            self.backend.extend_rows_batched(&mut jobs);
+            self.backend.extend_rows_batched(&mut jobs, self.arena.as_mut());
         }
 
         // Window sizing over logical lengths (same contract as before).
@@ -1055,13 +1261,25 @@ impl DecoderSession for CachedSession<'_> {
                     trim_lp_suffix(&mut cache.lp, &mut cache.lp_start, v, self.lp_retain);
                 self.stats.lp_high_water = self.stats.lp_high_water.max(retained);
             }
+            if let (Some(arena), Some(t)) = (self.arena.as_mut(), p.sr.table) {
+                arena.set_pinned(t, false);
+            }
             self.rows[p.row] = Some(p.sr);
         }
         Ok(LogProbs::new_windowed(data, lens, t_len, v, window))
     }
 
     fn stats(&self) -> SessionStats {
-        self.stats
+        let mut stats = self.stats;
+        if let Some(arena) = self.arena.as_ref() {
+            let a = arena.stats();
+            stats.kv_pages_resident = a.pages_resident;
+            stats.kv_pages_high_water = a.pages_high_water;
+            stats.kv_page_bytes = a.page_bytes;
+            stats.arena_evictions = a.evictions;
+            stats.fork_pages_copied = a.fork_pages_copied;
+        }
+        stats
     }
 }
 
@@ -1070,5 +1288,13 @@ impl RustBackend {
     /// this to reach knobs like [`CachedSession::set_lp_retention`]).
     pub fn begin_cached(&self, memory: Memory) -> CachedSession<'_> {
         CachedSession::new(self, memory)
+    }
+
+    /// Open a [`CachedSession`] with an explicit arena configuration
+    /// (`None` forces the dense per-row K/V path), bypassing the
+    /// `RXNSPEC_ARENA` environment knobs. Tests use this to exercise
+    /// both residency models without racing on process-global env vars.
+    pub fn begin_cached_with(&self, memory: Memory, arena: Option<ArenaConfig>) -> CachedSession<'_> {
+        CachedSession::with_arena(self, memory, arena)
     }
 }

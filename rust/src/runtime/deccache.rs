@@ -70,10 +70,13 @@ use std::sync::Arc;
 use anyhow::Result;
 
 use crate::decoding::session::{
-    assemble_window_row, lp_retention_from_env, needed_window, rollback_for_extend,
+    assemble_window_row, lp_retention_from_env, needed_window, rollback_for_extend_kv,
     trim_lp_suffix,
 };
-use crate::decoding::{DecoderSession, LogProbs, Memory, ModelDims, SessionStats};
+use crate::decoding::{
+    ArenaConfig, ArenaStats, DecoderSession, KvArena, LogProbs, Memory, ModelDims, SessionStats,
+    TableId,
+};
 use crate::vocab::PAD_ID;
 
 /// One cache-shaped decoder invocation, padded to its `(W, EB)` bucket.
@@ -144,9 +147,10 @@ struct PjRowCache {
     /// (`truncate` only lowers the row's `len`, the tail is trimmed
     /// lazily by the next `extend`).
     tokens: Vec<i64>,
-    /// `[L, T, D]` flattened self-attention key mirror.
+    /// `[L, T, D]` flattened self-attention key mirror. Empty in paged
+    /// mode — the mirror lives in the session arena's pages instead.
     k: Vec<f32>,
-    /// `[L, T, D]` flattened value mirror.
+    /// `[L, T, D]` flattened value mirror (empty in paged mode).
     v: Vec<f32>,
     /// Retained suffix of per-position successor log-probs,
     /// `[retained, V]` starting at absolute position `lp_start`.
@@ -159,6 +163,11 @@ struct PjRow {
     /// Logical committed length (`truncate` is O(1): only this moves).
     len: usize,
     cache: Arc<PjRowCache>,
+    /// Paged mode: this row's page table in the session arena. Pages
+    /// hold the `[L, T, D]` mirror chunked by position — within a page,
+    /// layer `l` slot `s` lives at `(l·P + s)·D`, so gather/scatter move
+    /// contiguous `run·D`-float spans per layer per page.
+    table: Option<TableId>,
 }
 
 /// See module docs.
@@ -175,15 +184,30 @@ pub struct CachedPjrtSession<E: DeccacheExec> {
     /// output K/V the executor still holds on-device.
     last_sig: Option<(Vec<usize>, usize)>,
     kv_uploads_skipped: u64,
+    /// Page-pooled host-mirror residency (`RXNSPEC_ARENA`; `None` =
+    /// dense per-row mirrors, the fallback and parity oracle).
+    arena: Option<KvArena>,
 }
 
 impl<E: DeccacheExec> CachedPjrtSession<E> {
     pub fn new(exec: E, memory: Memory) -> CachedPjrtSession<E> {
+        CachedPjrtSession::with_arena(exec, memory, ArenaConfig::from_env())
+    }
+
+    /// Open a session with an explicit arena mode, bypassing the
+    /// `RXNSPEC_ARENA` environment knobs (tests drive paged and dense
+    /// sessions side by side this way without touching process env).
+    pub fn with_arena(
+        exec: E,
+        memory: Memory,
+        arena: Option<ArenaConfig>,
+    ) -> CachedPjrtSession<E> {
         let batch = memory.batch;
         let dims = exec.dims();
         let grid = exec.grid();
         assert!(!grid.is_empty(), "deccache session requires a non-empty artifact grid");
         let n_layers = exec.n_layers();
+        let arena = arena.map(|cfg| KvArena::new(&cfg, n_layers * dims.d_model));
         CachedPjrtSession {
             exec,
             memory,
@@ -201,6 +225,7 @@ impl<E: DeccacheExec> CachedPjrtSession<E> {
             dims,
             last_sig: None,
             kv_uploads_skipped: 0,
+            arena,
         }
     }
 
@@ -208,6 +233,11 @@ impl<E: DeccacheExec> CachedPjrtSession<E> {
     /// reuse path elided so far.
     pub fn kv_uploads_skipped(&self) -> u64 {
         self.kv_uploads_skipped
+    }
+
+    /// Arena residency counters, `None` on the dense path.
+    pub fn arena_stats(&self) -> Option<ArenaStats> {
+        self.arena.as_ref().map(|a| a.stats())
     }
 
     /// Cap the per-row log-prob retention (positions; min 1) — same knob
@@ -278,7 +308,12 @@ impl<E: DeccacheExec> DecoderSession for CachedPjrtSession<E> {
 
     fn new_row(&mut self, mem_row: usize) -> usize {
         assert!(mem_row < self.memory.batch, "memory row out of range");
-        let sz = self.n_layers * self.dims.t_len * self.dims.d_model;
+        let table = self.arena.as_mut().map(|a| a.new_table());
+        let sz = if table.is_some() {
+            0 // Mirror lives in arena pages, allocated as the row grows.
+        } else {
+            self.n_layers * self.dims.t_len * self.dims.d_model
+        };
         self.rows.push(Some(PjRow {
             mem_row,
             len: 0,
@@ -289,17 +324,24 @@ impl<E: DeccacheExec> DecoderSession for CachedPjrtSession<E> {
                 lp: Vec::new(),
                 lp_start: 0,
             }),
+            table,
         }));
         self.rows.len() - 1
     }
 
     fn fork(&mut self, row: usize) -> usize {
         let src = self.row(row);
-        let copy = PjRow {
+        let mut copy = PjRow {
             mem_row: src.mem_row,
             len: src.len,
             cache: Arc::clone(&src.cache),
+            table: src.table,
         };
+        if let Some(t) = copy.table {
+            // O(pages) pointer work: clone the page table and bump
+            // refcounts; blob bytes are copied only on divergent write.
+            copy.table = Some(self.arena.as_mut().expect("table without an arena").fork(t));
+        }
         self.rows.push(Some(copy));
         self.rows.len() - 1
     }
@@ -308,14 +350,23 @@ impl<E: DeccacheExec> DecoderSession for CachedPjrtSession<E> {
         // Host-side rewind: stale cache slots ≥ len stay in both the
         // mirrors and any device-resident buffer — masked by `cache_len`
         // and overwritten by the next extend — so this is O(1) and does
-        // NOT invalidate device reuse.
+        // NOT invalidate device reuse. Paged mode additionally drops
+        // whole pages past the new tail back to the free list (O(pages
+        // released); the device-reuse signature is still untouched).
         let r = self.rows[row].as_mut().expect("released session row");
         assert!(len <= r.len, "truncate beyond row length");
         r.len = len;
+        if let (Some(arena), Some(t)) = (self.arena.as_mut(), r.table) {
+            arena.truncate(t, len);
+        }
     }
 
     fn release(&mut self, row: usize) {
-        self.rows[row] = None;
+        if let Some(r) = self.rows[row].take() {
+            if let (Some(arena), Some(t)) = (self.arena.as_mut(), r.table) {
+                arena.release(t);
+            }
+        }
     }
 
     fn row_len(&self, row: usize) -> usize {
@@ -337,10 +388,24 @@ impl<E: DeccacheExec> DecoderSession for CachedPjrtSession<E> {
             );
         }
 
+        // Pin every batch row's page table for the whole extend: one
+        // row's page allocation must never evict a sibling whose pages
+        // this same pass is about to read or write.
+        if let Some(arena) = self.arena.as_mut() {
+            for &(row, _) in deltas {
+                let r = self.rows[row].as_ref().expect("released session row");
+                if let Some(t) = r.table {
+                    arena.set_pinned(t, true);
+                }
+            }
+        }
+
         // Roll token/log-prob mirrors back to the submit point. A deep
         // truncate may have rewound past the retained log-prob suffix;
         // heal by re-submitting the last committed token (exact: the
-        // recompute reads the same cached K/V prefix).
+        // recompute reads the same cached K/V prefix). An evicted paged
+        // row deepens the resume point to its surviving residency
+        // (possibly zero) — the recompute rehydrates its pages exactly.
         struct Prep<'t> {
             row: usize,
             /// Submit base: `cache_len` of this row's first segment.
@@ -356,21 +421,35 @@ impl<E: DeccacheExec> DecoderSession for CachedPjrtSession<E> {
         for &(row, toks) in deltas {
             let r = self.rows[row].as_mut().expect("released session row");
             let len_before = r.len;
+            let kv_valid = match (self.arena.as_ref(), r.table) {
+                (Some(a), Some(t)) => a.positions(t),
+                _ => len_before,
+            };
             // Unshare (one clone if forked) and roll back to the submit
-            // point via the shared session-contract helper, which also
-            // performs the deep-rewind heal. The K/V mirrors need no
-            // rollback: stale slots are masked by `cache_len` and
-            // overwritten in place.
+            // point via the shared session-contract helper. The dense
+            // K/V mirrors need no rollback: stale slots are masked by
+            // `cache_len` and overwritten in place.
             let cache = Arc::make_mut(&mut r.cache);
-            let (start, job_toks) = rollback_for_extend(
+            let (start, job_toks) = rollback_for_extend_kv(
                 &mut cache.tokens,
                 &mut cache.lp,
                 &mut cache.lp_start,
                 len_before,
+                kv_valid,
                 toks,
                 v,
             );
             cache.tokens.extend_from_slice(&job_toks);
+            if let (Some(arena), Some(t)) = (self.arena.as_mut(), r.table) {
+                if kv_valid < len_before {
+                    arena.note_rehydrated(len_before - start);
+                }
+                // Roll the page table back and make the whole job range
+                // writable up front (COW-unshare the tail page, allocate)
+                // — segmented passes then fill the pages progressively.
+                arena.truncate(t, start);
+                arena.prepare_append(t, start, job_toks.len());
+            }
             self.stats.tokens_computed += job_toks.len();
             self.stats.tokens_reused += start;
             prep.push(Prep {
@@ -452,12 +531,46 @@ impl<E: DeccacheExec> DecoderSession for CachedPjrtSession<E> {
                     for (li, &pi) in chunk.iter().enumerate() {
                         let p = &prep[pi];
                         let r = self.rows[p.row].as_ref().unwrap();
-                        let take = (p.start + p.done) * d;
-                        for l in 0..self.n_layers {
-                            let src = l * t_len * d;
-                            let dst = (l * eb + li) * t_len * d;
-                            k[dst..dst + take].copy_from_slice(&r.cache.k[src..src + take]);
-                            vv[dst..dst + take].copy_from_slice(&r.cache.v[src..src + take]);
+                        let take_pos = p.start + p.done;
+                        match (self.arena.as_ref(), r.table) {
+                            (Some(arena), Some(table)) => {
+                                // Gather the valid prefix from arena
+                                // pages: per layer, each page contributes
+                                // one contiguous `run·D`-float span.
+                                let pp = arena.page_positions();
+                                let pages = arena.table_pages(table);
+                                for l in 0..self.n_layers {
+                                    let dst = (l * eb + li) * t_len * d;
+                                    let lbase = l * pp * d;
+                                    let mut pos0 = 0usize;
+                                    for &pid in pages {
+                                        if pos0 >= take_pos {
+                                            break;
+                                        }
+                                        let run = (take_pos - pos0).min(pp);
+                                        k[dst + pos0 * d..dst + (pos0 + run) * d]
+                                            .copy_from_slice(
+                                                &arena.page_k(pid)[lbase..lbase + run * d],
+                                            );
+                                        vv[dst + pos0 * d..dst + (pos0 + run) * d]
+                                            .copy_from_slice(
+                                                &arena.page_v(pid)[lbase..lbase + run * d],
+                                            );
+                                        pos0 += run;
+                                    }
+                                }
+                            }
+                            _ => {
+                                let take = take_pos * d;
+                                for l in 0..self.n_layers {
+                                    let src = l * t_len * d;
+                                    let dst = (l * eb + li) * t_len * d;
+                                    k[dst..dst + take]
+                                        .copy_from_slice(&r.cache.k[src..src + take]);
+                                    vv[dst..dst + take]
+                                        .copy_from_slice(&r.cache.v[src..src + take]);
+                                }
+                            }
                         }
                     }
                     Some((k, vv))
@@ -495,13 +608,39 @@ impl<E: DeccacheExec> DecoderSession for CachedPjrtSession<E> {
                     let base = prep[pi].start + prep[pi].done;
                     let r = self.rows[prep[pi].row].as_mut().unwrap();
                     let cache = Arc::make_mut(&mut r.cache);
-                    for l in 0..self.n_layers {
-                        let src = ((l * eb + li) * t_len + base) * d;
-                        let dst = (l * t_len + base) * d;
-                        cache.k[dst..dst + seg * d]
-                            .copy_from_slice(&out.k_cache[src..src + seg * d]);
-                        cache.v[dst..dst + seg * d]
-                            .copy_from_slice(&out.v_cache[src..src + seg * d]);
+                    match (self.arena.as_mut(), r.table) {
+                        (Some(arena), Some(table)) => {
+                            // The pages covering base.. were unshared by
+                            // `prepare_append`; write per layer in
+                            // page-bounded contiguous runs.
+                            let pp = arena.page_positions();
+                            for l in 0..self.n_layers {
+                                let mut pos = base;
+                                while pos < base + seg {
+                                    let pid = arena.table_pages(table)[pos / pp];
+                                    let slot = pos % pp;
+                                    let run = (base + seg - pos).min(pp - slot);
+                                    let lb = (l * pp + slot) * d;
+                                    let src = ((l * eb + li) * t_len + pos) * d;
+                                    let (pk, pv) = arena.page_kv_mut(pid);
+                                    pk[lb..lb + run * d]
+                                        .copy_from_slice(&out.k_cache[src..src + run * d]);
+                                    pv[lb..lb + run * d]
+                                        .copy_from_slice(&out.v_cache[src..src + run * d]);
+                                    pos += run;
+                                }
+                            }
+                        }
+                        _ => {
+                            for l in 0..self.n_layers {
+                                let src = ((l * eb + li) * t_len + base) * d;
+                                let dst = (l * t_len + base) * d;
+                                cache.k[dst..dst + seg * d]
+                                    .copy_from_slice(&out.k_cache[src..src + seg * d]);
+                                cache.v[dst..dst + seg * d]
+                                    .copy_from_slice(&out.v_cache[src..src + seg * d]);
+                            }
+                        }
                     }
                     for j in 0..seg {
                         let src = (li * w + j) * v;
@@ -538,11 +677,23 @@ impl<E: DeccacheExec> DecoderSession for CachedPjrtSession<E> {
             let cache = Arc::make_mut(&mut r.cache);
             let retained = trim_lp_suffix(&mut cache.lp, &mut cache.lp_start, v, self.lp_retain);
             self.stats.lp_high_water = self.stats.lp_high_water.max(retained);
+            if let (Some(arena), Some(t)) = (self.arena.as_mut(), r.table) {
+                arena.set_pinned(t, false);
+            }
         }
         Ok(LogProbs::new_windowed(data, lens, t_len, v, window))
     }
 
     fn stats(&self) -> SessionStats {
-        self.stats
+        let mut stats = self.stats;
+        if let Some(arena) = self.arena.as_ref() {
+            let a = arena.stats();
+            stats.kv_pages_resident = a.pages_resident;
+            stats.kv_pages_high_water = a.pages_high_water;
+            stats.kv_page_bytes = a.page_bytes;
+            stats.arena_evictions = a.evictions;
+            stats.fork_pages_copied = a.fork_pages_copied;
+        }
+        stats
     }
 }

@@ -428,6 +428,22 @@ impl<'a> DeccacheHarness<'a> {
     pub fn begin_cached(&self, memory: Memory) -> CachedPjrtSession<RefDeccacheExec<'a>> {
         CachedPjrtSession::new(RefDeccacheExec::new(self.backend, self.grid.clone()), memory)
     }
+
+    /// The concrete cached session with an explicit arena mode (`None`
+    /// forces the dense mirror path), bypassing `RXNSPEC_ARENA` — tests
+    /// drive paged and dense sessions side by side without racing on
+    /// process-global env vars.
+    pub fn begin_cached_with(
+        &self,
+        memory: Memory,
+        arena: Option<crate::decoding::ArenaConfig>,
+    ) -> CachedPjrtSession<RefDeccacheExec<'a>> {
+        CachedPjrtSession::with_arena(
+            RefDeccacheExec::new(self.backend, self.grid.clone()),
+            memory,
+            arena,
+        )
+    }
 }
 
 impl Backend for DeccacheHarness<'_> {

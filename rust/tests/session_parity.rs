@@ -462,6 +462,302 @@ fn pjrt_real_artifact_session_parity() {
     assert!(cached.stats.tokens_reused > 0);
 }
 
+// ---------------------------------------------------------------------------
+// Paged KV arena parity (`decoding::arena::KvArena` behind both cached
+// sessions)
+//
+// The arena swaps the dense per-row K/V residency for page-pooled tables
+// with COW forks and LRU eviction, and the contract is the same hard
+// invariant as everything above: **bit-identical** log-probs to the dense
+// path, for every page size (including sizes that straddle the SIMD lane
+// width) and under eviction pressure. Sessions are built through the
+// explicit `begin_cached_with` constructors so paged and dense variants
+// run side by side without racing on process-global `RXNSPEC_ARENA`.
+// ---------------------------------------------------------------------------
+
+use rxnspec::decoding::{ArenaConfig, LogProbs};
+
+/// Compare every window position of an extend's log-probs bit-for-bit
+/// across sessions. `spans[ri]` is that delta row's (len_before,
+/// len_after).
+fn assert_extends_match(lps: &[LogProbs], spans: &[(usize, usize)], tag: &str) {
+    let base = &lps[0];
+    for (si, lp) in lps.iter().enumerate().skip(1) {
+        for (ri, &(lb, la)) in spans.iter().enumerate() {
+            for j in lb.saturating_sub(1)..la {
+                for v in 0..VOCAB as i64 {
+                    assert!(
+                        lp.logp(ri, j, v) == base.logp(ri, j, v),
+                        "{tag}: session {si} row {ri} j {j} v {v}: {} vs {}",
+                        lp.logp(ri, j, v),
+                        base.logp(ri, j, v)
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Randomized fork/truncate/extend/release schedules through six
+/// sessions at once — dense and paged reference, dense and paged PJRT
+/// machinery (reference executor), plus one-page-budget "starved"
+/// variants of both paged sessions whose cold rows are perpetually
+/// evicted and rehydrated — asserting bit-identical logits at every
+/// extend and against the stateless oracle at the end.
+#[test]
+fn prop_paged_sessions_bit_identical_under_random_schedules() {
+    let mut rng = Rng::new(0x9A6E);
+    for (seed, page) in [(0u64, 1usize), (1, 3), (2, 5), (3, 16)] {
+        let backend = random_rust_backend(seed + 500, VOCAB, S_LEN, T_LEN);
+        let harness = DeccacheHarness::new(&backend);
+        let src = random_wrapped_src(&mut rng, 5, 16, VOCAB);
+        let memory = backend.encode(&[&src]).unwrap();
+        let paged = ArenaConfig { page_positions: page, budget_bytes: None };
+        // A one-byte budget clamps to a single-page pool: every unpinned
+        // cold row is evicted by the next allocation, so extends
+        // constantly rehydrate — the heal path must stay bit-exact.
+        let starved = ArenaConfig { page_positions: page, budget_bytes: Some(1) };
+
+        let mut s0 = backend.begin_cached_with(backend.encode(&[&src]).unwrap(), None);
+        let mut s1 = backend.begin_cached_with(backend.encode(&[&src]).unwrap(), Some(paged));
+        let mut s2 = backend.begin_cached_with(backend.encode(&[&src]).unwrap(), Some(starved));
+        let mut s3 = harness.begin_cached_with(backend.encode(&[&src]).unwrap(), None);
+        let mut s4 = harness.begin_cached_with(backend.encode(&[&src]).unwrap(), Some(paged));
+        let mut s5 = harness.begin_cached_with(backend.encode(&[&src]).unwrap(), Some(starved));
+        // A 2-position retention makes deep truncates exercise the
+        // lp-heal alongside the arena's eviction heal.
+        s0.set_lp_retention(2);
+        s1.set_lp_retention(2);
+        s2.set_lp_retention(2);
+        s3.set_lp_retention(2);
+        s4.set_lp_retention(2);
+        s5.set_lp_retention(2);
+        let mut sessions: Vec<Box<dyn DecoderSession + '_>> = vec![
+            Box::new(s0),
+            Box::new(s1),
+            Box::new(s2),
+            Box::new(s3),
+            Box::new(s4),
+            Box::new(s5),
+        ];
+
+        // Mirror of the logical row state every session must agree on.
+        let mut lens: Vec<usize> = Vec::new();
+        let mut hist: Vec<Vec<i64>> = Vec::new();
+        let mut live: Vec<bool> = Vec::new();
+        for _ in 0..2 {
+            for s in sessions.iter_mut() {
+                assert_eq!(s.new_row(0), lens.len());
+            }
+            lens.push(0);
+            hist.push(Vec::new());
+            live.push(true);
+        }
+
+        for op in 0..40 {
+            let live_rows: Vec<usize> = (0..lens.len()).filter(|&i| live[i]).collect();
+            let pick = rng.below(100);
+            if pick < 55 {
+                // Extend a random non-empty subset of live rows.
+                let mut batch: Vec<usize> =
+                    live_rows.iter().copied().filter(|_| rng.chance(0.7)).collect();
+                if batch.is_empty() {
+                    batch.push(*rng.choose(&live_rows));
+                }
+                let deltas_own: Vec<(usize, Vec<i64>)> = batch
+                    .iter()
+                    .map(|&r| {
+                        let cap = (T_LEN - 1).saturating_sub(lens[r]);
+                        let k = if cap == 0 || (lens[r] > 0 && rng.chance(0.1)) {
+                            0 // zero-delta: served from retention
+                        } else {
+                            rng.range(1, 3.min(cap))
+                        };
+                        let toks =
+                            (0..k).map(|_| rng.range(2, VOCAB - 1) as i64).collect();
+                        (r, toks)
+                    })
+                    .collect();
+                let spans: Vec<(usize, usize)> = deltas_own
+                    .iter()
+                    .map(|(r, t)| (lens[*r], lens[*r] + t.len()))
+                    .collect();
+                let deltas: Vec<(usize, &[i64])> =
+                    deltas_own.iter().map(|(r, t)| (*r, &t[..])).collect();
+                let lps: Vec<LogProbs> =
+                    sessions.iter_mut().map(|s| s.extend(&deltas).unwrap()).collect();
+                assert_extends_match(&lps, &spans, &format!("seed {seed} page {page} op {op}"));
+                for (r, t) in &deltas_own {
+                    lens[*r] += t.len();
+                    hist[*r].extend_from_slice(t);
+                }
+            } else if pick < 70 {
+                // Fork: O(pages) in the arena, shared tail COW'd later.
+                let r = *rng.choose(&live_rows);
+                for s in sessions.iter_mut() {
+                    assert_eq!(s.fork(r), lens.len());
+                }
+                lens.push(lens[r]);
+                hist.push(hist[r].clone());
+                live.push(true);
+            } else if pick < 85 {
+                // Truncate (often deep enough to rewind past retention).
+                let r = *rng.choose(&live_rows);
+                if lens[r] > 0 {
+                    let to = rng.range(0, lens[r] - 1);
+                    for s in sessions.iter_mut() {
+                        s.truncate(r, to);
+                    }
+                    lens[r] = to;
+                    hist[r].truncate(to);
+                }
+            } else if live_rows.len() > 1 && rng.chance(0.6) {
+                let r = *rng.choose(&live_rows);
+                for s in sessions.iter_mut() {
+                    s.release(r);
+                }
+                live[r] = false;
+            } else {
+                for s in sessions.iter_mut() {
+                    assert_eq!(s.new_row(0), lens.len());
+                }
+                lens.push(0);
+                hist.push(Vec::new());
+                live.push(true);
+            }
+        }
+
+        // Closing sweep: append one token to every live row and hold the
+        // result against the stateless oracle, not just session-vs-session.
+        let batch: Vec<usize> =
+            (0..lens.len()).filter(|&i| live[i] && lens[i] + 1 < T_LEN).collect();
+        let deltas_own: Vec<(usize, Vec<i64>)> = batch.iter().map(|&r| (r, vec![3i64])).collect();
+        let spans: Vec<(usize, usize)> =
+            deltas_own.iter().map(|(r, t)| (lens[*r], lens[*r] + t.len())).collect();
+        let deltas: Vec<(usize, &[i64])> =
+            deltas_own.iter().map(|(r, t)| (*r, &t[..])).collect();
+        let lps: Vec<LogProbs> = sessions.iter_mut().map(|s| s.extend(&deltas).unwrap()).collect();
+        assert_extends_match(&lps, &spans, &format!("seed {seed} page {page} close"));
+        let rows_ref: Vec<DecoderRow> = batch
+            .iter()
+            .map(|&r| {
+                let mut tokens = hist[r].clone();
+                tokens.push(3);
+                DecoderRow { tokens, mem_row: 0 }
+            })
+            .collect();
+        if !rows_ref.is_empty() {
+            let lp_ref = backend.decode(&rows_ref, &memory).unwrap();
+            for (ri, &(lb, la)) in spans.iter().enumerate() {
+                for j in lb.saturating_sub(1)..la {
+                    for v in 0..VOCAB as i64 {
+                        assert!(
+                            lps[0].logp(ri, j, v) == lp_ref.logp(ri, j, v),
+                            "seed {seed} page {page}: oracle diverged row {ri} j {j} v {v}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Fork storms share pages, divergent writes copy only the tail page,
+/// and releasing every row drains the arena back to zero resident pages
+/// — both cached session implementations.
+#[test]
+fn paged_arena_releases_all_pages_at_session_end() {
+    let backend = random_rust_backend(0xA7E4, VOCAB, S_LEN, T_LEN);
+    let harness = DeccacheHarness::new(&backend);
+    let src: Vec<i64> = vec![BOS_ID, 5, 6, 7, rxnspec::vocab::EOS_ID];
+    let cfg = ArenaConfig { page_positions: 4, budget_bytes: None };
+
+    // Reference session.
+    let mut sess = backend.begin_cached_with(backend.encode(&[&src]).unwrap(), Some(cfg));
+    let a = sess.new_row(0);
+    sess.extend(&[(a, &[BOS_ID, 5, 6, 7, 8, 9])]).unwrap();
+    let forks: Vec<usize> = (0..8).map(|_| sess.fork(a)).collect();
+    let tok = [2i64];
+    let deltas: Vec<(usize, &[i64])> = forks.iter().map(|&f| (f, tok.as_slice())).collect();
+    sess.extend(&deltas).unwrap();
+    let st = sess.arena_stats().expect("paged session must expose arena stats");
+    assert!(st.pages_resident > 0);
+    // 6 committed positions on 4-position pages: each divergent fork
+    // COW-copies exactly the shared partial tail page.
+    assert_eq!(st.fork_pages_copied, 8, "one tail-page copy per divergent fork");
+    // Forks shared the full prefix page: resident pages must be far
+    // below 9 rows × 2 pages of dense-equivalent residency.
+    assert!(st.pages_resident < 9 * 2, "forks did not share pages: {st:?}");
+    for f in forks {
+        sess.release(f);
+    }
+    sess.release(a);
+    let st = sess.arena_stats().unwrap();
+    assert_eq!(st.pages_resident, 0, "leaked pages after releasing all rows: {st:?}");
+    assert_eq!(st.live_tables, 0, "leaked tables: {st:?}");
+    // The merged SessionStats surface agrees.
+    let stats = rxnspec::decoding::DecoderSession::stats(&sess);
+    assert_eq!(stats.kv_pages_resident, 0);
+    assert_eq!(stats.fork_pages_copied, 8);
+    assert!(stats.kv_pages_high_water > 0);
+
+    // PJRT session machinery.
+    let mut sess = harness.begin_cached_with(backend.encode(&[&src]).unwrap(), Some(cfg));
+    let a = sess.new_row(0);
+    sess.extend(&[(a, &[BOS_ID, 5, 6, 7, 8, 9])]).unwrap();
+    let b = sess.fork(a);
+    sess.extend(&[(a, &[2]), (b, &[3])]).unwrap();
+    assert!(sess.arena_stats().unwrap().fork_pages_copied >= 1);
+    sess.release(a);
+    sess.release(b);
+    let st = sess.arena_stats().unwrap();
+    assert_eq!(st.pages_resident, 0, "pjrt session leaked pages: {st:?}");
+    assert_eq!(st.live_tables, 0);
+}
+
+/// Deterministic eviction-rehydration round trip: a one-page budget
+/// forces each of two alternating rows to evict the other, and every
+/// rehydrated extend must still match a dense session bit-for-bit.
+#[test]
+fn paged_eviction_rehydrates_bit_exact() {
+    let backend = random_rust_backend(0xEF1C, VOCAB, S_LEN, T_LEN);
+    let src: Vec<i64> = vec![BOS_ID, 8, 9, rxnspec::vocab::EOS_ID];
+    let starved = ArenaConfig { page_positions: 4, budget_bytes: Some(1) };
+    let mut paged = backend.begin_cached_with(backend.encode(&[&src]).unwrap(), Some(starved));
+    let mut dense = backend.begin_cached_with(backend.encode(&[&src]).unwrap(), None);
+
+    let a_p = paged.new_row(0);
+    let b_p = paged.new_row(0);
+    let a_d = dense.new_row(0);
+    let b_d = dense.new_row(0);
+    assert_eq!((a_p, b_p), (a_d, b_d));
+
+    let mut len_a = 0usize;
+    let mut len_b = 0usize;
+    for step in 0..5 {
+        let toks: Vec<i64> = (0..3).map(|i| 2 + ((step * 3 + i) % 19) as i64).collect();
+        let lp_p = paged.extend(&[(a_p, &toks)]).unwrap();
+        let lp_d = dense.extend(&[(a_d, &toks)]).unwrap();
+        assert_extends_match(
+            &[lp_d, lp_p],
+            &[(len_a, len_a + toks.len())],
+            &format!("evict step {step} row a"),
+        );
+        len_a += toks.len();
+        let lp_p = paged.extend(&[(b_p, &toks)]).unwrap();
+        let lp_d = dense.extend(&[(b_d, &toks)]).unwrap();
+        assert_extends_match(
+            &[lp_d, lp_p],
+            &[(len_b, len_b + toks.len())],
+            &format!("evict step {step} row b"),
+        );
+        len_b += toks.len();
+    }
+    let st = paged.arena_stats().unwrap();
+    assert!(st.evictions > 0, "one-page budget never evicted: {st:?}");
+    assert!(st.rehydrated_pages > 0, "evicted rows never rehydrated: {st:?}");
+}
+
 /// Sessions across multiple memory rows (batch decode + append_memory)
 /// keep rows bound to the right query.
 #[test]
