@@ -19,6 +19,7 @@
 use std::time::Instant;
 
 use rxnspec::bench::{bench_json_path, json, json_flag, measure, report};
+use rxnspec::cache::ArenaCounters;
 use rxnspec::decoding::{
     greedy_batch, spec_greedy_batch, ArenaConfig, Backend, DecoderSession, SessionStats,
 };
@@ -412,15 +413,6 @@ fn main() -> anyhow::Result<()> {
             "fork_paged_bytes_per_fork".into(),
             json::Val::num(paged_bytes_per_fork),
         ));
-        entries.push((
-            "fork_pages_copied".into(),
-            json::Val::num(pst.fork_pages_copied as f64),
-        ));
-        entries.push((
-            "kv_pages_resident".into(),
-            json::Val::num(pst.kv_pages_resident as f64),
-        ));
-        entries.push(("peak_kv_bytes".into(), json::Val::num(peak_kv_bytes)));
 
         // Eviction + rehydration under a one-page budget: two rows
         // alternating extends perpetually evict each other; every evicted
@@ -448,14 +440,72 @@ fn main() -> anyhow::Result<()> {
             hst.rehydrated_pages,
             heal_wall * 1e6,
         );
-        entries.push((
-            "arena_evictions".into(),
-            json::Val::num(hst.evictions as f64),
-        ));
-        entries.push((
-            "heal_rehydrated_pages".into(),
-            json::Val::num(hst.rehydrated_pages as f64),
-        ));
+        // One snapshot struct renders every arena counter key — the same
+        // `ArenaCounters` the STATS line and serving metrics use. Fork
+        // residency comes from the storm session, eviction/heal counts
+        // from the starved one.
+        let mut ac = ArenaCounters::from_session(&pst);
+        ac.arena_evictions = hst.evictions as u64;
+        ac.rehydrated_pages = hst.rehydrated_pages as u64;
+        for (k, v) in ac.bench_entries() {
+            entries.push((k.into(), json::Val::num(v)));
+        }
+    }
+
+    // --- trace layer: enabled-run overhead + smoke export --------------
+    // Measures the same KV-cached greedy traffic with the span collector
+    // off and on (the off-path cost is one relaxed atomic load per span
+    // site) and, under --json, writes the captured spans next to
+    // BENCH_kernels.json as Perfetto-loadable trace_smoke.json.
+    {
+        let trace_iters = if smoke { 2 } else { 6 };
+        rxnspec::trace::set_enabled(false);
+        let m_off = measure("greedy (trace off)", 0, samples, || {
+            for _ in 0..trace_iters {
+                for s in &refs {
+                    let _ = greedy_batch(&backend, &[s]).unwrap();
+                }
+            }
+            vec![("iters".into(), trace_iters as f64)]
+        });
+        rxnspec::trace::set_enabled(true);
+        rxnspec::trace::clear();
+        let m_on = measure("greedy (trace on)", 0, samples, || {
+            for _ in 0..trace_iters {
+                for s in &refs {
+                    let _ = greedy_batch(&backend, &[s]).unwrap();
+                }
+            }
+            vec![("iters".into(), trace_iters as f64)]
+        });
+        let overhead_pct = (m_on.mean_s() / m_off.mean_s() - 1.0) * 100.0;
+        let spans = rxnspec::trace::snapshot_events().len();
+        eprintln!(
+            "  trace: on/off overhead {overhead_pct:+.2}% \
+             ({spans} spans captured, {} dropped)",
+            rxnspec::trace::dropped_events()
+        );
+        entries.push(("trace_overhead_pct".into(), json::Val::num(overhead_pct)));
+        entries.push(("trace_spans_captured".into(), json::Val::num(spans as f64)));
+        if emit_json {
+            let trace_path = bench_json_path().with_file_name("trace_smoke.json");
+            let out = rxnspec::trace::export_chrome_json();
+            // The smoke artifact must itself be valid trace JSON: parse
+            // it back and check the event array before writing.
+            let parsed = json::parse(&out).expect("trace smoke export must parse as JSON");
+            match parsed.get("traceEvents") {
+                Some(json::Val::Arr(evs)) => {
+                    assert!(!evs.is_empty(), "traced greedy run exported no events")
+                }
+                other => panic!("traceEvents missing from smoke export: {other:?}"),
+            }
+            std::fs::write(&trace_path, &out)?;
+            println!("(wrote trace smoke to {})", trace_path.display());
+        }
+        rxnspec::trace::set_enabled(false);
+        rxnspec::trace::clear();
+        rows.push(m_off);
+        rows.push(m_on);
     }
 
     report(

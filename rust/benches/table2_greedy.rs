@@ -20,6 +20,17 @@ use rxnspec::decoding::{greedy_batch, spec_greedy_batch, spec_greedy_batch_corpu
 use rxnspec::draft::DraftConfig;
 use rxnspec::testutil::ForceStateless;
 
+/// Sum the trace-populated phase times (encode, extend, verify; µs)
+/// over one batch's outputs.
+fn phase_add(mut acc: [u64; 3], outs: &[rxnspec::decoding::DecodeOutput]) -> [u64; 3] {
+    for o in outs {
+        acc[0] += o.stats.encode_us;
+        acc[1] += o.stats.extend_us;
+        acc[2] += o.stats.verify_us;
+    }
+    acc
+}
+
 fn main() -> anyhow::Result<()> {
     let (vocab, backend, split) = eval_setup("fwd")?;
     backend.precompile()?;
@@ -30,6 +41,11 @@ fn main() -> anyhow::Result<()> {
         .collect::<Result<_, _>>()?;
     let refs: Vec<&[i64]> = srcs.iter().map(|s| s.as_slice()).collect();
     eprintln!("table2: {} queries, backend dims {:?}", n, backend.dims());
+    // Span collection on for the whole bench: the enc/ext/ver phase
+    // columns below come from the trace layer's per-thread accumulators.
+    // Tracing never changes outputs — the losslessness asserts at the
+    // bottom run under it.
+    rxnspec::trace::set_enabled(true);
     let dm = DeviceModel::calibrate(&backend, &vocab, &split[0].src)?;
     eprintln!("device model (single-row call latency): {}", dm.describe());
 
@@ -41,11 +57,13 @@ fn main() -> anyhow::Result<()> {
         let mut calls = 0usize;
         let mut toks = 0usize;
         let mut computed = 0usize;
+        let mut ph = [0u64; 3];
         for s in &refs {
             let out = greedy_batch(&backend, &[s]).unwrap();
             calls += out[0].stats.decoder_calls;
             toks += out[0].hyps[0].tokens.len();
             computed += out[0].stats.tokens_computed;
+            ph = phase_add(ph, &out);
         }
         let proj = dm.project(&backend.take_call_log());
         vec![
@@ -54,6 +72,9 @@ fn main() -> anyhow::Result<()> {
             ("acc_rate".into(), 0.0),
             ("recomp_tok".into(), computed as f64 / toks.max(1) as f64),
             ("proj_s".into(), proj),
+            ("enc_ms".into(), ph[0] as f64 / 1e3),
+            ("ext_ms".into(), ph[1] as f64 / 1e3),
+            ("ver_ms".into(), ph[2] as f64 / 1e3),
         ]
     }));
 
@@ -67,11 +88,13 @@ fn main() -> anyhow::Result<()> {
         let mut calls = 0usize;
         let mut toks = 0usize;
         let mut computed = 0usize;
+        let mut ph = [0u64; 3];
         for s in &refs {
             let out = greedy_batch(&nocache, &[s]).unwrap();
             calls += out[0].stats.decoder_calls;
             toks += out[0].hyps[0].tokens.len();
             computed += out[0].stats.tokens_computed;
+            ph = phase_add(ph, &out);
         }
         let proj = dm.project(&backend.take_call_log());
         vec![
@@ -80,6 +103,9 @@ fn main() -> anyhow::Result<()> {
             ("acc_rate".into(), 0.0),
             ("recomp_tok".into(), computed as f64 / toks.max(1) as f64),
             ("proj_s".into(), proj),
+            ("enc_ms".into(), ph[0] as f64 / 1e3),
+            ("ext_ms".into(), ph[1] as f64 / 1e3),
+            ("ver_ms".into(), ph[2] as f64 / 1e3),
         ]
     }));
 
@@ -91,6 +117,7 @@ fn main() -> anyhow::Result<()> {
             let mut calls = 0usize;
             let mut toks = 0usize;
             let mut computed = 0usize;
+            let mut ph = [0u64; 3];
             let mut acc = rxnspec::draft::Acceptance::default();
             for s in &refs {
                 let out = spec_greedy_batch(&backend, &[s], &cfg).unwrap();
@@ -98,6 +125,7 @@ fn main() -> anyhow::Result<()> {
                 toks += out[0].hyps[0].tokens.len();
                 computed += out[0].stats.tokens_computed;
                 acc.merge(&out[0].stats.acceptance);
+                ph = phase_add(ph, &out);
             }
             let proj = dm.project(&backend.take_call_log());
             vec![
@@ -106,6 +134,9 @@ fn main() -> anyhow::Result<()> {
                 ("acc_rate".into(), acc.rate()),
                 ("recomp_tok".into(), computed as f64 / toks.max(1) as f64),
                 ("proj_s".into(), proj),
+                ("enc_ms".into(), ph[0] as f64 / 1e3),
+                ("ext_ms".into(), ph[1] as f64 / 1e3),
+                ("ver_ms".into(), ph[2] as f64 / 1e3),
             ]
         }));
     }
@@ -116,11 +147,13 @@ fn main() -> anyhow::Result<()> {
         let mut calls = 0usize;
         let mut toks = 0usize;
         let mut computed = 0usize;
+        let mut ph = [0u64; 3];
         for chunk in refs.chunks(32) {
             let out = greedy_batch(&backend, chunk).unwrap();
             calls += out[0].stats.decoder_calls;
             toks += out.iter().map(|o| o.hyps[0].tokens.len()).sum::<usize>();
             computed += out[0].stats.tokens_computed;
+            ph = phase_add(ph, &out);
         }
         let proj = dm.project(&backend.take_call_log());
         vec![
@@ -129,6 +162,9 @@ fn main() -> anyhow::Result<()> {
             ("acc_rate".into(), 0.0),
             ("recomp_tok".into(), computed as f64 / toks.max(1) as f64),
             ("proj_s".into(), proj),
+            ("enc_ms".into(), ph[0] as f64 / 1e3),
+            ("ext_ms".into(), ph[1] as f64 / 1e3),
+            ("ver_ms".into(), ph[2] as f64 / 1e3),
         ]
     }));
 
@@ -154,6 +190,7 @@ fn main() -> anyhow::Result<()> {
         let mut computed = 0usize;
         let mut acc = rxnspec::draft::Acceptance::default();
         corpus_accepted = 0;
+        let mut ph = [0u64; 3];
         for s in &refs {
             let out = spec_greedy_batch_corpus(&backend, &[s], &cfg10, &corpus).unwrap();
             calls += out[0].stats.decoder_calls;
@@ -161,6 +198,7 @@ fn main() -> anyhow::Result<()> {
             computed += out[0].stats.tokens_computed;
             corpus_accepted += out[0].stats.accepted_corpus_tokens;
             acc.merge(&out[0].stats.acceptance);
+            ph = phase_add(ph, &out);
         }
         let proj = dm.project(&backend.take_call_log());
         vec![
@@ -169,6 +207,9 @@ fn main() -> anyhow::Result<()> {
             ("acc_rate".into(), acc.rate()),
             ("recomp_tok".into(), computed as f64 / toks.max(1) as f64),
             ("proj_s".into(), proj),
+            ("enc_ms".into(), ph[0] as f64 / 1e3),
+            ("ext_ms".into(), ph[1] as f64 / 1e3),
+            ("ver_ms".into(), ph[2] as f64 / 1e3),
         ]
     }));
 
@@ -187,6 +228,9 @@ fn main() -> anyhow::Result<()> {
             ("acc_rate".into(), 0.0),
             ("recomp_tok".into(), 0.0),
             ("proj_s".into(), 0.0),
+            ("enc_ms".into(), 0.0),
+            ("ext_ms".into(), 0.0),
+            ("ver_ms".into(), 0.0),
         ]
     }));
 

@@ -13,11 +13,23 @@
 //! top-N outputs matching BS. RXNSPEC_LIMIT sets the subset (default 12).
 
 use rxnspec::bench::{eval_setup, limit, measure, report, speedup, DeviceModel, Measurement};
-use rxnspec::decoding::{beam_search, sbs, SbsConfig};
+use rxnspec::decoding::{beam_search, sbs, DecodeStats, SbsConfig};
+
+/// Fold one run's trace-populated phase times (µs) into `[enc, ext, ver]`.
+fn phase_add(acc: [u64; 3], s: &DecodeStats) -> [u64; 3] {
+    [
+        acc[0] + s.encode_us,
+        acc[1] + s.extend_us,
+        acc[2] + s.verify_us,
+    ]
+}
 
 fn main() -> anyhow::Result<()> {
     let (vocab, backend, split) = eval_setup("retro")?;
     backend.precompile()?;
+    // Phase columns (enc/ext/ver) come from the trace layer; collection
+    // stays on for the whole bench and never changes decoded outputs.
+    rxnspec::trace::set_enabled(true);
     let n_q = limit(12).min(split.len());
     let srcs: Vec<Vec<i64>> = split[..n_q]
         .iter()
@@ -40,11 +52,13 @@ fn main() -> anyhow::Result<()> {
             bs_hyps.clear();
             let mut calls = 0usize;
             let (mut computed, mut reused) = (0usize, 0usize);
+            let mut ph = [0u64; 3];
             for s in &srcs {
                 let out = beam_search(&backend, s, n).unwrap();
                 calls += out.stats.decoder_calls;
                 computed += out.stats.tokens_computed;
                 reused += out.stats.tokens_reused;
+                ph = phase_add(ph, &out.stats);
                 bs_hyps.push(out.hyps.iter().map(|h| h.tokens.clone()).collect());
             }
             let proj = dm.project(&backend.take_call_log());
@@ -52,6 +66,9 @@ fn main() -> anyhow::Result<()> {
                 ("calls".into(), calls as f64),
                 ("reuse".into(), reused as f64 / (computed + reused).max(1) as f64),
                 ("proj_s".into(), proj),
+                ("enc_ms".into(), ph[0] as f64 / 1e3),
+                ("ext_ms".into(), ph[1] as f64 / 1e3),
+                ("ver_ms".into(), ph[2] as f64 / 1e3),
             ]
         });
 
@@ -62,11 +79,13 @@ fn main() -> anyhow::Result<()> {
             sbs_hyps.clear();
             let mut calls = 0usize;
             let (mut computed, mut reused) = (0usize, 0usize);
+            let mut ph = [0u64; 3];
             for s in &srcs {
                 let out = sbs(&backend, s, &SbsConfig::new(n, 10)).unwrap();
                 calls += out.stats.decoder_calls;
                 computed += out.stats.tokens_computed;
                 reused += out.stats.tokens_reused;
+                ph = phase_add(ph, &out.stats);
                 sbs_hyps.push(out.hyps.iter().map(|h| h.tokens.clone()).collect());
             }
             let proj = dm.project(&backend.take_call_log());
@@ -74,23 +93,31 @@ fn main() -> anyhow::Result<()> {
                 ("calls".into(), calls as f64),
                 ("reuse".into(), reused as f64 / (computed + reused).max(1) as f64),
                 ("proj_s".into(), proj),
+                ("enc_ms".into(), ph[0] as f64 / 1e3),
+                ("ext_ms".into(), ph[1] as f64 / 1e3),
+                ("ver_ms".into(), ph[2] as f64 / 1e3),
             ]
         });
         let m_sbs0 = measure(&format!("SBS n={n} DL=0"), 0, 1, || {
             let _ = backend.take_call_log();
             let mut calls = 0usize;
             let (mut computed, mut reused) = (0usize, 0usize);
+            let mut ph = [0u64; 3];
             for s in &srcs {
                 let out = sbs(&backend, s, &SbsConfig::new(n, 0)).unwrap();
                 calls += out.stats.decoder_calls;
                 computed += out.stats.tokens_computed;
                 reused += out.stats.tokens_reused;
+                ph = phase_add(ph, &out.stats);
             }
             let proj = dm.project(&backend.take_call_log());
             vec![
                 ("calls".into(), calls as f64),
                 ("reuse".into(), reused as f64 / (computed + reused).max(1) as f64),
                 ("proj_s".into(), proj),
+                ("enc_ms".into(), ph[0] as f64 / 1e3),
+                ("ext_ms".into(), ph[1] as f64 / 1e3),
+                ("ver_ms".into(), ph[2] as f64 / 1e3),
             ]
         });
 

@@ -40,7 +40,7 @@ mod stats;
 
 pub use draft_store::DraftStore;
 pub use result_cache::ResultCache;
-pub use stats::{DraftStoreStats, ResultCacheStats};
+pub use stats::{ArenaCounters, DraftStoreStats, ResultCacheStats};
 
 /// Knobs for the serving-side cache pair.
 #[derive(Debug, Clone, PartialEq, Eq)]

@@ -1,6 +1,8 @@
 //! Point-in-time snapshots of cache state — the serving `STATS` surface
 //! and the bench columns read these instead of poking at atomics.
 
+use crate::decoding::{ArenaStats, SessionStats};
+
 /// Snapshot of a [`ResultCache`](super::ResultCache)'s counters.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct ResultCacheStats {
@@ -39,6 +41,89 @@ pub struct DraftStoreStats {
     pub evicted: u64,
 }
 
+/// One snapshot of the paged-KV-arena counters, shared by every surface
+/// that renders them: the `STATS` arena line, the kernel-bench JSON
+/// entries, and the serving metrics absorption. Before this struct,
+/// `worker.rs` and the benches each re-listed the fields by hand.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ArenaCounters {
+    /// Pages resident at snapshot time (gauge).
+    pub kv_pages_resident: u64,
+    /// High-water mark of resident pages.
+    pub kv_pages_high_water: u64,
+    /// Bytes of one page (K + V blobs).
+    pub kv_page_bytes: u64,
+    /// Pages evicted under `RXNSPEC_KV_BUDGET`.
+    pub arena_evictions: u64,
+    /// Pages deep-copied by copy-on-write divergence after forks.
+    pub fork_pages_copied: u64,
+    /// Pages rebuilt by the exact-recompute heal path.
+    pub rehydrated_pages: u64,
+}
+
+impl ArenaCounters {
+    /// Fold from a finished session's accounting (sessions do not track
+    /// heal rehydration; that arrives via [`ArenaCounters::from_arena`]).
+    pub fn from_session(s: &SessionStats) -> ArenaCounters {
+        ArenaCounters {
+            kv_pages_resident: s.kv_pages_resident as u64,
+            kv_pages_high_water: s.kv_pages_high_water as u64,
+            kv_page_bytes: s.kv_page_bytes as u64,
+            arena_evictions: s.arena_evictions as u64,
+            fork_pages_copied: s.fork_pages_copied as u64,
+            rehydrated_pages: 0,
+        }
+    }
+
+    /// Fold directly from a live arena's stats.
+    pub fn from_arena(a: &ArenaStats) -> ArenaCounters {
+        ArenaCounters {
+            kv_pages_resident: a.pages_resident as u64,
+            kv_pages_high_water: a.pages_high_water as u64,
+            kv_page_bytes: a.page_bytes as u64,
+            arena_evictions: a.evictions as u64,
+            fork_pages_copied: a.fork_pages_copied as u64,
+            rehydrated_pages: a.rehydrated_pages as u64,
+        }
+    }
+
+    /// Bytes currently resident.
+    pub fn kv_bytes_resident(&self) -> u64 {
+        self.kv_pages_resident * self.kv_page_bytes
+    }
+
+    /// High-water residency in bytes.
+    pub fn peak_kv_bytes(&self) -> u64 {
+        self.kv_pages_high_water * self.kv_page_bytes
+    }
+
+    /// The `STATS` arena line (no trailing newline).
+    pub fn render_line(&self) -> String {
+        format!(
+            "arena: kv_pages_resident={} kv_pages_high_water={} kv_page_bytes={} \
+             kv_bytes_resident={} arena_evictions={} fork_pages_copied={}",
+            self.kv_pages_resident,
+            self.kv_pages_high_water,
+            self.kv_page_bytes,
+            self.kv_bytes_resident(),
+            self.arena_evictions,
+            self.fork_pages_copied,
+        )
+    }
+
+    /// The kernel-bench JSON metrics (key names are the
+    /// `BENCH_kernels.json` schema contract).
+    pub fn bench_entries(&self) -> Vec<(&'static str, f64)> {
+        vec![
+            ("fork_pages_copied", self.fork_pages_copied as f64),
+            ("kv_pages_resident", self.kv_pages_resident as f64),
+            ("peak_kv_bytes", self.peak_kv_bytes() as f64),
+            ("arena_evictions", self.arena_evictions as f64),
+            ("heal_rehydrated_pages", self.rehydrated_pages as f64),
+        ]
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -50,5 +135,44 @@ mod tests {
         s.hits = 3;
         s.misses = 1;
         assert!((s.hit_rate() - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn arena_counters_render_one_format_everywhere() {
+        let c = ArenaCounters {
+            kv_pages_resident: 12,
+            kv_pages_high_water: 20,
+            kv_page_bytes: 4096,
+            arena_evictions: 3,
+            fork_pages_copied: 7,
+            rehydrated_pages: 2,
+        };
+        let line = c.render_line();
+        assert!(line.contains("kv_pages_resident=12"));
+        assert!(line.contains("kv_bytes_resident=49152"));
+        assert!(line.contains("arena_evictions=3"));
+        assert_eq!(c.peak_kv_bytes(), 20 * 4096);
+        let entries = c.bench_entries();
+        assert_eq!(entries.iter().find(|(k, _)| *k == "peak_kv_bytes").unwrap().1, 81920.0);
+        assert_eq!(
+            entries.iter().find(|(k, _)| *k == "heal_rehydrated_pages").unwrap().1,
+            2.0
+        );
+    }
+
+    #[test]
+    fn arena_counters_fold_from_session_and_arena() {
+        let s = SessionStats {
+            kv_pages_resident: 5,
+            kv_pages_high_water: 9,
+            kv_page_bytes: 128,
+            arena_evictions: 1,
+            fork_pages_copied: 4,
+            ..SessionStats::default()
+        };
+        let c = ArenaCounters::from_session(&s);
+        assert_eq!(c.kv_pages_resident, 5);
+        assert_eq!(c.kv_bytes_resident(), 5 * 128);
+        assert_eq!(c.rehydrated_pages, 0);
     }
 }

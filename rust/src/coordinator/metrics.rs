@@ -5,6 +5,9 @@
 
 use std::sync::atomic::{AtomicU64, Ordering};
 
+use crate::cache::ArenaCounters;
+use crate::decoding::SessionStats;
+
 /// Log-bucketed latency histogram (microseconds).
 ///
 /// Buckets are powers of √2 from 1µs up to ~17s: index = ⌊2·log2(µs)⌋,
@@ -39,14 +42,21 @@ impl Histogram {
             return 0;
         }
         let log2 = 63 - us.leading_zeros() as u64;
-        // half-step: +1 if the mantissa's top bit is set (≥ ×1.5 ≈ ×√2)
-        let half = ((us >> log2.saturating_sub(1)) & 1) as u64;
+        // Exact half-step test: bucket 2·log2+1 starts at √2·2^log2, so
+        // membership is us ≥ √2·2^log2 ⇔ us² ≥ 2^(2·log2+1). The old
+        // mantissa-bit shortcut tested us ≥ 1.5·2^log2 and misbucketed
+        // everything in [√2·2^k, 1.5·2^k). u128 squares can't overflow
+        // (us < 2^64 ⇒ us² < 2^128) and 2·log2+1 ≤ 127.
+        let half = u64::from((us as u128) * (us as u128) >= 1u128 << (2 * log2 + 1));
         ((2 * log2 + half) as usize).min(N_BUCKETS - 1)
     }
 
-    /// Upper edge (µs) of bucket `i` (for reporting).
+    /// Upper edge (µs) of bucket `i`: values `v` land in bucket `i` iff
+    /// `2^(i/2) ≤ v < 2^((i+1)/2)` — so the upper edge is `2^((i+1)/2)`,
+    /// the exclusive bound (the old `2^(i/2)` was the *lower* edge, so
+    /// reported quantiles under-stated their bucket).
     fn bucket_edge(i: usize) -> f64 {
-        2f64.powf(i as f64 / 2.0)
+        2f64.powf((i as f64 + 1.0) / 2.0)
     }
 
     pub fn record(&self, d: std::time::Duration) {
@@ -74,21 +84,27 @@ impl Histogram {
         self.max_us.load(Ordering::Relaxed) as f64 / 1000.0
     }
 
-    /// Approximate quantile (upper bucket edge), q in [0,1].
-    pub fn quantile_ms(&self, q: f64) -> f64 {
+    /// Approximate quantile in microseconds (upper edge of the bucket
+    /// holding the q-th sample), q in [0,1]. 0 for an empty histogram.
+    pub fn quantile(&self, q: f64) -> u64 {
         let total = self.count();
         if total == 0 {
-            return 0.0;
+            return 0;
         }
-        let target = (q * total as f64).ceil() as u64;
+        let target = (q * total as f64).ceil().max(1.0) as u64;
         let mut seen = 0u64;
         for (i, b) in self.buckets.iter().enumerate() {
             seen += b.load(Ordering::Relaxed);
             if seen >= target {
-                return Self::bucket_edge(i) / 1000.0;
+                return Self::bucket_edge(i).round() as u64;
             }
         }
-        self.max_ms()
+        self.max_us.load(Ordering::Relaxed)
+    }
+
+    /// Approximate quantile (upper bucket edge) in milliseconds.
+    pub fn quantile_ms(&self, q: f64) -> f64 {
+        self.quantile(q) as f64 / 1000.0
     }
 
     pub fn summary(&self, name: &str) -> String {
@@ -150,6 +166,39 @@ pub struct Metrics {
 }
 
 impl Metrics {
+    /// Fold a finished session's cache accounting into the registry —
+    /// the one place the `SessionStats` → serving-counter mapping lives
+    /// (the worker used to spell out every field at its call site).
+    pub fn absorb_session(&self, s: &SessionStats) {
+        self.extend_calls.fetch_add(s.extend_calls as u64, Ordering::Relaxed);
+        self.packed_rows.fetch_add(s.packed_rows as u64, Ordering::Relaxed);
+        self.lp_high_water.fetch_max(s.lp_high_water as u64, Ordering::Relaxed);
+        self.encode_calls.fetch_add(s.encode_calls as u64, Ordering::Relaxed);
+        self.packed_src_rows.fetch_add(s.packed_src_rows as u64, Ordering::Relaxed);
+        // Residency is a gauge (latest session snapshot wins); the page
+        // size is a static property of the arena configuration.
+        self.kv_pages_resident.store(s.kv_pages_resident as u64, Ordering::Relaxed);
+        self.kv_pages_high_water.fetch_max(s.kv_pages_high_water as u64, Ordering::Relaxed);
+        if s.kv_page_bytes > 0 {
+            self.kv_page_bytes.store(s.kv_page_bytes as u64, Ordering::Relaxed);
+        }
+        self.arena_evictions.fetch_add(s.arena_evictions as u64, Ordering::Relaxed);
+        self.fork_pages_copied.fetch_add(s.fork_pages_copied as u64, Ordering::Relaxed);
+    }
+
+    /// The arena counters as the shared snapshot struct (rendered by
+    /// both `STATS` and the bench JSON writer).
+    pub fn arena_counters(&self) -> ArenaCounters {
+        ArenaCounters {
+            kv_pages_resident: self.kv_pages_resident.load(Ordering::Relaxed),
+            kv_pages_high_water: self.kv_pages_high_water.load(Ordering::Relaxed),
+            kv_page_bytes: self.kv_page_bytes.load(Ordering::Relaxed),
+            arena_evictions: self.arena_evictions.load(Ordering::Relaxed),
+            fork_pages_copied: self.fork_pages_copied.load(Ordering::Relaxed),
+            rehydrated_pages: 0,
+        }
+    }
+
     pub fn snapshot(&self) -> String {
         let req = self.requests_total.load(Ordering::Relaxed);
         let fail = self.requests_failed.load(Ordering::Relaxed);
@@ -191,16 +240,8 @@ impl Metrics {
             if enc == 0 { 0.0 } else { psr as f64 / enc as f64 },
             self.lp_high_water.load(Ordering::Relaxed),
         ));
-        let pages = self.kv_pages_resident.load(Ordering::Relaxed);
-        let page_b = self.kv_page_bytes.load(Ordering::Relaxed);
-        s.push_str(&format!(
-            "arena: kv_pages_resident={pages} kv_pages_high_water={} kv_page_bytes={page_b} \
-             kv_bytes_resident={} arena_evictions={} fork_pages_copied={}\n",
-            self.kv_pages_high_water.load(Ordering::Relaxed),
-            pages * page_b,
-            self.arena_evictions.load(Ordering::Relaxed),
-            self.fork_pages_copied.load(Ordering::Relaxed),
-        ));
+        s.push_str(&self.arena_counters().render_line());
+        s.push('\n');
         s.push_str(&self.request_latency.summary("request_latency"));
         s.push('\n');
         s.push_str(&self.queue_wait.summary("queue_wait"));
@@ -227,6 +268,132 @@ mod tests {
         let p50 = h.quantile_ms(0.5);
         assert!(p50 >= 2.0 && p50 <= 8.0, "p50 {p50}");
         assert!(h.quantile_ms(1.0) >= 64.0);
+    }
+
+    #[test]
+    fn bucket_of_exact_powers_of_two() {
+        assert_eq!(Histogram::bucket_of(0), 0);
+        assert_eq!(Histogram::bucket_of(1), 0);
+        for k in 1..=24u32 {
+            assert_eq!(
+                Histogram::bucket_of(1u64 << k),
+                (2 * k) as usize,
+                "2^{k} must open bucket {}",
+                2 * k
+            );
+            // One below the power stays in the previous half-step.
+            assert!(Histogram::bucket_of((1u64 << k) - 1) < (2 * k) as usize);
+        }
+    }
+
+    #[test]
+    fn bucket_of_sqrt2_boundaries_are_exact() {
+        // The old mantissa-bit shortcut put the half-step at 1.5·2^k;
+        // the true boundary is √2·2^k ≈ 1.41421·2^k. Values in between
+        // were misbucketed — pin the exact integer boundary per octave,
+        // found by binary search on the defining inequality.
+        fn exact_boundary(k: u32) -> u64 {
+            let target = 1u128 << (2 * k + 1);
+            let (mut lo, mut hi) = (1u64 << k, 1u64 << (k + 1));
+            while lo + 1 < hi {
+                let mid = lo + (hi - lo) / 2;
+                if (mid as u128) * (mid as u128) >= target {
+                    hi = mid;
+                } else {
+                    lo = mid;
+                }
+            }
+            hi
+        }
+        for k in 1..=20u32 {
+            let boundary = exact_boundary(k);
+            assert_eq!(
+                Histogram::bucket_of(boundary - 1),
+                (2 * k) as usize,
+                "just below √2·2^{k}"
+            );
+            assert_eq!(
+                Histogram::bucket_of(boundary),
+                (2 * k + 1) as usize,
+                "at √2·2^{k}"
+            );
+        }
+        // The concrete regression: 1449 ≥ √2·1024 but < 1.5·1024 — the
+        // old code filed it one half-step low.
+        assert_eq!(Histogram::bucket_of(1448), 20);
+        assert_eq!(Histogram::bucket_of(1449), 21);
+    }
+
+    #[test]
+    fn bucket_of_is_monotone_and_edges_bracket() {
+        let mut prev = 0usize;
+        for us in 1..=100_000u64 {
+            let b = Histogram::bucket_of(us);
+            assert!(b >= prev, "bucket_of must be monotone at us={us}");
+            prev = b;
+            if b + 1 < N_BUCKETS {
+                // Value sits strictly below its bucket's upper edge and
+                // at/above the previous bucket's upper edge.
+                assert!((us as f64) < Histogram::bucket_edge(b) * (1.0 + 1e-9), "us={us} b={b}");
+                if b > 0 {
+                    assert!(
+                        (us as f64) >= Histogram::bucket_edge(b - 1) * (1.0 - 1e-9),
+                        "us={us} b={b}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn bucket_edges_strictly_increase() {
+        for i in 1..N_BUCKETS {
+            assert!(Histogram::bucket_edge(i) > Histogram::bucket_edge(i - 1));
+        }
+    }
+
+    #[test]
+    fn quantile_reports_upper_bucket_edge_in_us() {
+        let h = Histogram::new();
+        for ms in [1u64, 2, 4, 8, 100] {
+            h.record(Duration::from_millis(ms));
+        }
+        // The 3rd of 5 samples is 4ms = 4000µs → bucket 23
+        // ([2^11.5, 2^12)), whose upper edge is 2^12 = 4096µs.
+        assert_eq!(h.quantile(0.5), 4096);
+        assert!(h.quantile(0.99) >= 100_000);
+        assert_eq!(Histogram::new().quantile(0.99), 0);
+        let (p50, p95) = (h.quantile(0.50), h.quantile(0.95));
+        assert!(p50 <= p95);
+    }
+
+    #[test]
+    fn absorb_session_folds_every_counter() {
+        use crate::decoding::SessionStats;
+        let m = Metrics::default();
+        let s = SessionStats {
+            extend_calls: 3,
+            packed_rows: 12,
+            lp_high_water: 9,
+            encode_calls: 2,
+            packed_src_rows: 5,
+            kv_pages_resident: 4,
+            kv_pages_high_water: 6,
+            kv_page_bytes: 512,
+            arena_evictions: 1,
+            fork_pages_copied: 2,
+            ..SessionStats::default()
+        };
+        m.absorb_session(&s);
+        m.absorb_session(&s);
+        assert_eq!(m.extend_calls.load(Ordering::Relaxed), 6);
+        assert_eq!(m.lp_high_water.load(Ordering::Relaxed), 9);
+        // Gauge semantics: residency is the latest snapshot, not a sum.
+        assert_eq!(m.kv_pages_resident.load(Ordering::Relaxed), 4);
+        assert_eq!(m.arena_evictions.load(Ordering::Relaxed), 2);
+        let ac = m.arena_counters();
+        assert_eq!(ac.kv_bytes_resident(), 4 * 512);
+        assert!(m.snapshot().contains("kv_pages_resident=4"));
     }
 
     #[test]

@@ -5,6 +5,9 @@
 //!     PREDICT <decoder> <smiles>      decoder ∈ greedy | spec:<dl> |
 //!                                     bs:<n> | sbs:<n>:<dl>
 //!     STATS                           cache state + metrics snapshot
+//!     TRACE [<path>]                  Chrome trace JSON of collected
+//!                                     spans — inline (one line) or
+//!                                     written server-side to <path>
 //!     PING                            liveness
 //!     QUIT                            close connection
 //!
@@ -102,6 +105,24 @@ fn handle_line(line: &str, state: &Arc<ServerState>) -> LineReply {
             LineReply::Text(s)
         }
         Some("QUIT") => LineReply::Quit,
+        Some("TRACE") => {
+            // `chrome_trace_json` renders single-line, so the inline
+            // reply keeps the one-response-per-line framing intact.
+            let json = crate::trace::export_chrome_json();
+            match parts.next() {
+                Some(path) if !path.trim().is_empty() => {
+                    match std::fs::write(path.trim(), &json) {
+                        Ok(()) => LineReply::Text(format!(
+                            "OK wrote {} bytes to {}",
+                            json.len(),
+                            path.trim()
+                        )),
+                        Err(e) => LineReply::Text(format!("ERR trace write: {e}")),
+                    }
+                }
+                _ => LineReply::Text(json),
+            }
+        }
         Some("PREDICT") => {
             let (Some(dec), Some(smiles)) = (parts.next(), parts.next()) else {
                 return LineReply::Text("ERR usage: PREDICT <decoder> <smiles>".to_string());
@@ -201,6 +222,11 @@ impl Client {
         }
     }
 
+    /// Fetch the collected span trace as one line of Chrome trace JSON.
+    pub fn trace_json(&mut self) -> Result<String> {
+        self.roundtrip("TRACE")
+    }
+
     pub fn stats(&mut self) -> Result<String> {
         // STATS is multi-line; read until the decode_latency line.
         self.writer.write_all(b"STATS\n")?;
@@ -273,6 +299,10 @@ mod tests {
         assert!(stats.contains("cache: enabled=true"));
         assert!(stats.contains("requests="));
         assert!(stats.contains("cache_hits=1"));
+        // TRACE always answers one line of valid Chrome trace JSON,
+        // even with RXNSPEC_TRACE off (empty event array).
+        let tr = c.trace_json().unwrap();
+        assert!(tr.starts_with("{\"traceEvents\":["), "bad trace reply: {tr}");
 
         let _ = vocab;
         state.queue.close();

@@ -24,7 +24,7 @@
 //! and the speculative decoders draft from the store's top windows on the
 //! next request.
 
-use std::sync::atomic::Ordering;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc};
 use std::time::Instant;
 
@@ -35,7 +35,36 @@ use crate::coordinator::batcher::{DecodeMode, Request, RequestQueue};
 use crate::coordinator::metrics::Metrics;
 use crate::decoding::{beam_search, sbs, Backend, GreedyRun, SbsConfig, SpecGreedyRun};
 use crate::draft::{Acceptance, DraftConfig};
+use crate::trace::{self, Phase};
+use crate::trace_span;
 use crate::vocab::Vocab;
+
+/// Synthetic trace-track allocator: each traced request gets its own
+/// Perfetto row, since request intervals overlap on the worker thread.
+static REQ_TRACK: AtomicU64 = AtomicU64::new(0);
+
+/// Record a request's queue residency onto its trace track (ending now)
+/// and return the admission timestamp for the later `Request` span.
+fn trace_admission(enqueued: Instant, track: u64) -> u64 {
+    if !trace::enabled() {
+        return 0;
+    }
+    let now = trace::now_ns();
+    let wait_ns = enqueued.elapsed().as_nanos() as u64;
+    trace::record_manual(Phase::QueueWait, now.saturating_sub(wait_ns), now, 0, track);
+    now
+}
+
+/// Close a request's trace track: the whole-request span plus a
+/// worst-N exemplar offer.
+fn trace_completion(t_admit_ns: u64, track: u64, payload: u64) {
+    if !trace::enabled() {
+        return;
+    }
+    let now = trace::now_ns();
+    trace::record_manual(Phase::Request, t_admit_ns, now, payload, track);
+    trace::note_request(&format!("req-{track}"), t_admit_ns, now);
+}
 
 /// One unit of serving work: a query SMILES and a reply channel.
 pub struct Job {
@@ -196,7 +225,10 @@ fn solo_batch<B: Backend>(
         }
         metrics.batches.fetch_add(1, Ordering::Relaxed);
         metrics.batched_requests.fetch_add(1, Ordering::Relaxed);
+        let track = REQ_TRACK.fetch_add(1, Ordering::Relaxed);
+        let t_admit_ns = trace_admission(r.enqueued, track);
         let t0 = Instant::now();
+        let _tick = trace_span!(Phase::BatchTick, 1);
         let out = match mode {
             DecodeMode::Beam { n } => beam_search(backend, &src, n),
             DecodeMode::Sbs { n, dl } => {
@@ -262,6 +294,8 @@ fn solo_batch<B: Backend>(
             }
         }
         metrics.decode_latency.record(t0.elapsed());
+        drop(_tick);
+        trace_completion(t_admit_ns, track, 1);
     }
 }
 
@@ -408,17 +442,25 @@ fn stream_batch<B: Backend>(
         calls_at_admit: usize,
         replied: bool,
         ids: Vec<i64>,
+        /// Synthetic trace track and admission timestamp — request
+        /// intervals overlap on this thread, so each lane records its
+        /// whole-request span manually onto its own track.
+        track: u64,
+        t_admit_ns: u64,
     }
     let mut lanes: Vec<LaneCtx> = Vec::new();
     for (i, (r, ids)) in valid.iter().enumerate() {
         let lane = run.admit(i, ids);
         debug_assert_eq!(lane, lanes.len());
+        let track = REQ_TRACK.fetch_add(1, Ordering::Relaxed);
         lanes.push(LaneCtx {
             resp: r.payload.resp.clone(),
             t0: Instant::now(),
             calls_at_admit: run.calls(),
             replied: false,
             ids: ids.clone(),
+            track,
+            t_admit_ns: trace_admission(r.enqueued, track),
         });
     }
     drop(valid);
@@ -432,7 +474,11 @@ fn stream_batch<B: Backend>(
     let max_session_admissions = max_lanes.saturating_mul(8);
 
     loop {
-        let finished = match run.step() {
+        let step_res = {
+            let _tick = trace_span!(Phase::BatchTick, run.n_live() as u64);
+            run.step()
+        };
+        let finished = match step_res {
             Ok(f) => f,
             Err(e) => {
                 // Finished lanes already replied; fail the rest.
@@ -476,6 +522,11 @@ fn stream_batch<B: Backend>(
             let _ = lanes[li].resp.send(Ok(reply));
             lanes[li].replied = true;
             metrics.decode_latency.record(lanes[li].t0.elapsed());
+            trace_completion(
+                lanes[li].t_admit_ns,
+                lanes[li].track,
+                (run.calls() - lanes[li].calls_at_admit) as u64,
+            );
         }
 
         // Continuous batching: admit compatible newcomers into the live
@@ -486,6 +537,7 @@ fn stream_batch<B: Backend>(
             .min(max_session_admissions.saturating_sub(lanes.len()));
         let newcomers = queue.try_pop_compatible(mode, free);
         if !newcomers.is_empty() {
+            let _adm_span = trace_span!(Phase::Admission, newcomers.len() as u64);
             let now = Instant::now();
             let mut adm: Vec<(Request<Job>, Vec<i64>)> = Vec::new();
             for r in newcomers {
@@ -507,12 +559,15 @@ fn stream_batch<B: Backend>(
                         for (k, (r, ids)) in adm.iter().enumerate() {
                             let lane = run.admit(base + k, ids);
                             debug_assert_eq!(lane, lanes.len());
+                            let track = REQ_TRACK.fetch_add(1, Ordering::Relaxed);
                             lanes.push(LaneCtx {
                                 resp: r.payload.resp.clone(),
                                 t0: Instant::now(),
                                 calls_at_admit: run.calls(),
                                 replied: false,
                                 ids: ids.clone(),
+                                track,
+                                t_admit_ns: trace_admission(r.enqueued, track),
                             });
                         }
                     }
@@ -525,42 +580,10 @@ fn stream_batch<B: Backend>(
             metrics
                 .decoder_calls
                 .fetch_add(run.calls() as u64, Ordering::Relaxed);
-            // Kernel-layer accounting: every step() was one fused extend
-            // over all live lanes, so rows-per-call here is the packed
-            // batch size the coordinator sustained.
-            let s = run.session_stats();
-            metrics
-                .extend_calls
-                .fetch_add(s.extend_calls as u64, Ordering::Relaxed);
-            metrics
-                .packed_rows
-                .fetch_add(s.packed_rows as u64, Ordering::Relaxed);
-            metrics
-                .encode_calls
-                .fetch_add(s.encode_calls as u64, Ordering::Relaxed);
-            metrics
-                .packed_src_rows
-                .fetch_add(s.packed_src_rows as u64, Ordering::Relaxed);
-            metrics
-                .lp_high_water
-                .fetch_max(s.lp_high_water as u64, Ordering::Relaxed);
-            // Arena residency: the gauge takes the latest finished run's
-            // snapshot; high-water and the monotone counters accumulate.
-            metrics
-                .kv_pages_resident
-                .store(s.kv_pages_resident as u64, Ordering::Relaxed);
-            metrics
-                .kv_pages_high_water
-                .fetch_max(s.kv_pages_high_water as u64, Ordering::Relaxed);
-            metrics
-                .kv_page_bytes
-                .store(s.kv_page_bytes as u64, Ordering::Relaxed);
-            metrics
-                .arena_evictions
-                .fetch_add(s.arena_evictions as u64, Ordering::Relaxed);
-            metrics
-                .fork_pages_copied
-                .fetch_add(s.fork_pages_copied as u64, Ordering::Relaxed);
+            // Kernel-layer + arena accounting: every step() was one
+            // fused extend over all live lanes. The field-by-field
+            // mapping lives in `Metrics::absorb_session`, not here.
+            metrics.absorb_session(&run.session_stats());
             return;
         }
     }

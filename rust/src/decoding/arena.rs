@@ -31,6 +31,9 @@
 //! returns `None`) and sessions fall back to the dense per-row path,
 //! which doubles as the parity oracle for the paged one.
 
+use crate::trace::Phase;
+use crate::trace_span;
+
 /// Default page size in positions when `RXNSPEC_KV_PAGE` is unset.
 pub const DEFAULT_PAGE_POSITIONS: usize = 16;
 
@@ -333,6 +336,10 @@ impl KvArena {
                 debug_assert_eq!(first + 1, n_pages);
                 let old = self.tables[t.0 as usize].pages[first];
                 if self.pages[old as usize].refs > 1 {
+                    let _cow = trace_span!(
+                        Phase::ArenaCow,
+                        (2 * self.page_positions * self.pos_floats * 4) as u64
+                    );
                     let new = self.alloc_page();
                     let (kc, vc) = {
                         let s = &self.pages[old as usize];
@@ -406,6 +413,7 @@ impl KvArena {
             e.positions = 0;
             std::mem::take(&mut e.pages)
         };
+        let _ev = trace_span!(Phase::ArenaEvict, pages.len() as u64);
         for p in pages {
             self.unref_page(p);
         }

@@ -15,6 +15,9 @@
 
 use std::time::Instant;
 
+use crate::trace::{self, Phase};
+use crate::trace_span;
+
 use anyhow::Result;
 
 use crate::vocab::{BOS_ID, EOS_ID};
@@ -137,9 +140,16 @@ impl BeamPool {
 /// backend computes exactly one position per beam per step.
 pub fn beam_search<B: Backend>(backend: &B, src: &[i64], n: usize) -> Result<DecodeOutput> {
     let t0 = Instant::now();
+    let ph0 = trace::thread_phase_ns();
     let dims = backend.dims();
-    let memory = backend.encode(&[src])?;
-    let mut sess = backend.begin(memory)?;
+    let memory = {
+        let _enc = trace_span!(Phase::Encode, 1);
+        backend.encode(&[src])?
+    };
+    let mut sess = {
+        let _beg = trace_span!(Phase::SessionBegin);
+        backend.begin(memory)?
+    };
     let mut stats = DecodeStats {
         encoder_calls: 1,
         ..Default::default()
@@ -169,7 +179,10 @@ pub fn beam_search<B: Backend>(backend: &B, src: &[i64], n: usize) -> Result<Dec
             .iter()
             .map(|b| (b.row, &b.state.tokens[b.sess_len..]))
             .collect();
-        let lp = sess.extend(&deltas)?;
+        let lp = {
+            let _ext = trace_span!(Phase::Extend, deltas.len() as u64);
+            sess.extend(&deltas)?
+        };
         stats.decoder_calls += 1;
         stats.decoder_rows += deltas.len();
         drop(deltas);
@@ -232,6 +245,11 @@ pub fn beam_search<B: Backend>(backend: &B, src: &[i64], n: usize) -> Result<Dec
 
     stats.absorb_session(&sess.stats());
     stats.wall = t0.elapsed();
+    let ph1 = trace::thread_phase_ns();
+    let phase_us = |p: Phase| ph1[p as usize].saturating_sub(ph0[p as usize]) / 1000;
+    stats.encode_us = phase_us(Phase::Encode);
+    stats.extend_us = phase_us(Phase::Extend);
+    stats.verify_us = phase_us(Phase::Verify);
     Ok(DecodeOutput {
         hyps: pool.sorted(),
         stats,

@@ -12,6 +12,8 @@ use std::time::Instant;
 
 use anyhow::Result;
 
+use crate::trace::{self, Phase};
+use crate::trace_span;
 use crate::vocab::{BOS_ID, EOS_ID};
 
 use super::{Backend, DecodeOutput, DecodeStats, DecoderSession, Hypothesis, SessionStats};
@@ -103,7 +105,10 @@ impl<'a> GreedyRun<'a> {
         if idxs.is_empty() {
             return Ok(Vec::new());
         }
-        let lp = self.sess.extend(&deltas)?;
+        let lp = {
+            let _ext = trace_span!(Phase::Extend, deltas.len() as u64);
+            self.sess.extend(&deltas)?
+        };
         self.calls += 1;
         self.rows_submitted += deltas.len();
         drop(deltas);
@@ -153,9 +158,17 @@ pub fn greedy<B: Backend>(backend: &B, src: &[i64]) -> Result<DecodeOutput> {
 /// generation step (the Table 2 "B=32" configuration).
 pub fn greedy_batch<B: Backend>(backend: &B, srcs: &[&[i64]]) -> Result<Vec<DecodeOutput>> {
     let t0 = Instant::now();
-    let memory = backend.encode(srcs)?;
+    let ph0 = trace::thread_phase_ns();
+    let memory = {
+        let _enc = trace_span!(Phase::Encode, srcs.len() as u64);
+        backend.encode(srcs)?
+    };
     let n = srcs.len();
-    let mut run = GreedyRun::new(backend.begin(memory)?);
+    let sess = {
+        let _beg = trace_span!(Phase::SessionBegin);
+        backend.begin(memory)?
+    };
+    let mut run = GreedyRun::new(sess);
     for i in 0..n {
         run.admit(i);
     }
@@ -163,6 +176,13 @@ pub fn greedy_batch<B: Backend>(backend: &B, srcs: &[&[i64]]) -> Result<Vec<Deco
         run.step()?;
     }
     let wall = t0.elapsed();
+    // Phase attribution from the trace layer: spans on this thread
+    // accumulated into per-phase counters; the diff over this decode,
+    // apportioned per query like `wall`, is each output's share. All
+    // zero when RXNSPEC_TRACE is off.
+    let ph1 = trace::thread_phase_ns();
+    let phase_us =
+        |p: Phase| ph1[p as usize].saturating_sub(ph0[p as usize]) / 1000 / n as u64;
 
     let sess = run.session_stats();
     let base = DecodeStats {
@@ -171,6 +191,9 @@ pub fn greedy_batch<B: Backend>(backend: &B, srcs: &[&[i64]]) -> Result<Vec<Deco
         decoder_rows: run.rows_submitted(),
         tokens_computed: sess.tokens_computed,
         tokens_reused: sess.tokens_reused,
+        encode_us: phase_us(Phase::Encode),
+        extend_us: phase_us(Phase::Extend),
+        verify_us: phase_us(Phase::Verify),
         ..Default::default()
     };
     Ok((0..n)

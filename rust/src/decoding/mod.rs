@@ -379,6 +379,15 @@ pub struct DecodeStats {
     pub accepted_corpus_tokens: usize,
     /// Wall time of the whole decode.
     pub wall: Duration,
+    /// Wall time attributed to encoder passes (µs), populated from the
+    /// trace layer's per-thread phase accumulators. Zero when
+    /// `RXNSPEC_TRACE` is off — by construction the trace layer never
+    /// changes decoded outputs or the token counters above.
+    pub encode_us: u64,
+    /// Wall time attributed to KV-cached `extend` passes (µs; traced).
+    pub extend_us: u64,
+    /// Wall time attributed to draft verification (µs; traced).
+    pub verify_us: u64,
 }
 
 impl DecodeStats {
@@ -392,6 +401,9 @@ impl DecodeStats {
         self.accepted_query_tokens += o.accepted_query_tokens;
         self.accepted_corpus_tokens += o.accepted_corpus_tokens;
         self.wall += o.wall;
+        self.encode_us += o.encode_us;
+        self.extend_us += o.extend_us;
+        self.verify_us += o.verify_us;
     }
 
     /// Absorb a finished session's cache accounting.

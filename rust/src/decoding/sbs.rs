@@ -24,6 +24,9 @@
 
 use std::time::Instant;
 
+use crate::trace::Phase;
+use crate::trace_span;
+
 use anyhow::Result;
 
 use crate::draft::{extract_drafts_merged, DraftConfig, DraftSource};
@@ -126,9 +129,18 @@ fn sbs_impl<B: Backend>(
     mut trace: Option<&mut SbsTrace>,
 ) -> Result<(DecodeOutput, ())> {
     let t0 = Instant::now();
+    // `trace` is the algorithm-trace parameter; the span layer is
+    // addressed by full path to keep the two apart.
+    let ph0 = crate::trace::thread_phase_ns();
     let dims = backend.dims();
-    let memory = backend.encode(&[src])?;
-    let mut sess = backend.begin(memory)?;
+    let memory = {
+        let _enc = trace_span!(Phase::Encode, 1);
+        backend.encode(&[src])?
+    };
+    let mut sess = {
+        let _beg = trace_span!(Phase::SessionBegin);
+        backend.begin(memory)?
+    };
     let mut stats = DecodeStats {
         encoder_calls: 1,
         ..Default::default()
@@ -166,15 +178,18 @@ fn sbs_impl<B: Backend>(
         let mut frows: Vec<usize> = Vec::new();
         let mut delta_buf: Vec<Vec<i64>> = Vec::new();
         let mut row_meta: Vec<(usize, usize, usize)> = Vec::new(); // (beam, draft, clipped_len)
-        for (bi, b) in beams.iter().enumerate() {
-            for (di, d) in drafts.iter().enumerate() {
-                let clipped = clip_draft(&d.tokens, b.state.tokens.len(), dims.t_len);
-                let mut delta = b.state.tokens[b.sess_len..].to_vec();
-                delta.extend_from_slice(clipped);
-                let clen = clipped.len();
-                frows.push(sess.fork(b.row));
-                delta_buf.push(delta);
-                row_meta.push((bi, di, clen));
+        {
+            let _fk = trace_span!(Phase::Fork, (beams.len() * drafts.len()) as u64);
+            for (bi, b) in beams.iter().enumerate() {
+                for (di, d) in drafts.iter().enumerate() {
+                    let clipped = clip_draft(&d.tokens, b.state.tokens.len(), dims.t_len);
+                    let mut delta = b.state.tokens[b.sess_len..].to_vec();
+                    delta.extend_from_slice(clipped);
+                    let clen = clipped.len();
+                    frows.push(sess.fork(b.row));
+                    delta_buf.push(delta);
+                    row_meta.push((bi, di, clen));
+                }
             }
         }
         let deltas: Vec<(usize, &[i64])> = frows
@@ -182,7 +197,10 @@ fn sbs_impl<B: Backend>(
             .zip(&delta_buf)
             .map(|(&r, d)| (r, d.as_slice()))
             .collect();
-        let lp = sess.extend(&deltas)?;
+        let lp = {
+            let _ext = trace_span!(Phase::Extend, deltas.len() as u64);
+            sess.extend(&deltas)?
+        };
         stats.decoder_calls += 1;
         stats.decoder_rows += deltas.len();
         let n_rows_iter = deltas.len();
@@ -190,23 +208,26 @@ fn sbs_impl<B: Backend>(
 
         // selectBestDraft per beam: most accepted tokens, ties → first.
         let mut best: Vec<Option<(usize, usize)>> = vec![None; beams.len()];
-        for (r, &(bi, di, clen)) in row_meta.iter().enumerate() {
-            let p = beams[bi].state.tokens.len();
-            let draft = &drafts[di].tokens;
-            let mut k = 0usize;
-            while k < clen {
-                let d_tok = draft[k];
-                if d_tok == EOS_ID || d_tok == BOS_ID || d_tok == PAD_ID {
-                    break;
+        {
+            let _vf = trace_span!(Phase::Verify, n_rows_iter as u64);
+            for (r, &(bi, di, clen)) in row_meta.iter().enumerate() {
+                let p = beams[bi].state.tokens.len();
+                let draft = &drafts[di].tokens;
+                let mut k = 0usize;
+                while k < clen {
+                    let d_tok = draft[k];
+                    if d_tok == EOS_ID || d_tok == BOS_ID || d_tok == PAD_ID {
+                        break;
+                    }
+                    if lp.argmax(r, p - 1 + k) != d_tok {
+                        break;
+                    }
+                    k += 1;
                 }
-                if lp.argmax(r, p - 1 + k) != d_tok {
-                    break;
+                match best[bi] {
+                    Some((_, bk)) if bk >= k => {}
+                    _ => best[bi] = Some((r, k)),
                 }
-                k += 1;
-            }
-            match best[bi] {
-                Some((_, bk)) if bk >= k => {}
-                _ => best[bi] = Some((r, k)),
             }
         }
 
@@ -390,18 +411,21 @@ fn sbs_impl<B: Backend>(
         // prefix out of the winning verify row, roll back the rejected
         // tail, and leave the candidate's fresh token pending.
         let mut next: Vec<Live> = Vec::new();
-        for c in kept {
-            let t = &c.state.tokens;
-            if *t.last().unwrap() == EOS_ID || t.len() >= dims.t_len {
-                continue; // retired above
+        {
+            let _tr = trace_span!(Phase::Truncate, kept.len() as u64);
+            for c in kept {
+                let t = &c.state.tokens;
+                if *t.last().unwrap() == EOS_ID || t.len() >= dims.t_len {
+                    continue; // retired above
+                }
+                let row = sess.fork(c.from_row);
+                sess.truncate(row, c.keep_len);
+                next.push(Live {
+                    sess_len: c.keep_len,
+                    row,
+                    state: c.state,
+                });
             }
-            let row = sess.fork(c.from_row);
-            sess.truncate(row, c.keep_len);
-            next.push(Live {
-                sess_len: c.keep_len,
-                row,
-                state: c.state,
-            });
         }
 
         // Verify forks and superseded parent rows are done.
@@ -424,6 +448,11 @@ fn sbs_impl<B: Backend>(
 
     stats.absorb_session(&sess.stats());
     stats.wall = t0.elapsed();
+    let ph1 = crate::trace::thread_phase_ns();
+    let phase_us = |p: Phase| ph1[p as usize].saturating_sub(ph0[p as usize]) / 1000;
+    stats.encode_us = phase_us(Phase::Encode);
+    stats.extend_us = phase_us(Phase::Extend);
+    stats.verify_us = phase_us(Phase::Verify);
     Ok((
         DecodeOutput {
             hyps: pool.sorted(),

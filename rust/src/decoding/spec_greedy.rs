@@ -20,6 +20,8 @@ use std::time::Instant;
 use anyhow::Result;
 
 use crate::draft::{extract_drafts_merged, Acceptance, Draft, DraftConfig, DraftSource};
+use crate::trace::{self, Phase};
+use crate::trace_span;
 use crate::vocab::{BOS_ID, EOS_ID};
 
 use super::{
@@ -156,6 +158,7 @@ impl<'a> SpecGreedyRun<'a> {
         let mut delta_buf: Vec<Vec<i64>> = Vec::new();
         // (lane, draft index, clipped length) per fork row.
         let mut meta: Vec<(usize, usize, usize)> = Vec::new();
+        let mut fork_span = trace_span!(Phase::Fork);
         for li in 0..self.lanes.len() {
             if self.lanes[li].done {
                 continue;
@@ -172,6 +175,10 @@ impl<'a> SpecGreedyRun<'a> {
                 meta.push((li, di, clen));
             }
         }
+        if let Some(s) = fork_span.as_mut() {
+            s.set_payload(frows.len() as u64);
+        }
+        drop(fork_span);
         if frows.is_empty() {
             return Ok(Vec::new());
         }
@@ -180,13 +187,17 @@ impl<'a> SpecGreedyRun<'a> {
             .zip(&delta_buf)
             .map(|(&r, d)| (r, d.as_slice()))
             .collect();
-        let lp = self.sess.extend(&deltas)?;
+        let lp = {
+            let _ext = trace_span!(Phase::Extend, deltas.len() as u64);
+            self.sess.extend(&deltas)?
+        };
         self.calls += 1;
         self.rows_submitted += deltas.len();
         drop(deltas);
 
         // selectBestDraft: per lane, the fork with the most accepted
         // tokens (ties → first).
+        let mut verify_span = trace_span!(Phase::Verify);
         let mut best: Vec<Option<(usize, usize)>> = vec![None; self.lanes.len()]; // (meta idx, k)
         for (r, &(li, di, clen)) in meta.iter().enumerate() {
             let lane = &self.lanes[li];
@@ -204,10 +215,17 @@ impl<'a> SpecGreedyRun<'a> {
                 _ => best[li] = Some((r, k)),
             }
         }
+        if let Some(s) = verify_span.as_mut() {
+            // Payload: draft tokens the winning forks accepted this step
+            // (per-source splits accumulate on the lanes below).
+            s.set_payload(best.iter().flatten().map(|&(_, k)| k as u64).sum());
+        }
+        drop(verify_span);
 
         // Emit accepted tokens + one fresh argmax per lane, then swap the
         // committed session row to the winning fork (truncated back to
         // the accepted length) and release the losers.
+        let _tr = trace_span!(Phase::Truncate);
         let mut just_finished = Vec::new();
         for li in 0..self.lanes.len() {
             let Some((r, k)) = best[li] else { continue };
@@ -324,9 +342,17 @@ pub fn spec_greedy_batch_corpus<B: Backend>(
     corpus: &[Vec<i64>],
 ) -> Result<Vec<DecodeOutput>> {
     let t0 = Instant::now();
-    let memory = backend.encode(srcs)?;
+    let ph0 = trace::thread_phase_ns();
+    let memory = {
+        let _enc = trace_span!(Phase::Encode, srcs.len() as u64);
+        backend.encode(srcs)?
+    };
     let n = srcs.len();
-    let mut run = SpecGreedyRun::with_corpus(backend.begin(memory)?, cfg.clone(), corpus.to_vec());
+    let sess = {
+        let _beg = trace_span!(Phase::SessionBegin);
+        backend.begin(memory)?
+    };
+    let mut run = SpecGreedyRun::with_corpus(sess, cfg.clone(), corpus.to_vec());
     for (i, src) in srcs.iter().enumerate() {
         run.admit(i, src);
     }
@@ -334,6 +360,11 @@ pub fn spec_greedy_batch_corpus<B: Backend>(
         run.step()?;
     }
     let wall = t0.elapsed();
+    // Trace-layer phase attribution, apportioned per query like `wall`;
+    // zero when RXNSPEC_TRACE is off (see greedy_batch).
+    let ph1 = trace::thread_phase_ns();
+    let phase_us =
+        |p: Phase| ph1[p as usize].saturating_sub(ph0[p as usize]) / 1000 / n as u64;
 
     let sess = run.session_stats();
     let base = DecodeStats {
@@ -342,6 +373,9 @@ pub fn spec_greedy_batch_corpus<B: Backend>(
         decoder_rows: run.rows_submitted(),
         tokens_computed: sess.tokens_computed,
         tokens_reused: sess.tokens_reused,
+        encode_us: phase_us(Phase::Encode),
+        extend_us: phase_us(Phase::Extend),
+        verify_us: phase_us(Phase::Verify),
         ..Default::default()
     };
     Ok((0..n)

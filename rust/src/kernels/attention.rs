@@ -34,6 +34,8 @@
 
 use crate::kernels::simd::{self, F32Lanes, SimdLevel, LANES};
 use crate::kernels::threads;
+use crate::trace::Phase;
+use crate::trace_span;
 
 /// Per-layer attention K/V of one row, stored as per-head panels (see
 /// module docs for the K/V layouts).
@@ -557,6 +559,10 @@ fn attn_ref_with(
     ctx: &mut [f32],
     level: SimdLevel,
 ) {
+    let _sp = trace_span!(
+        Phase::Attention,
+        (nq * kv.len() * kv.d_head() * kv.n_heads()) as u64
+    );
     let d_model = kv.n_heads() * kv.d_head();
     for h in 0..kv.n_heads() {
         attn_one_head(
@@ -676,6 +682,9 @@ fn attn_ref_threaded_with(
         attn_ref_with(q, q_stride, q_base, nq, kv, causal_offset, ctx, level);
         return;
     }
+    // The serial fallback above routes through `attn_ref_with`, which
+    // carries its own span — so this covers only the parallel branch.
+    let _sp = trace_span!(Phase::Attention, work as u64);
     let d_model = nh * dh;
     let per = nh.div_ceil(threads.min(nh));
     let mut scratch: Vec<Vec<f32>> = (0..nh).map(|_| vec![0f32; nq * dh]).collect();

@@ -23,6 +23,8 @@
 
 use crate::kernels::simd::{self, F32Lanes, SimdLevel, LANES};
 use crate::kernels::threads;
+use crate::trace::Phase;
+use crate::trace_span;
 
 /// Output-column tile width (one register strip of accumulators). Must
 /// equal the SIMD lane width.
@@ -137,6 +139,7 @@ impl PackedLinear {
     ) {
         assert_eq!(x.len(), n * self.din, "input shape mismatch");
         assert_eq!(y.len(), n * self.dout, "output shape mismatch");
+        let _sp = trace_span!(Phase::Gemm, (n * self.din * self.dout) as u64);
         let par = threads > 1 && n > 1 && n * self.din * self.dout >= threads::par_min_macs();
         if !par {
             self.apply_serial(x, n, y, level);

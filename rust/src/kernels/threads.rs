@@ -36,6 +36,9 @@ use std::collections::VecDeque;
 use std::sync::{Arc, Condvar, Mutex, OnceLock};
 use std::time::Instant;
 
+use crate::trace::Phase;
+use crate::trace_span;
+
 /// Resolve the process-wide default kernel thread count once.
 ///
 /// * unset / `0` / `1` → `1` (threading off),
@@ -358,6 +361,7 @@ pub fn for_each_partitioned<T: Send, F: Fn(&mut T) + Sync>(items: &mut [T], thre
         return;
     }
     let chunk = n.div_ceil(threads.min(n));
+    let _sp = trace_span!(Phase::PoolDispatch, n.div_ceil(chunk) as u64);
     pool().run_parts(items, chunk, &f);
 }
 

@@ -29,4 +29,5 @@ pub mod planner;
 pub mod rng;
 pub mod runtime;
 pub mod testutil;
+pub mod trace;
 pub mod vocab;

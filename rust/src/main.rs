@@ -33,7 +33,7 @@ fn usage() -> ! {
 USAGE:
   rxnspec serve   [--task fwd|retro] [--backend pjrt|rust] [--artifacts DIR]
                   [--data DIR] [--port N] [--batch-max N] [--batch-wait-ms N]
-                  [--cache on|off]
+                  [--cache on|off] [--trace FILE]
   rxnspec predict --smiles SMILES [--decoder D] [--task ...] [--backend ...]
   rxnspec eval    [--decoder D] [--limit N] [--task ...] [--backend ...]
   rxnspec parity  [--limit N] [--task ...]
@@ -56,6 +56,9 @@ struct Opts {
     batch_max: usize,
     batch_wait_ms: u64,
     cache: bool,
+    /// Write a Chrome trace JSON of the run here on shutdown (also
+    /// force-enables span collection, overriding `RXNSPEC_TRACE`).
+    trace: Option<PathBuf>,
 }
 
 impl Default for Opts {
@@ -72,6 +75,7 @@ impl Default for Opts {
             batch_max: 32,
             batch_wait_ms: 5,
             cache: true,
+            trace: None,
         }
     }
 }
@@ -99,6 +103,7 @@ fn parse_opts(args: &[String]) -> Opts {
                     _ => usage(),
                 }
             }
+            "--trace" => o.trace = Some(PathBuf::from(need(i))),
             _ => usage(),
         }
         i += 2;
@@ -152,9 +157,17 @@ fn cmd_serve(opts: Opts) -> Result<()> {
         opts.batch_wait_ms,
         if opts.cache { "on" } else { "off" }
     );
+    if opts.trace.is_some() {
+        rxnspec::trace::set_enabled(true);
+    }
     let accept_state = Arc::clone(&state);
     let accept = std::thread::spawn(move || serve(listener, accept_state));
     run_worker(&backend, &vocab, &state.queue, &state.metrics, &state.cache);
+    if let Some(path) = &opts.trace {
+        std::fs::write(path, rxnspec::trace::export_chrome_json())
+            .with_context(|| format!("write trace to {}", path.display()))?;
+        eprintln!("trace written to {}", path.display());
+    }
     let _ = accept.join();
     Ok(())
 }

@@ -77,6 +77,8 @@ use crate::decoding::{
     ArenaConfig, ArenaStats, DecoderSession, KvArena, LogProbs, Memory, ModelDims, SessionStats,
     TableId,
 };
+use crate::trace::Phase;
+use crate::trace_span;
 use crate::vocab::PAD_ID;
 
 /// One cache-shaped decoder invocation, padded to its `(W, EB)` bucket.
@@ -442,6 +444,9 @@ impl<E: DeccacheExec> DecoderSession for CachedPjrtSession<E> {
             cache.tokens.extend_from_slice(&job_toks);
             if let (Some(arena), Some(t)) = (self.arena.as_mut(), r.table) {
                 if kv_valid < len_before {
+                    // Marker span: the actual recompute cost lands in the
+                    // extend passes below; payload = positions rebuilt.
+                    let _heal = trace_span!(Phase::ArenaHeal, (len_before - start) as u64);
                     arena.note_rehydrated(len_before - start);
                 }
                 // Roll the page table back and make the whole job range
@@ -481,7 +486,10 @@ impl<E: DeccacheExec> DecoderSession for CachedPjrtSession<E> {
                 .map(|&i| (prep[i].toks.len() - prep[i].done).min(max_w))
                 .max()
                 .unwrap();
-            let w = self.window_bucket(need_w);
+            let w = {
+                let _rt = trace_span!(Phase::BucketRoute, need_w as u64);
+                self.window_bucket(need_w)
+            };
             let w_max_eb = self.max_eb_for(w);
             let single_chunk = lanes.len() <= w_max_eb;
             for chunk in lanes.chunks(w_max_eb) {
@@ -522,9 +530,14 @@ impl<E: DeccacheExec> DecoderSession for CachedPjrtSession<E> {
                 };
                 let reuse = single_chunk && sig_match;
                 let kv_host = if reuse {
+                    let _ru = trace_span!(Phase::KvReuse, (self.n_layers * eb * t_len * d) as u64);
                     self.kv_uploads_skipped += 1;
                     None
                 } else {
+                    let _up = trace_span!(
+                        Phase::KvUpload,
+                        (2 * self.n_layers * eb * t_len * d * 4) as u64
+                    );
                     let sz = self.n_layers * eb * t_len * d;
                     let mut k = vec![0f32; sz];
                     let mut vv = vec![0f32; sz];

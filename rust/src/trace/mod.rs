@@ -1,0 +1,769 @@
+//! `rxntrace`: span-structured, std-only request tracing.
+//!
+//! Every hot layer (coordinator, decoders, kernels, arena, PJRT
+//! session) opens phase-tagged spans through [`span`] / the
+//! [`trace_span!`](crate::trace_span) macro. Each span is a fixed-size
+//! [`Event`] (id, parent, phase, start/end ns, u64 payload) pushed into
+//! a per-thread ring buffer on drop; a global collector snapshots the
+//! rings into Chrome trace-event JSON that Perfetto loads directly.
+//!
+//! Cost model: when tracing is disabled (the default — gated on
+//! `RXNSPEC_TRACE`), a call site is one relaxed atomic load and a
+//! branch; no thread-local is touched, no clock is read, and the
+//! payload expression inside `trace_span!` is not even evaluated. When
+//! enabled, a span costs two monotonic clock reads plus one push under
+//! an uncontended per-thread mutex (the mutex is shared only with the
+//! snapshot collector, which runs on demand).
+//!
+//! Threading contract: span *stacks* are thread-local, so parentage is
+//! only inferred between spans on one thread — exactly the nesting
+//! Perfetto renders per track. Cross-thread work (pool lanes running
+//! GEMM panels) appears as root spans on the worker threads, under the
+//! wall-clock window of the dispatching span. Overlapping per-request
+//! intervals in the continuous-batching loop (many live requests on one
+//! worker thread) are recorded via [`record_manual`] onto synthetic
+//! per-request tracks instead of the thread stack.
+//!
+//! The worst-N exemplar store ([`note_request`]) retains the full span
+//! window of the slowest requests so a p99 outlier is explainable after
+//! the ring has wrapped past it.
+
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard, OnceLock};
+use std::time::Instant;
+
+/// Phase tag carried by every span. `name()` strings are the Chrome
+/// trace-event `name` field and the README phase glossary — keep the
+/// three in sync.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+#[repr(u8)]
+pub enum Phase {
+    /// Whole request: admission to reply (synthetic per-request track).
+    Request = 0,
+    /// Queue residency before admission (synthetic per-request track).
+    QueueWait,
+    /// Coordinator pulling compatible newcomers into a live batch.
+    Admission,
+    /// One iteration of the continuous-batching decode loop.
+    BatchTick,
+    /// Source-side encoder forward (cross-row packed).
+    Encode,
+    /// `Backend::begin` — session construction from encoder memory.
+    SessionBegin,
+    /// One KV-cached `extend` over the packed delta rows.
+    Extend,
+    /// Copy-on-write session forks for speculative drafts.
+    Fork,
+    /// Rolling losing drafts back to the accepted prefix.
+    Truncate,
+    /// Draft verification: scoring proposals against model argmax.
+    Verify,
+    /// Packed tile GEMM (payload = MACs).
+    Gemm,
+    /// Head-blocked attention over panel K/V (payload = work units).
+    Attention,
+    /// Persistent-pool fork/join dispatch (payload = partitions).
+    PoolDispatch,
+    /// Arena copy-on-write page unshare (payload = pages copied).
+    ArenaCow,
+    /// Arena LRU page eviction under `RXNSPEC_KV_BUDGET`.
+    ArenaEvict,
+    /// Exact-recompute heal of evicted pages (payload = positions).
+    ArenaHeal,
+    /// `CachedPjrtSession` (W, EB) bucket selection (payload = W).
+    BucketRoute,
+    /// Host→device KV gather + upload (payload = bytes).
+    KvUpload,
+    /// Device-buffer KV reuse — the upload that didn't happen.
+    KvReuse,
+}
+
+/// Number of phases; sizes the per-thread phase-time accumulators.
+pub const N_PHASES: usize = 19;
+
+/// Every phase, in discriminant order.
+pub const ALL_PHASES: [Phase; N_PHASES] = [
+    Phase::Request,
+    Phase::QueueWait,
+    Phase::Admission,
+    Phase::BatchTick,
+    Phase::Encode,
+    Phase::SessionBegin,
+    Phase::Extend,
+    Phase::Fork,
+    Phase::Truncate,
+    Phase::Verify,
+    Phase::Gemm,
+    Phase::Attention,
+    Phase::PoolDispatch,
+    Phase::ArenaCow,
+    Phase::ArenaEvict,
+    Phase::ArenaHeal,
+    Phase::BucketRoute,
+    Phase::KvUpload,
+    Phase::KvReuse,
+];
+
+impl Phase {
+    /// Stable lowercase name used in trace JSON and docs.
+    pub fn name(self) -> &'static str {
+        match self {
+            Phase::Request => "request",
+            Phase::QueueWait => "queue_wait",
+            Phase::Admission => "admission",
+            Phase::BatchTick => "batch_tick",
+            Phase::Encode => "encode",
+            Phase::SessionBegin => "session_begin",
+            Phase::Extend => "extend",
+            Phase::Fork => "fork",
+            Phase::Truncate => "truncate",
+            Phase::Verify => "verify",
+            Phase::Gemm => "gemm",
+            Phase::Attention => "attention",
+            Phase::PoolDispatch => "pool_dispatch",
+            Phase::ArenaCow => "arena_cow",
+            Phase::ArenaEvict => "arena_evict",
+            Phase::ArenaHeal => "arena_heal",
+            Phase::BucketRoute => "bucket_route",
+            Phase::KvUpload => "kv_upload",
+            Phase::KvReuse => "kv_reuse",
+        }
+    }
+}
+
+/// One completed span. Fixed-size (`Copy`) so ring pushes never
+/// allocate.
+#[derive(Clone, Copy, Debug)]
+pub struct Event {
+    /// Process-unique span id (never 0).
+    pub id: u64,
+    /// Enclosing span's id on the same thread, or 0 for a root span.
+    pub parent: u64,
+    pub phase: Phase,
+    /// Nanoseconds since the process trace epoch.
+    pub t_start_ns: u64,
+    pub t_end_ns: u64,
+    /// Phase-specific magnitude (MACs, bytes, rows, pages…).
+    pub payload: u64,
+    /// Track id: real thread counter, or a synthetic per-request track
+    /// (`TRACK_BASE + n`) for overlapping request/queue-wait intervals.
+    pub tid: u64,
+}
+
+/// Synthetic-track offset for [`record_manual`] request tracks; keeps
+/// them visually separate from real thread tracks in Perfetto.
+pub const TRACK_BASE: u64 = 1_000_000;
+
+fn epoch() -> Instant {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    *EPOCH.get_or_init(Instant::now)
+}
+
+/// Nanoseconds since the process trace epoch (first trace touch).
+pub fn now_ns() -> u64 {
+    epoch().elapsed().as_nanos() as u64
+}
+
+// 0 = uninitialised, 1 = off, 2 = on. Lazily folded from RXNSPEC_TRACE
+// so the env read happens once, off the hot path.
+static GATE: AtomicU8 = AtomicU8::new(0);
+
+/// Is tracing live? One relaxed load on the hot path.
+#[inline]
+pub fn enabled() -> bool {
+    match GATE.load(Ordering::Relaxed) {
+        0 => init_gate(),
+        g => g == 2,
+    }
+}
+
+#[cold]
+fn init_gate() -> bool {
+    let on = std::env::var("RXNSPEC_TRACE")
+        .map(|v| {
+            let v = v.trim().to_ascii_lowercase();
+            v == "1" || v == "on" || v == "true" || v == "yes"
+        })
+        .unwrap_or(false);
+    let _ = epoch(); // anchor the clock before any span reads it
+    GATE.store(if on { 2 } else { 1 }, Ordering::Relaxed);
+    on
+}
+
+/// Programmatic override of the `RXNSPEC_TRACE` gate (used by
+/// `serve --trace`, benches, and tests).
+pub fn set_enabled(on: bool) {
+    let _ = epoch();
+    GATE.store(if on { 2 } else { 1 }, Ordering::Relaxed);
+}
+
+fn ring_capacity() -> usize {
+    static CAP: OnceLock<usize> = OnceLock::new();
+    *CAP.get_or_init(|| {
+        std::env::var("RXNSPEC_TRACE_BUF")
+            .ok()
+            .and_then(|v| v.trim().parse::<usize>().ok())
+            .filter(|&n| n >= 16)
+            .unwrap_or(65_536)
+    })
+}
+
+/// Fixed-capacity overwrite-oldest event buffer; one per thread.
+struct Ring {
+    buf: Vec<Event>,
+    cap: usize,
+    head: usize,
+    len: usize,
+    dropped: u64,
+}
+
+impl Ring {
+    fn new(cap: usize) -> Self {
+        Ring { buf: Vec::new(), cap, head: 0, len: 0, dropped: 0 }
+    }
+
+    fn push(&mut self, ev: Event) {
+        if self.len < self.cap {
+            self.buf.push(ev);
+            self.len += 1;
+        } else {
+            // Full: overwrite the oldest slot and advance.
+            self.buf[self.head] = ev;
+            self.head = (self.head + 1) % self.cap;
+            self.dropped += 1;
+        }
+    }
+
+    /// Events oldest-first.
+    fn chrono(&self) -> Vec<Event> {
+        let mut out = Vec::with_capacity(self.len);
+        out.extend_from_slice(&self.buf[self.head..self.len]);
+        out.extend_from_slice(&self.buf[..self.head]);
+        out
+    }
+
+    fn clear(&mut self) {
+        self.buf.clear();
+        self.head = 0;
+        self.len = 0;
+        self.dropped = 0;
+    }
+}
+
+fn registry() -> &'static Mutex<Vec<Arc<Mutex<Ring>>>> {
+    static REG: OnceLock<Mutex<Vec<Arc<Mutex<Ring>>>>> = OnceLock::new();
+    REG.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+fn lock_poison_ok<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+static NEXT_ID: AtomicU64 = AtomicU64::new(1);
+static NEXT_TID: AtomicU64 = AtomicU64::new(1);
+
+fn next_id() -> u64 {
+    NEXT_ID.fetch_add(1, Ordering::Relaxed)
+}
+
+struct ThreadTrace {
+    ring: Arc<Mutex<Ring>>,
+    stack: Vec<u64>,
+    phase_ns: [u64; N_PHASES],
+    tid: u64,
+}
+
+impl ThreadTrace {
+    fn register() -> Self {
+        let ring = Arc::new(Mutex::new(Ring::new(ring_capacity())));
+        lock_poison_ok(registry()).push(Arc::clone(&ring));
+        ThreadTrace {
+            ring,
+            stack: Vec::with_capacity(16),
+            phase_ns: [0; N_PHASES],
+            tid: NEXT_TID.fetch_add(1, Ordering::Relaxed),
+        }
+    }
+}
+
+thread_local! {
+    static TT: RefCell<ThreadTrace> = RefCell::new(ThreadTrace::register());
+}
+
+/// RAII span guard: records the enclosing span as parent on
+/// construction, pushes the completed [`Event`] on drop. Obtained from
+/// [`span`] or [`trace_span!`](crate::trace_span).
+pub struct TraceScope {
+    active: bool,
+    id: u64,
+    parent: u64,
+    phase: Phase,
+    t_start_ns: u64,
+    payload: u64,
+}
+
+impl TraceScope {
+    /// Update the payload after the measured work (e.g. accepted draft
+    /// tokens, gathered bytes) is known.
+    pub fn set_payload(&mut self, payload: u64) {
+        self.payload = payload;
+    }
+}
+
+/// Open a span for `phase`. No-op (no TLS, no clock) when tracing is
+/// disabled; prefer [`trace_span!`](crate::trace_span), which also
+/// skips payload evaluation.
+pub fn span(phase: Phase, payload: u64) -> TraceScope {
+    if !enabled() {
+        return TraceScope { active: false, id: 0, parent: 0, phase, t_start_ns: 0, payload: 0 };
+    }
+    let id = next_id();
+    let parent = TT
+        .try_with(|t| {
+            let mut t = t.borrow_mut();
+            let p = t.stack.last().copied().unwrap_or(0);
+            t.stack.push(id);
+            p
+        })
+        .unwrap_or(0);
+    TraceScope { active: true, id, parent, phase, t_start_ns: now_ns(), payload }
+}
+
+impl Drop for TraceScope {
+    fn drop(&mut self) {
+        if !self.active {
+            return;
+        }
+        let t_end_ns = now_ns();
+        let ev = Event {
+            id: self.id,
+            parent: self.parent,
+            phase: self.phase,
+            t_start_ns: self.t_start_ns,
+            t_end_ns,
+            payload: self.payload,
+            tid: 0, // filled from TLS below
+        };
+        // try_with: the TLS slot may already be torn down during thread
+        // exit; losing that tail span is preferable to a panic in drop.
+        let _ = TT.try_with(|t| {
+            let mut t = t.borrow_mut();
+            if t.stack.last() == Some(&self.id) {
+                t.stack.pop();
+            } else {
+                t.stack.retain(|&x| x != self.id);
+            }
+            t.phase_ns[self.phase as usize] += t_end_ns.saturating_sub(self.t_start_ns);
+            let tid = t.tid;
+            lock_poison_ok(&t.ring).push(Event { tid, ..ev });
+        });
+    }
+}
+
+/// Open a phase span, skipping even payload evaluation when tracing is
+/// off. Bind the result: `let _g = trace_span!(Phase::Gemm, macs);` —
+/// the span closes when `_g` drops.
+#[macro_export]
+macro_rules! trace_span {
+    ($phase:expr) => {
+        if $crate::trace::enabled() {
+            Some($crate::trace::span($phase, 0))
+        } else {
+            None
+        }
+    };
+    ($phase:expr, $payload:expr) => {
+        if $crate::trace::enabled() {
+            Some($crate::trace::span($phase, $payload))
+        } else {
+            None
+        }
+    };
+}
+
+/// Record a completed interval directly, bypassing the thread span
+/// stack — for intervals that overlap on one thread (per-request wall
+/// time and queue wait in the continuous-batching loop). `track`
+/// selects a synthetic tid (`TRACK_BASE + track`) so each request gets
+/// its own Perfetto row.
+pub fn record_manual(phase: Phase, t_start_ns: u64, t_end_ns: u64, payload: u64, track: u64) {
+    if !enabled() {
+        return;
+    }
+    let ev = Event {
+        id: next_id(),
+        parent: 0,
+        phase,
+        t_start_ns,
+        t_end_ns: t_end_ns.max(t_start_ns),
+        payload,
+        tid: TRACK_BASE + track,
+    };
+    let _ = TT.try_with(|t| {
+        let t = t.borrow();
+        lock_poison_ok(&t.ring).push(ev);
+    });
+}
+
+/// Cumulative nanoseconds spent per phase *on this thread*; diff two
+/// snapshots around a decode call to attribute its wall time. Zeros
+/// while tracing is disabled.
+pub fn thread_phase_ns() -> [u64; N_PHASES] {
+    if !enabled() {
+        return [0; N_PHASES];
+    }
+    TT.try_with(|t| t.borrow().phase_ns).unwrap_or([0; N_PHASES])
+}
+
+/// This thread's trace track id (test hook for filtering snapshots).
+pub fn current_tid() -> u64 {
+    TT.try_with(|t| t.borrow().tid).unwrap_or(0)
+}
+
+/// Copy every ring's events, oldest-first per thread, sorted by start
+/// time. Non-destructive: the rings keep their contents.
+pub fn snapshot_events() -> Vec<Event> {
+    let rings: Vec<Arc<Mutex<Ring>>> = lock_poison_ok(registry()).iter().cloned().collect();
+    let mut out = Vec::new();
+    for r in &rings {
+        out.extend(lock_poison_ok(r).chrono());
+    }
+    out.sort_by_key(|e| (e.t_start_ns, e.id));
+    out
+}
+
+/// Total events overwritten after their ring filled (coverage caveat
+/// for long traces; raise `RXNSPEC_TRACE_BUF`).
+pub fn dropped_events() -> u64 {
+    let rings: Vec<Arc<Mutex<Ring>>> = lock_poison_ok(registry()).iter().cloned().collect();
+    rings.iter().map(|r| lock_poison_ok(r).dropped).sum()
+}
+
+/// Empty every ring and the exemplar store (test / re-arm hook).
+pub fn clear() {
+    let rings: Vec<Arc<Mutex<Ring>>> = lock_poison_ok(registry()).iter().cloned().collect();
+    for r in &rings {
+        lock_poison_ok(r).clear();
+    }
+    lock_poison_ok(exemplar_store()).clear();
+}
+
+/// A retained worst-case request: its span window plus a snapshot of
+/// every event overlapping it, immune to later ring wrap-around.
+pub struct Exemplar {
+    pub label: String,
+    pub t_start_ns: u64,
+    pub t_end_ns: u64,
+    pub events: Vec<Event>,
+}
+
+impl Exemplar {
+    pub fn dur_ns(&self) -> u64 {
+        self.t_end_ns.saturating_sub(self.t_start_ns)
+    }
+}
+
+fn exemplar_store() -> &'static Mutex<Vec<Exemplar>> {
+    static STORE: OnceLock<Mutex<Vec<Exemplar>>> = OnceLock::new();
+    STORE.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+fn exemplar_cap() -> usize {
+    static CAP: OnceLock<usize> = OnceLock::new();
+    *CAP.get_or_init(|| {
+        std::env::var("RXNSPEC_TRACE_EXEMPLARS")
+            .ok()
+            .and_then(|v| v.trim().parse::<usize>().ok())
+            .unwrap_or(4)
+    })
+}
+
+/// Offer a completed request to the worst-N store. If it beats the
+/// current floor, the events overlapping `[t_start_ns, t_end_ns]` are
+/// snapshotted and retained with it. Cheap rejection first: the ring
+/// copy only happens for qualifying requests.
+pub fn note_request(label: &str, t_start_ns: u64, t_end_ns: u64) {
+    if !enabled() {
+        return;
+    }
+    note_request_with_cap(label, t_start_ns, t_end_ns, exemplar_cap());
+}
+
+fn note_request_with_cap(label: &str, t_start_ns: u64, t_end_ns: u64, cap: usize) {
+    if cap == 0 {
+        return;
+    }
+    let dur = t_end_ns.saturating_sub(t_start_ns);
+    {
+        let store = lock_poison_ok(exemplar_store());
+        if store.len() >= cap && store.iter().all(|e| e.dur_ns() >= dur) {
+            return; // slower than every retained exemplar
+        }
+    }
+    // Snapshot outside the store lock (snapshot takes the registry and
+    // ring locks), then insert.
+    let events: Vec<Event> = snapshot_events()
+        .into_iter()
+        .filter(|e| e.t_end_ns >= t_start_ns && e.t_start_ns <= t_end_ns)
+        .collect();
+    let mut store = lock_poison_ok(exemplar_store());
+    store.push(Exemplar { label: label.to_string(), t_start_ns, t_end_ns, events });
+    store.sort_by_key(|e| std::cmp::Reverse(e.dur_ns()));
+    store.truncate(cap);
+}
+
+/// Worst-N exemplars as `(label, start_ns, end_ns, retained events)`,
+/// slowest first.
+pub fn exemplar_summaries() -> Vec<(String, u64, u64, usize)> {
+    lock_poison_ok(exemplar_store())
+        .iter()
+        .map(|e| (e.label.clone(), e.t_start_ns, e.t_end_ns, e.events.len()))
+        .collect()
+}
+
+fn push_event_json(out: &mut String, ev: &Event, tid: u64) {
+    use std::fmt::Write as _;
+    let ts_us = ev.t_start_ns as f64 / 1000.0;
+    let dur_us = ev.t_end_ns.saturating_sub(ev.t_start_ns) as f64 / 1000.0;
+    let _ = write!(
+        out,
+        "{{\"name\":\"{}\",\"cat\":\"rxnspec\",\"ph\":\"X\",\"ts\":{:.3},\"dur\":{:.3},\
+         \"pid\":1,\"tid\":{},\"args\":{{\"id\":{},\"parent\":{},\"payload\":{}}}}}",
+        ev.phase.name(),
+        ts_us,
+        dur_us,
+        tid,
+        ev.id,
+        ev.parent,
+        ev.payload
+    );
+}
+
+/// Render events (plus retained exemplars on their own tracks) as
+/// Chrome trace-event JSON — one line, Perfetto-loadable. Timestamps
+/// are microseconds since the trace epoch.
+pub fn chrome_trace_json(events: &[Event], exemplars: &[Exemplar]) -> String {
+    let mut out = String::with_capacity(128 + events.len() * 160);
+    out.push_str("{\"traceEvents\":[");
+    let mut first = true;
+    for ev in events {
+        if !first {
+            out.push(',');
+        }
+        first = false;
+        push_event_json(&mut out, ev, ev.tid);
+    }
+    // Exemplar span trees replay on dedicated tracks so the worst
+    // requests stay inspectable after the live rings have wrapped.
+    for (i, ex) in exemplars.iter().enumerate() {
+        let track = TRACK_BASE * 2 + i as u64;
+        if !first {
+            out.push(',');
+        }
+        first = false;
+        use std::fmt::Write as _;
+        let _ = write!(
+            out,
+            "{{\"name\":\"exemplar:{}\",\"cat\":\"rxnspec\",\"ph\":\"X\",\"ts\":{:.3},\
+             \"dur\":{:.3},\"pid\":1,\"tid\":{},\"args\":{{\"payload\":0}}}}",
+            ex.label.replace(['"', '\\'], "_"),
+            ex.t_start_ns as f64 / 1000.0,
+            ex.dur_ns() as f64 / 1000.0,
+            track
+        );
+        for ev in &ex.events {
+            out.push(',');
+            push_event_json(&mut out, ev, track);
+        }
+    }
+    out.push_str("]}");
+    out
+}
+
+/// Snapshot everything recorded so far and render it as Chrome
+/// trace-event JSON.
+pub fn export_chrome_json() -> String {
+    let events = snapshot_events();
+    let store = lock_poison_ok(exemplar_store());
+    chrome_trace_json(&events, &store)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Tests that flip the process-global gate serialise here; other
+    /// suites run concurrently in the same binary, so assertions below
+    /// filter to this thread's own tid.
+    pub(crate) fn test_gate() -> MutexGuard<'static, ()> {
+        static M: OnceLock<Mutex<()>> = OnceLock::new();
+        lock_poison_ok(M.get_or_init(|| Mutex::new(())))
+    }
+
+    #[test]
+    fn disabled_span_records_nothing() {
+        let _g = test_gate();
+        set_enabled(false);
+        let my = current_tid();
+        let before = snapshot_events().iter().filter(|e| e.tid == my).count();
+        {
+            let _s = span(Phase::Gemm, 42);
+        }
+        let after = snapshot_events().iter().filter(|e| e.tid == my).count();
+        assert_eq!(before, after);
+    }
+
+    #[test]
+    fn spans_nest_and_record() {
+        let _g = test_gate();
+        set_enabled(true);
+        let (outer_id, inner_id);
+        {
+            let s = span(Phase::Extend, 7);
+            outer_id = s.id;
+            {
+                let i = span(Phase::Gemm, 99);
+                inner_id = i.id;
+            }
+        }
+        set_enabled(false);
+        let evs = snapshot_events();
+        let outer = evs.iter().find(|e| e.id == outer_id).expect("outer recorded");
+        let inner = evs.iter().find(|e| e.id == inner_id).expect("inner recorded");
+        assert_eq!(inner.parent, outer_id);
+        assert_eq!(outer.phase, Phase::Extend);
+        assert_eq!(inner.phase, Phase::Gemm);
+        assert_eq!(inner.payload, 99);
+        assert!(inner.t_start_ns >= outer.t_start_ns);
+        assert!(inner.t_end_ns <= outer.t_end_ns);
+        assert!(outer.parent != outer_id);
+    }
+
+    #[test]
+    fn phase_accumulator_advances() {
+        let _g = test_gate();
+        set_enabled(true);
+        let before = thread_phase_ns();
+        {
+            let _s = span(Phase::Verify, 0);
+            std::hint::black_box(0u64);
+        }
+        let after = thread_phase_ns();
+        set_enabled(false);
+        assert!(after[Phase::Verify as usize] >= before[Phase::Verify as usize]);
+        // Drop is not instantaneous-free, but must have added something.
+        assert!(after[Phase::Verify as usize] > before[Phase::Verify as usize]);
+    }
+
+    #[test]
+    fn ring_overwrites_oldest_when_full() {
+        let mut r = Ring::new(4);
+        for i in 0..6u64 {
+            r.push(Event {
+                id: i + 1,
+                parent: 0,
+                phase: Phase::Gemm,
+                t_start_ns: i,
+                t_end_ns: i + 1,
+                payload: 0,
+                tid: 1,
+            });
+        }
+        assert_eq!(r.dropped, 2);
+        let ids: Vec<u64> = r.chrono().iter().map(|e| e.id).collect();
+        assert_eq!(ids, vec![3, 4, 5, 6]);
+    }
+
+    #[test]
+    fn manual_records_land_on_synthetic_track() {
+        let _g = test_gate();
+        set_enabled(true);
+        record_manual(Phase::Request, 10, 50, 3, 7);
+        set_enabled(false);
+        let evs = snapshot_events();
+        let ev = evs
+            .iter()
+            .find(|e| e.tid == TRACK_BASE + 7 && e.phase == Phase::Request && e.payload == 3)
+            .expect("manual event recorded");
+        assert_eq!(ev.t_start_ns, 10);
+        assert_eq!(ev.t_end_ns, 50);
+    }
+
+    #[test]
+    fn exemplar_store_keeps_worst_n() {
+        let _g = test_gate();
+        set_enabled(true);
+        clear();
+        for (i, dur) in [50u64, 10, 90, 30, 70].iter().enumerate() {
+            note_request_with_cap(&format!("req{i}"), 1000, 1000 + dur, 3);
+        }
+        set_enabled(false);
+        let got = exemplar_summaries();
+        let durs: Vec<u64> = got.iter().map(|(_, s, e, _)| e - s).collect();
+        assert_eq!(durs, vec![90, 70, 50]);
+        clear();
+    }
+
+    #[test]
+    fn chrome_json_is_valid_and_shaped() {
+        let evs = [
+            Event {
+                id: 1,
+                parent: 0,
+                phase: Phase::Encode,
+                t_start_ns: 1_000,
+                t_end_ns: 5_500,
+                payload: 2,
+                tid: 1,
+            },
+            Event {
+                id: 2,
+                parent: 1,
+                phase: Phase::Gemm,
+                t_start_ns: 2_000,
+                t_end_ns: 3_000,
+                payload: 64,
+                tid: 1,
+            },
+        ];
+        let s = chrome_trace_json(&evs, &[]);
+        assert!(!s.contains('\n'), "TRACE replies must stay single-line");
+        let v = crate::bench::json::parse(&s).expect("chrome trace JSON parses");
+        let arr = match v.get("traceEvents") {
+            Some(crate::bench::json::Val::Arr(a)) => a,
+            other => panic!("traceEvents missing or not an array: {other:?}"),
+        };
+        assert_eq!(arr.len(), 2);
+        for (ev, want) in arr.iter().zip(["encode", "gemm"]) {
+            match ev.get("name") {
+                Some(crate::bench::json::Val::Str(n)) => assert_eq!(n, want),
+                other => panic!("name missing: {other:?}"),
+            }
+            match ev.get("ph") {
+                Some(crate::bench::json::Val::Str(p)) => assert_eq!(p, "X"),
+                other => panic!("ph missing: {other:?}"),
+            }
+            assert!(matches!(ev.get("ts"), Some(crate::bench::json::Val::Num(_))));
+            assert!(matches!(ev.get("dur"), Some(crate::bench::json::Val::Num(_))));
+        }
+        // ts/dur are µs: event 1 spans [1.0, 5.5]µs.
+        match arr[0].get("dur") {
+            Some(crate::bench::json::Val::Num(d)) => assert!((d - 4.5).abs() < 1e-9),
+            other => panic!("dur missing: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn trace_span_macro_skips_payload_when_off() {
+        let _g = test_gate();
+        set_enabled(false);
+        let mut evaluated = false;
+        let g = trace_span!(Phase::Fork, {
+            evaluated = true;
+            1u64
+        });
+        assert!(g.is_none());
+        assert!(!evaluated, "payload must not be evaluated when tracing is off");
+    }
+}

@@ -1,0 +1,194 @@
+//! Trace-layer correctness properties (PR 7 acceptance criteria):
+//!
+//! * span trees are **well-formed** per thread — every child interval
+//!   nests inside its parent, siblings never overlap;
+//! * tracing is **output-invariant** — decoded tokens and the
+//!   DecodeStats token counters are bit-identical with `RXNSPEC_TRACE`
+//!   on and off (only the `*_us` phase fields, documented as
+//!   trace-populated, may differ);
+//! * the Chrome trace-event export is a single line of valid JSON with
+//!   the shape Perfetto expects.
+//!
+//! Tests in this binary toggle the process-wide trace gate, so they
+//! serialize on one mutex and filter snapshots where thread identity
+//! matters.
+
+use std::sync::{Mutex, MutexGuard};
+
+use rxnspec::bench::json::{self, Val};
+use rxnspec::decoding::{greedy_batch, spec_greedy, DecodeOutput};
+use rxnspec::draft::DraftConfig;
+use rxnspec::testutil::CopyModel;
+use rxnspec::trace::{self, Event, Phase, TRACK_BASE};
+use rxnspec::vocab::{BOS_ID, EOS_ID};
+
+static GATE: Mutex<()> = Mutex::new(());
+
+fn gate() -> MutexGuard<'static, ()> {
+    GATE.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn srcs() -> Vec<Vec<i64>> {
+    vec![
+        vec![BOS_ID, 10, 11, 12, 13, EOS_ID],
+        vec![BOS_ID, 20, 21, 22, 23, 24, 25, EOS_ID],
+        vec![BOS_ID, 30, 31, EOS_ID],
+    ]
+}
+
+fn run_all(m: &CopyModel) -> Vec<DecodeOutput> {
+    let seqs = srcs();
+    let refs: Vec<&[i64]> = seqs.iter().map(|s| s.as_slice()).collect();
+    let mut outs = greedy_batch(m, &refs).unwrap();
+    for s in &seqs {
+        outs.push(spec_greedy(m, s, &DraftConfig::new(4)).unwrap());
+    }
+    outs
+}
+
+#[test]
+fn tracing_never_changes_outputs_or_token_counters() {
+    let _g = gate();
+    let m = CopyModel::new(96, 96, 40);
+
+    trace::set_enabled(false);
+    let off = run_all(&m);
+
+    trace::set_enabled(true);
+    trace::clear();
+    let on = run_all(&m);
+    trace::set_enabled(false);
+
+    assert_eq!(off.len(), on.len());
+    for (a, b) in off.iter().zip(&on) {
+        assert_eq!(a.hyps.len(), b.hyps.len());
+        for (ha, hb) in a.hyps.iter().zip(&b.hyps) {
+            assert_eq!(ha.tokens, hb.tokens, "tracing changed decoded tokens");
+            assert_eq!(ha.score, hb.score, "tracing changed a score bit");
+        }
+        assert_eq!(a.stats.decoder_calls, b.stats.decoder_calls);
+        assert_eq!(a.stats.encoder_calls, b.stats.encoder_calls);
+        assert_eq!(a.stats.decoder_rows, b.stats.decoder_rows);
+        assert_eq!(a.stats.tokens_computed, b.stats.tokens_computed);
+        assert_eq!(a.stats.tokens_reused, b.stats.tokens_reused);
+        assert_eq!(
+            a.stats.acceptance.total_tokens,
+            b.stats.acceptance.total_tokens
+        );
+        // The phase fields are the one documented difference: zero when
+        // off, trace-populated when on.
+        assert_eq!(a.stats.encode_us, 0);
+        assert_eq!(a.stats.extend_us, 0);
+        assert_eq!(a.stats.verify_us, 0);
+    }
+}
+
+#[test]
+fn span_trees_are_well_formed_per_thread() {
+    let _g = gate();
+    let m = CopyModel::new(96, 96, 40);
+    trace::set_enabled(true);
+    trace::clear();
+    let _ = run_all(&m);
+    let events = trace::snapshot_events();
+    trace::set_enabled(false);
+
+    // Real thread spans only; synthetic request tracks are flat
+    // intervals recorded outside the span-stack discipline.
+    let spans: Vec<&Event> = events.iter().filter(|e| e.tid < TRACK_BASE).collect();
+    assert!(!spans.is_empty(), "a traced decode must record spans");
+    assert!(
+        spans.iter().any(|e| e.phase == Phase::Extend),
+        "decode loop must emit extend spans"
+    );
+    assert!(
+        spans.iter().any(|e| e.phase == Phase::Encode),
+        "decode prologue must emit an encode span"
+    );
+
+    let by_id: std::collections::HashMap<u64, &Event> =
+        spans.iter().map(|e| (e.id, *e)).collect();
+    for e in &spans {
+        assert!(e.t_start_ns <= e.t_end_ns, "span {} ends before it starts", e.id);
+        if e.parent == 0 {
+            continue;
+        }
+        // A parent id may be missing only if the ring overwrote it; with
+        // the default 65536-event capacity this workload fits entirely.
+        let p = by_id
+            .get(&e.parent)
+            .unwrap_or_else(|| panic!("span {} has orphan parent {}", e.id, e.parent));
+        assert_eq!(p.tid, e.tid, "parent/child spans must share a thread");
+        assert!(
+            p.t_start_ns <= e.t_start_ns && e.t_end_ns <= p.t_end_ns,
+            "child span {} [{}, {}] escapes parent {} [{}, {}]",
+            e.id,
+            e.t_start_ns,
+            e.t_end_ns,
+            p.id,
+            p.t_start_ns,
+            p.t_end_ns
+        );
+    }
+
+    // Siblings (same thread, same parent) never overlap: on one thread
+    // two spans with a common parent are strictly sequential.
+    let mut groups: std::collections::HashMap<(u64, u64), Vec<&Event>> =
+        std::collections::HashMap::new();
+    for e in &spans {
+        groups.entry((e.tid, e.parent)).or_default().push(e);
+    }
+    for ((tid, parent), mut sibs) in groups {
+        sibs.sort_by_key(|e| (e.t_start_ns, e.id));
+        for w in sibs.windows(2) {
+            assert!(
+                w[0].t_end_ns <= w[1].t_start_ns,
+                "sibling spans {} and {} overlap (tid {tid}, parent {parent})",
+                w[0].id,
+                w[1].id
+            );
+        }
+    }
+}
+
+#[test]
+fn chrome_export_is_single_line_valid_trace_json() {
+    let _g = gate();
+    let m = CopyModel::new(96, 96, 40);
+    trace::set_enabled(true);
+    trace::clear();
+    let _ = run_all(&m);
+    let out = trace::export_chrome_json();
+    trace::set_enabled(false);
+
+    assert!(!out.contains('\n'), "export must stay single-line for the TRACE command");
+    let v = json::parse(&out).expect("export parses as JSON");
+    let Some(Val::Arr(evs)) = v.get("traceEvents") else {
+        panic!("traceEvents missing or not an array");
+    };
+    assert!(!evs.is_empty(), "a traced run must export events");
+    let phase_names: Vec<&str> = rxnspec::trace::ALL_PHASES.iter().map(|p| p.name()).collect();
+    for ev in evs {
+        match ev.get("ph") {
+            Some(Val::Str(s)) => assert_eq!(s, "X", "complete events only"),
+            other => panic!("bad ph field: {other:?}"),
+        }
+        match ev.get("cat") {
+            Some(Val::Str(s)) => assert_eq!(s, "rxnspec"),
+            other => panic!("bad cat field: {other:?}"),
+        }
+        match ev.get("name") {
+            Some(Val::Str(s)) => assert!(
+                phase_names.contains(&s.as_str()) || s.starts_with("exemplar:"),
+                "unknown event name {s:?}"
+            ),
+            other => panic!("bad name field: {other:?}"),
+        }
+        for key in ["ts", "dur", "pid", "tid"] {
+            match ev.get(key) {
+                Some(Val::Num(n)) => assert!(n.is_finite() && *n >= 0.0, "bad {key}"),
+                other => panic!("bad {key} field: {other:?}"),
+            }
+        }
+    }
+}
