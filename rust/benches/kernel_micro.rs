@@ -508,6 +508,141 @@ fn main() -> anyhow::Result<()> {
         rows.push(m_on);
     }
 
+    // --- serving resilience smoke: supervised worker under chaos -------
+    // A seeded fault plan (one guaranteed panic + low-rate background
+    // chaos) against the queue/worker stack with tight deadlines, then a
+    // dump/reload warm-boot replay. Records the resilience counters the
+    // STATS line exposes so the trajectory catches containment
+    // regressions, not just throughput ones.
+    {
+        use rxnspec::cache::{dump_to_path, load_into, ServeCache};
+        use rxnspec::coordinator::{run_worker, DecodeMode, Job, Metrics, RequestQueue};
+        use rxnspec::faults::{FaultKind, FaultPlan, Trigger};
+        use rxnspec::vocab::Vocab;
+        use std::sync::atomic::Ordering;
+        use std::sync::{mpsc, Arc};
+        use std::time::Duration;
+
+        // Injected panics are this section's working fluid; keep their
+        // backtraces out of the bench log, leave real panics loud.
+        let hook = std::panic::take_hook();
+        std::panic::set_hook(Box::new(move |info| {
+            let injected = info
+                .payload()
+                .downcast_ref::<String>()
+                .map(|s| s.contains("injected fault"))
+                .or_else(|| {
+                    info.payload()
+                        .downcast_ref::<&str>()
+                        .map(|s| s.contains("injected fault"))
+                })
+                .unwrap_or(false);
+            if !injected {
+                hook(info);
+            }
+        }));
+
+        let vocab = Vocab::build(["CCONF", "c1ccccc1Br"])?;
+        let queries = ["CCO", "c1ccccc1", "NCCO", "BrCC", "FC", "c1ccccc1Br"];
+        let mode_for = |round: usize, i: usize| match (round + i) % 3 {
+            0 => DecodeMode::Greedy,
+            1 => DecodeMode::SpecGreedy { dl: 4 },
+            _ => DecodeMode::Beam { n: 2 },
+        };
+        let n_rounds = if smoke { 2 } else { 6 };
+        rxnspec::faults::install(
+            FaultPlan::new(0xBE7C)
+                .with("decoder.extend", FaultKind::Panic, Trigger::Nth(3))
+                .with("decoder.extend", FaultKind::Panic, Trigger::Prob(0.02))
+                .with("decoder.extend", FaultKind::Slow(1), Trigger::Prob(0.02)),
+        );
+        let queue: RequestQueue<Job> =
+            RequestQueue::with_capacity(4, Duration::from_millis(1), 16);
+        let metrics = Arc::new(Metrics::default());
+        let cache = ServeCache::default();
+        cache.bind_artifact_version(0xBE7C);
+        let mut rxs = Vec::new();
+        let mut busy = 0usize;
+        let mut n_sent = 0usize;
+        for round in 0..n_rounds {
+            for (i, q) in queries.iter().enumerate() {
+                let (tx, rx) = mpsc::channel();
+                n_sent += 1;
+                // Every third request carries an already-expired deadline:
+                // it must be shed at pop time, never decoded.
+                let deadline = (i % 3 == 2).then(Instant::now);
+                let job = Job {
+                    smiles: q.to_string(),
+                    resp: tx,
+                };
+                match queue.try_push(mode_for(round, i), job, deadline) {
+                    Ok(()) => rxs.push(rx),
+                    Err(_) => busy += 1,
+                }
+            }
+        }
+        queue.close();
+        let t0 = Instant::now();
+        run_worker(&backend, &vocab, &queue, &metrics, &cache);
+        let drain_ms = t0.elapsed().as_secs_f64() * 1e3;
+        rxnspec::faults::disarm();
+        let served = rxs
+            .iter()
+            .filter(|rx| matches!(rx.try_recv(), Ok(Ok(_))))
+            .count();
+        let shed = metrics.requests_shed.load(Ordering::Relaxed);
+        let retried = metrics.requests_retried.load(Ordering::Relaxed);
+        let contained = metrics.panics_contained.load(Ordering::Relaxed);
+        let degraded = metrics.degraded_ticks.load(Ordering::Relaxed);
+        assert!(contained >= 1, "the Nth(3) panic rule must be contained");
+        assert!(served > 0, "chaos must not wipe out the whole workload");
+
+        // Kill-and-restart: persist the survivors' cache pair, reload it
+        // into a fresh process-worth of state, replay one clean round.
+        let dump = std::env::temp_dir()
+            .join(format!("rxnspec-bench-{}-resil.dump", std::process::id()));
+        dump_to_path(&cache, &dump)?;
+        let cache2 = ServeCache::default();
+        cache2.bind_artifact_version(0xBE7C);
+        let restored = load_into(&cache2, &dump, 0xBE7C)?;
+        let queue2: RequestQueue<Job> = RequestQueue::new(4, Duration::from_millis(1));
+        let metrics2 = Arc::new(Metrics::default());
+        let mut rxs2 = Vec::new();
+        for (i, q) in queries.iter().enumerate() {
+            let (tx, rx) = mpsc::channel();
+            let job = Job {
+                smiles: q.to_string(),
+                resp: tx,
+            };
+            queue2.push(mode_for(0, i), job);
+            rxs2.push(rx);
+        }
+        queue2.close();
+        run_worker(&backend, &vocab, &queue2, &metrics2, &cache2);
+        let warm_hits = cache2.results().stats().warm_hits;
+        std::fs::remove_file(&dump).ok();
+
+        eprintln!(
+            "  resilience: {served}/{n_sent} served under chaos \
+             ({contained} panics contained, {retried} retried, {shed} shed, \
+             {busy} busy, {degraded} degraded ticks), drain {drain_ms:.1} ms, \
+             warm boot restored {} results → {warm_hits} warm hits",
+            restored.results,
+        );
+        entries.push(("resil_requests".into(), json::Val::num(n_sent as f64)));
+        entries.push(("resil_served_ok".into(), json::Val::num(served as f64)));
+        entries.push(("resil_requests_shed".into(), json::Val::num(shed as f64)));
+        entries.push(("resil_requests_busy".into(), json::Val::num(busy as f64)));
+        entries.push(("resil_requests_retried".into(), json::Val::num(retried as f64)));
+        entries.push((
+            "resil_panics_contained".into(),
+            json::Val::num(contained as f64),
+        ));
+        entries.push(("resil_degraded_ticks".into(), json::Val::num(degraded as f64)));
+        entries.push(("resil_drain_ms".into(), json::Val::num(drain_ms)));
+        entries.push(("resil_warm_hits".into(), json::Val::num(warm_hits as f64)));
+    }
+
     report(
         "kernel_micro",
         "Kernel layer — SIMD GEMM / pool dispatch / packed encode / fused extend",

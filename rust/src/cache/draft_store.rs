@@ -18,6 +18,8 @@ use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
+use crate::coordinator::lock_ok;
+
 use super::stats::DraftStoreStats;
 
 struct Entry {
@@ -61,7 +63,7 @@ impl DraftStore {
         if target.len() < self.window {
             return;
         }
-        let mut guard = self.inner.lock().unwrap();
+        let mut guard = lock_ok(&self.inner);
         let inner = &mut *guard;
         let mut recorded = 0u64;
         for start in 0..=(target.len() - self.window) {
@@ -87,7 +89,7 @@ impl DraftStore {
         if window.is_empty() {
             return;
         }
-        let mut guard = self.inner.lock().unwrap();
+        let mut guard = lock_ok(&self.inner);
         let inner = &mut *guard;
         inner.seq += 1;
         let seq = inner.seq;
@@ -108,7 +110,7 @@ impl DraftStore {
         if k == 0 {
             return Vec::new();
         }
-        let guard = self.inner.lock().unwrap();
+        let guard = lock_ok(&self.inner);
         let mut order: Vec<(u64, u64, &Vec<i64>)> = guard
             .counts
             .iter()
@@ -118,17 +120,55 @@ impl DraftStore {
         order.into_iter().take(k).map(|(_, _, w)| w.clone()).collect()
     }
 
+    /// Snapshot every indexed window as `(window, count)`, first-seen
+    /// order (ascending `seq`). Replaying through
+    /// [`DraftStore::import_counted`] in this order reproduces both the
+    /// counts and the deterministic tie-break order of `top_k`.
+    pub fn export(&self) -> Vec<(Vec<i64>, u64)> {
+        let guard = lock_ok(&self.inner);
+        let mut out: Vec<(u64, Vec<i64>, u64)> = guard
+            .counts
+            .iter()
+            .map(|(w, e)| (e.seq, w.clone(), e.count))
+            .collect();
+        out.sort_by_key(|(seq, _, _)| *seq);
+        out.into_iter().map(|(_, w, c)| (w, c)).collect()
+    }
+
+    /// Restore one window with an explicit occurrence count (warm boot
+    /// from a persisted dump). Gets a fresh `seq`, so dump order defines
+    /// the restored tie-break order; counts add if the window already
+    /// exists.
+    pub fn import_counted(&self, window: &[i64], count: u64) {
+        if window.is_empty() || count == 0 {
+            return;
+        }
+        let mut guard = lock_ok(&self.inner);
+        let inner = &mut *guard;
+        inner.seq += 1;
+        let seq = inner.seq;
+        inner
+            .counts
+            .entry(window.to_vec())
+            .and_modify(|e| e.count += count)
+            .or_insert(Entry { count, seq });
+        let evicted = evict_over_capacity(inner, self.capacity);
+        drop(guard);
+        self.recorded.fetch_add(count, Ordering::Relaxed);
+        self.evicted.fetch_add(evicted, Ordering::Relaxed);
+    }
+
     /// Drop every indexed window (model redeploy: mined windows are only
     /// valid per artifact version — a new model's targets are a new
     /// corpus). The observation sequence keeps counting so tie-break
     /// order stays monotonic across flushes.
     pub fn clear(&self) {
-        self.inner.lock().unwrap().counts.clear();
+        lock_ok(&self.inner).counts.clear();
     }
 
     /// Distinct windows currently indexed.
     pub fn len(&self) -> usize {
-        self.inner.lock().unwrap().counts.len()
+        lock_ok(&self.inner).counts.len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -213,6 +253,30 @@ mod tests {
         let top = s.top_k(4);
         assert!(top.contains(&vec![1, 1]), "established window must survive");
         assert!(top.contains(&vec![3, 3]), "fresh window rotates in");
+    }
+
+    #[test]
+    fn export_import_roundtrip_preserves_top_k_order() {
+        let s = DraftStore::new(2, 64);
+        s.record(&[1, 2]); // seq 1
+        s.record(&[3, 4]); // seq 2
+        s.record(&[3, 4]);
+        s.record(&[5, 6]); // seq 4
+        let dump = s.export();
+        assert_eq!(dump.len(), 3);
+        // First-seen order with counts intact.
+        assert_eq!(dump[0], (vec![1, 2], 1));
+        assert_eq!(dump[1], (vec![3, 4], 2));
+        assert_eq!(dump[2], (vec![5, 6], 1));
+        let s2 = DraftStore::new(2, 64);
+        for (w, c) in &dump {
+            s2.import_counted(w, *c);
+        }
+        assert_eq!(s2.top_k(3), s.top_k(3), "restored tie-break order must match");
+        // Zero-count and empty imports are ignored.
+        s2.import_counted(&[], 5);
+        s2.import_counted(&[9, 9], 0);
+        assert_eq!(s2.len(), 3);
     }
 
     #[test]

@@ -35,10 +35,12 @@
 //! Property tests in `rust/tests/cache_exactness.rs` pin all of this.
 
 mod draft_store;
+mod persist;
 mod result_cache;
 mod stats;
 
 pub use draft_store::DraftStore;
+pub use persist::{dump_to_path, load_into, LoadReport};
 pub use result_cache::ResultCache;
 pub use stats::{ArenaCounters, DraftStoreStats, ResultCacheStats};
 
@@ -136,6 +138,13 @@ impl ServeCache {
 
     pub fn enabled(&self) -> bool {
         self.cfg.enabled
+    }
+
+    /// The artifact version the pair is currently bound to (0 until
+    /// [`ServeCache::bind_artifact_version`] runs) — stamped into cache
+    /// dumps so a warm boot can reject a dump from a different model.
+    pub fn artifact_version(&self) -> u64 {
+        self.artifact_version.load(std::sync::atomic::Ordering::Relaxed)
     }
 
     pub fn config(&self) -> &CacheConfig {

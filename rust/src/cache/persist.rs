@@ -1,0 +1,309 @@
+//! Cache persistence: dump the [`ServeCache`] pair to a file on graceful
+//! drain, reload it on boot (warm start).
+//!
+//! Closes the ROADMAP "cache persistence" item: industrial traffic is
+//! repetitive across *process lifetimes* too — a redeploy that cold-boots
+//! the result cache and draft store throws away exactly the reuse the
+//! serving layer exists to capture. The dump is a plain tab-separated
+//! text file:
+//!
+//! ```text
+//! rxnspec-cache-dump\tv1
+//! version\t<artifact version, hex>
+//! R\t<tag hex>\t<query csv>\t<acceptance f64 bits hex>\t<n hyps>\t<smiles>\t<score bits hex>...
+//! D\t<window csv>\t<count>
+//! end\t<record count>
+//! ```
+//!
+//! Tab separation is safe because SMILES strings never contain
+//! whitespace; scores round-trip through `f64::to_bits` hex so reloaded
+//! predictions are **bit-identical** to what was served. `R` records are
+//! written least-recently-used first (the [`ResultCache::export`] order)
+//! so a capacity-bounded reload evicts the same entries the live cache
+//! would have; `D` records keep first-seen order so `top_k` tie-breaks
+//! survive the round trip.
+//!
+//! Versioning: the dump is stamped with the artifact version the cache
+//! was bound to. [`load_into`] refuses a dump whose stamp differs from
+//! the running backend's version — a model redeploy invalidates both
+//! stores (same rule as [`ResultCache::set_version`]'s
+//! flush-on-mismatch), and the server then simply boots cold.
+//!
+//! Crash safety: [`dump_to_path`] writes `<path>.tmp` and renames it into
+//! place, so a crash mid-dump leaves the previous dump (or no dump)
+//! intact, never a torn file.
+
+use std::fmt::Write as _;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::{CachedPrediction, ServeCache};
+
+const MAGIC: &str = "rxnspec-cache-dump\tv1";
+
+/// What a successful [`load_into`] restored.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct LoadReport {
+    /// Result-cache entries restored (marked warm).
+    pub results: usize,
+    /// Draft-store windows restored.
+    pub windows: usize,
+}
+
+fn csv_i64(v: &[i64]) -> String {
+    let mut s = String::new();
+    for (i, t) in v.iter().enumerate() {
+        if i > 0 {
+            s.push(',');
+        }
+        let _ = write!(s, "{t}");
+    }
+    s
+}
+
+fn parse_csv_i64(s: &str) -> Result<Vec<i64>> {
+    if s.is_empty() {
+        return Ok(Vec::new());
+    }
+    s.split(',')
+        .map(|t| t.parse::<i64>().with_context(|| format!("bad token id {t:?}")))
+        .collect()
+}
+
+/// Serialize the cache pair to `path` (write-tmp-then-rename). The dump
+/// is stamped with the cache's bound artifact version. Returns the
+/// number of records written.
+pub fn dump_to_path(cache: &ServeCache, path: &Path) -> Result<usize> {
+    let mut out = String::new();
+    out.push_str(MAGIC);
+    out.push('\n');
+    let _ = writeln!(out, "version\t{:x}", cache.artifact_version());
+    let mut n = 0usize;
+    for (tag, query, pred) in cache.results().export() {
+        let _ = write!(
+            out,
+            "R\t{tag:x}\t{}\t{:x}\t{}",
+            csv_i64(&query),
+            pred.acceptance_rate.to_bits(),
+            pred.hyps.len()
+        );
+        for (smiles, score) in &pred.hyps {
+            debug_assert!(
+                !smiles.chars().any(|c| c.is_whitespace()),
+                "SMILES must be whitespace-free"
+            );
+            let _ = write!(out, "\t{smiles}\t{:x}", score.to_bits());
+        }
+        out.push('\n');
+        n += 1;
+    }
+    for (window, count) in cache.drafts().export() {
+        let _ = writeln!(out, "D\t{}\t{count}", csv_i64(&window));
+        n += 1;
+    }
+    let _ = writeln!(out, "end\t{n}");
+    let tmp = path.with_extension("tmp");
+    std::fs::write(&tmp, out).with_context(|| format!("writing {}", tmp.display()))?;
+    std::fs::rename(&tmp, path).with_context(|| format!("renaming into {}", path.display()))?;
+    Ok(n)
+}
+
+/// Restore a dump into `cache`, refusing it unless its stamped artifact
+/// version equals `expect_version` (the running backend's). On a refusal
+/// or parse error the cache is left untouched by result entries parsed
+/// so far only if the error occurs before any record — records stream in
+/// as parsed, so callers treat any `Err` as "boot cold": version and
+/// magic are validated *before* the first record, and a torn tail (a
+/// missing/`end` mismatch) aborts with the restored prefix still valid
+/// (every restored entry is individually well-formed and version-bound).
+pub fn load_into(cache: &ServeCache, path: &Path, expect_version: u64) -> Result<LoadReport> {
+    let text =
+        std::fs::read_to_string(path).with_context(|| format!("reading {}", path.display()))?;
+    let mut lines = text.lines();
+    match lines.next() {
+        Some(l) if l == MAGIC => {}
+        other => bail!("not a rxnspec cache dump (header {other:?})"),
+    }
+    let vline = lines.next().context("dump truncated before version line")?;
+    let version = vline
+        .strip_prefix("version\t")
+        .with_context(|| format!("bad version line {vline:?}"))
+        .and_then(|h| u64::from_str_radix(h, 16).context("bad version hex"))?;
+    if version != expect_version {
+        bail!(
+            "cache dump artifact version mismatch: dump {version:#x}, running model \
+             {expect_version:#x} — booting cold"
+        );
+    }
+    let mut report = LoadReport::default();
+    let mut seen = 0usize;
+    let mut ended = false;
+    for line in lines {
+        if line.is_empty() {
+            continue;
+        }
+        let mut f = line.split('\t');
+        match f.next() {
+            Some("R") => {
+                let tag = f
+                    .next()
+                    .context("R: missing tag")
+                    .and_then(|h| u64::from_str_radix(h, 16).context("R: bad tag hex"))?;
+                let query = parse_csv_i64(f.next().context("R: missing query")?)?;
+                let acc = f
+                    .next()
+                    .context("R: missing acceptance")
+                    .and_then(|h| u64::from_str_radix(h, 16).context("R: bad acceptance hex"))
+                    .map(f64::from_bits)?;
+                let n_hyps: usize = f.next().context("R: missing hyp count")?.parse()?;
+                let mut hyps = Vec::with_capacity(n_hyps);
+                for i in 0..n_hyps {
+                    let smiles = f.next().with_context(|| format!("R: missing hyp {i}"))?;
+                    let score = f
+                        .next()
+                        .with_context(|| format!("R: missing score {i}"))
+                        .and_then(|h| u64::from_str_radix(h, 16).context("R: bad score hex"))
+                        .map(f64::from_bits)?;
+                    hyps.push((smiles.to_string(), score));
+                }
+                cache.results().insert_warm(
+                    tag,
+                    query,
+                    CachedPrediction {
+                        hyps,
+                        acceptance_rate: acc,
+                    },
+                );
+                report.results += 1;
+                seen += 1;
+            }
+            Some("D") => {
+                let window = parse_csv_i64(f.next().context("D: missing window")?)?;
+                let count: u64 = f.next().context("D: missing count")?.parse()?;
+                cache.drafts().import_counted(&window, count);
+                report.windows += 1;
+                seen += 1;
+            }
+            Some("end") => {
+                let n: usize = f.next().context("end: missing count")?.parse()?;
+                if n != seen {
+                    bail!("cache dump truncated: trailer says {n} records, found {seen}");
+                }
+                ended = true;
+                break;
+            }
+            other => bail!("unknown dump record {other:?}"),
+        }
+    }
+    if !ended {
+        bail!("cache dump truncated: no end trailer");
+    }
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cache::CacheConfig;
+
+    fn tmp_path(name: &str) -> std::path::PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("rxnspec-persist-{}-{name}.dump", std::process::id()));
+        p
+    }
+
+    fn seeded_cache(version: u64) -> ServeCache {
+        let c = ServeCache::new(CacheConfig::default());
+        c.bind_artifact_version(version);
+        c.results().insert(
+            1,
+            vec![4, 5, 6],
+            CachedPrediction {
+                hyps: vec![("CCO".to_string(), -0.25), ("CC=O".to_string(), -1.5)],
+                acceptance_rate: 0.79,
+            },
+        );
+        c.results().insert(
+            3 | (5 << 8),
+            vec![9],
+            CachedPrediction {
+                hyps: vec![],
+                acceptance_rate: 0.0,
+            },
+        );
+        c.drafts().record(&[1, 2, 3, 4, 5, 6, 7, 8, 9]);
+        c.drafts().record_window(&[7, 7]);
+        c
+    }
+
+    #[test]
+    fn dump_reload_roundtrip_is_bit_identical_and_warm() {
+        let path = tmp_path("roundtrip");
+        let src = seeded_cache(0xFEED);
+        let n = dump_to_path(&src, &path).unwrap();
+        assert_eq!(n, 2 + src.drafts().len());
+
+        let dst = ServeCache::new(CacheConfig::default());
+        dst.bind_artifact_version(0xFEED);
+        let report = load_into(&dst, &path, 0xFEED).unwrap();
+        assert_eq!(report.results, 2);
+        assert_eq!(report.windows, src.drafts().len());
+        let hit = dst.results().get(1, &[4, 5, 6]).unwrap();
+        assert_eq!(hit.hyps, vec![("CCO".to_string(), -0.25), ("CC=O".to_string(), -1.5)]);
+        assert_eq!(hit.acceptance_rate.to_bits(), 0.79f64.to_bits());
+        assert!(dst.results().get(3 | (5 << 8), &[9]).is_some());
+        assert_eq!(dst.results().stats().warm_hits, 2, "reloaded hits count warm");
+        assert_eq!(dst.drafts().top_k(16), src.drafts().top_k(16));
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn version_mismatch_is_rejected_cleanly() {
+        let path = tmp_path("mismatch");
+        let src = seeded_cache(0xAAA);
+        dump_to_path(&src, &path).unwrap();
+        let dst = ServeCache::new(CacheConfig::default());
+        dst.bind_artifact_version(0xBBB);
+        let err = load_into(&dst, &path, 0xBBB).unwrap_err();
+        assert!(err.to_string().contains("version mismatch"), "{err}");
+        assert!(dst.results().is_empty(), "rejected dump must not seed the cache");
+        assert!(dst.drafts().is_empty());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn garbage_and_truncation_are_rejected() {
+        let path = tmp_path("garbage");
+        std::fs::write(&path, "not a dump\n").unwrap();
+        let dst = ServeCache::new(CacheConfig::default());
+        assert!(load_into(&dst, &path, 0).is_err());
+        // A dump missing its end trailer is refused too.
+        std::fs::write(&path, format!("{MAGIC}\nversion\t0\nD\t1,2\t3\n")).unwrap();
+        let err = load_into(&dst, &path, 0).unwrap_err();
+        assert!(err.to_string().contains("no end trailer"), "{err}");
+        // Trailer count mismatch.
+        std::fs::write(&path, format!("{MAGIC}\nversion\t0\nD\t1,2\t3\nend\t5\n")).unwrap();
+        assert!(load_into(&dst, &path, 0).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn missing_file_is_an_error_not_a_panic() {
+        let dst = ServeCache::new(CacheConfig::default());
+        assert!(load_into(&dst, Path::new("/nonexistent/rxnspec.dump"), 0).is_err());
+    }
+
+    #[test]
+    fn empty_cache_dump_roundtrips() {
+        let path = tmp_path("empty");
+        let src = ServeCache::new(CacheConfig::default());
+        src.bind_artifact_version(1);
+        assert_eq!(dump_to_path(&src, &path).unwrap(), 0);
+        let dst = ServeCache::new(CacheConfig::default());
+        dst.bind_artifact_version(1);
+        let report = load_into(&dst, &path, 1).unwrap();
+        assert_eq!(report, LoadReport::default());
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -15,6 +15,8 @@ use std::collections::{BTreeMap, HashMap};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
+use crate::coordinator::lock_ok;
+
 use super::stats::ResultCacheStats;
 
 /// Cache key: a caller-chosen decoder-kind tag plus the tokenized query.
@@ -23,6 +25,10 @@ type Key = (u64, Vec<i64>);
 struct Slot<V> {
     value: V,
     tick: u64,
+    /// Loaded from a warm-boot dump (vs produced by a live decode) —
+    /// lets the serving layer report how much of the hit traffic the
+    /// persisted cache actually bought.
+    warm: bool,
 }
 
 struct Shard<V> {
@@ -60,6 +66,7 @@ pub struct ResultCache<V> {
     misses: AtomicU64,
     inserts: AtomicU64,
     evictions: AtomicU64,
+    warm_hits: AtomicU64,
 }
 
 fn key_hash(tag: u64, query: &[i64]) -> u64 {
@@ -84,13 +91,16 @@ impl<V: Clone> ResultCache<V> {
             misses: AtomicU64::new(0),
             inserts: AtomicU64::new(0),
             evictions: AtomicU64::new(0),
+            warm_hits: AtomicU64::new(0),
         }
     }
 
     /// Fold the artifact version into a caller tag. Keys store the
     /// *effective* tag, so even an entry that somehow survived a flush
     /// (or arrived from a future persisted store) cannot hit across a
-    /// model redeploy.
+    /// model redeploy. XOR with a fixed multiple keeps the fold
+    /// invertible: [`ResultCache::export`] applies the same fold again
+    /// to recover the caller tag for persistence.
     fn effective_tag(&self, tag: u64) -> u64 {
         tag ^ self.version.load(Ordering::Relaxed).wrapping_mul(0x9E37_79B9_7F4A_7C15)
     }
@@ -108,7 +118,7 @@ impl<V: Clone> ResultCache<V> {
     /// Drop every entry (all shards).
     pub fn clear(&self) {
         for s in &self.shards {
-            let mut g = s.lock().unwrap();
+            let mut g = lock_ok(s);
             g.map.clear();
             g.lru.clear();
         }
@@ -122,7 +132,7 @@ impl<V: Clone> ResultCache<V> {
     pub fn get(&self, tag: u64, query: &[i64]) -> Option<V> {
         let tag = self.effective_tag(tag);
         let idx = self.shard_of(tag, query);
-        let mut guard = self.shards[idx].lock().unwrap();
+        let mut guard = lock_ok(&self.shards[idx]);
         let sh = &mut *guard;
         let key = (tag, query.to_vec());
         sh.clock += 1;
@@ -131,9 +141,13 @@ impl<V: Clone> ResultCache<V> {
             let old = slot.tick;
             slot.tick = tick;
             let value = slot.value.clone();
+            let warm = slot.warm;
             sh.lru.remove(&old);
             sh.lru.insert(tick, key);
             self.hits.fetch_add(1, Ordering::Relaxed);
+            if warm {
+                self.warm_hits.fetch_add(1, Ordering::Relaxed);
+            }
             Some(value)
         } else {
             self.misses.fetch_add(1, Ordering::Relaxed);
@@ -144,9 +158,20 @@ impl<V: Clone> ResultCache<V> {
     /// Insert (or refresh) an entry. Returns how many entries were
     /// evicted to make room (0 or 1).
     pub fn insert(&self, tag: u64, query: Vec<i64>, value: V) -> u64 {
+        self.insert_inner(tag, query, value, false)
+    }
+
+    /// Insert an entry restored from a persisted dump: hits against it
+    /// are counted as warm. A later live [`ResultCache::insert`] of the
+    /// same key clears the flag (the entry is re-earned, not restored).
+    pub fn insert_warm(&self, tag: u64, query: Vec<i64>, value: V) -> u64 {
+        self.insert_inner(tag, query, value, true)
+    }
+
+    fn insert_inner(&self, tag: u64, query: Vec<i64>, value: V, warm: bool) -> u64 {
         let tag = self.effective_tag(tag);
         let idx = self.shard_of(tag, &query);
-        let mut guard = self.shards[idx].lock().unwrap();
+        let mut guard = lock_ok(&self.shards[idx]);
         let sh = &mut *guard;
         let key = (tag, query);
         sh.clock += 1;
@@ -156,10 +181,11 @@ impl<V: Clone> ResultCache<V> {
             let old = slot.tick;
             slot.tick = tick;
             slot.value = value;
+            slot.warm = warm;
             sh.lru.remove(&old);
             sh.lru.insert(tick, key);
         } else {
-            sh.map.insert(key.clone(), Slot { value, tick });
+            sh.map.insert(key.clone(), Slot { value, tick, warm });
             sh.lru.insert(tick, key);
             if sh.map.len() > self.shard_capacity {
                 if let Some((_, lru_key)) = sh.lru.pop_first() {
@@ -174,12 +200,29 @@ impl<V: Clone> ResultCache<V> {
         evicted
     }
 
+    /// Snapshot every resident entry as `(caller tag, query, value)`,
+    /// least recently used first (per shard, shards concatenated) — so a
+    /// capacity-bounded reload replays inserts in an order that evicts
+    /// the same entries the live cache would have. The version fold is
+    /// undone (XOR is an involution), so the tags are the caller's
+    /// original tags, portable across a dump/reload under the same
+    /// artifact version.
+    pub fn export(&self) -> Vec<(u64, Vec<i64>, V)> {
+        let mut out = Vec::new();
+        for s in &self.shards {
+            let g = lock_ok(s);
+            for (_, key) in g.lru.iter() {
+                if let Some(slot) = g.map.get(key) {
+                    out.push((self.effective_tag(key.0), key.1.clone(), slot.value.clone()));
+                }
+            }
+        }
+        out
+    }
+
     /// Entries currently resident across all shards.
     pub fn len(&self) -> usize {
-        self.shards
-            .iter()
-            .map(|s| s.lock().unwrap().map.len())
-            .sum()
+        self.shards.iter().map(|s| lock_ok(s).map.len()).sum()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -193,6 +236,7 @@ impl<V: Clone> ResultCache<V> {
             misses: self.misses.load(Ordering::Relaxed),
             inserts: self.inserts.load(Ordering::Relaxed),
             evictions: self.evictions.load(Ordering::Relaxed),
+            warm_hits: self.warm_hits.load(Ordering::Relaxed),
             len: self.len(),
             capacity: self.shard_capacity * self.shards.len(),
         }
@@ -277,5 +321,56 @@ mod tests {
         let s = c.stats();
         assert!(s.len <= s.capacity);
         assert!(s.evictions as usize >= 1000 - s.capacity);
+    }
+
+    #[test]
+    fn export_recovers_caller_tags_under_any_version() {
+        let c: ResultCache<i64> = ResultCache::new(8, 2);
+        c.set_version(0xDEADBEEFu64);
+        c.insert(1, vec![5, 6], 42);
+        c.insert(9, vec![7], 43);
+        let mut dump = c.export();
+        dump.sort_by_key(|(tag, _, _)| *tag);
+        assert_eq!(dump.len(), 2);
+        assert_eq!(dump[0], (1, vec![5, 6], 42));
+        assert_eq!(dump[1], (9, vec![7], 43));
+        // Replaying the export into a fresh cache at the same version
+        // reproduces the hits.
+        let c2: ResultCache<i64> = ResultCache::new(8, 2);
+        c2.set_version(0xDEADBEEFu64);
+        for (tag, q, v) in dump {
+            c2.insert_warm(tag, q, v);
+        }
+        assert_eq!(c2.get(1, &[5, 6]), Some(42));
+        assert_eq!(c2.get(9, &[7]), Some(43));
+    }
+
+    #[test]
+    fn warm_hits_counted_until_live_reinsert() {
+        let c: ResultCache<i64> = ResultCache::new(8, 1);
+        c.insert_warm(0, vec![1], 10);
+        c.insert(0, vec![2], 20);
+        assert_eq!(c.get(0, &[1]), Some(10));
+        assert_eq!(c.get(0, &[2]), Some(20));
+        assert_eq!(c.get(0, &[1]), Some(10));
+        let s = c.stats();
+        assert_eq!(s.hits, 3);
+        assert_eq!(s.warm_hits, 2, "only dump-loaded entries count as warm");
+        // A live insert over the warm key re-earns the entry.
+        c.insert(0, vec![1], 11);
+        assert_eq!(c.get(0, &[1]), Some(11));
+        assert_eq!(c.stats().warm_hits, 2);
+    }
+
+    #[test]
+    fn export_orders_lru_first_within_shard() {
+        let c: ResultCache<i64> = ResultCache::new(4, 1);
+        c.insert(0, vec![1], 1);
+        c.insert(0, vec![2], 2);
+        c.insert(0, vec![3], 3);
+        // Touch [1]: it becomes most recent, so export must list it last.
+        assert_eq!(c.get(0, &[1]), Some(1));
+        let order: Vec<i64> = c.export().into_iter().map(|(_, q, _)| q[0]).collect();
+        assert_eq!(order, vec![2, 3, 1]);
     }
 }

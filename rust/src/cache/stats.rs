@@ -10,6 +10,8 @@ pub struct ResultCacheStats {
     pub misses: u64,
     pub inserts: u64,
     pub evictions: u64,
+    /// Hits served by entries restored from a warm-boot dump.
+    pub warm_hits: u64,
     /// Entries currently resident.
     pub len: usize,
     /// Total capacity across shards.

@@ -11,10 +11,29 @@
 //! waiting, or (b) `max_wait` has elapsed since the oldest arrival, or
 //! (c) an incompatible request is at the queue head (FIFO order is never
 //! violated across classes).
+//!
+//! Admission control (the industrial-serving layer): the queue carries a
+//! `capacity` bound — [`RequestQueue::try_push`] refuses over-capacity
+//! admissions instead of queueing unboundedly (the server replies
+//! `BUSY`) — and every request may carry a **deadline**. Expired
+//! requests are shed *at pop time* (never handed to the worker): both
+//! pop paths take a shed callback so the caller can fail them back to
+//! their clients (`ERR deadline_exceeded`) rather than dropping them
+//! silently.
 
 use std::collections::VecDeque;
-use std::sync::{Condvar, Mutex};
+use std::sync::{Condvar, Mutex, MutexGuard};
 use std::time::{Duration, Instant};
+
+/// Lock a mutex, recovering from poisoning: a worker panic is contained
+/// by the supervision layer (`catch_unwind`), so a poisoned queue or
+/// cache mutex means "a holder panicked mid-update", not "the data is
+/// gone" — every structure locked this way keeps its invariants on
+/// per-call boundaries. Refusing to serve would turn one contained
+/// panic into a full-server outage.
+pub fn lock_ok<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
 
 /// How a request wants to be decoded.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -78,14 +97,38 @@ pub struct Request<T> {
     pub mode: DecodeMode,
     pub payload: T,
     pub enqueued: Instant,
+    /// Absolute SLO deadline; an expired request is shed at pop time and
+    /// never reaches the worker.
+    pub deadline: Option<Instant>,
 }
 
-/// Thread-safe FIFO queue with condition-variable wakeup.
+impl<T> Request<T> {
+    /// Expired relative to `now`?
+    pub fn expired(&self, now: Instant) -> bool {
+        self.deadline.is_some_and(|d| d <= now)
+    }
+}
+
+/// Why [`RequestQueue::try_push`] refused an admission. The payload
+/// comes back so the caller can reply to its client.
+#[derive(Debug)]
+pub enum PushError<T> {
+    /// At capacity — the server replies `BUSY`.
+    Full(T),
+    /// Shutting down — admissions stopped.
+    Closed(T),
+}
+
+/// Thread-safe FIFO queue with condition-variable wakeup, a capacity
+/// bound, and deadline shedding.
 pub struct RequestQueue<T> {
     inner: Mutex<QueueInner<T>>,
     cv: Condvar,
     pub max_batch: usize,
     pub max_wait: Duration,
+    /// Admission bound enforced by [`RequestQueue::try_push`]
+    /// (`usize::MAX` = unbounded, the compat default of `new`).
+    pub capacity: usize,
 }
 
 struct QueueInner<T> {
@@ -93,8 +136,34 @@ struct QueueInner<T> {
     closed: bool,
 }
 
+impl<T> QueueInner<T> {
+    /// Remove every expired request, handing each to `shed`. Called
+    /// under the queue lock on both pop paths — `shed` must not touch
+    /// the queue (replying over an mpsc channel is fine).
+    fn shed_expired(&mut self, shed: &mut dyn FnMut(Request<T>)) {
+        let now = Instant::now();
+        let mut i = 0;
+        while i < self.queue.len() {
+            if self.queue[i].expired(now) {
+                if let Some(r) = self.queue.remove(i) {
+                    shed(r);
+                }
+            } else {
+                i += 1;
+            }
+        }
+    }
+}
+
 impl<T> RequestQueue<T> {
+    /// Unbounded-capacity queue (library/tests compat constructor).
     pub fn new(max_batch: usize, max_wait: Duration) -> Self {
+        Self::with_capacity(max_batch, max_wait, usize::MAX)
+    }
+
+    /// Queue with an admission bound: `try_push` beyond `capacity`
+    /// pending requests returns [`PushError::Full`].
+    pub fn with_capacity(max_batch: usize, max_wait: Duration, capacity: usize) -> Self {
         RequestQueue {
             inner: Mutex::new(QueueInner {
                 queue: VecDeque::new(),
@@ -103,30 +172,76 @@ impl<T> RequestQueue<T> {
             cv: Condvar::new(),
             max_batch,
             max_wait,
+            capacity: capacity.max(1),
         }
     }
 
+    /// Unconditional enqueue without a deadline — ignores the capacity
+    /// bound (internal/test convenience; the serving front end admits
+    /// through [`RequestQueue::try_push`]).
     pub fn push(&self, mode: DecodeMode, payload: T) {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = lock_ok(&self.inner);
         g.queue.push_back(Request {
             mode,
             payload,
             enqueued: Instant::now(),
+            deadline: None,
         });
         self.cv.notify_all();
     }
 
+    /// Bounded admission with an optional deadline. Refuses when the
+    /// queue is at capacity (`Full`: reply `BUSY`) or closed (`Closed`:
+    /// reply shutting-down), handing the payload back either way.
+    pub fn try_push(
+        &self,
+        mode: DecodeMode,
+        payload: T,
+        deadline: Option<Instant>,
+    ) -> Result<(), PushError<T>> {
+        let mut g = lock_ok(&self.inner);
+        if g.closed {
+            return Err(PushError::Closed(payload));
+        }
+        if g.queue.len() >= self.capacity {
+            return Err(PushError::Full(payload));
+        }
+        g.queue.push_back(Request {
+            mode,
+            payload,
+            enqueued: Instant::now(),
+            deadline,
+        });
+        self.cv.notify_all();
+        Ok(())
+    }
+
+    /// Stop admissions; pops drain what is queued, then return `None`.
     pub fn close(&self) {
-        self.inner.lock().unwrap().closed = true;
+        lock_ok(&self.inner).closed = true;
         self.cv.notify_all();
     }
 
+    pub fn is_closed(&self) -> bool {
+        lock_ok(&self.inner).closed
+    }
+
     pub fn len(&self) -> usize {
-        self.inner.lock().unwrap().queue.len()
+        lock_ok(&self.inner).queue.len()
     }
 
     pub fn is_empty(&self) -> bool {
         self.len() == 0
+    }
+
+    /// Queue occupancy as a fraction of capacity (0.0 for unbounded
+    /// queues) — the pressure signal behind the worker's degradation
+    /// ladder.
+    pub fn occupancy(&self) -> f64 {
+        if self.capacity == usize::MAX {
+            return 0.0;
+        }
+        self.len() as f64 / self.capacity as f64
     }
 
     /// Non-blocking: drain up to `max` requests from the queue head that
@@ -135,11 +250,18 @@ impl<T> RequestQueue<T> {
     /// between generation steps (continuous batching): the session stays
     /// alive across batching ticks and fresh compatible requests join it
     /// instead of waiting for the whole previous batch to finish.
-    pub fn try_pop_compatible(&self, mode: DecodeMode, max: usize) -> Vec<Request<T>> {
+    /// Expired requests anywhere in the queue are shed to `shed` first.
+    pub fn try_pop_compatible_shedding(
+        &self,
+        mode: DecodeMode,
+        max: usize,
+        shed: &mut dyn FnMut(Request<T>),
+    ) -> Vec<Request<T>> {
+        let mut g = lock_ok(&self.inner);
+        g.shed_expired(shed);
         if max == 0 {
             return Vec::new();
         }
-        let mut g = self.inner.lock().unwrap();
         let n = g
             .queue
             .iter()
@@ -149,13 +271,25 @@ impl<T> RequestQueue<T> {
         g.queue.drain(..n).collect()
     }
 
+    /// [`RequestQueue::try_pop_compatible_shedding`] with expired
+    /// requests silently dropped (test/compat convenience).
+    pub fn try_pop_compatible(&self, mode: DecodeMode, max: usize) -> Vec<Request<T>> {
+        self.try_pop_compatible_shedding(mode, max, &mut |_| {})
+    }
+
     /// Pop the next batch: the queue-head request plus every immediately
     /// following *compatible* request, up to `max_batch`. Blocks until the
     /// head has waited `max_wait` (or the batch is full, or the next
     /// request is incompatible). Returns `None` when closed and drained.
-    pub fn pop_batch(&self) -> Option<Vec<Request<T>>> {
-        let mut g = self.inner.lock().unwrap();
+    /// Expired requests are shed to `shed` on every wakeup — they never
+    /// appear in a returned batch.
+    pub fn pop_batch_shedding(
+        &self,
+        shed: &mut dyn FnMut(Request<T>),
+    ) -> Option<Vec<Request<T>>> {
+        let mut g = lock_ok(&self.inner);
         loop {
+            g.shed_expired(shed);
             if let Some(head) = g.queue.front() {
                 let head_mode = head.mode;
                 let deadline = head.enqueued + self.max_wait;
@@ -171,21 +305,32 @@ impl<T> RequestQueue<T> {
                 // An incompatible request right behind the run means no
                 // further compatible arrivals can join (FIFO): ship now.
                 let blocked = compat < g.queue.len();
-                let full = solo || blocked || compat >= self.max_batch;
+                // Closed queues drain eagerly: no new arrival can join,
+                // so waiting out `max_wait` would only stretch the drain.
+                let full = solo || blocked || compat >= self.max_batch || g.closed;
                 if full || Instant::now() >= deadline {
                     let take = compat.min(self.max_batch);
                     let batch: Vec<Request<T>> = g.queue.drain(..take).collect();
                     return Some(batch);
                 }
                 let wait = deadline.saturating_duration_since(Instant::now());
-                let (g2, _) = self.cv.wait_timeout(g, wait).unwrap();
+                let (g2, _) = self
+                    .cv
+                    .wait_timeout(g, wait)
+                    .unwrap_or_else(|e| e.into_inner());
                 g = g2;
             } else if g.closed {
                 return None;
             } else {
-                g = self.cv.wait(g).unwrap();
+                g = self.cv.wait(g).unwrap_or_else(|e| e.into_inner());
             }
         }
+    }
+
+    /// [`RequestQueue::pop_batch_shedding`] with expired requests
+    /// silently dropped (test/compat convenience).
+    pub fn pop_batch(&self) -> Option<Vec<Request<T>>> {
+        self.pop_batch_shedding(&mut |_| {})
     }
 }
 
@@ -341,5 +486,153 @@ mod tests {
         producer.join().unwrap();
         seen.sort_unstable();
         assert_eq!(seen, (0..200).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn try_push_full_returns_busy_not_silent_drop() {
+        let q: RequestQueue<usize> = RequestQueue::with_capacity(8, Duration::from_millis(1), 2);
+        assert!(q.try_push(DecodeMode::Greedy, 1, None).is_ok());
+        assert!(q.try_push(DecodeMode::Greedy, 2, None).is_ok());
+        // The refusal hands the payload back — nothing is lost.
+        match q.try_push(DecodeMode::Greedy, 3, None) {
+            Err(PushError::Full(p)) => assert_eq!(p, 3),
+            _ => panic!("over-capacity admission must return Full"),
+        }
+        assert_eq!(q.len(), 2);
+        // Draining frees capacity again.
+        let _ = q.pop_batch().unwrap();
+        assert!(q.try_push(DecodeMode::Greedy, 4, None).is_ok());
+    }
+
+    #[test]
+    fn try_push_after_close_returns_closed() {
+        let q: RequestQueue<usize> = RequestQueue::with_capacity(8, Duration::from_millis(1), 8);
+        q.close();
+        match q.try_push(DecodeMode::Greedy, 1, None) {
+            Err(PushError::Closed(p)) => assert_eq!(p, 1),
+            _ => panic!("admission after close must return Closed"),
+        }
+        assert!(q.is_closed());
+    }
+
+    #[test]
+    fn expired_requests_are_shed_at_pop_never_batched() {
+        let q: RequestQueue<usize> = RequestQueue::with_capacity(8, Duration::from_millis(1), 8);
+        let past = Instant::now() - Duration::from_millis(5);
+        let future = Instant::now() + Duration::from_secs(60);
+        q.try_push(DecodeMode::Greedy, 1, Some(past)).unwrap();
+        q.try_push(DecodeMode::Greedy, 2, Some(future)).unwrap();
+        q.try_push(DecodeMode::Greedy, 3, Some(past)).unwrap();
+        let mut shed = Vec::new();
+        let batch = q.pop_batch_shedding(&mut |r| shed.push(r.payload)).unwrap();
+        assert_eq!(batch.iter().map(|r| r.payload).collect::<Vec<_>>(), vec![2]);
+        shed.sort_unstable();
+        assert_eq!(shed, vec![1, 3], "expired requests must reach the shed handler");
+    }
+
+    #[test]
+    fn try_pop_compatible_sheds_expired_first() {
+        let q: RequestQueue<usize> = RequestQueue::with_capacity(8, Duration::from_millis(1), 8);
+        let past = Instant::now() - Duration::from_millis(5);
+        q.try_push(DecodeMode::Greedy, 1, Some(past)).unwrap();
+        q.try_push(DecodeMode::Greedy, 2, None).unwrap();
+        let mut shed = Vec::new();
+        let got = q.try_pop_compatible_shedding(DecodeMode::Greedy, 8, &mut |r| {
+            shed.push(r.payload)
+        });
+        assert_eq!(got.iter().map(|r| r.payload).collect::<Vec<_>>(), vec![2]);
+        assert_eq!(shed, vec![1]);
+        // max == 0 still sheds (admission with no lane budget must not
+        // let expired work sit in the queue).
+        q.try_push(DecodeMode::Greedy, 4, Some(past)).unwrap();
+        let mut shed2 = Vec::new();
+        let got = q.try_pop_compatible_shedding(DecodeMode::Greedy, 0, &mut |r| {
+            shed2.push(r.payload)
+        });
+        assert!(got.is_empty());
+        assert_eq!(shed2, vec![4]);
+    }
+
+    #[test]
+    fn expired_head_does_not_block_live_tail() {
+        // An expired head must not stall pop_batch for max_wait, and the
+        // batch behind it must come out whole.
+        let q: RequestQueue<usize> = RequestQueue::with_capacity(8, Duration::from_secs(3600), 8);
+        let past = Instant::now() - Duration::from_millis(5);
+        q.try_push(DecodeMode::Beam { n: 2 }, 1, Some(past)).unwrap();
+        q.try_push(DecodeMode::Greedy, 2, None).unwrap();
+        q.try_push(DecodeMode::Greedy, 3, None).unwrap();
+        let mut shed = Vec::new();
+        let t0 = Instant::now();
+        let batch = q.pop_batch_shedding(&mut |r| shed.push(r.payload)).unwrap();
+        assert!(t0.elapsed() < Duration::from_secs(60));
+        assert_eq!(shed, vec![1]);
+        assert_eq!(
+            batch.iter().map(|r| r.payload).collect::<Vec<_>>(),
+            vec![2, 3]
+        );
+    }
+
+    #[test]
+    fn occupancy_tracks_capacity() {
+        let q: RequestQueue<usize> = RequestQueue::with_capacity(8, Duration::from_millis(1), 4);
+        assert_eq!(q.occupancy(), 0.0);
+        q.push(DecodeMode::Greedy, 1);
+        q.push(DecodeMode::Greedy, 2);
+        assert!((q.occupancy() - 0.5).abs() < 1e-12);
+        let unbounded: RequestQueue<usize> = RequestQueue::new(8, Duration::from_millis(1));
+        unbounded.push(DecodeMode::Greedy, 1);
+        assert_eq!(unbounded.occupancy(), 0.0);
+    }
+
+    /// Concurrent close vs try_pop_compatible: every pushed request is
+    /// either popped by the scavenger or drained after close — none
+    /// lost, none duplicated, no deadlock.
+    #[test]
+    fn concurrent_close_vs_try_pop_compatible() {
+        use std::sync::Arc;
+        for _round in 0..8 {
+            let q: Arc<RequestQueue<usize>> =
+                Arc::new(RequestQueue::new(4, Duration::from_millis(1)));
+            let n = 100usize;
+            let producer = {
+                let q = Arc::clone(&q);
+                std::thread::spawn(move || {
+                    for i in 0..n {
+                        q.push(DecodeMode::Greedy, i);
+                        if i == n / 2 {
+                            std::thread::yield_now();
+                        }
+                    }
+                    q.close();
+                })
+            };
+            let scavenger = {
+                let q = Arc::clone(&q);
+                std::thread::spawn(move || {
+                    let mut got = Vec::new();
+                    loop {
+                        let batch = q.try_pop_compatible(DecodeMode::Greedy, 3);
+                        let drained = batch.is_empty();
+                        got.extend(batch.into_iter().map(|r| r.payload));
+                        if drained && q.is_closed() && q.is_empty() {
+                            return got;
+                        }
+                        std::thread::yield_now();
+                    }
+                })
+            };
+            let mut seen = scavenger.join().unwrap();
+            producer.join().unwrap();
+            // try_pop_compatible after close still drains (close stops
+            // admissions, not consumption).
+            seen.extend(
+                q.try_pop_compatible(DecodeMode::Greedy, n)
+                    .into_iter()
+                    .map(|r| r.payload),
+            );
+            seen.sort_unstable();
+            assert_eq!(seen, (0..n).collect::<Vec<_>>());
+        }
     }
 }

@@ -163,6 +163,21 @@ pub struct Metrics {
     pub kv_page_bytes: AtomicU64,
     pub arena_evictions: AtomicU64,
     pub fork_pages_copied: AtomicU64,
+    /// Resilience accounting (the fault-tolerance layer): deadline-shed
+    /// and capacity-refused admissions, stateless retries after a
+    /// contained worker panic, panics caught by the supervision wrapper,
+    /// batching ticks spent degraded plus the current degradation level
+    /// (gauge: 0 = full drafts, 1 = corpus drafts off, 2 = speculation
+    /// off), graceful-drain wall time (gauge, ms), and result-cache hits
+    /// served from a warm-boot dump.
+    pub requests_shed: AtomicU64,
+    pub requests_busy: AtomicU64,
+    pub requests_retried: AtomicU64,
+    pub panics_contained: AtomicU64,
+    pub degraded_ticks: AtomicU64,
+    pub degrade_level: AtomicU64,
+    pub drain_ms: AtomicU64,
+    pub cache_warm_hits: AtomicU64,
 }
 
 impl Metrics {
@@ -242,6 +257,20 @@ impl Metrics {
         ));
         s.push_str(&self.arena_counters().render_line());
         s.push('\n');
+        s.push_str(&format!(
+            "resilience: requests_shed={} requests_busy={} requests_retried={} \
+             panics_contained={} degraded_ticks={} degrade_level={} drain_ms={} \
+             cache_warm_hits={} faults_injected={}\n",
+            self.requests_shed.load(Ordering::Relaxed),
+            self.requests_busy.load(Ordering::Relaxed),
+            self.requests_retried.load(Ordering::Relaxed),
+            self.panics_contained.load(Ordering::Relaxed),
+            self.degraded_ticks.load(Ordering::Relaxed),
+            self.degrade_level.load(Ordering::Relaxed),
+            self.drain_ms.load(Ordering::Relaxed),
+            self.cache_warm_hits.load(Ordering::Relaxed),
+            crate::faults::injected(),
+        ));
         s.push_str(&self.request_latency.summary("request_latency"));
         s.push('\n');
         s.push_str(&self.queue_wait.summary("queue_wait"));
@@ -439,6 +468,34 @@ mod tests {
         assert!(snap.contains("kv_bytes_resident=49152"));
         assert!(snap.contains("arena_evictions=3"));
         assert!(snap.contains("fork_pages_copied=7"));
+    }
+
+    #[test]
+    fn metrics_snapshot_exposes_resilience_counters() {
+        let m = Metrics::default();
+        m.requests_shed.store(4, Ordering::Relaxed);
+        m.requests_busy.store(2, Ordering::Relaxed);
+        m.requests_retried.store(3, Ordering::Relaxed);
+        m.panics_contained.store(3, Ordering::Relaxed);
+        m.degraded_ticks.store(11, Ordering::Relaxed);
+        m.degrade_level.store(1, Ordering::Relaxed);
+        m.drain_ms.store(17, Ordering::Relaxed);
+        m.cache_warm_hits.store(5, Ordering::Relaxed);
+        let snap = m.snapshot();
+        assert!(snap.contains("requests_shed=4"));
+        assert!(snap.contains("requests_busy=2"));
+        assert!(snap.contains("requests_retried=3"));
+        assert!(snap.contains("panics_contained=3"));
+        assert!(snap.contains("degraded_ticks=11"));
+        assert!(snap.contains("degrade_level=1"));
+        assert!(snap.contains("drain_ms=17"));
+        assert!(snap.contains("cache_warm_hits=5"));
+        assert!(snap.contains("faults_injected="));
+        // The resilience line must come before the latency summaries so
+        // `decode_latency` stays the client-side STATS terminator.
+        let res = snap.find("resilience:").unwrap();
+        let dec = snap.find("decode_latency:").unwrap();
+        assert!(res < dec);
     }
 
     #[test]

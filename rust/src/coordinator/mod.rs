@@ -15,7 +15,7 @@ pub mod metrics;
 pub mod server;
 pub mod worker;
 
-pub use batcher::{DecodeMode, Request, RequestQueue};
+pub use batcher::{lock_ok, DecodeMode, PushError, Request, RequestQueue};
 pub use metrics::{Histogram, Metrics};
 pub use server::{serve, Client, Prediction, ServerState};
 pub use worker::{run_worker, Job, JobResult, Reply};

@@ -2,34 +2,58 @@
 //! surface.
 //!
 //! Protocol (one request per line, UTF-8):
-//!     PREDICT <decoder> <smiles>      decoder ∈ greedy | spec:<dl> |
-//!                                     bs:<n> | sbs:<n>:<dl>
+//!     [DEADLINE <ms>] PREDICT <decoder> <smiles>
+//!                                     decoder ∈ greedy | spec:<dl> |
+//!                                     bs:<n> | sbs:<n>:<dl>; the optional
+//!                                     prefix bounds how long the request
+//!                                     may wait + decode before the server
+//!                                     sheds it (default: RXNSPEC_SLO_MS)
 //!     STATS                           cache state + metrics snapshot
 //!     TRACE [<path>]                  Chrome trace JSON of collected
 //!                                     spans — inline (one line) or
 //!                                     written server-side to <path>
 //!     PING                            liveness
+//!     SHUTDOWN                        begin graceful drain (admissions
+//!                                     stop, in-flight work completes)
 //!     QUIT                            close connection
 //!
 //! Responses:
 //!     OK <latency_ms> <calls> <acc_rate> <hyp> <score> [<hyp> <score>…]
 //!     ERR <message>
+//!     BUSY <reason>                   over capacity — retry later; the
+//!                                     request was NOT admitted
 //!     PONG
 //!
 //! SMILES never contain spaces, so space-separated framing is safe.
+//!
+//! Backpressure is explicit: a full queue answers `BUSY queue_full` and a
+//! connection over `RXNSPEC_MAX_CONNS` answers `BUSY max_connections` —
+//! immediately, instead of letting latency absorb the overload. Expired
+//! requests come back as `ERR deadline_exceeded` (shed server-side before
+//! they ever occupy a decode lane).
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{mpsc, Arc};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
+use std::sync::Mutex;
+
 use crate::cache::ServeCache;
-use crate::coordinator::batcher::{DecodeMode, RequestQueue};
+use crate::coordinator::batcher::{lock_ok, DecodeMode, PushError, RequestQueue};
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::worker::{Job, JobResult};
+
+/// How long a connection thread blocks in one read before re-checking the
+/// shutdown flag. Bounds how stale an idle connection's view of a drain
+/// can be — and therefore how long [`serve`]'s join phase waits.
+const READ_TICK: Duration = Duration::from_millis(250);
+
+/// Accept-loop poll interval while no connection is pending.
+const ACCEPT_TICK: Duration = Duration::from_millis(5);
 
 /// Shared server state handed to every connection thread.
 pub struct ServerState {
@@ -38,44 +62,142 @@ pub struct ServerState {
     /// The worker's cache pair; `STATS` renders its live state.
     pub cache: Arc<ServeCache>,
     pub shutdown: AtomicBool,
+    /// Deadline attached to `PREDICT` lines that carry no explicit
+    /// `DEADLINE` prefix (`RXNSPEC_SLO_MS`; `None` = wait forever).
+    pub default_slo: Option<Duration>,
+    /// Concurrent-connection cap; the accept loop answers
+    /// `BUSY max_connections` beyond it (`RXNSPEC_MAX_CONNS`).
+    pub max_conns: usize,
+    /// When [`ServerState::begin_shutdown`] first ran — the `drain_ms`
+    /// metric measures from here to full stop.
+    drain_started: Mutex<Option<Instant>>,
 }
 
-/// Accept loop: one thread per connection. Returns when `shutdown` is set
-/// (checked between accepts; use a connect to self to wake it) or the
-/// listener errors out.
-pub fn serve(listener: TcpListener, state: Arc<ServerState>) -> Result<()> {
-    listener.set_nonblocking(false)?;
-    for stream in listener.incoming() {
-        if state.shutdown.load(Ordering::SeqCst) {
-            break;
+impl ServerState {
+    /// Build serving state with SLO and connection limits from the
+    /// environment: `RXNSPEC_SLO_MS` (default: no deadline; `0` also
+    /// means none) and `RXNSPEC_MAX_CONNS` (default 256).
+    pub fn new(
+        queue: RequestQueue<Job>,
+        metrics: Arc<Metrics>,
+        cache: Arc<ServeCache>,
+    ) -> ServerState {
+        let slo_ms = std::env::var("RXNSPEC_SLO_MS")
+            .ok()
+            .and_then(|v| v.parse::<u64>().ok())
+            .filter(|ms| *ms > 0);
+        let max_conns = std::env::var("RXNSPEC_MAX_CONNS")
+            .ok()
+            .and_then(|v| v.parse::<usize>().ok())
+            .unwrap_or(256)
+            .max(1);
+        ServerState::with_limits(queue, metrics, cache, slo_ms.map(Duration::from_millis), max_conns)
+    }
+
+    /// Build serving state with explicit limits (tests, benches).
+    pub fn with_limits(
+        queue: RequestQueue<Job>,
+        metrics: Arc<Metrics>,
+        cache: Arc<ServeCache>,
+        default_slo: Option<Duration>,
+        max_conns: usize,
+    ) -> ServerState {
+        ServerState {
+            queue,
+            metrics,
+            cache,
+            shutdown: AtomicBool::new(false),
+            default_slo,
+            max_conns,
+            drain_started: Mutex::new(None),
         }
-        match stream {
-            Ok(s) => {
+    }
+
+    /// Stop admissions and close the queue — the worker drains what is
+    /// already in flight, connection threads exit at their next read
+    /// tick, and [`serve`] joins them and returns. Idempotent (the first
+    /// call stamps the drain start).
+    pub fn begin_shutdown(&self) {
+        let mut started = lock_ok(&self.drain_started);
+        if started.is_none() {
+            *started = Some(Instant::now());
+        }
+        drop(started);
+        self.shutdown.store(true, Ordering::SeqCst);
+        self.queue.close();
+    }
+
+    /// When the drain began, if one has.
+    pub fn drain_started(&self) -> Option<Instant> {
+        *lock_ok(&self.drain_started)
+    }
+}
+
+/// Accept loop. Polls a nonblocking listener (no wake-up connection
+/// tricks: the shutdown flag is observed within one [`ACCEPT_TICK`]),
+/// tracks every connection thread, and on shutdown joins them all before
+/// returning — by then every admitted request has been replied to.
+pub fn serve(listener: TcpListener, state: Arc<ServerState>) -> Result<()> {
+    listener.set_nonblocking(true)?;
+    let mut conns: Vec<std::thread::JoinHandle<()>> = Vec::new();
+    while !state.shutdown.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok((mut stream, _)) => {
+                conns.retain(|h| !h.is_finished());
+                if conns.len() >= state.max_conns {
+                    state.metrics.requests_busy.fetch_add(1, Ordering::Relaxed);
+                    let _ = stream.write_all(b"BUSY max_connections\n");
+                    continue; // drop closes the socket
+                }
                 let st = Arc::clone(&state);
-                std::thread::spawn(move || {
-                    let _ = handle_conn(s, st);
-                });
+                conns.push(std::thread::spawn(move || {
+                    let _ = handle_conn(stream, st);
+                }));
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                conns.retain(|h| !h.is_finished());
+                std::thread::sleep(ACCEPT_TICK);
             }
             Err(e) => {
                 eprintln!("accept error: {e}");
+                std::thread::sleep(ACCEPT_TICK);
             }
         }
+    }
+    for h in conns {
+        let _ = h.join();
     }
     Ok(())
 }
 
 fn handle_conn(stream: TcpStream, state: Arc<ServerState>) -> Result<()> {
+    // The listener is nonblocking; the per-connection socket must block
+    // with a bounded read so the thread can observe a drain.
+    stream.set_nonblocking(false)?;
+    stream.set_read_timeout(Some(READ_TICK))?;
     let mut reader = BufReader::new(stream.try_clone()?);
     let mut writer = stream;
     let mut line = String::new();
     loop {
-        line.clear();
-        if reader.read_line(&mut line)? == 0 {
-            return Ok(()); // EOF
+        if state.shutdown.load(Ordering::SeqCst) {
+            return Ok(()); // drain: drop the connection
+        }
+        // `read_line` appends; a timeout mid-line keeps the partial
+        // prefix in `line` and the next pass completes it.
+        match reader.read_line(&mut line) {
+            Ok(0) => return Ok(()), // EOF
+            Ok(_) => {}
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                continue;
+            }
+            Err(e) => return Err(e.into()),
         }
         let t0 = Instant::now();
-        let trimmed = line.trim_end();
-        let reply = handle_line(trimmed, &state);
+        let reply = handle_line(line.trim_end(), &state);
+        line.clear();
         state.metrics.request_latency.record(t0.elapsed());
         match reply {
             LineReply::Text(s) => {
@@ -93,6 +215,21 @@ enum LineReply {
 }
 
 fn handle_line(line: &str, state: &Arc<ServerState>) -> LineReply {
+    // Optional per-request deadline: "DEADLINE <ms> <command…>".
+    let (line, deadline) = match line.strip_prefix("DEADLINE ") {
+        Some(rest) => {
+            let mut p = rest.splitn(2, ' ');
+            match (p.next().and_then(|ms| ms.parse::<u64>().ok()), p.next()) {
+                (Some(ms), Some(cmd)) => {
+                    (cmd, Some(Instant::now() + Duration::from_millis(ms)))
+                }
+                _ => {
+                    return LineReply::Text("ERR usage: DEADLINE <ms> <command>".to_string())
+                }
+            }
+        }
+        None => (line, state.default_slo.map(|slo| Instant::now() + slo)),
+    };
     let mut parts = line.splitn(3, ' ');
     match parts.next() {
         Some("PING") => LineReply::Text("PONG".to_string()),
@@ -105,6 +242,10 @@ fn handle_line(line: &str, state: &Arc<ServerState>) -> LineReply {
             LineReply::Text(s)
         }
         Some("QUIT") => LineReply::Quit,
+        Some("SHUTDOWN") => {
+            state.begin_shutdown();
+            LineReply::Text("OK draining".to_string())
+        }
         Some("TRACE") => {
             // `chrome_trace_json` renders single-line, so the inline
             // reply keeps the one-response-per-line framing intact.
@@ -132,13 +273,20 @@ fn handle_line(line: &str, state: &Arc<ServerState>) -> LineReply {
             };
             let t0 = Instant::now();
             let (tx, rx) = mpsc::channel::<JobResult>();
-            state.queue.push(
-                mode,
-                Job {
-                    smiles: smiles.trim().to_string(),
-                    resp: tx,
-                },
-            );
+            let job = Job {
+                smiles: smiles.trim().to_string(),
+                resp: tx,
+            };
+            match state.queue.try_push(mode, job, deadline) {
+                Ok(()) => {}
+                Err(PushError::Full(_)) => {
+                    state.metrics.requests_busy.fetch_add(1, Ordering::Relaxed);
+                    return LineReply::Text("BUSY queue_full".to_string());
+                }
+                Err(PushError::Closed(_)) => {
+                    return LineReply::Text("ERR shutting_down".to_string());
+                }
+            }
             match rx.recv() {
                 Ok(Ok(reply)) => {
                     let ms = t0.elapsed().as_secs_f64() * 1000.0;
@@ -198,6 +346,24 @@ impl Client {
 
     pub fn predict(&mut self, decoder: &str, smiles: &str) -> Result<Prediction> {
         let resp = self.roundtrip(&format!("PREDICT {decoder} {smiles}"))?;
+        Self::parse_predict(&resp)
+    }
+
+    /// `PREDICT` with an explicit per-request deadline. `ERR
+    /// deadline_exceeded` (shed) and `BUSY …` (not admitted) both
+    /// surface as errors.
+    pub fn predict_with_deadline(
+        &mut self,
+        deadline_ms: u64,
+        decoder: &str,
+        smiles: &str,
+    ) -> Result<Prediction> {
+        let resp =
+            self.roundtrip(&format!("DEADLINE {deadline_ms} PREDICT {decoder} {smiles}"))?;
+        Self::parse_predict(&resp)
+    }
+
+    fn parse_predict(resp: &str) -> Result<Prediction> {
         let mut f = resp.split(' ');
         match f.next() {
             Some("OK") => {
@@ -218,8 +384,14 @@ impl Client {
                 })
             }
             Some("ERR") => anyhow::bail!("server: {}", resp),
+            Some("BUSY") => anyhow::bail!("server busy: {}", resp),
             _ => anyhow::bail!("bad response: {resp}"),
         }
+    }
+
+    /// Ask the server to drain gracefully. Returns its acknowledgement.
+    pub fn shutdown(&mut self) -> Result<String> {
+        self.roundtrip("SHUTDOWN")
     }
 
     /// Fetch the collected span trace as one line of Chrome trace JSON.
@@ -249,23 +421,28 @@ mod tests {
     use crate::coordinator::worker::run_worker;
     use crate::testutil::CopyModel;
     use crate::vocab::Vocab;
-    use std::time::Duration;
+    use std::io::Read;
 
-    /// Full in-process serving round trip over a real TCP socket.
+    fn test_state(queue: RequestQueue<Job>) -> Arc<ServerState> {
+        Arc::new(ServerState::with_limits(
+            queue,
+            Arc::new(Metrics::default()),
+            Arc::new(ServeCache::default()),
+            None,
+            256,
+        ))
+    }
+
+    /// Full in-process serving round trip over a real TCP socket,
+    /// finishing with a graceful SHUTDOWN that joins every thread.
     #[test]
     fn tcp_round_trip_with_copy_model() {
-        let vocab = Vocab::build(["CCONF", "c1ccccc1Br"]).unwrap();
-        let state = Arc::new(ServerState {
-            queue: RequestQueue::new(8, Duration::from_millis(1)),
-            metrics: Arc::new(Metrics::default()),
-            cache: Arc::new(ServeCache::default()),
-            shutdown: AtomicBool::new(false),
-        });
+        let state = test_state(RequestQueue::new(8, Duration::from_millis(1)));
         let listener = TcpListener::bind("127.0.0.1:0").unwrap();
         let addr = listener.local_addr().unwrap().to_string();
 
         let accept_state = Arc::clone(&state);
-        std::thread::spawn(move || serve(listener, accept_state));
+        let acceptor = std::thread::spawn(move || serve(listener, accept_state));
         let worker_state = Arc::clone(&state);
         let worker = std::thread::spawn(move || {
             let backend = CopyModel::new(96, 96, 20);
@@ -292,6 +469,14 @@ mod tests {
         let hit = c.predict("spec:4", "c1ccccc1").unwrap();
         assert_eq!(hit.hyps[0].0, "c1ccccc1");
         assert_eq!(hit.decoder_calls, 0, "repeat must be a cache hit");
+        // A generous explicit deadline is honored (not shed).
+        let p = c.predict_with_deadline(60_000, "greedy", "CCO").unwrap();
+        assert_eq!(p.hyps[0].0, "CCO");
+        // An already-expired deadline is shed server-side.
+        let err = c
+            .predict_with_deadline(0, "greedy", "c1ccccc1Br")
+            .unwrap_err();
+        assert!(err.to_string().contains("deadline_exceeded"), "{err}");
         // Errors are per-request, connection stays usable.
         assert!(c.predict("greedy", "!!bad!!").is_err());
         assert!(c.ping().unwrap());
@@ -299,24 +484,22 @@ mod tests {
         assert!(stats.contains("cache: enabled=true"));
         assert!(stats.contains("requests="));
         assert!(stats.contains("cache_hits=1"));
+        assert!(stats.contains("requests_shed=1"));
         // TRACE always answers one line of valid Chrome trace JSON,
         // even with RXNSPEC_TRACE off (empty event array).
         let tr = c.trace_json().unwrap();
         assert!(tr.starts_with("{\"traceEvents\":["), "bad trace reply: {tr}");
 
-        let _ = vocab;
-        state.queue.close();
+        // Graceful drain: SHUTDOWN stops admissions, the worker drains,
+        // and the accept loop joins every connection thread.
+        assert_eq!(c.shutdown().unwrap(), "OK draining");
         worker.join().unwrap();
+        acceptor.join().unwrap().unwrap();
     }
 
     #[test]
     fn unknown_decoder_is_rejected() {
-        let state = Arc::new(ServerState {
-            queue: RequestQueue::new(2, Duration::from_millis(1)),
-            metrics: Arc::new(Metrics::default()),
-            cache: Arc::new(ServeCache::default()),
-            shutdown: AtomicBool::new(false),
-        });
+        let state = test_state(RequestQueue::new(2, Duration::from_millis(1)));
         match handle_line("PREDICT wat CCO", &state) {
             LineReply::Text(t) => assert!(t.starts_with("ERR")),
             _ => panic!("expected ERR"),
@@ -325,5 +508,81 @@ mod tests {
             LineReply::Text(t) => assert!(t.starts_with("ERR")),
             _ => panic!("expected ERR"),
         }
+        match handle_line("DEADLINE nope PREDICT greedy CCO", &state) {
+            LineReply::Text(t) => assert!(t.starts_with("ERR usage: DEADLINE")),
+            _ => panic!("expected ERR"),
+        }
+    }
+
+    /// A full queue answers BUSY immediately — the reply is explicit,
+    /// not a silent drop, and the request is never admitted.
+    #[test]
+    fn full_queue_answers_busy() {
+        let state = test_state(RequestQueue::with_capacity(
+            8,
+            Duration::from_millis(1),
+            1,
+        ));
+        // Fill the single admission slot directly.
+        let (tx, _rx) = mpsc::channel();
+        state
+            .queue
+            .try_push(
+                DecodeMode::Greedy,
+                Job {
+                    smiles: "CCO".to_string(),
+                    resp: tx,
+                },
+                None,
+            )
+            .unwrap();
+        match handle_line("PREDICT greedy CCO", &state) {
+            LineReply::Text(t) => assert_eq!(t, "BUSY queue_full"),
+            _ => panic!("expected BUSY"),
+        }
+        assert_eq!(state.metrics.requests_busy.load(Ordering::Relaxed), 1);
+        assert_eq!(state.queue.len(), 1, "rejected request must not be admitted");
+    }
+
+    /// After SHUTDOWN, new PREDICTs are refused as shutting_down.
+    #[test]
+    fn shutdown_refuses_new_admissions() {
+        let state = test_state(RequestQueue::new(8, Duration::from_millis(1)));
+        match handle_line("SHUTDOWN", &state) {
+            LineReply::Text(t) => assert_eq!(t, "OK draining"),
+            _ => panic!("expected OK"),
+        }
+        assert!(state.shutdown.load(Ordering::SeqCst));
+        assert!(state.queue.is_closed());
+        match handle_line("PREDICT greedy CCO", &state) {
+            LineReply::Text(t) => assert_eq!(t, "ERR shutting_down"),
+            _ => panic!("expected ERR"),
+        }
+    }
+
+    /// Connections beyond `max_conns` get an explicit BUSY line, not a
+    /// hang or a silent reset.
+    #[test]
+    fn connection_cap_answers_busy() {
+        let state = Arc::new(ServerState::with_limits(
+            RequestQueue::new(2, Duration::from_millis(1)),
+            Arc::new(Metrics::default()),
+            Arc::new(ServeCache::default()),
+            None,
+            0, // floor: every connection is over the cap
+        ));
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let accept_state = Arc::clone(&state);
+        let acceptor = std::thread::spawn(move || serve(listener, accept_state));
+
+        let mut s = TcpStream::connect(&addr).unwrap();
+        let mut resp = String::new();
+        s.read_to_string(&mut resp).unwrap(); // server closes after BUSY
+        assert_eq!(resp, "BUSY max_connections\n");
+        assert!(state.metrics.requests_busy.load(Ordering::Relaxed) >= 1);
+
+        state.begin_shutdown();
+        acceptor.join().unwrap().unwrap();
     }
 }

@@ -23,17 +23,41 @@
 //! accepted target feeds the corpus [`DraftStore`](crate::cache::DraftStore),
 //! and the speculative decoders draft from the store's top windows on the
 //! next request.
+//!
+//! # Fault tolerance
+//!
+//! The worker is **supervised**: every decode runs under `catch_unwind`,
+//! so a panicking row — a backend bug, an injected fault, a poisoned
+//! artifact — is contained to the batch that hit it. The poisoned
+//! session is quarantined (dropped under its own `catch_unwind`), each
+//! unreplied lane is retried **once** solo via the stateless-equivalent
+//! free decoders (exact by the session-parity invariant; bounded backoff
+//! first), and a second panic turns into an `ERR` for that one client.
+//! The worker thread itself never dies.
+//!
+//! Deadlines and pressure: expired requests are shed at pop time with
+//! `ERR deadline_exceeded` (they never occupy a lane), and sustained
+//! queue pressure walks a degradation ladder — level 1 (≥½ capacity for
+//! 3 consecutive ticks) drops corpus drafts, level 2 (≥⅞) drops
+//! speculative drafts entirely. Both are output-neutral for the
+//! greedy/spec-greedy paths (speculation is lossless for *any* draft
+//! set); SBS keeps its configured draft depth because its candidate
+//! frontier does depend on it. De-escalation is immediate when pressure
+//! drops.
 
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
 use crate::cache::{CachedPrediction, ServeCache};
 use crate::coordinator::batcher::{DecodeMode, Request, RequestQueue};
 use crate::coordinator::metrics::Metrics;
-use crate::decoding::{beam_search, sbs, Backend, GreedyRun, SbsConfig, SpecGreedyRun};
+use crate::decoding::{
+    beam_search, greedy, sbs, spec_greedy, Backend, GreedyRun, SbsConfig, SpecGreedyRun,
+};
 use crate::draft::{Acceptance, DraftConfig};
 use crate::trace::{self, Phase};
 use crate::trace_span;
@@ -42,6 +66,15 @@ use crate::vocab::Vocab;
 /// Synthetic trace-track allocator: each traced request gets its own
 /// Perfetto row, since request intervals overlap on the worker thread.
 static REQ_TRACK: AtomicU64 = AtomicU64::new(0);
+
+/// Backoff before the single solo retry of a lane whose session
+/// panicked: long enough to ride out an ephemeral glitch, short enough
+/// to stay invisible next to a decode.
+const RETRY_BACKOFF: Duration = Duration::from_millis(5);
+
+/// Consecutive over-threshold ticks before the degradation ladder
+/// escalates a level (de-escalation is immediate).
+const DEGRADE_SUSTAIN_TICKS: u32 = 3;
 
 /// Record a request's queue residency onto its trace track (ending now)
 /// and return the admission timestamp for the later `Request` span.
@@ -66,7 +99,19 @@ fn trace_completion(t_admit_ns: u64, track: u64, payload: u64) {
     trace::note_request(&format!("req-{track}"), t_admit_ns, now);
 }
 
+/// Render a caught panic payload for client-facing `ERR` replies.
+fn panic_text(p: &Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "unknown panic".to_string()
+    }
+}
+
 /// One unit of serving work: a query SMILES and a reply channel.
+#[derive(Debug)]
 pub struct Job {
     pub smiles: String,
     pub resp: mpsc::Sender<JobResult>,
@@ -83,6 +128,46 @@ pub struct Reply {
     pub acceptance_rate: f64,
 }
 
+/// The queue-pressure degradation ladder. Escalates one level after
+/// [`DEGRADE_SUSTAIN_TICKS`] consecutive ticks above the level's
+/// occupancy threshold; drops instantly when pressure does.
+#[derive(Default)]
+struct DegradeState {
+    level: u8,
+    hot_ticks: u32,
+}
+
+impl DegradeState {
+    fn observe(&mut self, occupancy: f64) -> u8 {
+        let want = if occupancy >= 0.875 {
+            2
+        } else if occupancy >= 0.5 {
+            1
+        } else {
+            0
+        };
+        if want > self.level {
+            self.hot_ticks += 1;
+            if self.hot_ticks >= DEGRADE_SUSTAIN_TICKS {
+                self.level = want;
+                self.hot_ticks = 0;
+            }
+        } else {
+            self.level = want;
+            self.hot_ticks = 0;
+        }
+        self.level
+    }
+}
+
+/// Fail one shed request back to its client. Runs under the queue lock
+/// (the contract of the shedding pop variants), so it only touches the
+/// reply channel and atomics — never the queue.
+fn shed_request(r: Request<Job>, metrics: &Metrics) {
+    let _ = r.payload.resp.send(Err("deadline_exceeded".to_string()));
+    metrics.requests_shed.fetch_add(1, Ordering::Relaxed);
+}
+
 /// Drain the queue until it is closed. Runs on its own thread.
 pub fn run_worker<B: Backend>(
     backend: &B,
@@ -91,18 +176,27 @@ pub fn run_worker<B: Backend>(
     metrics: &Arc<Metrics>,
     cache: &ServeCache,
 ) {
-    while let Some(batch) = queue.pop_batch() {
+    let mut degrade = DegradeState::default();
+    loop {
+        let Some(batch) = queue.pop_batch_shedding(&mut |r| shed_request(r, metrics)) else {
+            return;
+        };
+        // Pressure is sampled per tick *after* the pop: what is still
+        // queued behind this batch is the backlog the tick can't serve.
+        let level = degrade.observe(queue.occupancy());
+        metrics.degrade_level.store(level as u64, Ordering::Relaxed);
+        if level > 0 {
+            metrics.degraded_ticks.fetch_add(1, Ordering::Relaxed);
+        }
         let now = Instant::now();
         for r in &batch {
-            metrics
-                .queue_wait
-                .record(now.duration_since(r.enqueued));
+            metrics.queue_wait.record(now.duration_since(r.enqueued));
         }
         // batches / batched_requests count actual decode admissions (in
         // stream_batch / solo_batch), so cache hits — which never occupy
         // a lane — don't distort the mean-batch metric in either
         // direction.
-        process_batch(backend, vocab, batch, queue, metrics, cache);
+        process_batch(backend, vocab, batch, queue, metrics, cache, level);
     }
 }
 
@@ -124,6 +218,11 @@ fn try_cache_reply(
         Some(pred) => {
             metrics.cache_hits.fetch_add(1, Ordering::Relaxed);
             metrics.requests_total.fetch_add(1, Ordering::Relaxed);
+            // Warm-boot accounting is a gauge mirrored from the cache's
+            // own counter (only it knows which entries came from a dump).
+            metrics
+                .cache_warm_hits
+                .store(cache.results().stats().warm_hits, Ordering::Relaxed);
             let _ = r.payload.resp.send(Ok(Reply {
                 hyps: pred.hyps,
                 decoder_calls: 0,
@@ -195,19 +294,44 @@ fn process_batch<B: Backend>(
     queue: &RequestQueue<Job>,
     metrics: &Arc<Metrics>,
     cache: &ServeCache,
+    degrade_level: u8,
 ) {
     let mode = batch[0].mode;
     match mode {
         DecodeMode::Greedy | DecodeMode::SpecGreedy { .. } => {
-            stream_batch(backend, vocab, batch, queue, metrics, cache, mode)
+            stream_batch(backend, vocab, batch, queue, metrics, cache, mode, degrade_level)
         }
         DecodeMode::Beam { .. } | DecodeMode::Sbs { .. } => {
-            solo_batch(backend, vocab, batch, metrics, cache, mode)
+            solo_batch(backend, vocab, batch, metrics, cache, mode, degrade_level)
         }
     }
 }
 
-/// Beam / SBS: the batcher hands us one request at a time.
+/// Fold one successful `DecodeOutput` into the metrics registry (the
+/// shared tail of the solo path and the supervised retry path).
+fn absorb_solo_output(metrics: &Metrics, out: &crate::decoding::DecodeOutput) {
+    metrics
+        .tokens_generated
+        .fetch_add(out.stats.acceptance.total_tokens as u64, Ordering::Relaxed);
+    metrics.draft_tokens_accepted.fetch_add(
+        out.stats.acceptance.accepted_draft_tokens as u64,
+        Ordering::Relaxed,
+    );
+    metrics
+        .draft_accepted_query
+        .fetch_add(out.stats.accepted_query_tokens as u64, Ordering::Relaxed);
+    metrics
+        .draft_accepted_corpus
+        .fetch_add(out.stats.accepted_corpus_tokens as u64, Ordering::Relaxed);
+    metrics
+        .decoder_calls
+        .fetch_add(out.stats.decoder_calls as u64, Ordering::Relaxed);
+    metrics.requests_total.fetch_add(1, Ordering::Relaxed);
+}
+
+/// Beam / SBS: the batcher hands us one request at a time. The decode is
+/// supervised: a panic is contained, retried once after a backoff, and a
+/// second panic becomes an `ERR` for this one client.
 fn solo_batch<B: Backend>(
     backend: &B,
     vocab: &Vocab,
@@ -215,6 +339,7 @@ fn solo_batch<B: Backend>(
     metrics: &Arc<Metrics>,
     cache: &ServeCache,
     mode: DecodeMode,
+    degrade_level: u8,
 ) {
     for r in &batch {
         let Some(src) = validate(backend, vocab, r, metrics) else {
@@ -229,7 +354,7 @@ fn solo_batch<B: Backend>(
         let t_admit_ns = trace_admission(r.enqueued, track);
         let t0 = Instant::now();
         let _tick = trace_span!(Phase::BatchTick, 1);
-        let out = match mode {
+        let attempt = || match mode {
             DecodeMode::Beam { n } => beam_search(backend, &src, n),
             DecodeMode::Sbs { n, dl } => {
                 let mut cfg = SbsConfig::new(n, dl);
@@ -237,32 +362,42 @@ fn solo_batch<B: Backend>(
                 // windows can reorder SBS's candidate frontier, and the
                 // serving default keeps outputs bit-identical to the
                 // cold path (greedy-spec corpus drafts are always safe).
-                cfg.corpus_drafts = cache.corpus_drafts_for_sbs();
+                // Degradation level ≥ 1 drops them for opted-in configs
+                // too (those already accepted store-dependent outputs).
+                cfg.corpus_drafts = if degrade_level >= 1 {
+                    Vec::new()
+                } else {
+                    cache.corpus_drafts_for_sbs()
+                };
                 sbs(backend, &src, &cfg)
             }
             _ => unreachable!("solo_batch only handles beam/sbs"),
         };
+        let out = match catch_unwind(AssertUnwindSafe(attempt)) {
+            Ok(res) => res,
+            Err(p) => {
+                metrics.panics_contained.fetch_add(1, Ordering::Relaxed);
+                metrics.requests_retried.fetch_add(1, Ordering::Relaxed);
+                std::thread::sleep(RETRY_BACKOFF);
+                match catch_unwind(AssertUnwindSafe(attempt)) {
+                    Ok(res) => res,
+                    Err(p2) => {
+                        metrics.panics_contained.fetch_add(1, Ordering::Relaxed);
+                        let _ = p;
+                        let _ = r
+                            .payload
+                            .resp
+                            .send(Err(format!("panic: {}", panic_text(&p2))));
+                        metrics.requests_failed.fetch_add(1, Ordering::Relaxed);
+                        metrics.decode_latency.record(t0.elapsed());
+                        continue;
+                    }
+                }
+            }
+        };
         match out {
             Ok(out) => {
-                metrics
-                    .tokens_generated
-                    .fetch_add(out.stats.acceptance.total_tokens as u64, Ordering::Relaxed);
-                metrics.draft_tokens_accepted.fetch_add(
-                    out.stats.acceptance.accepted_draft_tokens as u64,
-                    Ordering::Relaxed,
-                );
-                metrics.draft_accepted_query.fetch_add(
-                    out.stats.accepted_query_tokens as u64,
-                    Ordering::Relaxed,
-                );
-                metrics.draft_accepted_corpus.fetch_add(
-                    out.stats.accepted_corpus_tokens as u64,
-                    Ordering::Relaxed,
-                );
-                metrics
-                    .decoder_calls
-                    .fetch_add(out.stats.decoder_calls as u64, Ordering::Relaxed);
-                metrics.requests_total.fetch_add(1, Ordering::Relaxed);
+                absorb_solo_output(metrics, &out);
                 let reply = Reply {
                     hyps: out
                         .hyps
@@ -378,8 +513,102 @@ impl<'a> Run<'a> {
     }
 }
 
+/// Lane bookkeeping: reply channel, per-request decode timer, the
+/// session call count at admission (so the per-request decoder_calls
+/// stat covers only this request's lifetime), replied?, and the
+/// encoded query (the completion's cache key).
+#[derive(Debug)]
+struct LaneCtx {
+    resp: mpsc::Sender<JobResult>,
+    t0: Instant,
+    calls_at_admit: usize,
+    replied: bool,
+    ids: Vec<i64>,
+    /// Synthetic trace track and admission timestamp — request
+    /// intervals overlap on this thread, so each lane records its
+    /// whole-request span manually onto its own track.
+    track: u64,
+    t_admit_ns: u64,
+}
+
+/// Open a lane's bookkeeping for one admitted request.
+fn fresh_lane(r: &Request<Job>, ids: &[i64], calls_at_admit: usize) -> LaneCtx {
+    let track = REQ_TRACK.fetch_add(1, Ordering::Relaxed);
+    LaneCtx {
+        resp: r.payload.resp.clone(),
+        t0: Instant::now(),
+        calls_at_admit,
+        replied: false,
+        ids: ids.to_vec(),
+        track,
+        t_admit_ns: trace_admission(r.enqueued, track),
+    }
+}
+
+/// Retry one quarantined lane solo through the stateless-equivalent free
+/// decoders — exact by the session-parity and speculation-losslessness
+/// invariants, so a successful retry is bit-identical to what the
+/// panicked session would have produced. Single attempt: a second panic
+/// becomes this client's `ERR`.
+fn retry_lane_solo<B: Backend>(
+    backend: &B,
+    vocab: &Vocab,
+    metrics: &Metrics,
+    cache: &ServeCache,
+    mode: DecodeMode,
+    lane: &LaneCtx,
+    degrade_level: u8,
+) {
+    metrics.requests_retried.fetch_add(1, Ordering::Relaxed);
+    std::thread::sleep(RETRY_BACKOFF);
+    // No corpus drafts on the retry (they are output-neutral here, and
+    // the simplest recovery path is the most predictable one); level 2
+    // degradation drops speculation the same way the live session would.
+    let attempt = || match mode {
+        DecodeMode::Greedy => greedy(backend, &lane.ids),
+        DecodeMode::SpecGreedy { dl } => {
+            let dl = if degrade_level >= 2 { 0 } else { dl };
+            spec_greedy(backend, &lane.ids, &DraftConfig::new(dl))
+        }
+        _ => unreachable!("stream lanes are greedy/spec-greedy"),
+    };
+    match catch_unwind(AssertUnwindSafe(attempt)) {
+        Ok(Ok(out)) => {
+            absorb_solo_output(metrics, &out);
+            let hyp = &out.hyps[0];
+            let reply = Reply {
+                hyps: vec![(vocab.decode(&hyp.tokens), hyp.score)],
+                decoder_calls: out.stats.decoder_calls,
+                acceptance_rate: out.stats.acceptance.rate(),
+            };
+            record_completion(
+                cache,
+                metrics,
+                mode,
+                &lane.ids,
+                &reply.hyps,
+                &hyp.tokens,
+                reply.acceptance_rate,
+            );
+            let _ = lane.resp.send(Ok(reply));
+        }
+        Ok(Err(e)) => {
+            let _ = lane.resp.send(Err(format!("decode failed: {e}")));
+            metrics.requests_failed.fetch_add(1, Ordering::Relaxed);
+        }
+        Err(p) => {
+            metrics.panics_contained.fetch_add(1, Ordering::Relaxed);
+            let _ = lane.resp.send(Err(format!("panic: {}", panic_text(&p))));
+            metrics.requests_failed.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+    metrics.decode_latency.record(lane.t0.elapsed());
+    trace_completion(lane.t_admit_ns, lane.track, 0);
+}
+
 /// Greedy / speculative-greedy: run a live session, replying per lane as
 /// it finishes and admitting compatible newcomers between steps.
+#[allow(clippy::too_many_arguments)]
 fn stream_batch<B: Backend>(
     backend: &B,
     vocab: &Vocab,
@@ -388,6 +617,7 @@ fn stream_batch<B: Backend>(
     metrics: &Arc<Metrics>,
     cache: &ServeCache,
     mode: DecodeMode,
+    degrade_level: u8,
 ) {
     let max_lanes = queue.max_batch.max(1);
 
@@ -415,54 +645,56 @@ fn stream_batch<B: Backend>(
             metrics.requests_failed.fetch_add(1, Ordering::Relaxed);
         }
     };
-    let memory = match backend.encode(&refs) {
-        Ok(m) => m,
-        Err(e) => return fail_all(&valid, format!("encode failed: {e}")),
+    // Session setup touches the backend too — encoder kernels, session
+    // begin, per-lane arena rows in `admit` — so it is supervised like
+    // the step loop: a setup panic means no usable session exists, and
+    // every validated request is retried solo instead.
+    let mut run_slot: Option<Run> = None;
+    let setup = catch_unwind(AssertUnwindSafe(|| -> Result<()> {
+        let memory = backend
+            .encode(&refs)
+            .map_err(|e| anyhow::anyhow!("encode failed: {e}"))?;
+        let sess = backend
+            .begin(memory)
+            .map_err(|e| anyhow::anyhow!("session failed: {e}"))?;
+        let mut run = match mode {
+            DecodeMode::SpecGreedy { dl } => {
+                // Degradation ladder, both output-neutral for
+                // speculation: level 1 drops the corpus draft source,
+                // level 2 drops speculative drafts entirely (dl = 0 is
+                // the lossless sentinel draft).
+                let dl = if degrade_level >= 2 { 0 } else { dl };
+                let corpus = if degrade_level >= 1 {
+                    Vec::new()
+                } else {
+                    cache.corpus_drafts()
+                };
+                Run::Spec(SpecGreedyRun::with_corpus(sess, DraftConfig::new(dl), corpus))
+            }
+            _ => Run::Greedy(GreedyRun::new(sess)),
+        };
+        for (i, (_, ids)) in valid.iter().enumerate() {
+            run.admit(i, ids);
+        }
+        run_slot = Some(run);
+        Ok(())
+    }));
+    let mut run = match setup {
+        Ok(Ok(())) => run_slot.expect("setup stored the run"),
+        Ok(Err(e)) => return fail_all(&valid, e.to_string()),
+        Err(_p) => {
+            metrics.panics_contained.fetch_add(1, Ordering::Relaxed);
+            for (r, ids) in &valid {
+                let lane = fresh_lane(r, ids, 0);
+                retry_lane_solo(backend, vocab, metrics, cache, mode, &lane, degrade_level);
+            }
+            return;
+        }
     };
-    let sess = match backend.begin(memory) {
-        Ok(s) => s,
-        Err(e) => return fail_all(&valid, format!("session failed: {e}")),
-    };
-    let mut run = match mode {
-        DecodeMode::SpecGreedy { dl } => Run::Spec(SpecGreedyRun::with_corpus(
-            sess,
-            DraftConfig::new(dl),
-            cache.corpus_drafts(),
-        )),
-        _ => Run::Greedy(GreedyRun::new(sess)),
-    };
-
-    // Lane bookkeeping: reply channel, per-request decode timer, the
-    // session call count at admission (so the per-request decoder_calls
-    // stat covers only this request's lifetime), replied?, and the
-    // encoded query (the completion's cache key).
-    struct LaneCtx {
-        resp: mpsc::Sender<JobResult>,
-        t0: Instant,
-        calls_at_admit: usize,
-        replied: bool,
-        ids: Vec<i64>,
-        /// Synthetic trace track and admission timestamp — request
-        /// intervals overlap on this thread, so each lane records its
-        /// whole-request span manually onto its own track.
-        track: u64,
-        t_admit_ns: u64,
-    }
-    let mut lanes: Vec<LaneCtx> = Vec::new();
-    for (i, (r, ids)) in valid.iter().enumerate() {
-        let lane = run.admit(i, ids);
-        debug_assert_eq!(lane, lanes.len());
-        let track = REQ_TRACK.fetch_add(1, Ordering::Relaxed);
-        lanes.push(LaneCtx {
-            resp: r.payload.resp.clone(),
-            t0: Instant::now(),
-            calls_at_admit: run.calls(),
-            replied: false,
-            ids: ids.clone(),
-            track,
-            t_admit_ns: trace_admission(r.enqueued, track),
-        });
-    }
+    let mut lanes: Vec<LaneCtx> = valid
+        .iter()
+        .map(|(r, ids)| fresh_lane(r, ids, run.calls()))
+        .collect();
     drop(valid);
 
     // A session's encoder memory and cross-attention caches grow with
@@ -474,9 +706,26 @@ fn stream_batch<B: Backend>(
     let max_session_admissions = max_lanes.saturating_mul(8);
 
     loop {
-        let step_res = {
+        let step_res = match catch_unwind(AssertUnwindSafe(|| {
             let _tick = trace_span!(Phase::BatchTick, run.n_live() as u64);
             run.step()
+        })) {
+            Ok(res) => res,
+            Err(_p) => {
+                // Supervision: the session is poisoned — quarantine it
+                // (its Drop runs under its own catch_unwind so a second
+                // panic can't escape) and retry every unreplied lane
+                // solo via exact stateless recompute. One bad row costs
+                // one retry pass, not the worker thread.
+                metrics.panics_contained.fetch_add(1, Ordering::Relaxed);
+                let quarantined: Vec<LaneCtx> =
+                    lanes.into_iter().filter(|l| !l.replied).collect();
+                let _ = catch_unwind(AssertUnwindSafe(move || drop(run)));
+                for lane in &quarantined {
+                    retry_lane_solo(backend, vocab, metrics, cache, mode, lane, degrade_level);
+                }
+                return;
+            }
         };
         let finished = match step_res {
             Ok(f) => f,
@@ -531,11 +780,14 @@ fn stream_batch<B: Backend>(
 
         // Continuous batching: admit compatible newcomers into the live
         // session while there is lane budget and the session is young
-        // enough that its per-query caches stay bounded.
+        // enough that its per-query caches stay bounded. Expired
+        // newcomers are shed here too — mid-session admission must not
+        // smuggle a dead request into a lane.
         let free = max_lanes
             .saturating_sub(run.n_live())
             .min(max_session_admissions.saturating_sub(lanes.len()));
-        let newcomers = queue.try_pop_compatible(mode, free);
+        let newcomers =
+            queue.try_pop_compatible_shedding(mode, free, &mut |r| shed_request(r, metrics));
         if !newcomers.is_empty() {
             let _adm_span = trace_span!(Phase::Admission, newcomers.len() as u64);
             let now = Instant::now();
@@ -553,25 +805,49 @@ fn stream_batch<B: Backend>(
             }
             if !adm.is_empty() {
                 let refs: Vec<&[i64]> = adm.iter().map(|(_, ids)| ids.as_slice()).collect();
-                match backend.encode(&refs) {
-                    Ok(extra) => {
-                        let base = run.append_memory(&extra);
-                        for (k, (r, ids)) in adm.iter().enumerate() {
-                            let lane = run.admit(base + k, ids);
-                            debug_assert_eq!(lane, lanes.len());
-                            let track = REQ_TRACK.fetch_add(1, Ordering::Relaxed);
-                            lanes.push(LaneCtx {
-                                resp: r.payload.resp.clone(),
-                                t0: Instant::now(),
-                                calls_at_admit: run.calls(),
-                                replied: false,
-                                ids: ids.clone(),
-                                track,
-                                t_admit_ns: trace_admission(r.enqueued, track),
-                            });
+                // Mid-session growth hits the same panic surfaces as
+                // setup (encoder kernels, arena rows), and a panic here
+                // may leave the session half-grown — quarantine it and
+                // retry residents and newcomers alike solo.
+                let grow = catch_unwind(AssertUnwindSafe(|| -> Result<()> {
+                    let extra = backend
+                        .encode(&refs)
+                        .map_err(|e| anyhow::anyhow!("encode failed: {e}"))?;
+                    let base = run.append_memory(&extra);
+                    for (k, (_, ids)) in adm.iter().enumerate() {
+                        run.admit(base + k, ids);
+                    }
+                    Ok(())
+                }));
+                match grow {
+                    Ok(Ok(())) => {
+                        let calls = run.calls();
+                        for (r, ids) in &adm {
+                            lanes.push(fresh_lane(r, ids, calls));
                         }
                     }
-                    Err(e) => fail_all(&adm, format!("encode failed: {e}")),
+                    Ok(Err(e)) => fail_all(&adm, e.to_string()),
+                    Err(_p) => {
+                        metrics.panics_contained.fetch_add(1, Ordering::Relaxed);
+                        let mut quarantined: Vec<LaneCtx> =
+                            lanes.into_iter().filter(|l| !l.replied).collect();
+                        for (r, ids) in &adm {
+                            quarantined.push(fresh_lane(r, ids, 0));
+                        }
+                        let _ = catch_unwind(AssertUnwindSafe(move || drop(run)));
+                        for lane in &quarantined {
+                            retry_lane_solo(
+                                backend,
+                                vocab,
+                                metrics,
+                                cache,
+                                mode,
+                                lane,
+                                degrade_level,
+                            );
+                        }
+                        return;
+                    }
                 }
             }
         }
@@ -592,6 +868,7 @@ fn stream_batch<B: Backend>(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::faults::{self, FaultKind, FaultPlan, Trigger};
     use crate::testutil::CopyModel;
     use std::time::Duration;
 
@@ -681,7 +958,7 @@ mod tests {
         assert_eq!(batch.len(), 1);
         // Arrives between batching ticks — after pop, before decode ends.
         let rx2 = send_job(&queue, DecodeMode::Greedy, "CCO");
-        process_batch(&backend, &vocab, batch, &queue, &metrics, &cache);
+        process_batch(&backend, &vocab, batch, &queue, &metrics, &cache, 0);
 
         assert_eq!(rx1.recv().unwrap().unwrap().hyps[0].0, "c1ccccc1");
         assert_eq!(
@@ -704,7 +981,7 @@ mod tests {
         let rx1 = send_job(&queue, DecodeMode::Greedy, "CCO");
         let batch = queue.pop_batch().unwrap();
         let _rx2 = send_job(&queue, DecodeMode::Beam { n: 2 }, "CCO");
-        process_batch(&backend, &vocab, batch, &queue, &metrics, &ServeCache::default());
+        process_batch(&backend, &vocab, batch, &queue, &metrics, &ServeCache::default(), 0);
 
         assert!(rx1.recv().unwrap().is_ok());
         assert_eq!(queue.len(), 1, "beam request must stay queued");
@@ -722,13 +999,13 @@ mod tests {
 
         let rx1 = send_job(&queue, DecodeMode::SpecGreedy { dl: 2 }, "c1ccccc1");
         let b1 = queue.pop_batch().unwrap();
-        process_batch(&backend, &vocab, b1, &queue, &metrics, &cache);
+        process_batch(&backend, &vocab, b1, &queue, &metrics, &cache, 0);
         let r1 = rx1.recv().unwrap().unwrap();
         assert!(r1.decoder_calls > 0);
 
         let rx2 = send_job(&queue, DecodeMode::SpecGreedy { dl: 2 }, "c1ccccc1");
         let b2 = queue.pop_batch().unwrap();
-        process_batch(&backend, &vocab, b2, &queue, &metrics, &cache);
+        process_batch(&backend, &vocab, b2, &queue, &metrics, &cache, 0);
         let r2 = rx2.recv().unwrap().unwrap();
         assert_eq!(r2.decoder_calls, 0, "hit must skip decoding");
         assert_eq!(r2.hyps, r1.hyps, "cached reply must be bit-identical");
@@ -740,7 +1017,7 @@ mod tests {
         // A different decoder kind over the same query is a miss.
         let rx3 = send_job(&queue, DecodeMode::Greedy, "c1ccccc1");
         let b3 = queue.pop_batch().unwrap();
-        process_batch(&backend, &vocab, b3, &queue, &metrics, &cache);
+        process_batch(&backend, &vocab, b3, &queue, &metrics, &cache, 0);
         let r3 = rx3.recv().unwrap().unwrap();
         assert!(r3.decoder_calls > 0);
         assert_eq!(metrics.cache_hits.load(Ordering::Relaxed), 1);
@@ -781,5 +1058,181 @@ mod tests {
         assert_eq!(metrics2.cache_inserts.load(Ordering::Relaxed), 0);
         assert!(off.results().is_empty());
         assert!(off.drafts().is_empty());
+    }
+
+    /// Supervision: a one-shot injected panic in the live session is
+    /// contained, the lane is retried solo, and the reply is the same
+    /// output a fault-free run produces.
+    #[test]
+    fn injected_session_panic_is_contained_and_retried() {
+        let _guard = faults::testing::lock();
+        let _disarm = faults::testing::Disarm;
+        let vocab = tiny_vocab();
+        let backend = CopyModel::new(96, 96, vocab.len());
+        let metrics = Arc::new(Metrics::default());
+
+        // Nth trigger: exactly the first decoder.extend fires, so the
+        // solo retry (a fresh extend sequence) succeeds.
+        faults::install(FaultPlan::new(7).with(
+            "decoder.extend",
+            FaultKind::Panic,
+            Trigger::Nth(1),
+        ));
+        let queue = RequestQueue::new(8, Duration::from_millis(1));
+        let rx = send_job(&queue, DecodeMode::Greedy, "CCO");
+        queue.close();
+        run_worker(&backend, &vocab, &queue, &metrics, &ServeCache::disabled());
+        let reply = rx.recv().unwrap().expect("retried lane must succeed");
+        assert_eq!(reply.hyps[0].0, "CCO", "retry must be exact");
+        assert_eq!(metrics.panics_contained.load(Ordering::Relaxed), 1);
+        assert_eq!(metrics.requests_retried.load(Ordering::Relaxed), 1);
+        assert_eq!(metrics.requests_failed.load(Ordering::Relaxed), 0);
+        // Exactly one reply.
+        assert!(rx.try_recv().is_err());
+    }
+
+    /// A persistent panic (fires every time) costs that client one ERR —
+    /// and the worker keeps serving afterwards.
+    #[test]
+    fn persistent_panic_errs_once_and_worker_survives() {
+        let _guard = faults::testing::lock();
+        let _disarm = faults::testing::Disarm;
+        let vocab = tiny_vocab();
+        let backend = CopyModel::new(96, 96, vocab.len());
+        let metrics = Arc::new(Metrics::default());
+
+        faults::install(FaultPlan::new(7).with(
+            "decoder.extend",
+            FaultKind::Panic,
+            Trigger::Prob(1.0),
+        ));
+        let queue = RequestQueue::new(8, Duration::from_millis(1));
+        let rx = send_job(&queue, DecodeMode::SpecGreedy { dl: 2 }, "CCO");
+        queue.close();
+        run_worker(&backend, &vocab, &queue, &metrics, &ServeCache::disabled());
+        let err = rx.recv().unwrap().unwrap_err();
+        assert!(err.contains("panic"), "client must see the contained panic: {err}");
+        assert!(rx.try_recv().is_err(), "exactly one reply");
+        assert!(metrics.panics_contained.load(Ordering::Relaxed) >= 2);
+
+        // Disarm and serve again on the same (surviving) code path.
+        faults::disarm();
+        let queue2 = RequestQueue::new(8, Duration::from_millis(1));
+        let rx2 = send_job(&queue2, DecodeMode::SpecGreedy { dl: 2 }, "CCO");
+        queue2.close();
+        run_worker(&backend, &vocab, &queue2, &metrics, &ServeCache::disabled());
+        assert_eq!(rx2.recv().unwrap().unwrap().hyps[0].0, "CCO");
+    }
+
+    /// Solo beam decodes are supervised too: one-shot panic → retried,
+    /// exact reply.
+    #[test]
+    fn solo_beam_panic_is_retried() {
+        let _guard = faults::testing::lock();
+        let _disarm = faults::testing::Disarm;
+        let vocab = tiny_vocab();
+        let backend = CopyModel::new(96, 96, vocab.len());
+        let metrics = Arc::new(Metrics::default());
+
+        faults::install(FaultPlan::new(11).with(
+            "decoder.extend",
+            FaultKind::Panic,
+            Trigger::Nth(1),
+        ));
+        let queue = RequestQueue::new(8, Duration::from_millis(1));
+        let rx = send_job(&queue, DecodeMode::Beam { n: 2 }, "CCO");
+        queue.close();
+        run_worker(&backend, &vocab, &queue, &metrics, &ServeCache::disabled());
+        let reply = rx.recv().unwrap().expect("retried beam must succeed");
+        assert_eq!(reply.hyps[0].0, "CCO");
+        assert_eq!(metrics.panics_contained.load(Ordering::Relaxed), 1);
+        assert_eq!(metrics.requests_retried.load(Ordering::Relaxed), 1);
+    }
+
+    /// Expired requests never reach a decode lane: they are shed at pop
+    /// time with ERR deadline_exceeded.
+    #[test]
+    fn expired_requests_shed_with_deadline_err() {
+        let vocab = tiny_vocab();
+        let backend = CopyModel::new(96, 96, vocab.len());
+        let metrics = Arc::new(Metrics::default());
+        let queue: RequestQueue<Job> =
+            RequestQueue::with_capacity(8, Duration::from_millis(1), 8);
+
+        let (tx_dead, rx_dead) = mpsc::channel();
+        queue
+            .try_push(
+                DecodeMode::Greedy,
+                Job {
+                    smiles: "CCO".to_string(),
+                    resp: tx_dead,
+                },
+                Some(Instant::now() - Duration::from_millis(1)),
+            )
+            .unwrap();
+        let rx_live = send_job(&queue, DecodeMode::Greedy, "CCO");
+        queue.close();
+        run_worker(&backend, &vocab, &queue, &metrics, &ServeCache::disabled());
+
+        let err = rx_dead.recv().unwrap().unwrap_err();
+        assert_eq!(err, "deadline_exceeded");
+        assert!(rx_dead.try_recv().is_err(), "exactly one reply for shed requests");
+        assert!(rx_live.recv().unwrap().is_ok(), "live request still served");
+        assert_eq!(metrics.requests_shed.load(Ordering::Relaxed), 1);
+        assert_eq!(
+            metrics.requests_total.load(Ordering::Relaxed),
+            1,
+            "shed request must never count as served"
+        );
+    }
+
+    /// The degradation ladder escalates only under sustained pressure
+    /// and de-escalates immediately.
+    #[test]
+    fn degrade_ladder_escalates_after_sustained_pressure() {
+        let mut d = DegradeState::default();
+        assert_eq!(d.observe(0.1), 0);
+        assert_eq!(d.observe(0.6), 0);
+        assert_eq!(d.observe(0.6), 0);
+        assert_eq!(d.observe(0.6), 1, "third consecutive hot tick escalates");
+        assert_eq!(d.observe(0.6), 1);
+        // Level-2 pressure needs its own sustain run.
+        assert_eq!(d.observe(0.9), 1);
+        assert_eq!(d.observe(0.9), 1);
+        assert_eq!(d.observe(0.9), 2);
+        // De-escalation is immediate.
+        assert_eq!(d.observe(0.6), 1);
+        assert_eq!(d.observe(0.0), 0);
+        // A blip never escalates.
+        assert_eq!(d.observe(0.9), 0);
+        assert_eq!(d.observe(0.0), 0);
+    }
+
+    /// Degraded decoding is output-neutral for greedy/spec-greedy: the
+    /// same reply at level 0 and level 2 (speculation is lossless for
+    /// any draft set, including none).
+    #[test]
+    fn degraded_decode_is_output_neutral() {
+        let vocab = tiny_vocab();
+        let backend = CopyModel::new(96, 96, vocab.len());
+        let metrics = Arc::new(Metrics::default());
+        let mut replies = Vec::new();
+        for level in [0u8, 1, 2] {
+            let queue = RequestQueue::new(8, Duration::from_millis(1));
+            let rx = send_job(&queue, DecodeMode::SpecGreedy { dl: 3 }, "c1ccccc1");
+            let batch = queue.pop_batch().unwrap();
+            process_batch(
+                &backend,
+                &vocab,
+                batch,
+                &queue,
+                &metrics,
+                &ServeCache::disabled(),
+                level,
+            );
+            replies.push(rx.recv().unwrap().unwrap().hyps);
+        }
+        assert_eq!(replies[0], replies[1]);
+        assert_eq!(replies[0], replies[2]);
     }
 }

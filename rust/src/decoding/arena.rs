@@ -365,6 +365,9 @@ impl KvArena {
     }
 
     fn alloc_page(&mut self) -> u32 {
+        // Chaos hook: an injected panic here models a failed page
+        // allocation (the real path is infallible Vec growth).
+        crate::faults::fire_infallible("arena.alloc");
         if let Some(budget) = self.budget_pages {
             while self.resident >= budget && self.evict_one() {}
         }

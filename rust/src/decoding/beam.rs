@@ -179,6 +179,7 @@ pub fn beam_search<B: Backend>(backend: &B, src: &[i64], n: usize) -> Result<Dec
             .iter()
             .map(|b| (b.row, &b.state.tokens[b.sess_len..]))
             .collect();
+        crate::faults::fire("decoder.extend")?;
         let lp = {
             let _ext = trace_span!(Phase::Extend, deltas.len() as u64);
             sess.extend(&deltas)?

@@ -105,6 +105,7 @@ impl<'a> GreedyRun<'a> {
         if idxs.is_empty() {
             return Ok(Vec::new());
         }
+        crate::faults::fire("decoder.extend")?;
         let lp = {
             let _ext = trace_span!(Phase::Extend, deltas.len() as u64);
             self.sess.extend(&deltas)?

@@ -197,6 +197,7 @@ fn sbs_impl<B: Backend>(
             .zip(&delta_buf)
             .map(|(&r, d)| (r, d.as_slice()))
             .collect();
+        crate::faults::fire("decoder.extend")?;
         let lp = {
             let _ext = trace_span!(Phase::Extend, deltas.len() as u64);
             sess.extend(&deltas)?

@@ -187,6 +187,7 @@ impl<'a> SpecGreedyRun<'a> {
             .zip(&delta_buf)
             .map(|(&r, d)| (r, d.as_slice()))
             .collect();
+        crate::faults::fire("decoder.extend")?;
         let lp = {
             let _ext = trace_span!(Phase::Extend, deltas.len() as u64);
             self.sess.extend(&deltas)?

@@ -1,0 +1,421 @@
+//! Seeded, deterministic fault injection for chaos testing the serving
+//! stack.
+//!
+//! A [`FaultPlan`] names *sites* (string labels compiled into the hot
+//! paths: `decoder.extend`, `kernel.gemm`, `arena.alloc`,
+//! `pjrt.session`) and attaches rules that fire a fault — a panic, an
+//! injected `Err`, or a slow-down sleep — at some of the hits on that
+//! site. Decisions are a pure function of `(seed, site, rule, hit
+//! counter)`: re-running the same workload under the same plan injects
+//! the same faults at the same points, which is what lets the chaos
+//! property tests compare a faulted run against a fault-free oracle.
+//!
+//! The module is std-only and **inert by default**: every instrumented
+//! site costs one relaxed atomic load until a plan is installed, so the
+//! production hot paths pay nothing. Plans are armed explicitly — by
+//! tests via [`install`], or by `rxnspec serve` from the
+//! `RXNSPEC_FAULTS=<seed>:<spec>` environment variable (see
+//! [`plan_from_env`] for the grammar). Merely *setting* the variable
+//! never affects library users that don't opt in.
+//!
+//! The plan is process-global (the sites are free functions on hot
+//! paths); tests that install plans serialize on their own lock and
+//! [`disarm`] when done.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Duration;
+
+use anyhow::{bail, Result};
+
+/// What an armed rule does at a matched hit.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// `panic!` at the site (models a decoder/kernel bug or an
+    /// allocation failure — the supervision layer must contain it).
+    Panic,
+    /// Sleep this many milliseconds, then proceed (models a stall; the
+    /// deadline layer must shed around it).
+    Slow(u64),
+    /// Return an `Err` from the site (sites without a `Result` path
+    /// escalate this to a panic).
+    Err,
+}
+
+/// When a rule fires: on a pseudo-random fraction of hits, or on exactly
+/// one deterministic hit (1-based) — the latter is what targeted unit
+/// tests use.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Trigger {
+    Prob(f64),
+    Nth(u64),
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultRule {
+    pub site: String,
+    pub kind: FaultKind,
+    pub trigger: Trigger,
+}
+
+/// A seeded set of rules. `Default` is an empty (fires-nothing) plan.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FaultPlan {
+    pub seed: u64,
+    pub rules: Vec<FaultRule>,
+}
+
+impl FaultPlan {
+    pub fn new(seed: u64) -> FaultPlan {
+        FaultPlan {
+            seed,
+            rules: Vec::new(),
+        }
+    }
+
+    /// Builder-style rule append.
+    pub fn with(mut self, site: &str, kind: FaultKind, trigger: Trigger) -> FaultPlan {
+        self.rules.push(FaultRule {
+            site: site.to_string(),
+            kind,
+            trigger,
+        });
+        self
+    }
+}
+
+struct PlanState {
+    plan: Option<FaultPlan>,
+    /// Per-site hit counters since the plan was installed.
+    hits: HashMap<String, u64>,
+}
+
+/// Fast inert-path gate: `fire()` is one relaxed load when no plan is
+/// armed.
+static ACTIVE: AtomicBool = AtomicBool::new(false);
+/// Total faults fired since process start (across installs).
+static INJECTED: AtomicU64 = AtomicU64::new(0);
+
+fn state() -> &'static Mutex<PlanState> {
+    static S: OnceLock<Mutex<PlanState>> = OnceLock::new();
+    S.get_or_init(|| {
+        Mutex::new(PlanState {
+            plan: None,
+            hits: HashMap::new(),
+        })
+    })
+}
+
+fn lock_state() -> std::sync::MutexGuard<'static, PlanState> {
+    // A panic *is* this module's product; never let one poison us.
+    state().lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Arm a plan (replacing any previous one) and reset all hit counters.
+pub fn install(plan: FaultPlan) {
+    let mut g = lock_state();
+    g.hits.clear();
+    let armed = !plan.rules.is_empty();
+    g.plan = Some(plan);
+    ACTIVE.store(armed, Ordering::SeqCst);
+}
+
+/// Disarm: sites go back to the one-atomic-load inert path.
+pub fn disarm() {
+    let mut g = lock_state();
+    g.plan = None;
+    g.hits.clear();
+    ACTIVE.store(false, Ordering::SeqCst);
+}
+
+/// Total faults fired since process start.
+pub fn injected() -> u64 {
+    INJECTED.load(Ordering::Relaxed)
+}
+
+/// Hits recorded at `site` under the current plan (0 when disarmed).
+pub fn hits(site: &str) -> u64 {
+    lock_state().hits.get(site).copied().unwrap_or(0)
+}
+
+/// Parse `RXNSPEC_FAULTS=<seed>:<spec>` where `<spec>` is a
+/// comma-separated list of `site=kind@prob` or `site=kind#nth` rules and
+/// `kind` is `panic`, `err`, or `slow<ms>`:
+///
+/// ```text
+/// RXNSPEC_FAULTS="7:decoder.extend=panic@0.02,decoder.extend=slow5@0.05,arena.alloc=panic#3"
+/// ```
+///
+/// Returns `None` when the variable is unset; `Err` on a malformed spec
+/// (callers surface it rather than silently serving without chaos).
+pub fn plan_from_env() -> Option<Result<FaultPlan>> {
+    let raw = std::env::var("RXNSPEC_FAULTS").ok()?;
+    if raw.trim().is_empty() {
+        return None;
+    }
+    Some(parse_spec(&raw))
+}
+
+/// Parse the `RXNSPEC_FAULTS` grammar from a string (see
+/// [`plan_from_env`]).
+pub fn parse_spec(raw: &str) -> Result<FaultPlan> {
+    let Some((seed_s, rules_s)) = raw.split_once(':') else {
+        bail!("fault spec {raw:?}: expected <seed>:<rules>");
+    };
+    let seed: u64 = seed_s
+        .trim()
+        .parse()
+        .map_err(|_| anyhow::anyhow!("fault spec: bad seed {seed_s:?}"))?;
+    let mut plan = FaultPlan::new(seed);
+    for rule_s in rules_s.split(',') {
+        let rule_s = rule_s.trim();
+        if rule_s.is_empty() {
+            continue;
+        }
+        let Some((site, action)) = rule_s.split_once('=') else {
+            bail!("fault rule {rule_s:?}: expected site=kind@prob or site=kind#nth");
+        };
+        let (kind_s, trigger) = if let Some((k, p)) = action.split_once('@') {
+            let prob: f64 = p
+                .parse()
+                .map_err(|_| anyhow::anyhow!("fault rule {rule_s:?}: bad probability {p:?}"))?;
+            if !(0.0..=1.0).contains(&prob) {
+                bail!("fault rule {rule_s:?}: probability out of [0,1]");
+            }
+            (k, Trigger::Prob(prob))
+        } else if let Some((k, n)) = action.split_once('#') {
+            let nth: u64 = n
+                .parse()
+                .map_err(|_| anyhow::anyhow!("fault rule {rule_s:?}: bad hit index {n:?}"))?;
+            if nth == 0 {
+                bail!("fault rule {rule_s:?}: hit indices are 1-based");
+            }
+            (k, Trigger::Nth(nth))
+        } else {
+            bail!("fault rule {rule_s:?}: missing @prob or #nth");
+        };
+        let kind = if kind_s == "panic" {
+            FaultKind::Panic
+        } else if kind_s == "err" {
+            FaultKind::Err
+        } else if let Some(ms) = kind_s.strip_prefix("slow") {
+            FaultKind::Slow(
+                ms.parse()
+                    .map_err(|_| anyhow::anyhow!("fault rule {rule_s:?}: bad slow ms {ms:?}"))?,
+            )
+        } else {
+            bail!("fault rule {rule_s:?}: unknown kind {kind_s:?} (panic|err|slow<ms>)");
+        };
+        plan.rules.push(FaultRule {
+            site: site.trim().to_string(),
+            kind,
+            trigger,
+        });
+    }
+    Ok(plan)
+}
+
+/// splitmix64-style mix of `(seed, site, rule index, hit number)` to a
+/// uniform value in `[0, 1)` — the deterministic coin every `Prob` rule
+/// flips.
+fn unit_hash(seed: u64, site: &str, rule: u64, n: u64) -> f64 {
+    let mut h = seed ^ 0x9E37_79B9_7F4A_7C15;
+    for b in site.bytes() {
+        h = (h ^ u64::from(b)).wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h ^= rule.wrapping_mul(0xD1B5_4A32_D192_ED03);
+    h ^= n.wrapping_mul(0x2545_F491_4F6C_DD1D);
+    h ^= h >> 30;
+    h = h.wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    h ^= h >> 27;
+    h = h.wrapping_mul(0x94D0_49BB_1331_11EB);
+    h ^= h >> 31;
+    (h >> 11) as f64 / (1u64 << 53) as f64
+}
+
+/// Count a hit at `site` and return the fault to apply, if any. First
+/// matching rule wins.
+fn decide(site: &str) -> Option<FaultKind> {
+    let mut g = lock_state();
+    let (seed, matching): (u64, Vec<(u64, FaultKind, Trigger)>) = match &g.plan {
+        None => return None,
+        Some(p) => (
+            p.seed,
+            p.rules
+                .iter()
+                .enumerate()
+                .filter(|(_, r)| r.site == site)
+                .map(|(i, r)| (i as u64, r.kind, r.trigger))
+                .collect(),
+        ),
+    };
+    if matching.is_empty() {
+        return None;
+    }
+    let n = {
+        let c = g.hits.entry(site.to_string()).or_insert(0);
+        *c += 1;
+        *c
+    };
+    drop(g);
+    for (idx, kind, trigger) in matching {
+        let fires = match trigger {
+            Trigger::Prob(p) => unit_hash(seed, site, idx, n) < p,
+            Trigger::Nth(k) => n == k,
+        };
+        if fires {
+            INJECTED.fetch_add(1, Ordering::Relaxed);
+            return Some(kind);
+        }
+    }
+    None
+}
+
+/// Instrumentation hook for sites with a `Result` path. Inert (one
+/// relaxed atomic load) unless a plan is armed.
+#[inline]
+pub fn fire(site: &str) -> Result<()> {
+    if !ACTIVE.load(Ordering::Relaxed) {
+        return Ok(());
+    }
+    match decide(site) {
+        None => Ok(()),
+        Some(FaultKind::Slow(ms)) => {
+            std::thread::sleep(Duration::from_millis(ms));
+            Ok(())
+        }
+        Some(FaultKind::Panic) => panic!("injected fault: panic at {site}"),
+        Some(FaultKind::Err) => bail!("injected fault: err at {site}"),
+    }
+}
+
+/// Instrumentation hook for sites without a `Result` path (kernels,
+/// allocation): `Err` rules escalate to panics here.
+#[inline]
+pub fn fire_infallible(site: &str) {
+    if !ACTIVE.load(Ordering::Relaxed) {
+        return;
+    }
+    if fire(site).is_err() {
+        panic!("injected fault: err at {site} (infallible site)");
+    }
+}
+
+/// Helpers for tests that arm the process-global fault plan — shared by
+/// this module's tests and the supervision tests in `worker.rs`. (The
+/// out-of-crate chaos suite runs in its own process and carries its own
+/// lock.)
+#[cfg(test)]
+pub mod testing {
+    use std::sync::{Mutex, MutexGuard, OnceLock};
+
+    /// Plan installation is process-global; every test that arms a plan
+    /// serializes on this lock and disarms on exit.
+    pub fn lock() -> MutexGuard<'static, ()> {
+        static L: OnceLock<Mutex<()>> = OnceLock::new();
+        L.get_or_init(|| Mutex::new(()))
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Drop guard: disarms the global plan even if the test panics.
+    pub struct Disarm;
+    impl Drop for Disarm {
+        fn drop(&mut self) {
+            super::disarm();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    use super::testing::{lock as test_lock, Disarm};
+
+    #[test]
+    fn inert_without_plan() {
+        let _g = test_lock();
+        let _d = Disarm;
+        disarm();
+        for _ in 0..100 {
+            fire("decoder.extend").unwrap();
+            fire_infallible("kernel.gemm");
+        }
+        assert_eq!(hits("decoder.extend"), 0, "disarmed sites must not count");
+    }
+
+    #[test]
+    fn nth_trigger_fires_exactly_once() {
+        let _g = test_lock();
+        let _d = Disarm;
+        install(FaultPlan::new(1).with("s", FaultKind::Err, Trigger::Nth(3)));
+        let outcomes: Vec<bool> = (0..6).map(|_| fire("s").is_err()).collect();
+        assert_eq!(outcomes, vec![false, false, true, false, false, false]);
+        assert_eq!(hits("s"), 6);
+    }
+
+    #[test]
+    fn prob_trigger_is_deterministic_and_roughly_calibrated() {
+        let _g = test_lock();
+        let _d = Disarm;
+        let run = || -> Vec<bool> {
+            install(FaultPlan::new(42).with("s", FaultKind::Err, Trigger::Prob(0.25)));
+            (0..400).map(|_| fire("s").is_err()).collect()
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a, b, "same seed must fire the same schedule");
+        let fired = a.iter().filter(|&&f| f).count();
+        assert!(
+            (50..=150).contains(&fired),
+            "p=0.25 over 400 hits fired {fired} times"
+        );
+        install(FaultPlan::new(43).with("s", FaultKind::Err, Trigger::Prob(0.25)));
+        let c: Vec<bool> = (0..400).map(|_| fire("s").is_err()).collect();
+        assert_ne!(a, c, "a different seed must fire a different schedule");
+    }
+
+    #[test]
+    fn panic_kind_panics_and_is_catchable() {
+        let _g = test_lock();
+        let _d = Disarm;
+        install(FaultPlan::new(1).with("s", FaultKind::Panic, Trigger::Nth(1)));
+        let r = std::panic::catch_unwind(|| fire("s"));
+        assert!(r.is_err(), "panic rule must unwind");
+        assert!(fire("s").is_ok(), "later hits pass");
+    }
+
+    #[test]
+    fn spec_grammar_roundtrip_and_rejection() {
+        let p = parse_spec("7:decoder.extend=panic@0.02,a.b=slow5@0.1,c=err#3").unwrap();
+        assert_eq!(p.seed, 7);
+        assert_eq!(p.rules.len(), 3);
+        assert_eq!(p.rules[0].kind, FaultKind::Panic);
+        assert_eq!(p.rules[0].trigger, Trigger::Prob(0.02));
+        assert_eq!(p.rules[1].kind, FaultKind::Slow(5));
+        assert_eq!(p.rules[2].trigger, Trigger::Nth(3));
+        for bad in [
+            "no-colon",
+            "x:site=panic@0.5",
+            "1:site=panic",
+            "1:site=wat@0.5",
+            "1:site=panic@1.5",
+            "1:site=panic#0",
+            "1:=panic@0.5:extra",
+        ] {
+            assert!(parse_spec(bad).is_err(), "must reject {bad:?}");
+        }
+    }
+
+    #[test]
+    fn slow_kind_delays_but_succeeds() {
+        let _g = test_lock();
+        let _d = Disarm;
+        install(FaultPlan::new(1).with("s", FaultKind::Slow(5), Trigger::Nth(1)));
+        let t0 = std::time::Instant::now();
+        fire("s").unwrap();
+        assert!(t0.elapsed() >= Duration::from_millis(4));
+    }
+}

@@ -124,6 +124,7 @@ impl PackedLinear {
     /// [`threads::par_min_macs`] gate; results are bit-identical at any
     /// thread count and dispatch level.
     pub fn apply_into(&self, x: &[f32], n: usize, y: &mut [f32], threads: usize) {
+        crate::faults::fire_infallible("kernel.gemm");
         self.apply_into_with(x, n, y, threads, simd::simd_level());
     }
 

@@ -23,6 +23,7 @@ pub mod chem;
 pub mod coordinator;
 pub mod decoding;
 pub mod draft;
+pub mod faults;
 pub mod kernels;
 pub mod model;
 pub mod planner;

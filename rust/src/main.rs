@@ -12,13 +12,13 @@
 
 use std::net::TcpListener;
 use std::path::PathBuf;
-use std::sync::atomic::AtomicBool;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
-use rxnspec::cache::ServeCache;
+use rxnspec::cache::{dump_to_path, load_into, ServeCache};
 use rxnspec::chem::read_split;
 use rxnspec::coordinator::{run_worker, serve, DecodeMode, Metrics, RequestQueue, ServerState};
 use rxnspec::decoding::{beam_search, greedy, sbs, spec_greedy, Backend, DecodeOutput, SbsConfig};
@@ -33,12 +33,19 @@ fn usage() -> ! {
 USAGE:
   rxnspec serve   [--task fwd|retro] [--backend pjrt|rust] [--artifacts DIR]
                   [--data DIR] [--port N] [--batch-max N] [--batch-wait-ms N]
-                  [--cache on|off] [--trace FILE]
+                  [--cache on|off] [--cache-dump FILE] [--trace FILE]
   rxnspec predict --smiles SMILES [--decoder D] [--task ...] [--backend ...]
   rxnspec eval    [--decoder D] [--limit N] [--task ...] [--backend ...]
   rxnspec parity  [--limit N] [--task ...]
 
-  decoder D ∈ greedy | spec:<dl> | bs:<n> | sbs:<n>:<dl>   (default greedy)"
+  decoder D ∈ greedy | spec:<dl> | bs:<n> | sbs:<n>:<dl>   (default greedy)
+
+  serve drains gracefully on SIGTERM/SIGINT or the SHUTDOWN command:
+  admissions stop, in-flight requests complete, and the cache pair is
+  persisted to --cache-dump (or RXNSPEC_CACHE_DUMP) for a warm boot.
+  SLO knobs: RXNSPEC_SLO_MS (default deadline per PREDICT),
+  RXNSPEC_QUEUE_CAP (admission bound, default 1024),
+  RXNSPEC_MAX_CONNS (connection cap, default 256)."
     );
     std::process::exit(2)
 }
@@ -56,6 +63,9 @@ struct Opts {
     batch_max: usize,
     batch_wait_ms: u64,
     cache: bool,
+    /// Persist the cache pair here on graceful drain and warm-boot from
+    /// it on start (`RXNSPEC_CACHE_DUMP` is the env fallback).
+    cache_dump: Option<PathBuf>,
     /// Write a Chrome trace JSON of the run here on shutdown (also
     /// force-enables span collection, overriding `RXNSPEC_TRACE`).
     trace: Option<PathBuf>,
@@ -75,6 +85,7 @@ impl Default for Opts {
             batch_max: 32,
             batch_wait_ms: 5,
             cache: true,
+            cache_dump: std::env::var_os("RXNSPEC_CACHE_DUMP").map(PathBuf::from),
             trace: None,
         }
     }
@@ -103,6 +114,7 @@ fn parse_opts(args: &[String]) -> Opts {
                     _ => usage(),
                 }
             }
+            "--cache-dump" => o.cache_dump = Some(PathBuf::from(need(i))),
             "--trace" => o.trace = Some(PathBuf::from(need(i))),
             _ => usage(),
         }
@@ -128,6 +140,31 @@ fn load_vocab(opts: &Opts) -> Result<Vocab> {
     Vocab::load(&opts.data.join("vocab.txt")).context("load vocab (run gen-data)")
 }
 
+/// Set by the `SIGTERM`/`SIGINT` handler; a watcher thread folds it into
+/// a graceful drain. The handler itself only stores an atomic (the only
+/// async-signal-safe thing it could do).
+static SIGNALLED: AtomicBool = AtomicBool::new(false);
+
+#[cfg(unix)]
+fn install_signal_handlers() {
+    extern "C" {
+        // libc's classic `signal(2)`; declared here because the offline
+        // crate set has no libc binding. The returned previous handler
+        // is opaque to us.
+        fn signal(signum: i32, handler: extern "C" fn(i32)) -> usize;
+    }
+    extern "C" fn on_signal(_sig: i32) {
+        SIGNALLED.store(true, Ordering::SeqCst);
+    }
+    unsafe {
+        signal(15, on_signal); // SIGTERM
+        signal(2, on_signal); // SIGINT
+    }
+}
+
+#[cfg(not(unix))]
+fn install_signal_handlers() {}
+
 fn cmd_serve(opts: Opts) -> Result<()> {
     let vocab = load_vocab(&opts)?;
     let backend = AnyBackend::load(&opts.backend, &opts.artifacts, &opts.task)?;
@@ -141,34 +178,98 @@ fn cmd_serve(opts: Opts) -> Result<()> {
     // Cache entries are only valid per artifact version: bind the loaded
     // model's identity so a redeploy can never serve stale predictions.
     cache.bind_artifact_version(backend.artifact_version());
-    let state = Arc::new(ServerState {
-        queue: RequestQueue::new(opts.batch_max, Duration::from_millis(opts.batch_wait_ms)),
-        metrics: Arc::new(Metrics::default()),
-        cache: Arc::new(cache),
-        shutdown: AtomicBool::new(false),
-    });
+    // Warm boot: reload the previous drain's dump. A version-mismatched,
+    // torn, or missing dump is a clean cold boot, never a crash.
+    if let Some(path) = opts.cache_dump.as_ref().filter(|p| p.exists()) {
+        match load_into(&cache, path, backend.artifact_version()) {
+            Ok(report) => eprintln!(
+                "warm boot: restored {} results, {} draft windows from {}",
+                report.results,
+                report.windows,
+                path.display()
+            ),
+            Err(e) => eprintln!("cold boot ({e})"),
+        }
+    }
+    let queue_cap = std::env::var("RXNSPEC_QUEUE_CAP")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .unwrap_or(1024);
+    let state = Arc::new(ServerState::new(
+        RequestQueue::with_capacity(
+            opts.batch_max,
+            Duration::from_millis(opts.batch_wait_ms),
+            queue_cap,
+        ),
+        Arc::new(Metrics::default()),
+        Arc::new(cache),
+    ));
     let listener = TcpListener::bind(("0.0.0.0", opts.port))?;
     eprintln!(
-        "rxnspec serving task={} backend={} on port {} (batch_max={}, wait={}ms, cache={})",
+        "rxnspec serving task={} backend={} on port {} (batch_max={}, wait={}ms, cache={}, \
+         queue_cap={queue_cap}, max_conns={}, slo={:?})",
         opts.task,
         opts.backend,
         opts.port,
         opts.batch_max,
         opts.batch_wait_ms,
-        if opts.cache { "on" } else { "off" }
+        if opts.cache { "on" } else { "off" },
+        state.max_conns,
+        state.default_slo,
     );
     if opts.trace.is_some() {
         rxnspec::trace::set_enabled(true);
     }
+    // Chaos opt-in: RXNSPEC_FAULTS arms the seeded fault-injection plan
+    // for this serve process (inert otherwise).
+    match rxnspec::faults::plan_from_env() {
+        Some(Ok(plan)) => {
+            eprintln!(
+                "fault injection armed: seed={} rules={}",
+                plan.seed,
+                plan.rules.len()
+            );
+            rxnspec::faults::install(plan);
+        }
+        Some(Err(e)) => bail!("bad RXNSPEC_FAULTS: {e}"),
+        None => {}
+    }
+    install_signal_handlers();
+    let watch_state = Arc::clone(&state);
+    std::thread::spawn(move || loop {
+        if SIGNALLED.load(Ordering::SeqCst) {
+            eprintln!("signal received; draining...");
+            watch_state.begin_shutdown();
+            return;
+        }
+        if watch_state.shutdown.load(Ordering::SeqCst) {
+            return; // SHUTDOWN command won the race
+        }
+        std::thread::sleep(Duration::from_millis(100));
+    });
     let accept_state = Arc::clone(&state);
     let accept = std::thread::spawn(move || serve(listener, accept_state));
+    // The worker owns the backend on this thread; it returns once the
+    // queue is closed AND every in-flight request has been replied to.
     run_worker(&backend, &vocab, &state.queue, &state.metrics, &state.cache);
+    let _ = accept.join();
+    // Post-drain: persist the cache pair so the next boot starts warm.
+    if let Some(path) = &opts.cache_dump {
+        match dump_to_path(&state.cache, path) {
+            Ok(n) => eprintln!("cache dump: {n} records -> {}", path.display()),
+            Err(e) => eprintln!("cache dump failed: {e}"),
+        }
+    }
+    if let Some(t) = state.drain_started() {
+        let ms = t.elapsed().as_millis() as u64;
+        state.metrics.drain_ms.store(ms, Ordering::Relaxed);
+        eprintln!("drained in {ms} ms");
+    }
     if let Some(path) = &opts.trace {
         std::fs::write(path, rxnspec::trace::export_chrome_json())
             .with_context(|| format!("write trace to {}", path.display()))?;
         eprintln!("trace written to {}", path.display());
     }
-    let _ = accept.join();
     Ok(())
 }
 

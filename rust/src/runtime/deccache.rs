@@ -376,6 +376,7 @@ impl<E: DeccacheExec> DecoderSession for CachedPjrtSession<E> {
     }
 
     fn extend(&mut self, deltas: &[(usize, &[i64])]) -> Result<LogProbs> {
+        crate::faults::fire("pjrt.session")?;
         let (t_len, d, v) = (self.dims.t_len, self.dims.d_model, self.dims.vocab);
         self.stats.extend_calls += 1;
         self.stats.packed_rows += deltas.len();

@@ -1,0 +1,424 @@
+//! Chaos property tests: the serving stack under seeded fault injection
+//! (ISSUE 8 acceptance).
+//!
+//! The properties, each checked under a deterministic fault plan:
+//!
+//! 1. **Exactly one reply** — every submitted request gets exactly one
+//!    response (`OK`, `ERR`, or an admission-time `BUSY`), faults or not.
+//!    Nothing is silently dropped and nothing is double-replied.
+//! 2. **Surviving outputs are exact** — any request that comes back `OK`
+//!    from a faulted run carries hypotheses bit-identical to a
+//!    fault-free oracle run (supervised retries go through the exact
+//!    stateless decoders, so containment never changes served content).
+//! 3. **Warm boot is exact** — kill (drain + dump), restart (reload),
+//!    and repeated requests are served from the restored cache with zero
+//!    decoder calls; a version-mismatched dump is rejected cleanly and
+//!    the server simply boots cold.
+//!
+//! The fault plan is process-global, so every test here serializes on
+//! one lock and disarms on exit (even on panic, via a drop guard).
+
+use std::sync::{mpsc, Arc, Mutex, MutexGuard, OnceLock};
+use std::time::{Duration, Instant};
+
+use rxnspec::cache::{dump_to_path, load_into, ServeCache};
+use rxnspec::coordinator::{
+    run_worker, DecodeMode, Job, JobResult, Metrics, PushError, RequestQueue,
+};
+use rxnspec::faults::{self, parse_spec, FaultKind, FaultPlan, Trigger};
+use rxnspec::testutil::{random_rust_backend, CopyModel};
+use rxnspec::vocab::Vocab;
+
+fn chaos_lock() -> MutexGuard<'static, ()> {
+    static L: OnceLock<Mutex<()>> = OnceLock::new();
+    L.get_or_init(|| Mutex::new(()))
+        .lock()
+        .unwrap_or_else(|e| e.into_inner())
+}
+
+/// Disarm the global plan when a test exits, panicking or not.
+struct Disarm;
+impl Drop for Disarm {
+    fn drop(&mut self) {
+        faults::disarm();
+    }
+}
+
+/// Injected panics are this suite's working fluid; keep their backtrace
+/// spam out of the test log while leaving real panics visible.
+fn quiet_injected_panics() {
+    static ONCE: OnceLock<()> = OnceLock::new();
+    ONCE.get_or_init(|| {
+        let default_hook = std::panic::take_hook();
+        std::panic::set_hook(Box::new(move |info| {
+            let injected = info
+                .payload()
+                .downcast_ref::<String>()
+                .map(|s| s.contains("injected fault"))
+                .or_else(|| {
+                    info.payload()
+                        .downcast_ref::<&str>()
+                        .map(|s| s.contains("injected fault"))
+                })
+                .unwrap_or(false);
+            if !injected {
+                default_hook(info);
+            }
+        }));
+    });
+}
+
+fn tiny_vocab() -> Vocab {
+    Vocab::build(["CCONF", "c1ccccc1Br"]).unwrap()
+}
+
+/// A mixed-mode request list with repeats (so batching, continuous
+/// admission, and solo paths all engage).
+fn workload() -> Vec<(DecodeMode, String)> {
+    let queries = ["CCO", "c1ccccc1", "NCCO", "BrCC", "c1ccccc1Br", "FC"];
+    let modes = [
+        DecodeMode::Greedy,
+        DecodeMode::SpecGreedy { dl: 3 },
+        DecodeMode::SpecGreedy { dl: 3 },
+        DecodeMode::Beam { n: 2 },
+        DecodeMode::Sbs { n: 2, dl: 3 },
+    ];
+    let mut reqs = Vec::new();
+    for round in 0..4 {
+        for (i, q) in queries.iter().enumerate() {
+            reqs.push((modes[(round + i) % modes.len()], q.to_string()));
+        }
+    }
+    reqs
+}
+
+/// Push every request, close the queue, run the worker to completion,
+/// and assert the exactly-one-reply property while collecting replies.
+fn serve_all<B: rxnspec::decoding::Backend>(
+    backend: &B,
+    vocab: &Vocab,
+    reqs: &[(DecodeMode, String)],
+    metrics: &Arc<Metrics>,
+    cache: &ServeCache,
+) -> Vec<JobResult> {
+    let queue = RequestQueue::new(4, Duration::from_millis(1));
+    let mut rxs = Vec::new();
+    for (mode, smiles) in reqs {
+        let (tx, rx) = mpsc::channel();
+        queue.push(
+            *mode,
+            Job {
+                smiles: smiles.clone(),
+                resp: tx,
+            },
+        );
+        rxs.push(rx);
+    }
+    queue.close();
+    run_worker(backend, vocab, &queue, metrics, cache);
+    rxs.iter()
+        .map(|rx| {
+            let first = rx.try_recv().expect("every request must get a reply");
+            assert!(rx.try_recv().is_err(), "a request must get exactly one reply");
+            first
+        })
+        .collect()
+}
+
+/// Properties 1 + 2 on the CopyModel: panics and stalls on the decoder
+/// path; survivors must match the fault-free oracle bit for bit.
+#[test]
+fn chaos_survivors_bit_identical_to_oracle() {
+    let _g = chaos_lock();
+    let _d = Disarm;
+    quiet_injected_panics();
+    let vocab = tiny_vocab();
+    let backend = CopyModel::new(96, 96, vocab.len());
+    let reqs = workload();
+
+    faults::disarm();
+    let oracle = serve_all(
+        &backend,
+        &vocab,
+        &reqs,
+        &Arc::new(Metrics::default()),
+        &ServeCache::disabled(),
+    );
+    assert!(oracle.iter().all(|r| r.is_ok()), "oracle run must be clean");
+
+    // One deterministic panic early (so containment provably engages)
+    // plus low-rate seeded background chaos. The error rate is the
+    // harshest knob: an injected `Err` fails every unreplied lane in its
+    // batch without retry, by design.
+    faults::install(
+        FaultPlan::new(0xC4A05)
+            .with("decoder.extend", FaultKind::Panic, Trigger::Nth(2))
+            .with("decoder.extend", FaultKind::Panic, Trigger::Prob(0.03))
+            .with("decoder.extend", FaultKind::Slow(1), Trigger::Prob(0.02))
+            .with("decoder.extend", FaultKind::Err, Trigger::Prob(0.01)),
+    );
+    let metrics = Arc::new(Metrics::default());
+    let chaotic = serve_all(&backend, &vocab, &reqs, &metrics, &ServeCache::disabled());
+    faults::disarm();
+
+    let mut survived = 0usize;
+    for (i, (got, want)) in chaotic.iter().zip(&oracle).enumerate() {
+        if let Ok(reply) = got {
+            let want = want.as_ref().unwrap();
+            assert_eq!(
+                reply.hyps, want.hyps,
+                "request {i}: a faulted run served different content"
+            );
+            survived += 1;
+        }
+    }
+    // The plan is seeded, so the chaos is reproducible — and at these
+    // rates containment + retry keeps a solid majority of requests
+    // alive (injected `Err`s and double-panics legitimately fail).
+    assert!(
+        survived > reqs.len() / 3,
+        "only {survived}/{} survived — containment is not working",
+        reqs.len()
+    );
+    use std::sync::atomic::Ordering;
+    assert!(
+        rxnspec::faults::injected() > 0,
+        "the plan never fired — chaos test is vacuous"
+    );
+    // Contained panics and retries surface in the resilience counters.
+    let panics = metrics.panics_contained.load(Ordering::Relaxed);
+    let retried = metrics.requests_retried.load(Ordering::Relaxed);
+    assert!(panics > 0, "the Nth(2) panic rule must have been contained");
+    assert!(retried > 0, "contained panics must trigger retries");
+
+    // And the stack still serves cleanly after disarm, in-process.
+    let clean = serve_all(
+        &backend,
+        &vocab,
+        &reqs[..6],
+        &Arc::new(Metrics::default()),
+        &ServeCache::disabled(),
+    );
+    assert!(clean.iter().all(|r| r.is_ok()), "post-chaos serving must be clean");
+}
+
+/// Same properties on the real compute path: a pure-Rust random-weight
+/// backend with panics injected into the GEMM kernel and the session
+/// layer.
+#[test]
+fn chaos_on_rust_backend_kernel_panics_are_contained() {
+    let _g = chaos_lock();
+    let _d = Disarm;
+    quiet_injected_panics();
+    let vocab = tiny_vocab();
+    let backend = random_rust_backend(0xFA57, vocab.len(), 48, 24);
+    let reqs: Vec<(DecodeMode, String)> = vec![
+        (DecodeMode::Greedy, "CCO".to_string()),
+        (DecodeMode::SpecGreedy { dl: 2 }, "c1ccccc1".to_string()),
+        (DecodeMode::Greedy, "BrCC".to_string()),
+        (DecodeMode::SpecGreedy { dl: 2 }, "CCO".to_string()),
+    ];
+
+    faults::disarm();
+    let oracle = serve_all(
+        &backend,
+        &vocab,
+        &reqs,
+        &Arc::new(Metrics::default()),
+        &ServeCache::disabled(),
+    );
+    assert!(oracle.iter().all(|r| r.is_ok()));
+
+    // One kernel panic, deep in the first decode; supervision must
+    // quarantine the session and the retries must reproduce the oracle.
+    faults::install(FaultPlan::new(9).with("kernel.gemm", FaultKind::Panic, Trigger::Nth(30)));
+    let metrics = Arc::new(Metrics::default());
+    let chaotic = serve_all(&backend, &vocab, &reqs, &metrics, &ServeCache::disabled());
+    faults::disarm();
+
+    for (i, (got, want)) in chaotic.iter().zip(&oracle).enumerate() {
+        let got = got.as_ref().unwrap_or_else(|e| {
+            panic!("request {i} must survive a single kernel panic, got ERR {e}")
+        });
+        assert_eq!(got.hyps, want.as_ref().unwrap().hyps, "request {i} content drifted");
+    }
+    use std::sync::atomic::Ordering;
+    assert_eq!(metrics.panics_contained.load(Ordering::Relaxed), 1);
+}
+
+/// Deadlines + backpressure under stall faults: expired requests are
+/// shed with `ERR deadline_exceeded`, over-capacity admissions answer
+/// `BUSY`, and still every request gets exactly one reply.
+#[test]
+fn chaos_stalls_shed_deadlines_and_signal_busy() {
+    let _g = chaos_lock();
+    let _d = Disarm;
+    quiet_injected_panics();
+    let vocab = tiny_vocab();
+    let backend = CopyModel::new(96, 96, vocab.len());
+
+    // Every decoder extend stalls 10ms: the first batch reliably outlives
+    // the 5ms deadlines of the requests queued behind it.
+    faults::install(FaultPlan::new(3).with(
+        "decoder.extend",
+        FaultKind::Slow(10),
+        Trigger::Prob(1.0),
+    ));
+
+    let queue: RequestQueue<Job> =
+        RequestQueue::with_capacity(2, Duration::from_millis(1), 4);
+    let metrics = Arc::new(Metrics::default());
+    let mut live_rxs = Vec::new();
+    let mut dead_rxs = Vec::new();
+    let mut busy = 0usize;
+    for i in 0..6 {
+        let (tx, rx) = mpsc::channel();
+        // First two: no deadline (they fill the first batch). Next two:
+        // 5ms deadlines that expire while the stalled batch runs. The
+        // rest overflow the capacity-4 queue.
+        let deadline = if i < 2 {
+            None
+        } else {
+            Some(Instant::now() + Duration::from_millis(5))
+        };
+        let job = Job {
+            smiles: "CCO".to_string(),
+            resp: tx,
+        };
+        match queue.try_push(DecodeMode::Greedy, job, deadline) {
+            Ok(()) => {
+                if i < 2 {
+                    live_rxs.push(rx)
+                } else {
+                    dead_rxs.push(rx)
+                }
+            }
+            Err(PushError::Full(_)) => busy += 1,
+            Err(PushError::Closed(_)) => unreachable!("queue is open"),
+        }
+    }
+    assert_eq!(busy, 2, "capacity 4 must refuse the 5th and 6th request");
+    queue.close();
+    run_worker(&backend, &vocab, &queue, &metrics, &ServeCache::disabled());
+    faults::disarm();
+
+    for rx in &live_rxs {
+        let r = rx.try_recv().expect("undeadlined request must be served");
+        assert!(r.is_ok(), "stalled-but-admitted request still completes: {r:?}");
+        assert!(rx.try_recv().is_err(), "exactly one reply");
+    }
+    for rx in &dead_rxs {
+        let r = rx.try_recv().expect("expired request must still get a reply");
+        assert_eq!(r.unwrap_err(), "deadline_exceeded");
+        assert!(rx.try_recv().is_err(), "exactly one reply");
+    }
+    use std::sync::atomic::Ordering;
+    assert_eq!(metrics.requests_shed.load(Ordering::Relaxed), 2);
+    assert_eq!(
+        metrics.requests_total.load(Ordering::Relaxed),
+        2,
+        "shed requests must never count as served"
+    );
+}
+
+/// Kill-and-restart warm boot: drain dumps the cache pair, a restart
+/// reloads it (repeat requests answered with zero decoder calls,
+/// bit-identical), and a version-mismatched dump is rejected cleanly.
+#[test]
+fn kill_and_restart_warm_boots_from_dump() {
+    let _g = chaos_lock();
+    let _d = Disarm;
+    faults::disarm();
+    let vocab = tiny_vocab();
+    let backend = CopyModel::new(96, 96, vocab.len());
+    let reqs: Vec<(DecodeMode, String)> = vec![
+        (DecodeMode::SpecGreedy { dl: 3 }, "c1ccccc1".to_string()),
+        (DecodeMode::Greedy, "CCO".to_string()),
+        (DecodeMode::Beam { n: 2 }, "BrCC".to_string()),
+    ];
+    let mut dump = std::env::temp_dir();
+    dump.push(format!("rxnspec-chaos-{}-warmboot.dump", std::process::id()));
+
+    // Life 1: serve, then "kill" gracefully (drain happened when
+    // run_worker returned inside serve_all) and persist.
+    let cache1 = ServeCache::default();
+    cache1.bind_artifact_version(0xBEEF);
+    let first = serve_all(
+        &backend,
+        &vocab,
+        &reqs,
+        &Arc::new(Metrics::default()),
+        &cache1,
+    );
+    assert!(first.iter().all(|r| r.is_ok()));
+    dump_to_path(&cache1, &dump).unwrap();
+
+    // Life 2: restart with the same artifact version — warm boot.
+    let cache2 = ServeCache::default();
+    cache2.bind_artifact_version(0xBEEF);
+    let report = load_into(&cache2, &dump, 0xBEEF).unwrap();
+    assert_eq!(report.results, reqs.len());
+    let metrics2 = Arc::new(Metrics::default());
+    let second = serve_all(&backend, &vocab, &reqs, &metrics2, &cache2);
+    for (i, (got, want)) in second.iter().zip(&first).enumerate() {
+        let (got, want) = (got.as_ref().unwrap(), want.as_ref().unwrap());
+        assert_eq!(got.decoder_calls, 0, "request {i} must hit the restored cache");
+        assert_eq!(got.hyps, want.hyps, "request {i}: warm reply must be bit-identical");
+        assert_eq!(got.acceptance_rate, want.acceptance_rate);
+    }
+    use std::sync::atomic::Ordering;
+    assert_eq!(
+        metrics2.cache_warm_hits.load(Ordering::Relaxed),
+        reqs.len() as u64,
+        "every life-2 hit came from the dump"
+    );
+
+    // Life 3: a model redeploy — the dump must be refused, cleanly.
+    let cache3 = ServeCache::default();
+    cache3.bind_artifact_version(0xD00D);
+    let err = load_into(&cache3, &dump, 0xD00D).unwrap_err();
+    assert!(err.to_string().contains("version mismatch"), "{err}");
+    assert!(cache3.results().is_empty(), "a refused dump must not seed the cache");
+    // Cold boot still serves (fresh decodes, same content).
+    let third = serve_all(
+        &backend,
+        &vocab,
+        &reqs,
+        &Arc::new(Metrics::default()),
+        &cache3,
+    );
+    for (got, want) in third.iter().zip(&first) {
+        let got = got.as_ref().unwrap();
+        assert!(got.decoder_calls > 0, "cold boot must decode fresh");
+        assert_eq!(got.hyps, want.as_ref().unwrap().hyps);
+    }
+    std::fs::remove_file(&dump).ok();
+}
+
+/// The CI chaos leg's env-shaped schedule parses and runs: the same
+/// grammar `rxnspec serve` arms from `RXNSPEC_FAULTS`.
+#[test]
+fn env_style_schedule_parses_and_runs() {
+    let _g = chaos_lock();
+    let _d = Disarm;
+    quiet_injected_panics();
+    let plan = parse_spec(
+        "7:decoder.extend=panic@0.04,decoder.extend=slow2@0.03,arena.alloc=panic#5,kernel.gemm=err@0.01",
+    )
+    .unwrap();
+    assert_eq!(plan.seed, 7);
+    assert_eq!(plan.rules.len(), 4);
+
+    let vocab = tiny_vocab();
+    let backend = CopyModel::new(96, 96, vocab.len());
+    faults::install(plan);
+    let replies = serve_all(
+        &backend,
+        &vocab,
+        &workload()[..12],
+        &Arc::new(Metrics::default()),
+        &ServeCache::disabled(),
+    );
+    faults::disarm();
+    assert_eq!(replies.len(), 12, "exactly one reply each, chaos or not");
+}

@@ -135,23 +135,21 @@ fn tcp_serving_round_trip_with_pjrt() {
         run_worker, serve, Client, Metrics, RequestQueue, ServerState,
     };
     use std::net::TcpListener;
-    use std::sync::atomic::AtomicBool;
     use std::sync::Arc;
     use std::time::Duration;
 
     let Some((_, _, split)) = setup("fwd") else {
         return;
     };
-    let state = Arc::new(ServerState {
-        queue: RequestQueue::new(8, Duration::from_millis(2)),
-        metrics: Arc::new(Metrics::default()),
-        cache: Arc::new(rxnspec::cache::ServeCache::default()),
-        shutdown: AtomicBool::new(false),
-    });
+    let state = Arc::new(ServerState::new(
+        RequestQueue::new(8, Duration::from_millis(2)),
+        Arc::new(Metrics::default()),
+        Arc::new(rxnspec::cache::ServeCache::default()),
+    ));
     let listener = TcpListener::bind("127.0.0.1:0").unwrap();
     let addr = listener.local_addr().unwrap().to_string();
     let accept_state = Arc::clone(&state);
-    std::thread::spawn(move || serve(listener, accept_state));
+    let acceptor = std::thread::spawn(move || serve(listener, accept_state));
     let worker_state = Arc::clone(&state);
     let worker = std::thread::spawn(move || {
         // PJRT handles are not Send: construct inside the thread.
@@ -180,6 +178,8 @@ fn tcp_serving_round_trip_with_pjrt() {
     assert_eq!(cached_p.decoder_calls, 0, "repeat must hit the cache");
     assert_eq!(cached_p.hyps, greedy_p.hyps);
 
-    state.queue.close();
+    // Graceful drain joins the worker and every connection thread.
+    assert_eq!(c.shutdown().unwrap(), "OK draining");
     worker.join().unwrap();
+    acceptor.join().unwrap().unwrap();
 }
