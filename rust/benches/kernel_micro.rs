@@ -571,10 +571,7 @@ fn main() -> anyhow::Result<()> {
                 // Every third request carries an already-expired deadline:
                 // it must be shed at pop time, never decoded.
                 let deadline = (i % 3 == 2).then(Instant::now);
-                let job = Job {
-                    smiles: q.to_string(),
-                    resp: tx,
-                };
+                let job = Job::new(q.to_string(), tx);
                 match queue.try_push(mode_for(round, i), job, deadline) {
                     Ok(()) => rxs.push(rx),
                     Err(_) => busy += 1,
@@ -610,10 +607,7 @@ fn main() -> anyhow::Result<()> {
         let mut rxs2 = Vec::new();
         for (i, q) in queries.iter().enumerate() {
             let (tx, rx) = mpsc::channel();
-            let job = Job {
-                smiles: q.to_string(),
-                resp: tx,
-            };
+            let job = Job::new(q.to_string(), tx);
             queue2.push(mode_for(0, i), job);
             rxs2.push(rx);
         }

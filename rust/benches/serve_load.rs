@@ -1,0 +1,164 @@
+//! `serve_load` — closed-loop load generator against a live in-process
+//! server: M client threads hammering the TCP front end while a worker
+//! pool drains the queue, per worker count.
+//!
+//! Measures what the multi-worker tier actually buys at the protocol
+//! boundary (connection handling + queueing + decode included): p50/p99
+//! request latency and sustained req/s for 1 worker vs the pooled
+//! configuration. The backend is the deterministic CopyModel so the
+//! numbers isolate the serving stack, not model FLOPs, and the cache is
+//! disabled so every request is an honest decode. Flags:
+//!
+//! * `--smoke`  fewer clients / requests (CI),
+//! * `--json`   merge results into `BENCH_kernels.json` (also via
+//!   `BENCH_JSON=1`), section `serve_load`: `serve_p50_ms`,
+//!   `serve_p99_ms`, `serve_rps` (pooled) plus `_w<N>`-suffixed entries
+//!   per swept worker count.
+
+use std::net::TcpListener;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use rxnspec::bench::{bench_json_path, json, json_flag};
+use rxnspec::cache::ServeCache;
+use rxnspec::coordinator::{
+    run_pool, serve, Client, Metrics, PoolConfig, RequestQueue, ServerState,
+};
+use rxnspec::testutil::CopyModel;
+use rxnspec::vocab::Vocab;
+
+const QUERIES: [&str; 6] = ["CCO", "c1ccccc1", "NCCO", "BrCC", "FC", "c1ccccc1Br"];
+
+struct LoadResult {
+    p50_ms: f64,
+    p99_ms: f64,
+    rps: f64,
+    served: usize,
+}
+
+fn quantile(sorted_ms: &[f64], q: f64) -> f64 {
+    if sorted_ms.is_empty() {
+        return 0.0;
+    }
+    let idx = ((q * sorted_ms.len() as f64).ceil() as usize).clamp(1, sorted_ms.len()) - 1;
+    sorted_ms[idx]
+}
+
+/// One closed-loop run: a fresh server + `workers` pool, `clients`
+/// threads each issuing `reqs_per_client` PREDICTs back-to-back.
+fn run_load(workers: usize, clients: usize, reqs_per_client: usize) -> Result<LoadResult> {
+    let vocab = Vocab::build(["CCONF", "c1ccccc1Br"]).unwrap();
+    let state = Arc::new(ServerState::with_limits(
+        RequestQueue::with_capacity(8, Duration::from_millis(1), 1024),
+        Arc::new(Metrics::default()),
+        Arc::new(ServeCache::disabled()),
+        None,
+        clients + 8,
+    ));
+    let listener = TcpListener::bind("127.0.0.1:0")?;
+    let addr = listener.local_addr()?.to_string();
+    let accept_state = Arc::clone(&state);
+    let acceptor = std::thread::spawn(move || serve(listener, accept_state));
+
+    let cfg = PoolConfig::with_workers(workers);
+    let n_vocab = vocab.len();
+    let mut latencies_ms: Vec<f64> = Vec::with_capacity(clients * reqs_per_client);
+    let t0 = Instant::now();
+    std::thread::scope(|s| -> Result<()> {
+        let pool = s.spawn(|| {
+            run_pool(
+                |_slot| Ok(CopyModel::new(96, 96, n_vocab)),
+                &vocab,
+                &state.queue,
+                &state.metrics,
+                &state.cache,
+                &cfg,
+            )
+        });
+        let client_handles: Vec<_> = (0..clients)
+            .map(|c| {
+                let addr = addr.clone();
+                s.spawn(move || -> Result<Vec<f64>> {
+                    let mut cl = Client::connect(&addr)?;
+                    let mut lat = Vec::with_capacity(reqs_per_client);
+                    for i in 0..reqs_per_client {
+                        let q = QUERIES[(c + i) % QUERIES.len()];
+                        let decoder = if (c + i) % 2 == 0 { "greedy" } else { "spec:3" };
+                        let t = Instant::now();
+                        let pred = cl.predict(decoder, q)?;
+                        lat.push(t.elapsed().as_secs_f64() * 1e3);
+                        assert!(!pred.hyps.is_empty(), "server must return a hypothesis");
+                    }
+                    Ok(lat)
+                })
+            })
+            .collect();
+        for h in client_handles {
+            latencies_ms.extend(h.join().expect("client thread must not panic")?);
+        }
+        // All clients done: drain the pool so the scope can join it.
+        Client::connect(&addr)?.shutdown()?;
+        pool.join().expect("pool supervisor must not panic");
+        Ok(())
+    })?;
+    let wall_s = t0.elapsed().as_secs_f64();
+    let _ = acceptor.join();
+
+    let served = latencies_ms.len();
+    latencies_ms.sort_by(|a, b| a.total_cmp(b));
+    Ok(LoadResult {
+        p50_ms: quantile(&latencies_ms, 0.50),
+        p99_ms: quantile(&latencies_ms, 0.99),
+        rps: served as f64 / wall_s.max(1e-9),
+        served,
+    })
+}
+
+fn main() -> Result<()> {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let emit_json = json_flag();
+    let (clients, reqs_per_client) = if smoke { (4, 24) } else { (8, 120) };
+    let sweep = [1usize, 4];
+
+    println!(
+        "serve_load — {clients} clients x {reqs_per_client} reqs, worker sweep {sweep:?} \
+         (CopyModel backend, cache off)"
+    );
+    let mut entries: Vec<(String, json::Val)> = vec![
+        ("serve_clients".into(), json::Val::num(clients as f64)),
+        ("serve_reqs_per_client".into(), json::Val::num(reqs_per_client as f64)),
+    ];
+    let mut pooled: Option<LoadResult> = None;
+    for &w in &sweep {
+        let r = run_load(w, clients, reqs_per_client)?;
+        println!(
+            "  workers={w}: p50 {:.2} ms  p99 {:.2} ms  {:.0} req/s  ({} served)",
+            r.p50_ms, r.p99_ms, r.rps, r.served
+        );
+        assert_eq!(
+            r.served,
+            clients * reqs_per_client,
+            "workers={w}: every request must be served"
+        );
+        entries.push((format!("serve_p50_ms_w{w}"), json::Val::num(r.p50_ms)));
+        entries.push((format!("serve_p99_ms_w{w}"), json::Val::num(r.p99_ms)));
+        entries.push((format!("serve_rps_w{w}"), json::Val::num(r.rps)));
+        pooled = Some(r);
+    }
+    // The headline keys carry the pooled (last-swept) configuration.
+    let pooled = pooled.expect("sweep is non-empty");
+    let pool_workers = *sweep.last().unwrap();
+    entries.push(("serve_workers".into(), json::Val::num(pool_workers as f64)));
+    entries.push(("serve_p50_ms".into(), json::Val::num(pooled.p50_ms)));
+    entries.push(("serve_p99_ms".into(), json::Val::num(pooled.p99_ms)));
+    entries.push(("serve_rps".into(), json::Val::num(pooled.rps)));
+
+    if emit_json {
+        let path = bench_json_path();
+        json::merge_section(&path, "serve_load", json::Val::obj(entries))?;
+        println!("(updated {} section serve_load)", path.display());
+    }
+    Ok(())
+}

@@ -19,9 +19,18 @@
 //! requests are shed *at pop time* (never handed to the worker): both
 //! pop paths take a shed callback so the caller can fail them back to
 //! their clients (`ERR deadline_exceeded`) rather than dropping them
-//! silently.
+//! silently. Shed callbacks run **outside** the queue lock — replying
+//! to a shed client is socket I/O, and one slow client must not stall
+//! every worker's pop.
+//!
+//! Every admitted request gets a queue-assigned **id**, the unit of the
+//! pool supervisor's exactly-once reclaim accounting:
+//! [`RequestQueue::requeue_front`] puts a request reclaimed from a lost
+//! worker back at the head (same id, bypassing capacity and close — the
+//! request was already admitted once).
 
 use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Condvar, Mutex, MutexGuard};
 use std::time::{Duration, Instant};
 
@@ -94,6 +103,11 @@ impl std::fmt::Display for DecodeMode {
 
 /// A queued unit of work.
 pub struct Request<T> {
+    /// Queue-assigned admission id (1-based, unique per queue).
+    /// [`RequestQueue::requeue_front`] preserves it, so a request
+    /// reclaimed from a lost worker keeps its identity — the pool
+    /// supervisor dedups reclaims by this id.
+    pub id: u64,
     pub mode: DecodeMode,
     pub payload: T,
     pub enqueued: Instant,
@@ -129,6 +143,8 @@ pub struct RequestQueue<T> {
     /// Admission bound enforced by [`RequestQueue::try_push`]
     /// (`usize::MAX` = unbounded, the compat default of `new`).
     pub capacity: usize,
+    /// Admission id counter (ids are 1-based; 0 never occurs).
+    next_id: AtomicU64,
 }
 
 struct QueueInner<T> {
@@ -137,21 +153,24 @@ struct QueueInner<T> {
 }
 
 impl<T> QueueInner<T> {
-    /// Remove every expired request, handing each to `shed`. Called
-    /// under the queue lock on both pop paths — `shed` must not touch
-    /// the queue (replying over an mpsc channel is fine).
-    fn shed_expired(&mut self, shed: &mut dyn FnMut(Request<T>)) {
+    /// Remove and return every expired request. Runs under the queue
+    /// lock; the *callbacks* for the removed requests run after the
+    /// caller drops the lock — shedding replies over client sockets,
+    /// and a slow socket must not hold the queue hostage.
+    fn take_expired(&mut self) -> Vec<Request<T>> {
         let now = Instant::now();
+        let mut expired = Vec::new();
         let mut i = 0;
         while i < self.queue.len() {
             if self.queue[i].expired(now) {
                 if let Some(r) = self.queue.remove(i) {
-                    shed(r);
+                    expired.push(r);
                 }
             } else {
                 i += 1;
             }
         }
+        expired
     }
 }
 
@@ -173,15 +192,22 @@ impl<T> RequestQueue<T> {
             max_batch,
             max_wait,
             capacity: capacity.max(1),
+            next_id: AtomicU64::new(1),
         }
+    }
+
+    fn assign_id(&self) -> u64 {
+        self.next_id.fetch_add(1, Ordering::Relaxed)
     }
 
     /// Unconditional enqueue without a deadline — ignores the capacity
     /// bound (internal/test convenience; the serving front end admits
     /// through [`RequestQueue::try_push`]).
     pub fn push(&self, mode: DecodeMode, payload: T) {
+        let id = self.assign_id();
         let mut g = lock_ok(&self.inner);
         g.queue.push_back(Request {
+            id,
             mode,
             payload,
             enqueued: Instant::now(),
@@ -206,7 +232,9 @@ impl<T> RequestQueue<T> {
         if g.queue.len() >= self.capacity {
             return Err(PushError::Full(payload));
         }
+        let id = self.assign_id();
         g.queue.push_back(Request {
+            id,
             mode,
             payload,
             enqueued: Instant::now(),
@@ -214,6 +242,17 @@ impl<T> RequestQueue<T> {
         });
         self.cv.notify_all();
         Ok(())
+    }
+
+    /// Put a reclaimed request back at the queue **head**, keeping its
+    /// id and original enqueue time. Bypasses both the capacity bound
+    /// and the closed flag: the request was already admitted once, and
+    /// reclaim must still work mid-drain (a worker can wedge after the
+    /// queue closes — pops keep draining a closed, non-empty queue).
+    pub fn requeue_front(&self, req: Request<T>) {
+        let mut g = lock_ok(&self.inner);
+        g.queue.push_front(req);
+        self.cv.notify_all();
     }
 
     /// Stop admissions; pops drain what is queued, then return `None`.
@@ -250,25 +289,33 @@ impl<T> RequestQueue<T> {
     /// between generation steps (continuous batching): the session stays
     /// alive across batching ticks and fresh compatible requests join it
     /// instead of waiting for the whole previous batch to finish.
-    /// Expired requests anywhere in the queue are shed to `shed` first.
+    /// Expired requests anywhere in the queue are shed to `shed` first;
+    /// the callbacks run after the queue lock is released (shedding is
+    /// reply I/O), so `shed` may even touch the queue.
     pub fn try_pop_compatible_shedding(
         &self,
         mode: DecodeMode,
         max: usize,
         shed: &mut dyn FnMut(Request<T>),
     ) -> Vec<Request<T>> {
-        let mut g = lock_ok(&self.inner);
-        g.shed_expired(shed);
-        if max == 0 {
-            return Vec::new();
+        let (expired, batch) = {
+            let mut g = lock_ok(&self.inner);
+            let expired = g.take_expired();
+            let n = if max == 0 {
+                0
+            } else {
+                g.queue
+                    .iter()
+                    .take(max)
+                    .take_while(|r| r.mode.batchable_with(&mode))
+                    .count()
+            };
+            (expired, g.queue.drain(..n).collect::<Vec<_>>())
+        };
+        for r in expired {
+            shed(r);
         }
-        let n = g
-            .queue
-            .iter()
-            .take(max)
-            .take_while(|r| r.mode.batchable_with(&mode))
-            .count();
-        g.queue.drain(..n).collect()
+        batch
     }
 
     /// [`RequestQueue::try_pop_compatible_shedding`] with expired
@@ -282,14 +329,23 @@ impl<T> RequestQueue<T> {
     /// head has waited `max_wait` (or the batch is full, or the next
     /// request is incompatible). Returns `None` when closed and drained.
     /// Expired requests are shed to `shed` on every wakeup — they never
-    /// appear in a returned batch.
+    /// appear in a returned batch, and the callbacks run with the queue
+    /// lock released so a slow shed reply cannot stall sibling workers.
     pub fn pop_batch_shedding(
         &self,
         shed: &mut dyn FnMut(Request<T>),
     ) -> Option<Vec<Request<T>>> {
         let mut g = lock_ok(&self.inner);
         loop {
-            g.shed_expired(shed);
+            let expired = g.take_expired();
+            if !expired.is_empty() {
+                drop(g);
+                for r in expired {
+                    shed(r);
+                }
+                g = lock_ok(&self.inner);
+                continue;
+            }
             if let Some(head) = g.queue.front() {
                 let head_mode = head.mode;
                 let deadline = head.enqueued + self.max_wait;
@@ -583,6 +639,75 @@ mod tests {
         let unbounded: RequestQueue<usize> = RequestQueue::new(8, Duration::from_millis(1));
         unbounded.push(DecodeMode::Greedy, 1);
         assert_eq!(unbounded.occupancy(), 0.0);
+    }
+
+    #[test]
+    fn admission_ids_are_unique_and_monotonic() {
+        let q: RequestQueue<usize> = RequestQueue::with_capacity(8, Duration::from_millis(1), 8);
+        q.push(DecodeMode::Greedy, 1);
+        q.try_push(DecodeMode::Greedy, 2, None).unwrap();
+        q.push(DecodeMode::Greedy, 3);
+        let batch = q.pop_batch().unwrap();
+        let ids: Vec<u64> = batch.iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![1, 2, 3]);
+        // A refused admission must not burn an id.
+        let full: RequestQueue<usize> = RequestQueue::with_capacity(8, Duration::from_millis(1), 1);
+        full.try_push(DecodeMode::Greedy, 1, None).unwrap();
+        assert!(full.try_push(DecodeMode::Greedy, 2, None).is_err());
+        full.pop_batch().unwrap();
+        full.try_push(DecodeMode::Greedy, 3, None).unwrap();
+        assert_eq!(full.pop_batch().unwrap()[0].id, 2);
+    }
+
+    #[test]
+    fn requeue_front_keeps_id_and_works_on_a_closed_full_queue() {
+        let q: RequestQueue<usize> = RequestQueue::with_capacity(8, Duration::from_millis(1), 1);
+        q.try_push(DecodeMode::Greedy, 1, None).unwrap();
+        let reclaimed = q.pop_batch().unwrap().remove(0);
+        assert_eq!(reclaimed.id, 1);
+        // Fill to capacity and close: a reclaim must still land, at the
+        // head, with its original id.
+        q.try_push(DecodeMode::Greedy, 2, None).unwrap();
+        q.close();
+        q.requeue_front(reclaimed);
+        assert_eq!(q.len(), 2);
+        let batch = q.pop_batch().unwrap();
+        assert_eq!(batch.iter().map(|r| r.payload).collect::<Vec<_>>(), vec![1, 2]);
+        assert_eq!(batch[0].id, 1);
+        assert!(q.pop_batch().is_none(), "closed queue still drains to None");
+    }
+
+    /// The shed callback runs outside the queue lock: it may call back
+    /// into the queue (here: push a replacement and read the length)
+    /// without deadlocking. Under the old under-the-lock contract this
+    /// test would hang on the non-reentrant mutex.
+    #[test]
+    fn shed_callbacks_run_outside_the_queue_lock() {
+        let q: RequestQueue<usize> = RequestQueue::with_capacity(8, Duration::from_millis(1), 8);
+        let past = Instant::now() - Duration::from_millis(5);
+        q.try_push(DecodeMode::Greedy, 1, Some(past)).unwrap();
+        q.try_push(DecodeMode::Greedy, 2, None).unwrap();
+        let mut shed = Vec::new();
+        let batch = q.pop_batch_shedding(&mut |r| {
+            let _ = q.len(); // reentrant query — deadlocks if locked
+            q.push(DecodeMode::Greedy, 100 + r.payload);
+            shed.push(r.payload);
+        });
+        assert_eq!(shed, vec![1]);
+        // The replacement pushed during shedding is live again by the
+        // time the pop resumes, so it comes out with the batch.
+        let mut seen: Vec<usize> = batch.unwrap().iter().map(|r| r.payload).collect();
+        seen.sort_unstable();
+        assert_eq!(seen, vec![2, 101]);
+        // Same contract on the non-blocking admission path.
+        q.try_push(DecodeMode::Greedy, 3, Some(past)).unwrap();
+        let mut shed2 = Vec::new();
+        let got = q.try_pop_compatible_shedding(DecodeMode::Greedy, 8, &mut |r| {
+            let _ = q.len();
+            shed2.push(r.payload);
+        });
+        assert!(got.is_empty());
+        assert_eq!(shed2, vec![3]);
     }
 
     /// Concurrent close vs try_pop_compatible: every pushed request is

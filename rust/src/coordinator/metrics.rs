@@ -4,8 +4,10 @@
 //! a `STATS` command that renders a snapshot.
 
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
 
 use crate::cache::ArenaCounters;
+use crate::coordinator::batcher::lock_ok;
 use crate::decoding::SessionStats;
 
 /// Log-bucketed latency histogram (microseconds).
@@ -178,6 +180,16 @@ pub struct Metrics {
     pub degrade_level: AtomicU64,
     pub drain_ms: AtomicU64,
     pub cache_warm_hits: AtomicU64,
+    /// Pool accounting (the multi-worker serving tier): configured
+    /// worker count (gauge), replacement workers spawned after a loss,
+    /// requests reclaimed from lost workers and re-enqueued, and the
+    /// per-slot contained-panic mirror (current incarnation; the
+    /// pool-wide aggregate stays in `panics_contained` so the `resil_*`
+    /// surface keeps its single-worker meaning).
+    pub workers: AtomicU64,
+    pub worker_restarts: AtomicU64,
+    pub requests_reclaimed: AtomicU64,
+    pub worker_panics: Mutex<Vec<u64>>,
 }
 
 impl Metrics {
@@ -199,6 +211,16 @@ impl Metrics {
         }
         self.arena_evictions.fetch_add(s.arena_evictions as u64, Ordering::Relaxed);
         self.fork_pages_copied.fetch_add(s.fork_pages_copied as u64, Ordering::Relaxed);
+    }
+
+    /// Mirror one worker slot's contained-panic count into the per-slot
+    /// vector rendered by `STATS` (grown on demand — the pool sizes it).
+    pub fn set_worker_panics(&self, slot: usize, panics: u64) {
+        let mut v = lock_ok(&self.worker_panics);
+        if v.len() <= slot {
+            v.resize(slot + 1, 0);
+        }
+        v[slot] = panics;
     }
 
     /// The arena counters as the shared snapshot struct (rendered by
@@ -270,6 +292,17 @@ impl Metrics {
             self.drain_ms.load(Ordering::Relaxed),
             self.cache_warm_hits.load(Ordering::Relaxed),
             crate::faults::injected(),
+        ));
+        let per_slot: Vec<String> = lock_ok(&self.worker_panics)
+            .iter()
+            .map(|p| p.to_string())
+            .collect();
+        s.push_str(&format!(
+            "pool: workers={} worker_restarts={} requests_reclaimed={} worker_panics=[{}]\n",
+            self.workers.load(Ordering::Relaxed),
+            self.worker_restarts.load(Ordering::Relaxed),
+            self.requests_reclaimed.load(Ordering::Relaxed),
+            per_slot.join(","),
         ));
         s.push_str(&self.request_latency.summary("request_latency"));
         s.push('\n');
@@ -496,6 +529,25 @@ mod tests {
         let res = snap.find("resilience:").unwrap();
         let dec = snap.find("decode_latency:").unwrap();
         assert!(res < dec);
+    }
+
+    #[test]
+    fn metrics_snapshot_exposes_pool_counters() {
+        let m = Metrics::default();
+        m.workers.store(4, Ordering::Relaxed);
+        m.worker_restarts.store(2, Ordering::Relaxed);
+        m.requests_reclaimed.store(3, Ordering::Relaxed);
+        m.set_worker_panics(0, 1);
+        m.set_worker_panics(3, 5);
+        let snap = m.snapshot();
+        assert!(snap.contains("pool: workers=4 worker_restarts=2 requests_reclaimed=3"));
+        // Slots 1 and 2 were never reported — rendered as zeros.
+        assert!(snap.contains("worker_panics=[1,0,0,5]"));
+        // The pool line must also precede the latency summaries so the
+        // client-side STATS terminator (`decode_latency`) stays last.
+        let pool = snap.find("pool:").unwrap();
+        let dec = snap.find("decode_latency:").unwrap();
+        assert!(pool < dec);
     }
 
     #[test]

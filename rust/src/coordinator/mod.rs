@@ -6,16 +6,23 @@
 //!   algorithms against the backend, replies over channels; consults the
 //!   [`cache`](crate::cache) pair before admission and feeds it after
 //!   every completion.
+//! * [`pool`] — the supervised multi-worker tier: N workers over one
+//!   queue and one shared cache, heartbeat supervision, and exactly-once
+//!   reclaim of a lost worker's in-flight requests.
 //! * [`server`] — TCP line-protocol front end + blocking client.
 //! * [`metrics`] — counters and latency histograms (acceptance rate,
 //!   tokens/call, queue wait, decode latency).
 
 pub mod batcher;
 pub mod metrics;
+pub mod pool;
 pub mod server;
 pub mod worker;
 
 pub use batcher::{lock_ok, DecodeMode, PushError, Request, RequestQueue};
 pub use metrics::{Histogram, Metrics};
+pub use pool::{default_workers, run_pool, PoolConfig};
 pub use server::{serve, Client, Prediction, ServerState};
-pub use worker::{run_worker, Job, JobResult, Reply};
+pub use worker::{
+    run_worker, run_worker_supervised, InFlight, Job, JobResult, Reply, ReplySlot, WorkerHealth,
+};

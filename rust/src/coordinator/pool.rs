@@ -1,0 +1,406 @@
+//! The supervised worker pool: N worker threads draining one shared
+//! [`RequestQueue`], plus a supervisor that watches their heartbeats and
+//! fails work over between them.
+//!
+//! Each worker owns its **own backend instance** (sessions, arena rows,
+//! scratch — nothing about a backend is shared) but all workers share one
+//! [`ServeCache`]: results memoized by any worker are hits for all of
+//! them, and corpus windows mined by worker A draft worker B's
+//! speculative decodes. The queue stays the single admission point, so
+//! FIFO fairness and backpressure semantics are unchanged from the
+//! single-worker shape — `RXNSPEC_WORKERS=1` is exactly the old server.
+//!
+//! # Failure model
+//!
+//! The supervisor polls every [`PoolConfig::poll`] and declares a worker
+//! **lost** when any of these hold:
+//!
+//! - *wedged*: the worker is inside a batch (`busy`) but its heartbeat —
+//!   ticked on every pop and every session step — has been stale longer
+//!   than [`PoolConfig::wedge_timeout`];
+//! - *sick*: it has contained [`PoolConfig::max_worker_panics`] panics
+//!   (each one is survivable, but the rate says the incarnation is bad);
+//! - *dead*: its thread returned while the queue was still open or while
+//!   it still owed replies (a panic that escaped the worker loop, or a
+//!   backend that failed to load).
+//!
+//! A lost worker's unreplied in-flight requests are **reclaimed**: pushed
+//! back at the *front* of the queue (they already waited their turn) with
+//! their original admission ids, where a sibling pops them next tick.
+//! Reclaim happens **exactly once per request id** — a request lost a
+//! second time gets `ERR worker_lost` instead of another bounce, so a
+//! poisoned query cannot loop through the pool forever. Exactly-one-reply
+//! still holds end to end because replies travel through
+//! [`ReplySlot`](crate::coordinator::worker::ReplySlot): if the original
+//! owner limps to completion after its request was re-served, its late
+//! send loses the CAS and is dropped.
+//!
+//! The lost worker itself is abandoned in place (never joined while the
+//! pool runs — joining a wedged thread would wedge the supervisor) and a
+//! replacement is spawned into the same slot, bounded by
+//! [`PoolConfig::max_restarts`]. Abandoned "ghosts" stay under watch:
+//! one that pops fresh work and wedges *again* is reclaimed by the same
+//! rule, so no request can hide in a dying worker.
+//!
+//! Drain generalizes pool-wide: closing the queue stops admissions, every
+//! worker exits when the queue is empty, the supervisor waits until no
+//! ghost owes a reply, and only then releases parked threads and joins
+//! the scope. Stats need no merge step — workers share one [`Metrics`],
+//! so the `resil_*` aggregates keep their single-worker meaning; per-slot
+//! panic counts are mirrored into `Metrics::worker_panics` each poll.
+
+use std::collections::HashSet;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread;
+use std::time::Duration;
+
+use anyhow::Result;
+
+use crate::cache::ServeCache;
+use crate::coordinator::batcher::{Request, RequestQueue};
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::worker::{run_worker_supervised, Job, WorkerHealth};
+use crate::decoding::Backend;
+use crate::faults;
+use crate::vocab::Vocab;
+
+/// Default pool width: one worker per core, capped — each worker owns a
+/// full backend instance (weights are shared, sessions are not), so past
+/// a few workers the queue, not compute, is the bottleneck for the
+/// single-step reaction models this server fronts.
+pub fn default_workers() -> usize {
+    thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+        .clamp(1, 4)
+}
+
+/// Pool sizing and supervision knobs. Env-driven in production
+/// (`RXNSPEC_WORKERS`, `RXNSPEC_WEDGE_MS`); tests build them directly.
+#[derive(Debug, Clone)]
+pub struct PoolConfig {
+    /// Worker threads (min 1).
+    pub workers: usize,
+    /// A busy worker whose heartbeat is older than this is wedged.
+    pub wedge_timeout: Duration,
+    /// Supervisor poll interval (derived: `wedge_timeout / 8`, clamped).
+    pub poll: Duration,
+    /// Contained panics before an incarnation is declared sick.
+    pub max_worker_panics: u64,
+    /// Replacement-spawn budget for the pool's lifetime.
+    pub max_restarts: u64,
+}
+
+impl PoolConfig {
+    /// Config for `n` workers with default supervision timing.
+    pub fn with_workers(n: usize) -> PoolConfig {
+        PoolConfig::build(n, 2000)
+    }
+
+    /// Read `RXNSPEC_WORKERS` (default [`default_workers`]) and
+    /// `RXNSPEC_WEDGE_MS` (default 2000).
+    pub fn from_env() -> PoolConfig {
+        let workers = std::env::var("RXNSPEC_WORKERS")
+            .ok()
+            .and_then(|v| v.parse::<usize>().ok())
+            .unwrap_or_else(default_workers);
+        let wedge_ms = std::env::var("RXNSPEC_WEDGE_MS")
+            .ok()
+            .and_then(|v| v.parse::<u64>().ok())
+            .unwrap_or(2000);
+        PoolConfig::build(workers, wedge_ms)
+    }
+
+    fn build(workers: usize, wedge_ms: u64) -> PoolConfig {
+        let wedge_ms = wedge_ms.max(1);
+        PoolConfig {
+            workers: workers.max(1),
+            wedge_timeout: Duration::from_millis(wedge_ms),
+            poll: Duration::from_millis((wedge_ms / 8).clamp(2, 250)),
+            max_worker_panics: 64,
+            max_restarts: 16,
+        }
+    }
+}
+
+/// Re-enqueue a lost worker's unreplied requests, exactly once each.
+/// First loss of an id → front of the queue with the id preserved (the
+/// dedup unit); second loss → `ERR worker_lost` so reclaim can't loop.
+fn reclaim_unreplied(
+    queue: &RequestQueue<Job>,
+    metrics: &Metrics,
+    health: &WorkerHealth,
+    reclaimed_ids: &mut HashSet<u64>,
+) {
+    // The reclaim path is itself a fault site: a panic here must cost
+    // the pool nothing but the containment count.
+    if catch_unwind(AssertUnwindSafe(|| faults::fire_infallible("queue.reclaim"))).is_err() {
+        metrics.panics_contained.fetch_add(1, Ordering::Relaxed);
+    }
+    for (id, inf) in health.take_unreplied() {
+        if reclaimed_ids.insert(id) {
+            metrics.requests_reclaimed.fetch_add(1, Ordering::Relaxed);
+            queue.requeue_front(Request {
+                id,
+                mode: inf.mode,
+                payload: Job {
+                    smiles: inf.smiles,
+                    resp: inf.resp,
+                },
+                enqueued: inf.enqueued,
+                deadline: inf.deadline,
+            });
+        } else {
+            let _ = inf.resp.send(Err("worker_lost".to_string()));
+            metrics.requests_failed.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+}
+
+/// Run a supervised pool until the queue is closed and fully drained.
+///
+/// `factory` builds one backend per worker and is invoked **on the
+/// worker's own thread** (backends need not be `Sync`, only the factory
+/// is); a factory error retires that incarnation and the supervisor
+/// respawns against the restart budget. Blocks the calling thread, which
+/// becomes the supervisor.
+pub fn run_pool<B, F>(
+    factory: F,
+    vocab: &Vocab,
+    queue: &RequestQueue<Job>,
+    metrics: &Arc<Metrics>,
+    cache: &ServeCache,
+    cfg: &PoolConfig,
+) where
+    B: Backend,
+    F: Fn(usize) -> Result<B> + Sync,
+{
+    let workers = cfg.workers.max(1);
+    metrics.workers.store(workers as u64, Ordering::Relaxed);
+    let wedge_ms = cfg.wedge_timeout.as_millis() as u64;
+    let released = Arc::new(AtomicBool::new(false));
+    let factory = &factory;
+    let released_ref = &released;
+
+    thread::scope(|s| {
+        let spawn = |slot: usize, generation: u64| {
+            let health = Arc::new(WorkerHealth::new(slot, generation, Arc::clone(released_ref)));
+            let h2 = Arc::clone(&health);
+            let handle = s.spawn(move || {
+                let backend = match factory(slot) {
+                    Ok(b) => b,
+                    Err(e) => {
+                        eprintln!("pool: worker {slot}.{generation} backend load failed: {e}");
+                        return;
+                    }
+                };
+                // A panic that escapes the worker loop (its internal
+                // containment notwithstanding) must not poison the scope
+                // join — swallow it here; the supervisor sees a finished
+                // thread with unreplied work and reclaims.
+                if catch_unwind(AssertUnwindSafe(|| {
+                    run_worker_supervised(&backend, vocab, queue, metrics, cache, &h2)
+                }))
+                .is_err()
+                {
+                    h2.panics.fetch_add(1, Ordering::Relaxed);
+                }
+            });
+            (health, handle)
+        };
+
+        let mut gen_by_slot: Vec<u64> = vec![0; workers];
+        let mut slots: Vec<_> = (0..workers).map(|i| spawn(i, 0)).collect();
+        let mut ghosts: Vec<_> = Vec::new();
+        let mut reclaimed_ids: HashSet<u64> = HashSet::new();
+        let mut restarts: u64 = 0;
+
+        loop {
+            thread::sleep(cfg.poll);
+
+            // Mirror per-slot (current incarnation) panic counts into
+            // STATS; the pool-wide aggregate is already in
+            // `panics_contained` via `WorkerHealth::contain_panic`.
+            for (h, _) in &slots {
+                metrics.set_worker_panics(h.slot, h.panics.load(Ordering::Relaxed));
+            }
+
+            // Sweep active workers for losses.
+            let mut i = 0;
+            while i < slots.len() {
+                let finished = slots[i].1.is_finished();
+                let h = &slots[i].0;
+                let lost = if finished {
+                    // Returning is only legitimate once the queue is
+                    // closed and drained, and never with replies owed.
+                    !(queue.is_closed() && queue.is_empty()) || h.has_unreplied()
+                } else {
+                    (h.is_busy() && h.stale_ms() > wedge_ms)
+                        || h.panics.load(Ordering::Relaxed) >= cfg.max_worker_panics
+                };
+                if !lost {
+                    i += 1;
+                    continue;
+                }
+                eprintln!(
+                    "pool: worker {}.{} lost ({}); reclaiming its in-flight requests",
+                    h.slot,
+                    h.generation,
+                    if finished { "thread exited" } else { "wedged or sick" }
+                );
+                reclaim_unreplied(queue, metrics, h, &mut reclaimed_ids);
+                let (h_old, handle_old) = slots.remove(i);
+                let slot_idx = h_old.slot;
+                // Never joined while the pool runs: joining a wedged
+                // thread would wedge the supervisor. The scope join at
+                // drain collects it once `released` frees parked loops.
+                ghosts.push((h_old, handle_old));
+                if restarts < cfg.max_restarts {
+                    restarts += 1;
+                    metrics.worker_restarts.fetch_add(1, Ordering::Relaxed);
+                    gen_by_slot[slot_idx] += 1;
+                    slots.push(spawn(slot_idx, gen_by_slot[slot_idx]));
+                }
+            }
+
+            // Ghosts stay under watch: an abandoned-but-alive worker that
+            // popped fresh work and then wedged (or died) still owes
+            // replies nobody else knows about.
+            for (h, hd) in &ghosts {
+                let ghost_lost = hd.is_finished() || (h.is_busy() && h.stale_ms() > wedge_ms);
+                if ghost_lost && h.has_unreplied() {
+                    reclaim_unreplied(queue, metrics, h, &mut reclaimed_ids);
+                }
+            }
+
+            let drained = queue.is_closed() && queue.is_empty();
+
+            // Safety net: reclaimed (or still-queued) work with no live
+            // worker left to serve it — spawn one against the budget.
+            let any_live = slots.iter().any(|(_, hd)| !hd.is_finished());
+            if !any_live && !drained && restarts < cfg.max_restarts {
+                restarts += 1;
+                metrics.worker_restarts.fetch_add(1, Ordering::Relaxed);
+                gen_by_slot[0] += 1;
+                slots.push(spawn(0, gen_by_slot[0]));
+                continue;
+            }
+
+            let all_exited = slots.iter().all(|(_, hd)| hd.is_finished());
+            let ghosts_clear = ghosts.iter().all(|(h, _)| !h.has_unreplied());
+            if drained && all_exited && ghosts_clear {
+                break;
+            }
+        }
+
+        // Free parked (wedged) threads so the scope join below — which
+        // joins every spawned thread, ghosts included — can complete.
+        released.store(true, Ordering::Release);
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::batcher::DecodeMode;
+    use crate::coordinator::worker::JobResult;
+    use crate::testutil::CopyModel;
+    use std::sync::mpsc;
+
+    fn tiny_vocab() -> Vocab {
+        Vocab::build(["CCONF", "c1ccccc1"]).unwrap()
+    }
+
+    #[test]
+    fn config_derives_poll_from_wedge_timeout() {
+        let cfg = PoolConfig::with_workers(4);
+        assert_eq!(cfg.workers, 4);
+        assert_eq!(cfg.wedge_timeout, Duration::from_millis(2000));
+        assert_eq!(cfg.poll, Duration::from_millis(250));
+        // Tiny wedge windows keep a sane floor; huge ones a ceiling.
+        assert_eq!(PoolConfig::build(1, 4).poll, Duration::from_millis(2));
+        assert_eq!(PoolConfig::build(1, 10_000).poll, Duration::from_millis(250));
+        assert_eq!(PoolConfig::build(0, 0).workers, 1);
+    }
+
+    /// The basic pool shape: N workers, one queue, one cache — every
+    /// request answered exactly once, correctly.
+    #[test]
+    fn pool_serves_a_mixed_workload_with_n_workers() {
+        let vocab = tiny_vocab();
+        let queue = RequestQueue::new(4, Duration::from_millis(1));
+        let metrics = Arc::new(Metrics::default());
+        let cache = ServeCache::default();
+
+        let mut rxs: Vec<(String, mpsc::Receiver<JobResult>)> = Vec::new();
+        for i in 0..12 {
+            let smiles = if i % 2 == 0 { "CCO" } else { "c1ccccc1" };
+            let mode = match i % 3 {
+                0 => DecodeMode::Greedy,
+                1 => DecodeMode::SpecGreedy { dl: 2 },
+                _ => DecodeMode::Beam { n: 2 },
+            };
+            let (tx, rx) = mpsc::channel();
+            queue.push(mode, Job::new(smiles.to_string(), tx));
+            rxs.push((smiles.to_string(), rx));
+        }
+        queue.close();
+
+        let cfg = PoolConfig::with_workers(3);
+        run_pool(
+            |_slot| Ok(CopyModel::new(96, 96, vocab.len())),
+            &vocab,
+            &queue,
+            &metrics,
+            &cache,
+            &cfg,
+        );
+
+        for (smiles, rx) in rxs {
+            let reply = rx.recv().unwrap().unwrap();
+            assert_eq!(reply.hyps[0].0, smiles);
+            assert!(rx.try_recv().is_err(), "exactly one reply");
+        }
+        assert_eq!(metrics.workers.load(Ordering::Relaxed), 3);
+        assert_eq!(metrics.requests_total.load(Ordering::Relaxed), 12);
+        assert_eq!(metrics.worker_restarts.load(Ordering::Relaxed), 0);
+        assert_eq!(metrics.requests_reclaimed.load(Ordering::Relaxed), 0);
+    }
+
+    /// A factory that fails on one slot retires that incarnation; the
+    /// respawn budget brings up a replacement and the queue still drains.
+    #[test]
+    fn factory_failure_is_retried_within_budget() {
+        let vocab = tiny_vocab();
+        let queue = RequestQueue::new(4, Duration::from_millis(1));
+        let metrics = Arc::new(Metrics::default());
+        let cache = ServeCache::disabled();
+
+        let (tx, rx) = mpsc::channel();
+        queue.push(DecodeMode::Greedy, Job::new("CCO".to_string(), tx));
+        queue.close();
+
+        let mut cfg = PoolConfig::with_workers(1);
+        cfg.wedge_timeout = Duration::from_millis(100);
+        cfg.poll = Duration::from_millis(2);
+        let attempts = std::sync::atomic::AtomicU64::new(0);
+        run_pool(
+            |_slot| {
+                if attempts.fetch_add(1, Ordering::Relaxed) == 0 {
+                    anyhow::bail!("injected load failure");
+                }
+                Ok(CopyModel::new(96, 96, vocab.len()))
+            },
+            &vocab,
+            &queue,
+            &metrics,
+            &cache,
+            &cfg,
+        );
+
+        assert_eq!(rx.recv().unwrap().unwrap().hyps[0].0, "CCO");
+        assert!(metrics.worker_restarts.load(Ordering::Relaxed) >= 1);
+    }
+}

@@ -273,10 +273,7 @@ fn handle_line(line: &str, state: &Arc<ServerState>) -> LineReply {
             };
             let t0 = Instant::now();
             let (tx, rx) = mpsc::channel::<JobResult>();
-            let job = Job {
-                smiles: smiles.trim().to_string(),
-                resp: tx,
-            };
+            let job = Job::new(smiles.trim().to_string(), tx);
             match state.queue.try_push(mode, job, deadline) {
                 Ok(()) => {}
                 Err(PushError::Full(_)) => {
@@ -529,10 +526,7 @@ mod tests {
             .queue
             .try_push(
                 DecodeMode::Greedy,
-                Job {
-                    smiles: "CCO".to_string(),
-                    resp: tx,
-                },
+                Job::new("CCO".to_string(), tx),
                 None,
             )
             .unwrap();

@@ -1,11 +1,24 @@
-//! The model worker: a single thread owning the backend, draining the
-//! request queue batch by batch.
+//! The model worker: one thread owning a backend instance, draining the
+//! shared request queue batch by batch.
 //!
-//! One worker is the right shape for this testbed (one PJRT CPU device;
-//! XLA already uses the cores a single executable can use). The queue +
-//! worker split still gives the serving properties that matter: FIFO
-//! fairness, dynamic batching, and backpressure (bounded queue wait shows
-//! up in metrics rather than in stalled sockets).
+//! A worker runs either standalone ([`run_worker`], the single-device
+//! shape) or as one member of the supervised pool in
+//! [`pool`](crate::coordinator::pool): N workers pull from the **same**
+//! `RequestQueue` and share one `ServeCache` (one result cache, one
+//! draft store — windows mined by any worker speed up its siblings),
+//! each with its own backend session pool. Either way the queue + worker
+//! split gives the serving properties that matter: FIFO fairness,
+//! dynamic batching, and backpressure (bounded queue wait shows up in
+//! metrics rather than in stalled sockets).
+//!
+//! Pool membership adds two contracts, both carried by [`WorkerHealth`]:
+//! a heartbeat (ticked every pop and every session step — a *busy*
+//! worker with a stale heartbeat is wedged) and an in-flight registry
+//! (every owned request, by admission id, so the supervisor can reclaim
+//! the unreplied ones from a lost worker). Replies go through
+//! [`ReplySlot`], which enforces **exactly one reply per request** even
+//! when a reclaimed request is re-served while its original owner limps
+//! to completion.
 //!
 //! Greedy and speculative-greedy batches run as **live decoding
 //! sessions** ([`GreedyRun`] / [`SpecGreedyRun`]): the session stays
@@ -45,20 +58,22 @@
 //! frontier does depend on it. De-escalation is immediate when pressure
 //! drops.
 
+use std::collections::HashMap;
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{mpsc, Arc};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
 use crate::cache::{CachedPrediction, ServeCache};
-use crate::coordinator::batcher::{DecodeMode, Request, RequestQueue};
+use crate::coordinator::batcher::{lock_ok, DecodeMode, Request, RequestQueue};
 use crate::coordinator::metrics::Metrics;
 use crate::decoding::{
     beam_search, greedy, sbs, spec_greedy, Backend, GreedyRun, SbsConfig, SpecGreedyRun,
 };
 use crate::draft::{Acceptance, DraftConfig};
+use crate::faults;
 use crate::trace::{self, Phase};
 use crate::trace_span;
 use crate::vocab::Vocab;
@@ -110,11 +125,62 @@ fn panic_text(p: &Box<dyn std::any::Any + Send>) -> String {
     }
 }
 
-/// One unit of serving work: a query SMILES and a reply channel.
+/// Exactly-one-reply guard around a job's reply channel. Clones share
+/// the flag, so wherever copies of a request travel — a live lane, a
+/// solo retry, a supervisor reclaim re-served by a sibling worker — the
+/// **first** `send` wins and every later one is a no-op. A request
+/// reclaimed from a wedged worker that later limps to completion can
+/// therefore never answer its client twice.
+#[derive(Debug, Clone)]
+pub struct ReplySlot {
+    tx: mpsc::Sender<JobResult>,
+    replied: Arc<AtomicBool>,
+}
+
+impl ReplySlot {
+    pub fn new(tx: mpsc::Sender<JobResult>) -> ReplySlot {
+        ReplySlot {
+            tx,
+            replied: Arc::new(AtomicBool::new(false)),
+        }
+    }
+
+    /// Deliver `result` unless some clone of this slot already replied.
+    /// Returns whether this call won the race.
+    pub fn send(&self, result: JobResult) -> bool {
+        if self
+            .replied
+            .compare_exchange(false, true, Ordering::AcqRel, Ordering::Acquire)
+            .is_ok()
+        {
+            let _ = self.tx.send(result);
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Has any clone of this slot replied?
+    pub fn is_replied(&self) -> bool {
+        self.replied.load(Ordering::Acquire)
+    }
+}
+
+/// One unit of serving work: a query SMILES and a reply slot.
 #[derive(Debug)]
 pub struct Job {
     pub smiles: String,
-    pub resp: mpsc::Sender<JobResult>,
+    pub resp: ReplySlot,
+}
+
+impl Job {
+    /// Wrap a raw reply channel in a fresh exactly-once slot.
+    pub fn new(smiles: String, tx: mpsc::Sender<JobResult>) -> Job {
+        Job {
+            smiles,
+            resp: ReplySlot::new(tx),
+        }
+    }
 }
 
 /// What the worker sends back.
@@ -160,15 +226,158 @@ impl DegradeState {
     }
 }
 
-/// Fail one shed request back to its client. Runs under the queue lock
-/// (the contract of the shedding pop variants), so it only touches the
-/// reply channel and atomics — never the queue.
+/// Snapshot of one in-flight request, sufficient for the pool
+/// supervisor to re-enqueue it if its owning worker is lost.
+#[derive(Debug)]
+pub struct InFlight {
+    pub mode: DecodeMode,
+    pub smiles: String,
+    pub resp: ReplySlot,
+    pub enqueued: Instant,
+    pub deadline: Option<Instant>,
+}
+
+/// Heartbeat + in-flight registry shared between one worker thread and
+/// the pool supervisor. The worker ticks it on every pop and every
+/// session step and registers each request it owns; the supervisor
+/// declares a *busy* worker with a stale heartbeat wedged and reclaims
+/// whatever is registered and unreplied. `run_worker` (no supervisor)
+/// uses a standalone instance via [`WorkerHealth::solo`].
+#[derive(Debug)]
+pub struct WorkerHealth {
+    /// Stable worker slot index (kept across respawns into the slot).
+    pub slot: usize,
+    /// Spawn generation within the slot (0 = original worker).
+    pub generation: u64,
+    /// Panics contained by this worker incarnation. The pool-wide
+    /// aggregate stays in [`Metrics::panics_contained`], so the
+    /// `resil_*` surface keeps its meaning.
+    pub panics: AtomicU64,
+    /// Milliseconds since `epoch` of the last liveness tick, stored +1
+    /// so 0 means "never ticked".
+    last_tick_ms: AtomicU64,
+    /// Inside a batch? Idle workers block in `pop_batch` without
+    /// ticking; only a busy worker with a stale heartbeat is wedged.
+    busy: AtomicBool,
+    /// Requests currently owned by this worker, by admission id.
+    in_flight: Mutex<HashMap<u64, InFlight>>,
+    /// Set pool-wide at drain so parked (wedged) threads exit.
+    released: Arc<AtomicBool>,
+    epoch: Instant,
+}
+
+impl WorkerHealth {
+    pub fn new(slot: usize, generation: u64, released: Arc<AtomicBool>) -> WorkerHealth {
+        WorkerHealth {
+            slot,
+            generation,
+            panics: AtomicU64::new(0),
+            last_tick_ms: AtomicU64::new(0),
+            busy: AtomicBool::new(false),
+            in_flight: Mutex::new(HashMap::new()),
+            released,
+            epoch: Instant::now(),
+        }
+    }
+
+    /// Health for an unsupervised standalone worker: nothing watches the
+    /// heartbeat, and a `worker.wedge` fault releases immediately (there
+    /// is no supervisor to reclaim and free it).
+    pub fn solo() -> WorkerHealth {
+        WorkerHealth::new(0, 0, Arc::new(AtomicBool::new(true)))
+    }
+
+    /// Record a liveness tick (per pop, per session step).
+    pub fn tick(&self) {
+        self.last_tick_ms
+            .store(self.epoch.elapsed().as_millis() as u64 + 1, Ordering::Release);
+    }
+
+    /// Milliseconds since the last tick (`u64::MAX` if never ticked).
+    pub fn stale_ms(&self) -> u64 {
+        match self.last_tick_ms.load(Ordering::Acquire) {
+            0 => u64::MAX,
+            t => (self.epoch.elapsed().as_millis() as u64).saturating_sub(t - 1),
+        }
+    }
+
+    pub fn is_busy(&self) -> bool {
+        self.busy.load(Ordering::Acquire)
+    }
+
+    /// Register one owned request (popped batch member or mid-session
+    /// newcomer). Cleared wholesale by [`WorkerHealth::end_batch`];
+    /// replied entries are skipped by reclaim, so lazy cleanup is safe.
+    fn register(&self, r: &Request<Job>) {
+        lock_ok(&self.in_flight).insert(
+            r.id,
+            InFlight {
+                mode: r.mode,
+                smiles: r.payload.smiles.clone(),
+                resp: r.payload.resp.clone(),
+                enqueued: r.enqueued,
+                deadline: r.deadline,
+            },
+        );
+    }
+
+    fn begin_batch(&self, batch: &[Request<Job>]) {
+        self.busy.store(true, Ordering::Release);
+        for r in batch {
+            self.register(r);
+        }
+        self.tick();
+    }
+
+    fn end_batch(&self) {
+        lock_ok(&self.in_flight).clear();
+        self.busy.store(false, Ordering::Release);
+        self.tick();
+    }
+
+    /// Count one contained panic against both this worker and the
+    /// pool-wide aggregate.
+    fn contain_panic(&self, metrics: &Metrics) {
+        self.panics.fetch_add(1, Ordering::Relaxed);
+        metrics.panics_contained.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Any registered request still waiting for its reply?
+    pub fn has_unreplied(&self) -> bool {
+        lock_ok(&self.in_flight)
+            .values()
+            .any(|inf| !inf.resp.is_replied())
+    }
+
+    /// Drain the registry, returning the unreplied entries (the ones the
+    /// supervisor must reclaim). Replied entries are dropped.
+    pub fn take_unreplied(&self) -> Vec<(u64, InFlight)> {
+        lock_ok(&self.in_flight)
+            .drain()
+            .filter(|(_, inf)| !inf.resp.is_replied())
+            .collect()
+    }
+
+    /// Park a wedged worker until the pool drains and releases it. The
+    /// heartbeat stays frozen the whole time — that is the signal.
+    fn park_wedged(&self) {
+        while !self.released.load(Ordering::Acquire) {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+    }
+}
+
+/// Fail one shed request back to its client. The shedding pop variants
+/// call this *after* releasing the queue lock, so the reply — which can
+/// block on a slow client socket — never stalls sibling workers' pops.
 fn shed_request(r: Request<Job>, metrics: &Metrics) {
     let _ = r.payload.resp.send(Err("deadline_exceeded".to_string()));
     metrics.requests_shed.fetch_add(1, Ordering::Relaxed);
 }
 
 /// Drain the queue until it is closed. Runs on its own thread.
+/// Standalone compatibility wrapper: one unsupervised worker (no pool,
+/// no heartbeat watcher) — the single-device serving shape.
 pub fn run_worker<B: Backend>(
     backend: &B,
     vocab: &Vocab,
@@ -176,11 +385,45 @@ pub fn run_worker<B: Backend>(
     metrics: &Arc<Metrics>,
     cache: &ServeCache,
 ) {
+    run_worker_supervised(backend, vocab, queue, metrics, cache, &WorkerHealth::solo())
+}
+
+/// One (possibly pool-member) worker: drain the queue until it is
+/// closed, reporting liveness and in-flight ownership through `health`
+/// so a supervisor can reclaim this worker's requests if it wedges.
+pub fn run_worker_supervised<B: Backend>(
+    backend: &B,
+    vocab: &Vocab,
+    queue: &RequestQueue<Job>,
+    metrics: &Arc<Metrics>,
+    cache: &ServeCache,
+    health: &WorkerHealth,
+) {
     let mut degrade = DegradeState::default();
     loop {
+        health.tick();
         let Some(batch) = queue.pop_batch_shedding(&mut |r| shed_request(r, metrics)) else {
             return;
         };
+        // Ownership is registered before anything can go wrong: from
+        // here until `end_batch`, every request in the batch is either
+        // replied to or reclaimable by the supervisor.
+        health.begin_batch(&batch);
+        // Pool-level fault sites. `worker.tick` models a sick control
+        // loop: a panic here is contained like any decode panic (the
+        // batch is registered, so nothing can be lost), and a Slow stall
+        // starves the heartbeat the supervisor watches. `worker.wedge`
+        // freezes this worker outright — batch registered, heartbeat
+        // stopped — so the pool must declare it lost, reclaim its
+        // requests, and spawn a replacement; the frozen thread parks
+        // until the pool drains.
+        if catch_unwind(AssertUnwindSafe(|| faults::fire_infallible("worker.tick"))).is_err() {
+            health.contain_panic(metrics);
+        }
+        if faults::fires("worker.wedge") {
+            health.park_wedged();
+            return;
+        }
         // Pressure is sampled per tick *after* the pop: what is still
         // queued behind this batch is the backlog the tick can't serve.
         let level = degrade.observe(queue.occupancy());
@@ -196,7 +439,8 @@ pub fn run_worker<B: Backend>(
         // stream_batch / solo_batch), so cache hits — which never occupy
         // a lane — don't distort the mean-batch metric in either
         // direction.
-        process_batch(backend, vocab, batch, queue, metrics, cache, level);
+        process_batch(backend, vocab, batch, queue, metrics, cache, level, health);
+        health.end_batch();
     }
 }
 
@@ -287,6 +531,7 @@ fn validate<B: Backend>(
     }
 }
 
+#[allow(clippy::too_many_arguments)]
 fn process_batch<B: Backend>(
     backend: &B,
     vocab: &Vocab,
@@ -295,15 +540,31 @@ fn process_batch<B: Backend>(
     metrics: &Arc<Metrics>,
     cache: &ServeCache,
     degrade_level: u8,
+    health: &WorkerHealth,
 ) {
     let mode = batch[0].mode;
     match mode {
-        DecodeMode::Greedy | DecodeMode::SpecGreedy { .. } => {
-            stream_batch(backend, vocab, batch, queue, metrics, cache, mode, degrade_level)
-        }
-        DecodeMode::Beam { .. } | DecodeMode::Sbs { .. } => {
-            solo_batch(backend, vocab, batch, metrics, cache, mode, degrade_level)
-        }
+        DecodeMode::Greedy | DecodeMode::SpecGreedy { .. } => stream_batch(
+            backend,
+            vocab,
+            batch,
+            queue,
+            metrics,
+            cache,
+            mode,
+            degrade_level,
+            health,
+        ),
+        DecodeMode::Beam { .. } | DecodeMode::Sbs { .. } => solo_batch(
+            backend,
+            vocab,
+            batch,
+            metrics,
+            cache,
+            mode,
+            degrade_level,
+            health,
+        ),
     }
 }
 
@@ -332,6 +593,7 @@ fn absorb_solo_output(metrics: &Metrics, out: &crate::decoding::DecodeOutput) {
 /// Beam / SBS: the batcher hands us one request at a time. The decode is
 /// supervised: a panic is contained, retried once after a backoff, and a
 /// second panic becomes an `ERR` for this one client.
+#[allow(clippy::too_many_arguments)]
 fn solo_batch<B: Backend>(
     backend: &B,
     vocab: &Vocab,
@@ -340,8 +602,10 @@ fn solo_batch<B: Backend>(
     cache: &ServeCache,
     mode: DecodeMode,
     degrade_level: u8,
+    health: &WorkerHealth,
 ) {
     for r in &batch {
+        health.tick();
         let Some(src) = validate(backend, vocab, r, metrics) else {
             continue;
         };
@@ -376,13 +640,13 @@ fn solo_batch<B: Backend>(
         let out = match catch_unwind(AssertUnwindSafe(attempt)) {
             Ok(res) => res,
             Err(p) => {
-                metrics.panics_contained.fetch_add(1, Ordering::Relaxed);
+                health.contain_panic(metrics);
                 metrics.requests_retried.fetch_add(1, Ordering::Relaxed);
                 std::thread::sleep(RETRY_BACKOFF);
                 match catch_unwind(AssertUnwindSafe(attempt)) {
                     Ok(res) => res,
                     Err(p2) => {
-                        metrics.panics_contained.fetch_add(1, Ordering::Relaxed);
+                        health.contain_panic(metrics);
                         let _ = p;
                         let _ = r
                             .payload
@@ -513,16 +777,17 @@ impl<'a> Run<'a> {
     }
 }
 
-/// Lane bookkeeping: reply channel, per-request decode timer, the
+/// Lane bookkeeping: reply slot, per-request decode timer, the
 /// session call count at admission (so the per-request decoder_calls
-/// stat covers only this request's lifetime), replied?, and the
-/// encoded query (the completion's cache key).
+/// stat covers only this request's lifetime), and the encoded query
+/// (the completion's cache key). "Replied?" lives in the [`ReplySlot`]
+/// itself — shared with any reclaim clone, so a lane whose request was
+/// re-served elsewhere reads as replied here too.
 #[derive(Debug)]
 struct LaneCtx {
-    resp: mpsc::Sender<JobResult>,
+    resp: ReplySlot,
     t0: Instant,
     calls_at_admit: usize,
-    replied: bool,
     ids: Vec<i64>,
     /// Synthetic trace track and admission timestamp — request
     /// intervals overlap on this thread, so each lane records its
@@ -538,7 +803,6 @@ fn fresh_lane(r: &Request<Job>, ids: &[i64], calls_at_admit: usize) -> LaneCtx {
         resp: r.payload.resp.clone(),
         t0: Instant::now(),
         calls_at_admit,
-        replied: false,
         ids: ids.to_vec(),
         track,
         t_admit_ns: trace_admission(r.enqueued, track),
@@ -550,6 +814,7 @@ fn fresh_lane(r: &Request<Job>, ids: &[i64], calls_at_admit: usize) -> LaneCtx {
 /// invariants, so a successful retry is bit-identical to what the
 /// panicked session would have produced. Single attempt: a second panic
 /// becomes this client's `ERR`.
+#[allow(clippy::too_many_arguments)]
 fn retry_lane_solo<B: Backend>(
     backend: &B,
     vocab: &Vocab,
@@ -558,6 +823,7 @@ fn retry_lane_solo<B: Backend>(
     mode: DecodeMode,
     lane: &LaneCtx,
     degrade_level: u8,
+    health: &WorkerHealth,
 ) {
     metrics.requests_retried.fetch_add(1, Ordering::Relaxed);
     std::thread::sleep(RETRY_BACKOFF);
@@ -597,7 +863,7 @@ fn retry_lane_solo<B: Backend>(
             metrics.requests_failed.fetch_add(1, Ordering::Relaxed);
         }
         Err(p) => {
-            metrics.panics_contained.fetch_add(1, Ordering::Relaxed);
+            health.contain_panic(metrics);
             let _ = lane.resp.send(Err(format!("panic: {}", panic_text(&p))));
             metrics.requests_failed.fetch_add(1, Ordering::Relaxed);
         }
@@ -618,6 +884,7 @@ fn stream_batch<B: Backend>(
     cache: &ServeCache,
     mode: DecodeMode,
     degrade_level: u8,
+    health: &WorkerHealth,
 ) {
     let max_lanes = queue.max_batch.max(1);
 
@@ -683,10 +950,19 @@ fn stream_batch<B: Backend>(
         Ok(Ok(())) => run_slot.expect("setup stored the run"),
         Ok(Err(e)) => return fail_all(&valid, e.to_string()),
         Err(_p) => {
-            metrics.panics_contained.fetch_add(1, Ordering::Relaxed);
+            health.contain_panic(metrics);
             for (r, ids) in &valid {
                 let lane = fresh_lane(r, ids, 0);
-                retry_lane_solo(backend, vocab, metrics, cache, mode, &lane, degrade_level);
+                retry_lane_solo(
+                    backend,
+                    vocab,
+                    metrics,
+                    cache,
+                    mode,
+                    &lane,
+                    degrade_level,
+                    health,
+                );
             }
             return;
         }
@@ -706,6 +982,7 @@ fn stream_batch<B: Backend>(
     let max_session_admissions = max_lanes.saturating_mul(8);
 
     loop {
+        health.tick();
         let step_res = match catch_unwind(AssertUnwindSafe(|| {
             let _tick = trace_span!(Phase::BatchTick, run.n_live() as u64);
             run.step()
@@ -717,12 +994,21 @@ fn stream_batch<B: Backend>(
                 // panic can't escape) and retry every unreplied lane
                 // solo via exact stateless recompute. One bad row costs
                 // one retry pass, not the worker thread.
-                metrics.panics_contained.fetch_add(1, Ordering::Relaxed);
+                health.contain_panic(metrics);
                 let quarantined: Vec<LaneCtx> =
-                    lanes.into_iter().filter(|l| !l.replied).collect();
+                    lanes.into_iter().filter(|l| !l.resp.is_replied()).collect();
                 let _ = catch_unwind(AssertUnwindSafe(move || drop(run)));
                 for lane in &quarantined {
-                    retry_lane_solo(backend, vocab, metrics, cache, mode, lane, degrade_level);
+                    retry_lane_solo(
+                        backend,
+                        vocab,
+                        metrics,
+                        cache,
+                        mode,
+                        lane,
+                        degrade_level,
+                        health,
+                    );
                 }
                 return;
             }
@@ -731,7 +1017,7 @@ fn stream_batch<B: Backend>(
             Ok(f) => f,
             Err(e) => {
                 // Finished lanes already replied; fail the rest.
-                for l in lanes.iter().filter(|l| !l.replied) {
+                for l in lanes.iter().filter(|l| !l.resp.is_replied()) {
                     let _ = l.resp.send(Err(format!("decode failed: {e}")));
                     metrics.requests_failed.fetch_add(1, Ordering::Relaxed);
                 }
@@ -769,7 +1055,6 @@ fn stream_batch<B: Backend>(
                 reply.acceptance_rate,
             );
             let _ = lanes[li].resp.send(Ok(reply));
-            lanes[li].replied = true;
             metrics.decode_latency.record(lanes[li].t0.elapsed());
             trace_completion(
                 lanes[li].t_admit_ns,
@@ -790,6 +1075,12 @@ fn stream_batch<B: Backend>(
             queue.try_pop_compatible_shedding(mode, free, &mut |r| shed_request(r, metrics));
         if !newcomers.is_empty() {
             let _adm_span = trace_span!(Phase::Admission, newcomers.len() as u64);
+            // Newcomers become this worker's responsibility the moment
+            // they leave the queue — register them before validation so
+            // a wedge mid-admission still leaves them reclaimable.
+            for r in &newcomers {
+                health.register(r);
+            }
             let now = Instant::now();
             let mut adm: Vec<(Request<Job>, Vec<i64>)> = Vec::new();
             for r in newcomers {
@@ -828,9 +1119,9 @@ fn stream_batch<B: Backend>(
                     }
                     Ok(Err(e)) => fail_all(&adm, e.to_string()),
                     Err(_p) => {
-                        metrics.panics_contained.fetch_add(1, Ordering::Relaxed);
+                        health.contain_panic(metrics);
                         let mut quarantined: Vec<LaneCtx> =
-                            lanes.into_iter().filter(|l| !l.replied).collect();
+                            lanes.into_iter().filter(|l| !l.resp.is_replied()).collect();
                         for (r, ids) in &adm {
                             quarantined.push(fresh_lane(r, ids, 0));
                         }
@@ -844,6 +1135,7 @@ fn stream_batch<B: Backend>(
                                 mode,
                                 lane,
                                 degrade_level,
+                                health,
                             );
                         }
                         return;
@@ -878,14 +1170,23 @@ mod tests {
 
     fn send_job(queue: &RequestQueue<Job>, mode: DecodeMode, smiles: &str) -> mpsc::Receiver<JobResult> {
         let (tx, rx) = mpsc::channel();
-        queue.push(
-            mode,
-            Job {
-                smiles: smiles.to_string(),
-                resp: tx,
-            },
-        );
+        queue.push(mode, Job::new(smiles.to_string(), tx));
         rx
+    }
+
+    /// `ReplySlot` delivers exactly one reply, no matter how many clones
+    /// race to send — the contract the pool's reclaim path leans on.
+    #[test]
+    fn reply_slot_dedups_across_clones() {
+        let (tx, rx) = mpsc::channel();
+        let a = ReplySlot::new(tx);
+        let b = a.clone();
+        assert!(!a.is_replied());
+        assert!(a.send(Err("first".to_string())));
+        assert!(a.is_replied() && b.is_replied());
+        assert!(!b.send(Err("second".to_string())), "clone must lose the race");
+        assert_eq!(rx.recv().unwrap().unwrap_err(), "first");
+        assert!(rx.try_recv().is_err(), "exactly one reply");
     }
 
     #[test]
@@ -958,7 +1259,16 @@ mod tests {
         assert_eq!(batch.len(), 1);
         // Arrives between batching ticks — after pop, before decode ends.
         let rx2 = send_job(&queue, DecodeMode::Greedy, "CCO");
-        process_batch(&backend, &vocab, batch, &queue, &metrics, &cache, 0);
+        process_batch(
+            &backend,
+            &vocab,
+            batch,
+            &queue,
+            &metrics,
+            &cache,
+            0,
+            &WorkerHealth::solo(),
+        );
 
         assert_eq!(rx1.recv().unwrap().unwrap().hyps[0].0, "c1ccccc1");
         assert_eq!(
@@ -981,7 +1291,16 @@ mod tests {
         let rx1 = send_job(&queue, DecodeMode::Greedy, "CCO");
         let batch = queue.pop_batch().unwrap();
         let _rx2 = send_job(&queue, DecodeMode::Beam { n: 2 }, "CCO");
-        process_batch(&backend, &vocab, batch, &queue, &metrics, &ServeCache::default(), 0);
+        process_batch(
+            &backend,
+            &vocab,
+            batch,
+            &queue,
+            &metrics,
+            &ServeCache::default(),
+            0,
+            &WorkerHealth::solo(),
+        );
 
         assert!(rx1.recv().unwrap().is_ok());
         assert_eq!(queue.len(), 1, "beam request must stay queued");
@@ -999,13 +1318,31 @@ mod tests {
 
         let rx1 = send_job(&queue, DecodeMode::SpecGreedy { dl: 2 }, "c1ccccc1");
         let b1 = queue.pop_batch().unwrap();
-        process_batch(&backend, &vocab, b1, &queue, &metrics, &cache, 0);
+        process_batch(
+            &backend,
+            &vocab,
+            b1,
+            &queue,
+            &metrics,
+            &cache,
+            0,
+            &WorkerHealth::solo(),
+        );
         let r1 = rx1.recv().unwrap().unwrap();
         assert!(r1.decoder_calls > 0);
 
         let rx2 = send_job(&queue, DecodeMode::SpecGreedy { dl: 2 }, "c1ccccc1");
         let b2 = queue.pop_batch().unwrap();
-        process_batch(&backend, &vocab, b2, &queue, &metrics, &cache, 0);
+        process_batch(
+            &backend,
+            &vocab,
+            b2,
+            &queue,
+            &metrics,
+            &cache,
+            0,
+            &WorkerHealth::solo(),
+        );
         let r2 = rx2.recv().unwrap().unwrap();
         assert_eq!(r2.decoder_calls, 0, "hit must skip decoding");
         assert_eq!(r2.hyps, r1.hyps, "cached reply must be bit-identical");
@@ -1017,7 +1354,16 @@ mod tests {
         // A different decoder kind over the same query is a miss.
         let rx3 = send_job(&queue, DecodeMode::Greedy, "c1ccccc1");
         let b3 = queue.pop_batch().unwrap();
-        process_batch(&backend, &vocab, b3, &queue, &metrics, &cache, 0);
+        process_batch(
+            &backend,
+            &vocab,
+            b3,
+            &queue,
+            &metrics,
+            &cache,
+            0,
+            &WorkerHealth::solo(),
+        );
         let r3 = rx3.recv().unwrap().unwrap();
         assert!(r3.decoder_calls > 0);
         assert_eq!(metrics.cache_hits.load(Ordering::Relaxed), 1);
@@ -1163,10 +1509,7 @@ mod tests {
         queue
             .try_push(
                 DecodeMode::Greedy,
-                Job {
-                    smiles: "CCO".to_string(),
-                    resp: tx_dead,
-                },
+                Job::new("CCO".to_string(), tx_dead),
                 Some(Instant::now() - Duration::from_millis(1)),
             )
             .unwrap();
@@ -1229,6 +1572,7 @@ mod tests {
                 &metrics,
                 &ServeCache::disabled(),
                 level,
+                &WorkerHealth::solo(),
             );
             replies.push(rx.recv().unwrap().unwrap().hyps);
         }

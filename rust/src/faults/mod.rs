@@ -3,7 +3,9 @@
 //!
 //! A [`FaultPlan`] names *sites* (string labels compiled into the hot
 //! paths: `decoder.extend`, `kernel.gemm`, `arena.alloc`,
-//! `pjrt.session`) and attaches rules that fire a fault — a panic, an
+//! `pjrt.session`, and the pool-level sites `worker.tick`,
+//! `worker.wedge`, `queue.reclaim`) and attaches rules that fire a
+//! fault — a panic, an
 //! injected `Err`, or a slow-down sleep — at some of the hits on that
 //! site. Decisions are a pure function of `(seed, site, rule, hit
 //! counter)`: re-running the same workload under the same plan injects
@@ -302,6 +304,20 @@ pub fn fire_infallible(site: &str) {
     }
 }
 
+/// Instrumentation hook for *behavioural* sites: counts a hit and
+/// reports whether a rule fired, without applying the fault kind. Used
+/// where the "fault" is a mode change rather than a panic/stall — e.g.
+/// `worker.wedge` freezes the worker loop so the pool supervisor must
+/// reclaim its in-flight requests. Inert (one relaxed atomic load)
+/// unless a plan is armed.
+#[inline]
+pub fn fires(site: &str) -> bool {
+    if !ACTIVE.load(Ordering::Relaxed) {
+        return false;
+    }
+    decide(site).is_some()
+}
+
 /// Helpers for tests that arm the process-global fault plan — shared by
 /// this module's tests and the supervision tests in `worker.rs`. (The
 /// out-of-crate chaos suite runs in its own process and carries its own
@@ -407,6 +423,20 @@ mod tests {
         ] {
             assert!(parse_spec(bad).is_err(), "must reject {bad:?}");
         }
+    }
+
+    #[test]
+    fn fires_counts_hits_without_applying_the_kind() {
+        let _g = test_lock();
+        let _d = Disarm;
+        install(FaultPlan::new(1).with("worker.wedge", FaultKind::Panic, Trigger::Nth(2)));
+        // A matched hit reports true but neither panics nor errs.
+        assert!(!fires("worker.wedge"));
+        assert!(fires("worker.wedge"));
+        assert!(!fires("worker.wedge"));
+        assert_eq!(hits("worker.wedge"), 3);
+        disarm();
+        assert!(!fires("worker.wedge"), "disarmed sites never fire");
     }
 
     #[test]

@@ -20,7 +20,9 @@ use anyhow::{bail, Context, Result};
 
 use rxnspec::cache::{dump_to_path, load_into, ServeCache};
 use rxnspec::chem::read_split;
-use rxnspec::coordinator::{run_worker, serve, DecodeMode, Metrics, RequestQueue, ServerState};
+use rxnspec::coordinator::{
+    run_pool, serve, DecodeMode, Metrics, PoolConfig, RequestQueue, ServerState,
+};
 use rxnspec::decoding::{beam_search, greedy, sbs, spec_greedy, Backend, DecodeOutput, SbsConfig};
 use rxnspec::draft::DraftConfig;
 use rxnspec::runtime::AnyBackend;
@@ -45,7 +47,10 @@ USAGE:
   persisted to --cache-dump (or RXNSPEC_CACHE_DUMP) for a warm boot.
   SLO knobs: RXNSPEC_SLO_MS (default deadline per PREDICT),
   RXNSPEC_QUEUE_CAP (admission bound, default 1024),
-  RXNSPEC_MAX_CONNS (connection cap, default 256)."
+  RXNSPEC_MAX_CONNS (connection cap, default 256).
+  Pool knobs: RXNSPEC_WORKERS (worker threads, default cores capped
+  at 4; each owns a backend instance), RXNSPEC_WEDGE_MS (heartbeat
+  staleness before a busy worker is declared wedged, default 2000)."
     );
     std::process::exit(2)
 }
@@ -204,13 +209,15 @@ fn cmd_serve(opts: Opts) -> Result<()> {
         Arc::new(Metrics::default()),
         Arc::new(cache),
     ));
+    let pool_cfg = PoolConfig::from_env();
     let listener = TcpListener::bind(("0.0.0.0", opts.port))?;
     eprintln!(
-        "rxnspec serving task={} backend={} on port {} (batch_max={}, wait={}ms, cache={}, \
-         queue_cap={queue_cap}, max_conns={}, slo={:?})",
+        "rxnspec serving task={} backend={} on port {} (workers={}, batch_max={}, wait={}ms, \
+         cache={}, queue_cap={queue_cap}, max_conns={}, slo={:?})",
         opts.task,
         opts.backend,
         opts.port,
+        pool_cfg.workers,
         opts.batch_max,
         opts.batch_wait_ms,
         if opts.cache { "on" } else { "off" },
@@ -249,9 +256,26 @@ fn cmd_serve(opts: Opts) -> Result<()> {
     });
     let accept_state = Arc::clone(&state);
     let accept = std::thread::spawn(move || serve(listener, accept_state));
-    // The worker owns the backend on this thread; it returns once the
+    // Each pool worker loads its own backend instance (sessions, arena
+    // rows, and scratch are per-worker; artifacts are shared on disk and
+    // already precompiled above). The initial probe backend bound the
+    // artifact version and fails fast on broken artifacts — the pool
+    // doesn't need it beyond that.
+    drop(backend);
+    // This thread becomes the pool supervisor; run_pool returns once the
     // queue is closed AND every in-flight request has been replied to.
-    run_worker(&backend, &vocab, &state.queue, &state.metrics, &state.cache);
+    run_pool(
+        |_slot| {
+            let b = AnyBackend::load(&opts.backend, &opts.artifacts, &opts.task)?;
+            b.precompile()?;
+            Ok(b)
+        },
+        &vocab,
+        &state.queue,
+        &state.metrics,
+        &state.cache,
+        &pool_cfg,
+    );
     let _ = accept.join();
     // Post-drain: persist the cache pair so the next boot starts warm.
     if let Some(path) = &opts.cache_dump {

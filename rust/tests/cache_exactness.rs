@@ -15,6 +15,9 @@
 //!   keep cap priority, and row truncation cuts from the tail.
 //! * **ResultCache** replays stored completions verbatim (covered at the
 //!   worker/server layer in `coordinator` unit tests and `serving_e2e`).
+//! * **Cross-worker merging** — one `ServeCache` shared by pool workers:
+//!   windows mined by one worker draft another's decodes (fewer calls),
+//!   still bit-output-neutral.
 
 use rxnspec::cache::DraftStore;
 use rxnspec::decoding::{beam_search, greedy, sbs, spec_greedy_corpus, SbsConfig};
@@ -174,6 +177,82 @@ fn sbs_warm_store_keeps_top1_and_cuts_calls_on_copy_regime() {
         "warm store must not cost extra calls ({} vs {})",
         warm.stats.decoder_calls,
         cold.stats.decoder_calls
+    );
+}
+
+/// Cross-worker draft-store merging at the serving layer (the pool's
+/// shared-cache contract): a window mined by worker A measurably raises
+/// `accepted_corpus_tokens` for an identical query served by worker B
+/// through the *same* `ServeCache` — and the merged store stays
+/// bit-output-neutral.
+#[test]
+fn cross_worker_draft_merge_accelerates_and_stays_exact() {
+    use rxnspec::cache::ServeCache;
+    use rxnspec::coordinator::{run_worker, DecodeMode, Job, Metrics, RequestQueue};
+    use rxnspec::vocab::Vocab;
+    use std::sync::atomic::Ordering;
+    use std::sync::{mpsc, Arc};
+    use std::time::Duration;
+
+    let vocab = Vocab::build(["CCONF", "c1ccccc1"]).unwrap();
+    let shared = ServeCache::default();
+    let serve_one = |backend: &CopyModel,
+                     mode: DecodeMode,
+                     cache: &ServeCache,
+                     metrics: &Arc<Metrics>| {
+        let queue = RequestQueue::new(4, Duration::from_millis(1));
+        let (tx, rx) = mpsc::channel();
+        queue.push(mode, Job::new("c1ccccc1".to_string(), tx));
+        queue.close();
+        run_worker(backend, &vocab, &queue, metrics, cache);
+        rx.try_recv().expect("one reply").expect("served")
+    };
+
+    // Worker A (its own backend instance) mines the greedy completion
+    // into the shared draft store.
+    let worker_a = CopyModel::new(96, 96, vocab.len());
+    let a = serve_one(
+        &worker_a,
+        DecodeMode::Greedy,
+        &shared,
+        &Arc::new(Metrics::default()),
+    );
+    assert_eq!(a.hyps[0].0, "c1ccccc1");
+
+    // Worker B: a different backend instance, the same ServeCache. A
+    // different decode mode keys a different result-cache tag (so this
+    // is a real decode, not a replay), and a draft length beyond the
+    // query length disables query-copy windows — every accepted draft
+    // token must come from A's mined corpus window.
+    let worker_b = CopyModel::new(96, 96, vocab.len());
+    let metrics_b = Arc::new(Metrics::default());
+    let b = serve_one(
+        &worker_b,
+        DecodeMode::SpecGreedy { dl: 20 },
+        &shared,
+        &metrics_b,
+    );
+    assert!(b.decoder_calls > 0, "mode-tag miss: B must decode, not replay");
+    assert!(
+        metrics_b.draft_accepted_corpus.load(Ordering::Relaxed) > 0,
+        "worker A's mined windows must draft worker B's decode"
+    );
+
+    // Bit-output-neutrality: the merged store changed B's cost, never
+    // its content.
+    let worker_c = CopyModel::new(96, 96, vocab.len());
+    let cold = serve_one(
+        &worker_c,
+        DecodeMode::SpecGreedy { dl: 20 },
+        &ServeCache::disabled(),
+        &Arc::new(Metrics::default()),
+    );
+    assert_eq!(b.hyps, cold.hyps, "shared store must not change served content");
+    assert!(
+        b.decoder_calls < cold.decoder_calls,
+        "A's corpus windows must cut B's decoder calls ({} vs {})",
+        b.decoder_calls,
+        cold.decoder_calls
     );
 }
 

@@ -1,5 +1,5 @@
 //! Chaos property tests: the serving stack under seeded fault injection
-//! (ISSUE 8 acceptance).
+//! (ISSUE 8 acceptance, extended to the multi-worker pool in ISSUE 9).
 //!
 //! The properties, each checked under a deterministic fault plan:
 //!
@@ -14,6 +14,11 @@
 //!    and repeated requests are served from the restored cache with zero
 //!    decoder calls; a version-mismatched dump is rejected cleanly and
 //!    the server simply boots cold.
+//! 4. **Cross-worker failover is invisible** — wedge one worker of an
+//!    N-worker pool (`worker.wedge`) and its in-flight requests are
+//!    reclaimed and served by siblings with outputs bit-identical to a
+//!    fault-free single-worker oracle; pool drain still produces a
+//!    loadable warm-boot dump.
 //!
 //! The fault plan is process-global, so every test here serializes on
 //! one lock and disarms on exit (even on panic, via a drop guard).
@@ -23,7 +28,8 @@ use std::time::{Duration, Instant};
 
 use rxnspec::cache::{dump_to_path, load_into, ServeCache};
 use rxnspec::coordinator::{
-    run_worker, DecodeMode, Job, JobResult, Metrics, PushError, RequestQueue,
+    run_pool, run_worker, DecodeMode, Job, JobResult, Metrics, PoolConfig, PushError,
+    RequestQueue,
 };
 use rxnspec::faults::{self, parse_spec, FaultKind, FaultPlan, Trigger};
 use rxnspec::testutil::{random_rust_backend, CopyModel};
@@ -105,17 +111,55 @@ fn serve_all<B: rxnspec::decoding::Backend>(
     let mut rxs = Vec::new();
     for (mode, smiles) in reqs {
         let (tx, rx) = mpsc::channel();
-        queue.push(
-            *mode,
-            Job {
-                smiles: smiles.clone(),
-                resp: tx,
-            },
-        );
+        queue.push(*mode, Job::new(smiles.clone(), tx));
         rxs.push(rx);
     }
     queue.close();
     run_worker(backend, vocab, &queue, metrics, cache);
+    rxs.iter()
+        .map(|rx| {
+            let first = rx.try_recv().expect("every request must get a reply");
+            assert!(rx.try_recv().is_err(), "a request must get exactly one reply");
+            first
+        })
+        .collect()
+}
+
+/// Chaos-speed pool supervision: a wedge is declared in tens of
+/// milliseconds instead of seconds so the failover tests run fast.
+fn fast_pool(workers: usize) -> PoolConfig {
+    let mut cfg = PoolConfig::with_workers(workers);
+    cfg.wedge_timeout = Duration::from_millis(50);
+    cfg.poll = Duration::from_millis(5);
+    cfg
+}
+
+/// Pool-shaped counterpart of [`serve_all`]: N CopyModel workers over one
+/// queue and one shared cache, exactly-one-reply asserted per request.
+fn serve_all_pool(
+    vocab: &Vocab,
+    reqs: &[(DecodeMode, String)],
+    metrics: &Arc<Metrics>,
+    cache: &ServeCache,
+    cfg: &PoolConfig,
+) -> Vec<JobResult> {
+    let queue = RequestQueue::new(4, Duration::from_millis(1));
+    let mut rxs = Vec::new();
+    for (mode, smiles) in reqs {
+        let (tx, rx) = mpsc::channel();
+        queue.push(*mode, Job::new(smiles.clone(), tx));
+        rxs.push(rx);
+    }
+    queue.close();
+    let n_vocab = vocab.len();
+    run_pool(
+        |_slot| Ok(CopyModel::new(96, 96, n_vocab)),
+        vocab,
+        &queue,
+        metrics,
+        cache,
+        cfg,
+    );
     rxs.iter()
         .map(|rx| {
             let first = rx.try_recv().expect("every request must get a reply");
@@ -281,10 +325,7 @@ fn chaos_stalls_shed_deadlines_and_signal_busy() {
         } else {
             Some(Instant::now() + Duration::from_millis(5))
         };
-        let job = Job {
-            smiles: "CCO".to_string(),
-            resp: tx,
-        };
+        let job = Job::new("CCO".to_string(), tx);
         match queue.try_push(DecodeMode::Greedy, job, deadline) {
             Ok(()) => {
                 if i < 2 {
@@ -403,11 +444,11 @@ fn env_style_schedule_parses_and_runs() {
     let _d = Disarm;
     quiet_injected_panics();
     let plan = parse_spec(
-        "7:decoder.extend=panic@0.04,decoder.extend=slow2@0.03,arena.alloc=panic#5,kernel.gemm=err@0.01",
+        "7:decoder.extend=panic@0.04,decoder.extend=slow2@0.03,arena.alloc=panic#5,kernel.gemm=err@0.01,worker.tick=slow1@0.05",
     )
     .unwrap();
     assert_eq!(plan.seed, 7);
-    assert_eq!(plan.rules.len(), 4);
+    assert_eq!(plan.rules.len(), 5);
 
     let vocab = tiny_vocab();
     let backend = CopyModel::new(96, 96, vocab.len());
@@ -421,4 +462,162 @@ fn env_style_schedule_parses_and_runs() {
     );
     faults::disarm();
     assert_eq!(replies.len(), 12, "exactly one reply each, chaos or not");
+}
+
+/// Property 4, the ISSUE 9 acceptance scenario: 4 workers, one wedged on
+/// its first batch (`worker.wedge`). The supervisor reclaims its
+/// in-flight requests, siblings (or a replacement) serve them, every
+/// request gets exactly one reply, and every output is bit-identical to
+/// a fault-free single-worker oracle.
+#[test]
+fn wedged_worker_requests_reclaimed_by_siblings() {
+    let _g = chaos_lock();
+    let _d = Disarm;
+    quiet_injected_panics();
+    let vocab = tiny_vocab();
+    let reqs = workload();
+
+    faults::disarm();
+    let backend = CopyModel::new(96, 96, vocab.len());
+    let oracle = serve_all(
+        &backend,
+        &vocab,
+        &reqs,
+        &Arc::new(Metrics::default()),
+        &ServeCache::disabled(),
+    );
+    assert!(oracle.iter().all(|r| r.is_ok()), "oracle run must be clean");
+
+    // `worker.wedge` is a behavioural site (the kind is never applied,
+    // only the trigger): Nth(1) freezes exactly the first worker to pop
+    // a batch, pool-wide, batch registered and heartbeat stopped.
+    faults::install(FaultPlan::new(0x3D9E).with(
+        "worker.wedge",
+        FaultKind::Panic,
+        Trigger::Nth(1),
+    ));
+    let metrics = Arc::new(Metrics::default());
+    let chaotic = serve_all_pool(
+        &vocab,
+        &reqs,
+        &metrics,
+        &ServeCache::disabled(),
+        &fast_pool(4),
+    );
+    faults::disarm();
+
+    for (i, (got, want)) in chaotic.iter().zip(&oracle).enumerate() {
+        let got = got.as_ref().unwrap_or_else(|e| {
+            panic!("request {i} must survive the wedge via reclaim, got ERR {e}")
+        });
+        assert_eq!(
+            got.hyps,
+            want.as_ref().unwrap().hyps,
+            "request {i}: a reclaimed request served different content"
+        );
+    }
+    use std::sync::atomic::Ordering;
+    assert_eq!(metrics.workers.load(Ordering::Relaxed), 4);
+    assert!(
+        metrics.requests_reclaimed.load(Ordering::Relaxed) >= 1,
+        "the wedged worker's batch must have been reclaimed"
+    );
+    assert!(
+        metrics.worker_restarts.load(Ordering::Relaxed) >= 1,
+        "a replacement worker must have been spawned"
+    );
+    assert_eq!(
+        metrics.requests_failed.load(Ordering::Relaxed),
+        0,
+        "a single wedge must cost no client an ERR"
+    );
+}
+
+/// A fault-free pool is output-invisible: N workers racing over the
+/// shared queue and cache serve the exact replies one worker serves.
+#[test]
+fn fault_free_pool_is_bit_identical_to_single_worker() {
+    let _g = chaos_lock();
+    let _d = Disarm;
+    faults::disarm();
+    let vocab = tiny_vocab();
+    let reqs = workload();
+
+    let backend = CopyModel::new(96, 96, vocab.len());
+    let oracle = serve_all(
+        &backend,
+        &vocab,
+        &reqs,
+        &Arc::new(Metrics::default()),
+        &ServeCache::disabled(),
+    );
+    let metrics = Arc::new(Metrics::default());
+    let pooled = serve_all_pool(
+        &vocab,
+        &reqs,
+        &metrics,
+        &ServeCache::disabled(),
+        &fast_pool(4),
+    );
+    for (i, (got, want)) in pooled.iter().zip(&oracle).enumerate() {
+        assert_eq!(
+            got.as_ref().unwrap().hyps,
+            want.as_ref().unwrap().hyps,
+            "request {i}: pool output drifted from the single-worker oracle"
+        );
+    }
+    use std::sync::atomic::Ordering;
+    assert_eq!(metrics.worker_restarts.load(Ordering::Relaxed), 0);
+    assert_eq!(metrics.requests_reclaimed.load(Ordering::Relaxed), 0);
+}
+
+/// Pool drain under fault still produces a loadable warm-boot dump: life
+/// 1 runs 4 workers with one wedged, drains, dumps the shared cache;
+/// life 2 warm-boots a fresh 4-worker pool from it and serves the same
+/// workload with zero decoder calls, bit-identically.
+#[test]
+fn pool_drain_under_wedge_dumps_loadable_warm_boot() {
+    let _g = chaos_lock();
+    let _d = Disarm;
+    quiet_injected_panics();
+    let vocab = tiny_vocab();
+    let reqs = workload();
+    let mut dump = std::env::temp_dir();
+    dump.push(format!("rxnspec-chaos-{}-poolboot.dump", std::process::id()));
+
+    // Life 1: wedge one of four workers mid-run; the drain must still
+    // complete (reclaim + siblings) and the shared cache must hold every
+    // completion.
+    faults::install(FaultPlan::new(0xB007).with(
+        "worker.wedge",
+        FaultKind::Panic,
+        Trigger::Nth(1),
+    ));
+    let cache1 = ServeCache::default();
+    cache1.bind_artifact_version(0xBEEF);
+    let first = serve_all_pool(
+        &vocab,
+        &reqs,
+        &Arc::new(Metrics::default()),
+        &cache1,
+        &fast_pool(4),
+    );
+    faults::disarm();
+    assert!(first.iter().all(|r| r.is_ok()), "life 1 must serve everything");
+    dump_to_path(&cache1, &dump).unwrap();
+
+    // Life 2: a fresh pool warm-boots from the dump — every repeat is a
+    // zero-decode cache hit with a bit-identical reply.
+    let cache2 = ServeCache::default();
+    cache2.bind_artifact_version(0xBEEF);
+    let report = load_into(&cache2, &dump, 0xBEEF).unwrap();
+    assert!(report.results > 0, "the pool dump must carry results");
+    let metrics2 = Arc::new(Metrics::default());
+    let second = serve_all_pool(&vocab, &reqs, &metrics2, &cache2, &fast_pool(4));
+    for (i, (got, want)) in second.iter().zip(&first).enumerate() {
+        let (got, want) = (got.as_ref().unwrap(), want.as_ref().unwrap());
+        assert_eq!(got.decoder_calls, 0, "request {i} must hit the restored cache");
+        assert_eq!(got.hyps, want.hyps, "request {i}: warm reply must be bit-identical");
+    }
+    std::fs::remove_file(&dump).ok();
 }
