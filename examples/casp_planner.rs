@@ -49,7 +49,7 @@ fn main() -> Result<()> {
         .unwrap_or_else(|| limit(5));
 
     let (vocab, retro_backend, split) = eval_setup("retro")?;
-    let data = std::env::var("RXNSPEC_DATA").unwrap_or_else(|_| "data".into());
+    let data = rxnspec::knobs::DATA.raw().unwrap_or_else(|| "data".into());
     let stock = Stock::load(&Path::new(&data).join("stock.txt"))?;
     eprintln!("stock: {} purchasable molecules", stock.len());
 

@@ -37,7 +37,7 @@ fn main() -> anyhow::Result<()> {
         .unwrap_or_else(|| limit(40));
     let port: u16 = args.get(1).and_then(|v| v.parse().ok()).unwrap_or(0);
 
-    let data = std::env::var("RXNSPEC_DATA").unwrap_or_else(|_| "data".into());
+    let data = rxnspec::knobs::DATA.raw().unwrap_or_else(|| "data".into());
     let split = rxnspec::chem::read_split(std::path::Path::new(&data).join("fwd_test.tsv").as_path())?;
     eprintln!("loaded fwd test split: {} reactions", split.len());
 

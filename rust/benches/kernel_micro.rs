@@ -45,7 +45,7 @@ fn main() -> anyhow::Result<()> {
     let mut rng = Rng::new(0xBE7C);
     let level = simd_level();
     eprintln!("simd dispatch: {}", level.name());
-    if level == SimdLevel::Scalar && std::env::var("RXNSPEC_SIMD").is_err() {
+    if level == SimdLevel::Scalar && !rxnspec::knobs::SIMD.is_set() {
         // Not forced off, yet detection came up empty: the run will
         // record the `kernel_micro_scalar` section and no SIMD numbers
         // will exist in the artifact. Say so loudly instead of letting

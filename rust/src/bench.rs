@@ -149,9 +149,9 @@ pub fn eval_setup(
     crate::runtime::AnyBackend,
     Vec<crate::chem::Example>,
 )> {
-    let data = std::env::var("RXNSPEC_DATA").unwrap_or_else(|_| "data".into());
-    let arts = std::env::var("RXNSPEC_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
-    let backend_kind = std::env::var("RXNSPEC_BACKEND").unwrap_or_else(|_| "pjrt".into());
+    let data = crate::knobs::DATA.raw().unwrap_or_else(|| "data".into());
+    let arts = crate::knobs::ARTIFACTS.raw().unwrap_or_else(|| "artifacts".into());
+    let backend_kind = crate::knobs::BACKEND.raw().unwrap_or_else(|| "pjrt".into());
     let data = std::path::Path::new(&data);
     let vocab = crate::vocab::Vocab::load(&data.join("vocab.txt"))?;
     let backend =
@@ -240,10 +240,7 @@ impl DeviceModel {
 /// `RXNSPEC_LIMIT` env override with a default (bench subset sizing on the
 /// 1-core testbed; the paper ran full splits on an H100).
 pub fn limit(default: usize) -> usize {
-    std::env::var("RXNSPEC_LIMIT")
-        .ok()
-        .and_then(|v| v.parse().ok())
-        .unwrap_or(default)
+    crate::knobs::LIMIT.parsed_or(default)
 }
 
 /// True when the bench binary was invoked with `--json` (emit/update the
@@ -258,9 +255,9 @@ pub fn json_flag() -> bool {
 /// upload the stale committed copy. Anchored via `CARGO_MANIFEST_DIR`;
 /// `RXNSPEC_BENCH_JSON` overrides for ad-hoc runs.
 pub fn bench_json_path() -> std::path::PathBuf {
-    match std::env::var("RXNSPEC_BENCH_JSON") {
-        Ok(p) => std::path::PathBuf::from(p),
-        Err(_) => std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+    match crate::knobs::BENCH_JSON.raw() {
+        Some(p) => std::path::PathBuf::from(p),
+        None => std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
             .join("..")
             .join("BENCH_kernels.json"),
     }

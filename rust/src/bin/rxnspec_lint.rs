@@ -1,0 +1,92 @@
+//! `rxnspec-lint` — run the repo-invariant static-analysis pass.
+//!
+//! ```text
+//! rxnspec-lint [--root <dir>] [--json <out>] [--knob-table]
+//! ```
+//!
+//! Walks the repository (default: the workspace root containing this
+//! crate) and prints one `file:line: rule: message` per finding. Exit
+//! status: `0` clean, `1` findings, `2` operational error. `--json`
+//! writes the findings as a machine-readable artifact (written even
+//! when clean, so CI always has something to upload). `--knob-table`
+//! prints the registry-generated README knob table and exits — the fix
+//! for a `readme-knobs` finding.
+//!
+//! The binary links the `rxnspec` library, so every registry the rules
+//! cross-check (`knobs::REGISTRY`, `faults::SITES`, `trace::N_PHASES`)
+//! is the one the production code actually runs against.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use rxnspec::lint;
+
+struct Opts {
+    root: PathBuf,
+    json: Option<PathBuf>,
+    knob_table: bool,
+}
+
+fn parse_args() -> Result<Opts, String> {
+    let mut opts = Opts {
+        root: PathBuf::from(env!("CARGO_MANIFEST_DIR")).join(".."),
+        json: None,
+        knob_table: false,
+    };
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--root" => {
+                opts.root = args.next().map(PathBuf::from).ok_or("--root needs a path")?;
+            }
+            "--json" => {
+                opts.json = Some(args.next().map(PathBuf::from).ok_or("--json needs a path")?);
+            }
+            "--knob-table" => opts.knob_table = true,
+            "--help" | "-h" => {
+                return Err("usage: rxnspec-lint [--root <dir>] [--json <out>] [--knob-table]"
+                    .to_string())
+            }
+            other => return Err(format!("unknown argument {other:?}")),
+        }
+    }
+    Ok(opts)
+}
+
+fn main() -> ExitCode {
+    let opts = match parse_args() {
+        Ok(o) => o,
+        Err(msg) => {
+            eprintln!("{msg}");
+            return ExitCode::from(2);
+        }
+    };
+    if opts.knob_table {
+        print!("{}", rxnspec::knobs::knob_table_markdown());
+        return ExitCode::SUCCESS;
+    }
+    let findings = match lint::run_repo(&opts.root) {
+        Ok(f) => f,
+        Err(e) => {
+            eprintln!("rxnspec-lint: {e:#}");
+            return ExitCode::from(2);
+        }
+    };
+    if let Some(path) = &opts.json {
+        let doc = lint::findings_json(&findings);
+        if let Err(e) = std::fs::write(path, doc.render() + "\n") {
+            eprintln!("rxnspec-lint: write {}: {e}", path.display());
+            return ExitCode::from(2);
+        }
+    }
+    for f in &findings {
+        println!("{f}");
+    }
+    if findings.is_empty() {
+        eprintln!("rxnspec-lint: clean ({} rules)", lint::RULES.len());
+        ExitCode::SUCCESS
+    } else {
+        eprintln!("rxnspec-lint: {} finding(s)", findings.len());
+        ExitCode::FAILURE
+    }
+}

@@ -102,14 +102,10 @@ impl PoolConfig {
     /// Read `RXNSPEC_WORKERS` (default [`default_workers`]) and
     /// `RXNSPEC_WEDGE_MS` (default 2000).
     pub fn from_env() -> PoolConfig {
-        let workers = std::env::var("RXNSPEC_WORKERS")
-            .ok()
-            .and_then(|v| v.parse::<usize>().ok())
+        let workers = crate::knobs::WORKERS
+            .parsed::<usize>()
             .unwrap_or_else(default_workers);
-        let wedge_ms = std::env::var("RXNSPEC_WEDGE_MS")
-            .ok()
-            .and_then(|v| v.parse::<u64>().ok())
-            .unwrap_or(2000);
+        let wedge_ms = crate::knobs::WEDGE_MS.parsed_or(2000u64);
         PoolConfig::build(workers, wedge_ms)
     }
 

@@ -82,15 +82,8 @@ impl ServerState {
         metrics: Arc<Metrics>,
         cache: Arc<ServeCache>,
     ) -> ServerState {
-        let slo_ms = std::env::var("RXNSPEC_SLO_MS")
-            .ok()
-            .and_then(|v| v.parse::<u64>().ok())
-            .filter(|ms| *ms > 0);
-        let max_conns = std::env::var("RXNSPEC_MAX_CONNS")
-            .ok()
-            .and_then(|v| v.parse::<usize>().ok())
-            .unwrap_or(256)
-            .max(1);
+        let slo_ms = crate::knobs::SLO_MS.parsed::<u64>().filter(|ms| *ms > 0);
+        let max_conns = crate::knobs::MAX_CONNS.parsed_or(256usize).max(1);
         ServerState::with_limits(queue, metrics, cache, slo_ms.map(Duration::from_millis), max_conns)
     }
 

@@ -65,19 +65,15 @@ impl ArenaConfig {
     /// `RXNSPEC_KV_BUDGET` the soft byte budget (plain bytes, or with a
     /// `k` / `m` / `g` suffix, powers of 1024).
     pub fn from_env() -> Option<ArenaConfig> {
-        if let Ok(v) = std::env::var("RXNSPEC_ARENA") {
+        if let Some(v) = crate::knobs::ARENA.raw() {
             if matches!(v.trim(), "off" | "0" | "false" | "dense") {
                 return None;
             }
         }
-        let page_positions = std::env::var("RXNSPEC_KV_PAGE")
-            .ok()
-            .and_then(|v| v.trim().parse::<usize>().ok())
-            .unwrap_or(DEFAULT_PAGE_POSITIONS)
+        let page_positions = crate::knobs::KV_PAGE
+            .parsed_or(DEFAULT_PAGE_POSITIONS)
             .max(1);
-        let budget_bytes = std::env::var("RXNSPEC_KV_BUDGET")
-            .ok()
-            .and_then(|v| parse_bytes(&v));
+        let budget_bytes = crate::knobs::KV_BUDGET.raw().and_then(|v| parse_bytes(&v));
         Some(ArenaConfig {
             page_positions,
             budget_bytes,

@@ -28,11 +28,7 @@ pub(crate) const DEFAULT_LP_RETAIN: usize = 64;
 /// positions of per-row successor log-probs to retain (min 1; deeper
 /// rewinds are healed by one exact recompute).
 pub(crate) fn lp_retention_from_env() -> usize {
-    std::env::var("RXNSPEC_LP_RETAIN")
-        .ok()
-        .and_then(|v| v.parse::<usize>().ok())
-        .unwrap_or(DEFAULT_LP_RETAIN)
-        .max(1)
+    crate::knobs::LP_RETAIN.parsed_or(DEFAULT_LP_RETAIN).max(1)
 }
 
 // ---------------------------------------------------------------------------

@@ -87,6 +87,21 @@ impl FaultPlan {
     }
 }
 
+/// Every fault site the production tree may fire, sorted. A site
+/// literal passed to `fire`/`fire_infallible`/`fires` outside this
+/// module (and any site named in a CI fault schedule) must appear here —
+/// enforced by the `fault-site` rule in [`crate::lint`], so a typoed
+/// site can never silently never-fire.
+pub const SITES: &[&str] = &[
+    "arena.alloc",
+    "decoder.extend",
+    "kernel.gemm",
+    "pjrt.session",
+    "queue.reclaim",
+    "worker.tick",
+    "worker.wedge",
+];
+
 struct PlanState {
     plan: Option<FaultPlan>,
     /// Per-site hit counters since the plan was installed.
@@ -111,7 +126,7 @@ fn state() -> &'static Mutex<PlanState> {
 
 fn lock_state() -> std::sync::MutexGuard<'static, PlanState> {
     // A panic *is* this module's product; never let one poison us.
-    state().lock().unwrap_or_else(|e| e.into_inner())
+    crate::coordinator::lock_ok(state())
 }
 
 /// Arm a plan (replacing any previous one) and reset all hit counters.
@@ -152,7 +167,7 @@ pub fn hits(site: &str) -> u64 {
 /// Returns `None` when the variable is unset; `Err` on a malformed spec
 /// (callers surface it rather than silently serving without chaos).
 pub fn plan_from_env() -> Option<Result<FaultPlan>> {
-    let raw = std::env::var("RXNSPEC_FAULTS").ok()?;
+    let raw = crate::knobs::FAULTS.raw()?;
     if raw.trim().is_empty() {
         return None;
     }
@@ -330,9 +345,7 @@ pub mod testing {
     /// serializes on this lock and disarms on exit.
     pub fn lock() -> MutexGuard<'static, ()> {
         static L: OnceLock<Mutex<()>> = OnceLock::new();
-        L.get_or_init(|| Mutex::new(()))
-            .lock()
-            .unwrap_or_else(|e| e.into_inner())
+        crate::coordinator::lock_ok(L.get_or_init(|| Mutex::new(())))
     }
 
     /// Drop guard: disarms the global plan even if the test panics.

@@ -266,6 +266,10 @@ fn score_update_lanes(scores: &mut [f32], qd: f32, lane: &[f32]) {
 
 /// AVX2 twin of [`score_update_lanes`] — identical per-element
 /// arithmetic and order.
+///
+/// # Safety
+/// AVX2 must be available (dispatch sites check
+/// [`simd::avx2_available`]); `lane.len() >= scores.len()`.
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "avx2,fma")]
 unsafe fn score_update_avx2(scores: &mut [f32], qd: f32, lane: &[f32]) {
@@ -307,6 +311,10 @@ fn av_update_lanes(ci: &mut [f32], w: f32, vj: &[f32]) {
 }
 
 /// AVX2 twin of [`av_update_lanes`].
+///
+/// # Safety
+/// AVX2 must be available (dispatch sites check
+/// [`simd::avx2_available`]); `vj.len() >= ci.len()`.
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "avx2,fma")]
 unsafe fn av_update_avx2(ci: &mut [f32], w: f32, vj: &[f32]) {

@@ -206,6 +206,11 @@ impl PackedLinear {
     /// The same micro-kernel on AVX2 intrinsics — identical arithmetic
     /// per element (broadcast × panel row, `mul` then `add`, `k`
     /// ascending), so bit-identical to [`Self::apply_serial_lanes`].
+    ///
+    /// # Safety
+    /// AVX2 must be available (every dispatch site checks
+    /// [`simd::avx2_available`]); `x`/`y` must hold `n` rows of
+    /// `din`/`dout` floats.
     #[cfg(target_arch = "x86_64")]
     #[target_feature(enable = "avx2,fma")]
     unsafe fn apply_serial_avx2(&self, x: &[f32], n: usize, y: &mut [f32]) {

@@ -70,8 +70,8 @@ fn detect() -> SimdLevel {
 /// (including unset / `auto`) runs CPU feature detection.
 pub fn simd_level() -> SimdLevel {
     static LEVEL: OnceLock<SimdLevel> = OnceLock::new();
-    *LEVEL.get_or_init(|| match std::env::var("RXNSPEC_SIMD") {
-        Ok(v) if matches!(v.trim(), "off" | "scalar" | "0") => SimdLevel::Scalar,
+    *LEVEL.get_or_init(|| match crate::knobs::SIMD.raw() {
+        Some(v) if matches!(v.trim(), "off" | "scalar" | "0") => SimdLevel::Scalar,
         _ => detect(),
     })
 }
@@ -221,6 +221,8 @@ mod tests {
         let portable = F32Lanes::load(&acc0)
             .mul_then_add(F32Lanes::load(&av), F32Lanes::load(&bv));
         let mut got = [0f32; LANES];
+        // SAFETY: the `simd_level()` guard above proves AVX2+FMA are
+        // present, and both arrays are exactly LANES long.
         unsafe {
             let r = avx2::mul_then_add(avx2::load(&acc0), avx2::load(&av), avx2::load(&bv));
             avx2::store(r, &mut got);

@@ -36,6 +36,7 @@ use std::collections::VecDeque;
 use std::sync::{Arc, Condvar, Mutex, OnceLock};
 use std::time::Instant;
 
+use crate::coordinator::lock_ok;
 use crate::trace::Phase;
 use crate::trace_span;
 
@@ -47,11 +48,11 @@ use crate::trace_span;
 /// * anything else → `1`, with a one-time warning on stderr.
 pub fn default_threads() -> usize {
     static N: OnceLock<usize> = OnceLock::new();
-    *N.get_or_init(|| match std::env::var("RXNSPEC_THREADS") {
-        Ok(v) if v.trim() == "auto" => std::thread::available_parallelism()
+    *N.get_or_init(|| match crate::knobs::THREADS.raw() {
+        Some(v) if v.trim() == "auto" => std::thread::available_parallelism()
             .map(|n| n.get())
             .unwrap_or(1),
-        Ok(v) => match v.trim().parse::<usize>() {
+        Some(v) => match v.trim().parse::<usize>() {
             Ok(n) => n.max(1),
             Err(_) => {
                 eprintln!(
@@ -62,7 +63,7 @@ pub fn default_threads() -> usize {
                 1
             }
         },
-        Err(_) => 1,
+        None => 1,
     })
 }
 
@@ -77,6 +78,8 @@ pub fn default_threads() -> usize {
 /// self-drain **its own** queued chunks without popping (and being
 /// blocked behind) a concurrent dispatch's work.
 struct RawJob {
+    // SAFETY: only ever called with `ctx` pointing at the live, unmoved
+    // `ChunkCtx<T, F>` this trampoline was monomorphized for.
     run: unsafe fn(*const ()),
     ctx: *const (),
     latch: *const Latch,
@@ -115,7 +118,7 @@ impl Latch {
     }
 
     fn signal(&self, panic: Option<PanicPayload>) {
-        let mut st = self.state.lock().unwrap_or_else(|e| e.into_inner());
+        let mut st = lock_ok(&self.state);
         st.0 -= 1;
         if panic.is_some() && st.1.is_none() {
             st.1 = panic;
@@ -127,7 +130,7 @@ impl Latch {
 
     /// Block until every job signalled; returns the first panic payload.
     fn wait(&self) -> Option<PanicPayload> {
-        let mut st = self.state.lock().unwrap_or_else(|e| e.into_inner());
+        let mut st = lock_ok(&self.state);
         while st.0 > 0 {
             st = self.done.wait(st).unwrap_or_else(|e| e.into_inner());
         }
@@ -144,6 +147,9 @@ struct ChunkCtx<T, F> {
     latch: *const Latch,
 }
 
+// SAFETY: to call, `p` must point at a live `ChunkCtx<T, F>` whose
+// latch, items pointer, and closure all outlive the call; chunk slices
+// are disjoint, so the `from_raw_parts_mut` below aliases nothing.
 unsafe fn run_chunk<T: Send, F: Fn(&mut T) + Sync>(p: *const ()) {
     let ctx = &*(p.cast::<ChunkCtx<T, F>>());
     let latch = &*ctx.latch;
@@ -160,7 +166,7 @@ unsafe fn run_chunk<T: Send, F: Fn(&mut T) + Sync>(p: *const ()) {
 fn worker_loop(sh: Arc<Shared>) {
     loop {
         let job = {
-            let mut q = sh.queue.lock().unwrap_or_else(|e| e.into_inner());
+            let mut q = lock_ok(&sh.queue);
             loop {
                 if let Some(j) = q.pop_front() {
                     break j;
@@ -223,7 +229,7 @@ impl Pool {
     /// never exceed N chunks never holds more than N parked threads.
     fn ensure_workers(&self, jobs: usize) {
         let want = jobs.min(self.max_workers);
-        let mut spawned = self.shared.spawned.lock().unwrap_or_else(|e| e.into_inner());
+        let mut spawned = lock_ok(&self.shared.spawned);
         while *spawned < want {
             let sh = Arc::clone(&self.shared);
             std::thread::Builder::new()
@@ -263,7 +269,7 @@ impl Pool {
             })
             .collect();
         {
-            let mut q = self.shared.queue.lock().unwrap_or_else(|e| e.into_inner());
+            let mut q = lock_ok(&self.shared.queue);
             for ctx in &ctxs {
                 q.push_back(RawJob {
                     run: run_chunk::<T, F>,
@@ -286,7 +292,7 @@ impl Pool {
         // call hostage past its own completion.
         loop {
             let job = {
-                let mut q = self.shared.queue.lock().unwrap_or_else(|e| e.into_inner());
+                let mut q = lock_ok(&self.shared.queue);
                 q.iter()
                     .position(|j| std::ptr::eq(j.latch, me))
                     .and_then(|i| q.remove(i))
@@ -324,7 +330,7 @@ pub fn pool_dispatch_ns() -> u64 {
 /// the pool on first call.
 pub fn pool_workers() -> usize {
     let p = pool();
-    *p.shared.spawned.lock().unwrap_or_else(|e| e.into_inner())
+    *lock_ok(&p.shared.spawned)
 }
 
 /// Minimum GEMM multiply-accumulate count (`n·din·dout`) before row

@@ -1,0 +1,321 @@
+//! Typed registry of every `RXNSPEC_*` environment knob.
+//!
+//! Each knob is declared exactly once — name, type, default, one doc
+//! line — and every env read in the tree goes through the accessors on
+//! [`Knob`]. That single declaration is what the static-analysis pass
+//! (`rxnspec-lint`, [`crate::lint`]) cross-checks: an `RXNSPEC_*`
+//! literal anywhere in the sources, CI workflow, or README that is not
+//! in [`REGISTRY`] is a lint failure, and so is a raw
+//! `std::env::var("RXNSPEC_…")` read outside this module. The README's
+//! knob table is generated from the same declarations
+//! ([`knob_table_markdown`]) and checked for drift.
+//!
+//! Parsing stays at the call sites on purpose: the accessors hand back
+//! the raw value (or a trimmed `FromStr` parse), and each site keeps
+//! its own fallback/clamp semantics — `RXNSPEC_THREADS=auto`,
+//! `RXNSPEC_KV_BUDGET=512m`, "0 means no deadline", and so on — so
+//! migrating onto the registry can never change behaviour.
+
+use std::ffi::OsString;
+use std::str::FromStr;
+
+/// Broad value class of a knob — documentation and table rendering,
+/// not an enforcement mechanism (call sites own their parse).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KnobKind {
+    /// Presence / on-off style (`on`, `off`, `1`, or merely being set).
+    Flag,
+    /// Plain non-negative integer (counts, sizes in items).
+    Count,
+    /// Integer milliseconds.
+    Millis,
+    /// Byte size, optionally with a `k`/`m`/`g` suffix (powers of 1024).
+    Bytes,
+    /// Filesystem path.
+    Path,
+    /// Short symbolic name (backend kind, SIMD level).
+    Name,
+    /// Structured mini-grammar (see the knob's doc line).
+    Spec,
+}
+
+impl KnobKind {
+    /// Stable lowercase label used in the generated knob table.
+    pub fn label(self) -> &'static str {
+        match self {
+            KnobKind::Flag => "flag",
+            KnobKind::Count => "count",
+            KnobKind::Millis => "millis",
+            KnobKind::Bytes => "bytes",
+            KnobKind::Path => "path",
+            KnobKind::Name => "name",
+            KnobKind::Spec => "spec",
+        }
+    }
+}
+
+/// One declared environment knob.
+#[derive(Debug)]
+pub struct Knob {
+    /// Full variable name (`RXNSPEC_…`).
+    pub name: &'static str,
+    pub kind: KnobKind,
+    /// Human-readable effective default (what happens when unset).
+    pub default: &'static str,
+    /// One-line effect description (rendered into the README table).
+    pub doc: &'static str,
+}
+
+impl Knob {
+    /// Raw value, if set and valid UTF-8.
+    pub fn raw(&self) -> Option<String> {
+        std::env::var(self.name).ok()
+    }
+
+    /// Raw OS value, if set (no UTF-8 requirement).
+    pub fn raw_os(&self) -> Option<OsString> {
+        std::env::var_os(self.name)
+    }
+
+    /// Is the variable set at all (to anything, including empty)?
+    pub fn is_set(&self) -> bool {
+        std::env::var_os(self.name).is_some()
+    }
+
+    /// Trimmed `FromStr` parse of the value; `None` when unset or
+    /// unparsable (call sites pick their own fallback).
+    pub fn parsed<T: FromStr>(&self) -> Option<T> {
+        self.raw().and_then(|v| v.trim().parse().ok())
+    }
+
+    /// [`Knob::parsed`] with an inline default.
+    pub fn parsed_or<T: FromStr>(&self, default: T) -> T {
+        self.parsed().unwrap_or(default)
+    }
+}
+
+macro_rules! declare_knobs {
+    ($($const_name:ident = {
+        name: $name:literal,
+        kind: $kind:ident,
+        default: $default:literal,
+        doc: $doc:literal
+    }),+ $(,)?) => {
+        $(pub static $const_name: Knob = Knob {
+            name: $name,
+            kind: KnobKind::$kind,
+            default: $default,
+            doc: $doc,
+        };)+
+
+        /// Every declared knob, in table order.
+        pub static REGISTRY: &[&Knob] = &[$(&$const_name),+];
+    };
+}
+
+declare_knobs! {
+    THREADS = {
+        name: "RXNSPEC_THREADS",
+        kind: Count,
+        default: "1",
+        doc: "Kernel-pool thread budget: unset/`1` = off, `auto` = available parallelism, N = explicit count (unparsable values warn once and disable threading)"
+    },
+    SIMD = {
+        name: "RXNSPEC_SIMD",
+        kind: Name,
+        default: "auto",
+        doc: "`off`/`scalar`/`0` forces the portable 8-lane fallback; anything else runs CPU feature detection (AVX2+FMA)"
+    },
+    ARENA = {
+        name: "RXNSPEC_ARENA",
+        kind: Flag,
+        default: "on",
+        doc: "`off`/`0`/`false`/`dense` disables the paged KV arena in favour of dense per-row K/V residency (the bit-parity oracle)"
+    },
+    KV_PAGE = {
+        name: "RXNSPEC_KV_PAGE",
+        kind: Count,
+        default: "16",
+        doc: "Arena page size in positions (min 1)"
+    },
+    KV_BUDGET = {
+        name: "RXNSPEC_KV_BUDGET",
+        kind: Bytes,
+        default: "unbounded",
+        doc: "Soft arena byte budget (plain bytes or `k`/`m`/`g` suffix); excess pages are LRU-evicted and healed by exact recompute"
+    },
+    LP_RETAIN = {
+        name: "RXNSPEC_LP_RETAIN",
+        kind: Count,
+        default: "64",
+        doc: "Per-row retained log-prob positions in cached sessions (min 1; deeper rewinds heal via one exact recompute)"
+    },
+    WORKERS = {
+        name: "RXNSPEC_WORKERS",
+        kind: Count,
+        default: "min(cores, 4)",
+        doc: "Serving-pool worker threads sharing the request queue (each owns a backend instance)"
+    },
+    WEDGE_MS = {
+        name: "RXNSPEC_WEDGE_MS",
+        kind: Millis,
+        default: "2000",
+        doc: "Heartbeat staleness after which a busy worker is declared wedged and its in-flight requests reclaimed"
+    },
+    SLO_MS = {
+        name: "RXNSPEC_SLO_MS",
+        kind: Millis,
+        default: "0 (none)",
+        doc: "Default per-PREDICT deadline; expired requests are shed at pop time (`0`/unset = no deadline)"
+    },
+    MAX_CONNS = {
+        name: "RXNSPEC_MAX_CONNS",
+        kind: Count,
+        default: "256",
+        doc: "Concurrent TCP connection cap; excess connections are answered `BUSY` (min 1)"
+    },
+    QUEUE_CAP = {
+        name: "RXNSPEC_QUEUE_CAP",
+        kind: Count,
+        default: "1024",
+        doc: "Admission queue bound; a full queue answers `BUSY` instead of queueing unboundedly"
+    },
+    TRACE = {
+        name: "RXNSPEC_TRACE",
+        kind: Flag,
+        default: "off",
+        doc: "`1`/`on`/`true`/`yes` enables span collection (near-zero cost when off; `serve --trace` overrides)"
+    },
+    TRACE_BUF = {
+        name: "RXNSPEC_TRACE_BUF",
+        kind: Count,
+        default: "65536",
+        doc: "Per-thread trace ring capacity in events (min 16; oldest events are overwritten and counted as dropped)"
+    },
+    TRACE_EXEMPLARS = {
+        name: "RXNSPEC_TRACE_EXEMPLARS",
+        kind: Count,
+        default: "4",
+        doc: "Worst-N slowest requests whose full span trees are retained past ring wrap-around"
+    },
+    FAULTS = {
+        name: "RXNSPEC_FAULTS",
+        kind: Spec,
+        default: "unset",
+        doc: "Seeded fault-injection plan, `<seed>:<site>=<kind>@<prob>,…` (`#<nth>` triggers on exactly one hit; see `faults::parse_spec`); inert unless armed"
+    },
+    NO_DECFAST = {
+        name: "RXNSPEC_NO_DECFAST",
+        kind: Flag,
+        default: "unset",
+        doc: "When set (to anything), disables the PJRT B=1 decfast fast path"
+    },
+    NO_DECCACHE = {
+        name: "RXNSPEC_NO_DECCACHE",
+        kind: Flag,
+        default: "unset",
+        doc: "When set (to anything), forces the stateless PJRT session even when deccache artifacts are present"
+    },
+    CACHE_DUMP = {
+        name: "RXNSPEC_CACHE_DUMP",
+        kind: Path,
+        default: "unset",
+        doc: "Cache persistence file: dumped on graceful drain, warm-booted from on start (`--cache-dump` overrides)"
+    },
+    DATA = {
+        name: "RXNSPEC_DATA",
+        kind: Path,
+        default: "data",
+        doc: "Dataset directory for benches and examples (vocab + test splits)"
+    },
+    ARTIFACTS = {
+        name: "RXNSPEC_ARTIFACTS",
+        kind: Path,
+        default: "artifacts",
+        doc: "Compiled-artifact directory for benches and the real-artifact parity tests"
+    },
+    BACKEND = {
+        name: "RXNSPEC_BACKEND",
+        kind: Name,
+        default: "pjrt",
+        doc: "Backend kind for benches and examples (`pjrt` or `rust`)"
+    },
+    LIMIT = {
+        name: "RXNSPEC_LIMIT",
+        kind: Count,
+        default: "per-bench",
+        doc: "Bench subset size override (the 1-core testbed default; the paper ran full splits)"
+    },
+    BENCH_JSON = {
+        name: "RXNSPEC_BENCH_JSON",
+        kind: Path,
+        default: "<repo>/BENCH_kernels.json",
+        doc: "Perf-trajectory file `--json` bench runs merge into (default anchored at the workspace root)"
+    },
+}
+
+/// Look a knob up by its full `RXNSPEC_*` name.
+pub fn lookup(name: &str) -> Option<&'static Knob> {
+    REGISTRY.iter().copied().find(|k| k.name == name)
+}
+
+/// Render the registry as the README's markdown knob table. The
+/// `readme-knobs` lint rule regenerates this and diffs it against the
+/// committed README, so the two cannot drift.
+pub fn knob_table_markdown() -> String {
+    let mut out = String::from("| Knob | Type | Default | Effect |\n|---|---|---|---|\n");
+    for k in REGISTRY {
+        out.push_str(&format!(
+            "| `{}` | {} | {} | {} |\n",
+            k.name,
+            k.kind.label(),
+            k.default,
+            k.doc
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_names_are_unique_prefixed_and_resolvable() {
+        let mut seen = std::collections::HashSet::new();
+        for k in REGISTRY {
+            assert!(k.name.starts_with("RXNSPEC_"), "{} lacks the prefix", k.name);
+            assert!(seen.insert(k.name), "duplicate knob {}", k.name);
+            assert!(std::ptr::eq(lookup(k.name).expect("lookup"), *k));
+            assert!(!k.doc.is_empty() && !k.default.is_empty());
+        }
+        // lint:allow(knob-literal) — deliberately unregistered name.
+        assert!(lookup("RXNSPEC_NOT_A_REAL_KNOB").is_none());
+    }
+
+    #[test]
+    fn accessors_reflect_the_environment() {
+        // Read-only against the live environment: whatever the CI leg
+        // exports must round-trip through the accessors.
+        for k in REGISTRY {
+            assert_eq!(k.is_set(), k.raw_os().is_some());
+            if let Some(v) = k.raw() {
+                assert_eq!(std::env::var(k.name).ok().as_deref(), Some(v.as_str()));
+            }
+        }
+    }
+
+    #[test]
+    fn knob_table_lists_every_knob_once() {
+        let table = knob_table_markdown();
+        for k in REGISTRY {
+            let needle = format!("`{}`", k.name);
+            assert_eq!(
+                table.matches(&needle).count(),
+                1,
+                "{} must appear exactly once in the table",
+                k.name
+            );
+        }
+    }
+}

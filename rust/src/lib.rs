@@ -25,6 +25,8 @@ pub mod decoding;
 pub mod draft;
 pub mod faults;
 pub mod kernels;
+pub mod knobs;
+pub mod lint;
 pub mod model;
 pub mod planner;
 pub mod rng;

@@ -1,0 +1,764 @@
+//! `rxnspec-lint`: the repo-invariant static-analysis pass.
+//!
+//! The paper's "3X faster with no loss in accuracy" claim rests on
+//! conventions this crate enforces only by construction: the kernels'
+//! no-FMA two-rounding contract, the `lock_ok` poison-recovery
+//! discipline, audited `unsafe`, and a registry for every name that is
+//! stringly shared between layers (env knobs, fault sites, trace
+//! phases, bench metric keys). This module turns those conventions
+//! into machine-checked rules over a lightweight line/token scan —
+//! std-only, no syn, no regex — wired into CI and tier-1 via the
+//! `rxnspec-lint` binary and `rust/tests/lint_clean.rs`.
+//!
+//! Rules (each [`Finding`] carries the rule name):
+//!
+//! * `float-contract` — `mul_add`/`fmadd`/`*_fast` float intrinsics are
+//!   forbidden under `src/kernels/`, `src/decoding/`, `src/model/`:
+//!   fusing single-rounds the accumulate and breaks bit parity across
+//!   dispatch levels.
+//! * `lock-discipline` — raw `.lock()` outside `coordinator/batcher.rs`
+//!   (which defines [`lock_ok`](crate::coordinator::lock_ok)) must go
+//!   through `lock_ok`, so a contained worker panic can never poison a
+//!   shared mutex into a full-server outage.
+//! * `unsafe-audit` — every `unsafe` token needs an adjacent
+//!   `// SAFETY:` comment (or a `# Safety` doc section) within the
+//!   contiguous comment/attribute block above it.
+//! * `env-read` — direct `env::var` reads of `RXNSPEC_*` variables
+//!   outside `src/knobs.rs`; all knob reads go through the typed
+//!   registry accessors.
+//! * `knob-literal` — every `RXNSPEC_*` literal in sources, workflows,
+//!   and the README must be declared in [`crate::knobs::REGISTRY`].
+//! * `fault-site` — every site literal passed to `faults::fire*` (and
+//!   every site named in a CI `RXNSPEC_FAULTS` schedule) must be in
+//!   [`crate::faults::SITES`].
+//! * `trace-registry` — the `Phase` enum, `N_PHASES`, and the README
+//!   phase glossary must agree.
+//! * `bench-schema` — every metric key a bench merged into
+//!   `BENCH_kernels.json` must match a `meta.schema_keys` /
+//!   `meta.schema_row_keys` pattern.
+//! * `readme-knobs` — the README knob table must equal
+//!   [`crate::knobs::knob_table_markdown`] output.
+//!
+//! Comments and string/char literals are blanked before token rules
+//! run, so documentation (and this module's own pattern strings) can
+//! never trip a rule. A deliberate exception can be waived with a
+//! `lint:allow(<rule>)` comment on the same or the preceding line.
+
+use std::fmt;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::bench::json::{self, Val};
+
+/// Every rule the pass can emit, in documentation order.
+pub const RULES: &[&str] = &[
+    "float-contract",
+    "lock-discipline",
+    "unsafe-audit",
+    "env-read",
+    "knob-literal",
+    "fault-site",
+    "trace-registry",
+    "bench-schema",
+    "readme-knobs",
+];
+
+/// One rule violation at a file location (line 0 = whole-file).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Finding {
+    pub rule: &'static str,
+    pub file: String,
+    pub line: usize,
+    pub msg: String,
+}
+
+impl fmt::Display for Finding {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: {}: {}", self.file, self.line, self.rule, self.msg)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Source stripping
+// ---------------------------------------------------------------------------
+
+/// Blank comments and string/char literals out of Rust source (replaced
+/// by spaces, newlines preserved), so token rules see only code.
+/// Handles `//`, nested `/* */`, `"…"` with escapes, `r"…"`/`r#"…"#`
+/// raw strings (and their `b` byte variants), and char literals
+/// (distinguished from lifetimes by their closing quote).
+pub fn strip_rust(text: &str) -> Vec<String> {
+    let b: Vec<char> = text.chars().collect();
+    let mut out = String::with_capacity(text.len());
+    let mut i = 0usize;
+    while i < b.len() {
+        let c = b[i];
+        if c == '/' && b.get(i + 1) == Some(&'/') {
+            while i < b.len() && b[i] != '\n' {
+                out.push(' ');
+                i += 1;
+            }
+        } else if c == '/' && b.get(i + 1) == Some(&'*') {
+            let mut depth = 1usize;
+            out.push_str("  ");
+            i += 2;
+            while i < b.len() && depth > 0 {
+                if b[i] == '/' && b.get(i + 1) == Some(&'*') {
+                    depth += 1;
+                    out.push_str("  ");
+                    i += 2;
+                } else if b[i] == '*' && b.get(i + 1) == Some(&'/') {
+                    depth -= 1;
+                    out.push_str("  ");
+                    i += 2;
+                } else {
+                    out.push(if b[i] == '\n' { '\n' } else { ' ' });
+                    i += 1;
+                }
+            }
+        } else if let Some(adv) = raw_string_len(&b, i) {
+            for k in 0..adv {
+                out.push(if b[i + k] == '\n' { '\n' } else { ' ' });
+            }
+            i += adv;
+        } else if c == '"' {
+            out.push(' ');
+            i += 1;
+            while i < b.len() {
+                if b[i] == '\\' && i + 1 < b.len() {
+                    // Preserve the newline of a `\`-continuation so
+                    // line numbers stay aligned.
+                    out.push(' ');
+                    out.push(if b[i + 1] == '\n' { '\n' } else { ' ' });
+                    i += 2;
+                } else if b[i] == '"' {
+                    out.push(' ');
+                    i += 1;
+                    break;
+                } else {
+                    out.push(if b[i] == '\n' { '\n' } else { ' ' });
+                    i += 1;
+                }
+            }
+        } else if c == '\'' {
+            // Char literal vs lifetime: a literal closes with a quote.
+            if b.get(i + 1) == Some(&'\\') {
+                // Escaped char literal: blank through the closing quote.
+                out.push(' ');
+                i += 1;
+                let mut escaped = false;
+                while i < b.len() {
+                    let d = b[i];
+                    out.push(' ');
+                    i += 1;
+                    if escaped {
+                        escaped = false;
+                    } else if d == '\\' {
+                        escaped = true;
+                    } else if d == '\'' {
+                        break;
+                    }
+                }
+            } else if b.get(i + 2) == Some(&'\'') {
+                out.push_str("   ");
+                i += 3;
+            } else {
+                out.push(' ');
+                i += 1;
+            }
+        } else {
+            out.push(c);
+            i += 1;
+        }
+    }
+    out.lines().map(|l| l.to_string()).collect()
+}
+
+/// If a raw (or byte) string literal starts at `i`, return its total
+/// char length; `None` otherwise. A preceding identifier char rules it
+/// out (`var` vs `r"…"`).
+fn raw_string_len(b: &[char], i: usize) -> Option<usize> {
+    if i > 0 && (b[i - 1].is_alphanumeric() || b[i - 1] == '_') {
+        return None;
+    }
+    let mut j = i;
+    if b.get(j) == Some(&'b') {
+        j += 1;
+    }
+    if b.get(j) != Some(&'r') {
+        return None;
+    }
+    j += 1;
+    let mut hashes = 0usize;
+    while b.get(j) == Some(&'#') {
+        hashes += 1;
+        j += 1;
+    }
+    if b.get(j) != Some(&'"') {
+        return None;
+    }
+    j += 1;
+    while j < b.len() {
+        if b[j] == '"' {
+            let mut k = 0usize;
+            while k < hashes && b.get(j + 1 + k) == Some(&'#') {
+                k += 1;
+            }
+            if k == hashes {
+                return Some(j + 1 + hashes - i);
+            }
+        }
+        j += 1;
+    }
+    Some(b.len() - i)
+}
+
+/// Does line `idx` (or the line above it) carry a `lint:allow(<rule>)`
+/// waiver for `rule`?
+fn waived(raw: &[&str], idx: usize, rule: &str) -> bool {
+    let carries = |l: &str| {
+        l.find("lint:allow(").is_some_and(|p| {
+            let rest = &l[p + "lint:allow(".len()..];
+            rest.split(')').next().unwrap_or("").split(',').any(|r| r.trim() == rule)
+        })
+    };
+    carries(raw[idx]) || (idx > 0 && carries(raw[idx - 1]))
+}
+
+fn word_at(line: &str, word: &str) -> Option<usize> {
+    let bytes = line.as_bytes();
+    let mut start = 0usize;
+    while let Some(p) = line[start..].find(word) {
+        let at = start + p;
+        let before_ok = at == 0 || {
+            let c = bytes[at - 1] as char;
+            !c.is_alphanumeric() && c != '_'
+        };
+        let end = at + word.len();
+        let after_ok = end >= bytes.len() || {
+            let c = bytes[end] as char;
+            !c.is_alphanumeric() && c != '_'
+        };
+        if before_ok && after_ok {
+            return Some(at);
+        }
+        start = at + 1;
+    }
+    None
+}
+
+// ---------------------------------------------------------------------------
+// Per-file Rust rules
+// ---------------------------------------------------------------------------
+
+const FORBIDDEN_FLOAT: &[&str] =
+    &["mul_add", "fmadd", "fadd_fast", "fmul_fast", "fsub_fast", "fdiv_fast"];
+
+/// Files where the bit-identity float contract applies.
+fn float_zone(rel: &str) -> bool {
+    rel.contains("src/kernels/") || rel.contains("src/decoding/") || rel.contains("src/model/")
+}
+
+/// Is the contiguous comment/attribute block ending just above line
+/// `idx` (or the line itself) carrying a safety comment?
+fn has_safety_comment(raw: &[&str], idx: usize) -> bool {
+    let marks = |l: &str| l.contains("SAFETY:") || l.contains("# Safety");
+    if marks(raw[idx]) {
+        return true;
+    }
+    let mut j = idx;
+    while j > 0 {
+        j -= 1;
+        let t = raw[j].trim_start();
+        if t.starts_with("//") || t.starts_with("#[") || t.starts_with("#!") {
+            if marks(t) {
+                return true;
+            }
+        } else {
+            break;
+        }
+    }
+    false
+}
+
+/// Run every per-line rule over one Rust source. `rel` is the
+/// forward-slash path from the repo root (it selects which zone rules
+/// apply); fixture tests pass synthetic paths.
+pub fn scan_rust_source(rel: &str, text: &str) -> Vec<Finding> {
+    let raw: Vec<&str> = text.lines().collect();
+    let stripped = strip_rust(text);
+    let mut out = Vec::new();
+    let in_float_zone = float_zone(rel);
+    let lock_exempt = rel.ends_with("coordinator/batcher.rs");
+    let env_exempt = rel.ends_with("src/knobs.rs");
+    let fault_zone = rel.starts_with("rust/src/") && !rel.ends_with("faults/mod.rs");
+
+    for (i, line) in stripped.iter().enumerate() {
+        let lineno = i + 1;
+        if in_float_zone {
+            for pat in FORBIDDEN_FLOAT {
+                if line.contains(pat) && !waived(&raw, i, "float-contract") {
+                    out.push(Finding {
+                        rule: "float-contract",
+                        file: rel.to_string(),
+                        line: lineno,
+                        msg: format!(
+                            "`{pat}` breaks the two-rounding bit-identity contract; \
+                             use mul-then-add (see kernels::simd)"
+                        ),
+                    });
+                }
+            }
+        }
+        if !lock_exempt && line.contains(".lock()") && !waived(&raw, i, "lock-discipline") {
+            out.push(Finding {
+                rule: "lock-discipline",
+                file: rel.to_string(),
+                line: lineno,
+                msg: "raw Mutex::lock; route through coordinator::lock_ok so a contained \
+                      panic cannot poison shared state into an outage"
+                    .to_string(),
+            });
+        }
+        if word_at(line, "unsafe").is_some()
+            && !has_safety_comment(&raw, i)
+            && !waived(&raw, i, "unsafe-audit")
+        {
+            out.push(Finding {
+                rule: "unsafe-audit",
+                file: rel.to_string(),
+                line: lineno,
+                msg: "`unsafe` without an adjacent `// SAFETY:` comment".to_string(),
+            });
+        }
+        if !env_exempt
+            && (raw[i].contains("var(\"RXNSPEC") || raw[i].contains("var_os(\"RXNSPEC"))
+            && !waived(&raw, i, "env-read")
+        {
+            out.push(Finding {
+                rule: "env-read",
+                file: rel.to_string(),
+                line: lineno,
+                msg: "direct RXNSPEC_* env read; go through the typed knobs registry \
+                      (rust/src/knobs.rs)"
+                    .to_string(),
+            });
+        }
+        if fault_zone {
+            for site in fire_site_literals(raw[i]) {
+                if !crate::faults::SITES.contains(&site.as_str())
+                    && !waived(&raw, i, "fault-site")
+                {
+                    out.push(Finding {
+                        rule: "fault-site",
+                        file: rel.to_string(),
+                        line: lineno,
+                        msg: format!("fault site {site:?} is not declared in faults::SITES"),
+                    });
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Site literals passed to `faults::fire` / `fire_infallible` / `fires`
+/// on one raw line.
+fn fire_site_literals(line: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut start = 0usize;
+    while let Some(p) = line[start..].find("faults::fire") {
+        let at = start + p + "faults::fire".len();
+        let rest = &line[at..];
+        let call = rest
+            .strip_prefix("_infallible(")
+            .or_else(|| rest.strip_prefix("s("))
+            .or_else(|| rest.strip_prefix("("));
+        if let Some(args) = call {
+            if let Some(lit) = args.strip_prefix('"') {
+                if let Some(end) = lit.find('"') {
+                    out.push(lit[..end].to_string());
+                }
+            }
+        }
+        start = at;
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Knob-literal rule (any file kind)
+// ---------------------------------------------------------------------------
+
+/// Every `RXNSPEC_<CAPS>` token in `text`, with its 1-based line.
+pub fn knob_tokens(text: &str) -> Vec<(usize, String)> {
+    let mut out = Vec::new();
+    for (i, line) in text.lines().enumerate() {
+        let bytes = line.as_bytes();
+        let mut start = 0usize;
+        while let Some(p) = line[start..].find("RXNSPEC_") {
+            let at = start + p;
+            let before_ok = at == 0 || {
+                let c = bytes[at - 1] as char;
+                !c.is_alphanumeric() && c != '_'
+            };
+            let mut end = at + "RXNSPEC_".len();
+            while end < line.len() {
+                let c = bytes[end] as char;
+                if c.is_ascii_uppercase() || c.is_ascii_digit() || c == '_' {
+                    end += 1;
+                } else {
+                    break;
+                }
+            }
+            // A bare `RXNSPEC_` (docs writing `RXNSPEC_*`) is a
+            // wildcard mention, not a knob name.
+            if before_ok && end > at + "RXNSPEC_".len() {
+                out.push((i + 1, line[at..end].trim_end_matches('_').to_string()));
+            }
+            start = at + 1;
+        }
+    }
+    out
+}
+
+/// `knob-literal`: every token must resolve in the typed registry.
+pub fn check_knob_literals(rel: &str, text: &str) -> Vec<Finding> {
+    let raw: Vec<&str> = text.lines().collect();
+    knob_tokens(text)
+        .into_iter()
+        .filter(|(line, name)| {
+            crate::knobs::lookup(name).is_none() && !waived(&raw, line - 1, "knob-literal")
+        })
+        .map(|(line, name)| Finding {
+            rule: "knob-literal",
+            file: rel.to_string(),
+            line,
+            msg: format!("{name} is not declared in knobs::REGISTRY"),
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
+// Repo-level registries
+// ---------------------------------------------------------------------------
+
+/// `trace-registry`: phase names unique, the `Phase` enum's variant
+/// count equal to `N_PHASES`, and every name present in the README
+/// phase glossary.
+fn check_trace_registry(trace_src: &str, readme: &str) -> Vec<Finding> {
+    let mut out = Vec::new();
+    let mut seen = std::collections::HashSet::new();
+    for p in crate::trace::ALL_PHASES {
+        if !seen.insert(p.name()) {
+            out.push(Finding {
+                rule: "trace-registry",
+                file: "rust/src/trace/mod.rs".into(),
+                line: 0,
+                msg: format!("duplicate phase name {:?}", p.name()),
+            });
+        }
+        if !readme.contains(&format!("`{}`", p.name())) {
+            out.push(Finding {
+                rule: "trace-registry",
+                file: "README.md".into(),
+                line: 0,
+                msg: format!("phase `{}` missing from the README phase glossary", p.name()),
+            });
+        }
+    }
+    let stripped = strip_rust(trace_src);
+    let mut variants = 0usize;
+    let mut in_enum = false;
+    for line in &stripped {
+        let t = line.trim();
+        if t.starts_with("pub enum Phase") {
+            in_enum = true;
+            continue;
+        }
+        if in_enum {
+            if t.starts_with('}') {
+                break;
+            }
+            if t.chars().next().is_some_and(|c| c.is_ascii_uppercase()) {
+                variants += 1;
+            }
+        }
+    }
+    if variants != crate::trace::N_PHASES {
+        out.push(Finding {
+            rule: "trace-registry",
+            file: "rust/src/trace/mod.rs".into(),
+            line: 0,
+            msg: format!(
+                "Phase enum declares {variants} variants but N_PHASES = {} — keep the enum, \
+                 N_PHASES, ALL_PHASES, and name() in sync",
+                crate::trace::N_PHASES
+            ),
+        });
+    }
+    out
+}
+
+/// Glob match with `*` as the only metacharacter.
+pub fn glob_match(pattern: &str, s: &str) -> bool {
+    fn inner(p: &[u8], s: &[u8]) -> bool {
+        match p.first() {
+            None => s.is_empty(),
+            Some(b'*') => {
+                (0..=s.len()).any(|k| inner(&p[1..], &s[k..]))
+            }
+            Some(&c) => s.first() == Some(&c) && inner(&p[1..], &s[1..]),
+        }
+    }
+    inner(pattern.as_bytes(), s.as_bytes())
+}
+
+fn schema_patterns(meta: &Val, key: &str) -> Option<Vec<String>> {
+    match meta.get(key) {
+        Some(Val::Arr(items)) => Some(
+            items
+                .iter()
+                .filter_map(|v| match v {
+                    Val::Str(s) => Some(s.clone()),
+                    _ => None,
+                })
+                .collect(),
+        ),
+        _ => None,
+    }
+}
+
+/// `bench-schema`: every key in every non-meta section of the perf
+/// trajectory must match a declared `meta.schema_keys` pattern (or, for
+/// per-configuration row objects, `meta.schema_row_keys`).
+pub fn check_bench_schema(doc: &Val, file: &str) -> Vec<Finding> {
+    let mut out = Vec::new();
+    let fail = |msg: String| Finding { rule: "bench-schema", file: file.to_string(), line: 0, msg };
+    let Some(meta) = doc.get("meta") else {
+        return vec![fail("missing meta section".into())];
+    };
+    let Some(keys) = schema_patterns(meta, "schema_keys") else {
+        return vec![fail("meta.schema_keys (array of key patterns) is missing".into())];
+    };
+    let Some(row_keys) = schema_patterns(meta, "schema_row_keys") else {
+        return vec![fail("meta.schema_row_keys (array of key patterns) is missing".into())];
+    };
+    let Val::Obj(sections) = doc else {
+        return vec![fail("root is not an object".into())];
+    };
+    for (section, val) in sections {
+        if section == "meta" {
+            continue;
+        }
+        let Val::Obj(entries) = val else {
+            out.push(fail(format!("section {section:?} is not an object")));
+            continue;
+        };
+        for (k, v) in entries {
+            match v {
+                Val::Num(_) | Val::Str(_) => {
+                    if !keys.iter().any(|p| glob_match(p, k)) {
+                        out.push(fail(format!(
+                            "{section}.{k} matches no meta.schema_keys pattern"
+                        )));
+                    }
+                }
+                Val::Obj(inner) => {
+                    for (ik, iv) in inner {
+                        if !matches!(iv, Val::Num(_)) {
+                            out.push(fail(format!(
+                                "{section}.{k}.{ik}: row metrics must be numbers"
+                            )));
+                        }
+                        if !row_keys.iter().any(|p| glob_match(p, ik)) {
+                            out.push(fail(format!(
+                                "{section}.{k}.{ik} matches no meta.schema_row_keys pattern"
+                            )));
+                        }
+                    }
+                }
+                other => {
+                    out.push(fail(format!(
+                        "{section}.{k}: unexpected value shape {other:?}"
+                    )));
+                }
+            }
+        }
+    }
+    out
+}
+
+/// `readme-knobs`: the table between the knob-table markers must equal
+/// the registry-generated one.
+fn check_readme_knobs(readme: &str) -> Vec<Finding> {
+    const BEGIN: &str = "<!-- knob-table:begin -->";
+    const END: &str = "<!-- knob-table:end -->";
+    let fail = |msg: String| {
+        vec![Finding { rule: "readme-knobs", file: "README.md".into(), line: 0, msg }]
+    };
+    let Some(b) = readme.find(BEGIN) else {
+        return fail(format!("marker {BEGIN:?} missing"));
+    };
+    let Some(e) = readme.find(END) else {
+        return fail(format!("marker {END:?} missing"));
+    };
+    if e < b {
+        return fail("knob-table markers are out of order".into());
+    }
+    let committed = readme[b + BEGIN.len()..e].trim();
+    let generated = crate::knobs::knob_table_markdown();
+    if committed != generated.trim() {
+        return fail(
+            "knob table is stale; regenerate with `cargo run --bin rxnspec-lint -- --knob-table`"
+                .into(),
+        );
+    }
+    Vec::new()
+}
+
+/// CI fault schedules: every `faults:` value in a workflow must parse
+/// under the `RXNSPEC_FAULTS` grammar and name only registered sites.
+fn check_workflow_faults(rel: &str, text: &str) -> Vec<Finding> {
+    let mut out = Vec::new();
+    for (i, line) in text.lines().enumerate() {
+        let Some(p) = line.find("faults:") else { continue };
+        let val = line[p + "faults:".len()..].trim();
+        let Some(stripped) = val.strip_prefix('"') else { continue };
+        let Some(end) = stripped.find('"') else { continue };
+        let spec = &stripped[..end];
+        if spec.is_empty() {
+            continue;
+        }
+        match crate::faults::parse_spec(spec) {
+            Err(e) => out.push(Finding {
+                rule: "fault-site",
+                file: rel.to_string(),
+                line: i + 1,
+                msg: format!("RXNSPEC_FAULTS schedule does not parse: {e}"),
+            }),
+            Ok(plan) => {
+                for r in &plan.rules {
+                    if !crate::faults::SITES.contains(&r.site.as_str()) {
+                        out.push(Finding {
+                            rule: "fault-site",
+                            file: rel.to_string(),
+                            line: i + 1,
+                            msg: format!(
+                                "CI fault schedule names unregistered site {:?}",
+                                r.site
+                            ),
+                        });
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Repo walk
+// ---------------------------------------------------------------------------
+
+fn walk_ext(dir: &Path, ext: &str, out: &mut Vec<std::path::PathBuf>) {
+    let Ok(rd) = std::fs::read_dir(dir) else { return };
+    let mut entries: Vec<_> = rd.flatten().map(|e| e.path()).collect();
+    entries.sort();
+    for p in entries {
+        if p.is_dir() {
+            walk_ext(&p, ext, out);
+        } else if p.extension().and_then(|e| e.to_str()) == Some(ext) {
+            out.push(p);
+        }
+    }
+}
+
+fn rel_str(root: &Path, p: &Path) -> String {
+    p.strip_prefix(root)
+        .unwrap_or(p)
+        .to_string_lossy()
+        .replace('\\', "/")
+}
+
+/// Run every rule over the repository at `root` (the workspace root —
+/// the directory holding `rust/`, `examples/`, `README.md`).
+pub fn run_repo(root: &Path) -> Result<Vec<Finding>> {
+    let mut findings = Vec::new();
+
+    let mut rust_files = Vec::new();
+    for dir in ["rust/src", "rust/tests", "rust/benches", "examples"] {
+        walk_ext(&root.join(dir), "rs", &mut rust_files);
+    }
+    for path in &rust_files {
+        let rel = rel_str(root, path);
+        let text = std::fs::read_to_string(path).with_context(|| format!("read {rel}"))?;
+        findings.extend(scan_rust_source(&rel, &text));
+        findings.extend(check_knob_literals(&rel, &text));
+    }
+
+    let mut workflows = Vec::new();
+    walk_ext(&root.join(".github/workflows"), "yml", &mut workflows);
+    walk_ext(&root.join(".github/workflows"), "yaml", &mut workflows);
+    for path in &workflows {
+        let rel = rel_str(root, path);
+        let text = std::fs::read_to_string(path).with_context(|| format!("read {rel}"))?;
+        findings.extend(check_knob_literals(&rel, &text));
+        findings.extend(check_workflow_faults(&rel, &text));
+    }
+
+    let readme = std::fs::read_to_string(root.join("README.md")).context("read README.md")?;
+    findings.extend(check_knob_literals("README.md", &readme));
+    findings.extend(check_readme_knobs(&readme));
+
+    let trace_src = std::fs::read_to_string(root.join("rust/src/trace/mod.rs"))
+        .context("read rust/src/trace/mod.rs")?;
+    findings.extend(check_trace_registry(&trace_src, &readme));
+
+    let bench_path = root.join("BENCH_kernels.json");
+    let bench_rel = "BENCH_kernels.json";
+    match std::fs::read_to_string(&bench_path) {
+        Err(e) => findings.push(Finding {
+            rule: "bench-schema",
+            file: bench_rel.into(),
+            line: 0,
+            msg: format!("unreadable: {e}"),
+        }),
+        Ok(body) => match json::parse(&body) {
+            Err(e) => findings.push(Finding {
+                rule: "bench-schema",
+                file: bench_rel.into(),
+                line: 0,
+                msg: format!("unparsable: {e}"),
+            }),
+            Ok(doc) => findings.extend(check_bench_schema(&doc, bench_rel)),
+        },
+    }
+
+    findings.sort_by(|a, b| (&a.file, a.line, a.rule).cmp(&(&b.file, b.line, b.rule)));
+    Ok(findings)
+}
+
+/// Findings as the machine-readable artifact CI uploads.
+pub fn findings_json(findings: &[Finding]) -> Val {
+    Val::Obj(vec![
+        ("count".into(), Val::num(findings.len() as f64)),
+        (
+            "findings".into(),
+            Val::Arr(
+                findings
+                    .iter()
+                    .map(|f| {
+                        Val::Obj(vec![
+                            ("rule".into(), Val::str(f.rule)),
+                            ("file".into(), Val::str(&f.file)),
+                            ("line".into(), Val::num(f.line as f64)),
+                            ("msg".into(), Val::str(&f.msg)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}

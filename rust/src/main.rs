@@ -90,7 +90,7 @@ impl Default for Opts {
             batch_max: 32,
             batch_wait_ms: 5,
             cache: true,
-            cache_dump: std::env::var_os("RXNSPEC_CACHE_DUMP").map(PathBuf::from),
+            cache_dump: rxnspec::knobs::CACHE_DUMP.raw_os().map(PathBuf::from),
             trace: None,
         }
     }
@@ -161,6 +161,8 @@ fn install_signal_handlers() {
     extern "C" fn on_signal(_sig: i32) {
         SIGNALLED.store(true, Ordering::SeqCst);
     }
+    // SAFETY: `signal(2)` is callable from any thread before workers
+    // start; `on_signal` only performs an async-signal-safe atomic store.
     unsafe {
         signal(15, on_signal); // SIGTERM
         signal(2, on_signal); // SIGINT
@@ -196,10 +198,7 @@ fn cmd_serve(opts: Opts) -> Result<()> {
             Err(e) => eprintln!("cold boot ({e})"),
         }
     }
-    let queue_cap = std::env::var("RXNSPEC_QUEUE_CAP")
-        .ok()
-        .and_then(|v| v.parse::<usize>().ok())
-        .unwrap_or(1024);
+    let queue_cap = rxnspec::knobs::QUEUE_CAP.parsed_or(1024usize);
     let state = Arc::new(ServerState::new(
         RequestQueue::with_capacity(
             opts.batch_max,

@@ -602,7 +602,7 @@ impl Backend for PjrtBackend {
         let fast = !self.arts.decfast.is_empty()
             && memory.batch == 1
             && rows.iter().all(|r| r.mem_row == 0)
-            && std::env::var_os("RXNSPEC_NO_DECFAST").is_none();
+            && !crate::knobs::NO_DECFAST.is_set();
         let window = if fast {
             self.decfast_window.min(t_len)
         } else {
@@ -681,7 +681,7 @@ impl Backend for PjrtBackend {
         // forces it with RXNSPEC_NO_DECCACHE) fall back to stateless
         // recompute through `decode`, which preserves the decfast B=1
         // path and bucket selection unchanged.
-        if self.has_cache_artifacts() && std::env::var_os("RXNSPEC_NO_DECCACHE").is_none() {
+        if self.has_cache_artifacts() && !crate::knobs::NO_DECCACHE.is_set() {
             return Ok(Box::new(CachedPjrtSession::new(PjrtDeccacheExec::new(self), memory)));
         }
         Ok(Box::new(StatelessSession::new(self, memory)))

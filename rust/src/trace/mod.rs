@@ -30,8 +30,10 @@
 
 use std::cell::RefCell;
 use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
-use std::sync::{Arc, Mutex, MutexGuard, OnceLock};
+use std::sync::{Arc, Mutex, OnceLock};
 use std::time::Instant;
+
+use crate::coordinator::lock_ok;
 
 /// Phase tag carried by every span. `name()` strings are the Chrome
 /// trace-event `name` field and the README phase glossary — keep the
@@ -180,7 +182,8 @@ pub fn enabled() -> bool {
 
 #[cold]
 fn init_gate() -> bool {
-    let on = std::env::var("RXNSPEC_TRACE")
+    let on = crate::knobs::TRACE
+        .raw()
         .map(|v| {
             let v = v.trim().to_ascii_lowercase();
             v == "1" || v == "on" || v == "true" || v == "yes"
@@ -201,9 +204,8 @@ pub fn set_enabled(on: bool) {
 fn ring_capacity() -> usize {
     static CAP: OnceLock<usize> = OnceLock::new();
     *CAP.get_or_init(|| {
-        std::env::var("RXNSPEC_TRACE_BUF")
-            .ok()
-            .and_then(|v| v.trim().parse::<usize>().ok())
+        crate::knobs::TRACE_BUF
+            .parsed::<usize>()
             .filter(|&n| n >= 16)
             .unwrap_or(65_536)
     })
@@ -256,10 +258,6 @@ fn registry() -> &'static Mutex<Vec<Arc<Mutex<Ring>>>> {
     REG.get_or_init(|| Mutex::new(Vec::new()))
 }
 
-fn lock_poison_ok<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
-    m.lock().unwrap_or_else(|e| e.into_inner())
-}
-
 static NEXT_ID: AtomicU64 = AtomicU64::new(1);
 static NEXT_TID: AtomicU64 = AtomicU64::new(1);
 
@@ -277,7 +275,7 @@ struct ThreadTrace {
 impl ThreadTrace {
     fn register() -> Self {
         let ring = Arc::new(Mutex::new(Ring::new(ring_capacity())));
-        lock_poison_ok(registry()).push(Arc::clone(&ring));
+        lock_ok(registry()).push(Arc::clone(&ring));
         ThreadTrace {
             ring,
             stack: Vec::with_capacity(16),
@@ -356,7 +354,7 @@ impl Drop for TraceScope {
             }
             t.phase_ns[self.phase as usize] += t_end_ns.saturating_sub(self.t_start_ns);
             let tid = t.tid;
-            lock_poison_ok(&t.ring).push(Event { tid, ..ev });
+            lock_ok(&t.ring).push(Event { tid, ..ev });
         });
     }
 }
@@ -402,7 +400,7 @@ pub fn record_manual(phase: Phase, t_start_ns: u64, t_end_ns: u64, payload: u64,
     };
     let _ = TT.try_with(|t| {
         let t = t.borrow();
-        lock_poison_ok(&t.ring).push(ev);
+        lock_ok(&t.ring).push(ev);
     });
 }
 
@@ -424,10 +422,10 @@ pub fn current_tid() -> u64 {
 /// Copy every ring's events, oldest-first per thread, sorted by start
 /// time. Non-destructive: the rings keep their contents.
 pub fn snapshot_events() -> Vec<Event> {
-    let rings: Vec<Arc<Mutex<Ring>>> = lock_poison_ok(registry()).iter().cloned().collect();
+    let rings: Vec<Arc<Mutex<Ring>>> = lock_ok(registry()).iter().cloned().collect();
     let mut out = Vec::new();
     for r in &rings {
-        out.extend(lock_poison_ok(r).chrono());
+        out.extend(lock_ok(r).chrono());
     }
     out.sort_by_key(|e| (e.t_start_ns, e.id));
     out
@@ -436,17 +434,17 @@ pub fn snapshot_events() -> Vec<Event> {
 /// Total events overwritten after their ring filled (coverage caveat
 /// for long traces; raise `RXNSPEC_TRACE_BUF`).
 pub fn dropped_events() -> u64 {
-    let rings: Vec<Arc<Mutex<Ring>>> = lock_poison_ok(registry()).iter().cloned().collect();
-    rings.iter().map(|r| lock_poison_ok(r).dropped).sum()
+    let rings: Vec<Arc<Mutex<Ring>>> = lock_ok(registry()).iter().cloned().collect();
+    rings.iter().map(|r| lock_ok(r).dropped).sum()
 }
 
 /// Empty every ring and the exemplar store (test / re-arm hook).
 pub fn clear() {
-    let rings: Vec<Arc<Mutex<Ring>>> = lock_poison_ok(registry()).iter().cloned().collect();
+    let rings: Vec<Arc<Mutex<Ring>>> = lock_ok(registry()).iter().cloned().collect();
     for r in &rings {
-        lock_poison_ok(r).clear();
+        lock_ok(r).clear();
     }
-    lock_poison_ok(exemplar_store()).clear();
+    lock_ok(exemplar_store()).clear();
 }
 
 /// A retained worst-case request: its span window plus a snapshot of
@@ -472,10 +470,7 @@ fn exemplar_store() -> &'static Mutex<Vec<Exemplar>> {
 fn exemplar_cap() -> usize {
     static CAP: OnceLock<usize> = OnceLock::new();
     *CAP.get_or_init(|| {
-        std::env::var("RXNSPEC_TRACE_EXEMPLARS")
-            .ok()
-            .and_then(|v| v.trim().parse::<usize>().ok())
-            .unwrap_or(4)
+        crate::knobs::TRACE_EXEMPLARS.parsed_or(4usize)
     })
 }
 
@@ -496,7 +491,7 @@ fn note_request_with_cap(label: &str, t_start_ns: u64, t_end_ns: u64, cap: usize
     }
     let dur = t_end_ns.saturating_sub(t_start_ns);
     {
-        let store = lock_poison_ok(exemplar_store());
+        let store = lock_ok(exemplar_store());
         if store.len() >= cap && store.iter().all(|e| e.dur_ns() >= dur) {
             return; // slower than every retained exemplar
         }
@@ -507,7 +502,7 @@ fn note_request_with_cap(label: &str, t_start_ns: u64, t_end_ns: u64, cap: usize
         .into_iter()
         .filter(|e| e.t_end_ns >= t_start_ns && e.t_start_ns <= t_end_ns)
         .collect();
-    let mut store = lock_poison_ok(exemplar_store());
+    let mut store = lock_ok(exemplar_store());
     store.push(Exemplar { label: label.to_string(), t_start_ns, t_end_ns, events });
     store.sort_by_key(|e| std::cmp::Reverse(e.dur_ns()));
     store.truncate(cap);
@@ -516,7 +511,7 @@ fn note_request_with_cap(label: &str, t_start_ns: u64, t_end_ns: u64, cap: usize
 /// Worst-N exemplars as `(label, start_ns, end_ns, retained events)`,
 /// slowest first.
 pub fn exemplar_summaries() -> Vec<(String, u64, u64, usize)> {
-    lock_poison_ok(exemplar_store())
+    lock_ok(exemplar_store())
         .iter()
         .map(|e| (e.label.clone(), e.t_start_ns, e.t_end_ns, e.events.len()))
         .collect()
@@ -585,12 +580,14 @@ pub fn chrome_trace_json(events: &[Event], exemplars: &[Exemplar]) -> String {
 /// trace-event JSON.
 pub fn export_chrome_json() -> String {
     let events = snapshot_events();
-    let store = lock_poison_ok(exemplar_store());
+    let store = lock_ok(exemplar_store());
     chrome_trace_json(&events, &store)
 }
 
 #[cfg(test)]
 mod tests {
+    use std::sync::MutexGuard;
+
     use super::*;
 
     /// Tests that flip the process-global gate serialise here; other
@@ -598,7 +595,7 @@ mod tests {
     /// filter to this thread's own tid.
     pub(crate) fn test_gate() -> MutexGuard<'static, ()> {
         static M: OnceLock<Mutex<()>> = OnceLock::new();
-        lock_poison_ok(M.get_or_init(|| Mutex::new(())))
+        lock_ok(M.get_or_init(|| Mutex::new(())))
     }
 
     #[test]

@@ -37,9 +37,7 @@ use rxnspec::vocab::Vocab;
 
 fn chaos_lock() -> MutexGuard<'static, ()> {
     static L: OnceLock<Mutex<()>> = OnceLock::new();
-    L.get_or_init(|| Mutex::new(()))
-        .lock()
-        .unwrap_or_else(|e| e.into_inner())
+    rxnspec::coordinator::lock_ok(L.get_or_init(|| Mutex::new(())))
 }
 
 /// Disarm the global plan when a test exits, panicking or not.

@@ -1,0 +1,223 @@
+//! Tier-1 guard for the static-analysis pass: the live tree must be
+//! lint-clean, every registered knob must round-trip through the
+//! scanner, and each rule must fire on a seeded fixture violation and
+//! stay quiet on the matching negative fixture.
+//!
+//! This file is itself walked by `lint::run_repo`, so fixtures that
+//! would trip the raw-line rules (`env-read`, `knob-literal`) are
+//! assembled at runtime from pieces instead of written literally.
+
+use rxnspec::bench::json;
+use rxnspec::lint::{self, Finding};
+
+fn rule_names(findings: &[Finding]) -> Vec<&'static str> {
+    findings.iter().map(|f| f.rule).collect()
+}
+
+/// The headline acceptance test: `rxnspec-lint` over the checked-out
+/// repository reports nothing.
+#[test]
+fn live_tree_is_clean() {
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("..");
+    let findings = lint::run_repo(&root).expect("lint walk over the repo");
+    assert!(
+        findings.is_empty(),
+        "rxnspec-lint found {} violation(s) in the live tree:\n{}",
+        findings.len(),
+        findings.iter().map(|f| format!("  {f}\n")).collect::<String>()
+    );
+}
+
+/// Every declared knob survives extraction by the literal scanner and
+/// resolves back to itself in the registry.
+#[test]
+fn registered_knobs_round_trip_through_the_scanner() {
+    for k in rxnspec::knobs::REGISTRY {
+        let line = format!("export {}=1", k.name);
+        assert_eq!(lint::knob_tokens(&line), vec![(1, k.name.to_string())]);
+        let hit = rxnspec::knobs::lookup(k.name).expect("registered knob resolves");
+        assert_eq!(hit.name, k.name);
+        assert!(
+            lint::check_knob_literals("fixture.env", &line).is_empty(),
+            "{} must not be flagged",
+            k.name
+        );
+    }
+}
+
+#[test]
+fn float_contract_fires_only_in_kernel_zones() {
+    let bad = "pub fn f(a: f32, b: f32, c: f32) -> f32 {\n    a.mul_add(b, c)\n}\n";
+    let hits = lint::scan_rust_source("rust/src/kernels/fixture.rs", bad);
+    assert_eq!(rule_names(&hits), ["float-contract"]);
+    assert_eq!(hits[0].line, 2);
+
+    // Same token outside the bit-identity zones is legal.
+    assert!(lint::scan_rust_source("rust/src/coordinator/fixture.rs", bad).is_empty());
+    // Mentions in comments and strings are blanked before matching.
+    let doc = "// mul_add is forbidden here\nlet s = \"mul_add\";\n";
+    assert!(lint::scan_rust_source("rust/src/decoding/fixture.rs", doc).is_empty());
+}
+
+#[test]
+fn lock_discipline_flags_raw_lock_outside_batcher() {
+    let bad = "fn f(m: &std::sync::Mutex<u32>) -> u32 {\n    *m.lock().unwrap()\n}\n";
+    let hits = lint::scan_rust_source("rust/src/trace/fixture.rs", bad);
+    assert_eq!(rule_names(&hits), ["lock-discipline"]);
+    assert_eq!(hits[0].line, 2);
+
+    // batcher.rs defines lock_ok and is the one allowed caller.
+    assert!(lint::scan_rust_source("rust/src/coordinator/batcher.rs", bad).is_empty());
+    // An explicit waiver on the preceding line silences the rule.
+    let waived = "// lint:allow(lock-discipline) — fixture.\nlet g = m.lock();\n";
+    assert!(lint::scan_rust_source("rust/src/trace/fixture.rs", waived).is_empty());
+}
+
+#[test]
+fn unsafe_audit_requires_an_adjacent_safety_comment() {
+    let bad = "pub fn f(p: *const u8) -> u8 {\n    unsafe { *p }\n}\n";
+    let hits = lint::scan_rust_source("rust/src/model/fixture.rs", bad);
+    assert_eq!(rule_names(&hits), ["unsafe-audit"]);
+    assert_eq!(hits[0].line, 2);
+
+    let documented = "// SAFETY: fixture pointer is valid for reads.\n\
+                      pub fn f(p: *const u8) -> u8 { unsafe { *p } }\n";
+    assert!(lint::scan_rust_source("rust/src/model/fixture.rs", documented).is_empty());
+
+    // The safety comment may sit above an attribute/comment block.
+    let through_attrs = "// SAFETY: guarded by runtime detection.\n\
+                         #[inline]\n\
+                         fn g(p: *const u8) -> u8 { unsafe { *p } }\n";
+    assert!(lint::scan_rust_source("rust/src/model/fixture.rs", through_attrs).is_empty());
+
+    // A `# Safety` doc section counts for `pub unsafe fn` items.
+    let doc_section = "/// # Safety\n\
+                       /// Caller upholds the aliasing rules.\n\
+                       pub unsafe fn h() {}\n";
+    assert!(lint::scan_rust_source("rust/src/model/fixture.rs", doc_section).is_empty());
+}
+
+#[test]
+fn env_read_flags_direct_reads_outside_the_registry() {
+    // Assembled from pieces so this test file's own raw lines never
+    // contain the pattern the rule greps for.
+    let read = format!("std::env::{}(\"{}_THREADS\")", "var", "RXNSPEC");
+    let bad = format!("fn f() -> Option<String> {{\n    {read}.ok()\n}}\n");
+    let hits = lint::scan_rust_source("rust/src/bench_fixture.rs", &bad);
+    assert_eq!(rule_names(&hits), ["env-read"]);
+    assert_eq!(hits[0].line, 2);
+
+    let os_read = format!("std::env::{}(\"{}_DATA\")", "var_os", "RXNSPEC");
+    let bad_os = format!("fn f() {{ let _ = {os_read}; }}\n");
+    assert_eq!(
+        rule_names(&lint::scan_rust_source("rust/src/bench_fixture.rs", &bad_os)),
+        ["env-read"]
+    );
+
+    // knobs.rs is where the reads are supposed to live.
+    assert!(lint::scan_rust_source("rust/src/knobs.rs", &bad).is_empty());
+}
+
+#[test]
+fn fault_site_flags_unregistered_fire_literals() {
+    let bad = "pub fn f() -> anyhow::Result<()> {\n    crate::faults::fire(\"bogus.site\")\n}\n";
+    let hits = lint::scan_rust_source("rust/src/coordinator/fixture.rs", bad);
+    assert_eq!(rule_names(&hits), ["fault-site"]);
+    assert_eq!(hits[0].line, 2);
+    assert!(hits[0].msg.contains("bogus.site"));
+
+    let good = "pub fn f() -> anyhow::Result<()> {\n    crate::faults::fire(\"worker.tick\")\n}\n";
+    assert!(lint::scan_rust_source("rust/src/coordinator/fixture.rs", good).is_empty());
+
+    let infallible = "crate::faults::fire_infallible(\"worker.wedge\");\n";
+    assert!(lint::scan_rust_source("rust/src/coordinator/fixture.rs", infallible).is_empty());
+
+    // Test code (outside rust/src/) may name arbitrary sites.
+    assert!(lint::scan_rust_source("rust/tests/fixture.rs", bad).is_empty());
+}
+
+#[test]
+fn knob_literal_flags_undeclared_names_and_honours_waivers() {
+    let bogus = ["RXNSPEC", "_FIXTURE_ONLY"].concat();
+    let bad = format!("let _ = \"{bogus}\";\n");
+    let hits = lint::check_knob_literals("rust/src/fixture.rs", &bad);
+    assert_eq!(rule_names(&hits), ["knob-literal"]);
+    assert!(hits[0].msg.contains(&bogus));
+
+    let waived = format!("// lint:allow(knob-literal) — fixture.\nlet _ = \"{bogus}\";\n");
+    assert!(lint::check_knob_literals("rust/src/fixture.rs", &waived).is_empty());
+
+    // Wildcard mentions in prose are not knob names.
+    assert!(lint::knob_tokens("every RXNSPEC_* knob is declared once").is_empty());
+    // Mid-identifier hits do not count as a token start.
+    let glued = format!("NOT{bogus}");
+    assert!(lint::knob_tokens(&glued).is_empty());
+}
+
+#[test]
+fn stripper_preserves_line_numbers_and_blanks_literals() {
+    let src = "let s = \"a\\\n b\"; // tail\nlet t = 'x';\n/* multi\nline */ let u = 1;\n";
+    let lines = lint::strip_rust(src);
+    assert_eq!(lines.len(), src.lines().count());
+    assert!(lines[4].contains("let u = 1;"));
+    assert!(!lines[1].contains("tail"));
+
+    let raw = "let r = r#\"inner \"quoted\" text\"#; after();\n";
+    let stripped = lint::strip_rust(raw);
+    assert!(stripped[0].contains("after();"));
+    assert!(!stripped[0].contains("inner"));
+
+    // Lifetimes survive stripping; char literals do not.
+    let lt = "fn f<'a>(x: &'a str) -> char { 'q' }\n";
+    let s = lint::strip_rust(lt);
+    assert!(s[0].contains("<'a>"));
+    assert!(!s[0].contains("'q'"));
+}
+
+#[test]
+fn glob_match_star_semantics() {
+    assert!(lint::glob_match("simd_level", "simd_level"));
+    assert!(lint::glob_match("resil_*", "resil_drain_ms"));
+    assert!(lint::glob_match("gemm_*_ns", "gemm_f32_256_ns"));
+    assert!(lint::glob_match("*", "anything"));
+    assert!(!lint::glob_match("gemm_*_ns", "gemm_f32_gflops"));
+    assert!(!lint::glob_match("resil_*", "serve_rps"));
+    assert!(!lint::glob_match("simd_level", "simd_level_2"));
+}
+
+#[test]
+fn bench_schema_flags_undeclared_metric_keys() {
+    let doc = json::parse(
+        r#"{"meta": {"schema_keys": ["gemm_*", "simd_level"], "schema_row_keys": ["tok_s"]},
+            "kernel_micro": {"gemm_f32_ns": 1.0, "simd_level": "avx2", "rogue_metric": 2.0},
+            "table2_greedy": {"BS beam5": {"tok_s": 3.0, "rogue_row": 4.0}}}"#,
+    )
+    .expect("fixture json parses");
+    let hits = lint::check_bench_schema(&doc, "fixture.json");
+    let msgs: Vec<&str> = hits.iter().map(|f| f.msg.as_str()).collect();
+    assert_eq!(hits.len(), 2, "exactly the two rogue keys: {msgs:?}");
+    assert!(msgs.iter().any(|m| m.contains("kernel_micro.rogue_metric")));
+    assert!(msgs.iter().any(|m| m.contains("table2_greedy.BS beam5.rogue_row")));
+
+    let clean = json::parse(
+        r#"{"meta": {"schema_keys": ["gemm_*"], "schema_row_keys": ["tok_s"]},
+            "kernel_micro": {"gemm_f32_ns": 1.0}}"#,
+    )
+    .expect("fixture json parses");
+    assert!(lint::check_bench_schema(&clean, "fixture.json").is_empty());
+
+    let no_schema = json::parse(r#"{"meta": {"note": "x"}}"#).expect("fixture json parses");
+    let hits = lint::check_bench_schema(&no_schema, "fixture.json");
+    assert_eq!(rule_names(&hits), ["bench-schema"]);
+}
+
+#[test]
+fn finding_display_is_file_line_rule_msg() {
+    let f = Finding {
+        rule: "env-read",
+        file: "rust/src/x.rs".into(),
+        line: 7,
+        msg: "direct read".into(),
+    };
+    assert_eq!(f.to_string(), "rust/src/x.rs:7: env-read: direct read");
+}

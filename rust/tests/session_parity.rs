@@ -448,7 +448,7 @@ fn pjrt_session_zero_delta_served_from_retention() {
 #[test]
 #[ignore = "needs real xla bindings + compiled deccache artifacts (RXNSPEC_ARTIFACTS)"]
 fn pjrt_real_artifact_session_parity() {
-    let arts = std::env::var("RXNSPEC_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    let arts = rxnspec::knobs::ARTIFACTS.raw().unwrap_or_else(|| "artifacts".into());
     let backend = rxnspec::runtime::PjrtBackend::load(std::path::Path::new(&arts), "fwd")
         .expect("load PJRT backend");
     assert!(

@@ -25,7 +25,7 @@ use rxnspec::vocab::{BOS_ID, EOS_ID};
 static GATE: Mutex<()> = Mutex::new(());
 
 fn gate() -> MutexGuard<'static, ()> {
-    GATE.lock().unwrap_or_else(|e| e.into_inner())
+    rxnspec::coordinator::lock_ok(&GATE)
 }
 
 fn srcs() -> Vec<Vec<i64>> {
